@@ -1,0 +1,50 @@
+//! Cluster comparison: should you queue for Perlmutter (A100, 4/node) or
+//! Vista (GH200, 1/node)? Predict all three target models on both
+//! platforms and report throughput per GPU plus the stability risk
+//! (Table VIII's spread), all without touching either machine.
+//!
+//!     cargo run --release --example cluster_compare
+
+use fgpm::config::{ModelCfg, ParallelCfg, Platform};
+use fgpm::predictor::{predict, Registry};
+use fgpm::sampling::collect_platform;
+
+fn main() {
+    let configs = [
+        (ModelCfg::gpt20b(), ParallelCfg::parse("4-4-8").unwrap()),
+        (ModelCfg::llama13b(), ParallelCfg::parse("4-8-2").unwrap()),
+        (ModelCfg::llemma7b(), ParallelCfg::parse("4-2-2").unwrap()),
+    ];
+
+    let mut table: Vec<(String, f64, f64)> = Vec::new();
+    for platform in Platform::all() {
+        println!("collecting + training ({}) ...", platform.name);
+        let datasets = collect_platform(&platform, 11);
+        let mut registry = Registry::train(platform.name, &datasets, 11);
+        for (model, par) in &configs {
+            let cp = predict(model, par, &platform, &mut registry);
+            let batch_s = cp.total_us / 1e6;
+            // tokens per batch = micro * seq * iters * dp
+            let tokens = (model.micro_batch * model.l * model.iters_per_update * par.dp) as f64;
+            let tok_per_gpu_s = tokens / batch_s / par.gpus() as f64;
+            table.push((format!("{} {} {}", platform.name, model.name, par), batch_s, tok_per_gpu_s));
+        }
+    }
+
+    println!("\n{:<38} {:>10} {:>16}", "configuration", "batch s", "tokens/s/GPU");
+    for (label, batch, tput) in &table {
+        println!("{label:<38} {batch:>10.2} {tput:>16.0}");
+    }
+
+    // GH200s are individually faster: per-GPU throughput on Vista should
+    // beat Perlmutter for the compute-dominated Llemma config.
+    let p_llemma = table.iter().find(|t| t.0.contains("perlmutter Llemma")).unwrap();
+    let v_llemma = table.iter().find(|t| t.0.contains("vista Llemma")).unwrap();
+    println!(
+        "\nLlemma-7B tokens/s/GPU: vista {:.0} vs perlmutter {:.0} ({}x)",
+        v_llemma.2,
+        p_llemma.2,
+        v_llemma.2 / p_llemma.2
+    );
+    assert!(v_llemma.2 > p_llemma.2, "GH200 should win per-GPU on compute-bound work");
+}

@@ -1,0 +1,92 @@
+//! END-TO-END DRIVER (DESIGN.md E8): the full three-layer system on the
+//! paper's headline workload, proving all layers compose:
+//!
+//!   1. micro-benchmark BOTH simulated platforms (Tables VI-VII grids);
+//!   2. train + select per-operator tree regressors in rust (80/20);
+//!   3. export every forest to the flattened tensor layout and serve
+//!      inference through the AOT-compiled **Pallas kernel** on the PJRT
+//!      CPU client, behind the **dynamic-batching coordinator**;
+//!   4. predict all five Table-IX configurations per platform via eq (7);
+//!   5. validate against event-accurate simulated training runs and
+//!      report the paper's headline metric (mean |overall error|).
+//!
+//!     make artifacts && cargo run --release --example e2e_validation
+//!
+//! The run is recorded in EXPERIMENTS.md §E8.
+
+use std::time::Instant;
+
+use fgpm::config::Platform;
+use fgpm::coordinator::{BatcherCfg, PredictionService};
+use fgpm::predictor::{evaluate, Registry};
+use fgpm::report::tables::paper_configs;
+use fgpm::runtime::{artifacts_dir, Engine, XlaForestPredictor};
+use fgpm::sampling::collect_platform;
+use fgpm::util::stats;
+
+fn main() {
+    let mut headline = Vec::new();
+    for platform in Platform::all() {
+        println!("=== {} ===", platform.name);
+        let t0 = Instant::now();
+        let datasets = collect_platform(&platform, 42);
+        println!(
+            "[collect] {} datasets / {} rows in {:?}",
+            datasets.len(),
+            datasets.values().map(|d| d.len()).sum::<usize>(),
+            t0.elapsed()
+        );
+
+        let t0 = Instant::now();
+        let registry = Registry::train(platform.name, &datasets, 42);
+        println!(
+            "[train]   {} regressors in {:?} (mean val MAPE {:.2}%)",
+            registry.forests.len(),
+            t0.elapsed(),
+            registry.mean_val_mape()
+        );
+
+        // XLA path behind the dynamic-batching coordinator. The engine is
+        // built on the executor thread (PJRT clients are not Send).
+        let flat = registry.export_flat(128, 1024);
+        let svc = PredictionService::start_with(
+            move || {
+                let engine = Engine::load(&artifacts_dir()).expect("make artifacts first");
+                Box::new(XlaForestPredictor::new(engine, &flat).expect("forest upload"))
+            },
+            BatcherCfg::default(),
+        );
+
+        let t0 = Instant::now();
+        let mut errs = Vec::new();
+        for (model, par) in paper_configs() {
+            let cp = svc.predict_config(&model, &par, &platform);
+            let e = evaluate(&model, &par, &platform, &cp, 8, 42);
+            println!(
+                "[predict] {:<18} actual {:>7.2}s predicted {:>7.2}s overall {:+6.2}%",
+                e.label, e.actual_total_s, e.predicted_total_s, e.overall
+            );
+            errs.push(e);
+        }
+        let snap = svc.metrics.snapshot();
+        println!(
+            "[serve]   5 configs in {:?}: {} queries -> {} XLA batches (mean fill {:.1} rows)",
+            t0.elapsed(),
+            snap.queries,
+            snap.batches,
+            snap.mean_batch_rows()
+        );
+        svc.shutdown();
+
+        let mean_abs = stats::mean(&errs.iter().map(|e| e.overall.abs()).collect::<Vec<_>>());
+        println!(
+            "[result]  mean |overall error| on {}: {:.2}%  (paper: {})",
+            platform.name,
+            mean_abs,
+            if platform.name == "perlmutter" { "4.98%" } else { "9.38%" }
+        );
+        headline.push((platform.name, mean_abs));
+        assert!(mean_abs < 12.0, "{}: mean error {mean_abs}% out of band", platform.name);
+    }
+    println!("\nHEADLINE: {headline:?}");
+}

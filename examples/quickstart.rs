@@ -1,0 +1,44 @@
+//! Quickstart: predict the training-batch time of GPT-20B under 4-4-8
+//! parallelism on the Perlmutter-like platform, end to end, in-process.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Pipeline: micro-benchmark the simulated cluster (Tables VI-VII grids)
+//! -> train per-operator tree regressors (80/20 selection) -> compose the
+//! prediction via eqs (3)-(7) -> compare against a "real" simulated run.
+
+use fgpm::config::{ModelCfg, ParallelCfg, Platform};
+use fgpm::predictor::{evaluate, predict, Registry};
+use fgpm::sampling::collect_platform;
+
+fn main() {
+    let platform = Platform::perlmutter();
+    let model = ModelCfg::gpt20b();
+    let par = ParallelCfg::parse("4-4-8").unwrap();
+
+    println!("[1/4] micro-benchmarking {} ...", platform.name);
+    let datasets = collect_platform(&platform, 42);
+    let rows: usize = datasets.values().map(|d| d.len()).sum();
+    println!("      {} operator datasets, {rows} measurements", datasets.len());
+
+    println!("[2/4] training per-operator regressors ...");
+    let mut registry = Registry::train(platform.name, &datasets, 42);
+    println!("      mean validation MAPE {:.2}%", registry.mean_val_mape());
+
+    println!("[3/4] predicting {}({}) ...", model.name, par.label());
+    let cp = predict(&model, &par, &platform, &mut registry);
+    println!("      predicted batch time: {:.2} s", cp.total_us / 1e6);
+    println!("      stage fwd (max):      {:.1} ms", cp.stage_fwd_max() / 1e3);
+    println!("      stage bwd (max):      {:.1} ms", cp.stage_bwd_max() / 1e3);
+    println!("      DP sync (1st stage):  {:.1} ms", cp.dp_allreduce_first_us / 1e3);
+    println!("      max update:           {:.1} ms", cp.max_update_us / 1e3);
+
+    println!("[4/4] validating against a simulated training run ...");
+    let errs = evaluate(&model, &par, &platform, &cp, 6, 42);
+    println!(
+        "      actual (fastest of 6): {:.2} s  ->  overall error {:+.2}%",
+        errs.actual_total_s, errs.overall
+    );
+    assert!(errs.overall.abs() < 25.0, "quickstart prediction off the rails");
+    println!("done.");
+}

@@ -1,0 +1,90 @@
+"""AOT lowering: jax -> HLO TEXT artifacts consumed by the rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out, default ../artifacts):
+  forest_infer.hlo.txt  Layer-1 Pallas forest inference (+expm1), padded
+  timeline.hlo.txt      Layer-2 eq. (7) batched timeline aggregation
+  manifest.json         the padded shape constants for the rust runtime
+
+Python runs ONCE here; it is never on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import shapes
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    forest = jax.jit(model.forest_infer_padded).lower(*model.forest_example_args())
+    timeline = jax.jit(model.timeline_batch).lower(*model.timeline_example_args())
+    return {
+        "forest_infer.hlo.txt": to_hlo_text(forest),
+        "timeline.hlo.txt": to_hlo_text(timeline),
+    }
+
+
+def manifest() -> dict:
+    return {
+        "format": "hlo-text",
+        "log_space": True,  # forests trained on log1p(us); expm1 in-graph
+        "forest": {
+            "batch": shapes.B,
+            "block_b": shapes.BB,
+            "features": shapes.F,
+            "trees": shapes.T,
+            "nodes": shapes.N,
+            "depth": shapes.D,
+            "leaf": shapes.LEAF,
+            "inputs": ["feat", "node_feat", "thresh", "left", "right",
+                       "value", "tree_w"],
+        },
+        "timeline": {
+            "configs": shapes.C,
+            "stages": shapes.S,
+            "inputs": ["fwd", "bwd", "mask", "dp_first", "update", "micro",
+                       "stages"],
+        },
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for name, text in lower_all().items():
+        path = os.path.join(args.out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print(f"wrote manifest        {mpath}")
+
+
+if __name__ == "__main__":
+    main()

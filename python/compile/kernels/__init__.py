@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels + pure-jnp/numpy references.
+
+Shared AOT shape constants live in `shapes`; the rust runtime reads the
+same values from artifacts/manifest.json.
+"""
+
+from . import shapes  # noqa: F401

@@ -1,0 +1,108 @@
+"""Layer-1 Pallas kernel: batched tree-ensemble (RandomForest / GBT) inference.
+
+This is the hot-spot of the prediction system: sweeping thousands of
+candidate (model, parallelism, platform) configurations means millions of
+per-operator regressor evaluations. The paper runs sklearn on CPU; we
+re-think the traversal for a TPU-style vector unit (DESIGN.md
+§Hardware-Adaptation):
+
+- GPU-style thread-per-query traversal is divergent; instead we advance
+  ALL queries x ALL trees one level per step (level-synchronous), with
+  vectorized gathers and masked leaf lanes — a fixed D-step schedule with
+  no data-dependent control flow.
+- The flattened forest (feat/thresh/left/right/value, each [T, N]) is
+  VMEM-resident; query blocks [BB, F] stream HBM->VMEM over a 1-D grid.
+- Tree weights fold RF averaging and GBT learning-rate into a single dot.
+
+Forest tensor layout (produced by rust `forest::export`):
+  node_feat[t, n]  int32   feature index of node n in tree t; LEAF(-1) if leaf
+  thresh[t, n]     float32 split threshold (go left iff x[f] <= thresh)
+  left/right[t, n] int32   child node indices (within tree t)
+  value[t, n]      float32 leaf prediction (0 for internal nodes)
+  tree_w[t]        float32 per-tree weight (1/k for RF, lr or 0-padding for GBT)
+
+Kernel is executed with interpret=True: CPU PJRT cannot run Mosaic
+custom-calls, and correctness is what we validate here (see ref.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import shapes
+
+
+def _forest_kernel(feat_ref, nf_ref, th_ref, lf_ref, rt_ref, val_ref, w_ref,
+                   out_ref, *, depth: int):
+    """One grid step: predict a [BB] block of queries against the full forest."""
+    feat = feat_ref[...]                      # [BB, F]
+    nf = nf_ref[...]                          # [T, N] int32
+    th = th_ref[...]                          # [T, N]
+    lf = lf_ref[...]                          # [T, N] int32
+    rt = rt_ref[...]                          # [T, N] int32
+    val = val_ref[...]                        # [T, N]
+    w = w_ref[...]                            # [T]
+
+    bb = feat.shape[0]
+    t_count, n_count = nf.shape
+    f_count = feat.shape[1]
+
+    # Linearized gather helpers: node tables flatten to [T*N]; a (query,
+    # tree) cursor matrix idx[bb, T] linearizes as t*N + idx.
+    nf_flat = nf.reshape(-1)
+    th_flat = th.reshape(-1)
+    lf_flat = lf.reshape(-1)
+    rt_flat = rt.reshape(-1)
+    val_flat = val.reshape(-1)
+    tree_base = (jnp.arange(t_count, dtype=jnp.int32) * n_count)[None, :]
+
+    def level(_, idx):
+        lin = tree_base + idx                                   # [bb, T]
+        node_f = jnp.take(nf_flat, lin, axis=0)                 # [bb, T]
+        node_t = jnp.take(th_flat, lin, axis=0)
+        node_l = jnp.take(lf_flat, lin, axis=0)
+        node_r = jnp.take(rt_flat, lin, axis=0)
+        # Gather the split feature per (query, tree); clamp leaf markers.
+        f_idx = jnp.clip(node_f, 0, f_count - 1)
+        x = jnp.take_along_axis(feat, f_idx, axis=1)            # [bb, T]
+        go_left = x <= node_t
+        nxt = jnp.where(go_left, node_l, node_r)
+        is_leaf = node_f == shapes.LEAF
+        return jnp.where(is_leaf, idx, nxt)
+
+    idx0 = jnp.zeros((bb, t_count), dtype=jnp.int32)
+    idx = jax.lax.fori_loop(0, depth, level, idx0)
+
+    leaf_val = jnp.take(val_flat, tree_base + idx, axis=0)      # [bb, T]
+    out_ref[...] = leaf_val @ w                                  # [bb]
+
+
+def forest_infer(feat, node_feat, thresh, left, right, value, tree_w,
+                 *, block_b: int = shapes.BB, depth: int = shapes.D):
+    """Batched forest inference via the Pallas kernel (interpret mode).
+
+    feat: [B, F] float32; forest tensors as module docstring; returns [B].
+    """
+    b, _f = feat.shape
+    t, n = node_feat.shape
+    assert b % block_b == 0, (b, block_b)
+    grid = (b // block_b,)
+    kernel = functools.partial(_forest_kernel, depth=depth)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, feat.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+            pl.BlockSpec((t, n), lambda i: (0, 0)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(feat, node_feat, thresh, left, right, value, tree_w)

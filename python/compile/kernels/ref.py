@@ -1,0 +1,62 @@
+"""Pure-numpy correctness oracles for the Pallas kernels.
+
+`forest_infer_ref` walks every (query, tree) pair with explicit scalar
+control flow — the "obviously correct" semantics the vectorized
+level-synchronous kernel must match bit-for-bit (same f32 accumulation
+order is NOT guaranteed, so tests use allclose with tight tolerances).
+"""
+
+import numpy as np
+
+
+def forest_infer_ref(feat, node_feat, thresh, left, right, value, tree_w,
+                     depth=None, leaf=-1):
+    """Scalar reference: returns [B] predictions.
+
+    Semantics: start at node 0 of each tree; while the node is internal,
+    go left iff x[f] <= thresh else right; at a leaf, contribute
+    tree_w[t] * value[leaf]. `depth` caps traversal (kernel runs exactly D
+    steps); trees deeper than `depth` are a layout bug upstream.
+    """
+    feat = np.asarray(feat)
+    b = feat.shape[0]
+    t_count, _n = node_feat.shape
+    max_steps = depth if depth is not None else node_feat.shape[1]
+    out = np.zeros(b, dtype=np.float64)
+    for i in range(b):
+        for t in range(t_count):
+            if tree_w[t] == 0.0:
+                # Padding tree: the kernel still dots value*0 — identical.
+                continue
+            idx = 0
+            for _ in range(max_steps):
+                f = node_feat[t, idx]
+                if f == leaf:
+                    break
+                if feat[i, f] <= thresh[t, idx]:
+                    idx = left[t, idx]
+                else:
+                    idx = right[t, idx]
+            out[i] += float(tree_w[t]) * float(value[t, idx])
+    return out.astype(np.float32)
+
+
+def timeline_ref(fwd, bwd, mask, dp_first, update, micro, stages):
+    """Scalar reference of eq. (7): returns [C] batch runtimes.
+
+    Runtime = (#micro - 1 + #stages) * (max_fwd + max_bwd)
+              + first_stage_dp_allreduce + max_update
+    where maxes run over mask-active stages.
+    """
+    fwd = np.asarray(fwd, dtype=np.float64)
+    bwd = np.asarray(bwd, dtype=np.float64)
+    mask = np.asarray(mask, dtype=np.float64)
+    update = np.asarray(update, dtype=np.float64)
+    c = fwd.shape[0]
+    out = np.zeros(c, dtype=np.float64)
+    for i in range(c):
+        mf = np.max(fwd[i] * mask[i])
+        mb = np.max(bwd[i] * mask[i])
+        mu = np.max(update[i] * mask[i])
+        out[i] = (micro[i] - 1.0 + stages[i]) * (mf + mb) + dp_first[i] + mu
+    return out.astype(np.float32)

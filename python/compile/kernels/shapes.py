@@ -1,0 +1,21 @@
+"""AOT shape constants shared by the Pallas kernel, the L2 model, the AOT
+lowering, and (via artifacts/manifest.json) the rust runtime.
+
+The forest-inference executable is compiled ONCE for these padded shapes;
+every per-operator forest is exported (rust `forest::export`) into this
+layout, and the coordinator's dynamic batcher pads query batches to B.
+"""
+
+# Forest inference ----------------------------------------------------------
+B = 256   # query batch (padded by the L3 dynamic batcher)
+BB = 64   # query block per grid step (B % BB == 0)
+F = 8     # feature width (workload-representation vectors padded to F)
+T = 128   # max trees per forest (unused trees get weight 0)
+N = 1024  # max nodes per tree (row-padded)
+D = 16    # traversal steps == max tree depth supported by the kernel
+
+# Timeline aggregation (eq. 7) ----------------------------------------------
+C = 64    # configs per timeline batch
+S = 16    # max pipeline stages (mask-padded)
+
+LEAF = -1  # node_feat value marking a leaf node

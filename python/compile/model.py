@@ -1,0 +1,80 @@
+"""Layer-2 JAX compute graphs, AOT-lowered by aot.py and executed from rust.
+
+Two graphs are exported:
+
+1. `forest_infer_padded` — per-operator regressor inference. One executable
+   serves every (platform, operator) forest: the forest tensors are runtime
+   INPUTS (not baked constants), so the rust coordinator feeds whichever
+   flattened forest the routed queries need. Calls the Layer-1 Pallas
+   kernel (kernels/forest.py).
+
+2. `timeline_batch` — the paper's eq. (7) end-to-end composition, batched
+   over C configurations so a parallelism sweep amortizes one execution.
+
+Shapes are the padded AOT constants from kernels/shapes.py; the rust side
+reads them from artifacts/manifest.json.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import forest, shapes
+
+
+def forest_infer_padded(feat, node_feat, thresh, left, right, value, tree_w):
+    """[B, F] queries x one padded forest -> [B] predictions.
+
+    Regressors are trained on log1p(latency_us); the graph folds the
+    inverse transform (expm1) so rust receives microseconds directly.
+    """
+    log_pred = forest.forest_infer(
+        feat, node_feat, thresh, left, right, value, tree_w)
+    return (jnp.expm1(log_pred),)
+
+
+def timeline_batch(fwd, bwd, mask, dp_first, update, micro, stages):
+    """Batched eq. (7).
+
+    fwd, bwd, update: [C, S] per-stage times (mask-padded); mask: [C, S]
+    in {0,1}; dp_first: [C] first-stage DP all-reduce; micro, stages: [C].
+    Times are nonnegative, so masked maxima are plain max(x * mask).
+    """
+    mf = jnp.max(fwd * mask, axis=1)
+    mb = jnp.max(bwd * mask, axis=1)
+    mu = jnp.max(update * mask, axis=1)
+    runtime = (micro - 1.0 + stages) * (mf + mb) + dp_first + mu
+    return (runtime,)
+
+
+def forest_example_args():
+    """ShapeDtypeStructs for AOT lowering of forest_infer_padded."""
+    import jax
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    tn = (shapes.T, shapes.N)
+    return (
+        jax.ShapeDtypeStruct((shapes.B, shapes.F), f32),
+        jax.ShapeDtypeStruct(tn, i32),
+        jax.ShapeDtypeStruct(tn, f32),
+        jax.ShapeDtypeStruct(tn, i32),
+        jax.ShapeDtypeStruct(tn, i32),
+        jax.ShapeDtypeStruct(tn, f32),
+        jax.ShapeDtypeStruct((shapes.T,), f32),
+    )
+
+
+def timeline_example_args():
+    """ShapeDtypeStructs for AOT lowering of timeline_batch."""
+    import jax
+
+    f32 = jnp.float32
+    cs = (shapes.C, shapes.S)
+    return (
+        jax.ShapeDtypeStruct(cs, f32),
+        jax.ShapeDtypeStruct(cs, f32),
+        jax.ShapeDtypeStruct(cs, f32),
+        jax.ShapeDtypeStruct((shapes.C,), f32),
+        jax.ShapeDtypeStruct(cs, f32),
+        jax.ShapeDtypeStruct((shapes.C,), f32),
+        jax.ShapeDtypeStruct((shapes.C,), f32),
+    )

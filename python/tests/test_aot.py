@@ -1,0 +1,38 @@
+"""AOT lowering smoke tests: HLO text artifacts exist, parse-ably shaped,
+and the manifest matches the shape constants."""
+
+import json
+
+from compile import aot
+from compile.kernels import shapes
+
+
+class TestAot:
+    def test_lower_all_produces_hlo_text(self):
+        arts = aot.lower_all()
+        assert set(arts) == {"forest_infer.hlo.txt", "timeline.hlo.txt"}
+        for name, text in arts.items():
+            assert "HloModule" in text, name
+            assert "ROOT" in text, name
+            assert len(text) > 500, name
+
+    def test_forest_hlo_mentions_padded_shapes(self):
+        text = aot.lower_all()["forest_infer.hlo.txt"]
+        assert f"f32[{shapes.B},{shapes.F}]" in text
+        assert f"s32[{shapes.T},{shapes.N}]" in text
+        assert f"f32[{shapes.B}]" in text
+
+    def test_timeline_hlo_mentions_padded_shapes(self):
+        text = aot.lower_all()["timeline.hlo.txt"]
+        assert f"f32[{shapes.C},{shapes.S}]" in text
+        assert f"f32[{shapes.C}]" in text
+
+    def test_manifest_consistent(self):
+        m = aot.manifest()
+        assert m["forest"]["batch"] == shapes.B
+        assert m["forest"]["trees"] == shapes.T
+        assert m["forest"]["nodes"] == shapes.N
+        assert m["forest"]["depth"] == shapes.D
+        assert m["timeline"]["configs"] == shapes.C
+        assert m["timeline"]["stages"] == shapes.S
+        json.dumps(m)  # serializable

@@ -1,0 +1,147 @@
+"""Pallas forest kernel vs scalar numpy oracle — the core L1 correctness
+signal. Hypothesis sweeps forest shapes, tree depths, and query dtypes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import forest, ref, shapes
+
+RNG = np.random.default_rng(0)
+
+
+def random_forest_tensors(rng, t_count, n_count, f_count, depth, n_trees):
+    """Build a random but *valid* flattened forest: complete binary trees of
+    `depth` levels, children strictly after parents, leaves marked LEAF."""
+    node_feat = np.full((t_count, n_count), shapes.LEAF, dtype=np.int32)
+    thresh = np.zeros((t_count, n_count), dtype=np.float32)
+    left = np.zeros((t_count, n_count), dtype=np.int32)
+    right = np.zeros((t_count, n_count), dtype=np.int32)
+    value = np.zeros((t_count, n_count), dtype=np.float32)
+    tree_w = np.zeros(t_count, dtype=np.float32)
+
+    for t in range(n_trees):
+        tree_w[t] = 1.0 / n_trees
+        # level-order complete tree: internal nodes 0..2^(depth-1)-2
+        n_internal = 2 ** (depth - 1) - 1 if depth > 1 else 0
+        n_total = 2 ** depth - 1
+        assert n_total <= n_count
+        for i in range(n_internal):
+            node_feat[t, i] = rng.integers(0, f_count)
+            thresh[t, i] = rng.normal()
+            left[t, i] = 2 * i + 1
+            right[t, i] = 2 * i + 2
+        for i in range(n_internal, n_total):
+            value[t, i] = rng.normal()
+        if n_internal == 0:
+            value[t, 0] = rng.normal()
+    return node_feat, thresh, left, right, value, tree_w
+
+
+def run_both(feat, tensors, depth=shapes.D):
+    got = np.asarray(forest.forest_infer(feat, *tensors, depth=depth))
+    want = ref.forest_infer_ref(feat, *tensors, depth=depth)
+    return got, want
+
+
+class TestForestKernelFixed:
+    def test_single_stump(self):
+        """One depth-1 tree (a leaf only) predicts its constant."""
+        t = random_forest_tensors(RNG, shapes.T, shapes.N, shapes.F, 1, 1)
+        feat = RNG.normal(size=(shapes.BB, shapes.F)).astype(np.float32)
+        got, want = run_both(feat, t)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_single_split(self):
+        """Hand-built depth-2 tree: x[3] <= 0 -> 10 else -5."""
+        node_feat = np.full((shapes.T, shapes.N), shapes.LEAF, dtype=np.int32)
+        thresh = np.zeros((shapes.T, shapes.N), dtype=np.float32)
+        left = np.zeros((shapes.T, shapes.N), dtype=np.int32)
+        right = np.zeros((shapes.T, shapes.N), dtype=np.int32)
+        value = np.zeros((shapes.T, shapes.N), dtype=np.float32)
+        tree_w = np.zeros(shapes.T, dtype=np.float32)
+        node_feat[0, 0], thresh[0, 0] = 3, 0.0
+        left[0, 0], right[0, 0] = 1, 2
+        value[0, 1], value[0, 2] = 10.0, -5.0
+        tree_w[0] = 1.0
+        feat = np.zeros((shapes.BB, shapes.F), dtype=np.float32)
+        feat[:, 3] = np.linspace(-1, 1, shapes.BB)
+        got = np.asarray(forest.forest_infer(
+            feat, node_feat, thresh, left, right, value, tree_w))
+        want = np.where(feat[:, 3] <= 0.0, 10.0, -5.0)
+        np.testing.assert_allclose(got, want)
+
+    def test_boundary_goes_left(self):
+        """x[f] == thresh must take the LEFT branch (<=)."""
+        t = random_forest_tensors(RNG, shapes.T, shapes.N, shapes.F, 2, 1)
+        node_feat, thresh, left, right, value, tree_w = t
+        feat = np.zeros((shapes.BB, shapes.F), dtype=np.float32)
+        f0 = node_feat[0, 0]
+        feat[:, f0] = thresh[0, 0]
+        got, want = run_both(feat, t)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        np.testing.assert_allclose(got, value[0, left[0, 0]] * tree_w[0],
+                                   rtol=1e-6)
+
+    def test_full_padded_shapes(self):
+        """The exact AOT shapes (B=256, T=128) round-trip."""
+        t = random_forest_tensors(RNG, shapes.T, shapes.N, shapes.F, 6, shapes.T)
+        feat = RNG.normal(size=(shapes.B, shapes.F)).astype(np.float32)
+        got, want = run_both(feat, t)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-4)
+
+    def test_zero_weight_trees_ignored(self):
+        """Padding trees (w=0) contribute nothing even with garbage nodes."""
+        t = list(random_forest_tensors(RNG, shapes.T, shapes.N, shapes.F, 4, 8))
+        t[5] = t[5].copy()
+        # poison every tree's values, then zero all weights but tree 0
+        w = np.zeros(shapes.T, dtype=np.float32)
+        w[0] = 1.0
+        t[5] = w
+        feat = RNG.normal(size=(shapes.BB, shapes.F)).astype(np.float32)
+        got, want = run_both(feat, tuple(t))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestForestKernelHypothesis:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        depth=st.integers(min_value=1, max_value=8),
+        n_trees=st.integers(min_value=1, max_value=16),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, depth, n_trees, seed):
+        rng = np.random.default_rng(seed)
+        t = random_forest_tensors(rng, shapes.T, shapes.N, shapes.F,
+                                  depth, n_trees)
+        feat = rng.normal(size=(shapes.BB, shapes.F)).astype(np.float32)
+        got, want = run_both(feat, t)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+           scale=st.sampled_from([1e-3, 1.0, 1e3, 1e6]))
+    def test_feature_scale_invariance_of_structure(self, seed, scale):
+        """Thresholds/features co-scaled -> identical routing decisions."""
+        rng = np.random.default_rng(seed)
+        t = random_forest_tensors(rng, shapes.T, shapes.N, shapes.F, 5, 4)
+        node_feat, thresh, left, right, value, tree_w = t
+        feat = rng.normal(size=(shapes.BB, shapes.F)).astype(np.float32)
+        base = np.asarray(forest.forest_infer(
+            feat, node_feat, thresh, left, right, value, tree_w))
+        scaled = np.asarray(forest.forest_infer(
+            (feat * scale).astype(np.float32), node_feat,
+            (thresh * scale).astype(np.float32), left, right, value, tree_w))
+        np.testing.assert_allclose(base, scaled, rtol=1e-3, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(block=st.sampled_from([32, 64, 128, 256]),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_block_size_invariance(self, block, seed):
+        """Grid/block decomposition must not change results."""
+        rng = np.random.default_rng(seed)
+        t = random_forest_tensors(rng, shapes.T, shapes.N, shapes.F, 5, 8)
+        feat = rng.normal(size=(shapes.B, shapes.F)).astype(np.float32)
+        a = np.asarray(forest.forest_infer(feat, *t, block_b=block))
+        b = np.asarray(forest.forest_infer(feat, *t, block_b=shapes.B))
+        np.testing.assert_allclose(a, b, rtol=1e-6)

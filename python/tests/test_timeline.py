@@ -1,0 +1,84 @@
+"""L2 timeline graph (eq. 7) vs scalar reference + analytic cases."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, shapes
+
+
+def random_timeline_inputs(rng):
+    fwd = rng.uniform(0, 100, size=(shapes.C, shapes.S)).astype(np.float32)
+    bwd = rng.uniform(0, 200, size=(shapes.C, shapes.S)).astype(np.float32)
+    update = rng.uniform(0, 50, size=(shapes.C, shapes.S)).astype(np.float32)
+    dp_first = rng.uniform(0, 30, size=(shapes.C,)).astype(np.float32)
+    micro = rng.integers(1, 32, size=(shapes.C,)).astype(np.float32)
+    stages = rng.integers(1, shapes.S + 1, size=(shapes.C,)).astype(np.float32)
+    mask = np.zeros((shapes.C, shapes.S), dtype=np.float32)
+    for i, s in enumerate(stages.astype(int)):
+        mask[i, :s] = 1.0
+    return fwd, bwd, mask, dp_first, update, micro, stages
+
+
+class TestTimeline:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(7)
+        args = random_timeline_inputs(rng)
+        (got,) = model.timeline_batch(*args)
+        want = ref.timeline_ref(*args)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+    def test_single_stage_degenerates_to_serial(self):
+        """S=1, M micro-batches: runtime = M*(fwd+bwd) + dp + update."""
+        fwd = np.zeros((shapes.C, shapes.S), dtype=np.float32)
+        bwd = np.zeros_like(fwd)
+        update = np.zeros_like(fwd)
+        mask = np.zeros_like(fwd)
+        fwd[:, 0], bwd[:, 0], update[:, 0], mask[:, 0] = 3.0, 5.0, 2.0, 1.0
+        dp_first = np.full(shapes.C, 7.0, dtype=np.float32)
+        micro = np.full(shapes.C, 16.0, dtype=np.float32)
+        stages = np.ones(shapes.C, dtype=np.float32)
+        (got,) = model.timeline_batch(fwd, bwd, mask, dp_first, update,
+                                      micro, stages)
+        np.testing.assert_allclose(np.asarray(got), 16 * 8.0 + 7.0 + 2.0)
+
+    def test_slowest_stage_dominates(self):
+        """Doubling a non-max stage time does not change the runtime."""
+        rng = np.random.default_rng(3)
+        args = list(random_timeline_inputs(rng))
+        (base,) = model.timeline_batch(*args)
+        fwd = args[0].copy()
+        i = 0
+        s = int(args[6][i])
+        if s >= 2:
+            row = fwd[i, :s]
+            jmin = int(np.argmin(row))
+            row[jmin] = row[jmin] * 0.5  # shrink the min — still not the max
+            args[0] = fwd
+            (got,) = model.timeline_batch(*args)
+            np.testing.assert_allclose(np.asarray(got)[i],
+                                       np.asarray(base)[i], rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_hypothesis_matches_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        args = random_timeline_inputs(rng)
+        (got,) = model.timeline_batch(*args)
+        want = ref.timeline_ref(*args)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+           extra=st.floats(min_value=0.1, max_value=100.0))
+    def test_monotone_in_max_fwd(self, seed, extra):
+        """Increasing the slowest stage's fwd time never decreases runtime."""
+        rng = np.random.default_rng(seed)
+        args = list(random_timeline_inputs(rng))
+        (base,) = model.timeline_batch(*args)
+        fwd = args[0].copy()
+        fwd[:, 0] += np.float32(extra)
+        args2 = list(args)
+        args2[0] = fwd
+        (got,) = model.timeline_batch(*args2)
+        assert np.all(np.asarray(got) >= np.asarray(base) - 1e-4)

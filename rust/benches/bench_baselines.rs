@@ -1,0 +1,93 @@
+//! Bench harness for the ablation (E9): tree regressors vs the log-linear
+//! and analytical baselines — both end-to-end |error| and inference cost.
+//!
+//!     cargo bench --bench bench_baselines
+
+use fgpm::baselines::{Analytical, BlackBox, LogLinear};
+use fgpm::config::{ModelCfg, ParallelCfg, Platform};
+use fgpm::predictor::registry::BatchPredictor;
+use fgpm::predictor::{evaluate, predict, Registry};
+use fgpm::report::tables::{markdown_table, paper_configs, table9_errors};
+use fgpm::report::emit;
+use fgpm::sampling::collect_platform;
+use fgpm::util::benchkit::{black_box, Bench};
+use fgpm::util::stats;
+
+fn main() {
+    let platform = Platform::perlmutter();
+    let data = collect_platform(&platform, 42);
+
+    let mut rows = Vec::new();
+    let mut add = |name: &str, p: &mut dyn BatchPredictor| {
+        let errs = table9_errors(&platform, p, 6, 42);
+        let mean = stats::mean(&errs.iter().map(|e| e.overall.abs()).collect::<Vec<_>>());
+        let worst = errs.iter().map(|e| e.overall.abs()).fold(0.0, f64::max);
+        rows.push(vec![name.to_string(), format!("{mean:.2}%"), format!("{worst:.2}%")]);
+    };
+
+    let mut reg = Registry::train(platform.name, &data, 42);
+    add("tree regressors (ours)", &mut reg);
+    let mut ll = LogLinear::train(&data);
+    add("log-linear regression", &mut ll);
+    let mut an = Analytical::new(platform.clone());
+    add("analytical roofline", &mut an);
+
+    // black-box scaling law: needs full end-to-end runs as training data
+    let train_cfgs = vec![
+        (ModelCfg::llemma7b(), ParallelCfg::new(2, 2, 2)),
+        (ModelCfg::llemma7b(), ParallelCfg::new(4, 2, 2)),
+        (ModelCfg::llama13b(), ParallelCfg::new(4, 4, 2)),
+        (ModelCfg::gpt20b(), ParallelCfg::new(4, 4, 4)),
+    ];
+    let bb = BlackBox::train_from_sim(&train_cfgs, &platform, 42);
+    let mut bb_errs = Vec::new();
+    for (model, par) in paper_configs() {
+        let pred_s = bb.predict_s(&model, &par);
+        let st = fgpm::trainrun::stability(&model, &par, &platform, 4, 42);
+        bb_errs.push(100.0 * (pred_s - st.min_s).abs() / st.min_s);
+    }
+    rows.push(vec![
+        "black-box scaling fit".into(),
+        format!("{:.2}%", stats::mean(&bb_errs)),
+        format!("{:.2}%", bb_errs.iter().cloned().fold(0.0, f64::max)),
+    ]);
+
+    let md = format!(
+        "# Ablation (E9) — end-to-end error by operator model ({})\n\n{}",
+        platform.name,
+        markdown_table(
+            &["model".into(), "mean |overall err|".into(), "worst |overall err|".into()],
+            &rows
+        )
+    );
+    emit("ablate_perlmutter.md", &md);
+    println!("{md}");
+
+    // inference-cost comparison (per end-to-end config prediction)
+    let model = ModelCfg::gpt20b();
+    let par = ParallelCfg::new(4, 4, 8);
+    let mut b = Bench::new("predictor inference cost per config").with_iters(2, 10);
+    b.case("tree regressors", || {
+        black_box(predict(&model, &par, &platform, &mut reg));
+    });
+    b.case("log-linear", || {
+        black_box(predict(&model, &par, &platform, &mut ll));
+    });
+    b.case("analytical", || {
+        black_box(predict(&model, &par, &platform, &mut an));
+    });
+    b.finish();
+
+    // sanity used by EXPERIMENTS.md: ours must win on accuracy
+    let e_ours = evaluate(
+        &model,
+        &par,
+        &platform,
+        &predict(&model, &par, &platform, &mut reg),
+        6,
+        7,
+    )
+    .overall
+    .abs();
+    println!("tree-regressor GPT-20B(4-4-8) |overall| = {e_ours:.2}%");
+}

@@ -1,0 +1,27 @@
+//! Bench harness for Figure 3 (E7): regenerates the component-proportion
+//! series for both platforms and times the proportion computation.
+//!
+//!     cargo bench --bench bench_fig3
+
+use fgpm::config::Platform;
+use fgpm::predictor::Registry;
+use fgpm::report::{emit, fig3_markdown};
+use fgpm::sampling::collect_platform;
+use fgpm::util::benchkit::{black_box, Bench};
+
+fn main() {
+    let mut out = String::new();
+    let mut bench = Bench::new("fig3 proportions").with_iters(0, 3);
+    for platform in Platform::all() {
+        let data = collect_platform(&platform, 42);
+        let mut reg = Registry::train(platform.name, &data, 42);
+        bench.case(&format!("fig3 series ({})", platform.name), || {
+            black_box(fig3_markdown(&platform, &mut reg));
+        });
+        out.push_str(&fig3_markdown(&platform, &mut reg));
+        out.push('\n');
+    }
+    emit("fig3.md", &out);
+    println!("{out}");
+    bench.finish();
+}

@@ -1,0 +1,103 @@
+//! Hot-path micro-benchmarks (the §Perf targets): XLA forest inference
+//! (the Layer-1 Pallas kernel via PJRT), native forest inference, the
+//! dynamic batcher, and the 1F1B scheduler.
+//!
+//!     make artifacts && cargo bench --bench bench_hotpath
+
+use std::time::Duration;
+
+use fgpm::coordinator::batcher::{BatcherCfg, DynamicBatcher, PendingQuery};
+use fgpm::forest::ensemble::{to_log, Forest, RfParams};
+use fgpm::forest::FlatForest;
+use fgpm::ops::{Dir, OpKind};
+use fgpm::pipeline::{one_f_one_b, TaskTimes};
+use fgpm::runtime::{artifacts_dir, Engine};
+use fgpm::util::benchkit::{black_box, Bench};
+use fgpm::util::rng::Rng;
+
+fn trained_forest(seed: u64) -> (Vec<Vec<f64>>, Forest) {
+    let mut rng = Rng::new(seed);
+    let x: Vec<Vec<f64>> = (0..800)
+        .map(|_| vec![rng.uniform(100.0, 50_000.0), rng.uniform(1.0, 16.0), rng.uniform(1024.0, 8192.0)])
+        .collect();
+    let y: Vec<f64> = x.iter().map(|r| 10.0 + r[0] * r[2] / 1e6 / r[1]).collect();
+    let f = Forest::fit_rf(
+        &x,
+        &to_log(&y),
+        &RfParams { n_trees: 60, max_depth: 12, min_samples_leaf: 2, mtry: None },
+        seed,
+    );
+    (x, f)
+}
+
+fn main() {
+    let (x, forest) = trained_forest(1);
+    let mut b = Bench::new("hot paths").with_iters(3, 15);
+
+    // native rust traversal, batch of 256
+    b.case("native forest inference (256 queries)", || {
+        for row in x.iter().take(256) {
+            black_box(forest.predict_us(row));
+        }
+    });
+
+    // XLA / Pallas kernel path
+    match Engine::load(&artifacts_dir()) {
+        Ok(engine) => {
+            let flat = FlatForest::from_forest(&forest, engine.manifest.trees, engine.manifest.nodes);
+            let buf = engine.prepare_forest(&flat).unwrap();
+            let m = &engine.manifest;
+            let mut feat = vec![0f32; m.batch * m.features];
+            for (i, row) in x.iter().take(m.batch).enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    feat[i * m.features + j] = v as f32;
+                }
+            }
+            b.case("XLA forest inference (1 padded batch of 256)", || {
+                black_box(engine.forest_infer(&feat, &buf).unwrap());
+            });
+            b.case("XLA forest upload (prepare_forest)", || {
+                black_box(engine.prepare_forest(&flat).unwrap());
+            });
+        }
+        Err(e) => eprintln!("skipping XLA cases (run `make artifacts`): {e}"),
+    }
+
+    // flattened-layout CPU reference traversal
+    let flat = FlatForest::from_forest(&forest, 128, 1024);
+    let rows32: Vec<Vec<f32>> =
+        x.iter().take(256).map(|r| r.iter().map(|&v| v as f32).collect()).collect();
+    b.case("flat-layout reference traversal (256 queries)", || {
+        for row in &rows32 {
+            black_box(flat.predict_us(row, 16));
+        }
+    });
+
+    // dynamic batcher policy throughput
+    b.case("dynamic batcher push+flush (4096 queries)", || {
+        let mut batcher = DynamicBatcher::new(BatcherCfg {
+            max_batch: 256,
+            max_wait: Duration::from_millis(1),
+        });
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let now = std::time::Instant::now();
+        for i in 0..4096u32 {
+            let key = if i % 2 == 0 {
+                (OpKind::Linear1, Dir::Fwd)
+            } else {
+                (OpKind::Softmax, Dir::Bwd)
+            };
+            let q = PendingQuery { row: vec![i as f64], enqueued: now, respond: tx.clone() };
+            black_box(batcher.push(key, q));
+        }
+        black_box(batcher.drain());
+    });
+
+    // 1F1B scheduler
+    let times = TaskTimes::uniform(8, 32, 3.0, 6.0);
+    b.case("1F1B schedule (8 stages x 32 micro-batches)", || {
+        black_box(one_f_one_b(&times));
+    });
+
+    b.finish();
+}

@@ -1,0 +1,45 @@
+//! Bench harness for the data-collection layer (E3, Tables VI-VII): plan
+//! generation, the measurement protocol, and full platform collection.
+//!
+//!     cargo bench --bench bench_sampling
+
+use fgpm::config::Platform;
+use fgpm::ops::build::{compute_op, Workload};
+use fgpm::ops::{Dir, OpKind};
+use fgpm::sampling::collector::measure_us;
+use fgpm::sampling::{collect_platform, compute_plan};
+use fgpm::sim::ClusterSim;
+use fgpm::util::benchkit::{black_box, Bench};
+
+fn main() {
+    let p = Platform::perlmutter();
+    let mut b = Bench::new("sampling layer").with_iters(1, 5);
+
+    b.case("compute_plan generation (Table VI grid)", || {
+        black_box(compute_plan());
+    });
+
+    let wl = Workload::synthetic(4, 2048, 6144, 64, 50257, 4, &p, 2);
+    let op = compute_op(OpKind::Linear1, &wl, Dir::Fwd);
+    let mut sim = ClusterSim::new(p.clone(), 3);
+    b.case("measurement protocol (warmup10 + 10 + median5)", || {
+        black_box(measure_us(&mut sim, &op.lowered));
+    });
+
+    let mut b2 = Bench::new("full collection").with_iters(0, 3);
+    for platform in Platform::all() {
+        b2.case(&format!("collect_platform ({})", platform.name), || {
+            black_box(collect_platform(&platform, 42));
+        });
+    }
+    b.finish();
+    b2.finish();
+
+    // context for EXPERIMENTS.md: dataset volume
+    let data = collect_platform(&p, 42);
+    println!(
+        "collected {} datasets, {} rows total",
+        data.len(),
+        data.values().map(|d| d.len()).sum::<usize>()
+    );
+}

@@ -1,0 +1,31 @@
+//! Bench harness for Table VIII (E4): regenerates the stability table and
+//! times the simulated-training substrate itself.
+//!
+//!     cargo bench --bench bench_table8
+
+use fgpm::config::{ModelCfg, ParallelCfg, Platform};
+use fgpm::report::{emit, table8_markdown};
+use fgpm::trainrun::run_batch;
+use fgpm::util::benchkit::{black_box, Bench};
+
+fn main() {
+    // 1) regenerate the paper table (the artifact itself)
+    let md = table8_markdown(12, 42);
+    emit("table8.md", &md);
+    println!("{md}");
+
+    // 2) time the substrate: one simulated batch per config class
+    let mut b = Bench::new("table8 substrate (one simulated training batch)").with_iters(1, 5);
+    for (m, cfg) in [("gpt20b", "4-4-8"), ("gpt20b", "8-4-4"), ("llemma7b", "4-2-2")] {
+        let model = ModelCfg::by_name(m).unwrap();
+        let par = ParallelCfg::parse(cfg).unwrap();
+        for platform in Platform::all() {
+            let mut seed = 0u64;
+            b.case(&format!("{m}({cfg}) on {}", platform.name), || {
+                seed += 1;
+                black_box(run_batch(&model, &par, &platform, seed));
+            });
+        }
+    }
+    b.finish();
+}

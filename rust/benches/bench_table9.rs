@@ -1,0 +1,45 @@
+//! Bench harness for Table IX (E5): regenerates the component-error table
+//! (native backend) and times the trained-predictor hot path.
+//!
+//!     cargo bench --bench bench_table9
+
+use fgpm::config::Platform;
+use fgpm::predictor::Registry;
+use fgpm::report::tables::{paper_configs, table9_errors};
+use fgpm::report::{emit, table9_markdown};
+use fgpm::sampling::collect_platform;
+use fgpm::util::benchkit::{black_box, Bench};
+
+fn main() {
+    let mut results = Vec::new();
+    let mut bench = Bench::new("table9 pipeline stages").with_iters(0, 1);
+    for platform in Platform::all() {
+        let mut data = None;
+        bench.case(&format!("collect ({})", platform.name), || {
+            data = Some(collect_platform(&platform, 42));
+        });
+        let data = data.unwrap();
+        let mut reg = None;
+        bench.case(&format!("train ({})", platform.name), || {
+            reg = Some(Registry::train(platform.name, &data, 42));
+        });
+        let mut reg = reg.unwrap();
+        let mut errs = None;
+        bench.case(&format!("predict+validate 5 configs ({})", platform.name), || {
+            errs = Some(table9_errors(&platform, &mut reg, 8, 42));
+        });
+        results.push((platform.name.to_string(), errs.unwrap()));
+
+        // prediction-only hot path (the sweep latency the paper touts)
+        let configs = paper_configs();
+        bench.case(&format!("predict 5 configs, trained ({})", platform.name), || {
+            for (m, par) in &configs {
+                black_box(fgpm::predictor::predict(m, par, &platform, &mut reg));
+            }
+        });
+    }
+    let md = table9_markdown(&results);
+    emit("table9.md", &md);
+    println!("{md}");
+    bench.finish();
+}

@@ -1,0 +1,156 @@
+//! Log-log linear regression baseline: per-operator ridge fit of
+//! log1p(latency) against log1p(features) — the "simple learned model"
+//! middle ground between the analytical roofline and tree ensembles.
+//! Smooth by construction, so it cannot represent the step
+//! discontinuities that motivate the paper's tree-based choice.
+
+use std::collections::HashMap;
+
+use crate::predictor::registry::BatchPredictor;
+use crate::sampling::{Dataset, DatasetKey};
+
+/// One fitted model per operator key.
+pub struct LogLinear {
+    pub models: HashMap<DatasetKey, Vec<f64>>, // weights, bias last
+}
+
+fn phi(row: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = row.iter().map(|&x| x.max(0.0).ln_1p()).collect();
+    v.push(1.0); // bias
+    v
+}
+
+/// Solve (A^T A + λI) w = A^T y by Gaussian elimination with partial
+/// pivoting (dims are tiny: <= 9).
+fn ridge(x: &[Vec<f64>], y: &[f64], lambda: f64) -> Vec<f64> {
+    let d = x[0].len();
+    let mut ata = vec![vec![0.0; d]; d];
+    let mut aty = vec![0.0; d];
+    for (row, &yi) in x.iter().zip(y) {
+        for i in 0..d {
+            aty[i] += row[i] * yi;
+            for j in 0..d {
+                ata[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    for (i, row) in ata.iter_mut().enumerate() {
+        row[i] += lambda;
+    }
+    // gaussian elimination
+    let mut m = ata;
+    let mut b = aty;
+    for col in 0..d {
+        let piv = (col..d)
+            .max_by(|&a, &bb| m[a][col].abs().partial_cmp(&m[bb][col].abs()).unwrap())
+            .unwrap();
+        m.swap(col, piv);
+        b.swap(col, piv);
+        let diag = m[col][col];
+        assert!(diag.abs() > 1e-12, "singular system");
+        for r in 0..d {
+            if r == col {
+                continue;
+            }
+            let f = m[r][col] / diag;
+            for c in col..d {
+                m[r][c] -= f * m[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    (0..d).map(|i| b[i] / m[i][i]).collect()
+}
+
+impl LogLinear {
+    pub fn train(datasets: &HashMap<DatasetKey, Dataset>) -> LogLinear {
+        let mut models = HashMap::new();
+        for (key, ds) in datasets {
+            let x: Vec<Vec<f64>> = ds.x.iter().map(|r| phi(r)).collect();
+            let y: Vec<f64> = ds.y.iter().map(|v| v.ln_1p()).collect();
+            models.insert(*key, ridge(&x, &y, 1e-6));
+        }
+        LogLinear { models }
+    }
+
+    pub fn predict_row(&self, key: DatasetKey, row: &[f64]) -> f64 {
+        let w = self.models.get(&key).unwrap_or_else(|| panic!("no model for {key:?}"));
+        let f = phi(row);
+        let log_pred: f64 = w.iter().zip(&f).map(|(a, b)| a * b).sum();
+        log_pred.exp_m1().max(0.0)
+    }
+}
+
+impl BatchPredictor for LogLinear {
+    fn predict_batch(&mut self, key: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+        rows.iter().map(|r| self.predict_row(key, r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{Dir, OpKind};
+    use crate::util::rng::Rng;
+    use crate::util::stats;
+
+    fn key() -> DatasetKey {
+        (OpKind::Linear1, Dir::Fwd)
+    }
+
+    fn power_law_dataset(seed: u64, n: usize) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut ds = Dataset::default();
+        for _ in 0..n {
+            let a = rng.uniform(100.0, 10_000.0);
+            let b = rng.uniform(1.0, 16.0);
+            ds.push(vec![a, b], 2.0 * a.powf(0.9) / b.powf(0.5));
+        }
+        ds
+    }
+
+    #[test]
+    fn fits_power_laws_well() {
+        let mut data = HashMap::new();
+        data.insert(key(), power_law_dataset(1, 400));
+        let mut m = LogLinear::train(&data);
+        let ds = &data[&key()];
+        let pred = m.predict_batch(key(), &ds.x);
+        let mape = stats::mape(&pred, &ds.y);
+        assert!(mape < 8.0, "MAPE {mape}");
+    }
+
+    #[test]
+    fn cannot_fit_steps() {
+        // A hard step is exactly what log-linear smooths over.
+        let mut rng = Rng::new(2);
+        let mut ds = Dataset::default();
+        for _ in 0..400 {
+            let a = rng.uniform(1.0, 100.0);
+            ds.push(vec![a], if a <= 50.0 { 10.0 } else { 100.0 });
+        }
+        let mut data = HashMap::new();
+        data.insert(key(), ds);
+        let mut m = LogLinear::train(&data);
+        let ds = &data[&key()];
+        let pred = m.predict_batch(key(), &ds.x);
+        let mape = stats::mape(&pred, &ds.y);
+        assert!(mape > 15.0, "a linear model should NOT fit steps: {mape}");
+    }
+
+    #[test]
+    fn ridge_solves_exact_system() {
+        // y = 3*x0 + 2*x1 + 1 (in phi space directly)
+        let x = vec![
+            vec![1.0, 0.0, 1.0],
+            vec![0.0, 1.0, 1.0],
+            vec![1.0, 1.0, 1.0],
+            vec![2.0, 1.0, 1.0],
+        ];
+        let y = vec![4.0, 3.0, 6.0, 9.0];
+        let w = ridge(&x, &y, 1e-9);
+        assert!((w[0] - 3.0).abs() < 1e-4);
+        assert!((w[1] - 2.0).abs() < 1e-4);
+        assert!((w[2] - 1.0).abs() < 1e-4);
+    }
+}

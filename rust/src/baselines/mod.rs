@@ -1,0 +1,12 @@
+//! Comparator models the paper argues against (§I, §V): a purely
+//! analytical roofline predictor, a log-linear regression, and a
+//! black-box end-to-end scaling-law fit. All implement [`BatchPredictor`]
+//! (or the e2e equivalent) so the ablation benches swap them in directly.
+
+pub mod analytical;
+pub mod linear;
+pub mod blackbox;
+
+pub use analytical::Analytical;
+pub use blackbox::BlackBox;
+pub use linear::LogLinear;

@@ -1,0 +1,449 @@
+//! `fgpm` command-line interface: every paper experiment is a subcommand.
+//!
+//! Pipeline commands: `collect` -> `train` -> `predict`/`table9`/`serve`.
+//! Self-contained report commands (`table8`, `fig2`, `fig3`, `ablate`)
+//! run their whole pipeline in-process.
+
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::baselines::{Analytical, LogLinear};
+use crate::config::{ModelCfg, ParallelCfg, Platform};
+use crate::coordinator::server;
+use crate::coordinator::{BatcherCfg, PredictionService};
+use crate::forest::persist::{load_registry, save_registry};
+use crate::predictor::registry::BatchPredictor;
+use crate::predictor::{predict, Registry};
+use crate::report::{self, fig2_markdown, fig3_markdown, table8_markdown, table9_markdown};
+use crate::runtime::{artifacts_dir, Engine, XlaForestPredictor};
+use crate::sampling::collector::{collect_platform, load_datasets, save_datasets};
+use crate::util::cli::Spec;
+use crate::util::stats;
+
+const USAGE: &str = "\
+fgpm — fine-grained GPU performance modeling for distributed LLM training
+
+usage: fgpm <command> [options]
+
+commands:
+  models       print the target model configurations (Table IV)
+  platforms    print the simulated cluster specs (Table V)
+  collect      run the micro-benchmark sampling plans (Tables VI-VII)
+  train        fit + select per-operator regressors (80/20 validation)
+  predict      predict one (model, parallel, platform) configuration
+  sweep        rank all parallelism strategies for a model at a GPU count
+  table8       reproduce Table VIII (performance stability)
+  table9       reproduce Table IX  (component-level prediction errors)
+  fig2         reproduce Figure 2  (1F1B timeline, ASCII)
+  fig3         reproduce Figure 3  (component time proportions)
+  ablate       compare regressors vs analytical/linear baselines
+  serve        run the JSON-lines TCP prediction service
+  e2e          full pipeline: collect -> train -> validate both platforms
+
+run `fgpm <command> --help` for options.";
+
+pub fn run(argv: &[String]) -> Result<i32> {
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(2);
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "models" => cmd_models(),
+        "platforms" => cmd_platforms(),
+        "collect" => cmd_collect(rest),
+        "train" => cmd_train(rest),
+        "predict" => cmd_predict(rest),
+        "sweep" => cmd_sweep(rest),
+        "table8" => cmd_table8(rest),
+        "table9" => cmd_table9(rest),
+        "fig2" => cmd_fig2(rest),
+        "fig3" => cmd_fig3(rest),
+        "ablate" => cmd_ablate(rest),
+        "serve" => cmd_serve(rest),
+        "e2e" => cmd_e2e(rest),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => Err(anyhow!("unknown command '{other}'\n\n{USAGE}")),
+    }
+}
+
+fn parse_or_help(spec: &Spec, argv: &[String]) -> Result<Option<crate::util::cli::Args>> {
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{}", spec.help_text());
+        return Ok(None);
+    }
+    Ok(Some(spec.parse(argv)?))
+}
+
+fn platform_arg(args: &crate::util::cli::Args) -> Result<Platform> {
+    Platform::by_name(&args.str("platform"))
+        .with_context(|| format!("unknown platform '{}'", args.str("platform")))
+}
+
+fn model_arg(args: &crate::util::cli::Args) -> Result<ModelCfg> {
+    ModelCfg::by_name(&args.str("model"))
+        .with_context(|| format!("unknown model '{}'", args.str("model")))
+}
+
+fn cmd_models() -> Result<i32> {
+    for m in ModelCfg::all() {
+        println!(
+            "{:<10} d={} l={} h={} encoders={} micro_batch={} iters/update={} \
+             fused_softmax={} flash={} norm={:?} (~{:.1}B params)",
+            m.name,
+            m.d,
+            m.l,
+            m.h,
+            m.encoders,
+            m.micro_batch,
+            m.iters_per_update,
+            m.fused_softmax,
+            m.flash_attention,
+            m.norm,
+            m.approx_params() / 1e9
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_platforms() -> Result<i32> {
+    for p in Platform::all() {
+        println!(
+            "{:<11} gpu={} ({} TFLOPs fp16, {} GB/s HBM) {} GPUs/node x {} nodes, \
+             intra {} GB/s, inter {} GB/s",
+            p.name,
+            p.gpu.name,
+            p.gpu.peak_tflops_fp16,
+            p.gpu.mem_bw_gbs,
+            p.gpus_per_node,
+            p.max_nodes,
+            p.intra_bw_gbs,
+            p.inter_bw_gbs
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_collect(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new("collect", "run the Table VI/VII micro-benchmark sampling plans")
+        .opt("platform", "perlmutter", "target platform (perlmutter|vista)")
+        .opt("out", "datasets", "output directory")
+        .opt("seed", "42", "rng seed");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let platform = platform_arg(&args)?;
+    let seed = args.u64("seed")?;
+    let t0 = std::time::Instant::now();
+    let data = collect_platform(&platform, seed);
+    let rows: usize = data.values().map(|d| d.len()).sum();
+    save_datasets(&data, &platform, Path::new(&args.str("out")))?;
+    println!(
+        "collected {} datasets / {} rows for {} in {:?} -> {}/{}/",
+        data.len(),
+        rows,
+        platform.name,
+        t0.elapsed(),
+        args.str("out"),
+        platform.name
+    );
+    Ok(0)
+}
+
+fn cmd_train(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new("train", "fit + select per-operator regressors (80/20 validation)")
+        .opt("platform", "perlmutter", "target platform")
+        .opt("datasets", "datasets", "dataset directory from `collect`")
+        .opt("out", "forests", "output directory for trained registries")
+        .opt("seed", "7", "rng seed");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let platform = platform_arg(&args)?;
+    let data = load_datasets(&platform, Path::new(&args.str("datasets")))
+        .context("loading datasets (run `fgpm collect` first)")?;
+    anyhow::ensure!(!data.is_empty(), "no datasets found");
+    let t0 = std::time::Instant::now();
+    let reg = Registry::train(platform.name, &data, args.u64("seed")?);
+    let path = PathBuf::from(args.str("out")).join(format!("{}.json", platform.name));
+    save_registry(platform.name, &reg.forests, &path)?;
+    println!(
+        "trained {} regressors for {} in {:?} (mean val MAPE {:.2}%) -> {path:?}",
+        reg.forests.len(),
+        platform.name,
+        t0.elapsed(),
+        reg.mean_val_mape()
+    );
+    Ok(0)
+}
+
+/// Load a registry file if present; otherwise collect + train in-process.
+fn registry_for(platform: &Platform, forests_dir: &str, seed: u64) -> Result<Registry> {
+    let path = PathBuf::from(forests_dir).join(format!("{}.json", platform.name));
+    if path.exists() {
+        let (name, forests) = load_registry(&path)?;
+        anyhow::ensure!(name == platform.name, "registry platform mismatch");
+        return Ok(Registry { platform: name, forests });
+    }
+    eprintln!("[fgpm] no registry at {path:?}; collecting + training in-process...");
+    let data = collect_platform(platform, seed);
+    let reg = Registry::train(platform.name, &data, seed);
+    let _ = save_registry(platform.name, &reg.forests, &path);
+    Ok(reg)
+}
+
+/// Wrap a registry in the requested inference backend (current thread —
+/// the XLA engine is not Send; `cmd_serve` builds it on the executor
+/// thread via a factory instead).
+fn backend_for(reg: Registry, use_xla: bool) -> Result<Box<dyn BatchPredictor>> {
+    if use_xla {
+        let engine = Engine::load(&artifacts_dir())?;
+        let flat = reg.export_flat(engine.manifest.trees, engine.manifest.nodes);
+        Ok(Box::new(XlaForestPredictor::new(engine, &flat)?))
+    } else {
+        Ok(Box::new(reg))
+    }
+}
+
+fn cmd_predict(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new("predict", "predict one configuration's batch time + components")
+        .opt("model", "gpt20b", "model preset")
+        .opt("parallel", "4-4-8", "pp-mp-dp")
+        .opt("platform", "perlmutter", "target platform")
+        .opt("forests", "forests", "trained registry directory")
+        .opt("seed", "7", "rng seed")
+        .flag("xla", "serve inference from the AOT Pallas executable (PJRT)");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let platform = platform_arg(&args)?;
+    let model = model_arg(&args)?;
+    let par = ParallelCfg::parse(&args.str("parallel"))
+        .context("bad --parallel (expected pp-mp-dp)")?;
+    anyhow::ensure!(par.fits(&platform), "{} needs {} GPUs", par.label(), par.gpus());
+    let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
+    let mut backend = backend_for(reg, args.has_flag("xla"))?;
+    let cp = predict(&model, &par, &platform, backend.as_mut());
+    println!("{}", server::prediction_to_json(&cp));
+    println!("\npredicted batch time: {:.2} s", cp.total_us / 1e6);
+    Ok(0)
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new("sweep", "rank all pp-mp-dp strategies for a model at a GPU count")
+        .opt("model", "gpt20b", "model preset")
+        .opt("platform", "perlmutter", "target platform")
+        .opt("gpus", "128", "total GPUs")
+        .opt("forests", "forests", "trained registry directory")
+        .opt("seed", "7", "rng seed")
+        .flag("xla", "use the AOT Pallas executable");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let platform = platform_arg(&args)?;
+    let model = model_arg(&args)?;
+    let gpus = args.usize("gpus")?;
+    let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
+    let mut backend = backend_for(reg, args.has_flag("xla"))?;
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    let mut skipped_oom = 0;
+    for par in ParallelCfg::enumerate(gpus, 16, 16) {
+        if !par.fits(&platform) || model.h % par.mp != 0 {
+            continue;
+        }
+        if model.iters_per_update < par.pp {
+            continue; // deep pipelines need enough micro-batches
+        }
+        if !crate::ops::memory::fits_memory(&model, &par, &platform) {
+            skipped_oom += 1;
+            continue; // would OOM before producing a single batch
+        }
+        let mem = crate::ops::memory::estimate(&model, &par, &platform).total_gib();
+        let cp = predict(&model, &par, &platform, backend.as_mut());
+        rows.push((par.label(), cp.total_us / 1e6, mem));
+    }
+    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    println!("{} on {} with {} GPUs — predicted batch seconds:", model.name, platform.name, gpus);
+    for (i, (label, s, mem)) in rows.iter().enumerate() {
+        println!(
+            "{:>2}. {label:<9} {s:>8.2} s   {mem:>5.1} GiB/GPU{}",
+            i + 1,
+            if i == 0 { "   <- best" } else { "" }
+        );
+    }
+    if skipped_oom > 0 {
+        println!("({skipped_oom} strategies skipped: exceed {} GiB HBM)", platform.gpu.hbm_gib);
+    }
+    Ok(0)
+}
+
+fn cmd_table8(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new("table8", "Table VIII: batch-time stability statistics")
+        .opt("batches", "20", "measured batches per configuration")
+        .opt("seed", "42", "rng seed");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let md = table8_markdown(args.usize("batches")?, args.u64("seed")?);
+    println!("{}", report::emit("table8.md", &md));
+    Ok(0)
+}
+
+fn cmd_table9(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new("table9", "Table IX: component-level prediction errors")
+        .opt("batches", "8", "ground-truth batches per config (fastest wins)")
+        .opt("forests", "forests", "trained registry directory")
+        .opt("seed", "42", "rng seed")
+        .flag("xla", "serve inference from the AOT Pallas executable");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let seed = args.u64("seed")?;
+    let n = args.usize("batches")?;
+    let mut results = Vec::new();
+    for platform in Platform::all() {
+        let reg = registry_for(&platform, &args.str("forests"), seed)?;
+        let mut backend = backend_for(reg, args.has_flag("xla"))?;
+        let errs =
+            crate::report::tables::table9_errors(&platform, backend.as_mut(), n, seed);
+        results.push((platform.name.to_string(), errs));
+    }
+    let md = table9_markdown(&results);
+    println!("{}", report::emit("table9.md", &md));
+    Ok(0)
+}
+
+fn cmd_fig2(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new("fig2", "Figure 2: 1F1B pipeline timeline (ASCII)")
+        .opt("model", "gpt20b", "model preset")
+        .opt("parallel", "4-4-8", "pp-mp-dp")
+        .opt("platform", "perlmutter", "target platform");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let md = fig2_markdown(
+        &model_arg(&args)?,
+        &ParallelCfg::parse(&args.str("parallel")).context("bad --parallel")?,
+        &platform_arg(&args)?,
+    );
+    println!("{}", report::emit("fig2.md", &md));
+    Ok(0)
+}
+
+fn cmd_fig3(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new("fig3", "Figure 3: component time-cost proportions")
+        .opt("forests", "forests", "trained registry directory")
+        .opt("seed", "42", "rng seed")
+        .flag("xla", "use the AOT Pallas executable");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let mut out = String::new();
+    for platform in Platform::all() {
+        let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
+        let mut backend = backend_for(reg, args.has_flag("xla"))?;
+        out.push_str(&fig3_markdown(&platform, backend.as_mut()));
+        out.push('\n');
+    }
+    println!("{}", report::emit("fig3.md", &out));
+    Ok(0)
+}
+
+fn cmd_ablate(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new("ablate", "regressors vs analytical / log-linear baselines")
+        .opt("platform", "perlmutter", "target platform")
+        .opt("batches", "6", "ground-truth batches per config")
+        .opt("seed", "42", "rng seed");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let platform = platform_arg(&args)?;
+    let seed = args.u64("seed")?;
+    let n = args.usize("batches")?;
+    let data = collect_platform(&platform, seed);
+    let reg = Registry::train(platform.name, &data, seed);
+    let mut rows = Vec::new();
+    let mut run = |name: &str, p: &mut dyn BatchPredictor| {
+        let errs = crate::report::tables::table9_errors(&platform, p, n, seed);
+        let mean_abs =
+            stats::mean(&errs.iter().map(|e| e.overall.abs()).collect::<Vec<_>>());
+        let worst = errs.iter().map(|e| e.overall.abs()).fold(0.0, f64::max);
+        rows.push(vec![
+            name.to_string(),
+            format!("{mean_abs:.2}%"),
+            format!("{worst:.2}%"),
+        ]);
+    };
+    run("tree regressors (ours)", &mut { reg });
+    run("log-linear regression", &mut LogLinear::train(&data));
+    run("analytical roofline", &mut Analytical::new(platform.clone()));
+    let md = format!(
+        "# Ablation — end-to-end |error| by operator-latency model ({})\n\n{}",
+        platform.name,
+        crate::report::tables::markdown_table(
+            &["model".into(), "mean |overall err|".into(), "worst |overall err|".into()],
+            &rows
+        )
+    );
+    println!("{}", report::emit(&format!("ablate_{}.md", platform.name), &md));
+    Ok(0)
+}
+
+fn cmd_serve(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new("serve", "JSON-lines TCP prediction service")
+        .opt("addr", "127.0.0.1:7070", "bind address")
+        .opt("platform", "perlmutter", "platform whose regressors to serve")
+        .opt("forests", "forests", "trained registry directory")
+        .opt("seed", "7", "rng seed")
+        .opt("max-batch", "256", "dynamic batcher max rows")
+        .opt("max-wait-ms", "2", "dynamic batcher deadline")
+        .flag("xla", "serve inference from the AOT Pallas executable");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let platform = platform_arg(&args)?;
+    let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
+    let use_xla = args.has_flag("xla");
+    let svc = PredictionService::start_with(
+        move || backend_for(reg, use_xla).expect("backend init"),
+        BatcherCfg {
+            max_batch: args.usize("max-batch")?,
+            max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms")?),
+        },
+    );
+    server::serve(svc, &args.str("addr"))?;
+    Ok(0)
+}
+
+fn cmd_e2e(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new("e2e", "full pipeline on both platforms (collect->train->validate)")
+        .opt("batches", "8", "ground-truth batches per config")
+        .opt("seed", "42", "rng seed")
+        .flag("xla", "use the AOT Pallas executable for inference");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let seed = args.u64("seed")?;
+    let n = args.usize("batches")?;
+    let mut results = Vec::new();
+    for platform in Platform::all() {
+        println!("== {} ==", platform.name);
+        let t0 = std::time::Instant::now();
+        let data = collect_platform(&platform, seed);
+        println!(
+            "  collected {} datasets ({} rows) in {:?}",
+            data.len(),
+            data.values().map(|d| d.len()).sum::<usize>(),
+            t0.elapsed()
+        );
+        let t0 = std::time::Instant::now();
+        let reg = Registry::train(platform.name, &data, seed);
+        println!(
+            "  trained {} regressors in {:?} (mean val MAPE {:.2}%)",
+            reg.forests.len(),
+            t0.elapsed(),
+            reg.mean_val_mape()
+        );
+        let mut backend = backend_for(reg, args.has_flag("xla"))?;
+        let t0 = std::time::Instant::now();
+        let errs = crate::report::tables::table9_errors(&platform, backend.as_mut(), n, seed);
+        println!("  validated 5 configs in {:?}", t0.elapsed());
+        for e in &errs {
+            println!(
+                "    {:<18} actual {:>7.2}s predicted {:>7.2}s overall {:+.2}%",
+                e.label, e.actual_total_s, e.predicted_total_s, e.overall
+            );
+        }
+        results.push((platform.name.to_string(), errs));
+    }
+    let md = table9_markdown(&results);
+    report::emit("e2e.md", &md);
+    for (plat, errs) in &results {
+        let mean = stats::mean(&errs.iter().map(|e| e.overall.abs()).collect::<Vec<_>>());
+        println!("mean |overall error| {plat}: {mean:.2}%");
+    }
+    Ok(0)
+}

@@ -1,0 +1,10 @@
+//! Experiment configuration: target platforms (Table V), target models
+//! (Table IV), and 3D-parallelism strategies.
+
+pub mod platform;
+pub mod model;
+pub mod parallel;
+
+pub use model::{ModelCfg, Norm};
+pub use parallel::ParallelCfg;
+pub use platform::{GpuSpec, JitterSpec, Platform};

@@ -1,0 +1,170 @@
+//! Target LLM architectures (paper Table IV): GPT-20B, LLaMA-13B,
+//! Llemma-7B in their GPT-NeoX configurations.
+
+/// Normalization variant per encoder block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Norm {
+    /// Standard LayerNorm ("Basic" in Table IV).
+    Layer,
+    /// RMSNorm.
+    Rms,
+}
+
+/// One model configuration (Table IV row set).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelCfg {
+    pub name: &'static str,
+    /// Hidden dimension d.
+    pub d: usize,
+    /// Sequence length l.
+    pub l: usize,
+    /// Attention heads h.
+    pub h: usize,
+    /// Number of transformer encoder layers.
+    pub encoders: usize,
+    /// Tokenizer vocabulary before eq. (1)-(2) padding (GPT-NeoX-20B).
+    pub vocab: usize,
+    /// MP all-reduce invocations per encoder forward pass.
+    pub encoder_fwd_syncs: usize,
+    /// MP all-reduce invocations per encoder backward pass.
+    pub encoder_bwd_syncs: usize,
+    pub fused_softmax: bool,
+    pub flash_attention: bool,
+    pub norm: Norm,
+    /// Micro-batch size b.
+    pub micro_batch: usize,
+    /// Micro-batches per parameter update (#Micro_Batches in eq. 7).
+    pub iters_per_update: usize,
+}
+
+impl ModelCfg {
+    pub fn gpt20b() -> ModelCfg {
+        ModelCfg {
+            name: "GPT-20B",
+            d: 6144,
+            l: 2048,
+            h: 64,
+            encoders: 44,
+            vocab: 50257,
+            encoder_fwd_syncs: 1,
+            encoder_bwd_syncs: 2,
+            fused_softmax: true,
+            flash_attention: false,
+            norm: Norm::Layer,
+            micro_batch: 4,
+            iters_per_update: 16,
+        }
+    }
+
+    pub fn llama13b() -> ModelCfg {
+        ModelCfg {
+            name: "LLaMA-13B",
+            d: 5120,
+            l: 2048,
+            h: 40,
+            encoders: 40,
+            vocab: 50257,
+            encoder_fwd_syncs: 2,
+            encoder_bwd_syncs: 2,
+            fused_softmax: true,
+            flash_attention: false,
+            norm: Norm::Rms,
+            micro_batch: 4,
+            iters_per_update: 16,
+        }
+    }
+
+    pub fn llemma7b() -> ModelCfg {
+        ModelCfg {
+            name: "Llemma-7B",
+            d: 4096,
+            l: 4096,
+            h: 32,
+            encoders: 32,
+            vocab: 50257,
+            encoder_fwd_syncs: 2,
+            encoder_bwd_syncs: 2,
+            fused_softmax: false,
+            flash_attention: true,
+            norm: Norm::Rms,
+            micro_batch: 4,
+            iters_per_update: 8,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelCfg> {
+        match name.to_ascii_lowercase().as_str() {
+            "gpt20b" | "gpt-20b" => Some(ModelCfg::gpt20b()),
+            "llama13b" | "llama-13b" => Some(ModelCfg::llama13b()),
+            "llemma7b" | "llemma-7b" => Some(ModelCfg::llemma7b()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<ModelCfg> {
+        vec![ModelCfg::gpt20b(), ModelCfg::llama13b(), ModelCfg::llemma7b()]
+    }
+
+    /// Head dimension d/h.
+    pub fn head_dim(&self) -> usize {
+        self.d / self.h
+    }
+
+    /// Approximate parameter count (for reporting): embeddings + encoders
+    /// + final head, unpartitioned.
+    pub fn approx_params(&self) -> f64 {
+        let d = self.d as f64;
+        let v = self.vocab as f64;
+        let enc = 12.0 * d * d + 13.0 * d; // qkv+proj+mlp(4x) weights+biases+norms
+        v * d + self.encoders as f64 * enc + d * v + 2.0 * d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_iv_values() {
+        let g = ModelCfg::gpt20b();
+        assert_eq!((g.d, g.l, g.h, g.encoders), (6144, 2048, 64, 44));
+        assert_eq!(g.iters_per_update, 16);
+        assert!(g.fused_softmax && !g.flash_attention);
+        assert_eq!(g.norm, Norm::Layer);
+
+        let l = ModelCfg::llama13b();
+        assert_eq!((l.d, l.l, l.h, l.encoders), (5120, 2048, 40, 40));
+        assert_eq!(l.norm, Norm::Rms);
+
+        let e = ModelCfg::llemma7b();
+        assert_eq!((e.d, e.l, e.h, e.encoders), (4096, 4096, 32, 32));
+        assert!(e.flash_attention && !e.fused_softmax);
+        assert_eq!(e.iters_per_update, 8);
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for m in ModelCfg::all() {
+            assert_eq!(m.d % m.h, 0, "{}", m.name);
+            assert!(m.head_dim() >= 64);
+        }
+    }
+
+    #[test]
+    fn approx_params_in_expected_band() {
+        // Sanity: parameter counts should land near the model names.
+        let g = ModelCfg::gpt20b().approx_params() / 1e9;
+        assert!((18.0..23.0).contains(&g), "gpt20b {g}B");
+        let l = ModelCfg::llama13b().approx_params() / 1e9;
+        assert!((11.0..15.0).contains(&l), "llama13b {l}B");
+        let e = ModelCfg::llemma7b().approx_params() / 1e9;
+        assert!((6.0..9.0).contains(&e), "llemma7b {e}B");
+    }
+
+    #[test]
+    fn by_name_variants() {
+        assert!(ModelCfg::by_name("GPT-20B").is_some());
+        assert!(ModelCfg::by_name("gpt20b").is_some());
+        assert!(ModelCfg::by_name("bert").is_none());
+    }
+}

@@ -1,0 +1,195 @@
+//! 3D-parallelism strategy: Pipeline-Model-Data degrees, written `x-y-z`
+//! in the paper's configuration notation (e.g. GPT-20B(4-8-4)).
+
+use crate::config::platform::Platform;
+
+/// Parallelism degrees. `gpus() = pp * mp * dp`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ParallelCfg {
+    /// Pipeline-parallel stages.
+    pub pp: usize,
+    /// Model(tensor)-parallel degree |mp|.
+    pub mp: usize,
+    /// Data-parallel replicas |dp|.
+    pub dp: usize,
+}
+
+impl ParallelCfg {
+    pub fn new(pp: usize, mp: usize, dp: usize) -> ParallelCfg {
+        assert!(pp >= 1 && mp >= 1 && dp >= 1);
+        ParallelCfg { pp, mp, dp }
+    }
+
+    /// Parse the paper's `x-y-z` notation (Pipeline-Model-Data).
+    pub fn parse(s: &str) -> Option<ParallelCfg> {
+        let parts: Vec<usize> = s
+            .split('-')
+            .map(|t| t.trim().parse::<usize>().ok())
+            .collect::<Option<Vec<_>>>()?;
+        match parts[..] {
+            [pp, mp, dp] if pp > 0 && mp > 0 && dp > 0 => Some(ParallelCfg { pp, mp, dp }),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}-{}-{}", self.pp, self.mp, self.dp)
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.pp * self.mp * self.dp
+    }
+
+    pub fn nodes(&self, platform: &Platform) -> usize {
+        self.gpus().div_ceil(platform.gpus_per_node)
+    }
+
+    /// Does the strategy fit the platform at all?
+    pub fn fits(&self, platform: &Platform) -> bool {
+        self.gpus() <= platform.max_gpus()
+    }
+
+    /// Rank layout (Megatron/GPT-NeoX convention): MP innermost, then DP,
+    /// then PP outermost. Global rank of (pp_idx, dp_idx, mp_idx):
+    pub fn rank(&self, pp_idx: usize, dp_idx: usize, mp_idx: usize) -> usize {
+        assert!(pp_idx < self.pp && dp_idx < self.dp && mp_idx < self.mp);
+        (pp_idx * self.dp + dp_idx) * self.mp + mp_idx
+    }
+
+    /// Node index of a global rank when ranks pack sequentially onto nodes.
+    pub fn node_of(&self, rank: usize, platform: &Platform) -> usize {
+        rank / platform.gpus_per_node
+    }
+
+    /// MP communication group geometry: (participating nodes, GPUs/node).
+    /// MP ranks are consecutive, so a group spans ceil(mp/gpn) nodes with
+    /// min(mp, gpn) members per node.
+    pub fn mp_group_geometry(&self, platform: &Platform) -> (usize, usize) {
+        let gpn = platform.gpus_per_node;
+        (self.mp.div_ceil(gpn), self.mp.min(gpn))
+    }
+
+    /// DP communication group geometry. DP members are `mp` ranks apart:
+    /// with mp >= gpn every member lands on a different node; otherwise
+    /// gpn/mp members share a node.
+    pub fn dp_group_geometry(&self, platform: &Platform) -> (usize, usize) {
+        let gpn = platform.gpus_per_node;
+        if self.mp >= gpn {
+            (self.dp, 1)
+        } else {
+            let per_node = (gpn / self.mp).max(1).min(self.dp);
+            (self.dp.div_ceil(per_node), per_node)
+        }
+    }
+
+    /// Is the PP stage boundary hop inter-node? Adjacent stages are
+    /// `dp*mp` ranks apart.
+    pub fn pp_hop_is_inter_node(&self, platform: &Platform) -> bool {
+        self.dp * self.mp >= platform.gpus_per_node || self.pp == 1
+    }
+
+    /// Enumerate all (pp, mp, dp) with power-of-two degrees using exactly
+    /// `gpus` GPUs and pp/mp caps — the sweep space for capacity planning.
+    pub fn enumerate(gpus: usize, max_pp: usize, max_mp: usize) -> Vec<ParallelCfg> {
+        let mut out = Vec::new();
+        let mut pp = 1;
+        while pp <= max_pp && pp <= gpus {
+            if gpus % pp == 0 {
+                let rest = gpus / pp;
+                let mut mp = 1;
+                while mp <= max_mp && mp <= rest {
+                    if rest % mp == 0 {
+                        out.push(ParallelCfg { pp, mp, dp: rest / mp });
+                    }
+                    mp *= 2;
+                }
+            }
+            pp *= 2;
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for ParallelCfg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for s in ["4-4-8", "4-8-4", "8-4-4", "4-8-2", "4-2-2", "1-1-1"] {
+            assert_eq!(ParallelCfg::parse(s).unwrap().label(), s);
+        }
+        assert!(ParallelCfg::parse("4-4").is_none());
+        assert!(ParallelCfg::parse("4-0-4").is_none());
+        assert!(ParallelCfg::parse("a-b-c").is_none());
+    }
+
+    #[test]
+    fn paper_configs_gpu_counts() {
+        assert_eq!(ParallelCfg::parse("4-4-8").unwrap().gpus(), 128);
+        assert_eq!(ParallelCfg::parse("4-8-4").unwrap().gpus(), 128);
+        assert_eq!(ParallelCfg::parse("8-4-4").unwrap().gpus(), 128);
+        assert_eq!(ParallelCfg::parse("4-8-2").unwrap().gpus(), 64);
+        assert_eq!(ParallelCfg::parse("4-2-2").unwrap().gpus(), 16);
+    }
+
+    #[test]
+    fn rank_layout_mp_innermost() {
+        let c = ParallelCfg::new(2, 4, 2);
+        assert_eq!(c.rank(0, 0, 0), 0);
+        assert_eq!(c.rank(0, 0, 3), 3);
+        assert_eq!(c.rank(0, 1, 0), 4);
+        assert_eq!(c.rank(1, 0, 0), 8);
+    }
+
+    #[test]
+    fn mp_geometry_perlmutter() {
+        let p = Platform::perlmutter(); // 4 GPUs/node
+        assert_eq!(ParallelCfg::new(4, 4, 8).mp_group_geometry(&p), (1, 4));
+        assert_eq!(ParallelCfg::new(4, 8, 4).mp_group_geometry(&p), (2, 4));
+        assert_eq!(ParallelCfg::new(4, 2, 2).mp_group_geometry(&p), (1, 2));
+    }
+
+    #[test]
+    fn mp_geometry_vista_always_inter_node() {
+        let v = Platform::vista(); // 1 GPU/node
+        assert_eq!(ParallelCfg::new(4, 8, 4).mp_group_geometry(&v), (8, 1));
+        assert_eq!(ParallelCfg::new(4, 2, 2).mp_group_geometry(&v), (2, 1));
+    }
+
+    #[test]
+    fn dp_geometry() {
+        let p = Platform::perlmutter();
+        // mp=4 >= gpn=4: every DP member on a distinct node
+        assert_eq!(ParallelCfg::new(4, 4, 8).dp_group_geometry(&p), (8, 1));
+        // mp=2 < gpn=4: two DP members per node
+        assert_eq!(ParallelCfg::new(4, 2, 2).dp_group_geometry(&p), (1, 2));
+        let v = Platform::vista();
+        assert_eq!(ParallelCfg::new(4, 8, 2).dp_group_geometry(&v), (2, 1));
+    }
+
+    #[test]
+    fn enumerate_covers_paper_configs() {
+        let cfgs = ParallelCfg::enumerate(128, 16, 16);
+        for s in ["4-4-8", "4-8-4", "8-4-4"] {
+            let c = ParallelCfg::parse(s).unwrap();
+            assert!(cfgs.contains(&c), "{s} missing");
+        }
+        for c in &cfgs {
+            assert_eq!(c.gpus(), 128);
+        }
+    }
+
+    #[test]
+    fn fits_respects_scale() {
+        let p = Platform::perlmutter();
+        assert!(ParallelCfg::new(4, 4, 8).fits(&p));
+        assert!(!ParallelCfg::new(8, 8, 8).fits(&p)); // 512 > 128
+    }
+}

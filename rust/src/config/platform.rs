@@ -1,0 +1,198 @@
+//! Target platform descriptions (paper Table V).
+//!
+//! These are the *simulated* stand-ins for Perlmutter (A100-SXM4, 4
+//! GPU/node, NVLink3 + Slingshot-10) and TACC Vista (GH200, 1 GPU/node,
+//! NVLink-C2C + NDR InfiniBand). The GPU/network constants are public
+//! spec-sheet numbers; the jitter parameters encode the architectural
+//! asymmetry the paper observed — Vista's single-GPU-per-node design
+//! forces every collective onto the inter-node fabric, making it far more
+//! variance-prone (Table VIII).
+
+/// Numeric GPU model used by the compute-latency simulator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Tensor-core peak at FP16/BF16, TFLOP/s.
+    pub peak_tflops_fp16: f64,
+    /// HBM bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Effective L2-resident bandwidth, GB/s (small working sets).
+    pub l2_bw_gbs: f64,
+    /// L2 capacity, MiB — the bandwidth-regime breakpoint.
+    pub l2_mib: f64,
+    /// Streaming multiprocessors — wave-quantization granularity.
+    pub sms: usize,
+    /// HBM capacity, GiB (memory-feasibility checks).
+    pub hbm_gib: f64,
+    /// Fixed kernel-launch + runtime overhead per kernel, µs.
+    pub launch_us: f64,
+}
+
+/// Stochastic-noise model: multiplicative log-normal sigmas plus rare
+/// congestion events on the inter-node fabric.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JitterSpec {
+    /// Compute kernels (SM clock wander, co-scheduled daemons).
+    pub compute_sigma: f64,
+    /// Intra-node collectives (NVLink is nearly deterministic).
+    pub intra_comm_sigma: f64,
+    /// Inter-node collectives (fabric contention, adaptive routing).
+    pub inter_comm_sigma: f64,
+    /// Probability that an inter-node operation hits congestion.
+    pub congestion_prob: f64,
+    /// Multiplier applied on a congestion event.
+    pub congestion_mult: f64,
+    /// Correlated per-epoch fabric slowdown: each measurement epoch /
+    /// training batch draws one `exp(|N(0, sigma)|)` multiplier (>= 1)
+    /// applied to ALL its inter-node operations. Models sustained
+    /// congestion episodes — the source of Vista's 5-108% batch-time
+    /// spread (Table VIII) that per-op iid jitter cannot produce.
+    pub fabric_sigma: f64,
+}
+
+/// A cluster: GPU spec + topology + interconnect + noise.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Platform {
+    pub name: &'static str,
+    pub gpu: GpuSpec,
+    pub gpus_per_node: usize,
+    pub max_nodes: usize,
+    /// Intra-node GPU-GPU bandwidth (NVLink/C2C), GB/s per direction.
+    pub intra_bw_gbs: f64,
+    /// Intra-node per-hop latency, µs.
+    pub intra_lat_us: f64,
+    /// Inter-node injection bandwidth per node, GB/s.
+    pub inter_bw_gbs: f64,
+    /// Inter-node per-message latency, µs.
+    pub inter_lat_us: f64,
+    pub jitter: JitterSpec,
+}
+
+impl Platform {
+    /// Perlmutter GPU partition: AMD Milan + 4x A100-SXM4-40GB per node,
+    /// NVLink 3.0 (600 GB/s aggregate, ~150 GB/s/dir/link pair in
+    /// practice), Slingshot-10 (4x 50 Gb/s NICs = 25 GB/s/node).
+    pub fn perlmutter() -> Platform {
+        Platform {
+            name: "perlmutter",
+            gpu: GpuSpec {
+                name: "A100-SXM4-40GB",
+                peak_tflops_fp16: 312.0,
+                mem_bw_gbs: 1555.0,
+                l2_bw_gbs: 4000.0,
+                l2_mib: 40.0,
+                sms: 108,
+                hbm_gib: 40.0,
+                launch_us: 6.0,
+            },
+            gpus_per_node: 4,
+            max_nodes: 32,
+            intra_bw_gbs: 240.0,
+            intra_lat_us: 2.5,
+            inter_bw_gbs: 25.0,
+            inter_lat_us: 12.0,
+            jitter: JitterSpec {
+                compute_sigma: 0.004,
+                intra_comm_sigma: 0.015,
+                inter_comm_sigma: 0.06,
+                congestion_prob: 0.01,
+                congestion_mult: 1.6,
+                fabric_sigma: 0.01,
+            },
+        }
+    }
+
+    /// TACC Vista: Grace-Hopper GH200-96GB, ONE GPU per node over
+    /// NVLink-C2C (900 GB/s to the Grace side), NDR InfiniBand 400 Gb/s
+    /// (50 GB/s/node). Every collective crosses the IB fabric.
+    pub fn vista() -> Platform {
+        Platform {
+            name: "vista",
+            gpu: GpuSpec {
+                name: "GH200-96GB",
+                peak_tflops_fp16: 990.0,
+                mem_bw_gbs: 4000.0,
+                l2_bw_gbs: 9000.0,
+                l2_mib: 60.0,
+                sms: 132,
+                hbm_gib: 96.0,
+                launch_us: 5.0,
+            },
+            gpus_per_node: 1,
+            max_nodes: 128,
+            intra_bw_gbs: 450.0, // C2C; unused for collectives (gpn == 1)
+            intra_lat_us: 1.5,
+            inter_bw_gbs: 50.0,
+            inter_lat_us: 8.0,
+            jitter: JitterSpec {
+                compute_sigma: 0.006,
+                intra_comm_sigma: 0.02,
+                // The paper saw 5-108% batch-time spread on Vista: heavy
+                // inter-node variance with occasional large congestion.
+                inter_comm_sigma: 0.18,
+                congestion_prob: 0.04,
+                congestion_mult: 2.5,
+                fabric_sigma: 0.45,
+            },
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Platform> {
+        match name {
+            "perlmutter" | "p" => Some(Platform::perlmutter()),
+            "vista" | "v" => Some(Platform::vista()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<Platform> {
+        vec![Platform::perlmutter(), Platform::vista()]
+    }
+
+    pub fn max_gpus(&self) -> usize {
+        self.gpus_per_node * self.max_nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table_v() {
+        let p = Platform::perlmutter();
+        assert_eq!(p.gpus_per_node, 4);
+        assert_eq!(p.max_nodes, 32);
+        assert_eq!(p.max_gpus(), 128);
+        assert_eq!(p.gpu.hbm_gib, 40.0);
+
+        let v = Platform::vista();
+        assert_eq!(v.gpus_per_node, 1);
+        assert_eq!(v.max_nodes, 128);
+        assert_eq!(v.max_gpus(), 128);
+        assert_eq!(v.gpu.hbm_gib, 96.0);
+    }
+
+    #[test]
+    fn vista_is_noisier_inter_node() {
+        let p = Platform::perlmutter();
+        let v = Platform::vista();
+        assert!(v.jitter.inter_comm_sigma > 2.0 * p.jitter.inter_comm_sigma);
+        assert!(v.jitter.congestion_prob > p.jitter.congestion_prob);
+    }
+
+    #[test]
+    fn gh200_is_faster_gpu() {
+        let p = Platform::perlmutter();
+        let v = Platform::vista();
+        assert!(v.gpu.peak_tflops_fp16 > p.gpu.peak_tflops_fp16);
+        assert!(v.gpu.mem_bw_gbs > p.gpu.mem_bw_gbs);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(Platform::by_name("perlmutter").unwrap().name, "perlmutter");
+        assert_eq!(Platform::by_name("v").unwrap().name, "vista");
+        assert!(Platform::by_name("frontier").is_none());
+    }
+}

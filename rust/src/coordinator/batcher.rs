@@ -1,0 +1,189 @@
+//! Dynamic batching policy: queries accumulate per (operator, direction)
+//! route; a route flushes when it reaches the AOT batch size (batch-full)
+//! or when its oldest query exceeds the wait budget (deadline). Pure
+//! policy — no threads — so it is exhaustively testable; the service
+//! wires it to time and channels.
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+use crate::sampling::DatasetKey;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherCfg {
+    /// Flush a route at this many rows (the AOT executable batch).
+    pub max_batch: usize,
+    /// Flush a route when its oldest query has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherCfg {
+    fn default() -> Self {
+        BatcherCfg { max_batch: 256, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// One enqueued query.
+pub struct PendingQuery {
+    pub row: Vec<f64>,
+    pub enqueued: Instant,
+    /// Responder the executor sends the prediction to.
+    pub respond: Sender<f64>,
+}
+
+/// A flushed batch for one route.
+pub struct Batch {
+    pub key: DatasetKey,
+    pub queries: Vec<PendingQuery>,
+}
+
+#[derive(Default)]
+struct Route {
+    queue: Vec<PendingQuery>,
+}
+
+/// The policy core.
+pub struct DynamicBatcher {
+    pub cfg: BatcherCfg,
+    routes: HashMap<DatasetKey, Route>,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherCfg) -> DynamicBatcher {
+        DynamicBatcher { cfg, routes: HashMap::new() }
+    }
+
+    /// Enqueue; returns a full batch if the route hit max_batch.
+    pub fn push(&mut self, key: DatasetKey, q: PendingQuery) -> Option<Batch> {
+        let route = self.routes.entry(key).or_default();
+        route.queue.push(q);
+        if route.queue.len() >= self.cfg.max_batch {
+            Some(Batch { key, queries: std::mem::take(&mut route.queue) })
+        } else {
+            None
+        }
+    }
+
+    /// Flush every route whose oldest query is past the deadline.
+    pub fn due(&mut self, now: Instant) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for (key, route) in self.routes.iter_mut() {
+            if let Some(first) = route.queue.first() {
+                if now.duration_since(first.enqueued) >= self.cfg.max_wait {
+                    out.push(Batch { key: *key, queries: std::mem::take(&mut route.queue) });
+                }
+            }
+        }
+        out
+    }
+
+    /// Earliest pending deadline (None when idle) — the executor's
+    /// recv timeout.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.routes
+            .values()
+            .filter_map(|r| r.queue.first().map(|q| q.enqueued + self.cfg.max_wait))
+            .min()
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn drain(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for (key, route) in self.routes.iter_mut() {
+            if !route.queue.is_empty() {
+                out.push(Batch { key: *key, queries: std::mem::take(&mut route.queue) });
+            }
+        }
+        out
+    }
+
+    pub fn pending(&self) -> usize {
+        self.routes.values().map(|r| r.queue.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{Dir, OpKind};
+    use std::sync::mpsc::channel;
+
+    fn key_a() -> DatasetKey {
+        (OpKind::Linear1, Dir::Fwd)
+    }
+    fn key_b() -> DatasetKey {
+        (OpKind::Softmax, Dir::Bwd)
+    }
+
+    fn q(at: Instant) -> PendingQuery {
+        let (tx, _rx) = channel();
+        PendingQuery { row: vec![1.0], enqueued: at, respond: tx }
+    }
+
+    fn cfg(max_batch: usize, wait_ms: u64) -> BatcherCfg {
+        BatcherCfg { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn batch_full_trigger() {
+        let mut b = DynamicBatcher::new(cfg(3, 1000));
+        let now = Instant::now();
+        assert!(b.push(key_a(), q(now)).is_none());
+        assert!(b.push(key_a(), q(now)).is_none());
+        let batch = b.push(key_a(), q(now)).expect("third push flushes");
+        assert_eq!(batch.queries.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn routes_are_independent() {
+        let mut b = DynamicBatcher::new(cfg(2, 1000));
+        let now = Instant::now();
+        assert!(b.push(key_a(), q(now)).is_none());
+        assert!(b.push(key_b(), q(now)).is_none());
+        // key_a completes its batch; key_b still pending
+        let batch = b.push(key_a(), q(now)).unwrap();
+        assert_eq!(batch.key, key_a());
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn deadline_trigger() {
+        let mut b = DynamicBatcher::new(cfg(100, 5));
+        let t0 = Instant::now();
+        b.push(key_a(), q(t0));
+        b.push(key_b(), q(t0 + Duration::from_millis(4)));
+        // 5ms later: only key_a's oldest has aged out
+        let due = b.due(t0 + Duration::from_millis(5));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].key, key_a());
+        assert_eq!(b.pending(), 1);
+        // 4ms more: key_b due too
+        let due2 = b.due(t0 + Duration::from_millis(9));
+        assert_eq!(due2.len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn next_deadline_is_oldest() {
+        let mut b = DynamicBatcher::new(cfg(100, 10));
+        let t0 = Instant::now();
+        assert!(b.next_deadline().is_none());
+        b.push(key_b(), q(t0 + Duration::from_millis(3)));
+        b.push(key_a(), q(t0));
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn drain_flushes_everything() {
+        let mut b = DynamicBatcher::new(cfg(100, 1000));
+        let now = Instant::now();
+        b.push(key_a(), q(now));
+        b.push(key_b(), q(now));
+        b.push(key_b(), q(now));
+        let all = b.drain();
+        assert_eq!(all.iter().map(|x| x.queries.len()).sum::<usize>(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+}

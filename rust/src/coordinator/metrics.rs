@@ -1,0 +1,104 @@
+//! Service metrics: lock-free counters the executor updates and any
+//! thread can snapshot (exposed over the TCP protocol's `stats` command).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Default)]
+pub struct Metrics {
+    /// Individual operator queries received.
+    pub queries: AtomicU64,
+    /// Executable invocations (batches flushed).
+    pub batches: AtomicU64,
+    /// Batches flushed because they filled to max_batch.
+    pub full_flushes: AtomicU64,
+    /// Batches flushed on deadline.
+    pub deadline_flushes: AtomicU64,
+    /// Sum of rows over all batches (for mean batch-fill).
+    pub batched_rows: AtomicU64,
+    /// Total executor busy time, µs.
+    pub exec_us: AtomicU64,
+    /// End-to-end config predictions served.
+    pub predictions: AtomicU64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            queries: self.queries.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            full_flushes: self.full_flushes.load(Ordering::Relaxed),
+            deadline_flushes: self.deadline_flushes.load(Ordering::Relaxed),
+            batched_rows: self.batched_rows.load(Ordering::Relaxed),
+            exec_us: self.exec_us.load(Ordering::Relaxed),
+            predictions: self.predictions.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn add(&self, c: &AtomicU64, n: u64) {
+        c.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub queries: u64,
+    pub batches: u64,
+    pub full_flushes: u64,
+    pub deadline_flushes: u64,
+    pub batched_rows: u64,
+    pub exec_us: u64,
+    pub predictions: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn mean_batch_rows(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_rows as f64 / self.batches as f64
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("queries", Json::Num(self.queries as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("full_flushes", Json::Num(self.full_flushes as f64)),
+            ("deadline_flushes", Json::Num(self.deadline_flushes as f64)),
+            ("mean_batch_rows", Json::Num(self.mean_batch_rows())),
+            ("exec_us", Json::Num(self.exec_us as f64)),
+            ("predictions", Json::Num(self.predictions as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.add(&m.queries, 5);
+        m.add(&m.queries, 3);
+        m.add(&m.batches, 2);
+        m.add(&m.batched_rows, 7);
+        let s = m.snapshot();
+        assert_eq!(s.queries, 8);
+        assert_eq!(s.mean_batch_rows(), 3.5);
+    }
+
+    #[test]
+    fn snapshot_serializes() {
+        let m = Metrics::default();
+        m.add(&m.predictions, 1);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("predictions").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn empty_mean_is_zero() {
+        assert_eq!(Metrics::default().snapshot().mean_batch_rows(), 0.0);
+    }
+}

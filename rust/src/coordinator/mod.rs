@@ -1,0 +1,17 @@
+//! The prediction service: a vLLM-router-style coordinator that routes
+//! per-operator latency queries to the right uploaded forest, batches
+//! them dynamically up to the AOT batch size, executes on the PJRT
+//! engine (or native fallback), and serves end-to-end predictions over
+//! an in-process API and a JSON-lines TCP protocol.
+//!
+//! Built on std threads + channels (no tokio in the offline crate set;
+//! see DESIGN.md §3).
+
+pub mod batcher;
+pub mod metrics;
+pub mod service;
+pub mod server;
+
+pub use batcher::{BatcherCfg, DynamicBatcher};
+pub use metrics::Metrics;
+pub use service::{PredictionService, QueryClient};

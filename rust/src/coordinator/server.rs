@@ -1,0 +1,205 @@
+//! JSON-lines TCP front end (thread-per-connection; the offline crate set
+//! has no tokio — see DESIGN.md §3).
+//!
+//! Protocol — one JSON object per line:
+//!   {"cmd":"predict","model":"gpt20b","parallel":"4-4-8","platform":"perlmutter"}
+//!   {"cmd":"stats"}
+//!   {"cmd":"ping"}
+//! Responses are single JSON lines; errors come back as {"error": "..."}.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::config::{ModelCfg, ParallelCfg, Platform};
+use crate::coordinator::service::PredictionService;
+use crate::predictor::e2e::ComponentPrediction;
+use crate::util::json::Json;
+
+pub fn prediction_to_json(cp: &ComponentPrediction) -> Json {
+    Json::obj(vec![
+        ("label", Json::Str(cp.label.clone())),
+        ("total_s", Json::Num(cp.total_us / 1e6)),
+        ("encoder_fwd_us", Json::Num(cp.encoder_fwd_us)),
+        ("encoder_bwd_us", Json::Num(cp.encoder_bwd_us)),
+        ("stage_fwd_us", Json::arr_f64(&cp.stage_fwd_us)),
+        ("stage_bwd_us", Json::arr_f64(&cp.stage_bwd_us)),
+        ("mp_allreduce_us", Json::Num(cp.mp_allreduce_us)),
+        ("pp_p2p_us", Json::Num(cp.pp_p2p_us)),
+        ("dp_allreduce_first_us", Json::Num(cp.dp_allreduce_first_us)),
+        ("dp_allgather_max_us", Json::Num(cp.dp_allgather_max_us)),
+        ("max_update_us", Json::Num(cp.max_update_us)),
+        ("update_us", Json::arr_f64(&cp.update_us)),
+    ])
+}
+
+fn err_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+/// Handle one request line; pure function for testability.
+pub fn handle_line(svc: &PredictionService, line: &str) -> String {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err_json(&format!("bad json: {e}")),
+    };
+    match req.get("cmd").and_then(|c| c.as_str()).unwrap_or("predict") {
+        "ping" => Json::obj(vec![("ok", Json::Bool(true))]).to_string(),
+        "stats" => svc.metrics.snapshot().to_json().to_string(),
+        "predict" => {
+            let Some(model) = req
+                .get("model")
+                .and_then(|m| m.as_str())
+                .and_then(ModelCfg::by_name)
+            else {
+                return err_json("unknown model (gpt20b | llama13b | llemma7b)");
+            };
+            let Some(par) = req
+                .get("parallel")
+                .and_then(|p| p.as_str())
+                .and_then(ParallelCfg::parse)
+            else {
+                return err_json("bad parallel config (expected pp-mp-dp)");
+            };
+            let Some(platform) = req
+                .get("platform")
+                .and_then(|p| p.as_str())
+                .and_then(Platform::by_name)
+            else {
+                return err_json("unknown platform (perlmutter | vista)");
+            };
+            if !par.fits(&platform) {
+                return err_json(&format!(
+                    "{} needs {} GPUs > {} available",
+                    par.label(),
+                    par.gpus(),
+                    platform.max_gpus()
+                ));
+            }
+            let cp = svc.predict_config(&model, &par, &platform);
+            prediction_to_json(&cp).to_string()
+        }
+        other => err_json(&format!("unknown cmd '{other}'")),
+    }
+}
+
+fn handle_conn(svc: Arc<PredictionService>, stream: TcpStream) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_line(&svc, &line);
+        if writer.write_all(resp.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            break;
+        }
+    }
+    let _ = peer; // connection closed
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7070").
+pub fn serve(svc: PredictionService, addr: &str) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("fgpm serving on {addr}");
+    let svc = Arc::new(svc);
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let svc = svc.clone();
+        std::thread::spawn(move || handle_conn(svc, stream));
+    }
+    Ok(())
+}
+
+/// Bind an ephemeral port and serve in a background thread; returns the
+/// bound address (test/demo harness).
+pub fn serve_background(svc: PredictionService) -> std::io::Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let svc = Arc::new(svc);
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let svc = svc.clone();
+            std::thread::spawn(move || handle_conn(svc, stream));
+        }
+    });
+    Ok(addr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherCfg;
+    use crate::predictor::registry::BatchPredictor;
+    use crate::sampling::DatasetKey;
+
+    struct Constant(f64);
+    impl BatchPredictor for Constant {
+        fn predict_batch(&mut self, _k: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+            rows.iter().map(|_| self.0).collect()
+        }
+    }
+
+    fn svc() -> PredictionService {
+        PredictionService::start(Box::new(Constant(100.0)), BatcherCfg::default())
+    }
+
+    #[test]
+    fn ping_and_stats() {
+        let s = svc();
+        assert!(handle_line(&s, r#"{"cmd":"ping"}"#).contains("true"));
+        let stats = handle_line(&s, r#"{"cmd":"stats"}"#);
+        assert!(stats.contains("queries"));
+        s.shutdown();
+    }
+
+    #[test]
+    fn predict_roundtrip() {
+        let s = svc();
+        let resp = handle_line(
+            &s,
+            r#"{"cmd":"predict","model":"llemma7b","parallel":"4-2-2","platform":"perlmutter"}"#,
+        );
+        let j = Json::parse(&resp).unwrap();
+        assert!(j.get("error").is_none(), "{resp}");
+        assert!(j.get("total_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("label").unwrap().as_str().unwrap(), "Llemma-7B(4-2-2)");
+        s.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        let s = svc();
+        assert!(handle_line(&s, "not json").contains("error"));
+        assert!(handle_line(&s, r#"{"cmd":"predict","model":"bert","parallel":"1-1-1","platform":"perlmutter"}"#).contains("unknown model"));
+        assert!(handle_line(&s, r#"{"cmd":"predict","model":"gpt20b","parallel":"9","platform":"perlmutter"}"#).contains("bad parallel"));
+        assert!(handle_line(&s, r#"{"cmd":"predict","model":"gpt20b","parallel":"4-4-8","platform":"summit"}"#).contains("unknown platform"));
+        assert!(handle_line(&s, r#"{"cmd":"predict","model":"gpt20b","parallel":"16-16-16","platform":"perlmutter"}"#).contains("GPUs"));
+        s.shutdown();
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        use std::io::{BufRead, BufReader, Write};
+        let addr = serve_background(svc()).unwrap();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("true"));
+        conn.write_all(
+            b"{\"cmd\":\"predict\",\"model\":\"llemma7b\",\"parallel\":\"2-2-2\",\"platform\":\"vista\"}\n",
+        )
+        .unwrap();
+        let mut line2 = String::new();
+        reader.read_line(&mut line2).unwrap();
+        assert!(line2.contains("total_s"), "{line2}");
+    }
+}

@@ -1,0 +1,275 @@
+//! The prediction service: a dedicated executor thread owns the backend
+//! (PJRT executables are not Sync) and runs the dynamic-batching loop;
+//! any number of request threads talk to it through cloneable
+//! [`QueryClient`]s, which implement [`BatchPredictor`] so the whole
+//! `predictor::e2e` composition runs unmodified on top of the service.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::{ModelCfg, ParallelCfg, Platform};
+use crate::coordinator::batcher::{Batch, BatcherCfg, DynamicBatcher, PendingQuery};
+use crate::coordinator::metrics::Metrics;
+use crate::predictor::e2e::ComponentPrediction;
+use crate::predictor::registry::BatchPredictor;
+use crate::sampling::DatasetKey;
+
+enum Msg {
+    Query { key: DatasetKey, q: PendingQuery },
+    Shutdown,
+}
+
+/// Handle to the running service.
+pub struct PredictionService {
+    tx: Sender<Msg>,
+    executor: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+/// Cheap per-thread client; implements [`BatchPredictor`] by pushing
+/// queries into the service and awaiting responses.
+#[derive(Clone)]
+pub struct QueryClient {
+    tx: Sender<Msg>,
+    metrics: Arc<Metrics>,
+}
+
+impl PredictionService {
+    /// Start the executor with a ready backend (native registry or a
+    /// baseline — anything BatchPredictor + Send).
+    pub fn start(backend: Box<dyn BatchPredictor + Send>, cfg: BatcherCfg) -> PredictionService {
+        PredictionService::start_with(move || backend as Box<dyn BatchPredictor>, cfg)
+    }
+
+    /// Start the executor from a factory that runs ON the executor thread.
+    /// Required for the XLA backend: PJRT clients are not Send, so the
+    /// engine must be constructed (and stay) on the thread that uses it.
+    pub fn start_with<F>(factory: F, cfg: BatcherCfg) -> PredictionService
+    where
+        F: FnOnce() -> Box<dyn BatchPredictor> + Send + 'static,
+    {
+        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let metrics = Arc::new(Metrics::default());
+        let m = metrics.clone();
+        let executor = std::thread::Builder::new()
+            .name("fgpm-executor".into())
+            .spawn(move || {
+                let mut backend = factory();
+                let mut batcher = DynamicBatcher::new(cfg);
+                // Flush policy (§Perf iteration 2): full batches flush
+                // inline; everything else flushes as soon as the mailbox
+                // has been QUIET for max_wait. Callers block on their
+                // responses, so a quiet mailbox means no further
+                // coalescing is possible — waiting out a per-route age
+                // deadline (the previous policy) only added latency
+                // (~2ms x routes per served prediction).
+                loop {
+                    let msg = if batcher.pending() == 0 {
+                        match rx.recv() {
+                            Ok(msg) => Some(msg),
+                            Err(_) => return, // all clients gone
+                        }
+                    } else {
+                        match rx.recv_timeout(cfg.max_wait) {
+                            Ok(msg) => Some(msg),
+                            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                                for batch in batcher.drain() {
+                                    run_batch(&mut *backend, batch, &m);
+                                }
+                                return;
+                            }
+                        }
+                    };
+                    match msg {
+                        Some(Msg::Query { key, q }) => {
+                            m.add(&m.queries, 1);
+                            if let Some(batch) = batcher.push(key, q) {
+                                m.add(&m.full_flushes, 1);
+                                run_batch(&mut *backend, batch, &m);
+                            }
+                        }
+                        Some(Msg::Shutdown) => {
+                            for batch in batcher.drain() {
+                                run_batch(&mut *backend, batch, &m);
+                            }
+                            return;
+                        }
+                        None => {
+                            // mailbox quiet: flush every pending route
+                            for batch in batcher.drain() {
+                                m.add(&m.deadline_flushes, 1);
+                                run_batch(&mut *backend, batch, &m);
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn executor");
+        PredictionService { tx, executor: Some(executor), metrics }
+    }
+
+    pub fn client(&self) -> QueryClient {
+        QueryClient { tx: self.tx.clone(), metrics: self.metrics.clone() }
+    }
+
+    /// Serve one end-to-end configuration prediction.
+    pub fn predict_config(
+        &self,
+        model: &ModelCfg,
+        par: &ParallelCfg,
+        platform: &Platform,
+    ) -> ComponentPrediction {
+        let mut client = self.client();
+        let cp = crate::predictor::e2e::predict(model, par, platform, &mut client);
+        self.metrics.add(&self.metrics.predictions, 1);
+        cp
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for PredictionService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_batch(backend: &mut dyn BatchPredictor, batch: Batch, m: &Metrics) {
+    let rows: Vec<Vec<f64>> = batch.queries.iter().map(|q| q.row.clone()).collect();
+    let t0 = Instant::now();
+    let preds = backend.predict_batch(batch.key, &rows);
+    m.add(&m.exec_us, t0.elapsed().as_micros() as u64);
+    m.add(&m.batches, 1);
+    m.add(&m.batched_rows, rows.len() as u64);
+    for (q, p) in batch.queries.into_iter().zip(preds) {
+        let _ = q.respond.send(p); // requester may have gone away; fine
+    }
+}
+
+impl BatchPredictor for QueryClient {
+    fn predict_batch(&mut self, key: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+        let _ = &self.metrics;
+        let receivers: Vec<Receiver<f64>> = rows
+            .iter()
+            .map(|row| {
+                let (rtx, rrx) = channel();
+                self.tx
+                    .send(Msg::Query {
+                        key,
+                        q: PendingQuery {
+                            row: row.clone(),
+                            enqueued: Instant::now(),
+                            respond: rtx,
+                        },
+                    })
+                    .expect("service down");
+                rrx
+            })
+            .collect();
+        receivers.into_iter().map(|r| r.recv().expect("executor dropped query")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{Dir, OpKind};
+    use std::time::Duration;
+
+    /// Backend that records batch sizes and answers sum(row).
+    struct Recording {
+        sizes: std::sync::Arc<std::sync::Mutex<Vec<usize>>>,
+    }
+
+    impl BatchPredictor for Recording {
+        fn predict_batch(&mut self, _k: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+            self.sizes.lock().unwrap().push(rows.len());
+            rows.iter().map(|r| r.iter().sum()).collect()
+        }
+    }
+
+    fn key() -> DatasetKey {
+        (OpKind::Linear1, Dir::Fwd)
+    }
+
+    #[test]
+    fn responses_route_back_to_callers() {
+        let sizes = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let svc = PredictionService::start(
+            Box::new(Recording { sizes: sizes.clone() }),
+            BatcherCfg { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        let mut c = svc.client();
+        let rows: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64, 1.0]).collect();
+        let out = c.predict_batch(key(), &rows);
+        assert_eq!(out, (0..10).map(|i| i as f64 + 1.0).collect::<Vec<_>>());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batching_aggregates_concurrent_clients() {
+        let sizes = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let svc = PredictionService::start(
+            Box::new(Recording { sizes: sizes.clone() }),
+            BatcherCfg { max_batch: 64, max_wait: Duration::from_millis(20) },
+        );
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let mut c = svc.client();
+            handles.push(std::thread::spawn(move || {
+                let rows: Vec<Vec<f64>> = (0..4).map(|i| vec![(t * 4 + i) as f64]).collect();
+                c.predict_batch(key(), &rows)
+            }));
+        }
+        for h in handles {
+            let out = h.join().unwrap();
+            assert_eq!(out.len(), 4);
+        }
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.queries, 32);
+        // batching must have merged queries across clients
+        assert!(snap.mean_batch_rows() > 1.5, "mean batch {}", snap.mean_batch_rows());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn deadline_flush_fires_for_partial_batches() {
+        let sizes = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let svc = PredictionService::start(
+            Box::new(Recording { sizes: sizes.clone() }),
+            BatcherCfg { max_batch: 1000, max_wait: Duration::from_millis(2) },
+        );
+        let mut c = svc.client();
+        let out = c.predict_batch(key(), &[vec![7.0]]);
+        assert_eq!(out, vec![7.0]);
+        let snap = svc.metrics.snapshot();
+        assert!(snap.deadline_flushes >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn metrics_count_batches_and_exec_time() {
+        let sizes = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let svc = PredictionService::start(
+            Box::new(Recording { sizes }),
+            BatcherCfg { max_batch: 2, max_wait: Duration::from_millis(1) },
+        );
+        let mut c = svc.client();
+        let _ = c.predict_batch(key(), &[vec![1.0], vec![2.0], vec![3.0], vec![4.0]]);
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.queries, 4);
+        assert!(snap.batches >= 2);
+        svc.shutdown();
+    }
+}

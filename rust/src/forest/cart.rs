@@ -1,0 +1,332 @@
+//! CART regression tree: exact variance-reduction splits, depth / leaf /
+//! node-budget limits chosen so every tree fits the AOT kernel layout
+//! (depth <= D = 16 levels, nodes <= N = 1024).
+
+use crate::util::rng::Rng;
+
+/// Growth limits.
+#[derive(Clone, Copy, Debug)]
+pub struct CartParams {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// Hard cap on arena size (AOT kernel row budget).
+    pub max_nodes: usize,
+    /// Features considered per split: `None` = all (CART), `Some(k)` =
+    /// random subset (random-forest mode).
+    pub mtry: Option<usize>,
+}
+
+impl Default for CartParams {
+    fn default() -> Self {
+        CartParams { max_depth: 12, min_samples_leaf: 2, max_nodes: 1024, mtry: None }
+    }
+}
+
+/// One node. Leaves have `feature == -1`; internal nodes hold child
+/// indices (always > own index, matching the kernel's layout contract).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Node {
+    pub feature: i32,
+    pub threshold: f64,
+    pub left: u32,
+    pub right: u32,
+    pub value: f64,
+}
+
+impl Node {
+    fn leaf(value: f64) -> Node {
+        Node { feature: -1, threshold: 0.0, left: 0, right: 0, value }
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        self.feature < 0
+    }
+}
+
+/// A trained regression tree (node arena, root at 0).
+#[derive(Clone, Debug, Default)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+struct Split {
+    feature: usize,
+    threshold: f64,
+    score: f64, // weighted child variance (lower is better)
+}
+
+fn mean_of(idx: &[usize], y: &[f64]) -> f64 {
+    idx.iter().map(|&i| y[i]).sum::<f64>() / idx.len() as f64
+}
+
+/// Sum of squared deviations for the subset.
+fn sse(idx: &[usize], y: &[f64]) -> f64 {
+    let m = mean_of(idx, y);
+    idx.iter().map(|&i| (y[i] - m).powi(2)).sum()
+}
+
+fn best_split(
+    idx: &[usize],
+    x: &[Vec<f64>],
+    y: &[f64],
+    params: &CartParams,
+    rng: &mut Rng,
+) -> Option<Split> {
+    let n_features = x[0].len();
+    let candidates: Vec<usize> = match params.mtry {
+        Some(k) if k < n_features => rng.sample_indices(n_features, k),
+        _ => (0..n_features).collect(),
+    };
+    let mut best: Option<Split> = None;
+    for &f in &candidates {
+        // sort subset by feature value
+        let mut order: Vec<usize> = idx.to_vec();
+        order.sort_by(|&a, &b| x[a][f].partial_cmp(&x[b][f]).unwrap());
+        // prefix sums for O(n) scan
+        let n = order.len();
+        let mut prefix_sum = vec![0.0; n + 1];
+        let mut prefix_sq = vec![0.0; n + 1];
+        for (i, &ix) in order.iter().enumerate() {
+            prefix_sum[i + 1] = prefix_sum[i] + y[ix];
+            prefix_sq[i + 1] = prefix_sq[i] + y[ix] * y[ix];
+        }
+        let total_sum = prefix_sum[n];
+        let total_sq = prefix_sq[n];
+        for i in params.min_samples_leaf..=(n - params.min_samples_leaf) {
+            if i == 0 || i == n {
+                continue;
+            }
+            let (a, b) = (x[order[i - 1]][f], x[order[i]][f]);
+            if a == b {
+                continue; // no separating threshold
+            }
+            let ls = prefix_sum[i];
+            let lq = prefix_sq[i];
+            let rs = total_sum - ls;
+            let rq = total_sq - lq;
+            let lvar = lq - ls * ls / i as f64;
+            let rvar = rq - rs * rs / (n - i) as f64;
+            let score = lvar + rvar;
+            if best.as_ref().is_none_or(|s| score < s.score) {
+                best = Some(Split { feature: f, threshold: 0.5 * (a + b), score });
+            }
+        }
+    }
+    best
+}
+
+impl Tree {
+    /// Fit on rows `idx` of (x, y).
+    pub fn fit_subset(
+        x: &[Vec<f64>],
+        y: &[f64],
+        idx: &[usize],
+        params: &CartParams,
+        rng: &mut Rng,
+    ) -> Tree {
+        assert!(!idx.is_empty());
+        let mut tree = Tree { nodes: Vec::new() };
+        tree.grow(x, y, idx.to_vec(), 0, params, rng);
+        assert!(tree.nodes.len() <= params.max_nodes);
+        tree
+    }
+
+    pub fn fit(x: &[Vec<f64>], y: &[f64], params: &CartParams, rng: &mut Rng) -> Tree {
+        let idx: Vec<usize> = (0..y.len()).collect();
+        Tree::fit_subset(x, y, &idx, params, rng)
+    }
+
+    /// Depth-first growth; returns this subtree's root index.
+    fn grow(
+        &mut self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        idx: Vec<usize>,
+        depth: usize,
+        params: &CartParams,
+        rng: &mut Rng,
+    ) -> u32 {
+        let me = self.nodes.len() as u32;
+        let m = mean_of(&idx, y);
+        self.nodes.push(Node::leaf(m));
+        let stop = depth + 1 >= params.max_depth
+            || idx.len() < 2 * params.min_samples_leaf
+            || self.nodes.len() + 2 > params.max_nodes
+            || sse(&idx, y) < 1e-12;
+        if stop {
+            return me;
+        }
+        let Some(split) = best_split(&idx, x, y, params, rng) else {
+            return me;
+        };
+        let (mut li, mut ri) = (Vec::new(), Vec::new());
+        for &i in &idx {
+            if x[i][split.feature] <= split.threshold {
+                li.push(i);
+            } else {
+                ri.push(i);
+            }
+        }
+        if li.is_empty() || ri.is_empty() {
+            return me;
+        }
+        let l = self.grow(x, y, li, depth + 1, params, rng);
+        // node budget can be consumed by the left subtree
+        if self.nodes.len() + 1 > params.max_nodes {
+            return me;
+        }
+        let r = self.grow(x, y, ri, depth + 1, params, rng);
+        let node = &mut self.nodes[me as usize];
+        node.feature = split.feature as i32;
+        node.threshold = split.threshold;
+        node.left = l;
+        node.right = r;
+        node.value = 0.0; // internal nodes carry no value in the kernel
+        self.nodes[me as usize] = node.clone();
+        me
+    }
+
+    /// Predict one row (traversal identical to the Pallas kernel:
+    /// `x[f] <= threshold` goes left).
+    pub fn predict_row(&self, row: &[f64]) -> f64 {
+        let mut i = 0usize;
+        loop {
+            let n = &self.nodes[i];
+            if n.is_leaf() {
+                return n.value;
+            }
+            i = if row[n.feature as usize] <= n.threshold {
+                n.left as usize
+            } else {
+                n.right as usize
+            };
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn d(nodes: &[Node], i: usize) -> usize {
+            let n = &nodes[i];
+            if n.is_leaf() {
+                1
+            } else {
+                1 + d(nodes, n.left as usize).max(d(nodes, n.right as usize))
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            d(&self.nodes, 0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(1)
+    }
+
+    #[test]
+    fn fits_constant_target() {
+        let x = vec![vec![0.0], vec![1.0], vec![2.0], vec![3.0]];
+        let y = vec![5.0; 4];
+        let t = Tree::fit(&x, &y, &CartParams::default(), &mut rng());
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.predict_row(&[9.0]), 5.0);
+    }
+
+    #[test]
+    fn learns_step_function() {
+        // y = 10 if x <= 5 else 20 — exactly the discontinuity class the
+        // paper argues trees capture.
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64 / 10.0]).collect();
+        let y: Vec<f64> = x.iter().map(|r| if r[0] <= 5.0 { 10.0 } else { 20.0 }).collect();
+        let t = Tree::fit(&x, &y, &CartParams::default(), &mut rng());
+        assert_eq!(t.predict_row(&[2.0]), 10.0);
+        assert_eq!(t.predict_row(&[7.0]), 20.0);
+        assert!(t.depth() <= 3);
+    }
+
+    #[test]
+    fn learns_2d_interaction() {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..20 {
+            for j in 0..20 {
+                x.push(vec![i as f64, j as f64]);
+                y.push(if i < 10 && j < 10 { 1.0 } else { 0.0 });
+            }
+        }
+        let t = Tree::fit(&x, &y, &CartParams::default(), &mut rng());
+        assert!(t.predict_row(&[3.0, 3.0]) > 0.9);
+        assert!(t.predict_row(&[15.0, 3.0]) < 0.1);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let x: Vec<Vec<f64>> = (0..512).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..512).map(|i| (i as f64).sin()).collect();
+        let p = CartParams { max_depth: 4, ..CartParams::default() };
+        let t = Tree::fit(&x, &y, &p, &mut rng());
+        assert!(t.depth() <= 4, "depth {}", t.depth());
+    }
+
+    #[test]
+    fn respects_node_budget() {
+        let x: Vec<Vec<f64>> = (0..2000).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..2000).map(|i| (i % 17) as f64).collect();
+        let p = CartParams { max_depth: 16, min_samples_leaf: 1, max_nodes: 63, mtry: None };
+        let t = Tree::fit(&x, &y, &p, &mut rng());
+        assert!(t.nodes.len() <= 63, "{}", t.nodes.len());
+    }
+
+    #[test]
+    fn children_after_parent() {
+        // layout contract required by the flattened kernel export
+        let x: Vec<Vec<f64>> = (0..200).map(|i| vec![(i % 13) as f64, (i % 7) as f64]).collect();
+        let y: Vec<f64> = (0..200).map(|i| (i % 5) as f64).collect();
+        let t = Tree::fit(&x, &y, &CartParams::default(), &mut rng());
+        for (i, n) in t.nodes.iter().enumerate() {
+            if !n.is_leaf() {
+                assert!(n.left as usize > i && n.right as usize > i);
+            }
+        }
+    }
+
+    #[test]
+    fn min_samples_leaf_enforced() {
+        let x: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let p = CartParams { min_samples_leaf: 10, ..CartParams::default() };
+        let t = Tree::fit(&x, &y, &p, &mut rng());
+        // count samples reaching each leaf
+        let mut counts = vec![0usize; t.nodes.len()];
+        for r in &x {
+            let mut i = 0;
+            loop {
+                let n = &t.nodes[i];
+                if n.is_leaf() {
+                    counts[i] += 1;
+                    break;
+                }
+                i = if r[0] <= n.threshold { n.left as usize } else { n.right as usize };
+            }
+        }
+        for (i, n) in t.nodes.iter().enumerate() {
+            if n.is_leaf() {
+                assert!(counts[i] >= 10, "leaf {i} has {}", counts[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn interpolates_smooth_function_reasonably() {
+        let x: Vec<Vec<f64>> = (0..400).map(|i| vec![i as f64 / 40.0]).collect();
+        let y: Vec<f64> = x.iter().map(|r| r[0] * r[0]).collect();
+        let t = Tree::fit(&x, &y, &CartParams::default(), &mut rng());
+        let pred = t.predict_row(&[5.05]);
+        assert!((pred - 25.5).abs() < 2.0, "{pred}");
+    }
+}

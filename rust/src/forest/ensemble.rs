@@ -1,0 +1,275 @@
+//! Ensembles over CART trees: bagged RandomForest and gradient-boosted
+//! trees (the paper's "RandomForest and XGBoost" pair), with a uniform
+//! [`Forest`] representation that both native inference and the AOT
+//! kernel export consume.
+//!
+//! Uniform prediction semantics: `pred(x) = base + sum_t w_t * tree_t(x)`
+//! — RF uses base 0 and w = 1/k; GBT uses base = mean(y) and w = lr.
+
+use crate::forest::cart::{CartParams, Tree};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForestKind {
+    RandomForest,
+    Gbt,
+}
+
+/// RandomForest hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RfParams {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// Feature subset per split; None = all features.
+    pub mtry: Option<usize>,
+}
+
+/// Gradient-boosting hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GbtParams {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    pub learning_rate: f64,
+}
+
+/// A trained ensemble. Targets are log1p(µs); [`Forest::predict_us`]
+/// applies the inverse transform.
+#[derive(Clone, Debug)]
+pub struct Forest {
+    pub kind: ForestKind,
+    pub trees: Vec<Tree>,
+    /// Per-tree weights (1/k for RF, learning-rate for GBT).
+    pub weights: Vec<f64>,
+    /// Additive base (0 for RF, mean target for GBT).
+    pub base: f64,
+    /// Feature width the forest was trained on.
+    pub n_features: usize,
+}
+
+/// Max nodes per tree — must match the AOT kernel layout (manifest
+/// `nodes`). Enforced at training time so export never truncates.
+pub const MAX_NODES: usize = 1024;
+/// Max traversal depth supported by the kernel (manifest `depth`).
+pub const MAX_DEPTH: usize = 16;
+/// Max trees per forest (manifest `trees`); GBT additionally reserves one
+/// slot for the base-score stump at export time.
+pub const MAX_TREES: usize = 128;
+
+impl Forest {
+    /// Train a bagged random forest on log1p targets.
+    pub fn fit_rf(x: &[Vec<f64>], y_log: &[f64], p: &RfParams, seed: u64) -> Forest {
+        assert!(p.n_trees <= MAX_TREES && p.max_depth <= MAX_DEPTH);
+        let mut rng = Rng::new(seed);
+        let n = y_log.len();
+        let cart = CartParams {
+            max_depth: p.max_depth,
+            min_samples_leaf: p.min_samples_leaf,
+            max_nodes: MAX_NODES,
+            mtry: p.mtry,
+        };
+        let mut trees = Vec::with_capacity(p.n_trees);
+        for t in 0..p.n_trees {
+            let mut tree_rng = rng.fork(t as u64);
+            // bootstrap sample
+            let idx: Vec<usize> = (0..n).map(|_| tree_rng.below(n)).collect();
+            trees.push(Tree::fit_subset(x, y_log, &idx, &cart, &mut tree_rng));
+        }
+        let w = 1.0 / p.n_trees as f64;
+        Forest {
+            kind: ForestKind::RandomForest,
+            weights: vec![w; trees.len()],
+            trees,
+            base: 0.0,
+            n_features: x.first().map_or(0, |r| r.len()),
+        }
+    }
+
+    /// Train gradient-boosted trees on log1p targets.
+    pub fn fit_gbt(x: &[Vec<f64>], y_log: &[f64], p: &GbtParams, seed: u64) -> Forest {
+        assert!(p.n_trees < MAX_TREES && p.max_depth <= MAX_DEPTH);
+        let mut rng = Rng::new(seed ^ 0x6B7);
+        let n = y_log.len();
+        let base = y_log.iter().sum::<f64>() / n as f64;
+        let mut residual: Vec<f64> = y_log.iter().map(|y| y - base).collect();
+        let cart = CartParams {
+            max_depth: p.max_depth,
+            min_samples_leaf: p.min_samples_leaf,
+            max_nodes: MAX_NODES,
+            mtry: None,
+        };
+        let idx: Vec<usize> = (0..n).collect();
+        let mut trees = Vec::with_capacity(p.n_trees);
+        for t in 0..p.n_trees {
+            let mut tree_rng = rng.fork(t as u64);
+            let tree = Tree::fit_subset(x, &residual, &idx, &cart, &mut tree_rng);
+            for (i, xi) in x.iter().enumerate() {
+                residual[i] -= p.learning_rate * tree.predict_row(xi);
+            }
+            trees.push(tree);
+        }
+        Forest {
+            kind: ForestKind::Gbt,
+            weights: vec![p.learning_rate; trees.len()],
+            trees,
+            base,
+            n_features: x.first().map_or(0, |r| r.len()),
+        }
+    }
+
+    /// Raw ensemble output in log1p space.
+    pub fn predict_log(&self, row: &[f64]) -> f64 {
+        let mut acc = self.base;
+        for (t, w) in self.trees.iter().zip(&self.weights) {
+            acc += w * t.predict_row(row);
+        }
+        acc
+    }
+
+    /// Latency prediction in µs (inverse log1p transform, floored at 0).
+    pub fn predict_us(&self, row: &[f64]) -> f64 {
+        self.predict_log(row).exp_m1().max(0.0)
+    }
+
+    pub fn max_tree_depth(&self) -> usize {
+        self.trees.iter().map(|t| t.depth()).max().unwrap_or(0)
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.trees.iter().map(|t| t.nodes.len()).sum()
+    }
+}
+
+/// log1p transform of a latency vector (training-target space).
+pub fn to_log(y_us: &[f64]) -> Vec<f64> {
+    y_us.iter().map(|&y| y.ln_1p()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    /// Synthetic latency-like surface: multiplicative with a step.
+    fn surface(seed: u64, n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.uniform(1.0, 100.0);
+            let b = rng.uniform(1.0, 16.0);
+            let step = if a > 50.0 { 2.0 } else { 1.0 };
+            x.push(vec![a, b]);
+            y.push(5.0 + a * b * step * 0.7);
+        }
+        (x, y)
+    }
+
+    fn mape_on(f: &Forest, x: &[Vec<f64>], y: &[f64]) -> f64 {
+        let pred: Vec<f64> = x.iter().map(|r| f.predict_us(r)).collect();
+        stats::mape(&pred, y)
+    }
+
+    #[test]
+    fn rf_fits_surface() {
+        let (x, y) = surface(3, 600);
+        let f = Forest::fit_rf(
+            &x,
+            &to_log(&y),
+            &RfParams { n_trees: 40, max_depth: 12, min_samples_leaf: 2, mtry: None },
+            7,
+        );
+        let m = mape_on(&f, &x, &y);
+        assert!(m < 8.0, "train MAPE {m}");
+    }
+
+    #[test]
+    fn gbt_fits_surface() {
+        let (x, y) = surface(5, 600);
+        let f = Forest::fit_gbt(
+            &x,
+            &to_log(&y),
+            &GbtParams { n_trees: 120, max_depth: 5, min_samples_leaf: 2, learning_rate: 0.1 },
+            7,
+        );
+        let m = mape_on(&f, &x, &y);
+        assert!(m < 8.0, "train MAPE {m}");
+    }
+
+    #[test]
+    fn generalizes_to_held_out() {
+        let (x, y) = surface(11, 800);
+        let (xt, yt) = (&x[..600], &y[..600]);
+        let (xv, yv) = (&x[600..], &y[600..]);
+        let f = Forest::fit_rf(
+            xt,
+            &to_log(yt),
+            &RfParams { n_trees: 60, max_depth: 12, min_samples_leaf: 2, mtry: None },
+            1,
+        );
+        let m = mape_on(&f, xv, yv);
+        assert!(m < 15.0, "val MAPE {m}");
+    }
+
+    #[test]
+    fn ensembles_within_kernel_limits() {
+        let (x, y) = surface(13, 500);
+        let rf = Forest::fit_rf(
+            &x,
+            &to_log(&y),
+            &RfParams { n_trees: 80, max_depth: 14, min_samples_leaf: 1, mtry: Some(1) },
+            2,
+        );
+        assert!(rf.trees.len() <= MAX_TREES);
+        assert!(rf.max_tree_depth() <= MAX_DEPTH);
+        for t in &rf.trees {
+            assert!(t.nodes.len() <= MAX_NODES);
+        }
+    }
+
+    #[test]
+    fn gbt_beats_single_tree() {
+        let (x, y) = surface(17, 700);
+        let ylog = to_log(&y);
+        let single = Forest::fit_gbt(
+            &x,
+            &ylog,
+            &GbtParams { n_trees: 1, max_depth: 4, min_samples_leaf: 2, learning_rate: 1.0 },
+            3,
+        );
+        let many = Forest::fit_gbt(
+            &x,
+            &ylog,
+            &GbtParams { n_trees: 100, max_depth: 4, min_samples_leaf: 2, learning_rate: 0.1 },
+            3,
+        );
+        assert!(mape_on(&many, &x, &y) < mape_on(&single, &x, &y));
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let (x, y) = surface(19, 300);
+        let p = RfParams { n_trees: 10, max_depth: 8, min_samples_leaf: 2, mtry: None };
+        let a = Forest::fit_rf(&x, &to_log(&y), &p, 42);
+        let b = Forest::fit_rf(&x, &to_log(&y), &p, 42);
+        for (ra, rb) in x.iter().zip(x.iter()) {
+            assert_eq!(a.predict_us(ra), b.predict_us(rb));
+        }
+    }
+
+    #[test]
+    fn predictions_nonnegative() {
+        let (x, y) = surface(23, 200);
+        let f = Forest::fit_gbt(
+            &x,
+            &to_log(&y),
+            &GbtParams { n_trees: 50, max_depth: 4, min_samples_leaf: 2, learning_rate: 0.2 },
+            9,
+        );
+        for r in &x {
+            assert!(f.predict_us(r) >= 0.0);
+        }
+        assert!(f.predict_us(&[0.0, 0.0]) >= 0.0);
+    }
+}

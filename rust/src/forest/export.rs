@@ -1,0 +1,210 @@
+//! Export a trained [`Forest`] into the flattened tensor layout the
+//! Layer-1 Pallas kernel consumes (see python/compile/kernels/forest.py
+//! and artifacts/manifest.json):
+//!
+//!   node_feat[T, N] i32 (LEAF = -1), thresh[T, N] f32, left/right[T, N]
+//!   i32, value[T, N] f32, tree_w[T] f32.
+//!
+//! The GBT base score is folded in as a single-leaf "stump" tree with
+//! weight 1, so the kernel's uniform `sum_t w_t * leaf_t` reproduces
+//! `base + sum lr * tree` exactly.
+
+use crate::forest::ensemble::{Forest, ForestKind};
+
+/// Padded forest tensors (row-major [T, N] flattening).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlatForest {
+    pub trees: usize,
+    pub nodes: usize,
+    pub node_feat: Vec<i32>,
+    pub thresh: Vec<f32>,
+    pub left: Vec<i32>,
+    pub right: Vec<i32>,
+    pub value: Vec<f32>,
+    pub tree_w: Vec<f32>,
+}
+
+pub const LEAF: i32 = -1;
+
+impl FlatForest {
+    /// Flatten `forest` into a [t_max, n_max] layout.
+    ///
+    /// Panics if the forest exceeds the layout (training enforces the
+    /// limits, so this is a programming-error guard, not a runtime path).
+    pub fn from_forest(forest: &Forest, t_max: usize, n_max: usize) -> FlatForest {
+        let needs_stump = forest.base != 0.0;
+        let logical = forest.trees.len() + usize::from(needs_stump);
+        assert!(logical <= t_max, "{logical} trees > layout {t_max}");
+
+        let mut f = FlatForest {
+            trees: t_max,
+            nodes: n_max,
+            node_feat: vec![LEAF; t_max * n_max],
+            thresh: vec![0.0; t_max * n_max],
+            left: vec![0; t_max * n_max],
+            right: vec![0; t_max * n_max],
+            value: vec![0.0; t_max * n_max],
+            tree_w: vec![0.0; t_max],
+        };
+
+        let mut slot = 0;
+        if needs_stump {
+            // single-leaf tree holding the base score
+            f.value[0] = forest.base as f32;
+            f.tree_w[0] = 1.0;
+            slot = 1;
+        }
+        for (tree, w) in forest.trees.iter().zip(&forest.weights) {
+            assert!(tree.nodes.len() <= n_max, "{} nodes > layout {n_max}", tree.nodes.len());
+            let row = slot * n_max;
+            for (i, n) in tree.nodes.iter().enumerate() {
+                f.node_feat[row + i] = n.feature;
+                f.thresh[row + i] = n.threshold as f32;
+                f.left[row + i] = n.left as i32;
+                f.right[row + i] = n.right as i32;
+                f.value[row + i] = n.value as f32;
+            }
+            f.tree_w[slot] = *w as f32;
+            slot += 1;
+        }
+        debug_assert!(matches!(forest.kind, ForestKind::RandomForest | ForestKind::Gbt));
+        f
+    }
+
+    /// Reference traversal over the flattened layout (mirrors ref.py and
+    /// the Pallas kernel) — used to prove export fidelity.
+    pub fn predict_log(&self, row: &[f32], depth: usize) -> f32 {
+        let mut acc = 0.0f32;
+        for t in 0..self.trees {
+            if self.tree_w[t] == 0.0 {
+                continue;
+            }
+            let base = t * self.nodes;
+            let mut idx = 0usize;
+            for _ in 0..depth {
+                let f = self.node_feat[base + idx];
+                if f == LEAF {
+                    break;
+                }
+                idx = if row[f as usize] <= self.thresh[base + idx] {
+                    self.left[base + idx] as usize
+                } else {
+                    self.right[base + idx] as usize
+                };
+            }
+            acc += self.tree_w[t] * self.value[base + idx];
+        }
+        acc
+    }
+
+    /// µs-space prediction (expm1, matching the AOT graph).
+    pub fn predict_us(&self, row: &[f32], depth: usize) -> f32 {
+        self.predict_log(row, depth).exp_m1().max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::ensemble::{to_log, GbtParams, RfParams, MAX_DEPTH};
+    use crate::util::rng::Rng;
+
+    fn data(seed: u64, n: usize, f: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let row: Vec<f64> = (0..f).map(|_| rng.uniform(0.0, 100.0)).collect();
+            let v = 10.0 + row[0] * 3.0 + if row[1] > 50.0 { 100.0 } else { 0.0 };
+            x.push(row);
+            y.push(v);
+        }
+        (x, y)
+    }
+
+    fn check_fidelity(forest: &Forest, x: &[Vec<f64>]) {
+        let flat = FlatForest::from_forest(forest, 128, 1024);
+        for row in x.iter().take(50) {
+            let row32: Vec<f32> = row.iter().map(|&v| v as f32).collect();
+            let native = forest.predict_us(row);
+            let flat_pred = flat.predict_us(&row32, MAX_DEPTH) as f64;
+            let denom = native.max(1.0);
+            assert!(
+                (native - flat_pred).abs() / denom < 1e-3,
+                "native {native} flat {flat_pred}"
+            );
+        }
+    }
+
+    #[test]
+    fn rf_export_fidelity() {
+        let (x, y) = data(1, 400, 3);
+        let f = Forest::fit_rf(
+            &x,
+            &to_log(&y),
+            &RfParams { n_trees: 30, max_depth: 10, min_samples_leaf: 2, mtry: None },
+            5,
+        );
+        check_fidelity(&f, &x);
+    }
+
+    #[test]
+    fn gbt_export_fidelity_includes_base_stump() {
+        let (x, y) = data(2, 400, 3);
+        let f = Forest::fit_gbt(
+            &x,
+            &to_log(&y),
+            &GbtParams { n_trees: 60, max_depth: 5, min_samples_leaf: 2, learning_rate: 0.1 },
+            5,
+        );
+        assert!(f.base != 0.0);
+        let flat = FlatForest::from_forest(&f, 128, 1024);
+        // slot 0 is the stump: a leaf at node 0, weight 1
+        assert_eq!(flat.node_feat[0], LEAF);
+        assert_eq!(flat.tree_w[0], 1.0);
+        assert!((flat.value[0] as f64 - f.base).abs() < 1e-6);
+        check_fidelity(&f, &x);
+    }
+
+    #[test]
+    fn padding_trees_have_zero_weight() {
+        let (x, y) = data(3, 200, 2);
+        let f = Forest::fit_rf(
+            &x,
+            &to_log(&y),
+            &RfParams { n_trees: 10, max_depth: 6, min_samples_leaf: 2, mtry: None },
+            1,
+        );
+        let flat = FlatForest::from_forest(&f, 128, 1024);
+        for t in 10..128 {
+            assert_eq!(flat.tree_w[t], 0.0);
+        }
+    }
+
+    #[test]
+    fn tensor_sizes_match_layout() {
+        let (x, y) = data(4, 100, 2);
+        let f = Forest::fit_rf(
+            &x,
+            &to_log(&y),
+            &RfParams { n_trees: 5, max_depth: 5, min_samples_leaf: 2, mtry: None },
+            1,
+        );
+        let flat = FlatForest::from_forest(&f, 128, 1024);
+        assert_eq!(flat.node_feat.len(), 128 * 1024);
+        assert_eq!(flat.tree_w.len(), 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "trees > layout")]
+    fn oversize_forest_rejected() {
+        let (x, y) = data(5, 100, 2);
+        let f = Forest::fit_rf(
+            &x,
+            &to_log(&y),
+            &RfParams { n_trees: 10, max_depth: 4, min_samples_leaf: 2, mtry: None },
+            1,
+        );
+        let _ = FlatForest::from_forest(&f, 4, 1024);
+    }
+}

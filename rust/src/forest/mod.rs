@@ -1,0 +1,19 @@
+//! Tree-based regressors (paper §III-B): from-scratch CART regression
+//! trees, bagged RandomForest, gradient-boosted trees, validation-driven
+//! model selection, and export to the flattened tensor layout consumed by
+//! the Layer-1 Pallas kernel.
+//!
+//! Targets are trained in log1p(µs) space (latencies span 5 orders of
+//! magnitude); the AOT graph folds the inverse expm1, and the native
+//! predictors here do the same, so both inference paths agree.
+
+pub mod cart;
+pub mod ensemble;
+pub mod export;
+pub mod persist;
+pub mod tune;
+
+pub use cart::{CartParams, Tree};
+pub use ensemble::{Forest, ForestKind, GbtParams, RfParams};
+pub use export::FlatForest;
+pub use tune::{train_best, TunedForest};

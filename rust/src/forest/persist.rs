@@ -1,0 +1,257 @@
+//! JSON persistence for trained forests and whole registries, so
+//! `fgpm collect` / `fgpm train` / `fgpm table9` can run as separate
+//! steps (and the coordinator can boot from a forests file).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::forest::cart::{Node, Tree};
+use crate::forest::ensemble::{Forest, ForestKind};
+use crate::forest::tune::{Candidate, TunedForest};
+use crate::ops::{Dir, OpKind};
+use crate::sampling::DatasetKey;
+use crate::util::json::Json;
+
+fn tree_to_json(t: &Tree) -> Json {
+    Json::obj(vec![
+        ("feature", Json::arr_i64(&t.nodes.iter().map(|n| n.feature as i64).collect::<Vec<_>>())),
+        ("threshold", Json::arr_f64(&t.nodes.iter().map(|n| n.threshold).collect::<Vec<_>>())),
+        ("left", Json::arr_i64(&t.nodes.iter().map(|n| n.left as i64).collect::<Vec<_>>())),
+        ("right", Json::arr_i64(&t.nodes.iter().map(|n| n.right as i64).collect::<Vec<_>>())),
+        ("value", Json::arr_f64(&t.nodes.iter().map(|n| n.value).collect::<Vec<_>>())),
+    ])
+}
+
+fn tree_from_json(j: &Json) -> Result<Tree> {
+    let get = |k: &str| -> Result<Vec<f64>> {
+        j.get(k).and_then(|v| v.as_f64_vec()).ok_or_else(|| anyhow!("tree missing {k}"))
+    };
+    let feature = get("feature")?;
+    let threshold = get("threshold")?;
+    let left = get("left")?;
+    let right = get("right")?;
+    let value = get("value")?;
+    let n = feature.len();
+    anyhow::ensure!(
+        [threshold.len(), left.len(), right.len(), value.len()].iter().all(|&l| l == n),
+        "ragged tree arrays"
+    );
+    Ok(Tree {
+        nodes: (0..n)
+            .map(|i| Node {
+                feature: feature[i] as i32,
+                threshold: threshold[i],
+                left: left[i] as u32,
+                right: right[i] as u32,
+                value: value[i],
+            })
+            .collect(),
+    })
+}
+
+pub fn forest_to_json(f: &Forest) -> Json {
+    Json::obj(vec![
+        (
+            "kind",
+            Json::Str(match f.kind {
+                ForestKind::RandomForest => "rf".into(),
+                ForestKind::Gbt => "gbt".into(),
+            }),
+        ),
+        ("base", Json::Num(f.base)),
+        ("n_features", Json::Num(f.n_features as f64)),
+        ("weights", Json::arr_f64(&f.weights)),
+        ("trees", Json::Arr(f.trees.iter().map(tree_to_json).collect())),
+    ])
+}
+
+pub fn forest_from_json(j: &Json) -> Result<Forest> {
+    let kind = match j.get("kind").and_then(|k| k.as_str()) {
+        Some("rf") => ForestKind::RandomForest,
+        Some("gbt") => ForestKind::Gbt,
+        other => return Err(anyhow!("bad forest kind {other:?}")),
+    };
+    let trees: Result<Vec<Tree>> = j
+        .get("trees")
+        .and_then(|t| t.as_arr())
+        .ok_or_else(|| anyhow!("missing trees"))?
+        .iter()
+        .map(tree_from_json)
+        .collect();
+    Ok(Forest {
+        kind,
+        trees: trees?,
+        weights: j.get("weights").and_then(|w| w.as_f64_vec()).context("weights")?,
+        base: j.get("base").and_then(|b| b.as_f64()).context("base")?,
+        n_features: j.get("n_features").and_then(|n| n.as_usize()).context("n_features")?,
+    })
+}
+
+pub fn key_name(key: DatasetKey) -> String {
+    format!("{}_{}", key.0.name().replace(['^', '/'], ""), key.1.name())
+}
+
+pub fn key_from_name(name: &str) -> Option<DatasetKey> {
+    let (op_part, dir_part) = name.rsplit_once('_')?;
+    let kind = OpKind::ALL
+        .iter()
+        .copied()
+        .find(|k| k.name().replace(['^', '/'], "") == op_part)?;
+    let dir = match dir_part {
+        "fwd" => Dir::Fwd,
+        "bwd" => Dir::Bwd,
+        _ => return None,
+    };
+    Some((kind, dir))
+}
+
+/// Save a trained registry map to one JSON file.
+pub fn save_registry(
+    platform: &str,
+    forests: &HashMap<DatasetKey, TunedForest>,
+    path: &Path,
+) -> Result<()> {
+    let mut entries = Vec::new();
+    for (key, tuned) in forests {
+        entries.push((
+            key_name(*key),
+            Json::obj(vec![
+                ("val_mape", Json::Num(tuned.val_mape)),
+                ("forest", forest_to_json(&tuned.forest)),
+            ]),
+        ));
+    }
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    let j = Json::obj(vec![
+        ("platform", Json::Str(platform.to_string())),
+        (
+            "forests",
+            Json::Obj(entries.into_iter().map(|(k, v)| (k, v)).collect()),
+        ),
+    ]);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, j.to_string())?;
+    Ok(())
+}
+
+/// Load a registry map saved by [`save_registry`].
+pub fn load_registry(path: &Path) -> Result<(String, HashMap<DatasetKey, TunedForest>)> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    let platform = j
+        .get("platform")
+        .and_then(|p| p.as_str())
+        .context("platform")?
+        .to_string();
+    let Json::Obj(map) = j.get("forests").context("forests")? else {
+        return Err(anyhow!("forests must be an object"));
+    };
+    let mut out = HashMap::new();
+    for (name, entry) in map {
+        let key = key_from_name(name).ok_or_else(|| anyhow!("bad key {name}"))?;
+        let forest = forest_from_json(entry.get("forest").context("forest")?)?;
+        let val_mape = entry.get("val_mape").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        out.insert(
+            key,
+            TunedForest {
+                forest,
+                // candidate metadata is informative only; persist skips it
+                candidate: Candidate::Rf(crate::forest::ensemble::RfParams {
+                    n_trees: 0,
+                    max_depth: 0,
+                    min_samples_leaf: 0,
+                    mtry: None,
+                }),
+                val_mape,
+            },
+        );
+    }
+    Ok((platform, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::ensemble::{to_log, GbtParams, RfParams};
+    use crate::util::rng::Rng;
+
+    fn sample_forest(kind: ForestKind) -> Forest {
+        let mut rng = Rng::new(3);
+        let x: Vec<Vec<f64>> = (0..200).map(|_| vec![rng.uniform(0.0, 100.0), rng.uniform(0.0, 10.0)]).collect();
+        let y: Vec<f64> = x.iter().map(|r| 5.0 + r[0] * r[1] * 0.1).collect();
+        match kind {
+            ForestKind::RandomForest => Forest::fit_rf(
+                &x,
+                &to_log(&y),
+                &RfParams { n_trees: 10, max_depth: 8, min_samples_leaf: 2, mtry: None },
+                1,
+            ),
+            ForestKind::Gbt => Forest::fit_gbt(
+                &x,
+                &to_log(&y),
+                &GbtParams { n_trees: 30, max_depth: 4, min_samples_leaf: 2, learning_rate: 0.1 },
+                1,
+            ),
+        }
+    }
+
+    #[test]
+    fn forest_json_roundtrip_rf() {
+        let f = sample_forest(ForestKind::RandomForest);
+        let f2 = forest_from_json(&forest_to_json(&f)).unwrap();
+        for probe in [[10.0, 2.0], [90.0, 9.0], [50.0, 5.0]] {
+            assert_eq!(f.predict_us(&probe), f2.predict_us(&probe));
+        }
+    }
+
+    #[test]
+    fn forest_json_roundtrip_gbt() {
+        let f = sample_forest(ForestKind::Gbt);
+        let f2 = forest_from_json(&forest_to_json(&f)).unwrap();
+        assert_eq!(f.base, f2.base);
+        assert_eq!(f.predict_us(&[42.0, 4.2]), f2.predict_us(&[42.0, 4.2]));
+    }
+
+    #[test]
+    fn key_name_roundtrip() {
+        for kind in OpKind::ALL {
+            for dir in [Dir::Fwd, Dir::Bwd] {
+                let name = key_name((kind, dir));
+                assert_eq!(key_from_name(&name), Some((kind, dir)), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn registry_file_roundtrip() {
+        let mut forests = HashMap::new();
+        forests.insert(
+            (OpKind::QkT, Dir::Bwd),
+            TunedForest {
+                forest: sample_forest(ForestKind::RandomForest),
+                candidate: Candidate::Rf(RfParams {
+                    n_trees: 10,
+                    max_depth: 8,
+                    min_samples_leaf: 2,
+                    mtry: None,
+                }),
+                val_mape: 3.5,
+            },
+        );
+        let path = std::env::temp_dir().join("fgpm_reg_test").join("p.json");
+        save_registry("perlmutter", &forests, &path).unwrap();
+        let (platform, back) = load_registry(&path).unwrap();
+        assert_eq!(platform, "perlmutter");
+        let t = &back[&(OpKind::QkT, Dir::Bwd)];
+        assert_eq!(t.val_mape, 3.5);
+        assert_eq!(
+            t.forest.predict_us(&[30.0, 3.0]),
+            forests[&(OpKind::QkT, Dir::Bwd)].forest.predict_us(&[30.0, 3.0])
+        );
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+}

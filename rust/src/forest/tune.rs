@@ -1,0 +1,127 @@
+//! Validation-driven model selection (paper §III-B): "we select the
+//! regressor and its hyperparameters for each operator based on the
+//! principle of minimizing validation error, using 80% of the data for
+//! training and 20% for validation. Once selected, the final regressor is
+//! built on the entire dataset."
+
+use crate::forest::ensemble::{to_log, Forest, GbtParams, RfParams};
+use crate::sampling::Dataset;
+use crate::util::stats;
+
+/// Candidate space: a small grid over both families, sized to the
+/// per-operator datasets (hundreds to a few thousand rows).
+#[derive(Clone, Copy, Debug)]
+pub enum Candidate {
+    Rf(RfParams),
+    Gbt(GbtParams),
+}
+
+pub fn default_candidates() -> Vec<Candidate> {
+    vec![
+        Candidate::Rf(RfParams { n_trees: 40, max_depth: 12, min_samples_leaf: 2, mtry: None }),
+        Candidate::Rf(RfParams { n_trees: 80, max_depth: 14, min_samples_leaf: 1, mtry: None }),
+        Candidate::Rf(RfParams { n_trees: 60, max_depth: 12, min_samples_leaf: 2, mtry: Some(2) }),
+        Candidate::Gbt(GbtParams {
+            n_trees: 120,
+            max_depth: 5,
+            min_samples_leaf: 2,
+            learning_rate: 0.1,
+        }),
+        Candidate::Gbt(GbtParams {
+            n_trees: 100,
+            max_depth: 7,
+            min_samples_leaf: 2,
+            learning_rate: 0.1,
+        }),
+    ]
+}
+
+/// A tuned, refit forest plus its selection metadata.
+#[derive(Clone, Debug)]
+pub struct TunedForest {
+    pub forest: Forest,
+    pub candidate: Candidate,
+    /// Validation MAPE (%) of the winning candidate (before refit).
+    pub val_mape: f64,
+}
+
+fn fit(c: &Candidate, x: &[Vec<f64>], y_log: &[f64], seed: u64) -> Forest {
+    match c {
+        Candidate::Rf(p) => Forest::fit_rf(x, y_log, p, seed),
+        Candidate::Gbt(p) => Forest::fit_gbt(x, y_log, p, seed),
+    }
+}
+
+/// Select + refit the best regressor for one operator dataset.
+pub fn train_best(ds: &Dataset, seed: u64) -> TunedForest {
+    assert!(ds.len() >= 10, "dataset too small: {}", ds.len());
+    let (train, val) = ds.split_80_20();
+    let ytr = to_log(&train.y);
+    let mut best: Option<(f64, Candidate)> = None;
+    for c in default_candidates() {
+        let f = fit(&c, &train.x, &ytr, seed);
+        let pred: Vec<f64> = val.x.iter().map(|r| f.predict_us(r)).collect();
+        let mape = stats::mape(&pred, &val.y);
+        if best.is_none() || mape < best.unwrap().0 {
+            best = Some((mape, c));
+        }
+    }
+    let (val_mape, candidate) = best.unwrap();
+    // refit on the full dataset
+    let forest = fit(&candidate, &ds.x, &to_log(&ds.y), seed);
+    TunedForest { forest, candidate, val_mape }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn synthetic_dataset(seed: u64, n: usize) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut ds = Dataset::default();
+        for _ in 0..n {
+            let a = rng.uniform(64.0, 8192.0);
+            let b = rng.uniform(1.0, 16.0);
+            // latency-like: linear regime + step + noise
+            let y = 8.0 + 0.02 * a / b * (if a > 4000.0 { 1.4 } else { 1.0 })
+                + rng.normal_ms(0.0, 0.3).abs();
+            ds.push(vec![a, b], y);
+        }
+        ds
+    }
+
+    #[test]
+    fn selects_and_refits() {
+        let ds = synthetic_dataset(1, 500);
+        let tuned = train_best(&ds, 7);
+        assert!(tuned.val_mape < 10.0, "val MAPE {}", tuned.val_mape);
+        // refit model predicts the training surface well
+        let pred: Vec<f64> = ds.x.iter().map(|r| tuned.forest.predict_us(r)).collect();
+        let m = stats::mape(&pred, &ds.y);
+        assert!(m < 8.0, "full-fit MAPE {m}");
+    }
+
+    #[test]
+    fn selection_is_deterministic() {
+        let ds = synthetic_dataset(2, 300);
+        let a = train_best(&ds, 9);
+        let b = train_best(&ds, 9);
+        assert_eq!(a.val_mape, b.val_mape);
+        assert_eq!(a.forest.predict_us(&[1000.0, 4.0]), b.forest.predict_us(&[1000.0, 4.0]));
+    }
+
+    #[test]
+    #[should_panic(expected = "dataset too small")]
+    fn tiny_dataset_rejected() {
+        let ds = synthetic_dataset(3, 5);
+        train_best(&ds, 1);
+    }
+
+    #[test]
+    fn candidates_cover_both_families() {
+        let cs = default_candidates();
+        assert!(cs.iter().any(|c| matches!(c, Candidate::Rf(_))));
+        assert!(cs.iter().any(|c| matches!(c, Candidate::Gbt(_))));
+    }
+}

@@ -1,0 +1,195 @@
+//! FP16 tensor-core GEMM latency model with cuBLAS-style behaviours:
+//!
+//! - **kernel selection**: a small "heuristic table" picks a tile shape by
+//!   problem size class, producing step discontinuities exactly where real
+//!   cuBLAS switches kernels;
+//! - **tile quantization**: partially filled tiles waste MACs;
+//! - **wave quantization**: the tail wave of thread blocks underfills SMs;
+//! - **K-efficiency**: short accumulation depth cannot hide MMA latency;
+//! - **memory bound**: small/narrow GEMMs flip to bandwidth-limited;
+//! - **launch overhead**: constant per-kernel cost.
+//!
+//! Batched GEMMs (attention score/value products) fold the batch dimension
+//! into wave occupancy.
+
+use crate::config::platform::GpuSpec;
+
+/// Problem shape for C[m,n] += A[m,k] * B[k,n], repeated `batch` times.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    pub batch: usize,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, k: usize, n: usize) -> GemmShape {
+        GemmShape { batch: 1, m, k, n }
+    }
+
+    pub fn batched(batch: usize, m: usize, k: usize, n: usize) -> GemmShape {
+        GemmShape { batch, m, k, n }
+    }
+
+    pub fn flops(&self) -> f64 {
+        2.0 * self.batch as f64 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// FP16 bytes moved (A + B + C), assuming no cache reuse across tiles.
+    pub fn bytes(&self) -> f64 {
+        2.0 * self.batch as f64
+            * (self.m as f64 * self.k as f64
+                + self.k as f64 * self.n as f64
+                + self.m as f64 * self.n as f64)
+    }
+}
+
+/// Tile candidates in (tile_m, tile_n, base_efficiency) form. Mirrors the
+/// flavor of the cuBLAS kernel zoo: bigger tiles amortize better but only
+/// map onto big problems.
+const TILES: [(usize, usize, f64); 4] = [
+    // base efficiencies calibrated so end-to-end transformer training
+    // lands at the ~40-50% MFU real GPT-NeoX runs achieve, not the
+    // ~70% of an isolated cuBLAS peak benchmark
+    (256, 128, 0.62),
+    (128, 128, 0.55),
+    (128, 64, 0.47),
+    (64, 64, 0.36),
+];
+
+/// The auto-tuner: picks the tile maximizing modeled throughput, i.e. the
+/// argmin of the compute-time estimate. Returns (tile_m, tile_n, base_eff).
+pub fn select_tile(shape: &GemmShape, gpu: &GpuSpec) -> (usize, usize, f64) {
+    let mut best = TILES[TILES.len() - 1];
+    let mut best_t = f64::INFINITY;
+    for &(tm, tn, eff) in &TILES {
+        let t = compute_time_with_tile(shape, gpu, tm, tn, eff);
+        if t < best_t {
+            best_t = t;
+            best = (tm, tn, eff);
+        }
+    }
+    best
+}
+
+fn compute_time_with_tile(shape: &GemmShape, gpu: &GpuSpec, tm: usize, tn: usize, base_eff: f64) -> f64 {
+    let tiles_m = shape.m.div_ceil(tm);
+    let tiles_n = shape.n.div_ceil(tn);
+    let blocks = shape.batch * tiles_m * tiles_n;
+
+    // tile quantization: fraction of MACs that land inside the matrix
+    let util_tile = (shape.m as f64 * shape.n as f64)
+        / ((tiles_m * tm) as f64 * (tiles_n * tn) as f64);
+
+    // wave quantization: the tail wave underfills the SM array
+    let waves = blocks.div_ceil(gpu.sms);
+    let util_wave = blocks as f64 / (waves * gpu.sms) as f64;
+
+    // K-efficiency: short accumulation can't hide MMA pipeline latency
+    let k_eff = (shape.k as f64 / (shape.k as f64 + 192.0)).min(1.0);
+
+    let eff = base_eff * util_tile * util_wave * (0.55 + 0.45 * k_eff);
+    shape.flops() / (gpu.peak_tflops_fp16 * 1e12 * eff.max(1e-3)) * 1e6 // µs
+}
+
+/// Deterministic GEMM latency in µs (jitter-free).
+pub fn gemm_time_us(shape: &GemmShape, gpu: &GpuSpec) -> f64 {
+    if shape.flops() == 0.0 {
+        return gpu.launch_us;
+    }
+    let (tm, tn, eff) = select_tile(shape, gpu);
+    let t_compute = compute_time_with_tile(shape, gpu, tm, tn, eff);
+    // memory floor: streaming A/B/C at HBM bandwidth
+    let t_mem = shape.bytes() / (gpu.mem_bw_gbs * 1e9) * 1e6;
+    t_compute.max(t_mem) + gpu.launch_us
+}
+
+/// Achieved TFLOP/s for reporting/roofline checks.
+pub fn achieved_tflops(shape: &GemmShape, gpu: &GpuSpec) -> f64 {
+    shape.flops() / (gemm_time_us(shape, gpu) * 1e-6) / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::platform::Platform;
+
+    fn a100() -> GpuSpec {
+        Platform::perlmutter().gpu
+    }
+
+    #[test]
+    fn monotone_in_flops_roughly() {
+        let g = a100();
+        let small = gemm_time_us(&GemmShape::new(1024, 1024, 1024), &g);
+        let large = gemm_time_us(&GemmShape::new(4096, 4096, 4096), &g);
+        assert!(large > 10.0 * small, "small={small} large={large}");
+    }
+
+    #[test]
+    fn large_gemm_near_roofline() {
+        let g = a100();
+        let t = achieved_tflops(&GemmShape::new(8192, 8192, 8192), &g);
+        // big square fp16 GEMMs: 40-65% of peak (training-calibrated)
+        assert!(t > 0.40 * g.peak_tflops_fp16, "achieved {t}");
+        assert!(t < 0.70 * g.peak_tflops_fp16, "achieved {t}");
+    }
+
+    #[test]
+    fn tiny_gemm_is_launch_dominated() {
+        let g = a100();
+        let t = gemm_time_us(&GemmShape::new(32, 32, 32), &g);
+        assert!(t < 2.5 * g.launch_us, "{t}");
+    }
+
+    #[test]
+    fn skinny_gemm_is_memory_bound() {
+        let g = a100();
+        let shape = GemmShape::new(8192, 64, 8192); // low arithmetic intensity
+        let t_us = gemm_time_us(&shape, &g);
+        let t_mem_us = shape.bytes() / (g.mem_bw_gbs * 1e9) * 1e6;
+        assert!((t_us - g.launch_us - t_mem_us).abs() / t_mem_us < 0.05);
+    }
+
+    #[test]
+    fn kernel_selection_creates_steps() {
+        // Scanning m across a tile boundary must produce a visible
+        // efficiency discontinuity (the phenomenon regressors must learn).
+        let g = a100();
+        let per_row = |m: usize| {
+            gemm_time_us(&GemmShape::new(m, 4096, 4096), &g) / m as f64
+        };
+        // per-row cost right above a 128 boundary jumps vs right below
+        let below = per_row(1280);
+        let above = per_row(1281);
+        assert!(above > below, "below={below} above={above}");
+    }
+
+    #[test]
+    fn batched_gemm_fills_waves() {
+        let g = a100();
+        // One l=2048 attention head-product vs 64 of them: the batch fills
+        // the machine, so per-instance time drops.
+        let single = gemm_time_us(&GemmShape::batched(1, 2048, 96, 2048), &g);
+        let batch = gemm_time_us(&GemmShape::batched(64, 2048, 96, 2048), &g);
+        assert!(batch < 64.0 * single, "batch={batch} single={single}");
+    }
+
+    #[test]
+    fn gh200_faster_than_a100() {
+        let h = Platform::vista().gpu;
+        let g = a100();
+        let s = GemmShape::new(4096, 4096, 4096);
+        assert!(gemm_time_us(&s, &h) < gemm_time_us(&s, &g));
+    }
+
+    #[test]
+    fn tile_selection_prefers_big_tiles_for_big_problems() {
+        let g = a100();
+        let (tm, _, _) = select_tile(&GemmShape::new(8192, 8192, 8192), &g);
+        assert!(tm >= 128);
+        let (tm2, tn2, _) = select_tile(&GemmShape::new(64, 64, 4096), &g);
+        assert!(tm2 <= 128 && tn2 <= 128);
+    }
+}

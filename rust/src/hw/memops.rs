@@ -1,0 +1,170 @@
+//! Memory-bandwidth-bound operator latency model (normalization,
+//! activations, softmax variants, RoPE, embedding gathers, optimizer
+//! updates, elementwise glue).
+//!
+//! Behaviour reproduced from real GPUs:
+//! - **cache-regime cliff**: working sets that fit L2 stream at L2
+//!   bandwidth; larger ones fall to HBM bandwidth, with a smooth-but-fast
+//!   transition (regressors see a bend, not an analytic line);
+//! - **pass count**: unfused ops read/write the tensor multiple times
+//!   (e.g. naive softmax = 5 passes; fused = ~2);
+//! - **reduction overhead**: row reductions (norms, softmax) add a
+//!   latency term per row wave;
+//! - **launch overhead** per kernel.
+
+use crate::config::platform::GpuSpec;
+
+/// Class of memory-bound operator; `passes()` encodes the effective number
+/// of full-tensor traversals (reads + writes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemOpKind {
+    /// LayerNorm: mean+var reduction, normalize, affine (2 read + 1 write).
+    LayerNorm,
+    /// RMSNorm: single reduction (cheaper than LayerNorm).
+    RmsNorm,
+    /// Naive softmax: max, sub-exp, sum, div — 5 effective passes.
+    Softmax,
+    /// Fused softmax: one read, one write + registers.
+    FusedSoftmax,
+    /// Additive attention mask fill.
+    Fillmask,
+    /// Rotary position embedding (read, rotate, write).
+    Rope,
+    /// GeLU / elementwise activation ("Glue" in Table I).
+    Gelu,
+    /// Embedding-table gather (row gather + write).
+    EmbeddingGather,
+    /// Cross-entropy over sharded logits (read logits, reduce).
+    CrossEntropy,
+    /// FusedAdam parameter update (params+grads+2 moments r/w).
+    AdamUpdate,
+    /// Generic elementwise copy/add.
+    Elementwise,
+}
+
+impl MemOpKind {
+    /// Effective full-tensor traversals (empirical multipliers).
+    pub fn passes(&self) -> f64 {
+        match self {
+            MemOpKind::LayerNorm => 3.0,
+            MemOpKind::RmsNorm => 2.5,
+            MemOpKind::Softmax => 5.0,
+            MemOpKind::FusedSoftmax => 2.0,
+            MemOpKind::Fillmask => 2.0,
+            MemOpKind::Rope => 2.2,
+            MemOpKind::Gelu => 2.0,
+            MemOpKind::EmbeddingGather => 2.0,
+            MemOpKind::CrossEntropy => 2.5,
+            MemOpKind::AdamUpdate => 7.0, // p, g, m, v read + p, m, v write
+            MemOpKind::Elementwise => 2.0,
+        }
+    }
+
+    /// Does the op perform a row reduction (extra latency per row)?
+    pub fn has_reduction(&self) -> bool {
+        matches!(
+            self,
+            MemOpKind::LayerNorm
+                | MemOpKind::RmsNorm
+                | MemOpKind::Softmax
+                | MemOpKind::FusedSoftmax
+                | MemOpKind::CrossEntropy
+        )
+    }
+}
+
+/// Effective streaming bandwidth for a working set of `bytes`:
+/// L2-resident sets get `l2_bw`, huge sets get HBM, with a logistic
+/// transition around the L2 capacity (sharp enough to look like a cliff
+/// to a coarse analytical model, learnable by a tree).
+pub fn effective_bw_gbs(bytes: f64, gpu: &GpuSpec) -> f64 {
+    let l2_bytes = gpu.l2_mib * 1024.0 * 1024.0;
+    // position of working set relative to L2, log-scaled
+    let x = (bytes / l2_bytes).ln();
+    let sig = 1.0 / (1.0 + (-1.6 * x).exp()); // 0 when << L2, 1 when >> L2
+    gpu.l2_bw_gbs * (1.0 - sig) + gpu.mem_bw_gbs * sig
+}
+
+/// Deterministic latency (µs) for a memory-bound op over `elems` elements
+/// of `elem_bytes` (2 for fp16, 4 for fp32), with `rows` reduction rows.
+pub fn membound_time_us(kind: MemOpKind, elems: f64, elem_bytes: f64, rows: f64, gpu: &GpuSpec) -> f64 {
+    let tensor_bytes = elems * elem_bytes;
+    let moved = tensor_bytes * kind.passes();
+    let bw = effective_bw_gbs(tensor_bytes, gpu);
+    let t_stream = moved / (bw * 1e9) * 1e6;
+    let t_reduce = if kind.has_reduction() {
+        // one extra warp-synchronous reduction wave per ~SM batch of rows
+        let row_waves = (rows / (gpu.sms as f64 * 32.0)).ceil();
+        row_waves * 0.8
+    } else {
+        0.0
+    };
+    t_stream + t_reduce + gpu.launch_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::platform::Platform;
+
+    fn a100() -> crate::config::platform::GpuSpec {
+        Platform::perlmutter().gpu
+    }
+
+    #[test]
+    fn bandwidth_regimes() {
+        let g = a100();
+        let small = effective_bw_gbs(1024.0 * 1024.0, &g); // 1 MiB << L2
+        let large = effective_bw_gbs(4.0 * 1024.0 * 1024.0 * 1024.0, &g); // 4 GiB
+        assert!(small > 0.85 * g.l2_bw_gbs, "small-set bw {small}");
+        assert!((large - g.mem_bw_gbs).abs() < 0.1 * g.mem_bw_gbs, "large-set bw {large}");
+        assert!(small > large);
+    }
+
+    #[test]
+    fn softmax_slower_than_fused() {
+        let g = a100();
+        let elems = 4.0 * 16.0 * 2048.0 * 2048.0;
+        let naive = membound_time_us(MemOpKind::Softmax, elems, 2.0, 4.0 * 16.0 * 2048.0, &g);
+        let fused = membound_time_us(MemOpKind::FusedSoftmax, elems, 2.0, 4.0 * 16.0 * 2048.0, &g);
+        assert!(naive > 2.0 * fused, "naive {naive} fused {fused}");
+    }
+
+    #[test]
+    fn layernorm_vs_rmsnorm() {
+        let g = a100();
+        let elems = 4.0 * 2048.0 * 6144.0;
+        let ln = membound_time_us(MemOpKind::LayerNorm, elems, 2.0, 4.0 * 2048.0, &g);
+        let rms = membound_time_us(MemOpKind::RmsNorm, elems, 2.0, 4.0 * 2048.0, &g);
+        assert!(ln > rms);
+    }
+
+    #[test]
+    fn scaling_superlinear_across_l2_cliff() {
+        // Crossing the L2 boundary makes per-byte cost jump: doubling a
+        // working set that straddles the cliff more than doubles latency.
+        let g = a100();
+        let l2_elems = g.l2_mib * 1024.0 * 1024.0 / 2.0;
+        let t1 = membound_time_us(MemOpKind::Elementwise, l2_elems * 0.5, 2.0, 0.0, &g);
+        let t2 = membound_time_us(MemOpKind::Elementwise, l2_elems * 8.0, 2.0, 0.0, &g);
+        let per_byte1 = (t1 - g.launch_us) / (l2_elems * 0.5);
+        let per_byte2 = (t2 - g.launch_us) / (l2_elems * 8.0);
+        assert!(per_byte2 > 1.5 * per_byte1, "{per_byte1} vs {per_byte2}");
+    }
+
+    #[test]
+    fn adam_dominated_by_state_traffic() {
+        let g = a100();
+        let params = 300e6; // one pipeline stage of GPT-20B / mp
+        let t = membound_time_us(MemOpKind::AdamUpdate, params, 4.0, 0.0, &g);
+        // 300M params * 4B * 7 passes / 1.5TB/s ≈ 5.6ms
+        assert!((3_000.0..12_000.0).contains(&t), "{t}");
+    }
+
+    #[test]
+    fn launch_floor_for_tiny_ops() {
+        let g = a100();
+        let t = membound_time_us(MemOpKind::Elementwise, 128.0, 2.0, 0.0, &g);
+        assert!(t >= g.launch_us && t < g.launch_us + 1.0);
+    }
+}

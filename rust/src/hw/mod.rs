@@ -1,0 +1,15 @@
+//! GPU compute-latency models: the deterministic "structure" of the
+//! simulated testbeds (jitter is applied on top by `sim`).
+//!
+//! These models intentionally exhibit the phenomena the paper argues make
+//! purely analytical prediction hard (Challenge 1-2): discontinuous
+//! auto-tuned kernel selection, tile/wave quantization, and cache-regime
+//! bandwidth cliffs. The *regressors* must learn these surfaces from
+//! samples; the closed-form `baselines::analytical` model deliberately
+//! ignores them — reproducing the paper's "who wins" comparison.
+
+pub mod gemm;
+pub mod memops;
+
+pub use gemm::{gemm_time_us, GemmShape};
+pub use memops::{membound_time_us, MemOpKind};

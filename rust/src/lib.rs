@@ -1,0 +1,31 @@
+//! # FGPM — Fine-Grained GPU Performance Modeling for distributed LLM training
+//!
+//! Reproduction of "Efficient Fine-Grained GPU Performance Modeling for
+//! Distributed Deep Learning of LLM" (CS.DC 2025) as a three-layer
+//! rust + JAX + Pallas stack. See DESIGN.md for the system inventory and
+//! the per-experiment index.
+//!
+//! Layer map:
+//! - L3 (this crate): cluster simulator substrate, micro-benchmark
+//!   collection, tree-ensemble training, the end-to-end predictor, and a
+//!   prediction service with dynamic batching over the AOT executables.
+//! - L2/L1 (python/, build-time only): Pallas forest-inference kernel and
+//!   the eq.(7) timeline graph, AOT-lowered to `artifacts/*.hlo.txt`.
+//! - runtime: PJRT CPU client loading the HLO-text artifacts.
+
+pub mod cli;
+pub mod util;
+pub mod config;
+pub mod hw;
+pub mod net;
+pub mod ops;
+pub mod sim;
+pub mod pipeline;
+pub mod trainrun;
+pub mod sampling;
+pub mod forest;
+pub mod predictor;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;

@@ -1,0 +1,263 @@
+//! Deterministic collective-communication latency models.
+//!
+//! Mirrors NCCL's hierarchical strategy on multi-GPU nodes:
+//! reduce-scatter inside the node over NVLink, ring all-reduce across
+//! nodes on the 1/gpn shard, then intra-node all-gather — i.e. Perlmutter
+//! "pre-reduces" locally while Vista (1 GPU/node) pushes every byte over
+//! InfiniBand, the asymmetry behind Table VIII's stability gap.
+//!
+//! A latency/bandwidth protocol switch at small message sizes produces the
+//! step behaviour real NCCL shows when it flips from tree (latency-optimal)
+//! to ring (bandwidth-optimal) algorithms.
+
+use crate::config::platform::Platform;
+
+/// Geometry of one communication group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CommGeom {
+    /// Nodes that hold at least one member.
+    pub nodes: usize,
+    /// Members per participating node.
+    pub gpus_per_node: usize,
+}
+
+impl CommGeom {
+    pub fn new(nodes: usize, gpus_per_node: usize) -> CommGeom {
+        assert!(nodes >= 1 && gpus_per_node >= 1);
+        CommGeom { nodes, gpus_per_node }
+    }
+
+    pub fn world(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn is_intra_node(&self) -> bool {
+        self.nodes == 1
+    }
+}
+
+/// NCCL flips from latency-optimal (tree) to bandwidth-optimal (ring)
+/// around hundreds of KiB; below the switch, time is dominated by hop
+/// latency rather than volume.
+const PROTO_SWITCH_BYTES: f64 = 512.0 * 1024.0;
+
+/// Inter-node collectives do NOT reach wire speed: protocol overheads,
+/// rendezvous, and chunking mean small/medium transfers see a fraction of
+/// the NIC bandwidth, ramping toward ~65% for very large volumes. This is
+/// the empirical behaviour that makes cross-node tensor-parallelism
+/// (mp spanning nodes) so expensive on real systems — the effect behind
+/// GPT-20B(4-8-4) being 2.5x slower than (4-4-8) on Perlmutter despite
+/// using the same GPUs (paper Table VIII).
+pub fn inter_efficiency(bytes_on_wire: f64) -> f64 {
+    const MIN_EFF: f64 = 0.05;
+    const MAX_EFF: f64 = 0.65;
+    const RAMP_BYTES: f64 = 150.0e6;
+    MIN_EFF + (MAX_EFF - MIN_EFF) * bytes_on_wire / (bytes_on_wire + RAMP_BYTES)
+}
+
+fn ring_allreduce_us(bytes: f64, members: usize, bw_gbs: f64, lat_us: f64, inter: bool) -> f64 {
+    if members <= 1 {
+        return 0.0;
+    }
+    let p = members as f64;
+    let volume = 2.0 * (p - 1.0) / p * bytes; // reduce-scatter + all-gather
+    let steps = 2.0 * (p - 1.0);
+    let eff = if inter { inter_efficiency(volume) } else { 1.0 };
+    volume / (bw_gbs * eff * 1e9) * 1e6 + steps * lat_us
+}
+
+fn tree_allreduce_us(bytes: f64, members: usize, bw_gbs: f64, lat_us: f64) -> f64 {
+    if members <= 1 {
+        return 0.0;
+    }
+    let depth = (members as f64).log2().ceil();
+    2.0 * depth * (lat_us + bytes / (bw_gbs * 1e9) * 1e6)
+}
+
+fn allreduce_stage_us(bytes: f64, members: usize, bw_gbs: f64, lat_us: f64, inter: bool) -> f64 {
+    if members <= 1 {
+        return 0.0;
+    }
+    if bytes < PROTO_SWITCH_BYTES {
+        tree_allreduce_us(bytes, members, bw_gbs, lat_us)
+            .min(ring_allreduce_us(bytes, members, bw_gbs, lat_us, inter))
+    } else {
+        ring_allreduce_us(bytes, members, bw_gbs, lat_us, inter)
+    }
+}
+
+/// Hierarchical all-reduce over `geom` on `platform`, in µs.
+pub fn allreduce_time_us(bytes: f64, geom: CommGeom, platform: &Platform) -> f64 {
+    if geom.world() <= 1 {
+        return 0.0;
+    }
+    let gpn = geom.gpus_per_node;
+    if geom.nodes == 1 {
+        return allreduce_stage_us(bytes, gpn, platform.intra_bw_gbs, platform.intra_lat_us, false)
+            + platform.gpu.launch_us;
+    }
+    if gpn == 1 {
+        // pure inter-node ring (the Vista regime)
+        return allreduce_stage_us(
+            bytes,
+            geom.nodes,
+            platform.inter_bw_gbs,
+            platform.inter_lat_us,
+            true,
+        ) + platform.gpu.launch_us;
+    }
+    // hierarchical: intra reduce-scatter, inter all-reduce on the shard,
+    // intra all-gather — the shard is bytes/gpn per node leader.
+    let p = gpn as f64;
+    let rs = (p - 1.0) / p * bytes / (platform.intra_bw_gbs * 1e9) * 1e6
+        + (p - 1.0) * platform.intra_lat_us;
+    let inter = allreduce_stage_us(
+        bytes / p,
+        geom.nodes,
+        platform.inter_bw_gbs,
+        platform.inter_lat_us,
+        true,
+    );
+    let ag = (p - 1.0) / p * bytes / (platform.intra_bw_gbs * 1e9) * 1e6
+        + (p - 1.0) * platform.intra_lat_us;
+    rs + inter + ag + platform.gpu.launch_us
+}
+
+/// All-gather: one-directional ring over the same hierarchy.
+pub fn allgather_time_us(bytes_out: f64, geom: CommGeom, platform: &Platform) -> f64 {
+    if geom.world() <= 1 {
+        return 0.0;
+    }
+    let p = geom.world() as f64;
+    let volume = (p - 1.0) / p * bytes_out;
+    let (bw, lat, steps, eff) = if geom.nodes == 1 {
+        (platform.intra_bw_gbs, platform.intra_lat_us, geom.gpus_per_node - 1, 1.0)
+    } else {
+        // inter-node traffic dominates; intra hops are comparatively free
+        (
+            platform.inter_bw_gbs,
+            platform.inter_lat_us,
+            geom.nodes - 1,
+            inter_efficiency(volume),
+        )
+    };
+    volume / (bw * eff * 1e9) * 1e6 + steps as f64 * lat + platform.gpu.launch_us
+}
+
+/// Point-to-point (pipeline boundary) transfer. Single-stream RDMA ramps
+/// faster than collectives (no ring synchronization), so the efficiency
+/// knee sits much lower.
+pub fn p2p_time_us(bytes: f64, inter_node: bool, platform: &Platform) -> f64 {
+    let (bw, lat, eff) = if inter_node {
+        let eff = 0.15 + 0.75 * bytes / (bytes + 8.0e6);
+        (platform.inter_bw_gbs, platform.inter_lat_us, eff)
+    } else {
+        (platform.intra_bw_gbs, platform.intra_lat_us, 1.0)
+    };
+    bytes / (bw * eff * 1e9) * 1e6 + lat + platform.gpu.launch_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> Platform {
+        Platform::perlmutter()
+    }
+    fn v() -> Platform {
+        Platform::vista()
+    }
+
+    #[test]
+    fn single_member_is_free() {
+        assert_eq!(allreduce_time_us(1e9, CommGeom::new(1, 1), &p()), 0.0);
+        assert_eq!(allgather_time_us(1e9, CommGeom::new(1, 1), &p()), 0.0);
+    }
+
+    #[test]
+    fn intra_node_much_faster_than_inter() {
+        let bytes = 100e6;
+        let intra = allreduce_time_us(bytes, CommGeom::new(1, 4), &p());
+        let inter = allreduce_time_us(bytes, CommGeom::new(4, 1), &p());
+        assert!(inter > 4.0 * intra, "intra {intra} inter {inter}");
+    }
+
+    #[test]
+    fn hierarchical_prereduction_beats_flat_inter() {
+        // 8 GPUs on 2 Perlmutter nodes (4/node) vs 8 GPUs on 8 Vista nodes:
+        // the Perlmutter-style pre-reduction sends 4x less over the fabric.
+        let bytes = 200e6;
+        let hier = allreduce_time_us(bytes, CommGeom::new(2, 4), &p());
+        let flat = allreduce_time_us(bytes, CommGeom::new(8, 1), &p());
+        assert!(hier < flat, "hier {hier} flat {flat}");
+    }
+
+    #[test]
+    fn volume_scaling_superlinear_then_linear() {
+        // Medium volumes ride the inter-node efficiency ramp (sub-linear
+        // effective bandwidth => super-linear time in the 100->200MB
+        // band), converging to linear for huge volumes.
+        let g = CommGeom::new(4, 4);
+        let t1 = allreduce_time_us(100e6, g, &p());
+        let t2 = allreduce_time_us(200e6, g, &p());
+        let ratio = t2 / t1;
+        // doubling volume changes time by a non-trivial factor, but not
+        // exactly 2x: the efficiency ramp bends the curve
+        assert!((1.2..2.5).contains(&ratio), "medium ratio {ratio}");
+        assert!((ratio - 2.0).abs() > 0.05, "ramp should bend the curve: {ratio}");
+        let t4 = allreduce_time_us(4e9, g, &p());
+        let t8 = allreduce_time_us(8e9, g, &p());
+        let big_ratio = t8 / t4;
+        assert!((1.85..2.15).contains(&big_ratio), "large ratio {big_ratio}");
+    }
+
+    #[test]
+    fn inter_efficiency_ramps() {
+        assert!(inter_efficiency(1e5) < 0.1);
+        assert!(inter_efficiency(150e6) > 0.3);
+        assert!(inter_efficiency(100e9) > 0.6);
+        assert!(inter_efficiency(100e9) <= 0.65);
+    }
+
+    #[test]
+    fn small_message_latency_bound() {
+        // 4KiB over 8 nodes: time must be close to the tree-latency term,
+        // far from what the ring volume model alone would give.
+        let t = allreduce_time_us(4096.0, CommGeom::new(8, 1), &p());
+        let ring = ring_allreduce_us(4096.0, 8, p().inter_bw_gbs, p().inter_lat_us, true);
+        assert!(t < ring + p().gpu.launch_us + 1e-9);
+        assert!(t > 3.0 * p().inter_lat_us);
+    }
+
+    #[test]
+    fn protocol_switch_is_a_step() {
+        // crossing the proto switch produces a visible kink in d t/d bytes
+        let g = CommGeom::new(8, 1);
+        let t_lo = allreduce_time_us(PROTO_SWITCH_BYTES * 0.9, g, &p());
+        let t_hi = allreduce_time_us(PROTO_SWITCH_BYTES * 1.1, g, &p());
+        assert!(t_hi != t_lo);
+    }
+
+    #[test]
+    fn allgather_cheaper_than_allreduce() {
+        let g = CommGeom::new(4, 1);
+        let b = 50e6;
+        assert!(allgather_time_us(b, g, &p()) < allreduce_time_us(b, g, &p()));
+    }
+
+    #[test]
+    fn p2p_inter_vs_intra() {
+        let b = 25e6;
+        assert!(p2p_time_us(b, true, &p()) > p2p_time_us(b, false, &p()));
+    }
+
+    #[test]
+    fn vista_collective_slower_per_gpu_count_despite_faster_nic() {
+        // 16 GPUs: Perlmutter = 4 nodes x 4 (pre-reduction), Vista = 16
+        // nodes x 1 (all traffic on IB). Perlmutter wins on large volumes.
+        let bytes = 500e6;
+        let pt = allreduce_time_us(bytes, CommGeom::new(4, 4), &p());
+        let vt = allreduce_time_us(bytes, CommGeom::new(16, 1), &v());
+        assert!(pt < vt, "perlmutter {pt} vista {vt}");
+    }
+}

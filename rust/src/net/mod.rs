@@ -1,0 +1,6 @@
+//! Multi-tier interconnect model: hierarchical collectives (NCCL-style)
+//! and point-to-point transfers over NVLink / InfiniBand / Slingshot.
+
+pub mod collectives;
+
+pub use collectives::{allgather_time_us, allreduce_time_us, p2p_time_us, CommGeom};

@@ -1,0 +1,495 @@
+//! Constructors that turn (model, parallelism, platform) into concrete
+//! [`OpInstance`]s — the workload-representation feature vectors of
+//! Table I plus lowerings for the simulator — and assemble per-encoder /
+//! per-stage operator sequences.
+
+use crate::config::{ModelCfg, Norm, ParallelCfg, Platform};
+use crate::hw::{GemmShape, MemOpKind};
+use crate::net::CommGeom;
+use crate::ops::params::padded_vocab;
+use crate::ops::{Dir, LoweredOp, OpInstance, OpKind};
+
+/// Resolved per-GPU workload context shared by all operator builders.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    /// Micro-batch size b.
+    pub b: usize,
+    /// Sequence length l.
+    pub l: usize,
+    /// Hidden dim d.
+    pub d: usize,
+    /// Attention heads h (global; h/|mp| local).
+    pub h: usize,
+    /// Padded vocabulary (eqs 1-2).
+    pub v: usize,
+    /// Model-parallel degree |mp|.
+    pub mp: usize,
+    /// MP collective geometry on the target platform.
+    pub mp_geom: CommGeom,
+    /// DP collective geometry on the target platform.
+    pub dp_geom: CommGeom,
+    /// Data-parallel degree |dp|.
+    pub dp: usize,
+    /// Whether the PP stage boundary crosses nodes.
+    pub pp_inter_node: bool,
+}
+
+impl Workload {
+    pub fn new(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> Workload {
+        assert_eq!(model.h % par.mp, 0, "heads must divide mp");
+        assert_eq!(model.d % model.h, 0, "d must divide h");
+        let (mp_nodes, mp_gpn) = par.mp_group_geometry(platform);
+        let (dp_nodes, dp_gpn) = par.dp_group_geometry(platform);
+        Workload {
+            b: model.micro_batch,
+            l: model.l,
+            d: model.d,
+            h: model.h,
+            v: padded_vocab(model.vocab, par.mp),
+            mp: par.mp,
+            mp_geom: CommGeom::new(mp_nodes, mp_gpn),
+            dp_geom: CommGeom::new(dp_nodes, dp_gpn),
+            dp: par.dp,
+            pp_inter_node: par.pp_hop_is_inter_node(platform),
+        }
+    }
+
+    /// Synthetic workload for micro-benchmark sampling (no model preset).
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthetic(
+        b: usize,
+        l: usize,
+        d: usize,
+        h: usize,
+        v: usize,
+        mp: usize,
+        platform: &Platform,
+        dp: usize,
+    ) -> Workload {
+        let par = ParallelCfg::new(1, mp, dp.max(1));
+        let (mp_nodes, mp_gpn) = par.mp_group_geometry(platform);
+        let (dp_nodes, dp_gpn) = par.dp_group_geometry(platform);
+        Workload {
+            b,
+            l,
+            d,
+            h,
+            v: padded_vocab(v, mp),
+            mp,
+            mp_geom: CommGeom::new(mp_nodes, mp_gpn),
+            dp_geom: CommGeom::new(dp_nodes, dp_gpn),
+            dp: dp.max(1),
+            pp_inter_node: true,
+        }
+    }
+
+    pub fn bl(&self) -> usize {
+        self.b * self.l
+    }
+
+    pub fn heads_local(&self) -> usize {
+        self.h / self.mp
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d / self.h
+    }
+}
+
+const FP16: f64 = 2.0;
+
+fn gemm_fwd(shape: GemmShape) -> LoweredOp {
+    LoweredOp::Gemm(shape)
+}
+
+/// Backward of Y[m,n] = X[m,k] W[k,n]: dgrad dX = dY W^T (GEMM m x n x k)
+/// and wgrad dW = X^T dY (GEMM k x m x n), executed back-to-back.
+fn gemm_bwd(shape: GemmShape) -> LoweredOp {
+    LoweredOp::Seq(vec![
+        LoweredOp::Gemm(GemmShape { batch: shape.batch, m: shape.m, k: shape.n, n: shape.k }),
+        LoweredOp::Gemm(GemmShape { batch: shape.batch, m: shape.k, k: shape.m, n: shape.n }),
+    ])
+}
+
+fn mem(kind: MemOpKind, elems: f64, rows: f64, dir: Dir) -> LoweredOp {
+    // Backward elementwise/norm traffic ~1.5x (read act + read grad +
+    // write grad, plus recomputed statistics for norms).
+    let factor = match dir {
+        Dir::Fwd => 1.0,
+        Dir::Bwd => 1.5,
+    };
+    LoweredOp::Mem { kind, elems: elems * factor, elem_bytes: FP16, rows }
+}
+
+/// Build one compute operator instance (panics on comm kinds — those have
+/// dedicated builders below because they need extra context).
+pub fn compute_op(kind: OpKind, wl: &Workload, dir: Dir) -> OpInstance {
+    let b = wl.b as f64;
+    let l = wl.l as f64;
+    let d = wl.d as f64;
+    let hl = wl.heads_local() as f64;
+    let dh = wl.head_dim() as f64;
+    let bl = wl.bl() as f64;
+    let v_mp = (wl.v / wl.mp) as f64;
+    let mpf = wl.mp as f64;
+
+    let (features, lowered) = match kind {
+        OpKind::Embedding => (
+            vec![bl, v_mp, d],
+            mem(MemOpKind::EmbeddingGather, bl * d, 0.0, dir),
+        ),
+        OpKind::LayerNorm => (
+            vec![b, l, d],
+            mem(MemOpKind::LayerNorm, bl * d, bl, dir),
+        ),
+        OpKind::RmsNorm => (
+            vec![b, l, d],
+            mem(MemOpKind::RmsNorm, bl * d, bl, dir),
+        ),
+        OpKind::Linear1 => {
+            let s = GemmShape::new(wl.bl(), wl.d, 3 * wl.d / wl.mp);
+            (vec![bl, d, 3.0 * d / mpf], lower_gemm(s, dir))
+        }
+        OpKind::Rope => (
+            vec![b, l, hl, dh],
+            mem(MemOpKind::Rope, b * l * hl * dh, 0.0, dir),
+        ),
+        OpKind::QkT => {
+            let s = GemmShape::batched(wl.b * wl.heads_local(), wl.l, wl.head_dim(), wl.l);
+            (vec![b * hl, l, dh, l], lower_gemm(s, dir))
+        }
+        OpKind::Fillmask => (
+            // Table I lists [b, h/|mp|, l, d] — kept verbatim as the
+            // regressor input even though the mask acts on [.., l, l].
+            vec![b, hl, l, d],
+            mem(MemOpKind::Fillmask, b * hl * l * l, 0.0, dir),
+        ),
+        OpKind::Softmax => (
+            vec![b, hl, l, l],
+            mem(MemOpKind::Softmax, b * hl * l * l, b * hl * l, dir),
+        ),
+        OpKind::FusedSoftmax => (
+            vec![b * hl, l, l],
+            mem(MemOpKind::FusedSoftmax, b * hl * l * l, b * hl * l, dir),
+        ),
+        OpKind::AttnV => {
+            let s = GemmShape::batched(wl.b * wl.heads_local(), wl.l, wl.l, wl.head_dim());
+            (vec![b * hl, l, l, dh], lower_gemm(s, dir))
+        }
+        OpKind::FlashAttention => {
+            let flops = 4.0 * b * l * l * hl * dh;
+            let bytes = 4.0 * b * l * hl * dh * FP16; // q,k,v,o streamed once
+            let (flops, bytes) = match dir {
+                Dir::Fwd => (flops, bytes),
+                Dir::Bwd => (2.5 * flops, 1.5 * bytes), // recompute + dq,dk,dv
+            };
+            (vec![b, l, hl, dh], LoweredOp::Flash { flops, bytes })
+        }
+        OpKind::Linear2 => {
+            let s = GemmShape::new(wl.bl(), wl.d / wl.mp, wl.d);
+            (vec![bl, d / mpf, d], lower_gemm(s, dir))
+        }
+        OpKind::Linear3 => {
+            let s = GemmShape::new(wl.bl(), wl.d, 4 * wl.d / wl.mp);
+            (vec![bl, d, 4.0 * d / mpf], lower_gemm(s, dir))
+        }
+        OpKind::Glue => (
+            vec![b, l, 4.0 * d / mpf],
+            mem(MemOpKind::Gelu, bl * 4.0 * d / mpf, 0.0, dir),
+        ),
+        OpKind::Linear4 => {
+            let s = GemmShape::new(wl.bl(), 4 * wl.d / wl.mp, wl.d);
+            (vec![bl, 4.0 * d / mpf, d], lower_gemm(s, dir))
+        }
+        OpKind::FinalLinear => {
+            let s = GemmShape::new(wl.bl(), wl.d, wl.v / wl.mp);
+            (vec![bl, d, v_mp], lower_gemm(s, dir))
+        }
+        OpKind::ParallelCrossEntropy => (
+            vec![b, l, v_mp],
+            mem(MemOpKind::CrossEntropy, bl * v_mp, bl, dir),
+        ),
+        other => panic!("{other:?} is a communication/optimizer op; use its builder"),
+    };
+    OpInstance { kind, dir, features, lowered }
+}
+
+fn lower_gemm(shape: GemmShape, dir: Dir) -> LoweredOp {
+    match dir {
+        Dir::Fwd => gemm_fwd(shape),
+        Dir::Bwd => gemm_bwd(shape),
+    }
+}
+
+/// MP_All-reduce over activations/gradients: volume = b*l*d fp16 elements
+/// (features per Table I: [bld, |nodes|, |GPUs/node|]).
+pub fn mp_allreduce(wl: &Workload) -> OpInstance {
+    let bld = (wl.b * wl.l * wl.d) as f64;
+    OpInstance {
+        kind: OpKind::MpAllReduce,
+        dir: Dir::Fwd,
+        features: vec![bld, wl.mp_geom.nodes as f64, wl.mp_geom.gpus_per_node as f64],
+        lowered: LoweredOp::AllReduce { bytes: bld * FP16, geom: wl.mp_geom },
+    }
+}
+
+/// DP_All-reduce of `entries` fp16 gradient values.
+pub fn dp_allreduce(entries: f64, wl: &Workload) -> OpInstance {
+    OpInstance {
+        kind: OpKind::DpAllReduce,
+        dir: Dir::Fwd,
+        features: vec![entries, wl.dp_geom.nodes as f64, wl.dp_geom.gpus_per_node as f64],
+        lowered: LoweredOp::AllReduce { bytes: entries * FP16, geom: wl.dp_geom },
+    }
+}
+
+/// DP_All-gather of `entries` fp16 parameter values (ZeRO-1 update path).
+pub fn dp_allgather(entries: f64, wl: &Workload) -> OpInstance {
+    OpInstance {
+        kind: OpKind::DpAllGather,
+        dir: Dir::Fwd,
+        features: vec![entries, wl.dp_geom.nodes as f64, wl.dp_geom.gpus_per_node as f64],
+        lowered: LoweredOp::AllGather { bytes_out: entries * FP16, geom: wl.dp_geom },
+    }
+}
+
+/// PP_P2P boundary transfer: bld/|mp| fp16 elements (Megatron
+/// scatter-gather optimization), billed to the sender stage.
+pub fn pp_p2p(wl: &Workload) -> OpInstance {
+    let elems = (wl.b * wl.l * wl.d) as f64 / wl.mp as f64;
+    OpInstance {
+        kind: OpKind::PpP2p,
+        dir: Dir::Fwd,
+        features: vec![
+            elems,
+            if wl.pp_inter_node { 2.0 } else { 1.0 },
+            wl.mp_geom.gpus_per_node as f64,
+        ],
+        lowered: LoweredOp::P2p { bytes: elems * FP16, inter_node: wl.pp_inter_node },
+    }
+}
+
+/// FusedAdam update over `dim` local parameters
+/// (features per Table I: [|mp|, dim, |encoders|]).
+pub fn optimizer(dim: f64, encoders: usize, wl: &Workload) -> OpInstance {
+    OpInstance {
+        kind: OpKind::Optimizer,
+        dir: Dir::Fwd,
+        features: vec![wl.mp as f64, dim, encoders as f64],
+        // fp32 master weights + moments: 4-byte elements
+        lowered: LoweredOp::Mem { kind: MemOpKind::AdamUpdate, elems: dim, elem_bytes: 4.0, rows: 0.0 },
+    }
+}
+
+fn norm_op(model: &ModelCfg, wl: &Workload, dir: Dir) -> OpInstance {
+    match model.norm {
+        Norm::Layer => compute_op(OpKind::LayerNorm, wl, dir),
+        Norm::Rms => compute_op(OpKind::RmsNorm, wl, dir),
+    }
+}
+
+/// The operator sequence of ONE encoder block in one direction, including
+/// its MP all-reduce synchronizations (Table IV's Encoder_fwd/bwd Syncs).
+pub fn encoder_ops(model: &ModelCfg, wl: &Workload, dir: Dir) -> Vec<OpInstance> {
+    let mut ops = Vec::new();
+    ops.push(norm_op(model, wl, dir));
+    ops.push(compute_op(OpKind::Linear1, wl, dir));
+    ops.push(compute_op(OpKind::Rope, wl, dir));
+    if model.flash_attention {
+        ops.push(compute_op(OpKind::FlashAttention, wl, dir));
+    } else {
+        ops.push(compute_op(OpKind::QkT, wl, dir));
+        if model.fused_softmax {
+            ops.push(compute_op(OpKind::FusedSoftmax, wl, dir));
+        } else {
+            ops.push(compute_op(OpKind::Fillmask, wl, dir));
+            ops.push(compute_op(OpKind::Softmax, wl, dir));
+        }
+        ops.push(compute_op(OpKind::AttnV, wl, dir));
+    }
+    ops.push(compute_op(OpKind::Linear2, wl, dir));
+    ops.push(norm_op(model, wl, dir));
+    ops.push(compute_op(OpKind::Linear3, wl, dir));
+    ops.push(compute_op(OpKind::Glue, wl, dir));
+    ops.push(compute_op(OpKind::Linear4, wl, dir));
+    let syncs = match dir {
+        Dir::Fwd => model.encoder_fwd_syncs,
+        Dir::Bwd => model.encoder_bwd_syncs,
+    };
+    for _ in 0..syncs {
+        ops.push(mp_allreduce(wl));
+    }
+    ops
+}
+
+/// Blocks before the encoder stack on the FIRST stage (EmbeddingPipe +
+/// Pre-Transformer in GPT-NeoX terms).
+pub fn pre_encoder_ops(model: &ModelCfg, wl: &Workload, dir: Dir) -> Vec<OpInstance> {
+    let _ = model;
+    vec![compute_op(OpKind::Embedding, wl, dir)]
+}
+
+/// Blocks after the encoder stack on the LAST stage (Post-Transformer +
+/// NormPipe + ParallelLinearPipe + loss).
+pub fn post_encoder_ops(model: &ModelCfg, wl: &Workload, dir: Dir) -> Vec<OpInstance> {
+    vec![
+        norm_op(model, wl, dir),
+        compute_op(OpKind::FinalLinear, wl, dir),
+        compute_op(OpKind::ParallelCrossEntropy, wl, dir),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl_gpt() -> (ModelCfg, Workload) {
+        let m = ModelCfg::gpt20b();
+        let par = ParallelCfg::new(4, 4, 8);
+        let p = Platform::perlmutter();
+        let w = Workload::new(&m, &par, &p);
+        (m, w)
+    }
+
+    #[test]
+    fn workload_resolves_geometry() {
+        let (_, w) = wl_gpt();
+        assert_eq!(w.v, 50688);
+        assert_eq!(w.heads_local(), 16);
+        assert_eq!(w.head_dim(), 96);
+        assert_eq!(w.mp_geom, CommGeom::new(1, 4)); // mp=4 fits one node
+        assert_eq!(w.dp_geom, CommGeom::new(8, 1)); // dp members across nodes
+    }
+
+    #[test]
+    fn linear1_features_match_table_i() {
+        let (_, w) = wl_gpt();
+        let op = compute_op(OpKind::Linear1, &w, Dir::Fwd);
+        // [bl, d, 3d/|mp|] = [8192, 6144, 4608]
+        assert_eq!(op.features, vec![8192.0, 6144.0, 4608.0]);
+        match op.lowered {
+            LoweredOp::Gemm(s) => assert_eq!((s.m, s.k, s.n), (8192, 6144, 4608)),
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn qkt_features_match_table_i() {
+        let (_, w) = wl_gpt();
+        let op = compute_op(OpKind::QkT, &w, Dir::Fwd);
+        // [b(h/|mp|), l, d/h, l] = [64, 2048, 96, 2048]
+        assert_eq!(op.features, vec![64.0, 2048.0, 96.0, 2048.0]);
+    }
+
+    #[test]
+    fn bwd_gemm_is_two_gemms_same_flops() {
+        let (_, w) = wl_gpt();
+        let fwd = compute_op(OpKind::Linear3, &w, Dir::Fwd);
+        let bwd = compute_op(OpKind::Linear3, &w, Dir::Bwd);
+        let f = match fwd.lowered {
+            LoweredOp::Gemm(s) => s.flops(),
+            _ => unreachable!(),
+        };
+        match bwd.lowered {
+            LoweredOp::Seq(v) => {
+                assert_eq!(v.len(), 2);
+                let total: f64 = v
+                    .iter()
+                    .map(|o| match o {
+                        LoweredOp::Gemm(s) => s.flops(),
+                        _ => 0.0,
+                    })
+                    .sum();
+                assert!((total - 2.0 * f).abs() / f < 1e-9);
+            }
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn encoder_sequence_gpt20b() {
+        let (m, w) = wl_gpt();
+        let fwd = encoder_ops(&m, &w, Dir::Fwd);
+        let kinds: Vec<_> = fwd.iter().map(|o| o.kind).collect();
+        // fused softmax path, 1 fwd sync
+        assert_eq!(
+            kinds,
+            vec![
+                OpKind::LayerNorm,
+                OpKind::Linear1,
+                OpKind::Rope,
+                OpKind::QkT,
+                OpKind::FusedSoftmax,
+                OpKind::AttnV,
+                OpKind::Linear2,
+                OpKind::LayerNorm,
+                OpKind::Linear3,
+                OpKind::Glue,
+                OpKind::Linear4,
+                OpKind::MpAllReduce,
+            ]
+        );
+        let bwd = encoder_ops(&m, &w, Dir::Bwd);
+        assert_eq!(
+            bwd.iter().filter(|o| o.kind == OpKind::MpAllReduce).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn llemma_uses_flash_and_rms() {
+        let m = ModelCfg::llemma7b();
+        let par = ParallelCfg::new(4, 2, 2);
+        let p = Platform::perlmutter();
+        let w = Workload::new(&m, &par, &p);
+        let kinds: Vec<_> = encoder_ops(&m, &w, Dir::Fwd).iter().map(|o| o.kind).collect();
+        assert!(kinds.contains(&OpKind::FlashAttention));
+        assert!(kinds.contains(&OpKind::RmsNorm));
+        assert!(!kinds.contains(&OpKind::QkT));
+        assert!(!kinds.contains(&OpKind::Softmax));
+    }
+
+    #[test]
+    fn unfused_path_has_fillmask_softmax() {
+        let mut m = ModelCfg::gpt20b();
+        m.fused_softmax = false;
+        let par = ParallelCfg::new(4, 4, 8);
+        let w = Workload::new(&m, &par, &Platform::perlmutter());
+        let kinds: Vec<_> = encoder_ops(&m, &w, Dir::Fwd).iter().map(|o| o.kind).collect();
+        assert!(kinds.contains(&OpKind::Fillmask));
+        assert!(kinds.contains(&OpKind::Softmax));
+        assert!(!kinds.contains(&OpKind::FusedSoftmax));
+    }
+
+    #[test]
+    fn comm_builders_feature_shapes() {
+        let (_, w) = wl_gpt();
+        let ar = mp_allreduce(&w);
+        assert_eq!(ar.features.len(), 3);
+        assert_eq!(ar.features[0], (4 * 2048 * 6144) as f64);
+        let p2p = pp_p2p(&w);
+        assert_eq!(p2p.features[0], (4 * 2048 * 6144 / 4) as f64);
+        let opt = optimizer(1e8, 11, &w);
+        assert_eq!(opt.features, vec![4.0, 1e8, 11.0]);
+    }
+
+    #[test]
+    fn vista_mp_allreduce_is_inter_node() {
+        let m = ModelCfg::gpt20b();
+        let par = ParallelCfg::new(4, 8, 4);
+        let w = Workload::new(&m, &par, &Platform::vista());
+        let ar = mp_allreduce(&w);
+        assert!(ar.lowered.is_inter_node());
+    }
+
+    #[test]
+    fn feature_vectors_fit_aot_pad() {
+        let (m, w) = wl_gpt();
+        for dir in [Dir::Fwd, Dir::Bwd] {
+            for op in encoder_ops(&m, &w, dir) {
+                assert!(op.features.len() <= 8, "{:?}", op.kind);
+                assert_eq!(op.padded_features(8).len(), 8);
+            }
+        }
+    }
+}

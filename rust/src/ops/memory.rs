@@ -1,0 +1,189 @@
+//! Per-GPU memory-footprint model: parameters, ZeRO-1 optimizer state,
+//! gradients, and 1F1B activation residency. Used by the sweep/capacity
+//! planner to reject strategies that would OOM before predicting their
+//! speed (predicting the runtime of a job that cannot run is how real
+//! capacity planning goes wrong).
+//!
+//! Accounting (GPT-NeoX defaults, fp16 + FusedAdam + ZeRO stage 1):
+//!   params:     2 B/param (fp16 working copy)
+//!   grads:      2 B/param (fp16)
+//!   optimizer:  12 B/param / |dp|  (fp32 master + 2 moments, ZeRO-1)
+//!   activations: one fwd's worth per in-flight micro-batch; 1F1B keeps
+//!                up to min(pp, m) micro-batches resident on stage 0.
+
+use crate::config::{ModelCfg, ParallelCfg, Platform};
+use crate::ops::params::{stage_params_exact, StageRole};
+use crate::pipeline::encoder_allocation;
+
+/// Breakdown of one (worst) stage's per-GPU memory, bytes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemoryEstimate {
+    pub params_bytes: f64,
+    pub grads_bytes: f64,
+    pub optimizer_bytes: f64,
+    pub activation_bytes: f64,
+}
+
+impl MemoryEstimate {
+    pub fn total_bytes(&self) -> f64 {
+        self.params_bytes + self.grads_bytes + self.optimizer_bytes + self.activation_bytes
+    }
+
+    pub fn total_gib(&self) -> f64 {
+        self.total_bytes() / (1024.0 * 1024.0 * 1024.0)
+    }
+}
+
+/// Activation bytes for ONE in-flight micro-batch on a stage with `n_enc`
+/// encoders, assuming GPT-NeoX-style activation checkpointing (the way
+/// these models actually fit 40 GB A100s): only each encoder's INPUT
+/// residual (b*l*d fp16) is stored; full intermediates exist only inside
+/// the recompute workspace of the one encoder currently in backward.
+fn activation_bytes_per_microbatch(model: &ModelCfg, n_enc: usize, mp: usize) -> f64 {
+    let b = model.micro_batch as f64;
+    let l = model.l as f64;
+    let d = model.d as f64;
+    b * l * d * 2.0 * n_enc as f64
+}
+
+/// Recompute workspace: one encoder's full intermediates for one
+/// micro-batch (shared across the stage, not per in-flight micro-batch).
+/// Attention scores (b * h/|mp| * l * l) dominate unless flash attention
+/// tiles them away.
+fn recompute_workspace_bytes(model: &ModelCfg, mp: usize) -> f64 {
+    let b = model.micro_batch as f64;
+    let l = model.l as f64;
+    let d = model.d as f64;
+    let h_l = (model.h / mp) as f64;
+    let mpf = mp as f64;
+    let base = b * l * d * (4.0 + 12.0 / mpf) * 2.0;
+    if model.flash_attention {
+        base
+    } else {
+        base + b * h_l * l * l * 2.0 * 2.0
+    }
+}
+
+/// Worst-stage per-GPU memory estimate for a strategy.
+pub fn estimate(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> MemoryEstimate {
+    let alloc = encoder_allocation(model.encoders, par.pp);
+    let vocab = crate::ops::params::padded_vocab(model.vocab, par.mp);
+    let mut worst = MemoryEstimate {
+        params_bytes: 0.0,
+        grads_bytes: 0.0,
+        optimizer_bytes: 0.0,
+        activation_bytes: 0.0,
+    };
+    for (s, &n_enc) in alloc.iter().enumerate() {
+        let role = StageRole::of(s, par.pp);
+        let params = stage_params_exact(role, n_enc, model.d, vocab, par.mp);
+        // 1F1B: stage s holds up to min(pp - s, m) in-flight micro-batches
+        let in_flight = (par.pp - s).min(model.iters_per_update).max(1) as f64;
+        let est = MemoryEstimate {
+            params_bytes: params * 2.0,
+            grads_bytes: params * 2.0,
+            optimizer_bytes: params * 12.0 / par.dp as f64,
+            activation_bytes: activation_bytes_per_microbatch(model, n_enc, par.mp) * in_flight
+                + recompute_workspace_bytes(model, par.mp),
+        };
+        if est.total_bytes() > worst.total_bytes() {
+            worst = est;
+        }
+    }
+    let _ = platform;
+    worst
+}
+
+/// Does the strategy fit the platform's HBM (with a safety margin for
+/// framework overhead / fragmentation)?
+pub fn fits_memory(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> bool {
+    let est = estimate(model, par, platform);
+    let budget = platform.gpu.hbm_gib * 0.92; // runtime + fragmentation margin
+    est.total_gib() <= budget
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_fit_their_platforms() {
+        // Every Table VIII/IX configuration actually ran on the paper's
+        // clusters, so the model must declare them feasible.
+        let cases = [
+            ("gpt20b", "4-4-8"),
+            ("gpt20b", "4-8-4"),
+            ("gpt20b", "8-4-4"),
+            ("llama13b", "4-8-2"),
+            ("llemma7b", "4-2-2"),
+        ];
+        for platform in Platform::all() {
+            for (m, p) in cases {
+                let model = ModelCfg::by_name(m).unwrap();
+                let par = ParallelCfg::parse(p).unwrap();
+                let est = estimate(&model, &par, &platform);
+                assert!(
+                    fits_memory(&model, &par, &platform),
+                    "{m}({p}) on {}: {:.1} GiB",
+                    platform.name,
+                    est.total_gib()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gpt20b_unpartitioned_does_not_fit_a100() {
+        // 20B params on one 40 GB GPU is impossible (240 GB of states).
+        let model = ModelCfg::gpt20b();
+        let par = ParallelCfg::new(1, 1, 1);
+        assert!(!fits_memory(&model, &par, &Platform::perlmutter()));
+    }
+
+    #[test]
+    fn memory_shrinks_with_mp_and_pp() {
+        let model = ModelCfg::gpt20b();
+        let p = Platform::perlmutter();
+        let base = estimate(&model, &ParallelCfg::new(1, 1, 4), &p).total_bytes();
+        let mp = estimate(&model, &ParallelCfg::new(1, 4, 4), &p).total_bytes();
+        let pp = estimate(&model, &ParallelCfg::new(4, 1, 4), &p).total_bytes();
+        assert!(mp < 0.5 * base, "mp {mp} vs {base}");
+        assert!(pp < 0.7 * base, "pp {pp} vs {base}");
+    }
+
+    #[test]
+    fn zero1_optimizer_shards_with_dp() {
+        let model = ModelCfg::llama13b();
+        let p = Platform::perlmutter();
+        let dp2 = estimate(&model, &ParallelCfg::new(4, 4, 2), &p);
+        let dp8 = estimate(&model, &ParallelCfg::new(4, 4, 8), &p);
+        assert!((dp8.optimizer_bytes - dp2.optimizer_bytes / 4.0).abs() / dp2.optimizer_bytes < 0.01);
+        // params/grads do NOT shard with dp
+        assert_eq!(dp2.params_bytes, dp8.params_bytes);
+    }
+
+    #[test]
+    fn flash_attention_saves_activation_memory() {
+        let mut with_flash = ModelCfg::llemma7b();
+        let mut without = with_flash.clone();
+        with_flash.flash_attention = true;
+        without.flash_attention = false;
+        let par = ParallelCfg::new(4, 2, 2);
+        let p = Platform::perlmutter();
+        let a = estimate(&with_flash, &par, &p).activation_bytes;
+        let b = estimate(&without, &par, &p).activation_bytes;
+        assert!(a < b, "flash {a} vs naive {b}");
+    }
+
+    #[test]
+    fn first_stage_is_activation_heaviest() {
+        // 1F1B keeps the most in-flight micro-batches on stage 0; the
+        // worst-stage estimate must be at least the stage-0 activations.
+        let model = ModelCfg::gpt20b();
+        let par = ParallelCfg::new(8, 4, 4);
+        let p = Platform::perlmutter();
+        let est = estimate(&model, &par, &p);
+        assert!(est.activation_bytes > 0.0);
+        assert!(est.total_gib() > 1.0);
+    }
+}

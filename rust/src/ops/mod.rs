@@ -1,0 +1,249 @@
+//! Operator-level decomposition of transformer training (paper §III-C).
+//!
+//! Every fundamental operator of Table I is represented as an
+//! [`OpInstance`]: its kind, its *workload-representation feature vector*
+//! (the regressor input, exactly as Table I specifies), and its lowering
+//! to simulator primitives (GEMMs, memory-bound ops, collectives).
+
+pub mod build;
+pub mod memory;
+pub mod params;
+
+pub use build::Workload;
+
+use crate::hw::{GemmShape, MemOpKind};
+use crate::net::CommGeom;
+
+/// The fundamental operator vocabulary (Table I).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    Embedding,
+    LayerNorm,
+    RmsNorm,
+    Linear1,
+    Rope,
+    QkT,
+    Fillmask,
+    Softmax,
+    FusedSoftmax,
+    AttnV,
+    FlashAttention,
+    Linear2,
+    Linear3,
+    Glue,
+    Linear4,
+    FinalLinear,
+    ParallelCrossEntropy,
+    MpAllReduce,
+    DpAllReduce,
+    DpAllGather,
+    PpP2p,
+    Optimizer,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 22] = [
+        OpKind::Embedding,
+        OpKind::LayerNorm,
+        OpKind::RmsNorm,
+        OpKind::Linear1,
+        OpKind::Rope,
+        OpKind::QkT,
+        OpKind::Fillmask,
+        OpKind::Softmax,
+        OpKind::FusedSoftmax,
+        OpKind::AttnV,
+        OpKind::FlashAttention,
+        OpKind::Linear2,
+        OpKind::Linear3,
+        OpKind::Glue,
+        OpKind::Linear4,
+        OpKind::FinalLinear,
+        OpKind::ParallelCrossEntropy,
+        OpKind::MpAllReduce,
+        OpKind::DpAllReduce,
+        OpKind::DpAllGather,
+        OpKind::PpP2p,
+        OpKind::Optimizer,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Embedding => "Embedding",
+            OpKind::LayerNorm => "LayerNorm",
+            OpKind::RmsNorm => "RMSNorm",
+            OpKind::Linear1 => "Linear1",
+            OpKind::Rope => "RoPE",
+            OpKind::QkT => "QK^T",
+            OpKind::Fillmask => "Fillmask",
+            OpKind::Softmax => "Softmax",
+            OpKind::FusedSoftmax => "FusedSoftmax",
+            OpKind::AttnV => "AttnV",
+            OpKind::FlashAttention => "FlashAttention",
+            OpKind::Linear2 => "Linear2",
+            OpKind::Linear3 => "Linear3",
+            OpKind::Glue => "Glue",
+            OpKind::Linear4 => "Linear4",
+            OpKind::FinalLinear => "Final_Linear",
+            OpKind::ParallelCrossEntropy => "ParallelCrossEntropy",
+            OpKind::MpAllReduce => "MP_AllReduce",
+            OpKind::DpAllReduce => "DP_AllReduce",
+            OpKind::DpAllGather => "DP_AllGather",
+            OpKind::PpP2p => "PP_P2P",
+            OpKind::Optimizer => "Optimizer",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<OpKind> {
+        OpKind::ALL.iter().copied().find(|k| k.name() == name)
+    }
+
+    /// Is this a communication operator (Table VII sampling family)?
+    pub fn is_comm(&self) -> bool {
+        matches!(
+            self,
+            OpKind::MpAllReduce | OpKind::DpAllReduce | OpKind::DpAllGather | OpKind::PpP2p
+        )
+    }
+}
+
+/// Forward or backward execution of an operator. The paper profiles
+/// operators in isolation in both directions; regressors are keyed by
+/// (kind, dir).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dir {
+    Fwd,
+    Bwd,
+}
+
+impl Dir {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dir::Fwd => "fwd",
+            Dir::Bwd => "bwd",
+        }
+    }
+}
+
+/// Lowered form: what the cluster simulator actually executes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LoweredOp {
+    Gemm(GemmShape),
+    Mem {
+        kind: MemOpKind,
+        elems: f64,
+        elem_bytes: f64,
+        rows: f64,
+    },
+    /// FlashAttention: fused compute with its own efficiency profile.
+    Flash { flops: f64, bytes: f64 },
+    AllReduce { bytes: f64, geom: CommGeom },
+    AllGather { bytes_out: f64, geom: CommGeom },
+    P2p { bytes: f64, inter_node: bool },
+    /// Several primitives executed back-to-back (e.g. a backward pass's
+    /// dgrad + wgrad GEMM pair).
+    Seq(Vec<LoweredOp>),
+}
+
+impl LoweredOp {
+    /// Is any part of this op communication?
+    pub fn is_comm(&self) -> bool {
+        match self {
+            LoweredOp::AllReduce { .. } | LoweredOp::AllGather { .. } | LoweredOp::P2p { .. } => true,
+            LoweredOp::Seq(v) => v.iter().any(|o| o.is_comm()),
+            _ => false,
+        }
+    }
+
+    /// Does any part cross the inter-node fabric? (drives jitter class)
+    pub fn is_inter_node(&self) -> bool {
+        match self {
+            LoweredOp::AllReduce { geom, .. } | LoweredOp::AllGather { bytes_out: _, geom } => {
+                geom.nodes > 1
+            }
+            LoweredOp::P2p { inter_node, .. } => *inter_node,
+            LoweredOp::Seq(v) => v.iter().any(|o| o.is_inter_node()),
+            _ => false,
+        }
+    }
+}
+
+/// One concrete operator instance: the regressor's feature vector plus the
+/// simulator's lowering.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpInstance {
+    pub kind: OpKind,
+    pub dir: Dir,
+    /// Workload representation exactly per Table I (unpadded).
+    pub features: Vec<f64>,
+    pub lowered: LoweredOp,
+}
+
+impl OpInstance {
+    /// Feature vector padded to the AOT width `f` (manifest `features`).
+    pub fn padded_features(&self, f: usize) -> Vec<f64> {
+        let mut v = self.features.clone();
+        assert!(v.len() <= f, "{:?} has {} features > pad {f}", self.kind, v.len());
+        v.resize(f, 0.0);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_two_operators() {
+        assert_eq!(OpKind::ALL.len(), 22);
+        let mut names: Vec<_> = OpKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 22, "names must be unique");
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for k in OpKind::ALL {
+            assert_eq!(OpKind::by_name(k.name()), Some(k));
+        }
+        assert_eq!(OpKind::by_name("Conv2D"), None);
+    }
+
+    #[test]
+    fn comm_classification() {
+        assert!(OpKind::MpAllReduce.is_comm());
+        assert!(OpKind::PpP2p.is_comm());
+        assert!(!OpKind::Linear1.is_comm());
+        assert_eq!(OpKind::ALL.iter().filter(|k| k.is_comm()).count(), 4);
+    }
+
+    #[test]
+    fn lowered_inter_node_detection() {
+        let intra = LoweredOp::AllReduce { bytes: 1e6, geom: CommGeom::new(1, 4) };
+        let inter = LoweredOp::AllReduce { bytes: 1e6, geom: CommGeom::new(4, 1) };
+        assert!(!intra.is_inter_node());
+        assert!(inter.is_inter_node());
+        let seq = LoweredOp::Seq(vec![intra, inter]);
+        assert!(seq.is_inter_node() && seq.is_comm());
+    }
+
+    #[test]
+    fn padded_features() {
+        let op = OpInstance {
+            kind: OpKind::LayerNorm,
+            dir: Dir::Fwd,
+            features: vec![4.0, 2048.0, 6144.0],
+            lowered: LoweredOp::Mem {
+                kind: crate::hw::MemOpKind::LayerNorm,
+                elems: 1.0,
+                elem_bytes: 2.0,
+                rows: 1.0,
+            },
+        };
+        let p = op.padded_features(8);
+        assert_eq!(p.len(), 8);
+        assert_eq!(&p[..3], &[4.0, 2048.0, 6144.0]);
+        assert_eq!(p[7], 0.0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Parameter-count bookkeeping: vocabulary padding (eqs 1-2), operator
+//! parameter shapes (Table II), the paper's closed-form encoder parameter
+//! count (eq 6), and per-pipeline-stage totals (Table III).
+//!
+//! Two counts coexist deliberately:
+//! - [`encoder_params_paper`] — eq (6) verbatim; the *predictor* uses it,
+//!   as the paper does.
+//! - [`encoder_params_exact`] — summed from the Table II shapes; the
+//!   *simulator* uses it. The small closed-form mismatch is part of the
+//!   realistic modeling error (DESIGN.md §7).
+
+/// eq (1): vocabulary divisibility factor.
+pub fn divisibility_factor(mp: usize) -> usize {
+    128 * mp
+}
+
+/// eq (2): vocabulary padded up to the divisibility factor.
+pub fn padded_vocab(original_vocab: usize, mp: usize) -> usize {
+    let f = divisibility_factor(mp);
+    original_vocab.div_ceil(f) * f
+}
+
+/// eq (6): #encoder_parameters = 4d + 8d(d+1)/|mp| + d(4d+1)/|mp|.
+pub fn encoder_params_paper(d: usize, mp: usize) -> f64 {
+    let d = d as f64;
+    let mp = mp as f64;
+    4.0 * d + 8.0 * d * (d + 1.0) / mp + d * (4.0 * d + 1.0) / mp
+}
+
+/// Exact per-encoder parameter count from the Table II shapes:
+/// 2x norm [d],[d]; Linear1 [d,3d/mp]+[3d/mp]; Linear2 [d/mp,d]+[d];
+/// Linear3 [d,4d/mp]+[4d/mp]; Linear4 [4d/mp,d]+[d].
+pub fn encoder_params_exact(d: usize, mp: usize) -> f64 {
+    let df = d as f64;
+    let mpf = mp as f64;
+    let norms = 2.0 * (2.0 * df);
+    let l1 = df * 3.0 * df / mpf + 3.0 * df / mpf;
+    let l2 = (df / mpf) * df + df;
+    let l3 = df * 4.0 * df / mpf + 4.0 * df / mpf;
+    let l4 = (4.0 * df / mpf) * df + df;
+    norms + l1 + l2 + l3 + l4
+}
+
+/// Pipeline-stage role, distinguishing activation/parameter distribution
+/// (Table III + §III-C "pipeline stage roles").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageRole {
+    First,
+    Middle,
+    Last,
+    /// pp == 1: the only stage carries everything.
+    Solo,
+}
+
+impl StageRole {
+    pub fn of(stage: usize, pp: usize) -> StageRole {
+        assert!(stage < pp);
+        if pp == 1 {
+            StageRole::Solo
+        } else if stage == 0 {
+            StageRole::First
+        } else if stage == pp - 1 {
+            StageRole::Last
+        } else {
+            StageRole::Middle
+        }
+    }
+}
+
+/// Table III: parameters held by one pipeline stage (using the paper's
+/// eq-6 encoder count). `n_encoders` is that stage's encoder allocation.
+pub fn stage_params_paper(
+    role: StageRole,
+    n_encoders: usize,
+    d: usize,
+    vocab_padded: usize,
+    mp: usize,
+) -> f64 {
+    let emb = (vocab_padded as f64) * (d as f64) / (mp as f64);
+    let enc = n_encoders as f64 * encoder_params_paper(d, mp);
+    match role {
+        StageRole::First => emb + enc,
+        StageRole::Middle => enc,
+        StageRole::Last => enc + 2.0 * d as f64 + emb,
+        StageRole::Solo => emb + enc + 2.0 * d as f64 + emb,
+    }
+}
+
+/// Exact variant for the simulator (Table II shapes everywhere).
+pub fn stage_params_exact(
+    role: StageRole,
+    n_encoders: usize,
+    d: usize,
+    vocab_padded: usize,
+    mp: usize,
+) -> f64 {
+    let emb = (vocab_padded as f64) * (d as f64) / (mp as f64);
+    let enc = n_encoders as f64 * encoder_params_exact(d, mp);
+    match role {
+        StageRole::First => emb + enc,
+        StageRole::Middle => enc,
+        StageRole::Last => enc + 2.0 * d as f64 + emb,
+        StageRole::Solo => emb + enc + 2.0 * d as f64 + emb,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_padding_gpt_neox() {
+        // 50257 with mp=4: factor 512 -> 50688
+        assert_eq!(padded_vocab(50257, 4), 50688);
+        // mp=8: factor 1024 -> 51200
+        assert_eq!(padded_vocab(50257, 8), 51200);
+        // already aligned stays
+        assert_eq!(padded_vocab(51200, 8), 51200);
+    }
+
+    #[test]
+    fn padding_is_minimal_and_divisible() {
+        for mp in [1, 2, 4, 8, 16] {
+            let v = padded_vocab(50257, mp);
+            assert_eq!(v % divisibility_factor(mp), 0);
+            assert!(v >= 50257);
+            assert!(v - 50257 < divisibility_factor(mp));
+        }
+    }
+
+    #[test]
+    fn eq6_vs_exact_close() {
+        // The paper's closed form slightly overcounts; both must be within
+        // a few percent of each other for all our model dims.
+        for (d, mp) in [(6144, 4), (6144, 8), (5120, 8), (4096, 2)] {
+            let p = encoder_params_paper(d, mp);
+            let e = encoder_params_exact(d, mp);
+            let rel = (p - e).abs() / e;
+            assert!(rel < 0.05, "d={d} mp={mp}: paper {p} exact {e} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn gpt20b_encoder_param_magnitude() {
+        // 12 d^2 / mp dominates: d=6144, mp=1 -> ~453M per encoder
+        let p = encoder_params_paper(6144, 1);
+        assert!((4.4e8..4.7e8).contains(&p), "{p}");
+        // 44 encoders ~ 20B params
+        assert!((15e9..25e9).contains(&(44.0 * p)));
+    }
+
+    #[test]
+    fn stage_roles() {
+        assert_eq!(StageRole::of(0, 4), StageRole::First);
+        assert_eq!(StageRole::of(1, 4), StageRole::Middle);
+        assert_eq!(StageRole::of(3, 4), StageRole::Last);
+        assert_eq!(StageRole::of(0, 1), StageRole::Solo);
+    }
+
+    #[test]
+    fn first_and_last_stage_carry_embeddings() {
+        let (d, v, mp, n) = (6144, 50688, 4, 11);
+        let first = stage_params_paper(StageRole::First, n, d, v, mp);
+        let mid = stage_params_paper(StageRole::Middle, n, d, v, mp);
+        let last = stage_params_paper(StageRole::Last, n, d, v, mp);
+        let emb = v as f64 * d as f64 / mp as f64;
+        assert!((first - mid - emb).abs() < 1.0);
+        assert!(last > mid + emb);
+    }
+
+    #[test]
+    fn mp_partitioning_shrinks_stage_params() {
+        let a = stage_params_exact(StageRole::Middle, 10, 6144, 50688, 1);
+        let b = stage_params_exact(StageRole::Middle, 10, 6144, 50688, 8);
+        assert!(b < a / 6.0, "{a} vs {b}"); // norms are replicated, rest /8
+    }
+}

@@ -1,0 +1,46 @@
+//! Pipeline parallelism: stage partitioning (eqs 3-5), the 1F1B schedule
+//! (Figure 2), and the paper's closed-form batch-runtime composition
+//! (eq 7).
+
+pub mod partition;
+pub mod schedule;
+
+pub use partition::{encoder_allocation, paper_allocation};
+pub use schedule::{one_f_one_b, Schedule, TaskTimes};
+
+/// eq (7): the paper's closed-form 1F1B + DP runtime, µs.
+///
+/// `max_fwd`/`max_bwd` are the slowest stage's per-micro-batch times
+/// (PP_P2P billed to senders), `first_stage_sync` is
+/// DP_AllReduce(first-stage params), `max_update` is the max over stages
+/// of Optimizer + DP_AllGather(stage params / |dp|).
+pub fn eq7_runtime_us(
+    micro_batches: usize,
+    pipeline_stages: usize,
+    max_fwd: f64,
+    max_bwd: f64,
+    first_stage_sync: f64,
+    max_update: f64,
+) -> f64 {
+    (micro_batches as f64 - 1.0 + pipeline_stages as f64) * (max_fwd + max_bwd)
+        + first_stage_sync
+        + max_update
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq7_matches_hand_computation() {
+        // 16 micro-batches, 4 stages, fwd 3ms, bwd 5ms, sync 7ms, upd 2ms
+        let t = eq7_runtime_us(16, 4, 3_000.0, 5_000.0, 7_000.0, 2_000.0);
+        assert_eq!(t, 19.0 * 8_000.0 + 9_000.0);
+    }
+
+    #[test]
+    fn eq7_single_stage_is_serial() {
+        let t = eq7_runtime_us(8, 1, 10.0, 20.0, 5.0, 1.0);
+        assert_eq!(t, 8.0 * 30.0 + 6.0);
+    }
+}

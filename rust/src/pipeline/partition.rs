@@ -1,0 +1,114 @@
+//! Encoder-to-stage allocation.
+//!
+//! The paper's formulas (eqs 3-5) balance the five non-encoder blocks
+//! (EmbeddingPipe + Pre-Transformer ahead; Post-Transformer + NormPipe +
+//! ParallelLinearPipe behind) by treating them as 2 / 3 encoder
+//! equivalents:
+//!
+//!   first  = ceil((E+5)/S) - 2
+//!   middle = ceil((E+5)/S)
+//!   last   = ceil((E+5)/S) - 3
+//!
+//! These do not always sum to E (e.g. GPT-20B: E=44, S=4 gives 47), so
+//! [`encoder_allocation`] applies a deterministic fix-up that restores
+//! the invariant sum == E while staying as close to the paper's shape as
+//! possible. The raw formulas are kept in [`paper_allocation`].
+
+/// eqs (3)-(5) verbatim (may not sum to `encoders`).
+pub fn paper_allocation(encoders: usize, stages: usize) -> Vec<i64> {
+    assert!(stages >= 1);
+    if stages == 1 {
+        return vec![encoders as i64];
+    }
+    let base = (encoders + 5).div_ceil(stages) as i64;
+    let mut v = vec![base; stages];
+    v[0] = base - 2;
+    v[stages - 1] = base - 3;
+    v
+}
+
+/// Balanced allocation with the sum == encoders invariant restored:
+/// start from eqs (3)-(5) clamped at zero, then move single encoders
+/// to/from the most/least loaded stages until the total matches.
+pub fn encoder_allocation(encoders: usize, stages: usize) -> Vec<usize> {
+    assert!(stages >= 1);
+    let mut counts: Vec<i64> = paper_allocation(encoders, stages)
+        .into_iter()
+        .map(|c| c.max(0))
+        .collect();
+    let mut diff = encoders as i64 - counts.iter().sum::<i64>();
+    while diff != 0 {
+        if diff > 0 {
+            // add to the least-loaded stage (ties -> lowest index)
+            let i = (0..counts.len()).min_by_key(|&i| (counts[i], i)).unwrap();
+            counts[i] += 1;
+            diff -= 1;
+        } else {
+            // remove from the most-loaded stage holding at least one
+            let i = (0..counts.len())
+                .filter(|&i| counts[i] > 0)
+                .max_by_key(|&i| (counts[i], usize::MAX - i))
+                .expect("cannot remove encoders from an empty allocation");
+            counts[i] -= 1;
+            diff += 1;
+        }
+    }
+    counts.into_iter().map(|c| c as usize).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_formulas_verbatim() {
+        // GPT-20B: E=44, S=4 -> base = ceil(49/4) = 13 -> [11, 13, 13, 10]
+        assert_eq!(paper_allocation(44, 4), vec![11, 13, 13, 10]);
+        // LLaMA-13B: E=40, S=4 -> base = ceil(45/4) = 12 -> [10, 12, 12, 9]
+        assert_eq!(paper_allocation(40, 4), vec![10, 12, 12, 9]);
+    }
+
+    #[test]
+    fn fixup_preserves_total_gpt20b() {
+        let a = encoder_allocation(44, 4);
+        assert_eq!(a.iter().sum::<usize>(), 44);
+        // fix-up removes 3 from the most loaded stages: [11,12,12,9]-ish
+        assert_eq!(a.len(), 4);
+        assert!(*a.iter().max().unwrap() - *a.iter().min().unwrap() <= 4);
+    }
+
+    #[test]
+    fn fixup_preserves_total_llemma() {
+        // Llemma-7B: E=32, S=4
+        let a = encoder_allocation(32, 4);
+        assert_eq!(a.iter().sum::<usize>(), 32);
+    }
+
+    #[test]
+    fn single_stage_takes_all() {
+        assert_eq!(encoder_allocation(44, 1), vec![44]);
+        assert_eq!(paper_allocation(44, 1), vec![44]);
+    }
+
+    #[test]
+    fn deep_pipelines() {
+        for (e, s) in [(44, 8), (40, 8), (32, 8), (44, 16), (7, 8)] {
+            let a = encoder_allocation(e, s);
+            assert_eq!(a.iter().sum::<usize>(), e, "E={e} S={s}");
+            assert_eq!(a.len(), s);
+        }
+    }
+
+    #[test]
+    fn first_gets_fewer_than_middle() {
+        // the embedding burden means stage 0 should not exceed middles
+        let a = encoder_allocation(44, 4);
+        assert!(a[0] <= a[1]);
+        assert!(a[3] <= a[1]);
+    }
+
+    #[test]
+    fn allocation_is_deterministic() {
+        assert_eq!(encoder_allocation(44, 4), encoder_allocation(44, 4));
+    }
+}

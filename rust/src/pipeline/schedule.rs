@@ -1,0 +1,299 @@
+//! Event-accurate 1F1B pipeline schedule (Figure 2).
+//!
+//! Given per-(stage, micro-batch) forward/backward durations (with PP_P2P
+//! send time folded into the sender's task, as the paper assigns it), this
+//! computes exact start/end times under the 1F1B discipline: each stage
+//! runs `min(m, S - s)` warm-up forwards, then alternates
+//! backward/forward, then drains the remaining backwards.
+//!
+//! The ground-truth simulator (`trainrun`) executes THIS schedule with
+//! jittered task durations; the predictor only has the closed form eq (7).
+//! The gap between them is the realistic composition error the paper's
+//! Table IX exhibits.
+
+/// Per-task durations, µs: `fwd[s][i]` / `bwd[s][i]` for stage `s`,
+/// micro-batch `i` (sender-side P2P included).
+#[derive(Clone, Debug)]
+pub struct TaskTimes {
+    pub fwd: Vec<Vec<f64>>,
+    pub bwd: Vec<Vec<f64>>,
+}
+
+impl TaskTimes {
+    pub fn stages(&self) -> usize {
+        self.fwd.len()
+    }
+
+    pub fn micro_batches(&self) -> usize {
+        self.fwd.first().map_or(0, |v| v.len())
+    }
+
+    /// Uniform times (handy for tests and the Figure-2 renderer).
+    pub fn uniform(stages: usize, micro_batches: usize, fwd: f64, bwd: f64) -> TaskTimes {
+        TaskTimes {
+            fwd: vec![vec![fwd; micro_batches]; stages],
+            bwd: vec![vec![bwd; micro_batches]; stages],
+        }
+    }
+}
+
+/// Computed schedule: start/end instants per (stage, micro-batch) task.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub fwd_start: Vec<Vec<f64>>,
+    pub fwd_end: Vec<Vec<f64>>,
+    pub bwd_start: Vec<Vec<f64>>,
+    pub bwd_end: Vec<Vec<f64>>,
+}
+
+impl Schedule {
+    pub fn stages(&self) -> usize {
+        self.fwd_start.len()
+    }
+
+    /// When each stage finishes its last backward (gradient-sync start).
+    pub fn stage_last_bwd_end(&self) -> Vec<f64> {
+        self.bwd_end.iter().map(|v| v.iter().cloned().fold(0.0, f64::max)).collect()
+    }
+
+    /// Pipeline makespan (all backwards drained).
+    pub fn makespan(&self) -> f64 {
+        self.stage_last_bwd_end().iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Pipeline bubble fraction for a stage: idle / makespan.
+    pub fn bubble_fraction(&self, times: &TaskTimes, stage: usize) -> f64 {
+        let busy: f64 = times.fwd[stage].iter().sum::<f64>() + times.bwd[stage].iter().sum::<f64>();
+        1.0 - busy / self.makespan()
+    }
+}
+
+/// The 1F1B task order for one stage: indices into fwd (F) / bwd (B).
+fn stage_order(stage: usize, stages: usize, m: usize) -> Vec<(bool, usize)> {
+    let warmup = (stages - stage).min(m);
+    let mut order = Vec::with_capacity(2 * m);
+    for i in 0..warmup {
+        order.push((true, i)); // F_i
+    }
+    let mut next_f = warmup;
+    for i in 0..m {
+        order.push((false, i)); // B_i
+        if next_f < m {
+            order.push((true, next_f));
+            next_f += 1;
+        }
+    }
+    order
+}
+
+/// Compute the exact 1F1B schedule.
+///
+/// Dependencies: F(s,i) needs F(s-1,i) done (activation arrival; transfer
+/// time already folded into the sender's fwd task). B(s,i) needs B(s+1,i)
+/// done, and on the last stage F(s,i) done. Each stage executes its 1F1B
+/// order serially.
+pub fn one_f_one_b(times: &TaskTimes) -> Schedule {
+    let s_count = times.stages();
+    let m = times.micro_batches();
+    assert!(s_count >= 1 && m >= 1);
+    let mut fs = vec![vec![f64::NAN; m]; s_count];
+    let mut fe = vec![vec![f64::NAN; m]; s_count];
+    let mut bs = vec![vec![f64::NAN; m]; s_count];
+    let mut be = vec![vec![f64::NAN; m]; s_count];
+
+    // Iterate until fixed point: stage order is static, but B(s,i) depends
+    // on the NEXT stage, so a single forward sweep cannot resolve both
+    // directions. Two phases suffice: process stages in order for fwd
+    // deps, but bwd deps flow backward — use an event-driven loop instead.
+    let orders: Vec<Vec<(bool, usize)>> =
+        (0..s_count).map(|s| stage_order(s, s_count, m)).collect();
+    let mut cursor = vec![0usize; s_count]; // next task index per stage
+    let mut avail = vec![0.0f64; s_count]; // stage-free instant
+    let mut progressed = true;
+    let mut done = 0usize;
+    let total = 2 * m * s_count;
+
+    while done < total {
+        assert!(progressed, "1F1B schedule deadlocked (dependency bug)");
+        progressed = false;
+        for s in 0..s_count {
+            while cursor[s] < orders[s].len() {
+                let (is_fwd, i) = orders[s][cursor[s]];
+                let dep = if is_fwd {
+                    if s == 0 {
+                        Some(0.0)
+                    } else if fe[s - 1][i].is_nan() {
+                        None
+                    } else {
+                        Some(fe[s - 1][i])
+                    }
+                } else if s == s_count - 1 {
+                    if fe[s][i].is_nan() {
+                        None
+                    } else {
+                        Some(fe[s][i])
+                    }
+                } else if be[s + 1][i].is_nan() {
+                    None
+                } else {
+                    Some(be[s + 1][i])
+                };
+                let Some(ready) = dep else { break };
+                let start = ready.max(avail[s]);
+                let dur = if is_fwd { times.fwd[s][i] } else { times.bwd[s][i] };
+                let end = start + dur;
+                if is_fwd {
+                    fs[s][i] = start;
+                    fe[s][i] = end;
+                } else {
+                    bs[s][i] = start;
+                    be[s][i] = end;
+                }
+                avail[s] = end;
+                cursor[s] += 1;
+                done += 1;
+                progressed = true;
+            }
+        }
+    }
+
+    Schedule { fwd_start: fs, fwd_end: fe, bwd_start: bs, bwd_end: be }
+}
+
+/// Render an ASCII timeline in the style of Figure 2 (numbers are
+/// micro-batch ids; `F`/`B` rows per stage).
+pub fn render_ascii(times: &TaskTimes, width: usize) -> String {
+    let sched = one_f_one_b(times);
+    let span = sched.makespan();
+    let scale = width as f64 / span;
+    let mut out = String::new();
+    for s in 0..times.stages() {
+        let mut row = vec![b' '; width + 1];
+        let mut paint = |start: f64, end: f64, label: String, upper: bool| {
+            let a = (start * scale) as usize;
+            let b = ((end * scale) as usize).min(width);
+            for (k, cell) in row.iter_mut().enumerate().take(b).skip(a) {
+                let ch = if upper { b'F' } else { b'B' };
+                *cell = if k == a { label.bytes().next().unwrap_or(ch) } else { ch };
+            }
+        };
+        for i in 0..times.micro_batches() {
+            paint(sched.fwd_start[s][i], sched.fwd_end[s][i], format!("{}", (i + 1) % 10), true);
+        }
+        for i in 0..times.micro_batches() {
+            paint(sched.bwd_start[s][i], sched.bwd_end[s][i], format!("{}", (i + 1) % 10), false);
+        }
+        out.push_str(&format!("Stage{} |{}|\n", s + 1, String::from_utf8(row).unwrap()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_stage_serial() {
+        let t = TaskTimes::uniform(1, 4, 2.0, 3.0);
+        let s = one_f_one_b(&t);
+        // 1F1B on one stage: F1 B1 F2 B2 ... = 4*(2+3)
+        assert_eq!(s.makespan(), 20.0);
+    }
+
+    #[test]
+    fn classic_bubble_formula_uniform() {
+        // With uniform task times, 1F1B makespan = (m - 1 + s) * (f + b)
+        // ... for the LAST stage's drain; the canonical result.
+        for (stages, m) in [(2, 4), (4, 4), (4, 16), (8, 16)] {
+            let (f, b) = (2.0, 4.0);
+            let t = TaskTimes::uniform(stages, m, f, b);
+            let s = one_f_one_b(&t);
+            let expect = (m as f64 - 1.0 + stages as f64) * (f + b);
+            assert!(
+                (s.makespan() - expect).abs() < 1e-9,
+                "S={stages} m={m}: {} vs {expect}",
+                s.makespan()
+            );
+        }
+    }
+
+    #[test]
+    fn dependencies_respected() {
+        let t = TaskTimes::uniform(4, 6, 1.0, 2.0);
+        let s = one_f_one_b(&t);
+        for st in 1..4 {
+            for i in 0..6 {
+                assert!(s.fwd_start[st][i] >= s.fwd_end[st - 1][i] - 1e-12);
+            }
+        }
+        for st in 0..3 {
+            for i in 0..6 {
+                assert!(s.bwd_start[st][i] >= s.bwd_end[st + 1][i] - 1e-12);
+            }
+        }
+        // last stage: bwd after own fwd
+        for i in 0..6 {
+            assert!(s.bwd_start[3][i] >= s.fwd_end[3][i] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn stage_serialism() {
+        // No two tasks on one stage overlap.
+        let t = TaskTimes::uniform(3, 5, 1.5, 2.5);
+        let s = one_f_one_b(&t);
+        for st in 0..3 {
+            let mut intervals: Vec<(f64, f64)> = Vec::new();
+            for i in 0..5 {
+                intervals.push((s.fwd_start[st][i], s.fwd_end[st][i]));
+                intervals.push((s.bwd_start[st][i], s.bwd_end[st][i]));
+            }
+            intervals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in intervals.windows(2) {
+                assert!(w[1].0 >= w[0].1 - 1e-12, "overlap at stage {st}");
+            }
+        }
+    }
+
+    #[test]
+    fn slow_stage_dominates() {
+        let mut t = TaskTimes::uniform(4, 8, 2.0, 4.0);
+        // stage 2 is 3x slower
+        t.fwd[2] = vec![6.0; 8];
+        t.bwd[2] = vec![12.0; 8];
+        let s = one_f_one_b(&t);
+        let uniform = one_f_one_b(&TaskTimes::uniform(4, 8, 2.0, 4.0));
+        assert!(s.makespan() > 2.0 * uniform.makespan());
+    }
+
+    #[test]
+    fn first_stage_finishes_bwd_last() {
+        // In 1F1B the first stage drains its final backward at (or after)
+        // every other stage.
+        let t = TaskTimes::uniform(4, 16, 2.0, 4.0);
+        let s = one_f_one_b(&t);
+        let ends = s.stage_last_bwd_end();
+        let first = ends[0];
+        for e in &ends {
+            assert!(first >= *e - 1e-9);
+        }
+    }
+
+    #[test]
+    fn bubble_fraction_shrinks_with_micro_batches() {
+        let t4 = TaskTimes::uniform(4, 4, 1.0, 2.0);
+        let t32 = TaskTimes::uniform(4, 32, 1.0, 2.0);
+        let b4 = one_f_one_b(&t4).bubble_fraction(&t4, 1);
+        let b32 = one_f_one_b(&t32).bubble_fraction(&t32, 1);
+        assert!(b32 < b4, "{b32} vs {b4}");
+    }
+
+    #[test]
+    fn ascii_render_has_all_stages() {
+        let t = TaskTimes::uniform(4, 4, 1.0, 2.0);
+        let art = render_ascii(&t, 80);
+        assert_eq!(art.lines().count(), 4);
+        assert!(art.contains("Stage1"));
+        assert!(art.contains('F') && art.contains('B'));
+    }
+}

@@ -1,0 +1,11 @@
+//! The end-to-end prediction system (paper §III-D + §IV): per-operator
+//! regressor registry, component-level composition via eqs (3)-(7), and
+//! Table-IX-style error analysis against simulated ground truth.
+
+pub mod registry;
+pub mod e2e;
+pub mod errors;
+
+pub use e2e::{predict, ComponentPrediction};
+pub use errors::{evaluate, ComponentErrors};
+pub use registry::{BatchPredictor, Registry};

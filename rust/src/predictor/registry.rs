@@ -1,0 +1,136 @@
+//! Per-(operator, direction) regressor registry and the [`BatchPredictor`]
+//! abstraction shared by the native path, the XLA/PJRT runtime path, and
+//! the analytical baselines.
+
+use std::collections::HashMap;
+
+use crate::forest::{train_best, FlatForest, TunedForest};
+use crate::ops::{Dir, OpInstance, OpKind};
+use crate::sampling::{Dataset, DatasetKey};
+
+/// Anything that can turn (operator key, feature rows) into latency
+/// predictions. The composition layer (`predictor::e2e`) is generic over
+/// this, so the native forests, the AOT/PJRT executable, and the
+/// baselines are interchangeable.
+pub trait BatchPredictor {
+    fn predict_batch(&mut self, key: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64>;
+
+    fn predict_op(&mut self, op: &OpInstance) -> f64 {
+        self.predict_batch((op.kind, op.dir), std::slice::from_ref(&op.features))[0]
+    }
+
+    /// Backends that can only answer per-op (e.g. the simulator oracle,
+    /// which needs the lowered op) return false; the composition layer
+    /// then skips batched prefetching for them.
+    fn supports_batch(&self) -> bool {
+        true
+    }
+}
+
+/// Trained per-operator forests for one platform.
+pub struct Registry {
+    pub platform: String,
+    pub forests: HashMap<DatasetKey, TunedForest>,
+}
+
+impl Registry {
+    /// Train one tuned forest per collected dataset.
+    pub fn train(platform: &str, datasets: &HashMap<DatasetKey, Dataset>, seed: u64) -> Registry {
+        let mut forests = HashMap::new();
+        for (key, ds) in datasets {
+            forests.insert(*key, train_best(ds, seed ^ key_tag(*key)));
+        }
+        Registry { platform: platform.to_string(), forests }
+    }
+
+    pub fn get(&self, key: DatasetKey) -> Option<&TunedForest> {
+        self.forests.get(&key)
+    }
+
+    /// Export every forest to the flattened AOT layout (for the runtime
+    /// path and the coordinator).
+    pub fn export_flat(&self, t_max: usize, n_max: usize) -> HashMap<DatasetKey, FlatForest> {
+        self.forests
+            .iter()
+            .map(|(k, t)| (*k, FlatForest::from_forest(&t.forest, t_max, n_max)))
+            .collect()
+    }
+
+    /// Mean validation MAPE across operators (selection diagnostics).
+    pub fn mean_val_mape(&self) -> f64 {
+        let v: Vec<f64> = self.forests.values().map(|t| t.val_mape).collect();
+        crate::util::stats::mean(&v)
+    }
+}
+
+fn key_tag(key: DatasetKey) -> u64 {
+    let (kind, dir) = key;
+    let k = OpKind::ALL.iter().position(|&x| x == kind).unwrap() as u64;
+    let d = match dir {
+        Dir::Fwd => 0u64,
+        Dir::Bwd => 1,
+    };
+    (k << 1) | d
+}
+
+impl BatchPredictor for Registry {
+    fn predict_batch(&mut self, key: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+        let tuned = self
+            .forests
+            .get(&key)
+            .unwrap_or_else(|| panic!("no regressor for {key:?}"));
+        rows.iter().map(|r| tuned.forest.predict_us(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fake_datasets() -> HashMap<DatasetKey, Dataset> {
+        let mut rng = Rng::new(4);
+        let mut out = HashMap::new();
+        for key in [(OpKind::Linear1, Dir::Fwd), (OpKind::LayerNorm, Dir::Bwd)] {
+            let mut ds = Dataset::default();
+            for _ in 0..200 {
+                let a = rng.uniform(100.0, 10000.0);
+                let b = rng.uniform(1.0, 8.0);
+                ds.push(vec![a, b], 5.0 + a / b * 0.01);
+            }
+            out.insert(key, ds);
+        }
+        out
+    }
+
+    #[test]
+    fn trains_per_key() {
+        let reg = Registry::train("perlmutter", &fake_datasets(), 1);
+        assert_eq!(reg.forests.len(), 2);
+        assert!(reg.mean_val_mape() < 10.0, "{}", reg.mean_val_mape());
+    }
+
+    #[test]
+    fn batch_prediction_accurate() {
+        let mut reg = Registry::train("perlmutter", &fake_datasets(), 1);
+        let rows = vec![vec![5000.0, 4.0], vec![200.0, 1.0]];
+        let pred = reg.predict_batch((OpKind::Linear1, Dir::Fwd), &rows);
+        assert_eq!(pred.len(), 2);
+        let want0 = 5.0 + 5000.0 / 4.0 * 0.01;
+        assert!((pred[0] - want0).abs() / want0 < 0.15, "{} vs {want0}", pred[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no regressor")]
+    fn missing_key_panics() {
+        let mut reg = Registry::train("perlmutter", &fake_datasets(), 1);
+        reg.predict_batch((OpKind::Optimizer, Dir::Fwd), &[vec![1.0]]);
+    }
+
+    #[test]
+    fn export_covers_all_keys() {
+        let reg = Registry::train("perlmutter", &fake_datasets(), 1);
+        let flat = reg.export_flat(128, 1024);
+        assert_eq!(flat.len(), 2);
+    }
+}

@@ -1,0 +1,166 @@
+//! Figure 2 (1F1B timeline) and Figure 3 (component time-cost
+//! proportions) generators.
+
+use crate::config::{ModelCfg, ParallelCfg, Platform};
+use crate::pipeline::schedule::render_ascii;
+use crate::pipeline::TaskTimes;
+use crate::predictor::e2e::ComponentPrediction;
+use crate::predictor::predict;
+use crate::predictor::registry::BatchPredictor;
+use crate::report::tables::paper_configs;
+use crate::trainrun::stage_plans;
+
+/// Figure 2: the canonical 4-stage x 4-micro-batch 1F1B timeline, plus a
+/// measured-shape variant from an actual stage plan.
+pub fn fig2_markdown(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> String {
+    let mut s = String::from("# Figure 2 — 1F1B pipeline timeline\n\n");
+    s.push_str("Canonical 4 stages x 4 micro-batches (uniform times):\n\n```\n");
+    s.push_str(&render_ascii(&TaskTimes::uniform(4, 4, 1.0, 2.0), 72));
+    s.push_str("```\n\n");
+
+    let plans = stage_plans(model, par, platform);
+    let sim = crate::sim::ClusterSim::new(platform.clone(), 1);
+    let times = TaskTimes {
+        fwd: plans
+            .iter()
+            .map(|p| {
+                vec![
+                    p.fwd_ops.iter().map(|o| sim.deterministic_us(&o.lowered)).sum::<f64>();
+                    model.iters_per_update
+                ]
+            })
+            .collect(),
+        bwd: plans
+            .iter()
+            .map(|p| {
+                vec![
+                    p.bwd_ops.iter().map(|o| sim.deterministic_us(&o.lowered)).sum::<f64>();
+                    model.iters_per_update
+                ]
+            })
+            .collect(),
+    };
+    s.push_str(&format!(
+        "{}({}) on {} — deterministic stage times, {} micro-batches:\n\n```\n{}```\n",
+        model.name,
+        par.label(),
+        platform.name,
+        model.iters_per_update,
+        render_ascii(&times, 100)
+    ));
+    s
+}
+
+/// One config's component proportions (% of predicted total). As in the
+/// paper, proportions deliberately exceed 100% in sum: only Stage_Fwd,
+/// Stage_Bwd, DP_Allreduce and Update are mutually exclusive phases;
+/// encoder/MP/P2P shares are *within* the stage phases.
+#[derive(Clone, Debug)]
+pub struct Proportions {
+    pub label: String,
+    pub stage_fwd: f64,
+    pub stage_bwd: f64,
+    pub dp_allreduce: f64,
+    pub update: f64,
+    pub encoder_fwd: f64,
+    pub encoder_bwd: f64,
+    pub mp_allreduce: f64,
+    pub pp_p2p: f64,
+}
+
+pub fn proportions(cp: &ComponentPrediction, model: &ModelCfg, par: &ParallelCfg) -> Proportions {
+    let m = model.iters_per_update as f64;
+    let s = par.pp as f64;
+    let pipeline_factor = m - 1.0 + s;
+    let total = cp.total_us;
+    let enc_per_stage = (model.encoders as f64 / par.pp as f64).ceil();
+    let syncs = (model.encoder_fwd_syncs + model.encoder_bwd_syncs) as f64;
+    Proportions {
+        label: cp.label.clone(),
+        stage_fwd: pipeline_factor * cp.stage_fwd_max() / total * 100.0,
+        stage_bwd: pipeline_factor * cp.stage_bwd_max() / total * 100.0,
+        dp_allreduce: cp.dp_allreduce_first_us / total * 100.0,
+        update: cp.max_update_us / total * 100.0,
+        encoder_fwd: m * enc_per_stage * cp.encoder_fwd_us / total * 100.0,
+        encoder_bwd: m * enc_per_stage * cp.encoder_bwd_us / total * 100.0,
+        mp_allreduce: m * enc_per_stage * syncs * cp.mp_allreduce_us / total * 100.0,
+        pp_p2p: 2.0 * m * cp.pp_p2p_us / total * 100.0,
+    }
+}
+
+/// Figure 3: the proportion series for all five configs on one platform.
+pub fn fig3_markdown(platform: &Platform, predictor: &mut dyn BatchPredictor) -> String {
+    let mut rows = Vec::new();
+    for (model, par) in paper_configs() {
+        let cp = predict(&model, &par, platform, predictor);
+        let p = proportions(&cp, &model, &par);
+        rows.push(vec![
+            p.label.clone(),
+            format!("{:.1}%", p.stage_fwd),
+            format!("{:.1}%", p.stage_bwd),
+            format!("{:.1}%", p.dp_allreduce),
+            format!("{:.1}%", p.update),
+            format!("{:.1}%", p.encoder_fwd),
+            format!("{:.1}%", p.encoder_bwd),
+            format!("{:.1}%", p.mp_allreduce),
+            format!("{:.1}%", p.pp_p2p),
+        ]);
+    }
+    let headers: Vec<String> = [
+        "Config",
+        "Stage_Fwd",
+        "Stage_Bwd",
+        "DP_Allreduce",
+        "Update",
+        "Encoder_Fwd",
+        "Encoder_Bwd",
+        "MP_Allreduce",
+        "PP_P2P",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    format!(
+        "# Figure 3 — Component time-cost proportions on {} (estimated)\n\n\
+         Proportions sum past 100%: only Stage_Fwd/Stage_Bwd/DP_Allreduce/Update are\n\
+         mutually exclusive phases (see paper §IV-C).\n\n{}",
+        platform.name,
+        crate::report::tables::markdown_table(&headers, &rows)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::e2e::OraclePredictor;
+
+    #[test]
+    fn fig2_renders_both_timelines() {
+        let md = fig2_markdown(
+            &ModelCfg::llemma7b(),
+            &ParallelCfg::new(4, 2, 2),
+            &Platform::perlmutter(),
+        );
+        assert!(md.contains("Stage1"));
+        assert!(md.contains("Stage4"));
+        assert!(md.matches("```").count() >= 4);
+    }
+
+    #[test]
+    fn proportions_sane() {
+        let p = Platform::perlmutter();
+        let model = ModelCfg::gpt20b();
+        let par = ParallelCfg::new(4, 4, 8);
+        let mut oracle = OraclePredictor { platform: p.clone() };
+        let cp = predict(&model, &par, &p, &mut oracle);
+        let pr = proportions(&cp, &model, &par);
+        // pipeline phases dominate: fwd+bwd should be 70-100% of runtime
+        let main = pr.stage_fwd + pr.stage_bwd;
+        assert!((60.0..105.0).contains(&main), "stage share {main}");
+        // comms are small on Perlmutter mp=4 (intra-node)
+        assert!(pr.dp_allreduce < 20.0);
+        assert!(pr.pp_p2p < 10.0);
+        // encoder share sits within the stage share
+        assert!(pr.encoder_fwd <= pr.stage_fwd + 5.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Report generation: the markdown tables and figure series that
+//! regenerate every experimental artifact of the paper (Tables VIII-IX,
+//! Figures 2-3), written to reports/ and printed to stdout.
+
+pub mod tables;
+pub mod figures;
+
+pub use figures::{fig2_markdown, fig3_markdown};
+pub use tables::{markdown_table, table8_markdown, table9_markdown, PAPER_CONFIGS};
+
+use std::path::Path;
+
+/// Write a report file under reports/ (best-effort) and return the text.
+pub fn emit(name: &str, text: &str) -> String {
+    let dir = Path::new("reports");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let _ = std::fs::write(dir.join(name), text);
+    }
+    text.to_string()
+}

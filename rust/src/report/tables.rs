@@ -1,0 +1,160 @@
+//! Table VIII (performance stability) and Table IX (component-level
+//! prediction errors) generators.
+
+use crate::config::{ModelCfg, ParallelCfg, Platform};
+use crate::predictor::errors::ComponentErrors;
+use crate::predictor::registry::BatchPredictor;
+use crate::predictor::{evaluate, predict};
+use crate::trainrun::stability;
+use crate::util::stats;
+
+/// The five evaluation configurations of Tables VIII/IX:
+/// (model preset name, Pipeline-Model-Data).
+pub const PAPER_CONFIGS: [(&str, &str); 5] = [
+    ("gpt20b", "4-4-8"),
+    ("gpt20b", "4-8-4"),
+    ("gpt20b", "8-4-4"),
+    ("llama13b", "4-8-2"),
+    ("llemma7b", "4-2-2"),
+];
+
+pub fn paper_configs() -> Vec<(ModelCfg, ParallelCfg)> {
+    PAPER_CONFIGS
+        .iter()
+        .map(|(m, p)| {
+            (ModelCfg::by_name(m).unwrap(), ParallelCfg::parse(p).unwrap())
+        })
+        .collect()
+}
+
+/// Generic markdown table.
+pub fn markdown_table(headers: &[String], rows: &[Vec<String>]) -> String {
+    let mut s = format!("| {} |\n", headers.join(" | "));
+    s.push_str(&format!("|{}\n", "---|".repeat(headers.len())));
+    for r in rows {
+        s.push_str(&format!("| {} |\n", r.join(" | ")));
+    }
+    s
+}
+
+/// Table VIII: training-batch time statistics (min/max/avg + %increase)
+/// for the five configs on both platforms.
+pub fn table8_markdown(n_batches: usize, seed: u64) -> String {
+    let platforms = [Platform::perlmutter(), Platform::vista()];
+    let mut headers = vec!["Training Batch".to_string()];
+    for (m, p) in PAPER_CONFIGS {
+        for plat in ["P", "V"] {
+            headers.push(format!("{m}({p}) {plat}"));
+        }
+    }
+    let mut rows: Vec<Vec<String>> = vec![
+        vec!["Minimum".into()],
+        vec!["Maximum".into()],
+        vec!["Average".into()],
+        vec!["% Increase of Avg to Min".into()],
+    ];
+    for (model, par) in paper_configs() {
+        for platform in &platforms {
+            let st = stability(&model, &par, platform, n_batches, seed);
+            rows[0].push(format!("{:.2}", st.min_s));
+            rows[1].push(format!("{:.2}", st.max_s));
+            rows[2].push(format!("{:.2}", st.avg_s));
+            rows[3].push(format!("{:.2}%", st.pct_increase));
+        }
+    }
+    format!(
+        "# Table VIII — Training batch time statistics (s), {n_batches} batches/config\n\n{}",
+        markdown_table(&headers, &rows)
+    )
+}
+
+/// Table IX over one platform given a ready BatchPredictor.
+pub fn table9_errors(
+    platform: &Platform,
+    predictor: &mut dyn BatchPredictor,
+    n_batches: usize,
+    seed: u64,
+) -> Vec<ComponentErrors> {
+    paper_configs()
+        .into_iter()
+        .map(|(model, par)| {
+            let cp = predict(&model, &par, platform, predictor);
+            evaluate(&model, &par, platform, &cp, n_batches, seed)
+        })
+        .collect()
+}
+
+/// Render the Table IX markdown for (platform -> per-config errors).
+pub fn table9_markdown(results: &[(String, Vec<ComponentErrors>)]) -> String {
+    let mut headers = vec!["Component".to_string()];
+    for (plat, errs) in results {
+        let letter = if plat.starts_with('p') || plat.starts_with('P') { "P" } else { "V" };
+        for e in errs {
+            headers.push(format!("{} {letter}", e.label));
+        }
+    }
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (ci, name) in ComponentErrors::COMPONENT_NAMES.iter().enumerate() {
+        let mut row = vec![name.to_string()];
+        for (_plat, errs) in results {
+            for e in errs {
+                row.push(format!("{:+.2}%", e.values()[ci]));
+            }
+        }
+        rows.push(row);
+    }
+    // summary: mean |overall| per platform
+    let mut summary = String::new();
+    for (plat, errs) in results {
+        let overall: Vec<f64> = errs.iter().map(|e| e.overall.abs()).collect();
+        summary.push_str(&format!(
+            "- mean |overall error| on {}: **{:.2}%** (paper: 4.98% P / 9.38% V)\n",
+            plat,
+            stats::mean(&overall)
+        ));
+    }
+    format!(
+        "# Table IX — Component-level prediction errors (fastest measured batch)\n\n{}\n{}",
+        markdown_table(&headers, &rows),
+        summary
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::e2e::OraclePredictor;
+
+    #[test]
+    fn paper_configs_resolve() {
+        let c = paper_configs();
+        assert_eq!(c.len(), 5);
+        assert_eq!(c[0].1.gpus(), 128);
+        assert_eq!(c[4].1.gpus(), 16);
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let t = markdown_table(
+            &["a".into(), "b".into()],
+            &[vec!["1".into(), "2".into()]],
+        );
+        assert_eq!(t.lines().count(), 3);
+        assert!(t.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn table9_markdown_renders() {
+        let p = Platform::perlmutter();
+        let mut oracle = OraclePredictor { platform: p.clone() };
+        // only the cheapest config to keep the unit test fast
+        let model = ModelCfg::llemma7b();
+        let par = ParallelCfg::new(4, 2, 2);
+        let cp = predict(&model, &par, &p, &mut oracle);
+        let e = evaluate(&model, &par, &p, &cp, 2, 1);
+        let md = table9_markdown(&[("perlmutter".into(), vec![e])]);
+        assert!(md.contains("Encoder_Fwd"));
+        assert!(md.contains("Overall"));
+        assert!(md.contains("mean |overall error|"));
+    }
+}

@@ -1,0 +1,112 @@
+//! Artifact discovery + manifest parsing (artifacts/manifest.json, written
+//! by the AOT step; the single source of truth for padded shapes).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Padded AOT shapes (mirrors python/compile/kernels/shapes.py).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub batch: usize,
+    pub features: usize,
+    pub trees: usize,
+    pub nodes: usize,
+    pub depth: usize,
+    pub timeline_configs: usize,
+    pub timeline_stages: usize,
+    /// Forests predict log1p(µs) with expm1 folded into the graph.
+    pub log_space: bool,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let f = j.get("forest").context("manifest missing 'forest'")?;
+        let t = j.get("timeline").context("manifest missing 'timeline'")?;
+        let get = |o: &Json, k: &str| -> Result<usize> {
+            o.get(k)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("manifest missing {k}"))
+        };
+        Ok(Manifest {
+            batch: get(f, "batch")?,
+            features: get(f, "features")?,
+            trees: get(f, "trees")?,
+            nodes: get(f, "nodes")?,
+            depth: get(f, "depth")?,
+            timeline_configs: get(t, "configs")?,
+            timeline_stages: get(t, "stages")?,
+            log_space: j.get("log_space").and_then(|v| v.as_bool()).unwrap_or(false),
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Manifest::parse(&text)
+    }
+}
+
+/// Artifact directory: $FGPM_ARTIFACTS, else ./artifacts, else the
+/// nearest ancestor's artifacts/ (so tests work from target dirs).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("FGPM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": "hlo-text", "log_space": true,
+        "forest": {"batch": 256, "block_b": 64, "features": 8,
+                   "trees": 128, "nodes": 1024, "depth": 16, "leaf": -1,
+                   "inputs": ["feat"]},
+        "timeline": {"configs": 64, "stages": 16, "inputs": ["fwd"]}
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.trees, 128);
+        assert_eq!(m.depth, 16);
+        assert_eq!(m.timeline_configs, 64);
+        assert!(m.log_space);
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"forest": {}}"#).is_err());
+    }
+
+    #[test]
+    fn matches_kernel_limits() {
+        // the layout constants baked into forest training must agree with
+        // the real generated manifest when present
+        let dir = artifacts_dir();
+        if let Ok(m) = Manifest::load(&dir) {
+            assert_eq!(m.trees, crate::forest::ensemble::MAX_TREES);
+            assert_eq!(m.nodes, crate::forest::ensemble::MAX_NODES);
+            assert_eq!(m.depth, crate::forest::ensemble::MAX_DEPTH);
+            assert!(m.log_space);
+        }
+    }
+}

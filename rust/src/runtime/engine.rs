@@ -1,0 +1,209 @@
+//! The PJRT execution engine: compiles the two HLO-text artifacts once,
+//! then serves forest-inference and timeline-aggregation calls from the
+//! rust hot path.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`, with `to_tuple1()` unwrapping (the AOT
+//! step lowers with return_tuple=True).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::forest::FlatForest;
+use crate::predictor::registry::BatchPredictor;
+use crate::runtime::artifacts::{artifacts_dir, Manifest};
+use crate::sampling::DatasetKey;
+
+/// Device-ready literals for one operator's forest (uploaded once,
+/// reused for every batch routed to that operator).
+pub struct ForestBuffers {
+    node_feat: xla::Literal,
+    thresh: xla::Literal,
+    left: xla::Literal,
+    right: xla::Literal,
+    value: xla::Literal,
+    tree_w: xla::Literal,
+}
+
+impl ForestBuffers {
+    pub fn from_flat(flat: &FlatForest, m: &Manifest) -> Result<ForestBuffers> {
+        anyhow::ensure!(
+            flat.trees == m.trees && flat.nodes == m.nodes,
+            "flat forest layout {}x{} != manifest {}x{}",
+            flat.trees,
+            flat.nodes,
+            m.trees,
+            m.nodes
+        );
+        let tn = [m.trees as i64, m.nodes as i64];
+        Ok(ForestBuffers {
+            node_feat: xla::Literal::vec1(&flat.node_feat).reshape(&tn)?,
+            thresh: xla::Literal::vec1(&flat.thresh).reshape(&tn)?,
+            left: xla::Literal::vec1(&flat.left).reshape(&tn)?,
+            right: xla::Literal::vec1(&flat.right).reshape(&tn)?,
+            value: xla::Literal::vec1(&flat.value).reshape(&tn)?,
+            tree_w: xla::Literal::vec1(&flat.tree_w).reshape(&[m.trees as i64])?,
+        })
+    }
+}
+
+/// Inputs to one timeline (eq. 7) batch call; all slices are logically
+/// [configs][stages] (row-major) / [configs].
+pub struct TimelineBatch {
+    pub fwd: Vec<f32>,
+    pub bwd: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub dp_first: Vec<f32>,
+    pub update: Vec<f32>,
+    pub micro: Vec<f32>,
+    pub stages: Vec<f32>,
+}
+
+/// Compiled executables + manifest.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    forest_exe: xla::PjRtLoadedExecutable,
+    timeline_exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<Engine> {
+        Engine::load(&artifacts_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {name}"))
+        };
+        Ok(Engine {
+            manifest,
+            forest_exe: load("forest_infer.hlo.txt")?,
+            timeline_exe: load("timeline.hlo.txt")?,
+            client,
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload one operator forest.
+    pub fn prepare_forest(&self, flat: &FlatForest) -> Result<ForestBuffers> {
+        ForestBuffers::from_flat(flat, &self.manifest)
+    }
+
+    /// Run one padded batch: `feat` is row-major [batch x features]
+    /// (exactly manifest.batch rows). Returns µs predictions per row.
+    pub fn forest_infer(&self, feat: &[f32], forest: &ForestBuffers) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        anyhow::ensure!(
+            feat.len() == m.batch * m.features,
+            "feat len {} != {}x{}",
+            feat.len(),
+            m.batch,
+            m.features
+        );
+        let feat_lit =
+            xla::Literal::vec1(feat).reshape(&[m.batch as i64, m.features as i64])?;
+        let args: [&xla::Literal; 7] = [
+            &feat_lit,
+            &forest.node_feat,
+            &forest.thresh,
+            &forest.left,
+            &forest.right,
+            &forest.value,
+            &forest.tree_w,
+        ];
+        let result = self.forest_exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(result.to_vec::<f32>()?)
+    }
+
+    /// Run one timeline batch (eq. 7 over manifest.timeline_configs
+    /// configurations). Returns total runtimes.
+    pub fn timeline(&self, b: &TimelineBatch) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let (c, s) = (m.timeline_configs, m.timeline_stages);
+        anyhow::ensure!(b.fwd.len() == c * s && b.micro.len() == c, "timeline batch shape");
+        let cs = [c as i64, s as i64];
+        let c1 = [c as i64];
+        let lits = [
+            xla::Literal::vec1(&b.fwd).reshape(&cs)?,
+            xla::Literal::vec1(&b.bwd).reshape(&cs)?,
+            xla::Literal::vec1(&b.mask).reshape(&cs)?,
+            xla::Literal::vec1(&b.dp_first).reshape(&c1)?,
+            xla::Literal::vec1(&b.update).reshape(&cs)?,
+            xla::Literal::vec1(&b.micro).reshape(&c1)?,
+            xla::Literal::vec1(&b.stages).reshape(&c1)?,
+        ];
+        let args: Vec<&xla::Literal> = lits.iter().collect();
+        let result = self.timeline_exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(result.to_vec::<f32>()?)
+    }
+}
+
+/// [`BatchPredictor`] over the XLA path: routes each operator's queries
+/// to its uploaded forest, padding ragged batches to the AOT batch size.
+/// This is the predictor the coordinator serves; `Registry` (native) and
+/// this must agree to float precision (verified in integration tests).
+pub struct XlaForestPredictor {
+    pub engine: Engine,
+    pub forests: std::collections::HashMap<DatasetKey, ForestBuffers>,
+}
+
+impl XlaForestPredictor {
+    pub fn new(
+        engine: Engine,
+        flat: &std::collections::HashMap<DatasetKey, FlatForest>,
+    ) -> Result<XlaForestPredictor> {
+        let mut forests = std::collections::HashMap::new();
+        for (k, f) in flat {
+            forests.insert(*k, engine.prepare_forest(f)?);
+        }
+        Ok(XlaForestPredictor { engine, forests })
+    }
+
+    /// Pad `rows` into [batch x features] chunks and run them all.
+    pub fn infer_rows(&self, key: DatasetKey, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let m = &self.engine.manifest;
+        let forest = self
+            .forests
+            .get(&key)
+            .with_context(|| format!("no uploaded forest for {key:?}"))?;
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(m.batch) {
+            let mut feat = vec![0f32; m.batch * m.features];
+            for (i, row) in chunk.iter().enumerate() {
+                anyhow::ensure!(row.len() <= m.features, "row wider than pad");
+                for (j, &v) in row.iter().enumerate() {
+                    feat[i * m.features + j] = v as f32;
+                }
+            }
+            let pred = self.engine.forest_infer(&feat, forest)?;
+            out.extend(pred[..chunk.len()].iter().map(|&v| v as f64));
+        }
+        Ok(out)
+    }
+}
+
+impl BatchPredictor for XlaForestPredictor {
+    fn predict_batch(&mut self, key: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+        self.infer_rows(key, rows).expect("XLA forest inference failed")
+    }
+}
+
+// Engine tests live in rust/tests/integration_runtime.rs (they need the
+// artifacts from `make artifacts`).

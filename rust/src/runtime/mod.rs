@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python is NEVER invoked here — the artifacts are self-contained.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{artifacts_dir, Manifest};
+pub use engine::{Engine, ForestBuffers, XlaForestPredictor};

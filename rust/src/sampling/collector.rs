@@ -1,0 +1,308 @@
+//! The micro-benchmark measurement protocol and per-operator dataset
+//! collection.
+//!
+//! Protocol (paper §III-A "Profiling and Measuring Infrastructure"):
+//! 10-iteration warmup, 10 measured iterations, and the mean of the
+//! sorted median 5 samples as the final value. Operators execute in
+//! isolation (no overlap) so each gets the whole simulated GPU.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::config::Platform;
+use crate::ops::build::{
+    compute_op, optimizer, Workload,
+};
+use crate::ops::{Dir, LoweredOp, OpInstance, OpKind};
+use crate::sampling::plans::{comm_plan, compute_plan, optimizer_plan};
+use crate::sim::ClusterSim;
+use crate::util::csv::Table;
+use crate::util::stats;
+
+/// Datasets are keyed by (operator, direction); communication ops only
+/// have a forward dataset.
+pub type DatasetKey = (OpKind, Dir);
+
+/// One operator's collected samples: feature rows + measured latencies.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    /// Unpadded Table-I feature vectors.
+    pub x: Vec<Vec<f64>>,
+    /// Measured latency, µs (median-5 mean of the protocol).
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn push(&mut self, features: Vec<f64>, latency_us: f64) {
+        self.x.push(features);
+        self.y.push(latency_us);
+    }
+
+    /// Deterministic 80/20 split (every 5th row validates) — the paper's
+    /// regressor-selection protocol.
+    pub fn split_80_20(&self) -> (Dataset, Dataset) {
+        let mut train = Dataset::default();
+        let mut val = Dataset::default();
+        for i in 0..self.len() {
+            if i % 5 == 4 {
+                val.push(self.x[i].clone(), self.y[i]);
+            } else {
+                train.push(self.x[i].clone(), self.y[i]);
+            }
+        }
+        (train, val)
+    }
+
+    pub fn to_table(&self) -> Table {
+        let width = self.x.first().map_or(0, |r| r.len());
+        let mut cols: Vec<String> = (0..width).map(|i| format!("f{i}")).collect();
+        cols.push("latency_us".to_string());
+        let mut t = Table::new(&cols.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for (xi, yi) in self.x.iter().zip(&self.y) {
+            let mut row = xi.clone();
+            row.push(*yi);
+            t.push(row);
+        }
+        t
+    }
+
+    pub fn from_table(t: &Table) -> Dataset {
+        let mut ds = Dataset::default();
+        let w = t.columns.len() - 1;
+        for r in &t.rows {
+            ds.push(r[..w].to_vec(), r[w]);
+        }
+        ds
+    }
+}
+
+/// Measure one lowered op with the paper's protocol. Each measurement is
+/// its own epoch (benchmarks run at a different time than training, so
+/// they see an independent fabric state).
+pub fn measure_us(sim: &mut ClusterSim, op: &LoweredOp) -> f64 {
+    sim.new_epoch();
+    for _ in 0..10 {
+        let _ = sim.sample_us(op); // warmup (discarded)
+    }
+    let samples: Vec<f64> = (0..10).map(|_| sim.sample_us(op)).collect();
+    stats::median5_mean(&samples)
+}
+
+fn record(
+    out: &mut HashMap<DatasetKey, Dataset>,
+    seen: &mut HashMap<DatasetKey, Vec<Vec<u64>>>,
+    sim: &mut ClusterSim,
+    op: &OpInstance,
+) {
+    let key = (op.kind, op.dir);
+    // Dedupe identical feature vectors (many Table-VI grid points collapse
+    // for operators that ignore h, etc.).
+    let bits: Vec<u64> = op.features.iter().map(|f| f.to_bits()).collect();
+    let seen_list = seen.entry(key).or_default();
+    if seen_list.contains(&bits) {
+        return;
+    }
+    seen_list.push(bits);
+    let y = measure_us(sim, &op.lowered);
+    out.entry(key).or_default().push(op.features.clone(), y);
+}
+
+/// Collect the full per-operator dataset family for one platform:
+/// every compute operator over the Table-VI grid (fwd + bwd), every
+/// communication operator over the Table-VII grid, and the optimizer.
+pub fn collect_platform(platform: &Platform, seed: u64) -> HashMap<DatasetKey, Dataset> {
+    let mut sim = ClusterSim::new(platform.clone(), seed);
+    let mut out: HashMap<DatasetKey, Dataset> = HashMap::new();
+    let mut seen: HashMap<DatasetKey, Vec<Vec<u64>>> = HashMap::new();
+
+    const COMPUTE_KINDS: [OpKind; 17] = [
+        OpKind::Embedding,
+        OpKind::LayerNorm,
+        OpKind::RmsNorm,
+        OpKind::Linear1,
+        OpKind::Rope,
+        OpKind::QkT,
+        OpKind::Fillmask,
+        OpKind::Softmax,
+        OpKind::FusedSoftmax,
+        OpKind::AttnV,
+        OpKind::FlashAttention,
+        OpKind::Linear2,
+        OpKind::Linear3,
+        OpKind::Glue,
+        OpKind::Linear4,
+        OpKind::FinalLinear,
+        OpKind::ParallelCrossEntropy,
+    ];
+
+    for p in compute_plan() {
+        let wl = Workload::synthetic(p.b, p.l, p.d, p.h, 50257, p.mp, platform, 2);
+        for kind in COMPUTE_KINDS {
+            for dir in [Dir::Fwd, Dir::Bwd] {
+                let op = compute_op(kind, &wl, dir);
+                record(&mut out, &mut seen, &mut sim, &op);
+            }
+        }
+    }
+
+    // Communication operators (geometry embedded in the plan points).
+    for kind in [OpKind::MpAllReduce, OpKind::DpAllReduce, OpKind::DpAllGather, OpKind::PpP2p] {
+        for c in comm_plan(kind, platform) {
+            let op = comm_instance(kind, c.entries, c.geom);
+            record(&mut out, &mut seen, &mut sim, &op);
+        }
+    }
+
+    for (mp, dim, enc) in optimizer_plan() {
+        let wl = Workload::synthetic(4, 2048, 4096, 32, 50257, mp.min(16), platform, 2);
+        let op = optimizer(dim, enc, &wl);
+        record(&mut out, &mut seen, &mut sim, &op);
+    }
+
+    out
+}
+
+/// Build a comm OpInstance directly from (entries, geometry) — the
+/// micro-benchmark form, bypassing a model workload.
+pub fn comm_instance(kind: OpKind, entries: f64, geom: crate::net::CommGeom) -> OpInstance {
+    let features = vec![entries, geom.nodes as f64, geom.gpus_per_node as f64];
+    let bytes = entries * 2.0;
+    let lowered = match kind {
+        OpKind::MpAllReduce | OpKind::DpAllReduce => LoweredOp::AllReduce { bytes, geom },
+        OpKind::DpAllGather => LoweredOp::AllGather { bytes_out: bytes, geom },
+        OpKind::PpP2p => LoweredOp::P2p { bytes, inter_node: geom.nodes > 1 },
+        other => panic!("{other:?} is not a communication op"),
+    };
+    OpInstance { kind, dir: Dir::Fwd, features, lowered }
+}
+
+/// Persist all datasets under `dir/<platform>/<op>_<dir>.csv`.
+pub fn save_datasets(
+    datasets: &HashMap<DatasetKey, Dataset>,
+    platform: &Platform,
+    dir: &Path,
+) -> std::io::Result<()> {
+    for ((kind, d), ds) in datasets {
+        let path = dir
+            .join(platform.name)
+            .join(format!("{}_{}.csv", kind.name().replace(['^', '/'], ""), d.name()));
+        ds.to_table()
+            .save(&path)
+            .map_err(|e| std::io::Error::other(e.to_string()))?;
+    }
+    Ok(())
+}
+
+/// Load datasets persisted by [`save_datasets`].
+pub fn load_datasets(
+    platform: &Platform,
+    dir: &Path,
+) -> std::io::Result<HashMap<DatasetKey, Dataset>> {
+    let mut out = HashMap::new();
+    let pdir = dir.join(platform.name);
+    for entry in std::fs::read_dir(&pdir)? {
+        let path = entry?.path();
+        let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else { continue };
+        let Some((op_part, dir_part)) = stem.rsplit_once('_') else { continue };
+        let Some(kind) = OpKind::ALL
+            .iter()
+            .copied()
+            .find(|k| k.name().replace(['^', '/'], "") == op_part)
+        else {
+            continue;
+        };
+        let d = match dir_part {
+            "fwd" => Dir::Fwd,
+            "bwd" => Dir::Bwd,
+            _ => continue,
+        };
+        let t = Table::load(&path).map_err(|e| std::io::Error::other(e.to_string()))?;
+        out.insert((kind, d), Dataset::from_table(&t));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::CommGeom;
+
+    #[test]
+    fn protocol_uses_median5() {
+        let mut sim = ClusterSim::new(Platform::perlmutter(), 5);
+        let wl = Workload::synthetic(4, 2048, 4096, 32, 50257, 2, &Platform::perlmutter(), 2);
+        let op = compute_op(OpKind::Linear1, &wl, Dir::Fwd);
+        let m = measure_us(&mut sim, &op.lowered);
+        let det = sim.deterministic_us(&op.lowered);
+        assert!((m - det).abs() / det < 0.02, "measured {m} det {det}");
+    }
+
+    #[test]
+    fn dataset_split_ratio() {
+        let mut ds = Dataset::default();
+        for i in 0..100 {
+            ds.push(vec![i as f64], i as f64);
+        }
+        let (tr, va) = ds.split_80_20();
+        assert_eq!(tr.len(), 80);
+        assert_eq!(va.len(), 20);
+    }
+
+    #[test]
+    fn dataset_table_roundtrip() {
+        let mut ds = Dataset::default();
+        ds.push(vec![1.0, 2.0], 10.0);
+        ds.push(vec![3.0, 4.0], 20.0);
+        let t = ds.to_table();
+        let ds2 = Dataset::from_table(&t);
+        assert_eq!(ds.x, ds2.x);
+        assert_eq!(ds.y, ds2.y);
+    }
+
+    #[test]
+    fn comm_instance_shapes() {
+        let op = comm_instance(OpKind::DpAllGather, 1e8, CommGeom::new(4, 1));
+        assert_eq!(op.features, vec![1e8, 4.0, 1.0]);
+        assert!(op.lowered.is_comm());
+    }
+
+    // Full collection is exercised by integration tests; here we keep a
+    // small smoke check that every op family yields data.
+    #[test]
+    fn collect_small_smoke() {
+        // NOTE: full Table-VI collection is a few thousand points; this
+        // test bounds runtime by checking the result structure only.
+        let platform = Platform::perlmutter();
+        let data = collect_platform(&platform, 11);
+        // 17 compute kinds x 2 dirs + 4 comm + optimizer = 39 datasets
+        assert_eq!(data.len(), 17 * 2 + 4 + 1);
+        for ((kind, dir), ds) in &data {
+            assert!(!ds.is_empty(), "{kind:?} {dir:?} empty");
+            assert!(ds.y.iter().all(|&y| y > 0.0));
+        }
+        // GEMM datasets should be big; dedupe keeps them distinct
+        assert!(data[&(OpKind::Linear1, Dir::Fwd)].len() > 100);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let platform = Platform::perlmutter();
+        let mut datasets: HashMap<DatasetKey, Dataset> = HashMap::new();
+        let mut ds = Dataset::default();
+        ds.push(vec![1.0, 2.0, 3.0], 5.5);
+        datasets.insert((OpKind::QkT, Dir::Fwd), ds);
+        let dir = std::env::temp_dir().join("fgpm_ds_test");
+        save_datasets(&datasets, &platform, &dir).unwrap();
+        let back = load_datasets(&platform, &dir).unwrap();
+        assert_eq!(back[&(OpKind::QkT, Dir::Fwd)].y, vec![5.5]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

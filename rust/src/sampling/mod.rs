@@ -1,0 +1,8 @@
+//! Performance data collection (paper §III-A): micro-benchmark protocol,
+//! sampling plans (Tables VI-VII), and dataset assembly.
+
+pub mod plans;
+pub mod collector;
+
+pub use collector::{collect_platform, measure_us, Dataset, DatasetKey};
+pub use plans::{comm_plan, compute_plan, optimizer_plan, SamplePoint};

@@ -1,0 +1,202 @@
+//! Sampling plans: the parameter grids of Table VI (computing kernels) and
+//! Table VII (communication kernels), filtered to architecturally valid
+//! combinations and deduplicated per operator.
+
+use crate::config::Platform;
+use crate::net::CommGeom;
+use crate::ops::OpKind;
+
+/// One grid point for computing-kernel benchmarks (Table VI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SamplePoint {
+    pub mp: usize,
+    pub b: usize,
+    pub h: usize,
+    pub l: usize,
+    pub d: usize,
+}
+
+/// Table VI: mp 1 -> 16 (x2); b 4 -> 8 (x2); h 16 -> 80 (+8);
+/// l 1024 -> 5120 (+512); d 2048 -> 8129 (+512). Filtered so that heads
+/// divide the hidden dim and mp divides both (otherwise the operator does
+/// not exist in the framework).
+pub fn compute_plan() -> Vec<SamplePoint> {
+    let mps = [1usize, 2, 4, 8, 16];
+    let bs = [4usize, 8];
+    let hs: Vec<usize> = (16..=80).step_by(8).collect();
+    let ls: Vec<usize> = (1024..=5120).step_by(512).collect();
+    let ds: Vec<usize> = (2048..=8129).step_by(512).collect();
+    let mut out = Vec::new();
+    for &mp in &mps {
+        for &b in &bs {
+            for &h in &hs {
+                if h % mp != 0 {
+                    continue;
+                }
+                for &l in &ls {
+                    for &d in &ds {
+                        if d % h != 0 || d % mp != 0 || (d / h) % 2 != 0 {
+                            continue;
+                        }
+                        out.push(SamplePoint { mp, b, h, l, d });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One communication benchmark point: entry count + group geometry.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CommPoint {
+    pub entries: f64,
+    pub geom: CommGeom,
+}
+
+fn doubling(start: f64, end: f64, offset: f64) -> Vec<f64> {
+    let mut v = Vec::new();
+    let mut x = start;
+    while x <= end * 1.0001 {
+        v.push(x);
+        v.push(x + offset);
+        x *= 2.0;
+    }
+    v
+}
+
+/// Geometries for a `procs`-member group on a platform: every layout the
+/// scheduler could produce (packed multi-GPU nodes, spread across nodes,
+/// and intermediate splits) — "benchmarked across layouts to reflect
+/// topology effects" (§III-A).
+fn layouts(procs: usize, platform: &Platform) -> Vec<CommGeom> {
+    let mut v = Vec::new();
+    let gpn_max = platform.gpus_per_node;
+    let mut gpn = gpn_max.min(procs);
+    while gpn >= 1 {
+        if procs % gpn == 0 {
+            v.push(CommGeom::new(procs / gpn, gpn));
+        }
+        gpn /= 2;
+    }
+    v.dedup();
+    v
+}
+
+/// Table VII sampling ranges per communication operator.
+pub fn comm_plan(kind: OpKind, platform: &Platform) -> Vec<CommPoint> {
+    let (start, end, offset, procs): (f64, f64, f64, Vec<usize>) = match kind {
+        OpKind::MpAllReduce => (2.09e7, 1.34e8, 6.55e4, vec![2, 4, 8]),
+        OpKind::DpAllReduce => (1.34e8, 1.20e9, 2.40e6, vec![2, 4, 8]),
+        OpKind::DpAllGather => (1.34e8, 6.01e8, 2.40e6, vec![2, 4, 8]),
+        OpKind::PpP2p => (2.09e6, 1.34e8, 6.55e4, vec![2]),
+        other => panic!("{other:?} is not a communication op"),
+    };
+    let mut out = Vec::new();
+    for &p in &procs {
+        for geom in layouts(p, platform) {
+            for e in doubling(start, end, offset) {
+                out.push(CommPoint { entries: e, geom });
+            }
+        }
+    }
+    out
+}
+
+/// Optimizer (FusedAdam) sampling: log-spaced local parameter counts x mp
+/// x encoder counts (features per Table I: [|mp|, dim, |encoders|]).
+pub fn optimizer_plan() -> Vec<(usize, f64, usize)> {
+    let mut out = Vec::new();
+    for mp in [1usize, 2, 4, 8, 16] {
+        for k in 0..10 {
+            let dim = 1e7 * 2f64.powi(k); // 1e7 .. 5.1e9
+            for enc in [4usize, 11, 16] {
+                out.push((mp, dim, enc));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_plan_nonempty_and_valid() {
+        let plan = compute_plan();
+        assert!(plan.len() > 500, "{}", plan.len());
+        for p in &plan {
+            assert_eq!(p.h % p.mp, 0);
+            assert_eq!(p.d % p.h, 0);
+            assert_eq!(p.d % p.mp, 0);
+        }
+    }
+
+    #[test]
+    fn compute_plan_covers_target_models() {
+        let plan = compute_plan();
+        // GPT-20B dims (d=6144, h=64) and LLaMA (d=5120, h=40) reachable
+        assert!(plan.iter().any(|p| p.d == 6144 && p.h == 64 && p.mp == 4));
+        assert!(plan.iter().any(|p| p.d == 5120 && p.h == 40 && p.mp == 8));
+        assert!(plan.iter().any(|p| p.d == 4096 && p.h == 32 && p.mp == 2));
+        // sequence range must bracket l=2048 and l=4096
+        assert!(plan.iter().any(|p| p.l == 2048));
+        assert!(plan.iter().any(|p| p.l == 4608));
+    }
+
+    #[test]
+    fn table_vi_bounds_respected() {
+        let plan = compute_plan();
+        for p in &plan {
+            assert!((1..=16).contains(&p.mp));
+            assert!(p.b == 4 || p.b == 8);
+            assert!((16..=80).contains(&p.h));
+            assert!((1024..=5120).contains(&p.l));
+            assert!((2048..=8129).contains(&p.d));
+        }
+    }
+
+    #[test]
+    fn comm_plan_ranges() {
+        let p = Platform::perlmutter();
+        let mp = comm_plan(OpKind::MpAllReduce, &p);
+        assert!(!mp.is_empty());
+        let lo = mp.iter().map(|c| c.entries).fold(f64::INFINITY, f64::min);
+        let hi = mp.iter().map(|c| c.entries).fold(0.0, f64::max);
+        assert!(lo >= 2.09e7 && hi <= 1.35e8, "{lo} {hi}");
+        let dp = comm_plan(OpKind::DpAllReduce, &p);
+        assert!(dp.iter().any(|c| c.entries >= 1.0e9));
+    }
+
+    #[test]
+    fn perlmutter_layouts_include_packed_and_spread() {
+        let p = Platform::perlmutter();
+        let pts = comm_plan(OpKind::MpAllReduce, &p);
+        // 8 procs: packed (2 nodes x 4) and spread (8 x 1) both sampled
+        assert!(pts.iter().any(|c| c.geom == CommGeom::new(2, 4)));
+        assert!(pts.iter().any(|c| c.geom == CommGeom::new(8, 1)));
+    }
+
+    #[test]
+    fn vista_layouts_single_gpu_nodes_only() {
+        let v = Platform::vista();
+        for c in comm_plan(OpKind::DpAllReduce, &v) {
+            assert_eq!(c.geom.gpus_per_node, 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not a communication op")]
+    fn comm_plan_rejects_compute_ops() {
+        comm_plan(OpKind::Linear1, &Platform::perlmutter());
+    }
+
+    #[test]
+    fn optimizer_plan_log_spaced() {
+        let plan = optimizer_plan();
+        assert!(plan.len() >= 100);
+        assert!(plan.iter().any(|&(_, d, _)| d > 4e9));
+        assert!(plan.iter().any(|&(_, d, _)| d < 2e7));
+    }
+}

@@ -1,0 +1,160 @@
+//! Benchmark runner (replaces criterion; `cargo bench` targets set
+//! `harness = false` and drive this).
+//!
+//! Mirrors the paper's measurement protocol at the harness level: warmup
+//! iterations, N timed iterations, and robust central statistics
+//! (median + median-5 mean) so one-off scheduler hiccups don't skew rows.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub p95_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "| {} | {} | {:.1} | {:.1} | {:.1} | {:.1} | {:.1} |",
+            self.name, self.iters, self.min_us, self.median_us, self.mean_us,
+            self.p95_us, self.max_us
+        )
+    }
+}
+
+/// A group of benchmark cases rendered as one markdown table.
+pub struct Bench {
+    title: String,
+    warmup: usize,
+    iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Self {
+        // Keep bench runtime bounded on the 1-core CI box; override per-case
+        // via with_iters when a workload is very fast/slow.
+        Bench { title: title.to_string(), warmup: 3, iters: 10, results: Vec::new() }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, iters: usize) -> Self {
+        self.warmup = warmup;
+        self.iters = iters;
+        self
+    }
+
+    /// Time `f` (called once per iteration); records robust stats.
+    pub fn case<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_us: stats::median5_mean(&samples),
+            median_us: stats::median(&samples),
+            p95_us: stats::percentile(&samples, 95.0),
+            min_us: stats::min(&samples),
+            max_us: stats::max(&samples),
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Render the whole group as a markdown table.
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "## {}\n\n| case | iters | min µs | median µs | mean(med5) µs | p95 µs | max µs |\n|---|---|---|---|---|---|---|\n",
+            self.title
+        );
+        for r in &self.results {
+            s.push_str(&r.row());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Print to stdout and also persist under reports/ for EXPERIMENTS.md.
+    pub fn finish(&self) {
+        let rep = self.report();
+        println!("{rep}");
+        let fname = format!(
+            "reports/bench_{}.md",
+            self.title.to_lowercase().replace([' ', '/', '(', ')'], "_")
+        );
+        if std::fs::create_dir_all("reports").is_ok() {
+            let _ = std::fs::write(&fname, &rep);
+        }
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_all_cases() {
+        let mut b = Bench::new("unit").with_iters(1, 3);
+        b.case("noop", || {
+            black_box(1 + 1);
+        });
+        b.case("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            black_box(s);
+        });
+        assert_eq!(b.results().len(), 2);
+        assert!(b.results()[0].min_us <= b.results()[0].max_us);
+    }
+
+    #[test]
+    fn report_is_markdown_table() {
+        let mut b = Bench::new("unit2").with_iters(0, 2);
+        b.case("x", || {
+            black_box(0);
+        });
+        let rep = b.report();
+        assert!(rep.contains("## unit2"));
+        assert!(rep.contains("| x | 2 |"));
+        assert!(rep.lines().filter(|l| l.starts_with('|')).count() >= 3);
+    }
+
+    #[test]
+    fn stats_ordering_invariant() {
+        let mut b = Bench::new("unit3").with_iters(0, 8);
+        b.case("work", || {
+            let mut v: Vec<u64> = (0..2000).rev().collect();
+            v.sort();
+            black_box(v);
+        });
+        let r = &b.results()[0];
+        assert!(r.min_us <= r.median_us && r.median_us <= r.max_us);
+        assert!(r.p95_us <= r.max_us + 1e-9);
+    }
+}

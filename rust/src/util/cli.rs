@@ -1,0 +1,219 @@
+//! Declarative command-line flag parsing (replaces clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! args, and generates `--help` text from declared options.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+}
+
+/// Declarative spec: a named subcommand with options.
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Spec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Spec { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let d = match (&o.default, o.is_flag) {
+                (_, true) => String::new(),
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+        }
+        s
+    }
+
+    /// Parse raw argv (without the program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // seed defaults
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if opt.is_flag {
+                    args.flags.push(name);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    args.values.insert(name, v);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name).unwrap_or_default().to_string()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        v.parse().map_err(|_| CliError::BadValue(name.into(), v.into()))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        v.parse().map_err(|_| CliError::BadValue(name.into(), v.into()))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        v.parse().map_err(|_| CliError::BadValue(name.into(), v.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new("demo", "test spec")
+            .opt("platform", "perlmutter", "target platform")
+            .opt("seed", "42", "rng seed")
+            .req("model", "model preset")
+            .flag("verbose", "log more")
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = spec().parse(&argv(&["--model", "gpt20b"])).unwrap();
+        assert_eq!(a.str("platform"), "perlmutter");
+        assert_eq!(a.usize("seed").unwrap(), 42);
+        assert_eq!(a.str("model"), "gpt20b");
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = spec()
+            .parse(&argv(&["--model=llama13b", "--seed=7", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.str("model"), "llama13b");
+        assert_eq!(a.u64("seed").unwrap(), 7);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            spec().parse(&argv(&["--nope", "x"])),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            spec().parse(&argv(&["--model"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_numeric_value() {
+        let a = spec().parse(&argv(&["--model", "m", "--seed", "xyz"])).unwrap();
+        assert!(matches!(a.usize("seed"), Err(CliError::BadValue(_, _))));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = spec().parse(&argv(&["--model", "m", "extra1", "extra2"])).unwrap();
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = spec().help_text();
+        assert!(h.contains("--platform"));
+        assert!(h.contains("required"));
+        assert!(h.contains("default: 42"));
+    }
+}

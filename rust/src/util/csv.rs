@@ -1,0 +1,198 @@
+//! Tiny CSV reader/writer for persisted micro-benchmark datasets
+//! (`fgpm collect` output, consumed by `fgpm train`).
+//!
+//! The dialect is deliberately simple — numeric cells plus a header row of
+//! bare identifiers — because we only persist our own datasets. Quoting is
+//! supported on read for robustness, never emitted on write.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A numeric table with named columns.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CsvError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {0}: expected {1} cells, got {2}")]
+    Ragged(usize, usize, usize),
+    #[error("line {0}: bad number '{1}'")]
+    BadNumber(usize, String),
+    #[error("empty csv")]
+    Empty,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Table {
+        Table { columns: columns.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len(), "row arity");
+        self.rows.push(row);
+    }
+
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+
+    /// Extract one column by name.
+    pub fn col(&self, name: &str) -> Option<Vec<f64>> {
+        let i = self.col_index(name)?;
+        Some(self.rows.iter().map(|r| r[i]).collect())
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.columns.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            let mut first = true;
+            for x in r {
+                if !first {
+                    s.push(',');
+                }
+                first = false;
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    let _ = write!(s, "{}", *x as i64);
+                } else {
+                    let _ = write!(s, "{x}");
+                }
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), CsvError> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+
+    pub fn parse(text: &str) -> Result<Table, CsvError> {
+        let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+        let (_, header) = lines.next().ok_or(CsvError::Empty)?;
+        let columns: Vec<String> = split_line(header).into_iter().collect();
+        let mut rows = Vec::new();
+        for (ln, line) in lines {
+            let cells = split_line(line);
+            if cells.len() != columns.len() {
+                return Err(CsvError::Ragged(ln + 1, columns.len(), cells.len()));
+            }
+            let mut row = Vec::with_capacity(cells.len());
+            for c in cells {
+                row.push(
+                    c.trim()
+                        .parse::<f64>()
+                        .map_err(|_| CsvError::BadNumber(ln + 1, c.clone()))?,
+                );
+            }
+            rows.push(row);
+        }
+        Ok(Table { columns, rows })
+    }
+
+    pub fn load(path: &Path) -> Result<Table, CsvError> {
+        Table::parse(&std::fs::read_to_string(path)?)
+    }
+}
+
+fn split_line(line: &str) -> Vec<String> {
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    for c in line.chars() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                cells.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    cells.push(cur);
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut t = Table::new(&["a", "b", "lat_us"]);
+        t.push(vec![1.0, 2.0, 3.25]);
+        t.push(vec![4.0, 5.0, 6.0]);
+        let t2 = Table::parse(&t.to_csv()).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn col_extraction() {
+        let mut t = Table::new(&["x", "y"]);
+        t.push(vec![1.0, 10.0]);
+        t.push(vec![2.0, 20.0]);
+        assert_eq!(t.col("y").unwrap(), vec![10.0, 20.0]);
+        assert!(t.col("z").is_none());
+    }
+
+    #[test]
+    fn integers_written_clean() {
+        let mut t = Table::new(&["n"]);
+        t.push(vec![42.0]);
+        assert!(t.to_csv().contains("\n42\n"));
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        assert!(matches!(
+            Table::parse("a,b\n1,2,3\n"),
+            Err(CsvError::Ragged(2, 2, 3))
+        ));
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        assert!(matches!(
+            Table::parse("a\nxyz\n"),
+            Err(CsvError::BadNumber(2, _))
+        ));
+    }
+
+    #[test]
+    fn blank_lines_skipped() {
+        let t = Table::parse("a,b\n\n1,2\n\n3,4\n").unwrap();
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn quoted_cells() {
+        let t = Table::parse("a,b\n\"1\",2\n").unwrap();
+        assert_eq!(t.rows[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_enforced_on_push() {
+        let mut t = Table::new(&["a"]);
+        t.push(vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn save_load_file() {
+        let dir = std::env::temp_dir().join("fgpm_csv_test");
+        let path = dir.join("t.csv");
+        let mut t = Table::new(&["q"]);
+        t.push(vec![7.5]);
+        t.save(&path).unwrap();
+        assert_eq!(Table::load(&path).unwrap(), t);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,10 @@
+//! Infrastructure substrates built in-repo (this environment has no crates
+//! beyond the `xla` closure — see DESIGN.md §3 "Offline-crate substrates").
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod cli;
+pub mod propcheck;
+pub mod benchkit;
+pub mod csv;

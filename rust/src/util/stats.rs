@@ -1,0 +1,185 @@
+//! Descriptive statistics used by the measurement protocol, the stability
+//! analysis (Table VIII), and prediction-error reporting (Table IX).
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1); 0.0 for fewer than 2 points.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+fn sorted(xs: &[f64]) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v
+}
+
+/// Median; 0.0 for empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let v = sorted(xs);
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let v = sorted(xs);
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// The paper's measurement statistic: "the mean of sorted median 5 samples"
+/// — sort the measured iterations, take the middle five, average them.
+/// Falls back to the plain median band for fewer than 5 samples.
+pub fn median5_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let v = sorted(xs);
+    let k = 5.min(v.len());
+    let start = (v.len() - k) / 2;
+    mean(&v[start..start + k])
+}
+
+/// Signed relative error in percent: 100 * (pred - actual) / actual.
+/// Matches the sign convention of Table IX (negative = underestimate).
+pub fn rel_err_pct(pred: f64, actual: f64) -> f64 {
+    if actual == 0.0 {
+        return if pred == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    100.0 * (pred - actual) / actual
+}
+
+/// Mean absolute percentage error over paired slices.
+pub fn mape(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    mean(
+        &pred
+            .iter()
+            .zip(actual)
+            .map(|(p, a)| rel_err_pct(*p, *a).abs())
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// Coefficient of determination R^2.
+pub fn r2(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    let m = mean(actual);
+    let ss_tot: f64 = actual.iter().map(|a| (a - m).powi(2)).sum();
+    let ss_res: f64 = pred.iter().zip(actual).map(|(p, a)| (a - p).powi(2)).sum();
+    if ss_tot == 0.0 {
+        return if ss_res == 0.0 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(stddev(&[]), 0.0);
+        assert_eq!(median5_mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn stddev_known() {
+        let s = stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s - 2.138).abs() < 0.01, "{s}");
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert_eq!(percentile(&xs, 50.0), 25.0);
+    }
+
+    #[test]
+    fn median5_mean_takes_central_band() {
+        // sorted: 1..=9; middle five are 3,4,5,6,7 -> mean 5
+        let xs = [9.0, 1.0, 8.0, 2.0, 7.0, 3.0, 6.0, 4.0, 5.0];
+        assert_eq!(median5_mean(&xs), 5.0);
+    }
+
+    #[test]
+    fn median5_mean_short_input() {
+        assert_eq!(median5_mean(&[2.0, 4.0]), 3.0);
+    }
+
+    #[test]
+    fn median5_mean_rejects_outliers() {
+        // an extreme outlier must not move the central band
+        let xs = [10.0, 10.1, 10.2, 10.3, 10.4, 10.5, 500.0];
+        let v = median5_mean(&xs);
+        assert!(v < 11.0, "{v}");
+    }
+
+    #[test]
+    fn rel_err_sign_convention() {
+        assert_eq!(rel_err_pct(90.0, 100.0), -10.0); // underestimate < 0
+        assert_eq!(rel_err_pct(110.0, 100.0), 10.0);
+    }
+
+    #[test]
+    fn mape_basic() {
+        assert!((mape(&[90.0, 110.0], &[100.0, 100.0]) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean_predictor() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(r2(&a, &a), 1.0);
+        let m = [2.5, 2.5, 2.5, 2.5];
+        assert!(r2(&m, &a).abs() < 1e-12);
+    }
+}

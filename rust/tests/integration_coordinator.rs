@@ -1,0 +1,131 @@
+//! Integration: the coordinator serving the XLA (Pallas) inference path —
+//! dynamic batching over real trained forests, end-to-end prediction
+//! through the service, and the TCP JSON-lines front end.
+
+use std::io::{BufRead, BufReader, Write};
+use std::time::Duration;
+
+use fgpm::config::{ModelCfg, ParallelCfg, Platform};
+use fgpm::coordinator::server::{handle_line, serve_background};
+use fgpm::coordinator::{BatcherCfg, PredictionService};
+use fgpm::predictor::{evaluate, Registry};
+use fgpm::runtime::{artifacts_dir, Engine, XlaForestPredictor};
+use fgpm::sampling::collect_platform;
+use fgpm::util::json::Json;
+
+fn xla_service() -> PredictionService {
+    let p = Platform::perlmutter();
+    let data = collect_platform(&p, 42);
+    let reg = Registry::train(p.name, &data, 42);
+    let flat = reg.export_flat(128, 1024);
+    PredictionService::start_with(
+        move || {
+            let engine = Engine::load(&artifacts_dir()).expect("make artifacts");
+            Box::new(XlaForestPredictor::new(engine, &flat).expect("upload"))
+        },
+        BatcherCfg { max_batch: 256, max_wait: Duration::from_millis(2) },
+    )
+}
+
+#[test]
+fn coordinator_serves_xla_predictions_with_batching() {
+    let svc = xla_service();
+    let p = Platform::perlmutter();
+
+    // concurrent requests from multiple threads: the batcher should merge
+    // their operator queries into shared XLA invocations
+    let mut handles = Vec::new();
+    for (m, cfg) in [("gpt20b", "4-4-8"), ("llama13b", "4-8-2"), ("llemma7b", "4-2-2")] {
+        let client_svc: &PredictionService = &svc;
+        let model = ModelCfg::by_name(m).unwrap();
+        let par = ParallelCfg::parse(cfg).unwrap();
+        let platform = p.clone();
+        // predict_config borrows the service; spawn scoped threads
+        handles.push(std::thread::scope(|_| {
+            client_svc.predict_config(&model, &par, &platform)
+        }));
+    }
+    for cp in &handles {
+        assert!(cp.total_us > 1e5, "{}: {}", cp.label, cp.total_us);
+    }
+
+    let snap = svc.metrics.snapshot();
+    assert!(snap.queries > 50, "queries {}", snap.queries);
+    assert!(snap.batches > 0);
+    assert_eq!(snap.predictions, 3);
+    svc.shutdown();
+}
+
+#[test]
+fn xla_served_prediction_matches_paper_band() {
+    let svc = xla_service();
+    let p = Platform::perlmutter();
+    let model = ModelCfg::llemma7b();
+    let par = ParallelCfg::parse("4-2-2").unwrap();
+    let cp = svc.predict_config(&model, &par, &p);
+    let e = evaluate(&model, &par, &p, &cp, 5, 42);
+    assert!(e.overall.abs() < 15.0, "overall {}%", e.overall);
+    svc.shutdown();
+}
+
+#[test]
+fn tcp_protocol_full_stack() {
+    let addr = serve_background(xla_service()).unwrap();
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    conn.write_all(
+        b"{\"cmd\":\"predict\",\"model\":\"llemma7b\",\"parallel\":\"4-2-2\",\"platform\":\"perlmutter\"}\n",
+    )
+    .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert!(j.get("error").is_none(), "{line}");
+    let total = j.get("total_s").unwrap().as_f64().unwrap();
+    assert!(total > 0.5 && total < 100.0, "{total}");
+
+    conn.write_all(b"{\"cmd\":\"stats\"}\n").unwrap();
+    let mut line2 = String::new();
+    reader.read_line(&mut line2).unwrap();
+    let s = Json::parse(line2.trim()).unwrap();
+    assert!(s.get("queries").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn service_with_native_backend_equals_direct_registry() {
+    // The coordinator must be a transparent layer: served predictions ==
+    // direct in-process predictions, bit for bit (same forests).
+    let p = Platform::perlmutter();
+    let data = collect_platform(&p, 42);
+    let mut reg = Registry::train(p.name, &data, 42);
+    let model = ModelCfg::llemma7b();
+    let par = ParallelCfg::parse("4-2-2").unwrap();
+    let direct = fgpm::predictor::predict(&model, &par, &p, &mut reg);
+
+    let reg2 = {
+        let reg = Registry::train(p.name, &data, 42);
+        reg
+    };
+    let svc = PredictionService::start(Box::new(reg2), BatcherCfg::default());
+    let served = svc.predict_config(&model, &par, &p);
+    svc.shutdown();
+
+    assert!((direct.total_us - served.total_us).abs() < 1e-6);
+    assert_eq!(direct.stage_fwd_us.len(), served.stage_fwd_us.len());
+}
+
+#[test]
+fn server_rejects_malformed_then_keeps_serving() {
+    let svc = PredictionService::start(
+        Box::new(fgpm::baselines::Analytical::new(Platform::perlmutter())),
+        BatcherCfg::default(),
+    );
+    assert!(handle_line(&svc, "garbage").contains("error"));
+    let ok = handle_line(
+        &svc,
+        r#"{"cmd":"predict","model":"llemma7b","parallel":"2-2-2","platform":"perlmutter"}"#,
+    );
+    assert!(ok.contains("total_s"), "{ok}");
+    svc.shutdown();
+}

@@ -1,0 +1,127 @@
+//! Integration: ops -> simulator -> 1F1B schedule -> trainrun, across all
+//! three models and both platforms (the ground-truth half of the system).
+
+use fgpm::config::{ModelCfg, ParallelCfg, Platform};
+use fgpm::ops::{Dir, OpKind};
+use fgpm::pipeline::eq7_runtime_us;
+use fgpm::trainrun::{run_batch, stability, stage_plans};
+
+#[test]
+fn all_models_simulate_on_both_platforms() {
+    let cases = [
+        ("gpt20b", "4-4-8"),
+        ("llama13b", "4-8-2"),
+        ("llemma7b", "4-2-2"),
+    ];
+    for platform in Platform::all() {
+        for (m, p) in cases {
+            let model = ModelCfg::by_name(m).unwrap();
+            let par = ParallelCfg::parse(p).unwrap();
+            let tr = run_batch(&model, &par, &platform, 3);
+            assert!(tr.total_us > 1e5, "{m} {p} on {}: {}", platform.name, tr.total_us);
+            assert!(tr.total_us < 600e6, "{m} {p} on {}: {}", platform.name, tr.total_us);
+            assert_eq!(tr.stage_fwd_us.len(), par.pp);
+        }
+    }
+}
+
+#[test]
+fn eq7_tracks_full_simulation_within_band() {
+    // The closed-form eq (7) with measured max stage times should stay
+    // within ~15% of the event-accurate schedule for every paper config.
+    let p = Platform::perlmutter();
+    for (m, cfg) in [("gpt20b", "4-4-8"), ("gpt20b", "8-4-4"), ("llemma7b", "4-2-2")] {
+        let model = ModelCfg::by_name(m).unwrap();
+        let par = ParallelCfg::parse(cfg).unwrap();
+        let tr = run_batch(&model, &par, &p, 9);
+        let max_fwd = tr.stage_fwd_us.iter().cloned().fold(0.0, f64::max);
+        let max_bwd = tr.stage_bwd_us.iter().cloned().fold(0.0, f64::max);
+        let eq7 = eq7_runtime_us(
+            model.iters_per_update,
+            par.pp,
+            max_fwd,
+            max_bwd,
+            tr.dp_allreduce_first_us,
+            tr.max_update_us,
+        );
+        let rel = (eq7 - tr.total_us).abs() / tr.total_us;
+        assert!(rel < 0.15, "{m}({cfg}): eq7 {} vs sim {} rel {rel}", eq7, tr.total_us);
+    }
+}
+
+#[test]
+fn mp8_on_perlmutter_is_catastrophic_mp4_is_not() {
+    // The paper's headline topology effect (Table VIII): GPT-20B(4-8-4)
+    // is much slower than (4-4-8) on Perlmutter because mp=8 spans nodes,
+    // despite (4-4-8) processing 2x the effective batch.
+    let p = Platform::perlmutter();
+    let model = ModelCfg::gpt20b();
+    let t_488 = run_batch(&model, &ParallelCfg::parse("4-4-8").unwrap(), &p, 5).total_us;
+    let t_484 = run_batch(&model, &ParallelCfg::parse("4-8-4").unwrap(), &p, 5).total_us;
+    assert!(
+        t_484 > t_488,
+        "mp=8 (inter-node) should be slower: 4-8-4 {t_484} vs 4-4-8 {t_488}"
+    );
+}
+
+#[test]
+fn vista_mp_allreduce_dominates_more_than_perlmutter() {
+    // On Vista every MP all-reduce crosses InfiniBand; its share of
+    // encoder time must exceed Perlmutter's (paper §IV-C).
+    let model = ModelCfg::gpt20b();
+    let par = ParallelCfg::parse("4-4-8").unwrap();
+    let share = |platform: &Platform| {
+        let tr = run_batch(&model, &par, platform, 4);
+        tr.mp_allreduce_us / tr.encoder_fwd_us
+    };
+    let p = share(&Platform::perlmutter());
+    let v = share(&Platform::vista());
+    assert!(v > 1.5 * p, "vista MP share {v} vs perlmutter {p}");
+}
+
+#[test]
+fn stability_contrast_matches_table_viii() {
+    let model = ModelCfg::gpt20b();
+    let par = ParallelCfg::parse("4-8-4").unwrap();
+    let sp = stability(&model, &par, &Platform::perlmutter(), 10, 21);
+    let sv = stability(&model, &par, &Platform::vista(), 10, 21);
+    assert!(sp.pct_increase < 2.0, "perlmutter spread {}%", sp.pct_increase);
+    assert!(sv.pct_increase > 5.0, "vista spread {}%", sv.pct_increase);
+    assert!(sv.pct_increase < 150.0, "vista spread implausible {}%", sv.pct_increase);
+}
+
+#[test]
+fn llemma_smaller_spread_than_gpt_on_vista() {
+    // Scale-dependent congestion: the 16-GPU Llemma job is far more
+    // stable than the 128-GPU GPT job (paper: 5.21% vs 20-108%).
+    let v = Platform::vista();
+    let gpt = stability(&ModelCfg::gpt20b(), &ParallelCfg::parse("4-4-8").unwrap(), &v, 8, 33);
+    let lle = stability(&ModelCfg::llemma7b(), &ParallelCfg::parse("4-2-2").unwrap(), &v, 8, 33);
+    assert!(
+        lle.pct_increase < gpt.pct_increase,
+        "llemma {}% vs gpt {}%",
+        lle.pct_increase,
+        gpt.pct_increase
+    );
+}
+
+#[test]
+fn stage_plan_op_counts_consistent() {
+    let p = Platform::perlmutter();
+    let model = ModelCfg::gpt20b();
+    let par = ParallelCfg::parse("4-4-8").unwrap();
+    let plans = stage_plans(&model, &par, &p);
+    for plan in &plans {
+        // every encoder contributes exactly fwd_syncs MP all-reduces
+        let ars = plan.fwd_ops.iter().filter(|o| o.kind == OpKind::MpAllReduce).count();
+        assert_eq!(ars, plan.encoders * model.encoder_fwd_syncs);
+        let ars_b = plan.bwd_ops.iter().filter(|o| o.kind == OpKind::MpAllReduce).count();
+        assert_eq!(ars_b, plan.encoders * model.encoder_bwd_syncs);
+        // all bwd ops are marked Bwd except comm ops
+        for op in &plan.bwd_ops {
+            if !op.kind.is_comm() {
+                assert_eq!(op.dir, Dir::Bwd);
+            }
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Integration: the full prediction pipeline (collect -> train -> predict
+//! -> validate) on one platform, plus baseline comparisons — the Table IX
+//! and ablation (E9) signals at test scale.
+
+use fgpm::baselines::{Analytical, LogLinear};
+use fgpm::config::{ModelCfg, ParallelCfg, Platform};
+use fgpm::predictor::registry::BatchPredictor;
+use fgpm::predictor::{evaluate, predict, Registry};
+use fgpm::sampling::collect_platform;
+use fgpm::util::stats;
+
+use std::sync::OnceLock;
+
+/// Collection + training is ~15s; share it across tests in this binary.
+fn registry_and_data() -> &'static (
+    Registry,
+    std::collections::HashMap<fgpm::sampling::DatasetKey, fgpm::sampling::Dataset>,
+) {
+    static CELL: OnceLock<(
+        Registry,
+        std::collections::HashMap<fgpm::sampling::DatasetKey, fgpm::sampling::Dataset>,
+    )> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let p = Platform::perlmutter();
+        let data = collect_platform(&p, 42);
+        let reg = Registry::train(p.name, &data, 42);
+        (reg, data)
+    })
+}
+
+#[test]
+fn trained_registry_covers_all_39_keys() {
+    let (reg, data) = registry_and_data();
+    assert_eq!(data.len(), 39);
+    assert_eq!(reg.forests.len(), 39);
+    assert!(reg.mean_val_mape() < 10.0, "val MAPE {}", reg.mean_val_mape());
+}
+
+#[test]
+fn end_to_end_error_within_paper_band() {
+    let (reg, _) = registry_and_data();
+    let p = Platform::perlmutter();
+    let mut errs = Vec::new();
+    for (m, cfg) in [("gpt20b", "4-4-8"), ("llama13b", "4-8-2"), ("llemma7b", "4-2-2")] {
+        let model = ModelCfg::by_name(m).unwrap();
+        let par = ParallelCfg::parse(cfg).unwrap();
+        let mut backend = RegRef(reg);
+        let cp = predict(&model, &par, &p, &mut backend);
+        let e = evaluate(&model, &par, &p, &cp, 5, 42);
+        errs.push(e.overall.abs());
+    }
+    let mean = stats::mean(&errs);
+    assert!(mean < 10.0, "mean |overall| {mean}% (paper band ~5%)");
+}
+
+/// Shared-reference adapter (Registry::predict_batch needs &mut self but
+/// is stateless).
+struct RegRef<'a>(&'a Registry);
+impl BatchPredictor for RegRef<'_> {
+    fn predict_batch(
+        &mut self,
+        key: fgpm::sampling::DatasetKey,
+        rows: &[Vec<f64>],
+    ) -> Vec<f64> {
+        let tuned = self.0.forests.get(&key).unwrap();
+        rows.iter().map(|r| tuned.forest.predict_us(r)).collect()
+    }
+}
+
+#[test]
+fn regressors_beat_analytical_baseline() {
+    // The paper's core claim: sampled tree regressors out-predict a flat
+    // analytical roofline end to end.
+    let (reg, _) = registry_and_data();
+    let p = Platform::perlmutter();
+    let model = ModelCfg::gpt20b();
+    let par = ParallelCfg::parse("4-4-8").unwrap();
+
+    let mut ours = RegRef(reg);
+    let cp_ours = predict(&model, &par, &p, &mut ours);
+    let e_ours = evaluate(&model, &par, &p, &cp_ours, 5, 7).overall.abs();
+
+    let mut analytical = Analytical::new(p.clone());
+    let cp_a = predict(&model, &par, &p, &mut analytical);
+    let e_a = evaluate(&model, &par, &p, &cp_a, 5, 7).overall.abs();
+
+    assert!(
+        e_ours < e_a,
+        "regressors {e_ours}% must beat analytical {e_a}%"
+    );
+}
+
+#[test]
+fn regressors_beat_loglinear_on_components() {
+    // Log-linear smooths over kernel-selection steps; per-operator val
+    // error must be worse than the trees' on GEMM-heavy ops.
+    let (reg, data) = registry_and_data();
+    let mut ll = LogLinear::train(data);
+    let key = (fgpm::ops::OpKind::Linear1, fgpm::ops::Dir::Fwd);
+    let ds = &data[&key];
+    let (_, val) = ds.split_80_20();
+    let tree_pred: Vec<f64> =
+        val.x.iter().map(|r| reg.forests[&key].forest.predict_us(r)).collect();
+    let ll_pred = ll.predict_batch(key, &val.x);
+    let tree_mape = stats::mape(&tree_pred, &val.y);
+    let ll_mape = stats::mape(&ll_pred, &val.y);
+    assert!(
+        tree_mape < ll_mape,
+        "trees {tree_mape}% vs log-linear {ll_mape}%"
+    );
+}
+
+#[test]
+fn prediction_sweep_is_fast() {
+    // "runs entirely on CPUs, enabling rapid iteration": a 20-config
+    // sweep must complete in well under a second once trained.
+    let (reg, _) = registry_and_data();
+    let p = Platform::perlmutter();
+    let model = ModelCfg::gpt20b();
+    let mut backend = RegRef(reg);
+    let t0 = std::time::Instant::now();
+    let mut n = 0;
+    for par in ParallelCfg::enumerate(128, 16, 16) {
+        if model.h % par.mp != 0 || model.iters_per_update < par.pp {
+            continue;
+        }
+        let _ = predict(&model, &par, &p, &mut backend);
+        n += 1;
+    }
+    let dt = t0.elapsed();
+    assert!(n >= 10, "{n} configs");
+    assert!(dt.as_millis() < 2000, "{n} configs took {dt:?}");
+}

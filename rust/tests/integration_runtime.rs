@@ -1,0 +1,177 @@
+//! Integration: PJRT engine over the real AOT artifacts — the rust<->XLA
+//! bridge. Requires `make artifacts` (checked into the build flow).
+//!
+//! The decisive property: the XLA (Pallas kernel) inference path and the
+//! native rust traversal agree to float tolerance on real trained forests.
+
+use fgpm::forest::ensemble::{to_log, Forest, GbtParams, RfParams, MAX_DEPTH};
+use fgpm::forest::FlatForest;
+use fgpm::ops::{Dir, OpKind};
+use fgpm::predictor::registry::BatchPredictor;
+use fgpm::runtime::engine::TimelineBatch;
+use fgpm::runtime::{artifacts_dir, Engine, XlaForestPredictor};
+use fgpm::util::rng::Rng;
+
+fn engine() -> Engine {
+    Engine::load(&artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn latency_surface(seed: u64, n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for _ in 0..n {
+        let a = rng.uniform(100.0, 50_000.0);
+        let b = rng.uniform(1.0, 16.0);
+        let c = rng.uniform(1024.0, 8192.0);
+        let v = 10.0 + 0.001 * a * c / 1000.0 / b + if a > 20_000.0 { 50.0 } else { 0.0 };
+        x.push(vec![a, b, c]);
+        y.push(v);
+    }
+    (x, y)
+}
+
+#[test]
+fn engine_loads_and_reports_platform() {
+    let e = engine();
+    assert_eq!(e.platform_name().to_lowercase(), "cpu");
+    assert_eq!(e.manifest.batch, 256);
+    assert_eq!(e.manifest.trees, 128);
+}
+
+#[test]
+fn xla_matches_native_rf() {
+    let e = engine();
+    let (x, y) = latency_surface(1, 500);
+    let f = Forest::fit_rf(
+        &x,
+        &to_log(&y),
+        &RfParams { n_trees: 40, max_depth: 12, min_samples_leaf: 2, mtry: None },
+        3,
+    );
+    let flat = FlatForest::from_forest(&f, e.manifest.trees, e.manifest.nodes);
+    let buf = e.prepare_forest(&flat).unwrap();
+
+    let mut feat = vec![0f32; e.manifest.batch * e.manifest.features];
+    for (i, row) in x.iter().take(e.manifest.batch).enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            feat[i * e.manifest.features + j] = v as f32;
+        }
+    }
+    let got = e.forest_infer(&feat, &buf).unwrap();
+    for (i, row) in x.iter().take(e.manifest.batch).enumerate() {
+        let native = f.predict_us(row);
+        let rel = (got[i] as f64 - native).abs() / native.max(1.0);
+        assert!(rel < 1e-3, "row {i}: xla {} native {native}", got[i]);
+    }
+}
+
+#[test]
+fn xla_matches_native_gbt_with_base_stump() {
+    let e = engine();
+    let (x, y) = latency_surface(2, 400);
+    let f = Forest::fit_gbt(
+        &x,
+        &to_log(&y),
+        &GbtParams { n_trees: 80, max_depth: 5, min_samples_leaf: 2, learning_rate: 0.1 },
+        7,
+    );
+    assert!(f.base != 0.0);
+    let flat = FlatForest::from_forest(&f, e.manifest.trees, e.manifest.nodes);
+    let buf = e.prepare_forest(&flat).unwrap();
+    let mut feat = vec![0f32; e.manifest.batch * e.manifest.features];
+    for (i, row) in x.iter().take(64).enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            feat[i * e.manifest.features + j] = v as f32;
+        }
+    }
+    let got = e.forest_infer(&feat, &buf).unwrap();
+    for (i, row) in x.iter().take(64).enumerate() {
+        let native = f.predict_us(row);
+        let rel = (got[i] as f64 - native).abs() / native.max(1.0);
+        assert!(rel < 1e-3, "row {i}: xla {} native {native}", got[i]);
+    }
+}
+
+#[test]
+fn flat_reference_matches_native_too() {
+    // triangle check: native forest == flat CPU reference == XLA
+    let (x, y) = latency_surface(3, 300);
+    let f = Forest::fit_rf(
+        &x,
+        &to_log(&y),
+        &RfParams { n_trees: 20, max_depth: 10, min_samples_leaf: 2, mtry: None },
+        1,
+    );
+    let flat = FlatForest::from_forest(&f, 128, 1024);
+    for row in x.iter().take(40) {
+        let row32: Vec<f32> = row.iter().map(|&v| v as f32).collect();
+        let a = f.predict_us(row);
+        let b = flat.predict_us(&row32, MAX_DEPTH) as f64;
+        assert!((a - b).abs() / a.max(1.0) < 1e-3);
+    }
+}
+
+#[test]
+fn predictor_pads_ragged_batches() {
+    let e = engine();
+    let (x, y) = latency_surface(4, 300);
+    let f = Forest::fit_rf(
+        &x,
+        &to_log(&y),
+        &RfParams { n_trees: 20, max_depth: 10, min_samples_leaf: 2, mtry: None },
+        2,
+    );
+    let key = (OpKind::Linear1, Dir::Fwd);
+    let mut flat_map = std::collections::HashMap::new();
+    flat_map.insert(key, FlatForest::from_forest(&f, e.manifest.trees, e.manifest.nodes));
+    let mut xp = XlaForestPredictor::new(e, &flat_map).unwrap();
+    // 300 rows -> 2 padded chunks (256 + 44)
+    let got = xp.predict_batch(key, &x);
+    assert_eq!(got.len(), 300);
+    for (row, g) in x.iter().zip(&got) {
+        let native = f.predict_us(row);
+        assert!((g - native).abs() / native.max(1.0) < 1e-3);
+    }
+}
+
+#[test]
+fn timeline_executable_matches_eq7() {
+    let e = engine();
+    let (c, s) = (e.manifest.timeline_configs, e.manifest.timeline_stages);
+    let mut rng = Rng::new(5);
+    let mut b = TimelineBatch {
+        fwd: vec![0.0; c * s],
+        bwd: vec![0.0; c * s],
+        mask: vec![0.0; c * s],
+        dp_first: vec![0.0; c],
+        update: vec![0.0; c * s],
+        micro: vec![0.0; c],
+        stages: vec![0.0; c],
+    };
+    for i in 0..c {
+        let stages = 1 + rng.below(s);
+        b.stages[i] = stages as f32;
+        b.micro[i] = (1 + rng.below(31)) as f32;
+        b.dp_first[i] = rng.uniform(0.0, 50.0) as f32;
+        for j in 0..stages {
+            b.fwd[i * s + j] = rng.uniform(0.0, 100.0) as f32;
+            b.bwd[i * s + j] = rng.uniform(0.0, 200.0) as f32;
+            b.update[i * s + j] = rng.uniform(0.0, 30.0) as f32;
+            b.mask[i * s + j] = 1.0;
+        }
+    }
+    let got = e.timeline(&b).unwrap();
+    for i in 0..c {
+        let stages = b.stages[i] as usize;
+        let mf = (0..stages).map(|j| b.fwd[i * s + j]).fold(0f32, f32::max);
+        let mb = (0..stages).map(|j| b.bwd[i * s + j]).fold(0f32, f32::max);
+        let mu = (0..stages).map(|j| b.update[i * s + j]).fold(0f32, f32::max);
+        let want = (b.micro[i] - 1.0 + b.stages[i]) * (mf + mb) + b.dp_first[i] + mu;
+        assert!(
+            (got[i] - want).abs() / want.max(1.0) < 1e-4,
+            "cfg {i}: {} vs {want}",
+            got[i]
+        );
+    }
+}

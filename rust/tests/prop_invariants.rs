@@ -1,0 +1,203 @@
+//! Property-based invariants over the coordinator, pipeline, and
+//! modeling substrates (util::propcheck — the in-repo proptest stand-in).
+
+use fgpm::config::{ModelCfg, ParallelCfg, Platform};
+use fgpm::net::{allgather_time_us, allreduce_time_us, CommGeom};
+use fgpm::ops::params::padded_vocab;
+use fgpm::pipeline::{encoder_allocation, one_f_one_b, TaskTimes};
+use fgpm::util::propcheck::check;
+use fgpm::util::rng::Rng;
+
+#[test]
+fn prop_encoder_allocation_sums_and_balances() {
+    check(
+        "allocation-sums",
+        500,
+        |r: &mut Rng| (1 + r.below(96), 1 + r.below(16)),
+        |&(e, s)| {
+            let a = encoder_allocation(e, s);
+            a.len() == s && a.iter().sum::<usize>() == e
+        },
+        |&(e, s)| (e + s) as f64,
+    );
+}
+
+#[test]
+fn prop_vocab_padding_minimal_and_divisible() {
+    check(
+        "vocab-padding",
+        500,
+        |r: &mut Rng| (1000 + r.below(100_000), 1 << r.below(5)),
+        |&(v, mp)| {
+            let p = padded_vocab(v, mp);
+            let f = 128 * mp;
+            p % f == 0 && p >= v && p - v < f
+        },
+        |&(v, _)| v as f64,
+    );
+}
+
+#[test]
+fn prop_1f1b_schedule_valid_for_any_times() {
+    // For random stage/micro-batch counts and random positive durations:
+    // every dependency holds and the makespan >= the busiest stage.
+    check(
+        "1f1b-valid",
+        60,
+        |r: &mut Rng| {
+            let stages = 1 + r.below(6);
+            let m = 1 + r.below(12);
+            let fwd: Vec<Vec<f64>> = (0..stages)
+                .map(|_| (0..m).map(|_| r.uniform(0.1, 10.0)).collect())
+                .collect();
+            let bwd: Vec<Vec<f64>> = (0..stages)
+                .map(|_| (0..m).map(|_| r.uniform(0.1, 20.0)).collect())
+                .collect();
+            TaskTimes { fwd, bwd }
+        },
+        |t| {
+            let s = one_f_one_b(t);
+            let stages = t.stages();
+            let m = t.micro_batches();
+            for st in 0..stages {
+                for i in 0..m {
+                    if st > 0 && s.fwd_start[st][i] < s.fwd_end[st - 1][i] - 1e-9 {
+                        return false;
+                    }
+                    if st + 1 < stages && s.bwd_start[st][i] < s.bwd_end[st + 1][i] - 1e-9 {
+                        return false;
+                    }
+                }
+            }
+            let busiest: f64 = (0..stages)
+                .map(|st| t.fwd[st].iter().sum::<f64>() + t.bwd[st].iter().sum::<f64>())
+                .fold(0.0, f64::max);
+            s.makespan() >= busiest - 1e-9
+        },
+        |t| (t.stages() * t.micro_batches()) as f64,
+    );
+}
+
+#[test]
+fn prop_collectives_monotone_in_volume() {
+    check(
+        "allreduce-monotone",
+        300,
+        |r: &mut Rng| {
+            let bytes = r.uniform(1e4, 2e9);
+            let nodes = 1 + r.below(16);
+            let gpn = 1 << r.below(3);
+            (bytes, CommGeom::new(nodes, gpn))
+        },
+        |&(bytes, geom)| {
+            let p = Platform::perlmutter();
+            allreduce_time_us(bytes * 2.0, geom, &p) >= allreduce_time_us(bytes, geom, &p) - 1e-9
+                && allgather_time_us(bytes * 2.0, geom, &p)
+                    >= allgather_time_us(bytes, geom, &p) - 1e-9
+        },
+        |&(bytes, _)| bytes,
+    );
+}
+
+#[test]
+fn prop_rank_layout_bijective() {
+    check(
+        "rank-bijection",
+        200,
+        |r: &mut Rng| {
+            ParallelCfg::new(1 + r.below(8), 1 + r.below(8), 1 + r.below(8))
+        },
+        |par| {
+            let mut seen = vec![false; par.gpus()];
+            for pp in 0..par.pp {
+                for dp in 0..par.dp {
+                    for mp in 0..par.mp {
+                        let r = par.rank(pp, dp, mp);
+                        if r >= seen.len() || seen[r] {
+                            return false;
+                        }
+                        seen[r] = true;
+                    }
+                }
+            }
+            seen.iter().all(|&x| x)
+        },
+        |par| par.gpus() as f64,
+    );
+}
+
+#[test]
+fn prop_comm_geometry_world_preserved() {
+    // MP and DP group geometries must account for every member.
+    check(
+        "geometry-world",
+        300,
+        |r: &mut Rng| {
+            let pp = 1 << r.below(4);
+            let mp = 1 << r.below(4);
+            let dp = 1 << r.below(4);
+            (ParallelCfg::new(pp, mp, dp), r.below(2) == 0)
+        },
+        |&(par, perl)| {
+            let platform = if perl { Platform::perlmutter() } else { Platform::vista() };
+            let (mn, mg) = par.mp_group_geometry(&platform);
+            let (dn, dg) = par.dp_group_geometry(&platform);
+            mn * mg >= par.mp && dn * dg >= par.dp
+        },
+        |&(par, _)| par.gpus() as f64,
+    );
+}
+
+#[test]
+fn prop_simulated_batch_time_positive_and_scales() {
+    // Batch time is positive and does not DECREASE when the micro-batch
+    // count doubles (same config otherwise).
+    check(
+        "batch-scales",
+        6,
+        |r: &mut Rng| r.next_u64(),
+        |&seed| {
+            let mut m = ModelCfg::llemma7b();
+            let par = ParallelCfg::new(2, 2, 2);
+            let p = Platform::perlmutter();
+            m.iters_per_update = 4;
+            let a = fgpm::trainrun::run_batch(&m, &par, &p, seed).total_us;
+            m.iters_per_update = 8;
+            let b = fgpm::trainrun::run_batch(&m, &par, &p, seed).total_us;
+            a > 0.0 && b > a * 1.2
+        },
+        |_| 0.0,
+    );
+}
+
+#[test]
+fn prop_forest_export_traversal_equivalence() {
+    use fgpm::forest::ensemble::{to_log, Forest, RfParams, MAX_DEPTH};
+    use fgpm::forest::FlatForest;
+    check(
+        "export-equivalence",
+        8,
+        |r: &mut Rng| r.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let x: Vec<Vec<f64>> = (0..150)
+                .map(|_| vec![rng.uniform(0.0, 1e4), rng.uniform(1.0, 16.0)])
+                .collect();
+            let y: Vec<f64> = x.iter().map(|r| 5.0 + r[0] / r[1]).collect();
+            let f = Forest::fit_rf(
+                &x,
+                &to_log(&y),
+                &RfParams { n_trees: 12, max_depth: 9, min_samples_leaf: 2, mtry: Some(1) },
+                seed,
+            );
+            let flat = FlatForest::from_forest(&f, 128, 1024);
+            x.iter().take(30).all(|row| {
+                let row32: Vec<f32> = row.iter().map(|&v| v as f32).collect();
+                let a = f.predict_us(row);
+                let b = flat.predict_us(&row32, MAX_DEPTH) as f64;
+                (a - b).abs() / a.max(1.0) < 1e-3
+            })
+        },
+        |_| 0.0,
+    );
+}
