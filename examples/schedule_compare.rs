@@ -1,0 +1,59 @@
+//! Compare pipeline schedules: bubble-fraction crossover vs micro-batch
+//! count, and a simulated training batch under each discipline.
+//!
+//!     cargo run --release --example schedule_compare
+//!
+//! 1F1B and GPipe share the classic bubble (S-1)(f+b); interleaved-1F1B
+//! with v virtual chunks shrinks it to (S-1)(f+b)/v, so its advantage is
+//! largest at small micro-batch counts and fades as m grows — the
+//! crossover this table makes visible.
+
+use fgpm::config::{ModelCfg, ParallelCfg, Platform};
+use fgpm::pipeline::{execute, ScheduleKind, TaskTimes};
+use fgpm::trainrun::run_batch;
+
+fn main() {
+    let stages = 4;
+    let (f, b) = (1.0, 2.0);
+    let kinds = [
+        ScheduleKind::OneFOneB,
+        ScheduleKind::GPipe,
+        ScheduleKind::Interleaved1F1B { chunks: 2 },
+        ScheduleKind::Interleaved1F1B { chunks: 4 },
+    ];
+
+    println!("[1/2] worst-stage bubble fraction, S={stages} uniform f={f} b={b}:");
+    print!("{:>6}", "m");
+    for k in kinds {
+        print!("{:>16}", k.label());
+    }
+    println!();
+    for m in [4usize, 8, 16, 32, 64] {
+        let times = TaskTimes::uniform(stages, m, f, b);
+        print!("{m:>6}");
+        for kind in kinds {
+            let sched = execute(kind.build().as_ref(), &times)
+                .expect("m is a multiple of S for every row");
+            let bubble = (0..stages)
+                .map(|s| sched.bubble_fraction(&times, s))
+                .fold(0.0, f64::max);
+            print!("{:>15.1}%", bubble * 100.0);
+        }
+        println!();
+    }
+
+    println!();
+    println!("[2/2] simulated GPT-20B(4-4-8) batch on Perlmutter per schedule:");
+    let model = ModelCfg::gpt20b();
+    let par = ParallelCfg::parse("4-4-8").unwrap();
+    let platform = Platform::perlmutter();
+    for kind in [
+        ScheduleKind::OneFOneB,
+        ScheduleKind::GPipe,
+        ScheduleKind::Interleaved1F1B { chunks: 2 },
+    ] {
+        let tr = run_batch(&model, &par.with_schedule(kind), &platform, 42);
+        println!("  {:<16} {:>8.2} s", kind.label(), tr.total_us / 1e6);
+    }
+    println!("\n(same sampled op latencies per seed; only the discipline differs)");
+}

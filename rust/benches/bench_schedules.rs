@@ -1,0 +1,124 @@
+//! Scheduler hot path: the old fixed-point polling loop (kept here as the
+//! baseline) vs the generic event-queue executor, across (S, m) grids,
+//! plus the executor running GPipe and interleaved-1F1B.
+//!
+//!     cargo bench --bench bench_schedules
+
+use fgpm::pipeline::{execute, GPipe, Interleaved1F1B, OneFOneB, TaskTimes};
+use fgpm::util::benchkit::{black_box, Bench};
+use fgpm::util::rng::Rng;
+
+/// The pre-refactor 1F1B solver: static per-stage orders resolved by
+/// repeated polling sweeps until a fixed point. O(S^2·M) worst case —
+/// every sweep revisits all stages even when only one can progress.
+fn legacy_one_f_one_b(times: &TaskTimes) -> f64 {
+    let s_count = times.stages();
+    let m = times.micro_batches();
+    let mut fe = vec![vec![f64::NAN; m]; s_count];
+    let mut be = vec![vec![f64::NAN; m]; s_count];
+
+    let orders: Vec<Vec<(bool, usize)>> = (0..s_count)
+        .map(|stage| {
+            let warmup = (s_count - stage).min(m);
+            let mut order = Vec::with_capacity(2 * m);
+            for i in 0..warmup {
+                order.push((true, i));
+            }
+            let mut next_f = warmup;
+            for i in 0..m {
+                order.push((false, i));
+                if next_f < m {
+                    order.push((true, next_f));
+                    next_f += 1;
+                }
+            }
+            order
+        })
+        .collect();
+    let mut cursor = vec![0usize; s_count];
+    let mut avail = vec![0.0f64; s_count];
+    let mut progressed = true;
+    let mut done = 0usize;
+    let total = 2 * m * s_count;
+
+    while done < total {
+        assert!(progressed, "legacy 1F1B deadlocked");
+        progressed = false;
+        for s in 0..s_count {
+            while cursor[s] < orders[s].len() {
+                let (is_fwd, i) = orders[s][cursor[s]];
+                let dep = if is_fwd {
+                    if s == 0 {
+                        Some(0.0)
+                    } else if fe[s - 1][i].is_nan() {
+                        None
+                    } else {
+                        Some(fe[s - 1][i])
+                    }
+                } else if s == s_count - 1 {
+                    if fe[s][i].is_nan() {
+                        None
+                    } else {
+                        Some(fe[s][i])
+                    }
+                } else if be[s + 1][i].is_nan() {
+                    None
+                } else {
+                    Some(be[s + 1][i])
+                };
+                let Some(ready) = dep else { break };
+                let start = ready.max(avail[s]);
+                let dur = if is_fwd { times.fwd[s][i] } else { times.bwd[s][i] };
+                let end = start + dur;
+                if is_fwd {
+                    fe[s][i] = end;
+                } else {
+                    be[s][i] = end;
+                }
+                avail[s] = end;
+                cursor[s] += 1;
+                done += 1;
+                progressed = true;
+            }
+        }
+    }
+    be.iter().flatten().cloned().fold(0.0, f64::max)
+}
+
+fn jittered_times(stages: usize, m: usize, seed: u64) -> TaskTimes {
+    let mut rng = Rng::new(seed);
+    TaskTimes {
+        fwd: (0..stages).map(|_| (0..m).map(|_| rng.uniform(1.0, 3.0)).collect()).collect(),
+        bwd: (0..stages).map(|_| (0..m).map(|_| rng.uniform(2.0, 6.0)).collect()).collect(),
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("pipeline schedulers").with_iters(3, 15);
+    for (stages, m) in [(4usize, 16usize), (8, 64), (8, 256), (16, 512)] {
+        let times = jittered_times(stages, m, 9);
+        // sanity: both solvers agree before we time them
+        let legacy = legacy_one_f_one_b(&times);
+        let event = execute(&OneFOneB, &times).unwrap().makespan();
+        assert!(
+            (legacy - event).abs() < 1e-9 * legacy.max(1.0),
+            "solver mismatch S={stages} m={m}: {legacy} vs {event}"
+        );
+
+        b.case(&format!("legacy polling 1F1B S={stages} m={m}"), || {
+            black_box(legacy_one_f_one_b(&times));
+        });
+        b.case(&format!("event-queue 1F1B S={stages} m={m}"), || {
+            black_box(execute(&OneFOneB, &times).unwrap().makespan());
+        });
+        b.case(&format!("event-queue GPipe S={stages} m={m}"), || {
+            black_box(execute(&GPipe, &times).unwrap().makespan());
+        });
+        if m % stages == 0 {
+            b.case(&format!("event-queue interleaved:2 S={stages} m={m}"), || {
+                black_box(execute(&Interleaved1F1B::new(2), &times).unwrap().makespan());
+            });
+        }
+    }
+    b.finish();
+}

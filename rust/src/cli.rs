@@ -12,6 +12,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::baselines::{Analytical, LogLinear};
 use crate::config::{ModelCfg, ParallelCfg, Platform};
 use crate::coordinator::server;
+use crate::pipeline::ScheduleKind;
 use crate::coordinator::{BatcherCfg, PredictionService};
 use crate::forest::persist::{load_registry, save_registry};
 use crate::predictor::registry::BatchPredictor;
@@ -34,9 +35,10 @@ commands:
   train        fit + select per-operator regressors (80/20 validation)
   predict      predict one (model, parallel, platform) configuration
   sweep        rank all parallelism strategies for a model at a GPU count
+  schedules    compare pipeline schedules (1F1B / GPipe / interleaved) for one config
   table8       reproduce Table VIII (performance stability)
   table9       reproduce Table IX  (component-level prediction errors)
-  fig2         reproduce Figure 2  (1F1B timeline, ASCII)
+  fig2         reproduce Figure 2  (pipeline timelines, ASCII)
   fig3         reproduce Figure 3  (component time proportions)
   ablate       compare regressors vs analytical/linear baselines
   serve        run the JSON-lines TCP prediction service
@@ -57,6 +59,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "train" => cmd_train(rest),
         "predict" => cmd_predict(rest),
         "sweep" => cmd_sweep(rest),
+        "schedules" => cmd_schedules(rest),
         "table8" => cmd_table8(rest),
         "table9" => cmd_table9(rest),
         "fig2" => cmd_fig2(rest),
@@ -88,6 +91,31 @@ fn platform_arg(args: &crate::util::cli::Args) -> Result<Platform> {
 fn model_arg(args: &crate::util::cli::Args) -> Result<ModelCfg> {
     ModelCfg::by_name(&args.str("model"))
         .with_context(|| format!("unknown model '{}'", args.str("model")))
+}
+
+/// Apply `--schedule` to a parsed `ParallelCfg`. A typed `--schedule`
+/// wins over the default; typing BOTH `--schedule` and a contradictory
+/// `--parallel pp-mp-dp/<schedule>` suffix is rejected rather than
+/// silently resolved.
+fn apply_schedule_arg(args: &crate::util::cli::Args, par: ParallelCfg) -> Result<ParallelCfg> {
+    let s = args.str("schedule");
+    let kind = ScheduleKind::parse(&s)
+        .with_context(|| format!("unknown schedule '{s}' (expected 1f1b|gpipe|interleaved[:v])"))?;
+    if !args.is_explicit("schedule") {
+        return Ok(par); // keep whatever --parallel carried (default: 1f1b)
+    }
+    anyhow::ensure!(
+        par.schedule == ScheduleKind::OneFOneB || par.schedule == kind,
+        "--schedule {} contradicts --parallel suffix /{}; pass one or the other",
+        kind.label(),
+        par.schedule.label()
+    );
+    Ok(par.with_schedule(kind))
+}
+
+/// Reject (model, parallel) combinations the schedule cannot run.
+fn validate_schedule(model: &ModelCfg, par: &ParallelCfg) -> Result<()> {
+    par.validate_schedule(model.iters_per_update).map_err(|e| anyhow!("{e}"))
 }
 
 fn cmd_models() -> Result<i32> {
@@ -209,8 +237,9 @@ fn backend_for(reg: Registry, use_xla: bool) -> Result<Box<dyn BatchPredictor>> 
 fn cmd_predict(argv: &[String]) -> Result<i32> {
     let spec = Spec::new("predict", "predict one configuration's batch time + components")
         .opt("model", "gpt20b", "model preset")
-        .opt("parallel", "4-4-8", "pp-mp-dp")
+        .opt("parallel", "4-4-8", "pp-mp-dp[/schedule]")
         .opt("platform", "perlmutter", "target platform")
+        .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v])")
         .opt("forests", "forests", "trained registry directory")
         .opt("seed", "7", "rng seed")
         .flag("xla", "serve inference from the AOT Pallas executable (PJRT)");
@@ -218,7 +247,9 @@ fn cmd_predict(argv: &[String]) -> Result<i32> {
     let platform = platform_arg(&args)?;
     let model = model_arg(&args)?;
     let par = ParallelCfg::parse(&args.str("parallel"))
-        .context("bad --parallel (expected pp-mp-dp)")?;
+        .context("bad --parallel (expected pp-mp-dp[/schedule])")?;
+    let par = apply_schedule_arg(&args, par)?;
+    validate_schedule(&model, &par)?;
     anyhow::ensure!(par.fits(&platform), "{} needs {} GPUs", par.label(), par.gpus());
     let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
     let mut backend = backend_for(reg, args.has_flag("xla"))?;
@@ -233,6 +264,7 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         .opt("model", "gpt20b", "model preset")
         .opt("platform", "perlmutter", "target platform")
         .opt("gpus", "128", "total GPUs")
+        .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v]|all)")
         .opt("forests", "forests", "trained registry directory")
         .opt("seed", "7", "rng seed")
         .flag("xla", "use the AOT Pallas executable");
@@ -240,16 +272,28 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
     let platform = platform_arg(&args)?;
     let model = model_arg(&args)?;
     let gpus = args.usize("gpus")?;
+    let sched_str = args.str("schedule");
+    let kinds: Vec<ScheduleKind> = if sched_str == "all" {
+        ScheduleKind::all(2)
+    } else {
+        vec![ScheduleKind::parse(&sched_str)
+            .with_context(|| format!("unknown schedule '{sched_str}'"))?]
+    };
     let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
     let mut backend = backend_for(reg, args.has_flag("xla"))?;
     let mut rows: Vec<(String, f64, f64)> = Vec::new();
     let mut skipped_oom = 0;
-    for par in ParallelCfg::enumerate(gpus, 16, 16) {
+    let mut skipped_sched = 0;
+    for par in ParallelCfg::enumerate_schedules(gpus, 16, 16, &kinds) {
         if !par.fits(&platform) || model.h % par.mp != 0 {
             continue;
         }
         if model.iters_per_update < par.pp {
             continue; // deep pipelines need enough micro-batches
+        }
+        if validate_schedule(&model, &par).is_err() {
+            skipped_sched += 1;
+            continue; // e.g. interleaving needs m % stages == 0
         }
         if !crate::ops::memory::fits_memory(&model, &par, &platform) {
             skipped_oom += 1;
@@ -271,6 +315,46 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
     if skipped_oom > 0 {
         println!("({skipped_oom} strategies skipped: exceed {} GiB HBM)", platform.gpu.hbm_gib);
     }
+    if skipped_sched > 0 {
+        println!("({skipped_sched} strategies skipped: schedule rejects geometry)");
+    }
+    Ok(0)
+}
+
+fn cmd_schedules(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new(
+        "schedules",
+        "compare 1F1B / GPipe / interleaved-1F1B for one configuration (event-accurate sim \
+         vs per-schedule closed form)",
+    )
+    .opt("model", "gpt20b", "model preset")
+    .opt("parallel", "4-4-8", "pp-mp-dp")
+    .opt("platform", "perlmutter", "target platform")
+    .opt("chunks", "2", "virtual chunks per stage for interleaved-1F1B")
+    .opt("batches", "4", "measured batches per schedule (fastest wins)")
+    .opt("seed", "42", "rng seed");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let model = model_arg(&args)?;
+    let platform = platform_arg(&args)?;
+    let par = ParallelCfg::parse(&args.str("parallel"))
+        .context("bad --parallel (expected pp-mp-dp)")?;
+    anyhow::ensure!(
+        par.schedule == ScheduleKind::OneFOneB,
+        "this command compares ALL schedules; drop the /{} suffix from --parallel",
+        par.schedule.label()
+    );
+    let chunks = args.usize("chunks")?;
+    anyhow::ensure!(chunks >= 2, "--chunks must be >= 2 (interleaving needs multiple virtual chunks)");
+    let md = crate::report::tables::schedule_compare_markdown(
+        &model,
+        &par,
+        &platform,
+        chunks,
+        args.usize("batches")?,
+        args.u64("seed")?,
+    )
+    .map_err(|e| anyhow!("{e}"))?;
+    println!("{}", report::emit("schedules.md", &md));
     Ok(0)
 }
 
@@ -307,16 +391,15 @@ fn cmd_table9(argv: &[String]) -> Result<i32> {
 }
 
 fn cmd_fig2(argv: &[String]) -> Result<i32> {
-    let spec = Spec::new("fig2", "Figure 2: 1F1B pipeline timeline (ASCII)")
+    let spec = Spec::new("fig2", "Figure 2: pipeline schedule timelines (ASCII)")
         .opt("model", "gpt20b", "model preset")
-        .opt("parallel", "4-4-8", "pp-mp-dp")
-        .opt("platform", "perlmutter", "target platform");
+        .opt("parallel", "4-4-8", "pp-mp-dp[/schedule]")
+        .opt("platform", "perlmutter", "target platform")
+        .opt("schedule", "1f1b", "schedule for the measured-shape timeline");
     let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
-    let md = fig2_markdown(
-        &model_arg(&args)?,
-        &ParallelCfg::parse(&args.str("parallel")).context("bad --parallel")?,
-        &platform_arg(&args)?,
-    );
+    let par = ParallelCfg::parse(&args.str("parallel")).context("bad --parallel")?;
+    let par = apply_schedule_arg(&args, par)?;
+    let md = fig2_markdown(&model_arg(&args)?, &par, &platform_arg(&args)?);
     println!("{}", report::emit("fig2.md", &md));
     Ok(0)
 }

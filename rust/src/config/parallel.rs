@@ -1,7 +1,9 @@
 //! 3D-parallelism strategy: Pipeline-Model-Data degrees, written `x-y-z`
-//! in the paper's configuration notation (e.g. GPT-20B(4-8-4)).
+//! in the paper's configuration notation (e.g. GPT-20B(4-8-4)), plus the
+//! pipeline schedule discipline (`x-y-z/gpipe`, `x-y-z/interleaved:2`).
 
 use crate::config::platform::Platform;
+use crate::pipeline::{ScheduleError, ScheduleKind};
 
 /// Parallelism degrees. `gpus() = pp * mp * dp`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -12,28 +14,55 @@ pub struct ParallelCfg {
     pub mp: usize,
     /// Data-parallel replicas |dp|.
     pub dp: usize,
+    /// Pipeline schedule discipline (1F1B unless stated otherwise).
+    pub schedule: ScheduleKind,
 }
 
 impl ParallelCfg {
     pub fn new(pp: usize, mp: usize, dp: usize) -> ParallelCfg {
         assert!(pp >= 1 && mp >= 1 && dp >= 1);
-        ParallelCfg { pp, mp, dp }
+        ParallelCfg { pp, mp, dp, schedule: ScheduleKind::OneFOneB }
     }
 
-    /// Parse the paper's `x-y-z` notation (Pipeline-Model-Data).
+    /// Same degrees, different pipeline schedule.
+    pub fn with_schedule(mut self, schedule: ScheduleKind) -> ParallelCfg {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Can the configured schedule run this geometry with `micro_batches`
+    /// micro-batches? The one validation every entry point (CLI, TCP
+    /// service, sweep) shares — e.g. interleaving needs `m % pp == 0`.
+    pub fn validate_schedule(&self, micro_batches: usize) -> Result<(), ScheduleError> {
+        self.schedule.build().validate(self.pp, micro_batches)
+    }
+
+    /// Parse the paper's `x-y-z` notation (Pipeline-Model-Data), with an
+    /// optional `/<schedule>` suffix (`4-4-8/gpipe`, `4-4-8/interleaved:2`).
     pub fn parse(s: &str) -> Option<ParallelCfg> {
-        let parts: Vec<usize> = s
+        let (degrees, schedule) = match s.split_once('/') {
+            Some((d, k)) => (d, ScheduleKind::parse(k)?),
+            None => (s, ScheduleKind::OneFOneB),
+        };
+        let parts: Vec<usize> = degrees
             .split('-')
             .map(|t| t.trim().parse::<usize>().ok())
             .collect::<Option<Vec<_>>>()?;
         match parts[..] {
-            [pp, mp, dp] if pp > 0 && mp > 0 && dp > 0 => Some(ParallelCfg { pp, mp, dp }),
+            [pp, mp, dp] if pp > 0 && mp > 0 && dp > 0 => {
+                Some(ParallelCfg { pp, mp, dp, schedule })
+            }
             _ => None,
         }
     }
 
+    /// `pp-mp-dp`, suffixed `/<schedule>` when not the default 1F1B —
+    /// round-trips through [`ParallelCfg::parse`].
     pub fn label(&self) -> String {
-        format!("{}-{}-{}", self.pp, self.mp, self.dp)
+        match self.schedule {
+            ScheduleKind::OneFOneB => format!("{}-{}-{}", self.pp, self.mp, self.dp),
+            k => format!("{}-{}-{}/{}", self.pp, self.mp, self.dp, k.label()),
+        }
     }
 
     pub fn gpus(&self) -> usize {
@@ -99,7 +128,7 @@ impl ParallelCfg {
                 let mut mp = 1;
                 while mp <= max_mp && mp <= rest {
                     if rest % mp == 0 {
-                        out.push(ParallelCfg { pp, mp, dp: rest / mp });
+                        out.push(ParallelCfg::new(pp, mp, rest / mp));
                     }
                     mp *= 2;
                 }
@@ -107,6 +136,20 @@ impl ParallelCfg {
             pp *= 2;
         }
         out
+    }
+
+    /// The sweep space crossed with a set of pipeline schedules — every
+    /// (degrees, schedule) combination for capacity planning.
+    pub fn enumerate_schedules(
+        gpus: usize,
+        max_pp: usize,
+        max_mp: usize,
+        kinds: &[ScheduleKind],
+    ) -> Vec<ParallelCfg> {
+        Self::enumerate(gpus, max_pp, max_mp)
+            .into_iter()
+            .flat_map(|c| kinds.iter().map(move |&k| c.with_schedule(k)))
+            .collect()
     }
 }
 
@@ -128,6 +171,43 @@ mod tests {
         assert!(ParallelCfg::parse("4-4").is_none());
         assert!(ParallelCfg::parse("4-0-4").is_none());
         assert!(ParallelCfg::parse("a-b-c").is_none());
+    }
+
+    #[test]
+    fn parse_schedule_suffix_roundtrip() {
+        for s in ["4-4-8/gpipe", "4-4-8/interleaved:2", "8-4-4/interleaved:4"] {
+            let c = ParallelCfg::parse(s).unwrap();
+            assert_eq!(c.label(), s);
+        }
+        let c = ParallelCfg::parse("4-4-8/gpipe").unwrap();
+        assert_eq!(c.schedule, ScheduleKind::GPipe);
+        assert_eq!((c.pp, c.mp, c.dp), (4, 4, 8));
+        // default schedule keeps the paper's bare label
+        assert_eq!(ParallelCfg::parse("4-4-8/1f1b").unwrap().label(), "4-4-8");
+        assert!(ParallelCfg::parse("4-4-8/warp").is_none());
+        assert!(ParallelCfg::parse("4-4-8/").is_none());
+    }
+
+    #[test]
+    fn with_schedule_only_changes_schedule() {
+        let base = ParallelCfg::new(4, 4, 8);
+        let g = base.with_schedule(ScheduleKind::GPipe);
+        assert_eq!((g.pp, g.mp, g.dp), (4, 4, 8));
+        assert_eq!(g.gpus(), base.gpus());
+        assert_ne!(g, base);
+        assert_eq!(g.with_schedule(ScheduleKind::OneFOneB), base);
+    }
+
+    #[test]
+    fn enumerate_schedules_crosses_kinds() {
+        let kinds = ScheduleKind::all(2);
+        let plain = ParallelCfg::enumerate(16, 8, 8);
+        let crossed = ParallelCfg::enumerate_schedules(16, 8, 8, &kinds);
+        assert_eq!(crossed.len(), plain.len() * kinds.len());
+        assert!(crossed.iter().any(|c| c.schedule == ScheduleKind::GPipe));
+        assert!(crossed
+            .iter()
+            .any(|c| c.schedule == ScheduleKind::Interleaved1F1B { chunks: 2 }));
     }
 
     #[test]

@@ -59,7 +59,7 @@ pub fn handle_line(svc: &PredictionService, line: &str) -> String {
                 .and_then(|p| p.as_str())
                 .and_then(ParallelCfg::parse)
             else {
-                return err_json("bad parallel config (expected pp-mp-dp)");
+                return err_json("bad parallel config (expected pp-mp-dp[/schedule])");
             };
             let Some(platform) = req
                 .get("platform")
@@ -75,6 +75,9 @@ pub fn handle_line(svc: &PredictionService, line: &str) -> String {
                     par.gpus(),
                     platform.max_gpus()
                 ));
+            }
+            if let Err(e) = par.validate_schedule(model.iters_per_update) {
+                return err_json(&e.to_string());
             }
             let cp = svc.predict_config(&model, &par, &platform);
             prediction_to_json(&cp).to_string()
@@ -170,6 +173,33 @@ mod tests {
         assert!(j.get("error").is_none(), "{resp}");
         assert!(j.get("total_s").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("label").unwrap().as_str().unwrap(), "Llemma-7B(4-2-2)");
+        s.shutdown();
+    }
+
+    #[test]
+    fn predict_accepts_schedule_suffix_but_rejects_bad_geometry() {
+        let s = svc();
+        // llemma7b: m = 8, pp = 4 -> interleaving fine
+        let ok = handle_line(
+            &s,
+            r#"{"cmd":"predict","model":"llemma7b","parallel":"4-2-2/interleaved:2","platform":"perlmutter"}"#,
+        );
+        let j = Json::parse(&ok).unwrap();
+        assert!(j.get("error").is_none(), "{ok}");
+        assert_eq!(
+            j.get("label").unwrap().as_str().unwrap(),
+            "Llemma-7B(4-2-2/interleaved:2)"
+        );
+        // gpt20b: m = 16, pp = 3 -> 16 % 3 != 0, interleaving impossible
+        let bad = handle_line(
+            &s,
+            r#"{"cmd":"predict","model":"gpt20b","parallel":"3-2-2/interleaved:2","platform":"perlmutter"}"#,
+        );
+        let j = Json::parse(&bad).unwrap();
+        assert!(
+            j.get("error").unwrap().as_str().unwrap().contains("multiple"),
+            "{bad}"
+        );
         s.shutdown();
     }
 

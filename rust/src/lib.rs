@@ -9,6 +9,12 @@
 //! - L3 (this crate): cluster simulator substrate, micro-benchmark
 //!   collection, tree-ensemble training, the end-to-end predictor, and a
 //!   prediction service with dynamic batching over the AOT executables.
+//! - pipeline schedules: a pluggable subsystem ([`pipeline::PipelineSchedule`])
+//!   with 1F1B, GPipe, and interleaved-1F1B implementations, all run by
+//!   one generic O(S·M·v) event-queue executor ([`pipeline::execute`]).
+//!   The simulator executes the schedule event-accurately; the predictor
+//!   dispatches the matching closed form (eq (7) and generalizations).
+//!   Selected via [`config::ParallelCfg::schedule`] / CLI `--schedule`.
 //! - L2/L1 (python/, build-time only): Pallas forest-inference kernel and
 //!   the eq.(7) timeline graph, AOT-lowered to `artifacts/*.hlo.txt`.
 //! - runtime: PJRT CPU client loading the HLO-text artifacts.

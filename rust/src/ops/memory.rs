@@ -1,19 +1,22 @@
 //! Per-GPU memory-footprint model: parameters, ZeRO-1 optimizer state,
-//! gradients, and 1F1B activation residency. Used by the sweep/capacity
-//! planner to reject strategies that would OOM before predicting their
-//! speed (predicting the runtime of a job that cannot run is how real
-//! capacity planning goes wrong).
+//! gradients, and schedule-dependent activation residency. Used by the
+//! sweep/capacity planner to reject strategies that would OOM before
+//! predicting their speed (predicting the runtime of a job that cannot
+//! run is how real capacity planning goes wrong).
 //!
 //! Accounting (GPT-NeoX defaults, fp16 + FusedAdam + ZeRO stage 1):
 //!   params:     2 B/param (fp16 working copy)
 //!   grads:      2 B/param (fp16)
 //!   optimizer:  12 B/param / |dp|  (fp32 master + 2 moments, ZeRO-1)
-//!   activations: one fwd's worth per in-flight micro-batch; 1F1B keeps
-//!                up to min(pp, m) micro-batches resident on stage 0.
+//!   activations: one fwd's worth per in-flight micro-batch. Residency
+//!                follows the pipeline schedule: 1F1B bounds stage s at
+//!                min(pp - s, m), GPipe flushes and keeps all m resident
+//!                (its defining memory tradeoff), interleaved-1F1B keeps
+//!                its warm-up chunk window live (1/v of a stage each).
 
 use crate::config::{ModelCfg, ParallelCfg, Platform};
 use crate::ops::params::{stage_params_exact, StageRole};
-use crate::pipeline::encoder_allocation;
+use crate::pipeline::{encoder_allocation, Interleaved1F1B, ScheduleKind};
 
 /// Breakdown of one (worst) stage's per-GPU memory, bytes.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -64,6 +67,21 @@ fn recompute_workspace_bytes(model: &ModelCfg, mp: usize) -> f64 {
     }
 }
 
+/// Activation residency of stage `s` in full micro-batch equivalents,
+/// per the configured pipeline schedule. Interleaved chunks each hold
+/// `1/v` of a stage's activation, so its warm-up window (see
+/// `Interleaved1F1B::stage_order`) converts to `warmup / v` equivalents.
+fn in_flight_equivalents(par: &ParallelCfg, s: usize, m: usize) -> f64 {
+    match par.schedule {
+        ScheduleKind::GPipe => m.max(1) as f64,
+        ScheduleKind::Interleaved1F1B { chunks } if chunks > 1 => {
+            let warmup = Interleaved1F1B::warmup_depth(s, par.pp, m, chunks);
+            (warmup as f64 / chunks as f64).max(1.0)
+        }
+        _ => (par.pp - s).min(m).max(1) as f64,
+    }
+}
+
 /// Worst-stage per-GPU memory estimate for a strategy.
 pub fn estimate(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> MemoryEstimate {
     let alloc = encoder_allocation(model.encoders, par.pp);
@@ -77,8 +95,7 @@ pub fn estimate(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> Mem
     for (s, &n_enc) in alloc.iter().enumerate() {
         let role = StageRole::of(s, par.pp);
         let params = stage_params_exact(role, n_enc, model.d, vocab, par.mp);
-        // 1F1B: stage s holds up to min(pp - s, m) in-flight micro-batches
-        let in_flight = (par.pp - s).min(model.iters_per_update).max(1) as f64;
+        let in_flight = in_flight_equivalents(par, s, model.iters_per_update);
         let est = MemoryEstimate {
             params_bytes: params * 2.0,
             grads_bytes: params * 2.0,
@@ -173,6 +190,28 @@ mod tests {
         let a = estimate(&with_flash, &par, &p).activation_bytes;
         let b = estimate(&without, &par, &p).activation_bytes;
         assert!(a < b, "flash {a} vs naive {b}");
+    }
+
+    #[test]
+    fn schedule_changes_activation_residency() {
+        // GPipe keeps all m micro-batches resident (heaviest); 1F1B bounds
+        // residency at the pipeline depth (lightest); interleaved warm-up
+        // sits in between. Params/grads/optimizer are schedule-independent.
+        let model = ModelCfg::gpt20b();
+        let p = Platform::perlmutter();
+        let base = ParallelCfg::new(4, 4, 8);
+        let f1 = estimate(&model, &base, &p);
+        let gp = estimate(&model, &base.with_schedule(ScheduleKind::GPipe), &p);
+        let ilv = estimate(
+            &model,
+            &base.with_schedule(ScheduleKind::Interleaved1F1B { chunks: 2 }),
+            &p,
+        );
+        let (f1a, gpa, ilva) = (f1.activation_bytes, gp.activation_bytes, ilv.activation_bytes);
+        assert!(gpa > ilva, "gpipe {gpa} vs interleaved {ilva}");
+        assert!(ilva > f1a, "interleaved {ilva} vs 1f1b {f1a}");
+        // and the OOM filter sees the difference too
+        assert!(gp.total_bytes() > f1.total_bytes());
     }
 
     #[test]

@@ -1,19 +1,26 @@
-//! Pipeline parallelism: stage partitioning (eqs 3-5), the 1F1B schedule
-//! (Figure 2), and the paper's closed-form batch-runtime composition
-//! (eq 7).
+//! Pipeline parallelism: stage partitioning (eqs 3-5), the pluggable
+//! schedule subsystem (1F1B / GPipe / interleaved-1F1B over a generic
+//! event-queue executor), and the paper's closed-form batch-runtime
+//! composition (eq 7, generalized per schedule).
 
+pub mod exec;
 pub mod partition;
 pub mod schedule;
 
+pub use exec::{execute, ScheduleError};
 pub use partition::{encoder_allocation, paper_allocation};
-pub use schedule::{one_f_one_b, Schedule, TaskTimes};
+pub use schedule::{
+    one_f_one_b, render_ascii, render_ascii_for, GPipe, Interleaved1F1B, OneFOneB,
+    PipelineSchedule, Schedule, ScheduleKind, Task, TaskKind, TaskTimes,
+};
 
 /// eq (7): the paper's closed-form 1F1B + DP runtime, µs.
 ///
 /// `max_fwd`/`max_bwd` are the slowest stage's per-micro-batch times
 /// (PP_P2P billed to senders), `first_stage_sync` is
 /// DP_AllReduce(first-stage params), `max_update` is the max over stages
-/// of Optimizer + DP_AllGather(stage params / |dp|).
+/// of Optimizer + DP_AllGather(stage params / |dp|). Other schedules
+/// generalize this via [`PipelineSchedule::closed_form_runtime_us`].
 pub fn eq7_runtime_us(
     micro_batches: usize,
     pipeline_stages: usize,
@@ -42,5 +49,22 @@ mod tests {
     fn eq7_single_stage_is_serial() {
         let t = eq7_runtime_us(8, 1, 10.0, 20.0, 5.0, 1.0);
         assert_eq!(t, 8.0 * 30.0 + 6.0);
+    }
+
+    #[test]
+    fn schedule_closed_forms_relate_as_expected() {
+        // GPipe's closed form equals 1F1B's (identical uniform bubble);
+        // interleaving with v chunks shrinks it.
+        let (m, s, f, b, sync, upd) = (16, 4, 3_000.0, 5_000.0, 7_000.0, 2_000.0);
+        let t_1f1b = ScheduleKind::OneFOneB.closed_form_runtime_us(m, s, f, b, sync, upd);
+        let t_gpipe = ScheduleKind::GPipe.closed_form_runtime_us(m, s, f, b, sync, upd);
+        let ilv2 = ScheduleKind::Interleaved1F1B { chunks: 2 };
+        let ilv1 = ScheduleKind::Interleaved1F1B { chunks: 1 };
+        let t_ilv2 = ilv2.closed_form_runtime_us(m, s, f, b, sync, upd);
+        let t_ilv1 = ilv1.closed_form_runtime_us(m, s, f, b, sync, upd);
+        assert_eq!(t_1f1b, eq7_runtime_us(m, s, f, b, sync, upd));
+        assert_eq!(t_gpipe, t_1f1b);
+        assert!((t_ilv1 - t_1f1b).abs() < 1e-9);
+        assert!(t_ilv2 < t_1f1b);
     }
 }

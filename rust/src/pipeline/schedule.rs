@@ -1,18 +1,27 @@
-//! Event-accurate 1F1B pipeline schedule (Figure 2).
+//! Pluggable pipeline schedules: 1F1B (Figure 2), GPipe, and
+//! interleaved/virtual-stage 1F1B.
 //!
-//! Given per-(stage, micro-batch) forward/backward durations (with PP_P2P
-//! send time folded into the sender's task, as the paper assigns it), this
-//! computes exact start/end times under the 1F1B discipline: each stage
-//! runs `min(m, S - s)` warm-up forwards, then alternates
-//! backward/forward, then drains the remaining backwards.
+//! A [`PipelineSchedule`] contributes two things: the serial task order
+//! each physical stage executes ([`PipelineSchedule::stage_order`]) and a
+//! closed-form batch runtime generalizing the paper's eq (7)
+//! ([`PipelineSchedule::closed_form_runtime_us`]). Dependencies between
+//! tasks are schedule-independent once tasks are mapped onto *virtual*
+//! stages: chunk `c` of physical stage `s` is virtual stage `c*S + s`,
+//! forward activations flow down the virtual pipeline and gradients flow
+//! back up. The generic event-queue executor ([`crate::pipeline::execute`])
+//! runs any schedule's dependency DAG in O(S·M·v).
 //!
-//! The ground-truth simulator (`trainrun`) executes THIS schedule with
-//! jittered task durations; the predictor only has the closed form eq (7).
-//! The gap between them is the realistic composition error the paper's
-//! Table IX exhibits.
+//! The ground-truth simulator (`trainrun`) executes the configured
+//! schedule with jittered task durations; the predictor only has the
+//! matching closed form. The gap between them is the realistic
+//! composition error the paper's Table IX exhibits.
+
+use crate::pipeline::exec::{execute, ScheduleError};
 
 /// Per-task durations, µs: `fwd[s][i]` / `bwd[s][i]` for stage `s`,
-/// micro-batch `i` (sender-side P2P included).
+/// micro-batch `i` (sender-side P2P included). With `v` virtual chunks
+/// per stage, each chunk task costs `1/v` of the stage's time (the chunk
+/// holds `1/v` of the stage's layers).
 #[derive(Clone, Debug)]
 pub struct TaskTimes {
     pub fwd: Vec<Vec<f64>>,
@@ -37,9 +46,39 @@ impl TaskTimes {
     }
 }
 
-/// Computed schedule: start/end instants per (stage, micro-batch) task.
+/// What a task computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Fwd,
+    Bwd,
+}
+
+/// One unit of pipeline work: micro-batch `mb` of virtual chunk `chunk`
+/// (always chunk 0 for non-interleaved schedules).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Task {
+    pub kind: TaskKind,
+    pub chunk: usize,
+    pub mb: usize,
+}
+
+impl Task {
+    pub fn fwd(chunk: usize, mb: usize) -> Task {
+        Task { kind: TaskKind::Fwd, chunk, mb }
+    }
+
+    pub fn bwd(chunk: usize, mb: usize) -> Task {
+        Task { kind: TaskKind::Bwd, chunk, mb }
+    }
+}
+
+/// Computed schedule: start/end instants per (stage, chunk, micro-batch)
+/// task, flat-indexed `[stage][chunk * m + mb]`. For single-chunk
+/// schedules (`chunks == 1`) this is the classic `[stage][mb]` layout.
 #[derive(Clone, Debug)]
 pub struct Schedule {
+    /// Virtual chunks per physical stage (1 except interleaved-1F1B).
+    pub chunks: usize,
     pub fwd_start: Vec<Vec<f64>>,
     pub fwd_end: Vec<Vec<f64>>,
     pub bwd_start: Vec<Vec<f64>>,
@@ -49,6 +88,11 @@ pub struct Schedule {
 impl Schedule {
     pub fn stages(&self) -> usize {
         self.fwd_start.len()
+    }
+
+    /// Micro-batches per chunk.
+    pub fn micro_batches(&self) -> usize {
+        self.fwd_start.first().map_or(0, |v| v.len()) / self.chunks.max(1)
     }
 
     /// When each stage finishes its last backward (gradient-sync start).
@@ -61,111 +105,384 @@ impl Schedule {
         self.stage_last_bwd_end().iter().cloned().fold(0.0, f64::max)
     }
 
-    /// Pipeline bubble fraction for a stage: idle / makespan.
+    /// Pipeline bubble fraction for a stage: idle / makespan. Degenerate
+    /// zero-duration inputs (makespan 0) report 0 bubble, not NaN.
     pub fn bubble_fraction(&self, times: &TaskTimes, stage: usize) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            return 0.0;
+        }
         let busy: f64 = times.fwd[stage].iter().sum::<f64>() + times.bwd[stage].iter().sum::<f64>();
-        1.0 - busy / self.makespan()
+        1.0 - busy / span
     }
 }
 
-/// The 1F1B task order for one stage: indices into fwd (F) / bwd (B).
-fn stage_order(stage: usize, stages: usize, m: usize) -> Vec<(bool, usize)> {
+/// A pipeline-parallel execution discipline.
+///
+/// Implementations provide per-stage task orders plus a closed-form
+/// runtime; the generic executor derives exact start/end instants from
+/// the order and the virtual-stage dependency structure.
+pub trait PipelineSchedule {
+    /// The selectable kind this implementation corresponds to.
+    fn kind(&self) -> ScheduleKind;
+
+    /// Human-readable name for reports and errors.
+    fn name(&self) -> &'static str;
+
+    /// Virtual chunks per physical stage (`v`; 1 except interleaved).
+    fn chunks(&self) -> usize {
+        1
+    }
+
+    /// Geometry check before execution (e.g. interleaved-1F1B requires
+    /// the micro-batch count to divide evenly into stage-sized groups).
+    fn validate(&self, _stages: usize, _micro_batches: usize) -> Result<(), ScheduleError> {
+        Ok(())
+    }
+
+    /// The serial task order physical stage `stage` executes. Must
+    /// contain every (kind, chunk, mb) task exactly once.
+    fn stage_order(&self, stage: usize, stages: usize, micro_batches: usize) -> Vec<Task>;
+
+    /// Closed-form batch runtime, µs — the schedule's generalization of
+    /// the paper's eq (7). `max_fwd`/`max_bwd` are the slowest stage's
+    /// per-micro-batch times, `first_stage_sync` the exposed DP
+    /// all-reduce, `max_update` the max optimizer + all-gather.
+    fn closed_form_runtime_us(
+        &self,
+        micro_batches: usize,
+        stages: usize,
+        max_fwd: f64,
+        max_bwd: f64,
+        first_stage_sync: f64,
+        max_update: f64,
+    ) -> f64;
+}
+
+/// The 1F1B task order for one stage: `min(m, S - s)` warm-up forwards,
+/// then alternate backward/forward, then drain remaining backwards.
+fn one_f_one_b_order(stage: usize, stages: usize, m: usize) -> Vec<Task> {
     let warmup = (stages - stage).min(m);
     let mut order = Vec::with_capacity(2 * m);
     for i in 0..warmup {
-        order.push((true, i)); // F_i
+        order.push(Task::fwd(0, i));
     }
     let mut next_f = warmup;
     for i in 0..m {
-        order.push((false, i)); // B_i
+        order.push(Task::bwd(0, i));
         if next_f < m {
-            order.push((true, next_f));
+            order.push(Task::fwd(0, next_f));
             next_f += 1;
         }
     }
     order
 }
 
-/// Compute the exact 1F1B schedule.
+/// The paper's 1F1B discipline (Figure 2): warm-up forwards, steady
+/// one-forward-one-backward, cool-down backwards.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OneFOneB;
+
+impl PipelineSchedule for OneFOneB {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::OneFOneB
+    }
+
+    fn name(&self) -> &'static str {
+        "1F1B"
+    }
+
+    fn stage_order(&self, stage: usize, stages: usize, micro_batches: usize) -> Vec<Task> {
+        one_f_one_b_order(stage, stages, micro_batches)
+    }
+
+    fn closed_form_runtime_us(
+        &self,
+        micro_batches: usize,
+        stages: usize,
+        max_fwd: f64,
+        max_bwd: f64,
+        first_stage_sync: f64,
+        max_update: f64,
+    ) -> f64 {
+        crate::pipeline::eq7_runtime_us(
+            micro_batches,
+            stages,
+            max_fwd,
+            max_bwd,
+            first_stage_sync,
+            max_update,
+        )
+    }
+}
+
+/// GPipe: every stage runs all forwards, then all backwards (a full
+/// flush). Identical uniform-time makespan to 1F1B — `(m + S - 1)(f+b)`
+/// — but a different activation-memory profile and a different
+/// event-accurate composition under jittered/imbalanced stage times.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GPipe;
+
+impl PipelineSchedule for GPipe {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::GPipe
+    }
+
+    fn name(&self) -> &'static str {
+        "GPipe"
+    }
+
+    fn stage_order(&self, _stage: usize, _stages: usize, micro_batches: usize) -> Vec<Task> {
+        let mut order = Vec::with_capacity(2 * micro_batches);
+        for i in 0..micro_batches {
+            order.push(Task::fwd(0, i));
+        }
+        for i in 0..micro_batches {
+            order.push(Task::bwd(0, i));
+        }
+        order
+    }
+
+    fn closed_form_runtime_us(
+        &self,
+        micro_batches: usize,
+        stages: usize,
+        max_fwd: f64,
+        max_bwd: f64,
+        first_stage_sync: f64,
+        max_update: f64,
+    ) -> f64 {
+        (micro_batches as f64 + stages as f64 - 1.0) * (max_fwd + max_bwd)
+            + first_stage_sync
+            + max_update
+    }
+}
+
+/// Interleaved (virtual-stage) 1F1B, Megatron-LM style: each physical
+/// stage hosts `v` chunks of `1/v` of its layers, shrinking the pipeline
+/// bubble to `(S-1)(f+b)/v`. Requires `m % S == 0` for `v > 1` (the
+/// schedule walks micro-batches in stage-sized groups). `v = 1` is
+/// exactly classic 1F1B.
+///
+/// Known model limit: chunk tasks cost `1/v` of the WHOLE stage time,
+/// including the PP_P2P share folded into it. Compute does scale `1/v`,
+/// but real interleaving crosses `v` times as many chunk boundaries with
+/// full-size activations, so total P2P grows ~`v`x. With P2P a few
+/// percent of stage time (this repo's platforms) the error is small, but
+/// on P2P-bound fabrics this model overstates interleaving's win —
+/// splitting TaskTimes into compute/comm components is the ROADMAP fix.
+#[derive(Clone, Copy, Debug)]
+pub struct Interleaved1F1B {
+    v: usize,
+}
+
+impl Interleaved1F1B {
+    /// `v` virtual chunks per stage; `v` is clamped to at least 1.
+    pub fn new(v: usize) -> Interleaved1F1B {
+        Interleaved1F1B { v: v.max(1) }
+    }
+
+    /// Warm-up depth of stage `stage` in chunk tasks, capped at the total
+    /// forward count: Megatron's `(S - s - 1)·2 + (v - 1)·S`, +1 because
+    /// the steady loop here is backward-first. Shared with the
+    /// activation-residency model (`ops::memory`) so the OOM filter and
+    /// the schedule cannot drift apart.
+    pub fn warmup_depth(stage: usize, stages: usize, micro_batches: usize, v: usize) -> usize {
+        ((stages - stage - 1) * 2 + (v - 1) * stages + 1).min(micro_batches * v)
+    }
+
+    /// The `k`-th forward task in a stage's global forward walk: chunks
+    /// rotate every `S` micro-batches (depth-first down the virtual
+    /// pipeline), groups of `S` micro-batches advance per chunk cycle.
+    fn fwd_task(k: usize, stages: usize, v: usize) -> Task {
+        let group = k / stages;
+        Task::fwd(group % v, (group / v) * stages + k % stages)
+    }
+
+    /// The `k`-th backward task: same walk with chunk order reversed
+    /// (gradients drain the deepest chunk first).
+    fn bwd_task(k: usize, stages: usize, v: usize) -> Task {
+        let group = k / stages;
+        Task::bwd(v - 1 - group % v, (group / v) * stages + k % stages)
+    }
+}
+
+impl PipelineSchedule for Interleaved1F1B {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::Interleaved1F1B { chunks: self.v }
+    }
+
+    fn name(&self) -> &'static str {
+        "interleaved-1F1B"
+    }
+
+    fn chunks(&self) -> usize {
+        self.v
+    }
+
+    fn validate(&self, stages: usize, micro_batches: usize) -> Result<(), ScheduleError> {
+        if self.v > 1 && micro_batches % stages != 0 {
+            return Err(ScheduleError::Unsupported {
+                schedule: self.name(),
+                reason: format!(
+                    "micro-batch count {micro_batches} is not a multiple of {stages} stages \
+                     (required for v={} virtual chunks)",
+                    self.v
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    fn stage_order(&self, stage: usize, stages: usize, micro_batches: usize) -> Vec<Task> {
+        let (v, m) = (self.v, micro_batches);
+        if v == 1 {
+            return one_f_one_b_order(stage, stages, m);
+        }
+        let n = m * v;
+        let warmup = Self::warmup_depth(stage, stages, m, v);
+        let mut order = Vec::with_capacity(2 * n);
+        for k in 0..warmup {
+            order.push(Self::fwd_task(k, stages, v));
+        }
+        let mut next_f = warmup;
+        for j in 0..n {
+            order.push(Self::bwd_task(j, stages, v));
+            if next_f < n {
+                order.push(Self::fwd_task(next_f, stages, v));
+                next_f += 1;
+            }
+        }
+        order
+    }
+
+    fn closed_form_runtime_us(
+        &self,
+        micro_batches: usize,
+        stages: usize,
+        max_fwd: f64,
+        max_bwd: f64,
+        first_stage_sync: f64,
+        max_update: f64,
+    ) -> f64 {
+        // Megatron-LM: ideal m(f+b) plus bubble (S-1)(f+b)/v. v = 1
+        // recovers eq (7)'s (m - 1 + S)(f + b).
+        let (m, s) = (micro_batches as f64, stages as f64);
+        m * (max_fwd + max_bwd) + (s - 1.0) * (max_fwd + max_bwd) / self.v as f64
+            + first_stage_sync
+            + max_update
+    }
+}
+
+/// Selectable schedule kind — the value carried by
+/// [`crate::config::ParallelCfg`] and the CLI `--schedule` flag.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ScheduleKind {
+    #[default]
+    OneFOneB,
+    GPipe,
+    Interleaved1F1B {
+        /// Virtual chunks per physical stage (`v >= 1`).
+        chunks: usize,
+    },
+}
+
+impl ScheduleKind {
+    /// Parse `1f1b`, `gpipe`, `interleaved` (v=2) or `interleaved:<v>`.
+    pub fn parse(s: &str) -> Option<ScheduleKind> {
+        let t = s.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "1f1b" => Some(ScheduleKind::OneFOneB),
+            "gpipe" => Some(ScheduleKind::GPipe),
+            "interleaved" => Some(ScheduleKind::Interleaved1F1B { chunks: 2 }),
+            _ => {
+                let v: usize = t.strip_prefix("interleaved:")?.parse().ok()?;
+                if v >= 1 {
+                    Some(ScheduleKind::Interleaved1F1B { chunks: v })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Round-trippable label (`1f1b` / `gpipe` / `interleaved:<v>`).
+    pub fn label(&self) -> String {
+        match *self {
+            ScheduleKind::OneFOneB => "1f1b".to_string(),
+            ScheduleKind::GPipe => "gpipe".to_string(),
+            ScheduleKind::Interleaved1F1B { chunks } => format!("interleaved:{chunks}"),
+        }
+    }
+
+    /// Instantiate the schedule implementation.
+    pub fn build(&self) -> Box<dyn PipelineSchedule> {
+        match *self {
+            ScheduleKind::OneFOneB => Box::new(OneFOneB),
+            ScheduleKind::GPipe => Box::new(GPipe),
+            ScheduleKind::Interleaved1F1B { chunks } => Box::new(Interleaved1F1B::new(chunks)),
+        }
+    }
+
+    /// Closed-form batch runtime for this schedule (dispatching eq (7)
+    /// or its generalization).
+    pub fn closed_form_runtime_us(
+        &self,
+        micro_batches: usize,
+        stages: usize,
+        max_fwd: f64,
+        max_bwd: f64,
+        first_stage_sync: f64,
+        max_update: f64,
+    ) -> f64 {
+        self.build().closed_form_runtime_us(
+            micro_batches,
+            stages,
+            max_fwd,
+            max_bwd,
+            first_stage_sync,
+            max_update,
+        )
+    }
+
+    /// The comparison set used by sweeps and report tables.
+    pub fn all(interleave_chunks: usize) -> Vec<ScheduleKind> {
+        vec![
+            ScheduleKind::OneFOneB,
+            ScheduleKind::GPipe,
+            ScheduleKind::Interleaved1F1B { chunks: interleave_chunks.max(2) },
+        ]
+    }
+}
+
+impl std::fmt::Display for ScheduleKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// Compute the exact 1F1B schedule (the classic entry point, preserved;
+/// runs through the generic event-queue executor).
 ///
 /// Dependencies: F(s,i) needs F(s-1,i) done (activation arrival; transfer
 /// time already folded into the sender's fwd task). B(s,i) needs B(s+1,i)
 /// done, and on the last stage F(s,i) done. Each stage executes its 1F1B
 /// order serially.
 pub fn one_f_one_b(times: &TaskTimes) -> Schedule {
-    let s_count = times.stages();
-    let m = times.micro_batches();
-    assert!(s_count >= 1 && m >= 1);
-    let mut fs = vec![vec![f64::NAN; m]; s_count];
-    let mut fe = vec![vec![f64::NAN; m]; s_count];
-    let mut bs = vec![vec![f64::NAN; m]; s_count];
-    let mut be = vec![vec![f64::NAN; m]; s_count];
-
-    // Iterate until fixed point: stage order is static, but B(s,i) depends
-    // on the NEXT stage, so a single forward sweep cannot resolve both
-    // directions. Two phases suffice: process stages in order for fwd
-    // deps, but bwd deps flow backward — use an event-driven loop instead.
-    let orders: Vec<Vec<(bool, usize)>> =
-        (0..s_count).map(|s| stage_order(s, s_count, m)).collect();
-    let mut cursor = vec![0usize; s_count]; // next task index per stage
-    let mut avail = vec![0.0f64; s_count]; // stage-free instant
-    let mut progressed = true;
-    let mut done = 0usize;
-    let total = 2 * m * s_count;
-
-    while done < total {
-        assert!(progressed, "1F1B schedule deadlocked (dependency bug)");
-        progressed = false;
-        for s in 0..s_count {
-            while cursor[s] < orders[s].len() {
-                let (is_fwd, i) = orders[s][cursor[s]];
-                let dep = if is_fwd {
-                    if s == 0 {
-                        Some(0.0)
-                    } else if fe[s - 1][i].is_nan() {
-                        None
-                    } else {
-                        Some(fe[s - 1][i])
-                    }
-                } else if s == s_count - 1 {
-                    if fe[s][i].is_nan() {
-                        None
-                    } else {
-                        Some(fe[s][i])
-                    }
-                } else if be[s + 1][i].is_nan() {
-                    None
-                } else {
-                    Some(be[s + 1][i])
-                };
-                let Some(ready) = dep else { break };
-                let start = ready.max(avail[s]);
-                let dur = if is_fwd { times.fwd[s][i] } else { times.bwd[s][i] };
-                let end = start + dur;
-                if is_fwd {
-                    fs[s][i] = start;
-                    fe[s][i] = end;
-                } else {
-                    bs[s][i] = start;
-                    be[s][i] = end;
-                }
-                avail[s] = end;
-                cursor[s] += 1;
-                done += 1;
-                progressed = true;
-            }
-        }
-    }
-
-    Schedule { fwd_start: fs, fwd_end: fe, bwd_start: bs, bwd_end: be }
+    execute(&OneFOneB, times).expect("1F1B dependency DAG is acyclic for any task times")
 }
 
-/// Render an ASCII timeline in the style of Figure 2 (numbers are
-/// micro-batch ids; `F`/`B` rows per stage).
-pub fn render_ascii(times: &TaskTimes, width: usize) -> String {
-    let sched = one_f_one_b(times);
+/// Render an ASCII timeline in the style of Figure 2 for any schedule
+/// (numbers are micro-batch ids; `F`/`B` rows per stage).
+pub fn render_ascii_for(
+    kind: ScheduleKind,
+    times: &TaskTimes,
+    width: usize,
+) -> Result<String, ScheduleError> {
+    let sched = execute(kind.build().as_ref(), times)?;
     let span = sched.makespan();
-    let scale = width as f64 / span;
+    let scale = if span > 0.0 { width as f64 / span } else { 0.0 };
+    let m = times.micro_batches();
     let mut out = String::new();
     for s in 0..times.stages() {
         let mut row = vec![b' '; width + 1];
@@ -177,20 +494,33 @@ pub fn render_ascii(times: &TaskTimes, width: usize) -> String {
                 *cell = if k == a { label.bytes().next().unwrap_or(ch) } else { ch };
             }
         };
-        for i in 0..times.micro_batches() {
-            paint(sched.fwd_start[s][i], sched.fwd_end[s][i], format!("{}", (i + 1) % 10), true);
+        for t in 0..sched.fwd_start[s].len() {
+            let label = format!("{}", (t % m + 1) % 10);
+            paint(sched.fwd_start[s][t], sched.fwd_end[s][t], label, true);
         }
-        for i in 0..times.micro_batches() {
-            paint(sched.bwd_start[s][i], sched.bwd_end[s][i], format!("{}", (i + 1) % 10), false);
+        for t in 0..sched.bwd_start[s].len() {
+            let label = format!("{}", (t % m + 1) % 10);
+            paint(sched.bwd_start[s][t], sched.bwd_end[s][t], label, false);
         }
         out.push_str(&format!("Stage{} |{}|\n", s + 1, String::from_utf8(row).unwrap()));
     }
-    out
+    Ok(out)
+}
+
+/// Render the 1F1B ASCII timeline (back-compat entry point).
+pub fn render_ascii(times: &TaskTimes, width: usize) -> String {
+    render_ascii_for(ScheduleKind::OneFOneB, times, width)
+        .expect("1F1B renders for any task times")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::exec::execute;
+
+    fn makespan_of(kind: ScheduleKind, times: &TaskTimes) -> f64 {
+        execute(kind.build().as_ref(), times).unwrap().makespan()
+    }
 
     #[test]
     fn single_stage_serial() {
@@ -218,6 +548,66 @@ mod tests {
     }
 
     #[test]
+    fn gpipe_bubble_formula_uniform() {
+        for (stages, m) in [(1, 3), (2, 4), (4, 4), (4, 16), (8, 16)] {
+            let (f, b) = (2.0, 4.0);
+            let t = TaskTimes::uniform(stages, m, f, b);
+            let ms = makespan_of(ScheduleKind::GPipe, &t);
+            let expect = (m as f64 + stages as f64 - 1.0) * (f + b);
+            assert!((ms - expect).abs() < 1e-9, "S={stages} m={m}: {ms} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn interleaved_bubble_formula_uniform() {
+        // makespan = m(f+b) + (S-1)(f+b)/v when m % S == 0.
+        for (stages, m, v) in [(2, 4, 2), (4, 8, 2), (4, 16, 4), (8, 16, 2), (1, 3, 3)] {
+            let (f, b) = (2.0, 4.0);
+            let t = TaskTimes::uniform(stages, m, f, b);
+            let ms = makespan_of(ScheduleKind::Interleaved1F1B { chunks: v }, &t);
+            let expect = m as f64 * (f + b) + (stages as f64 - 1.0) * (f + b) / v as f64;
+            assert!(
+                (ms - expect).abs() < 1e-9,
+                "S={stages} m={m} v={v}: {ms} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn interleaved_v1_is_exactly_1f1b() {
+        let t = TaskTimes::uniform(4, 6, 1.5, 2.5);
+        let a = one_f_one_b(&t);
+        let b = execute(&Interleaved1F1B::new(1), &t).unwrap();
+        assert_eq!(a.chunks, b.chunks);
+        assert_eq!(a.fwd_start, b.fwd_start);
+        assert_eq!(a.bwd_end, b.bwd_end);
+    }
+
+    #[test]
+    fn interleaved_rejects_indivisible_micro_batches() {
+        let t = TaskTimes::uniform(4, 6, 1.0, 2.0); // 6 % 4 != 0
+        let err = execute(&Interleaved1F1B::new(2), &t).unwrap_err();
+        assert!(matches!(err, ScheduleError::Unsupported { .. }), "{err}");
+        assert!(err.to_string().contains("multiple"), "{err}");
+    }
+
+    #[test]
+    fn closed_forms_match_executor_on_uniform_times() {
+        let (f, b) = (3.0, 5.0);
+        for kind in [
+            ScheduleKind::OneFOneB,
+            ScheduleKind::GPipe,
+            ScheduleKind::Interleaved1F1B { chunks: 2 },
+        ] {
+            let (s, m) = (4, 8);
+            let t = TaskTimes::uniform(s, m, f, b);
+            let ms = makespan_of(kind, &t);
+            let closed = kind.closed_form_runtime_us(m, s, f, b, 0.0, 0.0);
+            assert!((ms - closed).abs() < 1e-9, "{kind}: {ms} vs {closed}");
+        }
+    }
+
+    #[test]
     fn dependencies_respected() {
         let t = TaskTimes::uniform(4, 6, 1.0, 2.0);
         let s = one_f_one_b(&t);
@@ -238,19 +628,25 @@ mod tests {
     }
 
     #[test]
-    fn stage_serialism() {
-        // No two tasks on one stage overlap.
-        let t = TaskTimes::uniform(3, 5, 1.5, 2.5);
-        let s = one_f_one_b(&t);
-        for st in 0..3 {
-            let mut intervals: Vec<(f64, f64)> = Vec::new();
-            for i in 0..5 {
-                intervals.push((s.fwd_start[st][i], s.fwd_end[st][i]));
-                intervals.push((s.bwd_start[st][i], s.bwd_end[st][i]));
-            }
-            intervals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            for w in intervals.windows(2) {
-                assert!(w[1].0 >= w[0].1 - 1e-12, "overlap at stage {st}");
+    fn stage_serialism_all_schedules() {
+        // No two tasks on one stage overlap, for any schedule.
+        let t = TaskTimes::uniform(3, 6, 1.5, 2.5);
+        for kind in [
+            ScheduleKind::OneFOneB,
+            ScheduleKind::GPipe,
+            ScheduleKind::Interleaved1F1B { chunks: 2 },
+        ] {
+            let s = execute(kind.build().as_ref(), &t).unwrap();
+            for st in 0..3 {
+                let mut intervals: Vec<(f64, f64)> = Vec::new();
+                for ti in 0..s.fwd_start[st].len() {
+                    intervals.push((s.fwd_start[st][ti], s.fwd_end[st][ti]));
+                    intervals.push((s.bwd_start[st][ti], s.bwd_end[st][ti]));
+                }
+                intervals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                for w in intervals.windows(2) {
+                    assert!(w[1].0 >= w[0].1 - 1e-12, "overlap at stage {st} under {kind}");
+                }
             }
         }
     }
@@ -289,11 +685,55 @@ mod tests {
     }
 
     #[test]
+    fn interleaving_shrinks_bubble() {
+        let t = TaskTimes::uniform(4, 8, 1.0, 2.0);
+        let b1 = makespan_of(ScheduleKind::OneFOneB, &t);
+        let b2 = makespan_of(ScheduleKind::Interleaved1F1B { chunks: 2 }, &t);
+        let b4 = makespan_of(ScheduleKind::Interleaved1F1B { chunks: 4 }, &t);
+        assert!(b2 < b1, "{b2} vs {b1}");
+        assert!(b4 < b2, "{b4} vs {b2}");
+    }
+
+    #[test]
+    fn bubble_fraction_zero_makespan_is_zero() {
+        // Degenerate 1-stage/1-micro-batch with zero durations must not NaN.
+        let t = TaskTimes::uniform(1, 1, 0.0, 0.0);
+        let s = one_f_one_b(&t);
+        assert_eq!(s.makespan(), 0.0);
+        assert_eq!(s.bubble_fraction(&t, 0), 0.0);
+    }
+
+    #[test]
+    fn schedule_kind_parse_label_roundtrip() {
+        for s in ["1f1b", "gpipe", "interleaved:2", "interleaved:4"] {
+            assert_eq!(ScheduleKind::parse(s).unwrap().label(), s);
+        }
+        assert_eq!(
+            ScheduleKind::parse("interleaved"),
+            Some(ScheduleKind::Interleaved1F1B { chunks: 2 })
+        );
+        assert_eq!(ScheduleKind::parse("GPipe"), Some(ScheduleKind::GPipe));
+        assert!(ScheduleKind::parse("interleaved:0").is_none());
+        assert!(ScheduleKind::parse("pipedream").is_none());
+        assert_eq!(ScheduleKind::default(), ScheduleKind::OneFOneB);
+    }
+
+    #[test]
     fn ascii_render_has_all_stages() {
         let t = TaskTimes::uniform(4, 4, 1.0, 2.0);
         let art = render_ascii(&t, 80);
         assert_eq!(art.lines().count(), 4);
         assert!(art.contains("Stage1"));
         assert!(art.contains('F') && art.contains('B'));
+    }
+
+    #[test]
+    fn ascii_render_all_schedules() {
+        let t = TaskTimes::uniform(4, 8, 1.0, 2.0);
+        for kind in ScheduleKind::all(2) {
+            let art = render_ascii_for(kind, &t, 80).unwrap();
+            assert_eq!(art.lines().count(), 4, "{kind}");
+            assert!(art.contains('F') && art.contains('B'), "{kind}");
+        }
     }
 }

@@ -1,5 +1,7 @@
 //! Component-level composition: per-operator regressor predictions
-//! assembled into stage times and the eq. (7) end-to-end batch runtime.
+//! assembled into stage times and the end-to-end batch runtime via the
+//! closed form matching the configured pipeline schedule (eq. (7) for
+//! 1F1B, its generalizations for GPipe / interleaved-1F1B).
 //!
 //! The predictor sees only (a) the model/parallelism/platform configs,
 //! (b) the paper's formulas (eqs 1-7, Tables I-III), and (c) the trained
@@ -11,7 +13,6 @@ use std::collections::HashMap;
 
 use crate::config::{ModelCfg, ParallelCfg, Platform};
 use crate::ops::{OpInstance, OpKind};
-use crate::pipeline::eq7_runtime_us;
 use crate::predictor::registry::BatchPredictor;
 use crate::sampling::DatasetKey;
 use crate::trainrun::{stage_plans_mode, StagePlan};
@@ -33,7 +34,8 @@ pub struct ComponentPrediction {
     pub dp_allgather_max_us: f64,
     pub max_update_us: f64,
     pub update_us: Vec<f64>,
-    /// eq (7) end-to-end batch runtime, µs.
+    /// Closed-form end-to-end batch runtime, µs (eq (7) or the
+    /// schedule-specific generalization).
     pub total_us: f64,
 }
 
@@ -196,7 +198,14 @@ pub fn predict(
 
     let max_fwd = stage_fwd.iter().cloned().fold(0.0, f64::max);
     let max_bwd = stage_bwd.iter().cloned().fold(0.0, f64::max);
-    let total = eq7_runtime_us(model.iters_per_update, par.pp, max_fwd, max_bwd, dp_first, max_update);
+    let total = par.schedule.closed_form_runtime_us(
+        model.iters_per_update,
+        par.pp,
+        max_fwd,
+        max_bwd,
+        dp_first,
+        max_update,
+    );
 
     ComponentPrediction {
         label: format!("{}({})", model.name, par.label()),
@@ -240,9 +249,56 @@ impl BatchPredictor for OraclePredictor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::ScheduleKind;
 
     fn cfg() -> (ModelCfg, ParallelCfg, Platform) {
         (ModelCfg::gpt20b(), ParallelCfg::new(4, 4, 8), Platform::perlmutter())
+    }
+
+    #[test]
+    fn closed_form_dispatches_per_schedule() {
+        let (m, par, p) = cfg();
+        let mut oracle = OraclePredictor { platform: p.clone() };
+        let base = predict(&m, &par, &p, &mut oracle);
+        let gpipe = predict(&m, &par.with_schedule(ScheduleKind::GPipe), &p, &mut oracle);
+        let ilv = predict(
+            &m,
+            &par.with_schedule(ScheduleKind::Interleaved1F1B { chunks: 2 }),
+            &p,
+            &mut oracle,
+        );
+        // per-op components are schedule-independent; only composition moves
+        assert_eq!(base.stage_fwd_us, gpipe.stage_fwd_us);
+        assert_eq!(base.total_us, gpipe.total_us); // identical closed forms
+        assert!(ilv.total_us < base.total_us, "{} vs {}", ilv.total_us, base.total_us);
+        assert_eq!(gpipe.label, "GPT-20B(4-4-8/gpipe)");
+        assert_eq!(ilv.label, "GPT-20B(4-4-8/interleaved:2)");
+    }
+
+    #[test]
+    fn predict_finite_when_stages_lack_encoders() {
+        // With fewer encoders than stages (or none at all), some or all
+        // stages carry no encoder blocks and the per-encoder sample lists
+        // go empty; every mean-over-empty must yield a finite zero, never
+        // NaN, and the batch total must stay positive (pre/post blocks
+        // and comms still run).
+        let (_, par, p) = cfg();
+        for encoders in [2usize, 0] {
+            let mut m = ModelCfg::gpt20b();
+            m.encoders = encoders;
+            let mut oracle = OraclePredictor { platform: p.clone() };
+            let cp = predict(&m, &par, &p, &mut oracle);
+            assert!(cp.total_us.is_finite() && cp.total_us > 0.0, "encoders={encoders}");
+            assert!(cp.encoder_fwd_us.is_finite(), "encoders={encoders}");
+            assert!(cp.encoder_bwd_us.is_finite(), "encoders={encoders}");
+            assert!(cp.stage_fwd_us.iter().all(|v| v.is_finite()), "encoders={encoders}");
+            if encoders == 0 {
+                // every stage is encoder-free: the mean over an empty
+                // slice is defined as 0.0 (the satellite-task guarantee)
+                assert_eq!(cp.encoder_fwd_us, 0.0);
+                assert_eq!(cp.encoder_bwd_us, 0.0);
+            }
+        }
     }
 
     #[test]

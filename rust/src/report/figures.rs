@@ -1,22 +1,31 @@
-//! Figure 2 (1F1B timeline) and Figure 3 (component time-cost
-//! proportions) generators.
+//! Figure 2 (pipeline schedule timelines) and Figure 3 (component
+//! time-cost proportions) generators.
 
 use crate::config::{ModelCfg, ParallelCfg, Platform};
-use crate::pipeline::schedule::render_ascii;
-use crate::pipeline::TaskTimes;
+use crate::pipeline::schedule::render_ascii_for;
+use crate::pipeline::{ScheduleKind, TaskTimes};
 use crate::predictor::e2e::ComponentPrediction;
 use crate::predictor::predict;
 use crate::predictor::registry::BatchPredictor;
 use crate::report::tables::paper_configs;
 use crate::trainrun::stage_plans;
 
-/// Figure 2: the canonical 4-stage x 4-micro-batch 1F1B timeline, plus a
-/// measured-shape variant from an actual stage plan.
+/// Figure 2: canonical uniform-time timelines for all three pipeline
+/// schedules, plus a measured-shape variant (under `par.schedule`) from
+/// an actual stage plan.
 pub fn fig2_markdown(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> String {
-    let mut s = String::from("# Figure 2 — 1F1B pipeline timeline\n\n");
-    s.push_str("Canonical 4 stages x 4 micro-batches (uniform times):\n\n```\n");
-    s.push_str(&render_ascii(&TaskTimes::uniform(4, 4, 1.0, 2.0), 72));
-    s.push_str("```\n\n");
+    let mut s = String::from("# Figure 2 — pipeline schedule timelines\n\n");
+    for kind in ScheduleKind::all(2) {
+        // interleaving walks micro-batches in stage-sized groups, so the
+        // canonical interleaved render uses 8 micro-batches over 4 stages
+        let m = if matches!(kind, ScheduleKind::Interleaved1F1B { .. }) { 8 } else { 4 };
+        let art = render_ascii_for(kind, &TaskTimes::uniform(4, m, 1.0, 2.0), 72)
+            .expect("canonical geometry is valid for every schedule");
+        s.push_str(&format!(
+            "Canonical `{}` — 4 stages x {m} micro-batches (uniform times):\n\n```\n{art}```\n\n",
+            kind.label()
+        ));
+    }
 
     let plans = stage_plans(model, par, platform);
     let sim = crate::sim::ClusterSim::new(platform.clone(), 1);
@@ -40,14 +49,23 @@ pub fn fig2_markdown(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -
             })
             .collect(),
     };
-    s.push_str(&format!(
-        "{}({}) on {} — deterministic stage times, {} micro-batches:\n\n```\n{}```\n",
-        model.name,
-        par.label(),
-        platform.name,
-        model.iters_per_update,
-        render_ascii(&times, 100)
-    ));
+    match render_ascii_for(par.schedule, &times, 100) {
+        Ok(art) => s.push_str(&format!(
+            "{}({}) on {} — `{}`, deterministic stage times, {} micro-batches:\n\n```\n{art}```\n",
+            model.name,
+            par.label(),
+            platform.name,
+            par.schedule.label(),
+            model.iters_per_update,
+        )),
+        Err(e) => s.push_str(&format!(
+            "{}({}) on {}: schedule `{}` unavailable for this geometry — {e}\n",
+            model.name,
+            par.label(),
+            platform.name,
+            par.schedule.label(),
+        )),
+    }
     s
 }
 
@@ -135,7 +153,7 @@ mod tests {
     use crate::predictor::e2e::OraclePredictor;
 
     #[test]
-    fn fig2_renders_both_timelines() {
+    fn fig2_renders_all_schedules_and_measured_shape() {
         let md = fig2_markdown(
             &ModelCfg::llemma7b(),
             &ParallelCfg::new(4, 2, 2),
@@ -143,7 +161,22 @@ mod tests {
         );
         assert!(md.contains("Stage1"));
         assert!(md.contains("Stage4"));
-        assert!(md.matches("```").count() >= 4);
+        // three canonical schedule renders + one measured-shape render
+        assert!(md.matches("```").count() >= 8);
+        assert!(md.contains("`1f1b`"));
+        assert!(md.contains("`gpipe`"));
+        assert!(md.contains("`interleaved:2`"));
+    }
+
+    #[test]
+    fn fig2_measured_shape_follows_cfg_schedule() {
+        use crate::pipeline::ScheduleKind;
+        let md = fig2_markdown(
+            &ModelCfg::llemma7b(),
+            &ParallelCfg::new(4, 2, 2).with_schedule(ScheduleKind::GPipe),
+            &Platform::perlmutter(),
+        );
+        assert!(md.contains("(4-2-2/gpipe)"), "{md}");
     }
 
     #[test]

@@ -18,6 +18,8 @@ pub struct Opt {
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     values: BTreeMap<String, String>,
+    /// Option names the user actually typed (vs defaulted).
+    explicit: Vec<String>,
     flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -106,6 +108,7 @@ impl Spec {
                                 .ok_or_else(|| CliError::MissingValue(name.clone()))?
                         }
                     };
+                    args.explicit.push(name.clone());
                     args.values.insert(name, v);
                 }
             } else {
@@ -128,6 +131,11 @@ impl Args {
 
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+
+    /// Was this option typed by the user (vs filled from its default)?
+    pub fn is_explicit(&self, name: &str) -> bool {
+        self.explicit.iter().any(|f| f == name)
     }
 
     pub fn usize(&self, name: &str) -> Result<usize, CliError> {
@@ -169,6 +177,14 @@ mod tests {
         assert_eq!(a.usize("seed").unwrap(), 42);
         assert_eq!(a.str("model"), "gpt20b");
         assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn explicit_vs_defaulted_options() {
+        let a = spec().parse(&argv(&["--model", "gpt20b", "--seed=7"])).unwrap();
+        assert!(a.is_explicit("model"));
+        assert!(a.is_explicit("seed"));
+        assert!(!a.is_explicit("platform")); // defaulted, not typed
     }
 
     #[test]

@@ -1,10 +1,11 @@
-//! Integration: ops -> simulator -> 1F1B schedule -> trainrun, across all
-//! three models and both platforms (the ground-truth half of the system).
+//! Integration: ops -> simulator -> pipeline schedules -> trainrun,
+//! across all three models and both platforms (the ground-truth half of
+//! the system).
 
 use fgpm::config::{ModelCfg, ParallelCfg, Platform};
 use fgpm::ops::{Dir, OpKind};
-use fgpm::pipeline::eq7_runtime_us;
-use fgpm::trainrun::{run_batch, stability, stage_plans};
+use fgpm::pipeline::{eq7_runtime_us, ScheduleKind};
+use fgpm::trainrun::{run_batch, stability, stage_plans, try_run_batch};
 
 #[test]
 fn all_models_simulate_on_both_platforms() {
@@ -103,6 +104,48 @@ fn llemma_smaller_spread_than_gpt_on_vista() {
         lle.pct_increase,
         gpt.pct_increase
     );
+}
+
+#[test]
+fn all_schedules_simulate_all_paper_models() {
+    // Every (model, schedule) pair runs end-to-end through the simulator;
+    // interleaving strictly beats the flush-style schedules because the
+    // sampled task-time matrices are identical for a fixed seed.
+    let p = Platform::perlmutter();
+    for (m, cfg) in [("gpt20b", "4-4-8"), ("llama13b", "4-8-2"), ("llemma7b", "4-2-2")] {
+        let model = ModelCfg::by_name(m).unwrap();
+        let par = ParallelCfg::parse(cfg).unwrap();
+        let mut totals = Vec::new();
+        for kind in ScheduleKind::all(2) {
+            let tr = run_batch(&model, &par.with_schedule(kind), &p, 13);
+            assert!(tr.total_us > 0.0, "{m}({cfg}) {kind:?}");
+            totals.push(tr.total_us);
+        }
+        let (t_1f1b, t_gpipe, t_ilv) = (totals[0], totals[1], totals[2]);
+        assert!(t_ilv < t_1f1b, "{m}({cfg}): interleaved {t_ilv} vs 1f1b {t_1f1b}");
+        assert!(t_ilv < t_gpipe, "{m}({cfg}): interleaved {t_ilv} vs gpipe {t_gpipe}");
+    }
+}
+
+#[test]
+fn parse_schedule_suffix_drives_simulation() {
+    let p = Platform::perlmutter();
+    let model = ModelCfg::llemma7b();
+    let via_suffix = ParallelCfg::parse("4-2-2/interleaved:2").unwrap();
+    let via_builder = ParallelCfg::new(4, 2, 2)
+        .with_schedule(ScheduleKind::Interleaved1F1B { chunks: 2 });
+    assert_eq!(via_suffix, via_builder);
+    let a = run_batch(&model, &via_suffix, &p, 8).total_us;
+    let b = run_batch(&model, &via_builder, &p, 8).total_us;
+    assert_eq!(a, b);
+}
+
+#[test]
+fn unsupported_schedule_geometry_is_an_error_not_a_panic() {
+    let mut model = ModelCfg::llemma7b();
+    model.iters_per_update = 6; // not a multiple of 4 stages
+    let par = ParallelCfg::parse("4-2-2/interleaved:2").unwrap();
+    assert!(try_run_batch(&model, &par, &Platform::perlmutter(), 2).is_err());
 }
 
 #[test]

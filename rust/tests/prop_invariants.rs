@@ -4,9 +4,19 @@
 use fgpm::config::{ModelCfg, ParallelCfg, Platform};
 use fgpm::net::{allgather_time_us, allreduce_time_us, CommGeom};
 use fgpm::ops::params::padded_vocab;
-use fgpm::pipeline::{encoder_allocation, one_f_one_b, TaskTimes};
+use fgpm::pipeline::{
+    encoder_allocation, execute, one_f_one_b, Interleaved1F1B, ScheduleKind, TaskTimes,
+};
 use fgpm::util::propcheck::check;
 use fgpm::util::rng::Rng;
+
+fn random_times(r: &mut Rng, stages: usize, m: usize) -> TaskTimes {
+    let fwd: Vec<Vec<f64>> =
+        (0..stages).map(|_| (0..m).map(|_| r.uniform(0.1, 10.0)).collect()).collect();
+    let bwd: Vec<Vec<f64>> =
+        (0..stages).map(|_| (0..m).map(|_| r.uniform(0.1, 20.0)).collect()).collect();
+    TaskTimes { fwd, bwd }
+}
 
 #[test]
 fn prop_encoder_allocation_sums_and_balances() {
@@ -47,13 +57,7 @@ fn prop_1f1b_schedule_valid_for_any_times() {
         |r: &mut Rng| {
             let stages = 1 + r.below(6);
             let m = 1 + r.below(12);
-            let fwd: Vec<Vec<f64>> = (0..stages)
-                .map(|_| (0..m).map(|_| r.uniform(0.1, 10.0)).collect())
-                .collect();
-            let bwd: Vec<Vec<f64>> = (0..stages)
-                .map(|_| (0..m).map(|_| r.uniform(0.1, 20.0)).collect())
-                .collect();
-            TaskTimes { fwd, bwd }
+            random_times(r, stages, m)
         },
         |t| {
             let s = one_f_one_b(t);
@@ -75,6 +79,133 @@ fn prop_1f1b_schedule_valid_for_any_times() {
             s.makespan() >= busiest - 1e-9
         },
         |t| (t.stages() * t.micro_batches()) as f64,
+    );
+}
+
+#[test]
+fn prop_closed_forms_match_executor_on_uniform_times() {
+    // On uniform task times every schedule's closed form must equal the
+    // event-accurate executor's makespan exactly: 1F1B/GPipe at
+    // (m + s - 1)(f + b), interleaved at m(f+b) + (s-1)(f+b)/v.
+    check(
+        "closed-form-agreement",
+        150,
+        |r: &mut Rng| {
+            let stages = 1 + r.below(8);
+            let groups = 1 + r.below(6); // m = groups * stages keeps every v legal
+            let v = 1 + r.below(4);
+            (stages, groups * stages, v, r.uniform(0.5, 5.0), r.uniform(0.5, 10.0))
+        },
+        |&(stages, m, v, f, b)| {
+            let t = TaskTimes::uniform(stages, m, f, b);
+            for kind in [
+                ScheduleKind::OneFOneB,
+                ScheduleKind::GPipe,
+                ScheduleKind::Interleaved1F1B { chunks: v },
+            ] {
+                let Ok(sched) = execute(kind.build().as_ref(), &t) else {
+                    return false;
+                };
+                let closed = kind.closed_form_runtime_us(m, stages, f, b, 0.0, 0.0);
+                if (sched.makespan() - closed).abs() > 1e-6 * closed.max(1.0) {
+                    return false;
+                }
+            }
+            true
+        },
+        |&(stages, m, v, _, _)| (stages * m * v) as f64,
+    );
+}
+
+#[test]
+fn prop_interleaved_v1_reduces_to_1f1b() {
+    // v = 1 interleaving is bit-for-bit classic 1F1B on any times.
+    check(
+        "interleaved-v1-is-1f1b",
+        60,
+        |r: &mut Rng| {
+            let stages = 1 + r.below(6);
+            let m = 1 + r.below(12);
+            random_times(r, stages, m)
+        },
+        |t| {
+            let a = one_f_one_b(t);
+            let Ok(b) = execute(&Interleaved1F1B::new(1), t) else {
+                return false;
+            };
+            a.chunks == b.chunks
+                && a.fwd_start == b.fwd_start
+                && a.fwd_end == b.fwd_end
+                && a.bwd_start == b.bwd_start
+                && a.bwd_end == b.bwd_end
+        },
+        |t| (t.stages() * t.micro_batches()) as f64,
+    );
+}
+
+#[test]
+fn prop_all_schedules_respect_virtual_stage_deps() {
+    // For every schedule and random times: forward of virtual stage k
+    // starts after forward k-1, backward after backward k+1 (or after
+    // its own forward at the deepest virtual stage), and the makespan
+    // covers the busiest stage.
+    check(
+        "schedule-deps",
+        60,
+        |r: &mut Rng| {
+            let stages = 1 + r.below(5);
+            let groups = 1 + r.below(3);
+            let v = 1 + r.below(3);
+            let m = groups * stages;
+            (v, random_times(r, stages, m))
+        },
+        |&(v, ref t)| {
+            let stages = t.stages();
+            let m = t.micro_batches();
+            for kind in [
+                ScheduleKind::OneFOneB,
+                ScheduleKind::GPipe,
+                ScheduleKind::Interleaved1F1B { chunks: v },
+            ] {
+                let Ok(s) = execute(kind.build().as_ref(), t) else {
+                    return false;
+                };
+                let chunks = s.chunks;
+                let v_stages = chunks * stages;
+                for st in 0..stages {
+                    for c in 0..chunks {
+                        for i in 0..m {
+                            let vidx = c * stages + st;
+                            let ti = c * m + i;
+                            if vidx > 0 {
+                                let (ps, pc) = ((vidx - 1) % stages, (vidx - 1) / stages);
+                                if s.fwd_start[st][ti] < s.fwd_end[ps][pc * m + i] - 1e-9 {
+                                    return false;
+                                }
+                            }
+                            if vidx == v_stages - 1 {
+                                if s.bwd_start[st][ti] < s.fwd_end[st][ti] - 1e-9 {
+                                    return false;
+                                }
+                            } else {
+                                let (ns, nc) = ((vidx + 1) % stages, (vidx + 1) / stages);
+                                if s.bwd_start[st][ti] < s.bwd_end[ns][nc * m + i] - 1e-9 {
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                }
+                let busiest: f64 = (0..stages)
+                    .map(|st| t.fwd[st].iter().sum::<f64>() + t.bwd[st].iter().sum::<f64>())
+                    .fold(0.0, f64::max);
+                if s.makespan() < busiest - 1e-9 {
+                    return false;
+                }
+            }
+            true
+        },
+        |&(v, ref t)| (v * t.stages() * t.micro_batches()) as f64,
     );
 }
 
