@@ -1,15 +1,20 @@
 //! Compare pipeline schedules: bubble-fraction crossover vs micro-batch
-//! count, and a simulated training batch under each discipline.
+//! count, the comm-aware executor's P2P exposure, and a simulated
+//! training batch under each discipline.
 //!
 //!     cargo run --release --example schedule_compare
 //!
 //! 1F1B and GPipe share the classic bubble (S-1)(f+b); interleaved-1F1B
-//! with v virtual chunks shrinks it to (S-1)(f+b)/v, so its advantage is
-//! largest at small micro-batch counts and fades as m grows — the
-//! crossover this table makes visible.
+//! with v virtual chunks shrinks it to (S-1)(f+b)/v but pays v× the
+//! boundary crossings (full-size activations per chunk hop); ZB-H1
+//! splits the backward into input-grad B and weight-grad W tasks and
+//! fills the cool-down with W, shrinking the bubble to (S-1)·max(f, b/2)
+//! at 1F1B's activation footprint. The same comparison is available from
+//! the CLI as `fgpm schedules` (with `--schedule zb-h1` /
+//! `--p2p-overlap <frac>` accepted wherever a schedule is).
 
 use fgpm::config::{ModelCfg, ParallelCfg, Platform};
-use fgpm::pipeline::{execute, ScheduleKind, TaskTimes};
+use fgpm::pipeline::{execute, exposed_comm_us, ScheduleKind, TaskTimes};
 use fgpm::trainrun::run_batch;
 
 fn main() {
@@ -20,9 +25,10 @@ fn main() {
         ScheduleKind::GPipe,
         ScheduleKind::Interleaved1F1B { chunks: 2 },
         ScheduleKind::Interleaved1F1B { chunks: 4 },
+        ScheduleKind::ZbH1,
     ];
 
-    println!("[1/2] worst-stage bubble fraction, S={stages} uniform f={f} b={b}:");
+    println!("[1/3] worst-stage bubble fraction, S={stages} uniform f={f} b={b}:");
     print!("{:>6}", "m");
     for k in kinds {
         print!("{:>16}", k.label());
@@ -35,7 +41,7 @@ fn main() {
             let sched = execute(kind.build().as_ref(), &times)
                 .expect("m is a multiple of S for every row");
             let bubble = (0..stages)
-                .map(|s| sched.bubble_fraction(&times, s))
+                .map(|s| sched.bubble_fraction(s))
                 .fold(0.0, f64::max);
             print!("{:>15.1}%", bubble * 100.0);
         }
@@ -43,7 +49,21 @@ fn main() {
     }
 
     println!();
-    println!("[2/2] simulated GPT-20B(4-4-8) batch on Perlmutter per schedule:");
+    println!(
+        "[2/3] exposed P2P per batch (makespan minus zero-send counterfactual),\n\
+         S={stages} m=16, per-crossing cost 0.2 (10% of f+b), overlap 0 vs 0.8:"
+    );
+    for kind in kinds {
+        let times = TaskTimes::uniform_comm(stages, 16, f, b, 0.2);
+        let blocked = exposed_comm_us(kind.build().as_ref(), &times).unwrap();
+        let overlapped =
+            exposed_comm_us(kind.build().as_ref(), &times.clone().with_overlap(0.8)).unwrap();
+        println!("  {:<16} exposed {blocked:>6.2}  -> {overlapped:>6.2} with overlap", kind.label());
+    }
+    println!("  (interleaving crosses v× the boundaries, so its exposure grows with v)");
+
+    println!();
+    println!("[3/3] simulated GPT-20B(4-4-8) batch on Perlmutter per schedule:");
     let model = ModelCfg::gpt20b();
     let par = ParallelCfg::parse("4-4-8").unwrap();
     let platform = Platform::perlmutter();
@@ -51,9 +71,15 @@ fn main() {
         ScheduleKind::OneFOneB,
         ScheduleKind::GPipe,
         ScheduleKind::Interleaved1F1B { chunks: 2 },
+        ScheduleKind::ZbH1,
     ] {
         let tr = run_batch(&model, &par.with_schedule(kind), &platform, 42);
-        println!("  {:<16} {:>8.2} s", kind.label(), tr.total_us / 1e6);
+        println!(
+            "  {:<16} {:>8.2} s   (P2P exposed {:>6.3} s)",
+            kind.label(),
+            tr.total_us / 1e6,
+            tr.p2p_exposed_us / 1e6
+        );
     }
     println!("\n(same sampled op latencies per seed; only the discipline differs)");
 }

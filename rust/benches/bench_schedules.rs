@@ -1,10 +1,12 @@
 //! Scheduler hot path: the old fixed-point polling loop (kept here as the
 //! baseline) vs the generic event-queue executor, across (S, m) grids,
-//! plus the executor running GPipe and interleaved-1F1B.
+//! plus the executor running GPipe, interleaved-1F1B, ZB-H1, and the
+//! comm-aware path (first-class P2P edges with partial overlap) so the
+//! event-queue perf trajectory stays tracked as the task model grows.
 //!
 //!     cargo bench --bench bench_schedules
 
-use fgpm::pipeline::{execute, GPipe, Interleaved1F1B, OneFOneB, TaskTimes};
+use fgpm::pipeline::{execute, GPipe, Interleaved1F1B, OneFOneB, TaskTimes, ZbH1};
 use fgpm::util::benchkit::{black_box, Bench};
 use fgpm::util::rng::Rng;
 
@@ -87,10 +89,10 @@ fn legacy_one_f_one_b(times: &TaskTimes) -> f64 {
 
 fn jittered_times(stages: usize, m: usize, seed: u64) -> TaskTimes {
     let mut rng = Rng::new(seed);
-    TaskTimes {
-        fwd: (0..stages).map(|_| (0..m).map(|_| rng.uniform(1.0, 3.0)).collect()).collect(),
-        bwd: (0..stages).map(|_| (0..m).map(|_| rng.uniform(2.0, 6.0)).collect()).collect(),
-    }
+    TaskTimes::compute(
+        (0..stages).map(|_| (0..m).map(|_| rng.uniform(1.0, 3.0)).collect()).collect(),
+        (0..stages).map(|_| (0..m).map(|_| rng.uniform(2.0, 6.0)).collect()).collect(),
+    )
 }
 
 fn main() {
@@ -114,9 +116,22 @@ fn main() {
         b.case(&format!("event-queue GPipe S={stages} m={m}"), || {
             black_box(execute(&GPipe, &times).unwrap().makespan());
         });
+        b.case(&format!("event-queue ZB-H1 S={stages} m={m}"), || {
+            black_box(execute(&ZbH1, &times).unwrap().makespan());
+        });
         if m % stages == 0 {
             b.case(&format!("event-queue interleaved:2 S={stages} m={m}"), || {
                 black_box(execute(&Interleaved1F1B::new(2), &times).unwrap().makespan());
+            });
+        }
+        // comm-aware path: first-class P2P edges with partial overlap
+        let comm = jittered_times(stages, m, 11).with_uniform_sends(0.4).with_overlap(0.5);
+        b.case(&format!("event-queue 1F1B+P2P S={stages} m={m}"), || {
+            black_box(execute(&OneFOneB, &comm).unwrap().makespan());
+        });
+        if m % stages == 0 {
+            b.case(&format!("event-queue interleaved:2+P2P S={stages} m={m}"), || {
+                black_box(execute(&Interleaved1F1B::new(2), &comm).unwrap().makespan());
             });
         }
     }

@@ -35,7 +35,7 @@ commands:
   train        fit + select per-operator regressors (80/20 validation)
   predict      predict one (model, parallel, platform) configuration
   sweep        rank all parallelism strategies for a model at a GPU count
-  schedules    compare pipeline schedules (1F1B / GPipe / interleaved) for one config
+  schedules    compare pipeline schedules (1F1B / GPipe / interleaved / ZB-H1) for one config
   table8       reproduce Table VIII (performance stability)
   table9       reproduce Table IX  (component-level prediction errors)
   fig2         reproduce Figure 2  (pipeline timelines, ASCII)
@@ -99,8 +99,9 @@ fn model_arg(args: &crate::util::cli::Args) -> Result<ModelCfg> {
 /// silently resolved.
 fn apply_schedule_arg(args: &crate::util::cli::Args, par: ParallelCfg) -> Result<ParallelCfg> {
     let s = args.str("schedule");
-    let kind = ScheduleKind::parse(&s)
-        .with_context(|| format!("unknown schedule '{s}' (expected 1f1b|gpipe|interleaved[:v])"))?;
+    let kind = ScheduleKind::parse(&s).with_context(|| {
+        format!("unknown schedule '{s}' (expected 1f1b|gpipe|interleaved[:v]|zb-h1)")
+    })?;
     if !args.is_explicit("schedule") {
         return Ok(par); // keep whatever --parallel carried (default: 1f1b)
     }
@@ -111,6 +112,17 @@ fn apply_schedule_arg(args: &crate::util::cli::Args, par: ParallelCfg) -> Result
         par.schedule.label()
     );
     Ok(par.with_schedule(kind))
+}
+
+/// Apply `--p2p-overlap` (fraction of each PP transfer overlapped with
+/// the sender's compute) to a parsed `ParallelCfg`.
+fn apply_overlap_arg(args: &crate::util::cli::Args, par: ParallelCfg) -> Result<ParallelCfg> {
+    let alpha = args.f64("p2p-overlap")?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&alpha),
+        "--p2p-overlap must be in [0, 1], got {alpha}"
+    );
+    Ok(par.with_p2p_overlap(alpha))
 }
 
 /// Reject (model, parallel) combinations the schedule cannot run.
@@ -239,7 +251,8 @@ fn cmd_predict(argv: &[String]) -> Result<i32> {
         .opt("model", "gpt20b", "model preset")
         .opt("parallel", "4-4-8", "pp-mp-dp[/schedule]")
         .opt("platform", "perlmutter", "target platform")
-        .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v])")
+        .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v]|zb-h1)")
+        .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
         .opt("forests", "forests", "trained registry directory")
         .opt("seed", "7", "rng seed")
         .flag("xla", "serve inference from the AOT Pallas executable (PJRT)");
@@ -248,7 +261,7 @@ fn cmd_predict(argv: &[String]) -> Result<i32> {
     let model = model_arg(&args)?;
     let par = ParallelCfg::parse(&args.str("parallel"))
         .context("bad --parallel (expected pp-mp-dp[/schedule])")?;
-    let par = apply_schedule_arg(&args, par)?;
+    let par = apply_overlap_arg(&args, apply_schedule_arg(&args, par)?)?;
     validate_schedule(&model, &par)?;
     anyhow::ensure!(par.fits(&platform), "{} needs {} GPUs", par.label(), par.gpus());
     let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
@@ -264,7 +277,8 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         .opt("model", "gpt20b", "model preset")
         .opt("platform", "perlmutter", "target platform")
         .opt("gpus", "128", "total GPUs")
-        .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v]|all)")
+        .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v]|zb-h1|all)")
+        .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
         .opt("forests", "forests", "trained registry directory")
         .opt("seed", "7", "rng seed")
         .flag("xla", "use the AOT Pallas executable");
@@ -279,12 +293,15 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         vec![ScheduleKind::parse(&sched_str)
             .with_context(|| format!("unknown schedule '{sched_str}'"))?]
     };
+    // parse + range-check the constant overlap once, before enumerating
+    let overlap = apply_overlap_arg(&args, ParallelCfg::new(1, 1, 1))?.p2p_overlap();
     let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
     let mut backend = backend_for(reg, args.has_flag("xla"))?;
     let mut rows: Vec<(String, f64, f64)> = Vec::new();
     let mut skipped_oom = 0;
     let mut skipped_sched = 0;
     for par in ParallelCfg::enumerate_schedules(gpus, 16, 16, &kinds) {
+        let par = par.with_p2p_overlap(overlap);
         if !par.fits(&platform) || model.h % par.mp != 0 {
             continue;
         }
@@ -324,13 +341,14 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
 fn cmd_schedules(argv: &[String]) -> Result<i32> {
     let spec = Spec::new(
         "schedules",
-        "compare 1F1B / GPipe / interleaved-1F1B for one configuration (event-accurate sim \
-         vs per-schedule closed form)",
+        "compare 1F1B / GPipe / interleaved-1F1B / ZB-H1 for one configuration \
+         (event-accurate sim vs per-schedule closed form, with a comm-exposure column)",
     )
     .opt("model", "gpt20b", "model preset")
     .opt("parallel", "4-4-8", "pp-mp-dp")
     .opt("platform", "perlmutter", "target platform")
     .opt("chunks", "2", "virtual chunks per stage for interleaved-1F1B")
+    .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
     .opt("batches", "4", "measured batches per schedule (fastest wins)")
     .opt("seed", "42", "rng seed");
     let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
@@ -343,6 +361,7 @@ fn cmd_schedules(argv: &[String]) -> Result<i32> {
         "this command compares ALL schedules; drop the /{} suffix from --parallel",
         par.schedule.label()
     );
+    let par = apply_overlap_arg(&args, par)?;
     let chunks = args.usize("chunks")?;
     anyhow::ensure!(chunks >= 2, "--chunks must be >= 2 (interleaving needs multiple virtual chunks)");
     let md = crate::report::tables::schedule_compare_markdown(
@@ -395,10 +414,11 @@ fn cmd_fig2(argv: &[String]) -> Result<i32> {
         .opt("model", "gpt20b", "model preset")
         .opt("parallel", "4-4-8", "pp-mp-dp[/schedule]")
         .opt("platform", "perlmutter", "target platform")
-        .opt("schedule", "1f1b", "schedule for the measured-shape timeline");
+        .opt("schedule", "1f1b", "schedule for the measured-shape timeline (incl. zb-h1)")
+        .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]");
     let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
     let par = ParallelCfg::parse(&args.str("parallel")).context("bad --parallel")?;
-    let par = apply_schedule_arg(&args, par)?;
+    let par = apply_overlap_arg(&args, apply_schedule_arg(&args, par)?)?;
     let md = fig2_markdown(&model_arg(&args)?, &par, &platform_arg(&args)?);
     println!("{}", report::emit("fig2.md", &md));
     Ok(0)

@@ -16,18 +16,35 @@ pub struct ParallelCfg {
     pub dp: usize,
     /// Pipeline schedule discipline (1F1B unless stated otherwise).
     pub schedule: ScheduleKind,
+    /// Fraction of each PP P2P transfer overlapped with the sender's
+    /// compute, in integer percent (0 = sender fully blocked, the
+    /// historical folded model; 100 = transfers fully offloaded to the
+    /// copy engine). Stored as percent so the config stays `Eq + Hash`.
+    pub p2p_overlap_pct: u8,
 }
 
 impl ParallelCfg {
     pub fn new(pp: usize, mp: usize, dp: usize) -> ParallelCfg {
         assert!(pp >= 1 && mp >= 1 && dp >= 1);
-        ParallelCfg { pp, mp, dp, schedule: ScheduleKind::OneFOneB }
+        ParallelCfg { pp, mp, dp, schedule: ScheduleKind::OneFOneB, p2p_overlap_pct: 0 }
     }
 
     /// Same degrees, different pipeline schedule.
     pub fn with_schedule(mut self, schedule: ScheduleKind) -> ParallelCfg {
         self.schedule = schedule;
         self
+    }
+
+    /// Same degrees, different P2P/compute overlap fraction (clamped to
+    /// [0, 1] and rounded to whole percent).
+    pub fn with_p2p_overlap(mut self, frac: f64) -> ParallelCfg {
+        self.p2p_overlap_pct = (frac.clamp(0.0, 1.0) * 100.0).round() as u8;
+        self
+    }
+
+    /// The P2P/compute overlap fraction α ∈ [0, 1].
+    pub fn p2p_overlap(&self) -> f64 {
+        self.p2p_overlap_pct.min(100) as f64 / 100.0
     }
 
     /// Can the configured schedule run this geometry with `micro_batches`
@@ -50,7 +67,7 @@ impl ParallelCfg {
             .collect::<Option<Vec<_>>>()?;
         match parts[..] {
             [pp, mp, dp] if pp > 0 && mp > 0 && dp > 0 => {
-                Some(ParallelCfg { pp, mp, dp, schedule })
+                Some(ParallelCfg { pp, mp, dp, schedule, p2p_overlap_pct: 0 })
             }
             _ => None,
         }
@@ -175,7 +192,7 @@ mod tests {
 
     #[test]
     fn parse_schedule_suffix_roundtrip() {
-        for s in ["4-4-8/gpipe", "4-4-8/interleaved:2", "8-4-4/interleaved:4"] {
+        for s in ["4-4-8/gpipe", "4-4-8/interleaved:2", "8-4-4/interleaved:4", "4-4-8/zb-h1"] {
             let c = ParallelCfg::parse(s).unwrap();
             assert_eq!(c.label(), s);
         }
@@ -186,6 +203,18 @@ mod tests {
         assert_eq!(ParallelCfg::parse("4-4-8/1f1b").unwrap().label(), "4-4-8");
         assert!(ParallelCfg::parse("4-4-8/warp").is_none());
         assert!(ParallelCfg::parse("4-4-8/").is_none());
+    }
+
+    #[test]
+    fn p2p_overlap_knob_roundtrips_and_clamps() {
+        let base = ParallelCfg::new(4, 4, 8);
+        assert_eq!(base.p2p_overlap(), 0.0);
+        assert_eq!(base.with_p2p_overlap(0.5).p2p_overlap(), 0.5);
+        assert_eq!(base.with_p2p_overlap(1.7).p2p_overlap(), 1.0);
+        assert_eq!(base.with_p2p_overlap(-0.3).p2p_overlap(), 0.0);
+        // overlap participates in identity (it changes the modeled time)
+        assert_ne!(base.with_p2p_overlap(0.5), base);
+        assert_eq!(base.with_p2p_overlap(0.0), base);
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub fn prediction_to_json(cp: &ComponentPrediction) -> Json {
         ("stage_bwd_us", Json::arr_f64(&cp.stage_bwd_us)),
         ("mp_allreduce_us", Json::Num(cp.mp_allreduce_us)),
         ("pp_p2p_us", Json::Num(cp.pp_p2p_us)),
+        ("pp_p2p_exposed_us", Json::Num(cp.pp_p2p_exposed_us)),
         ("dp_allreduce_first_us", Json::Num(cp.dp_allreduce_first_us)),
         ("dp_allgather_max_us", Json::Num(cp.dp_allgather_max_us)),
         ("max_update_us", Json::Num(cp.max_update_us)),

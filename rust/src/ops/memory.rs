@@ -78,7 +78,11 @@ fn in_flight_equivalents(par: &ParallelCfg, s: usize, m: usize) -> f64 {
             let warmup = Interleaved1F1B::warmup_depth(s, par.pp, m, chunks);
             (warmup as f64 / chunks as f64).max(1.0)
         }
-        _ => (par.pp - s).min(m).max(1) as f64,
+        // ZB-H1 keeps 1F1B's warm-up window (its defining memory
+        // property: deferring W costs no extra activation residency).
+        ScheduleKind::ZbH1 | ScheduleKind::OneFOneB | ScheduleKind::Interleaved1F1B { .. } => {
+            (par.pp - s).min(m).max(1) as f64
+        }
     }
 }
 
@@ -212,6 +216,18 @@ mod tests {
         assert!(ilva > f1a, "interleaved {ilva} vs 1f1b {f1a}");
         // and the OOM filter sees the difference too
         assert!(gp.total_bytes() > f1.total_bytes());
+    }
+
+    #[test]
+    fn zb_h1_matches_1f1b_activation_residency() {
+        // Deferring weight grads must not change the activation window.
+        let model = ModelCfg::gpt20b();
+        let p = Platform::perlmutter();
+        let base = ParallelCfg::new(4, 4, 8);
+        let f1 = estimate(&model, &base, &p);
+        let zb = estimate(&model, &base.with_schedule(ScheduleKind::ZbH1), &p);
+        assert_eq!(f1.activation_bytes, zb.activation_bytes);
+        assert_eq!(f1.total_bytes(), zb.total_bytes());
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Generic event-queue executor for pipeline-schedule dependency DAGs.
+//! Generic event-queue executor for pipeline-schedule dependency DAGs,
+//! with first-class P2P edges.
 //!
 //! Replaces the old per-schedule fixed-point polling loop: stages sit in
 //! a ready queue, each pop advances a stage through its serial task order
@@ -9,11 +10,17 @@
 //! grids (see `benches/bench_schedules.rs`).
 //!
 //! Dependency structure (schedule-independent): chunk `c` of physical
-//! stage `s` is *virtual* stage `c·S + s`. Forward of virtual stage `k`
-//! needs forward `k-1` of the same micro-batch; backward of `k` needs
-//! backward `k+1`, except the deepest virtual stage whose backward needs
-//! its own forward. Transfer time is billed to the sender's task, as the
-//! paper assigns it.
+//! stage `s` is *virtual* stage `k = c·S + s`. Forward of virtual stage
+//! `k` needs the forward payload of `k-1` to ARRIVE (producer compute end
+//! + P2P transfer); backward (input-grad) of `k` needs the gradient
+//! arrival from `k+1`, except the deepest virtual stage whose backward
+//! needs its own forward; weight-grad tasks (split schedules only) need
+//! their own stage's input-grad task. Every crossing between distinct
+//! physical stages is a real transfer billed as sender-side occupancy
+//! `(1-α)·send` — the configurable compute/communication overlap — while
+//! the receiver always waits the full `send` wall-clock. Chunk transfers
+//! carry full-size boundary activations, so interleaved-1F1B pays the
+//! true `v`× crossings the folded model used to undercount.
 
 use std::collections::VecDeque;
 
@@ -25,7 +32,7 @@ use crate::pipeline::schedule::{PipelineSchedule, Schedule, TaskKind, TaskTimes}
 pub enum ScheduleError {
     /// Zero stages or zero micro-batches.
     Empty,
-    /// `TaskTimes` rows are ragged or fwd/bwd disagree on geometry.
+    /// `TaskTimes` rows are ragged or fwd/bwd/send matrices disagree.
     BadTimes(String),
     /// The schedule's geometry constraints reject this (stages, m) pair.
     Unsupported { schedule: &'static str, reason: String },
@@ -58,8 +65,10 @@ impl std::fmt::Display for ScheduleError {
 impl std::error::Error for ScheduleError {}
 
 /// Execute `schedule` over `times`, producing exact start/end instants
-/// per (stage, chunk, micro-batch) task. Chunk tasks cost `1/v` of the
-/// stage's per-micro-batch time.
+/// per (stage, chunk, micro-batch) task plus the P2P arrival instants and
+/// sender-side link occupancy. Chunk tasks cost `1/v` of the stage's
+/// per-micro-batch COMPUTE time; chunk-boundary transfers cost the full
+/// per-crossing send time (boundary activations do not shrink with `v`).
 pub fn execute(
     schedule: &dyn PipelineSchedule,
     times: &TaskTimes,
@@ -69,38 +78,55 @@ pub fn execute(
     if s_count == 0 || m == 0 {
         return Err(ScheduleError::Empty);
     }
-    if times.bwd.len() != s_count {
-        return Err(ScheduleError::BadTimes(format!(
-            "{} fwd stages but {} bwd stages",
-            s_count,
-            times.bwd.len()
-        )));
+    for (name, mat) in [
+        ("bwd", &times.bwd),
+        ("fwd_send", &times.fwd_send),
+        ("bwd_send", &times.bwd_send),
+    ] {
+        if mat.len() != s_count {
+            return Err(ScheduleError::BadTimes(format!(
+                "{} fwd stages but {} {name} stages",
+                s_count,
+                mat.len()
+            )));
+        }
     }
     for s in 0..s_count {
-        if times.fwd[s].len() != m || times.bwd[s].len() != m {
-            return Err(ScheduleError::BadTimes(format!(
-                "stage {s} has {} fwd / {} bwd micro-batches, expected {m}",
-                times.fwd[s].len(),
-                times.bwd[s].len()
-            )));
+        for (name, mat) in [
+            ("fwd", &times.fwd),
+            ("bwd", &times.bwd),
+            ("fwd_send", &times.fwd_send),
+            ("bwd_send", &times.bwd_send),
+        ] {
+            if mat[s].len() != m {
+                return Err(ScheduleError::BadTimes(format!(
+                    "stage {s} has {} {name} micro-batches, expected {m}",
+                    mat[s].len()
+                )));
+            }
         }
     }
     schedule.validate(s_count, m)?;
     let v = schedule.chunks().max(1);
-    let vm = v * m; // tasks per direction per stage
+    let wgt_frac = schedule.wgt_frac().clamp(0.0, 1.0);
+    let has_wgt = wgt_frac > 0.0;
+    let kinds = if has_wgt { 3 } else { 2 };
+    let overlap = times.p2p_overlap.clamp(0.0, 1.0);
+    let occupancy = 1.0 - overlap;
+    let vm = v * m; // tasks per kind per stage
     let v_stages = v * s_count; // virtual pipeline depth
-    let total = 2 * vm * s_count;
+    let total = kinds * vm * s_count;
 
     let mut orders = Vec::with_capacity(s_count);
     for s in 0..s_count {
         let order = schedule.stage_order(s, s_count, m);
-        if order.len() != 2 * vm {
+        if order.len() != kinds * vm {
             return Err(ScheduleError::MalformedOrder {
                 stage: s,
-                reason: format!("{} tasks, expected {}", order.len(), 2 * vm),
+                reason: format!("{} tasks, expected {}", order.len(), kinds * vm),
             });
         }
-        let mut seen = vec![false; 2 * vm];
+        let mut seen = vec![false; kinds * vm];
         for t in &order {
             if t.chunk >= v || t.mb >= m {
                 return Err(ScheduleError::MalformedOrder {
@@ -108,8 +134,20 @@ pub fn execute(
                     reason: format!("task {t:?} outside chunk<{v} mb<{m}"),
                 });
             }
-            let slot =
-                (t.kind == TaskKind::Bwd) as usize * vm + t.chunk * m + t.mb;
+            let kind_idx = match t.kind {
+                TaskKind::Fwd => 0,
+                TaskKind::Bwd => 1,
+                TaskKind::Wgt if has_wgt => 2,
+                TaskKind::Wgt => {
+                    return Err(ScheduleError::MalformedOrder {
+                        stage: s,
+                        reason: format!(
+                            "weight-grad task {t:?} in a schedule with no backward split"
+                        ),
+                    });
+                }
+            };
+            let slot = kind_idx * vm + t.chunk * m + t.mb;
             if seen[slot] {
                 return Err(ScheduleError::MalformedOrder {
                     stage: s,
@@ -125,6 +163,12 @@ pub fn execute(
     let mut fe = vec![vec![f64::NAN; vm]; s_count];
     let mut bs = vec![vec![f64::NAN; vm]; s_count];
     let mut be = vec![vec![f64::NAN; vm]; s_count];
+    let wgt_len = if has_wgt { vm } else { 0 };
+    let mut ws = vec![vec![f64::NAN; wgt_len]; s_count];
+    let mut we = vec![vec![f64::NAN; wgt_len]; s_count];
+    let mut fa = vec![vec![f64::NAN; vm]; s_count]; // fwd payload arrival
+    let mut ba = vec![vec![f64::NAN; vm]; s_count]; // bwd payload arrival
+    let mut send_busy = vec![0.0f64; s_count];
     let mut cursor = vec![0usize; s_count]; // next task index per stage
     let mut avail = vec![0.0f64; s_count]; // stage-free instant
     let mut queued = vec![true; s_count];
@@ -137,14 +181,14 @@ pub fn execute(
             let t = orders[s][cursor[s]];
             let ti = t.chunk * m + t.mb;
             let vidx = t.chunk * s_count + s;
-            // resolve the dependency's end instant, or stall this stage
+            // resolve the dependency's ready instant, or stall this stage
             let dep = match t.kind {
                 TaskKind::Fwd => {
                     if vidx == 0 {
                         Some(0.0)
                     } else {
                         let (ps, pc) = ((vidx - 1) % s_count, (vidx - 1) / s_count);
-                        let e = fe[ps][pc * m + t.mb];
+                        let e = fa[ps][pc * m + t.mb];
                         if e.is_nan() {
                             None
                         } else {
@@ -154,6 +198,8 @@ pub fn execute(
                 }
                 TaskKind::Bwd => {
                     if vidx == v_stages - 1 {
+                        // deepest virtual stage: backward needs its OWN
+                        // forward, no transfer in between
                         let e = fe[s][ti];
                         if e.is_nan() {
                             None
@@ -162,7 +208,7 @@ pub fn execute(
                         }
                     } else {
                         let (ns, nc) = ((vidx + 1) % s_count, (vidx + 1) / s_count);
-                        let e = be[ns][nc * m + t.mb];
+                        let e = ba[ns][nc * m + t.mb];
                         if e.is_nan() {
                             None
                         } else {
@@ -170,25 +216,61 @@ pub fn execute(
                         }
                     }
                 }
+                TaskKind::Wgt => {
+                    // weight grad needs this stage's own input-grad task
+                    let e = be[s][ti];
+                    if e.is_nan() {
+                        None
+                    } else {
+                        Some(e)
+                    }
+                }
             };
             let Some(ready) = dep else { break };
             let start = ready.max(avail[s]);
             let dur = match t.kind {
-                TaskKind::Fwd => times.fwd[s][t.mb],
-                TaskKind::Bwd => times.bwd[s][t.mb],
-            } / v as f64;
+                TaskKind::Fwd => times.fwd[s][t.mb] / v as f64,
+                TaskKind::Bwd => times.bwd[s][t.mb] / v as f64 * (1.0 - wgt_frac),
+                TaskKind::Wgt => times.bwd[s][t.mb] / v as f64 * wgt_frac,
+            };
             let end = start + dur;
+            // P2P edge: a real transfer exists when the consuming virtual
+            // stage lives on a DIFFERENT physical stage (always, except
+            // single-stage pipelines where chunk handoff is on-device).
+            let mut free_at = end;
             match t.kind {
                 TaskKind::Fwd => {
                     fs[s][ti] = start;
                     fe[s][ti] = end;
+                    let crosses = vidx + 1 < v_stages && s_count > 1;
+                    if crosses {
+                        let send = times.fwd_send[s][t.mb];
+                        fa[s][ti] = end + send;
+                        free_at = end + occupancy * send;
+                        send_busy[s] += occupancy * send;
+                    } else {
+                        fa[s][ti] = end;
+                    }
                 }
                 TaskKind::Bwd => {
                     bs[s][ti] = start;
                     be[s][ti] = end;
+                    let crosses = vidx > 0 && s_count > 1;
+                    if crosses {
+                        let send = times.bwd_send[s][t.mb];
+                        ba[s][ti] = end + send;
+                        free_at = end + occupancy * send;
+                        send_busy[s] += occupancy * send;
+                    } else {
+                        ba[s][ti] = end;
+                    }
+                }
+                TaskKind::Wgt => {
+                    ws[s][ti] = start;
+                    we[s][ti] = end;
                 }
             }
-            avail[s] = end;
+            avail[s] = free_at;
             cursor[s] += 1;
             done += 1;
             // wake the stage whose head this completion may unblock
@@ -197,6 +279,7 @@ pub fn execute(
                 TaskKind::Fwd => None, // deepest fwd unblocks our own bwd
                 TaskKind::Bwd if vidx > 0 => Some((vidx - 1) % s_count),
                 TaskKind::Bwd => None,
+                TaskKind::Wgt => None, // terminal: only the optimizer waits
             };
             if let Some(ds) = dependent {
                 if ds != s && !queued[ds] {
@@ -212,7 +295,45 @@ pub fn execute(
             diagnosis: diagnose(&orders, &cursor, s_count, v_stages),
         });
     }
-    Ok(Schedule { chunks: v, fwd_start: fs, fwd_end: fe, bwd_start: bs, bwd_end: be })
+    Ok(Schedule {
+        chunks: v,
+        fwd_start: fs,
+        fwd_end: fe,
+        bwd_start: bs,
+        bwd_end: be,
+        wgt_start: ws,
+        wgt_end: we,
+        fwd_arrive: fa,
+        bwd_arrive: ba,
+        send_busy,
+    })
+}
+
+/// Makespan increase attributable to P2P: the schedule executed with the
+/// real transfer times minus the same schedule with every send zeroed —
+/// the comm-exposure metric the reports surface per schedule.
+pub fn exposed_comm_us(
+    schedule: &dyn PipelineSchedule,
+    times: &TaskTimes,
+) -> Result<f64, ScheduleError> {
+    let with_comm = execute(schedule, times)?.makespan();
+    exposed_comm_us_given(schedule, times, with_comm)
+}
+
+/// [`exposed_comm_us`] for callers that already executed the schedule —
+/// takes the comm-inclusive makespan instead of recomputing it, and
+/// skips the zero-send counterfactual entirely when no crossing costs
+/// anything (e.g. pp = 1).
+pub fn exposed_comm_us_given(
+    schedule: &dyn PipelineSchedule,
+    times: &TaskTimes,
+    with_comm_makespan: f64,
+) -> Result<f64, ScheduleError> {
+    if !times.has_sends() {
+        return Ok(0.0);
+    }
+    let without = execute(schedule, &times.zero_sends())?.makespan();
+    Ok((with_comm_makespan - without).max(0.0))
 }
 
 /// Describe every blocked stage head and the task it waits on — the
@@ -234,6 +355,7 @@ fn diagnose(
         let what = match t.kind {
             TaskKind::Fwd => format!("F(mb {}, chunk {})", t.mb, t.chunk),
             TaskKind::Bwd => format!("B(mb {}, chunk {})", t.mb, t.chunk),
+            TaskKind::Wgt => format!("W(mb {}, chunk {})", t.mb, t.chunk),
         };
         let waiting_on = match t.kind {
             TaskKind::Fwd => {
@@ -246,6 +368,9 @@ fn diagnose(
             TaskKind::Bwd => {
                 let (ns, nc) = ((vidx + 1) % s_count, (vidx + 1) / s_count);
                 format!("B(mb {}, chunk {nc}) on stage {ns}", t.mb)
+            }
+            TaskKind::Wgt => {
+                format!("its own B(mb {}, chunk {}) later in the order", t.mb, t.chunk)
             }
         };
         parts.push(format!(
@@ -264,17 +389,24 @@ fn diagnose(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pipeline::schedule::{OneFOneB, ScheduleKind, Task};
+    use crate::pipeline::schedule::{OneFOneB, ScheduleKind, Task, ZbH1};
 
     #[test]
     fn empty_inputs_rejected() {
-        let t = TaskTimes { fwd: vec![], bwd: vec![] };
+        let t = TaskTimes::compute(vec![], vec![]);
         assert!(matches!(execute(&OneFOneB, &t), Err(ScheduleError::Empty)));
     }
 
     #[test]
     fn ragged_times_rejected() {
-        let t = TaskTimes { fwd: vec![vec![1.0, 2.0], vec![1.0]], bwd: vec![vec![1.0, 2.0]; 2] };
+        let t = TaskTimes::compute(vec![vec![1.0, 2.0], vec![1.0]], vec![vec![1.0, 2.0]; 2]);
+        assert!(matches!(execute(&OneFOneB, &t), Err(ScheduleError::BadTimes(_))));
+    }
+
+    #[test]
+    fn ragged_sends_rejected() {
+        let mut t = TaskTimes::uniform(2, 2, 1.0, 2.0);
+        t.fwd_send[1] = vec![0.5];
         assert!(matches!(execute(&OneFOneB, &t), Err(ScheduleError::BadTimes(_))));
     }
 
@@ -295,12 +427,7 @@ mod tests {
         }
         fn closed_form_runtime_us(
             &self,
-            _m: usize,
-            _s: usize,
-            _f: f64,
-            _b: f64,
-            _sync: f64,
-            _upd: f64,
+            _inp: &crate::pipeline::schedule::ClosedFormInputs,
         ) -> f64 {
             0.0
         }
@@ -330,12 +457,7 @@ mod tests {
         }
         fn closed_form_runtime_us(
             &self,
-            _m: usize,
-            _s: usize,
-            _f: f64,
-            _b: f64,
-            _sync: f64,
-            _upd: f64,
+            _inp: &crate::pipeline::schedule::ClosedFormInputs,
         ) -> f64 {
             0.0
         }
@@ -346,6 +468,59 @@ mod tests {
         let t = TaskTimes::uniform(2, 3, 1.0, 2.0);
         let err = execute(&HalfOrder, &t).unwrap_err();
         assert!(matches!(err, ScheduleError::MalformedOrder { stage: 0, .. }), "{err}");
+    }
+
+    /// A non-split schedule smuggling in a weight-grad task.
+    struct RogueWgt;
+    impl PipelineSchedule for RogueWgt {
+        fn kind(&self) -> ScheduleKind {
+            ScheduleKind::OneFOneB
+        }
+        fn name(&self) -> &'static str {
+            "rogue-wgt"
+        }
+        fn stage_order(&self, _s: usize, _stages: usize, m: usize) -> Vec<Task> {
+            let mut o: Vec<Task> = (0..m).map(|i| Task::fwd(0, i)).collect();
+            o.extend((0..m).map(|i| Task::wgt(0, i)));
+            o
+        }
+        fn closed_form_runtime_us(
+            &self,
+            _inp: &crate::pipeline::schedule::ClosedFormInputs,
+        ) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn wgt_task_without_split_rejected() {
+        let t = TaskTimes::uniform(1, 2, 1.0, 2.0);
+        let err = execute(&RogueWgt, &t).unwrap_err();
+        assert!(matches!(err, ScheduleError::MalformedOrder { .. }), "{err}");
+        assert!(err.to_string().contains("no backward split"), "{err}");
+    }
+
+    #[test]
+    fn split_backward_partitions_full_backward() {
+        // ZB-H1's B and W tasks must partition the full backward time.
+        let t = TaskTimes::uniform(2, 3, 1.0, 4.0);
+        let s = execute(&ZbH1, &t).unwrap();
+        for st in 0..2 {
+            for i in 0..3 {
+                let b = s.bwd_end[st][i] - s.bwd_start[st][i];
+                let w = s.wgt_end[st][i] - s.wgt_start[st][i];
+                assert!((b + w - 4.0).abs() < 1e-12, "stage {st} mb {i}: {b}+{w}");
+                assert!(s.wgt_start[st][i] >= s.bwd_end[st][i] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_sends_make_exposure_zero() {
+        let t = TaskTimes::uniform(4, 8, 2.0, 4.0);
+        assert_eq!(exposed_comm_us(&OneFOneB, &t).unwrap(), 0.0);
+        let tc = TaskTimes::uniform_comm(4, 8, 2.0, 4.0, 0.5);
+        assert!(exposed_comm_us(&OneFOneB, &tc).unwrap() > 0.0);
     }
 
     #[test]
@@ -360,7 +535,7 @@ mod tests {
                 (0..stages).map(|_| (0..m).map(|_| rng.uniform(0.5, 8.0)).collect()).collect();
             let bwd: Vec<Vec<f64>> =
                 (0..stages).map(|_| (0..m).map(|_| rng.uniform(0.5, 16.0)).collect()).collect();
-            let t = TaskTimes { fwd, bwd };
+            let t = TaskTimes::compute(fwd, bwd);
             let sched = execute(&OneFOneB, &t).unwrap();
             // spot-check the dependency recurrence directly
             for s in 0..stages {

@@ -1,26 +1,30 @@
 //! Pipeline parallelism: stage partitioning (eqs 3-5), the pluggable
-//! schedule subsystem (1F1B / GPipe / interleaved-1F1B over a generic
-//! event-queue executor), and the paper's closed-form batch-runtime
-//! composition (eq 7, generalized per schedule).
+//! schedule subsystem (1F1B / GPipe / interleaved-1F1B / zero-bubble
+//! ZB-H1 over a generic comm-aware event-queue executor), and the
+//! paper's closed-form batch-runtime composition (eq 7, generalized per
+//! schedule and extended with exposed-vs-overlapped P2P terms).
 
 pub mod exec;
 pub mod partition;
 pub mod schedule;
 
-pub use exec::{execute, ScheduleError};
+pub use exec::{execute, exposed_comm_us, exposed_comm_us_given, ScheduleError};
 pub use partition::{encoder_allocation, paper_allocation};
 pub use schedule::{
-    one_f_one_b, render_ascii, render_ascii_for, GPipe, Interleaved1F1B, OneFOneB,
-    PipelineSchedule, Schedule, ScheduleKind, Task, TaskKind, TaskTimes,
+    one_f_one_b, render_ascii, render_ascii_for, ClosedFormInputs, GPipe, Interleaved1F1B,
+    OneFOneB, PipelineSchedule, Schedule, ScheduleKind, Task, TaskKind, TaskTimes, ZbH1,
 };
 
 /// eq (7): the paper's closed-form 1F1B + DP runtime, µs.
 ///
-/// `max_fwd`/`max_bwd` are the slowest stage's per-micro-batch times
-/// (PP_P2P billed to senders), `first_stage_sync` is
-/// DP_AllReduce(first-stage params), `max_update` is the max over stages
-/// of Optimizer + DP_AllGather(stage params / |dp|). Other schedules
-/// generalize this via [`PipelineSchedule::closed_form_runtime_us`].
+/// `max_fwd`/`max_bwd` are the slowest stage's per-micro-batch times in
+/// the paper's FOLDED accounting (PP_P2P billed inside the sender's
+/// compute), `first_stage_sync` is DP_AllReduce(first-stage params),
+/// `max_update` is the max over stages of Optimizer + DP_AllGather(stage
+/// params / |dp|). The schedule subsystem generalizes this via
+/// [`PipelineSchedule::closed_form_runtime_us`], which takes the
+/// compute/communication SPLIT inputs ([`ClosedFormInputs`]) and reduces
+/// to this exact expression at `p2p_overlap = 0` with folded times.
 pub fn eq7_runtime_us(
     micro_batches: usize,
     pipeline_stages: usize,
@@ -54,17 +58,31 @@ mod tests {
     #[test]
     fn schedule_closed_forms_relate_as_expected() {
         // GPipe's closed form equals 1F1B's (identical uniform bubble);
-        // interleaving with v chunks shrinks it.
+        // interleaving with v chunks shrinks it; ZB-H1 shrinks it too by
+        // pulling the weight-grad half of the backward off the bubble.
         let (m, s, f, b, sync, upd) = (16, 4, 3_000.0, 5_000.0, 7_000.0, 2_000.0);
-        let t_1f1b = ScheduleKind::OneFOneB.closed_form_runtime_us(m, s, f, b, sync, upd);
-        let t_gpipe = ScheduleKind::GPipe.closed_form_runtime_us(m, s, f, b, sync, upd);
-        let ilv2 = ScheduleKind::Interleaved1F1B { chunks: 2 };
-        let ilv1 = ScheduleKind::Interleaved1F1B { chunks: 1 };
-        let t_ilv2 = ilv2.closed_form_runtime_us(m, s, f, b, sync, upd);
-        let t_ilv1 = ilv1.closed_form_runtime_us(m, s, f, b, sync, upd);
+        let inp = ClosedFormInputs::compute_only(m, s, f, b, sync, upd);
+        let t_1f1b = ScheduleKind::OneFOneB.closed_form_runtime_us(&inp);
+        let t_gpipe = ScheduleKind::GPipe.closed_form_runtime_us(&inp);
+        let t_ilv2 =
+            ScheduleKind::Interleaved1F1B { chunks: 2 }.closed_form_runtime_us(&inp);
+        let t_ilv1 =
+            ScheduleKind::Interleaved1F1B { chunks: 1 }.closed_form_runtime_us(&inp);
+        let t_zb = ScheduleKind::ZbH1.closed_form_runtime_us(&inp);
         assert_eq!(t_1f1b, eq7_runtime_us(m, s, f, b, sync, upd));
         assert_eq!(t_gpipe, t_1f1b);
         assert!((t_ilv1 - t_1f1b).abs() < 1e-9);
         assert!(t_ilv2 < t_1f1b);
+        assert!(t_zb < t_1f1b, "{t_zb} vs {t_1f1b}");
+    }
+
+    #[test]
+    fn exposed_comm_grows_with_p2p() {
+        let small = TaskTimes::uniform_comm(4, 8, 2.0, 4.0, 0.2);
+        let large = TaskTimes::uniform_comm(4, 8, 2.0, 4.0, 1.0);
+        let e_small = exposed_comm_us(&OneFOneB, &small).unwrap();
+        let e_large = exposed_comm_us(&OneFOneB, &large).unwrap();
+        assert!(e_small > 0.0);
+        assert!(e_large > e_small, "{e_large} vs {e_small}");
     }
 }

@@ -1,15 +1,20 @@
-//! Pluggable pipeline schedules: 1F1B (Figure 2), GPipe, and
-//! interleaved/virtual-stage 1F1B.
+//! Pluggable pipeline schedules: 1F1B (Figure 2), GPipe,
+//! interleaved/virtual-stage 1F1B, and zero-bubble ZB-H1.
 //!
-//! A [`PipelineSchedule`] contributes two things: the serial task order
-//! each physical stage executes ([`PipelineSchedule::stage_order`]) and a
-//! closed-form batch runtime generalizing the paper's eq (7)
-//! ([`PipelineSchedule::closed_form_runtime_us`]). Dependencies between
-//! tasks are schedule-independent once tasks are mapped onto *virtual*
-//! stages: chunk `c` of physical stage `s` is virtual stage `c*S + s`,
-//! forward activations flow down the virtual pipeline and gradients flow
-//! back up. The generic event-queue executor ([`crate::pipeline::execute`])
-//! runs any schedule's dependency DAG in O(S·M·v).
+//! A [`PipelineSchedule`] contributes three things: the serial task order
+//! each physical stage executes ([`PipelineSchedule::stage_order`]), an
+//! optional backward split ([`PipelineSchedule::wgt_frac`], nonzero for
+//! zero-bubble schedules that separate input-grad B from weight-grad W
+//! tasks), and a closed-form batch runtime generalizing the paper's
+//! eq (7) ([`PipelineSchedule::closed_form_runtime_us`]). Dependencies
+//! between tasks are schedule-independent once tasks are mapped onto
+//! *virtual* stages: chunk `c` of physical stage `s` is virtual stage
+//! `c*S + s`, forward activations flow down the virtual pipeline and
+//! input gradients flow back up; weight-grad tasks depend only on their
+//! own stage's input-grad task. The generic event-queue executor
+//! ([`crate::pipeline::execute`]) runs any schedule's dependency DAG in
+//! O(S·M·v), scheduling stage-boundary P2P transfers as first-class
+//! edges (sender-side occupancy, configurable compute overlap).
 //!
 //! The ground-truth simulator (`trainrun`) executes the configured
 //! schedule with jittered task durations; the predictor only has the
@@ -18,17 +23,101 @@
 
 use crate::pipeline::exec::{execute, ScheduleError};
 
-/// Per-task durations, µs: `fwd[s][i]` / `bwd[s][i]` for stage `s`,
-/// micro-batch `i` (sender-side P2P included). With `v` virtual chunks
-/// per stage, each chunk task costs `1/v` of the stage's time (the chunk
-/// holds `1/v` of the stage's layers).
+/// Per-task durations, µs, with the compute/communication split the
+/// comm-aware executor needs:
+///
+/// * `fwd[s][i]` / `bwd[s][i]` — COMPUTE time of stage `s`, micro-batch
+///   `i` (no P2P folded in). With `v` virtual chunks per stage, each
+///   chunk task costs `1/v` of the stage's compute (the chunk holds
+///   `1/v` of the stage's layers).
+/// * `fwd_send[s][i]` / `bwd_send[s][i]` — wall-clock time of ONE
+///   stage-boundary P2P crossing sent by physical stage `s` for
+///   micro-batch `i` (forward activation down / input gradient up).
+///   Chunk crossings do NOT scale with `v`: the boundary activation is
+///   full-size, which is exactly why interleaving pays `v`× the P2P the
+///   folded model used to charge it `1/v` of.
+/// * `p2p_overlap` — fraction α ∈ [0, 1] of each transfer overlapped
+///   with the sender's compute. The sender is occupied for `(1-α)`·send
+///   after the producing task; the payload always arrives at the
+///   receiver a full `send` after the producing task ends. α = 0
+///   reproduces the historical folded model exactly (sender blocked for
+///   the whole transfer).
 #[derive(Clone, Debug)]
 pub struct TaskTimes {
     pub fwd: Vec<Vec<f64>>,
     pub bwd: Vec<Vec<f64>>,
+    pub fwd_send: Vec<Vec<f64>>,
+    pub bwd_send: Vec<Vec<f64>>,
+    pub p2p_overlap: f64,
 }
 
 impl TaskTimes {
+    /// Compute-only times: every P2P send is zero (the pre-split model).
+    pub fn compute(fwd: Vec<Vec<f64>>, bwd: Vec<Vec<f64>>) -> TaskTimes {
+        let zeros: Vec<Vec<f64>> = fwd.iter().map(|r| vec![0.0; r.len()]).collect();
+        TaskTimes {
+            fwd,
+            bwd,
+            fwd_send: zeros.clone(),
+            bwd_send: zeros,
+            p2p_overlap: 0.0,
+        }
+    }
+
+    /// Uniform compute times, zero P2P (handy for tests and renderers).
+    pub fn uniform(stages: usize, micro_batches: usize, fwd: f64, bwd: f64) -> TaskTimes {
+        TaskTimes::compute(
+            vec![vec![fwd; micro_batches]; stages],
+            vec![vec![bwd; micro_batches]; stages],
+        )
+    }
+
+    /// Uniform compute times plus a uniform per-crossing P2P time.
+    pub fn uniform_comm(
+        stages: usize,
+        micro_batches: usize,
+        fwd: f64,
+        bwd: f64,
+        p2p: f64,
+    ) -> TaskTimes {
+        TaskTimes::uniform(stages, micro_batches, fwd, bwd).with_uniform_sends(p2p)
+    }
+
+    /// Replace the send matrices (shape must match fwd/bwd).
+    pub fn with_sends(mut self, fwd_send: Vec<Vec<f64>>, bwd_send: Vec<Vec<f64>>) -> TaskTimes {
+        self.fwd_send = fwd_send;
+        self.bwd_send = bwd_send;
+        self
+    }
+
+    /// Every crossing costs the same `p2p` µs in both directions.
+    pub fn with_uniform_sends(mut self, p2p: f64) -> TaskTimes {
+        self.fwd_send = self.fwd.iter().map(|r| vec![p2p; r.len()]).collect();
+        self.bwd_send = self.fwd.iter().map(|r| vec![p2p; r.len()]).collect();
+        self
+    }
+
+    /// Set the compute/transfer overlap fraction (clamped to [0, 1]).
+    pub fn with_overlap(mut self, alpha: f64) -> TaskTimes {
+        self.p2p_overlap = alpha.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Same compute times with all sends zeroed — the counterfactual used
+    /// to measure exposed communication.
+    pub fn zero_sends(&self) -> TaskTimes {
+        TaskTimes::compute(self.fwd.clone(), self.bwd.clone())
+    }
+
+    /// Does any crossing cost anything? (When false, exposure is
+    /// definitionally zero and the counterfactual run can be skipped.)
+    pub fn has_sends(&self) -> bool {
+        self.fwd_send
+            .iter()
+            .chain(self.bwd_send.iter())
+            .any(|row| row.iter().any(|&t| t > 0.0))
+    }
+
     pub fn stages(&self) -> usize {
         self.fwd.len()
     }
@@ -36,21 +125,16 @@ impl TaskTimes {
     pub fn micro_batches(&self) -> usize {
         self.fwd.first().map_or(0, |v| v.len())
     }
-
-    /// Uniform times (handy for tests and the Figure-2 renderer).
-    pub fn uniform(stages: usize, micro_batches: usize, fwd: f64, bwd: f64) -> TaskTimes {
-        TaskTimes {
-            fwd: vec![vec![fwd; micro_batches]; stages],
-            bwd: vec![vec![bwd; micro_batches]; stages],
-        }
-    }
 }
 
-/// What a task computes.
+/// What a task computes. `Bwd` is the FULL backward for ordinary
+/// schedules; for zero-bubble schedules (`wgt_frac() > 0`) it is the
+/// input-grad part B and `Wgt` is the deferred weight-grad part W.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TaskKind {
     Fwd,
     Bwd,
+    Wgt,
 }
 
 /// One unit of pipeline work: micro-batch `mb` of virtual chunk `chunk`
@@ -70,11 +154,22 @@ impl Task {
     pub fn bwd(chunk: usize, mb: usize) -> Task {
         Task { kind: TaskKind::Bwd, chunk, mb }
     }
+
+    pub fn wgt(chunk: usize, mb: usize) -> Task {
+        Task { kind: TaskKind::Wgt, chunk, mb }
+    }
 }
 
 /// Computed schedule: start/end instants per (stage, chunk, micro-batch)
 /// task, flat-indexed `[stage][chunk * m + mb]`. For single-chunk
 /// schedules (`chunks == 1`) this is the classic `[stage][mb]` layout.
+///
+/// `fwd_arrive`/`bwd_arrive` are the instants the task's payload lands at
+/// the consuming virtual stage (task end + P2P transfer; equal to the end
+/// when no crossing exists). `wgt_start`/`wgt_end` are populated only for
+/// schedules that split the backward (`wgt_frac() > 0`); otherwise the
+/// inner vectors are empty. `send_busy[s]` is the total sender-side P2P
+/// occupancy `(1-α)·send` charged to stage `s`.
 #[derive(Clone, Debug)]
 pub struct Schedule {
     /// Virtual chunks per physical stage (1 except interleaved-1F1B).
@@ -83,6 +178,11 @@ pub struct Schedule {
     pub fwd_end: Vec<Vec<f64>>,
     pub bwd_start: Vec<Vec<f64>>,
     pub bwd_end: Vec<Vec<f64>>,
+    pub wgt_start: Vec<Vec<f64>>,
+    pub wgt_end: Vec<Vec<f64>>,
+    pub fwd_arrive: Vec<Vec<f64>>,
+    pub bwd_arrive: Vec<Vec<f64>>,
+    pub send_busy: Vec<f64>,
 }
 
 impl Schedule {
@@ -95,25 +195,96 @@ impl Schedule {
         self.fwd_start.first().map_or(0, |v| v.len()) / self.chunks.max(1)
     }
 
-    /// When each stage finishes its last backward (gradient-sync start).
-    pub fn stage_last_bwd_end(&self) -> Vec<f64> {
-        self.bwd_end.iter().map(|v| v.iter().cloned().fold(0.0, f64::max)).collect()
+    /// When each stage's gradients are complete (last backward, or last
+    /// weight-grad task for split schedules) — the instant its DP
+    /// gradient sync may start.
+    pub fn stage_grads_ready(&self) -> Vec<f64> {
+        (0..self.stages())
+            .map(|s| {
+                let b = self.bwd_end[s].iter().cloned().fold(0.0, f64::max);
+                let w = self.wgt_end[s].iter().cloned().fold(0.0, f64::max);
+                b.max(w)
+            })
+            .collect()
     }
 
-    /// Pipeline makespan (all backwards drained).
+    /// Pipeline makespan (all gradients drained).
     pub fn makespan(&self) -> f64 {
-        self.stage_last_bwd_end().iter().cloned().fold(0.0, f64::max)
+        self.stage_grads_ready().iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Total busy time of one stage: compute intervals plus sender-side
+    /// P2P occupancy.
+    pub fn busy_us(&self, stage: usize) -> f64 {
+        let span = |s: &[f64], e: &[f64]| -> f64 {
+            s.iter().zip(e).map(|(a, b)| b - a).sum::<f64>()
+        };
+        span(&self.fwd_start[stage], &self.fwd_end[stage])
+            + span(&self.bwd_start[stage], &self.bwd_end[stage])
+            + span(&self.wgt_start[stage], &self.wgt_end[stage])
+            + self.send_busy[stage]
     }
 
     /// Pipeline bubble fraction for a stage: idle / makespan. Degenerate
     /// zero-duration inputs (makespan 0) report 0 bubble, not NaN.
-    pub fn bubble_fraction(&self, times: &TaskTimes, stage: usize) -> f64 {
+    pub fn bubble_fraction(&self, stage: usize) -> f64 {
         let span = self.makespan();
         if span <= 0.0 {
             return 0.0;
         }
-        let busy: f64 = times.fwd[stage].iter().sum::<f64>() + times.bwd[stage].iter().sum::<f64>();
-        1.0 - busy / span
+        1.0 - self.busy_us(stage) / span
+    }
+}
+
+/// Inputs to a schedule's closed-form batch runtime — the measured or
+/// predicted components eq (7) and its generalizations compose.
+#[derive(Clone, Copy, Debug)]
+pub struct ClosedFormInputs {
+    pub micro_batches: usize,
+    pub stages: usize,
+    /// Slowest stage's per-micro-batch COMPUTE times, µs (no P2P folded).
+    pub max_fwd: f64,
+    pub max_bwd: f64,
+    /// One stage-boundary P2P crossing, µs wall-clock.
+    pub p2p_us: f64,
+    /// Fraction α ∈ [0, 1] of each transfer overlapped with compute.
+    pub p2p_overlap: f64,
+    /// Exposed DP all-reduce of the first stage, µs.
+    pub first_stage_sync: f64,
+    /// Max over stages of optimizer + DP all-gather, µs.
+    pub max_update: f64,
+}
+
+impl ClosedFormInputs {
+    /// Compute-only inputs (zero P2P) — the pre-split closed forms.
+    pub fn compute_only(
+        micro_batches: usize,
+        stages: usize,
+        max_fwd: f64,
+        max_bwd: f64,
+        first_stage_sync: f64,
+        max_update: f64,
+    ) -> ClosedFormInputs {
+        ClosedFormInputs {
+            micro_batches,
+            stages,
+            max_fwd,
+            max_bwd,
+            p2p_us: 0.0,
+            p2p_overlap: 0.0,
+            first_stage_sync,
+            max_update,
+        }
+    }
+
+    /// (per-crossing wall-clock `c`, per-crossing sender occupancy `o`),
+    /// both zero for a single-stage pipeline (no boundary exists).
+    fn p2p_terms(&self) -> (f64, f64) {
+        if self.stages <= 1 {
+            return (0.0, 0.0);
+        }
+        let c = self.p2p_us.max(0.0);
+        (c, (1.0 - self.p2p_overlap.clamp(0.0, 1.0)) * c)
     }
 }
 
@@ -121,7 +292,7 @@ impl Schedule {
 ///
 /// Implementations provide per-stage task orders plus a closed-form
 /// runtime; the generic executor derives exact start/end instants from
-/// the order and the virtual-stage dependency structure.
+/// the order, the virtual-stage dependency structure, and the P2P edges.
 pub trait PipelineSchedule {
     /// The selectable kind this implementation corresponds to.
     fn kind(&self) -> ScheduleKind;
@@ -134,6 +305,12 @@ pub trait PipelineSchedule {
         1
     }
 
+    /// Fraction of the full backward deferred to weight-grad W tasks
+    /// (0 = classic combined backward; ZB-H1 defers the weight half).
+    fn wgt_frac(&self) -> f64 {
+        0.0
+    }
+
     /// Geometry check before execution (e.g. interleaved-1F1B requires
     /// the micro-batch count to divide evenly into stage-sized groups).
     fn validate(&self, _stages: usize, _micro_batches: usize) -> Result<(), ScheduleError> {
@@ -141,22 +318,13 @@ pub trait PipelineSchedule {
     }
 
     /// The serial task order physical stage `stage` executes. Must
-    /// contain every (kind, chunk, mb) task exactly once.
+    /// contain every (kind, chunk, mb) task exactly once — including the
+    /// Wgt tasks if and only if `wgt_frac() > 0`.
     fn stage_order(&self, stage: usize, stages: usize, micro_batches: usize) -> Vec<Task>;
 
     /// Closed-form batch runtime, µs — the schedule's generalization of
-    /// the paper's eq (7). `max_fwd`/`max_bwd` are the slowest stage's
-    /// per-micro-batch times, `first_stage_sync` the exposed DP
-    /// all-reduce, `max_update` the max optimizer + all-gather.
-    fn closed_form_runtime_us(
-        &self,
-        micro_batches: usize,
-        stages: usize,
-        max_fwd: f64,
-        max_bwd: f64,
-        first_stage_sync: f64,
-        max_update: f64,
-    ) -> f64;
+    /// the paper's eq (7), now accounting exposed vs overlapped P2P.
+    fn closed_form_runtime_us(&self, inp: &ClosedFormInputs) -> f64;
 }
 
 /// The 1F1B task order for one stage: `min(m, S - s)` warm-up forwards,
@@ -178,6 +346,21 @@ fn one_f_one_b_order(stage: usize, stages: usize, m: usize) -> Vec<Task> {
     order
 }
 
+/// Shared steady-phase closed-form skeleton:
+/// `m·(f + b) + steady_send_occupancy + bubble + sync + update`, where
+/// the bubble term carries the fill/drain crossings (2 exposed transfers
+/// per pipeline depth step). At α = 0 and v = 1 this is EXACTLY the
+/// historical folded eq (7): `(m - 1 + S)(f + c + b + c)`.
+fn steady_closed_form(inp: &ClosedFormInputs, sends_per_mb: f64, bubble_per_step: f64) -> f64 {
+    let (m, s) = (inp.micro_batches as f64, inp.stages as f64);
+    let (c, o) = inp.p2p_terms();
+    m * (inp.max_fwd + inp.max_bwd)
+        + m * sends_per_mb * o
+        + (s - 1.0) * (bubble_per_step + 2.0 * c)
+        + inp.first_stage_sync
+        + inp.max_update
+}
+
 /// The paper's 1F1B discipline (Figure 2): warm-up forwards, steady
 /// one-forward-one-backward, cool-down backwards.
 #[derive(Clone, Copy, Debug, Default)]
@@ -196,23 +379,10 @@ impl PipelineSchedule for OneFOneB {
         one_f_one_b_order(stage, stages, micro_batches)
     }
 
-    fn closed_form_runtime_us(
-        &self,
-        micro_batches: usize,
-        stages: usize,
-        max_fwd: f64,
-        max_bwd: f64,
-        first_stage_sync: f64,
-        max_update: f64,
-    ) -> f64 {
-        crate::pipeline::eq7_runtime_us(
-            micro_batches,
-            stages,
-            max_fwd,
-            max_bwd,
-            first_stage_sync,
-            max_update,
-        )
+    fn closed_form_runtime_us(&self, inp: &ClosedFormInputs) -> f64 {
+        // m(f+b) + (S-1)(f+b) == eq (7)'s (m - 1 + S)(f + b); two sends
+        // per steady micro-batch (activation down, gradient up).
+        steady_closed_form(inp, 2.0, inp.max_fwd + inp.max_bwd)
     }
 }
 
@@ -243,18 +413,8 @@ impl PipelineSchedule for GPipe {
         order
     }
 
-    fn closed_form_runtime_us(
-        &self,
-        micro_batches: usize,
-        stages: usize,
-        max_fwd: f64,
-        max_bwd: f64,
-        first_stage_sync: f64,
-        max_update: f64,
-    ) -> f64 {
-        (micro_batches as f64 + stages as f64 - 1.0) * (max_fwd + max_bwd)
-            + first_stage_sync
-            + max_update
+    fn closed_form_runtime_us(&self, inp: &ClosedFormInputs) -> f64 {
+        steady_closed_form(inp, 2.0, inp.max_fwd + inp.max_bwd)
     }
 }
 
@@ -264,13 +424,13 @@ impl PipelineSchedule for GPipe {
 /// schedule walks micro-batches in stage-sized groups). `v = 1` is
 /// exactly classic 1F1B.
 ///
-/// Known model limit: chunk tasks cost `1/v` of the WHOLE stage time,
-/// including the PP_P2P share folded into it. Compute does scale `1/v`,
-/// but real interleaving crosses `v` times as many chunk boundaries with
-/// full-size activations, so total P2P grows ~`v`x. With P2P a few
-/// percent of stage time (this repo's platforms) the error is small, but
-/// on P2P-bound fabrics this model overstates interleaving's win —
-/// splitting TaskTimes into compute/comm components is the ROADMAP fix.
+/// Historical note: before the compute/comm split, chunk tasks cost
+/// `1/v` of the whole folded stage time INCLUDING its P2P share, so
+/// interleaving was undercharged to `1/v` of the real communication.
+/// The comm-aware executor now bills every chunk-boundary crossing a
+/// full-size transfer — `v·S - 1` forward crossings per micro-batch
+/// walk instead of `S - 1` — so interleaving genuinely pays ~`v`× the
+/// P2P, and its closed form carries the matching `v`× steady-send term.
 #[derive(Clone, Copy, Debug)]
 pub struct Interleaved1F1B {
     v: usize,
@@ -356,21 +516,103 @@ impl PipelineSchedule for Interleaved1F1B {
         order
     }
 
-    fn closed_form_runtime_us(
-        &self,
-        micro_batches: usize,
-        stages: usize,
-        max_fwd: f64,
-        max_bwd: f64,
-        first_stage_sync: f64,
-        max_update: f64,
-    ) -> f64 {
-        // Megatron-LM: ideal m(f+b) plus bubble (S-1)(f+b)/v. v = 1
-        // recovers eq (7)'s (m - 1 + S)(f + b).
-        let (m, s) = (micro_batches as f64, stages as f64);
-        m * (max_fwd + max_bwd) + (s - 1.0) * (max_fwd + max_bwd) / self.v as f64
-            + first_stage_sync
-            + max_update
+    fn closed_form_runtime_us(&self, inp: &ClosedFormInputs) -> f64 {
+        // Megatron-LM: ideal m(f+b) plus bubble (S-1)(f+b)/v — but the
+        // steady phase now crosses v times as many chunk boundaries, so
+        // the per-micro-batch send-occupancy term scales with v. v = 1
+        // recovers eq (7) exactly.
+        let v = self.v as f64;
+        steady_closed_form(inp, 2.0 * v, (inp.max_fwd + inp.max_bwd) / v)
+    }
+}
+
+/// Zero-bubble ZB-H1 (Qi et al., "Zero Bubble Pipeline Parallelism"):
+/// the backward is split into an input-grad task B (what downstream
+/// stages wait on) and a weight-grad task W (needed only by the
+/// optimizer), and W tasks are deferred to fill what would otherwise be
+/// cool-down bubbles. Warm-up matches 1F1B (`S - s` forwards), so the
+/// activation-memory footprint is 1F1B's — ZB-H1's defining property.
+///
+/// With the default even split (`wgt_frac` = 0.5), the uniform-time
+/// makespan is `m(f + b) + (S - 1)·max(f, b/2)` versus 1F1B's
+/// `m(f + b) + (S - 1)(f + b)` — the bubble shrinks by roughly the
+/// whole backward share that W used to serialize onto the critical path.
+///
+/// Requires `m >= S` (a full pipeline): with fewer micro-batches than
+/// stages the warm-up cannot fill and the per-stage W tails serialize
+/// onto the drain path, where the closed form above no longer holds —
+/// the geometry is rejected by [`ZbH1::validate`] (as an error value,
+/// like interleaving's `m % S == 0` constraint) rather than silently
+/// mispredicted.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ZbH1;
+
+impl ZbH1 {
+    /// Input-grad share of the full backward (dgrad ≈ wgrad for the
+    /// GEMM-dominated encoder stacks modeled here).
+    pub const INPUT_FRAC: f64 = 0.5;
+}
+
+impl PipelineSchedule for ZbH1 {
+    fn kind(&self) -> ScheduleKind {
+        ScheduleKind::ZbH1
+    }
+
+    fn name(&self) -> &'static str {
+        "ZB-H1"
+    }
+
+    fn wgt_frac(&self) -> f64 {
+        1.0 - Self::INPUT_FRAC
+    }
+
+    fn validate(&self, stages: usize, micro_batches: usize) -> Result<(), ScheduleError> {
+        if micro_batches < stages {
+            return Err(ScheduleError::Unsupported {
+                schedule: self.name(),
+                reason: format!(
+                    "{micro_batches} micro-batches cannot fill a {stages}-stage pipeline \
+                     (ZB-H1 needs m >= S to defer weight grads off the critical path)"
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    fn stage_order(&self, stage: usize, stages: usize, micro_batches: usize) -> Vec<Task> {
+        // 1F1B warm-up; steady emits B_i then the next forward while any
+        // remain, else the next deferred W; the tail drains leftover W's.
+        let m = micro_batches;
+        let warmup = (stages - stage).min(m);
+        let mut order = Vec::with_capacity(3 * m);
+        for i in 0..warmup {
+            order.push(Task::fwd(0, i));
+        }
+        let mut next_f = warmup;
+        let mut next_w = 0;
+        for i in 0..m {
+            order.push(Task::bwd(0, i));
+            if next_f < m {
+                order.push(Task::fwd(0, next_f));
+                next_f += 1;
+            } else {
+                order.push(Task::wgt(0, next_w));
+                next_w += 1;
+            }
+        }
+        while next_w < m {
+            order.push(Task::wgt(0, next_w));
+            next_w += 1;
+        }
+        order
+    }
+
+    fn closed_form_runtime_us(&self, inp: &ClosedFormInputs) -> f64 {
+        // Derivation (uniform times, m >= S): stage s finishes at
+        // m(f + b) + s·f + (S-1-s)·bI, maximized at an end stage, so the
+        // bubble is (S-1)·max(f, bI) with bI the input-grad share.
+        let b_input = Self::INPUT_FRAC * inp.max_bwd;
+        steady_closed_form(inp, 2.0, inp.max_fwd.max(b_input))
     }
 }
 
@@ -385,16 +627,20 @@ pub enum ScheduleKind {
         /// Virtual chunks per physical stage (`v >= 1`).
         chunks: usize,
     },
+    /// Zero-bubble ZB-H1 (split backward, deferred weight grads).
+    ZbH1,
 }
 
 impl ScheduleKind {
-    /// Parse `1f1b`, `gpipe`, `interleaved` (v=2) or `interleaved:<v>`.
+    /// Parse `1f1b`, `gpipe`, `interleaved` (v=2), `interleaved:<v>`, or
+    /// `zb-h1`.
     pub fn parse(s: &str) -> Option<ScheduleKind> {
         let t = s.trim().to_ascii_lowercase();
         match t.as_str() {
             "1f1b" => Some(ScheduleKind::OneFOneB),
             "gpipe" => Some(ScheduleKind::GPipe),
             "interleaved" => Some(ScheduleKind::Interleaved1F1B { chunks: 2 }),
+            "zb-h1" | "zbh1" => Some(ScheduleKind::ZbH1),
             _ => {
                 let v: usize = t.strip_prefix("interleaved:")?.parse().ok()?;
                 if v >= 1 {
@@ -406,12 +652,14 @@ impl ScheduleKind {
         }
     }
 
-    /// Round-trippable label (`1f1b` / `gpipe` / `interleaved:<v>`).
+    /// Round-trippable label (`1f1b` / `gpipe` / `interleaved:<v>` /
+    /// `zb-h1`).
     pub fn label(&self) -> String {
         match *self {
             ScheduleKind::OneFOneB => "1f1b".to_string(),
             ScheduleKind::GPipe => "gpipe".to_string(),
             ScheduleKind::Interleaved1F1B { chunks } => format!("interleaved:{chunks}"),
+            ScheduleKind::ZbH1 => "zb-h1".to_string(),
         }
     }
 
@@ -421,36 +669,24 @@ impl ScheduleKind {
             ScheduleKind::OneFOneB => Box::new(OneFOneB),
             ScheduleKind::GPipe => Box::new(GPipe),
             ScheduleKind::Interleaved1F1B { chunks } => Box::new(Interleaved1F1B::new(chunks)),
+            ScheduleKind::ZbH1 => Box::new(ZbH1),
         }
     }
 
     /// Closed-form batch runtime for this schedule (dispatching eq (7)
     /// or its generalization).
-    pub fn closed_form_runtime_us(
-        &self,
-        micro_batches: usize,
-        stages: usize,
-        max_fwd: f64,
-        max_bwd: f64,
-        first_stage_sync: f64,
-        max_update: f64,
-    ) -> f64 {
-        self.build().closed_form_runtime_us(
-            micro_batches,
-            stages,
-            max_fwd,
-            max_bwd,
-            first_stage_sync,
-            max_update,
-        )
+    pub fn closed_form_runtime_us(&self, inp: &ClosedFormInputs) -> f64 {
+        self.build().closed_form_runtime_us(inp)
     }
 
-    /// The comparison set used by sweeps and report tables.
+    /// The comparison set used by sweeps and report tables: 1F1B, GPipe,
+    /// interleaved (with the given chunk count), and ZB-H1.
     pub fn all(interleave_chunks: usize) -> Vec<ScheduleKind> {
         vec![
             ScheduleKind::OneFOneB,
             ScheduleKind::GPipe,
             ScheduleKind::Interleaved1F1B { chunks: interleave_chunks.max(2) },
+            ScheduleKind::ZbH1,
         ]
     }
 }
@@ -464,16 +700,17 @@ impl std::fmt::Display for ScheduleKind {
 /// Compute the exact 1F1B schedule (the classic entry point, preserved;
 /// runs through the generic event-queue executor).
 ///
-/// Dependencies: F(s,i) needs F(s-1,i) done (activation arrival; transfer
-/// time already folded into the sender's fwd task). B(s,i) needs B(s+1,i)
-/// done, and on the last stage F(s,i) done. Each stage executes its 1F1B
-/// order serially.
+/// Dependencies: F(s,i) needs F(s-1,i)'s payload to ARRIVE (sender's
+/// compute end plus the P2P transfer). B(s,i) needs B(s+1,i)'s gradient
+/// arrival, and on the last stage F(s,i) done. Each stage executes its
+/// 1F1B order serially, holding the link for `(1-α)` of each send.
 pub fn one_f_one_b(times: &TaskTimes) -> Schedule {
     execute(&OneFOneB, times).expect("1F1B dependency DAG is acyclic for any task times")
 }
 
 /// Render an ASCII timeline in the style of Figure 2 for any schedule
-/// (numbers are micro-batch ids; `F`/`B` rows per stage).
+/// (numbers are micro-batch ids; `F`/`B` rows per stage, `W` for the
+/// deferred weight-grad tasks of zero-bubble schedules).
 pub fn render_ascii_for(
     kind: ScheduleKind,
     times: &TaskTimes,
@@ -486,21 +723,23 @@ pub fn render_ascii_for(
     let mut out = String::new();
     for s in 0..times.stages() {
         let mut row = vec![b' '; width + 1];
-        let mut paint = |start: f64, end: f64, label: String, upper: bool| {
+        let mut paint = |start: f64, end: f64, label: String, fill: u8| {
             let a = (start * scale) as usize;
             let b = ((end * scale) as usize).min(width);
             for (k, cell) in row.iter_mut().enumerate().take(b).skip(a) {
-                let ch = if upper { b'F' } else { b'B' };
-                *cell = if k == a { label.bytes().next().unwrap_or(ch) } else { ch };
+                *cell = if k == a { label.bytes().next().unwrap_or(fill) } else { fill };
             }
         };
         for t in 0..sched.fwd_start[s].len() {
             let label = format!("{}", (t % m + 1) % 10);
-            paint(sched.fwd_start[s][t], sched.fwd_end[s][t], label, true);
+            paint(sched.fwd_start[s][t], sched.fwd_end[s][t], label, b'F');
         }
         for t in 0..sched.bwd_start[s].len() {
             let label = format!("{}", (t % m + 1) % 10);
-            paint(sched.bwd_start[s][t], sched.bwd_end[s][t], label, false);
+            paint(sched.bwd_start[s][t], sched.bwd_end[s][t], label, b'B');
+        }
+        for t in 0..sched.wgt_start[s].len() {
+            paint(sched.wgt_start[s][t], sched.wgt_end[s][t], "W".to_string(), b'W');
         }
         out.push_str(&format!("Stage{} |{}|\n", s + 1, String::from_utf8(row).unwrap()));
     }
@@ -574,6 +813,41 @@ mod tests {
     }
 
     #[test]
+    fn zb_h1_bubble_formula_uniform() {
+        // makespan = m(f+b) + (S-1)·max(f, b/2) for m >= S.
+        for (stages, m) in [(1, 3), (2, 4), (4, 8), (4, 16), (8, 16)] {
+            for (f, b) in [(2.0, 4.0), (1.0, 6.0), (3.0, 2.0)] {
+                let t = TaskTimes::uniform(stages, m, f, b);
+                let ms = makespan_of(ScheduleKind::ZbH1, &t);
+                let expect = m as f64 * (f + b) + (stages as f64 - 1.0) * f.max(b / 2.0);
+                assert!(
+                    (ms - expect).abs() < 1e-9,
+                    "S={stages} m={m} f={f} b={b}: {ms} vs {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zb_h1_beats_1f1b_and_keeps_gradients_complete() {
+        let t = TaskTimes::uniform(4, 8, 2.0, 4.0);
+        let zb = execute(ScheduleKind::ZbH1.build().as_ref(), &t).unwrap();
+        let f1 = one_f_one_b(&t);
+        assert!(zb.makespan() < f1.makespan(), "{} vs {}", zb.makespan(), f1.makespan());
+        // every stage's W tasks all finish by the time its grads are ready
+        let ready = zb.stage_grads_ready();
+        for s in 0..4 {
+            assert_eq!(zb.wgt_end[s].len(), 8);
+            for w in &zb.wgt_end[s] {
+                assert!(*w <= ready[s] + 1e-12);
+            }
+        }
+        // and B + W together cover the full backward compute
+        let busy: f64 = zb.busy_us(0);
+        assert!((busy - 8.0 * (2.0 + 4.0)).abs() < 1e-9, "stage-0 busy {busy}");
+    }
+
+    #[test]
     fn interleaved_v1_is_exactly_1f1b() {
         let t = TaskTimes::uniform(4, 6, 1.5, 2.5);
         let a = one_f_one_b(&t);
@@ -581,6 +855,19 @@ mod tests {
         assert_eq!(a.chunks, b.chunks);
         assert_eq!(a.fwd_start, b.fwd_start);
         assert_eq!(a.bwd_end, b.bwd_end);
+    }
+
+    #[test]
+    fn zb_h1_rejects_underfilled_pipeline() {
+        // m < S: the warm-up cannot fill, the closed form would not
+        // match the executor, so the geometry is an error value.
+        let t = TaskTimes::uniform(4, 3, 1.0, 2.0);
+        let err = execute(ScheduleKind::ZbH1.build().as_ref(), &t).unwrap_err();
+        assert!(matches!(err, ScheduleError::Unsupported { .. }), "{err}");
+        assert!(err.to_string().contains("m >= S"), "{err}");
+        // m == S is the boundary and must execute
+        let t = TaskTimes::uniform(4, 4, 1.0, 2.0);
+        assert!(execute(ScheduleKind::ZbH1.build().as_ref(), &t).is_ok());
     }
 
     #[test]
@@ -594,17 +881,96 @@ mod tests {
     #[test]
     fn closed_forms_match_executor_on_uniform_times() {
         let (f, b) = (3.0, 5.0);
-        for kind in [
-            ScheduleKind::OneFOneB,
-            ScheduleKind::GPipe,
-            ScheduleKind::Interleaved1F1B { chunks: 2 },
-        ] {
+        for kind in ScheduleKind::all(2) {
             let (s, m) = (4, 8);
             let t = TaskTimes::uniform(s, m, f, b);
             let ms = makespan_of(kind, &t);
-            let closed = kind.closed_form_runtime_us(m, s, f, b, 0.0, 0.0);
+            let closed = kind
+                .closed_form_runtime_us(&ClosedFormInputs::compute_only(m, s, f, b, 0.0, 0.0));
             assert!((ms - closed).abs() < 1e-9, "{kind}: {ms} vs {closed}");
         }
+    }
+
+    #[test]
+    fn closed_form_alpha_zero_matches_folded_eq7() {
+        // With α = 0 the 1F1B closed form must equal the historical
+        // folded eq (7): (m - 1 + S)(f + c + b + c).
+        let (m, s, f, b, c) = (16, 4, 3.0, 5.0, 0.7);
+        let inp = ClosedFormInputs {
+            micro_batches: m,
+            stages: s,
+            max_fwd: f,
+            max_bwd: b,
+            p2p_us: c,
+            p2p_overlap: 0.0,
+            first_stage_sync: 11.0,
+            max_update: 3.0,
+        };
+        let split = ScheduleKind::OneFOneB.closed_form_runtime_us(&inp);
+        let folded =
+            crate::pipeline::eq7_runtime_us(m, s, f + c, b + c, 11.0, 3.0);
+        assert!((split - folded).abs() < 1e-9, "{split} vs {folded}");
+    }
+
+    #[test]
+    fn closed_form_overlap_reduces_runtime() {
+        let mut inp = ClosedFormInputs::compute_only(16, 4, 3.0, 5.0, 0.0, 0.0);
+        inp.p2p_us = 0.9;
+        for kind in ScheduleKind::all(2) {
+            let blocked = kind.closed_form_runtime_us(&inp);
+            let overlapped = kind.closed_form_runtime_us(&ClosedFormInputs {
+                p2p_overlap: 1.0,
+                ..inp
+            });
+            assert!(overlapped < blocked, "{kind}: {overlapped} vs {blocked}");
+        }
+    }
+
+    #[test]
+    fn interleaved_closed_form_pays_v_times_steady_p2p() {
+        // The steady-send term must scale with v: at equal compute, the
+        // ilv closed form's p2p-induced increment is ~v× 1F1B's (minus
+        // the smaller bubble crossings share).
+        let base = ClosedFormInputs::compute_only(16, 4, 300.0, 500.0, 0.0, 0.0);
+        let with_c = ClosedFormInputs { p2p_us: 10.0, ..base };
+        let d_1f1b = ScheduleKind::OneFOneB.closed_form_runtime_us(&with_c)
+            - ScheduleKind::OneFOneB.closed_form_runtime_us(&base);
+        let ilv = ScheduleKind::Interleaved1F1B { chunks: 4 };
+        let d_ilv = ilv.closed_form_runtime_us(&with_c) - ilv.closed_form_runtime_us(&base);
+        // 1F1B: 2·m·c + 2(S-1)c = 38c; ilv v=4: 8·m·c + 2(S-1)c = 134c
+        assert!((d_1f1b - 38.0 * 10.0).abs() < 1e-9, "{d_1f1b}");
+        assert!((d_ilv - 134.0 * 10.0).abs() < 1e-9, "{d_ilv}");
+    }
+
+    #[test]
+    fn executor_charges_interleaved_v_times_p2p() {
+        // Event-accurate check of the tentpole: with P2P on, interleaving
+        // crosses v× the boundaries, so its win over 1F1B shrinks as the
+        // crossing cost grows (and the busy accounting shows ~v× sends).
+        let (s, m, f, b) = (4, 8, 2.0, 4.0);
+        let free = TaskTimes::uniform(s, m, f, b);
+        let costly = TaskTimes::uniform_comm(s, m, f, b, 0.8);
+        let gain_free = makespan_of(ScheduleKind::OneFOneB, &free)
+            - makespan_of(ScheduleKind::Interleaved1F1B { chunks: 4 }, &free);
+        let gain_costly = makespan_of(ScheduleKind::OneFOneB, &costly)
+            - makespan_of(ScheduleKind::Interleaved1F1B { chunks: 4 }, &costly);
+        assert!(gain_costly < gain_free, "{gain_costly} vs {gain_free}");
+        let sched = execute(&Interleaved1F1B::new(4), &costly).unwrap();
+        let one = execute(&OneFOneB, &costly).unwrap();
+        // interior stage: ilv sends 2 crossings per chunk task vs 2 per mb
+        assert!(sched.send_busy[1] > 3.0 * one.send_busy[1], "{:?}", sched.send_busy);
+    }
+
+    #[test]
+    fn overlap_shrinks_makespan_event_accurately() {
+        let t = TaskTimes::uniform_comm(4, 8, 2.0, 4.0, 1.0);
+        let blocked = makespan_of(ScheduleKind::OneFOneB, &t);
+        let overlapped =
+            makespan_of(ScheduleKind::OneFOneB, &t.clone().with_overlap(1.0));
+        assert!(overlapped < blocked, "{overlapped} vs {blocked}");
+        // fully-overlapped sends still delay the RECEIVER by the wall time
+        let free = makespan_of(ScheduleKind::OneFOneB, &t.zero_sends());
+        assert!(overlapped > free, "{overlapped} vs {free}");
     }
 
     #[test]
@@ -613,12 +979,12 @@ mod tests {
         let s = one_f_one_b(&t);
         for st in 1..4 {
             for i in 0..6 {
-                assert!(s.fwd_start[st][i] >= s.fwd_end[st - 1][i] - 1e-12);
+                assert!(s.fwd_start[st][i] >= s.fwd_arrive[st - 1][i] - 1e-12);
             }
         }
         for st in 0..3 {
             for i in 0..6 {
-                assert!(s.bwd_start[st][i] >= s.bwd_end[st + 1][i] - 1e-12);
+                assert!(s.bwd_start[st][i] >= s.bwd_arrive[st + 1][i] - 1e-12);
             }
         }
         // last stage: bwd after own fwd
@@ -628,20 +994,36 @@ mod tests {
     }
 
     #[test]
+    fn p2p_arrival_delays_receiver_and_occupies_sender() {
+        let t = TaskTimes::uniform(2, 2, 2.0, 4.0)
+            .with_uniform_sends(1.5)
+            .with_overlap(0.4);
+        let s = one_f_one_b(&t);
+        for i in 0..2 {
+            // arrival = sender compute end + full wall transfer
+            assert!((s.fwd_arrive[0][i] - (s.fwd_end[0][i] + 1.5)).abs() < 1e-12);
+            assert!(s.fwd_start[1][i] >= s.fwd_arrive[0][i] - 1e-12);
+        }
+        // sender occupancy = (1 - α)·send per crossing; stage 0 sends two
+        // forward crossings, stage 1 two backward crossings
+        assert!((s.send_busy[0] - 2.0 * 0.6 * 1.5).abs() < 1e-12, "{:?}", s.send_busy);
+        assert!((s.send_busy[1] - 2.0 * 0.6 * 1.5).abs() < 1e-12, "{:?}", s.send_busy);
+    }
+
+    #[test]
     fn stage_serialism_all_schedules() {
         // No two tasks on one stage overlap, for any schedule.
-        let t = TaskTimes::uniform(3, 6, 1.5, 2.5);
-        for kind in [
-            ScheduleKind::OneFOneB,
-            ScheduleKind::GPipe,
-            ScheduleKind::Interleaved1F1B { chunks: 2 },
-        ] {
+        let t = TaskTimes::uniform_comm(4, 8, 1.5, 2.5, 0.3).with_overlap(0.5);
+        for kind in ScheduleKind::all(2) {
             let s = execute(kind.build().as_ref(), &t).unwrap();
-            for st in 0..3 {
+            for st in 0..4 {
                 let mut intervals: Vec<(f64, f64)> = Vec::new();
                 for ti in 0..s.fwd_start[st].len() {
                     intervals.push((s.fwd_start[st][ti], s.fwd_end[st][ti]));
                     intervals.push((s.bwd_start[st][ti], s.bwd_end[st][ti]));
+                }
+                for ti in 0..s.wgt_start[st].len() {
+                    intervals.push((s.wgt_start[st][ti], s.wgt_end[st][ti]));
                 }
                 intervals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
                 for w in intervals.windows(2) {
@@ -668,7 +1050,7 @@ mod tests {
         // every other stage.
         let t = TaskTimes::uniform(4, 16, 2.0, 4.0);
         let s = one_f_one_b(&t);
-        let ends = s.stage_last_bwd_end();
+        let ends = s.stage_grads_ready();
         let first = ends[0];
         for e in &ends {
             assert!(first >= *e - 1e-9);
@@ -679,8 +1061,8 @@ mod tests {
     fn bubble_fraction_shrinks_with_micro_batches() {
         let t4 = TaskTimes::uniform(4, 4, 1.0, 2.0);
         let t32 = TaskTimes::uniform(4, 32, 1.0, 2.0);
-        let b4 = one_f_one_b(&t4).bubble_fraction(&t4, 1);
-        let b32 = one_f_one_b(&t32).bubble_fraction(&t32, 1);
+        let b4 = one_f_one_b(&t4).bubble_fraction(1);
+        let b32 = one_f_one_b(&t32).bubble_fraction(1);
         assert!(b32 < b4, "{b32} vs {b4}");
     }
 
@@ -700,12 +1082,12 @@ mod tests {
         let t = TaskTimes::uniform(1, 1, 0.0, 0.0);
         let s = one_f_one_b(&t);
         assert_eq!(s.makespan(), 0.0);
-        assert_eq!(s.bubble_fraction(&t, 0), 0.0);
+        assert_eq!(s.bubble_fraction(0), 0.0);
     }
 
     #[test]
     fn schedule_kind_parse_label_roundtrip() {
-        for s in ["1f1b", "gpipe", "interleaved:2", "interleaved:4"] {
+        for s in ["1f1b", "gpipe", "interleaved:2", "interleaved:4", "zb-h1"] {
             assert_eq!(ScheduleKind::parse(s).unwrap().label(), s);
         }
         assert_eq!(
@@ -713,9 +1095,11 @@ mod tests {
             Some(ScheduleKind::Interleaved1F1B { chunks: 2 })
         );
         assert_eq!(ScheduleKind::parse("GPipe"), Some(ScheduleKind::GPipe));
+        assert_eq!(ScheduleKind::parse("zbh1"), Some(ScheduleKind::ZbH1));
         assert!(ScheduleKind::parse("interleaved:0").is_none());
         assert!(ScheduleKind::parse("pipedream").is_none());
         assert_eq!(ScheduleKind::default(), ScheduleKind::OneFOneB);
+        assert_eq!(ScheduleKind::all(2).len(), 4);
     }
 
     #[test]
@@ -734,6 +1118,9 @@ mod tests {
             let art = render_ascii_for(kind, &t, 80).unwrap();
             assert_eq!(art.lines().count(), 4, "{kind}");
             assert!(art.contains('F') && art.contains('B'), "{kind}");
+            if kind == ScheduleKind::ZbH1 {
+                assert!(art.contains('W'), "{art}");
+            }
         }
     }
 }

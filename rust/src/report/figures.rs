@@ -10,9 +10,10 @@ use crate::predictor::registry::BatchPredictor;
 use crate::report::tables::paper_configs;
 use crate::trainrun::stage_plans;
 
-/// Figure 2: canonical uniform-time timelines for all three pipeline
-/// schedules, plus a measured-shape variant (under `par.schedule`) from
-/// an actual stage plan.
+/// Figure 2: canonical uniform-time timelines for all four pipeline
+/// schedules (1F1B, GPipe, interleaved-1F1B, ZB-H1), plus a
+/// measured-shape variant (under `par.schedule`) from an actual stage
+/// plan with its real compute/P2P split.
 pub fn fig2_markdown(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> String {
     let mut s = String::from("# Figure 2 — pipeline schedule timelines\n\n");
     for kind in ScheduleKind::all(2) {
@@ -29,8 +30,12 @@ pub fn fig2_markdown(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -
 
     let plans = stage_plans(model, par, platform);
     let sim = crate::sim::ClusterSim::new(platform.clone(), 1);
-    let times = TaskTimes {
-        fwd: plans
+    let p2p_det = plans[0]
+        .pp_p2p
+        .as_ref()
+        .map_or(0.0, |op| sim.deterministic_us(&op.lowered));
+    let times = TaskTimes::compute(
+        plans
             .iter()
             .map(|p| {
                 vec![
@@ -39,7 +44,7 @@ pub fn fig2_markdown(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -
                 ]
             })
             .collect(),
-        bwd: plans
+        plans
             .iter()
             .map(|p| {
                 vec![
@@ -48,7 +53,9 @@ pub fn fig2_markdown(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -
                 ]
             })
             .collect(),
-    };
+    )
+    .with_uniform_sends(p2p_det)
+    .with_overlap(par.p2p_overlap());
     match render_ascii_for(par.schedule, &times, 100) {
         Ok(art) => s.push_str(&format!(
             "{}({}) on {} — `{}`, deterministic stage times, {} micro-batches:\n\n```\n{art}```\n",
@@ -72,7 +79,10 @@ pub fn fig2_markdown(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -
 /// One config's component proportions (% of predicted total). As in the
 /// paper, proportions deliberately exceed 100% in sum: only Stage_Fwd,
 /// Stage_Bwd, DP_Allreduce and Update are mutually exclusive phases;
-/// encoder/MP/P2P shares are *within* the stage phases.
+/// encoder/MP/P2P shares are *within* the stage phases. The predictor
+/// now keeps stage compute and PP P2P split, so the stage shares re-fold
+/// one crossing per direction here to preserve the paper's Figure-3
+/// accounting (where P2P was billed inside the sender's stage time).
 #[derive(Clone, Debug)]
 pub struct Proportions {
     pub label: String,
@@ -95,8 +105,8 @@ pub fn proportions(cp: &ComponentPrediction, model: &ModelCfg, par: &ParallelCfg
     let syncs = (model.encoder_fwd_syncs + model.encoder_bwd_syncs) as f64;
     Proportions {
         label: cp.label.clone(),
-        stage_fwd: pipeline_factor * cp.stage_fwd_max() / total * 100.0,
-        stage_bwd: pipeline_factor * cp.stage_bwd_max() / total * 100.0,
+        stage_fwd: pipeline_factor * (cp.stage_fwd_max() + cp.pp_p2p_us) / total * 100.0,
+        stage_bwd: pipeline_factor * (cp.stage_bwd_max() + cp.pp_p2p_us) / total * 100.0,
         dp_allreduce: cp.dp_allreduce_first_us / total * 100.0,
         update: cp.max_update_us / total * 100.0,
         encoder_fwd: m * enc_per_stage * cp.encoder_fwd_us / total * 100.0,
@@ -161,11 +171,12 @@ mod tests {
         );
         assert!(md.contains("Stage1"));
         assert!(md.contains("Stage4"));
-        // three canonical schedule renders + one measured-shape render
-        assert!(md.matches("```").count() >= 8);
+        // four canonical schedule renders + one measured-shape render
+        assert!(md.matches("```").count() >= 10);
         assert!(md.contains("`1f1b`"));
         assert!(md.contains("`gpipe`"));
         assert!(md.contains("`interleaved:2`"));
+        assert!(md.contains("`zb-h1`"));
     }
 
     #[test]

@@ -71,10 +71,11 @@ pub fn table8_markdown(n_batches: usize, seed: u64) -> String {
 
 /// Pipeline-schedule comparison for one configuration: event-accurate
 /// simulated total (fastest of `n_batches`), the schedule's closed form
-/// fed with the measured max stage times, and the worst per-stage bubble
-/// fraction. 1F1B and GPipe share a closed form; their simulated totals
-/// differ only through composition, while interleaving genuinely shrinks
-/// the bubble.
+/// fed with the measured max stage times and per-crossing P2P, the worst
+/// per-stage bubble fraction, and the measured communication exposure
+/// (makespan minus the zero-P2P counterfactual). 1F1B and GPipe share a
+/// closed form; interleaving shrinks the bubble but pays `v`× the
+/// crossings; ZB-H1 fills the cool-down with deferred weight grads.
 pub fn schedule_compare_markdown(
     model: &ModelCfg,
     par: &ParallelCfg,
@@ -95,6 +96,7 @@ pub fn schedule_compare_markdown(
                 "—".into(),
                 "—".into(),
                 "—".into(),
+                "—".into(),
                 format!("unavailable: {e}"),
             ]);
             continue;
@@ -110,45 +112,57 @@ pub fn schedule_compare_markdown(
         let tr = best.expect("n_batches >= 1");
         let max_fwd = tr.stage_fwd_us.iter().cloned().fold(0.0, f64::max);
         let max_bwd = tr.stage_bwd_us.iter().cloned().fold(0.0, f64::max);
-        let closed = kind.closed_form_runtime_us(
-            m,
-            cfg.pp,
+        let closed = kind.closed_form_runtime_us(&crate::pipeline::ClosedFormInputs {
+            micro_batches: m,
+            stages: cfg.pp,
             max_fwd,
             max_bwd,
-            tr.dp_allreduce_first_us,
-            tr.max_update_us,
-        );
+            p2p_us: tr.pp_p2p_us,
+            p2p_overlap: cfg.p2p_overlap(),
+            first_stage_sync: tr.dp_allreduce_first_us,
+            max_update: tr.max_update_us,
+        });
         // bubble fraction over a deterministic-shape schedule built from
-        // the measured mean stage times
-        let times = TaskTimes {
-            fwd: tr.stage_fwd_us.iter().map(|&t| vec![t; m]).collect(),
-            bwd: tr.stage_bwd_us.iter().map(|&t| vec![t; m]).collect(),
-        };
+        // the measured mean stage times and mean crossing time
+        let times = TaskTimes::compute(
+            tr.stage_fwd_us.iter().map(|&t| vec![t; m]).collect(),
+            tr.stage_bwd_us.iter().map(|&t| vec![t; m]).collect(),
+        )
+        .with_uniform_sends(tr.pp_p2p_us)
+        .with_overlap(cfg.p2p_overlap());
         let sched = execute(kind.build().as_ref(), &times)?;
-        let bubble = (0..cfg.pp)
-            .map(|s| sched.bubble_fraction(&times, s))
-            .fold(0.0, f64::max);
+        let bubble = (0..cfg.pp).map(|s| sched.bubble_fraction(s)).fold(0.0, f64::max);
         rows.push(vec![
             kind.label(),
             format!("{:.2}", tr.total_us / 1e6),
             format!("{:.2}", closed / 1e6),
             format!("{:+.2}%", stats::rel_err_pct(closed, tr.total_us)),
             format!("{:.1}%", bubble * 100.0),
+            format!("{:.3}", tr.p2p_exposed_us / 1e6),
         ]);
     }
-    let headers: Vec<String> =
-        ["Schedule", "Simulated (s)", "Closed form (s)", "Closed-form err", "Max bubble"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
+    let headers: Vec<String> = [
+        "Schedule",
+        "Simulated (s)",
+        "Closed form (s)",
+        "Closed-form err",
+        "Max bubble",
+        "P2P exposed (s)",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
     Ok(format!(
-        "# Pipeline schedules — {}({}) on {}, {} micro-batches\n\n{}\n\
+        "# Pipeline schedules — {}({}) on {}, {} micro-batches, P2P overlap {:.0}%\n\n{}\n\
          Simulated = fastest of {n_batches} event-accurate batches; closed form uses the\n\
-         measured max stage times (1F1B and GPipe share one closed form).\n",
+         measured max stage times plus the per-crossing P2P (1F1B and GPipe share one\n\
+         closed form). \"P2P exposed\" is the simulated makespan minus the same schedule\n\
+         with every transfer zeroed.\n",
         model.name,
         par.label(),
         platform.name,
         m,
+        par.p2p_overlap() * 100.0,
         markdown_table(&headers, &rows)
     ))
 }
@@ -229,7 +243,7 @@ mod tests {
     }
 
     #[test]
-    fn schedule_compare_has_three_distinct_rows() {
+    fn schedule_compare_has_four_distinct_rows_and_exposure() {
         let md = schedule_compare_markdown(
             &ModelCfg::llemma7b(),
             &ParallelCfg::new(4, 2, 2),
@@ -242,17 +256,20 @@ mod tests {
         assert!(md.contains("| 1f1b |"));
         assert!(md.contains("| gpipe |"));
         assert!(md.contains("| interleaved:2 |"));
-        // the three simulated totals must not all collapse to one value
+        assert!(md.contains("| zb-h1 |"));
+        assert!(md.contains("P2P exposed"));
+        // the four simulated totals must not all collapse to one value
         let totals: Vec<&str> = md
             .lines()
             .filter(|l| {
                 l.starts_with("| 1f1b")
                     || l.starts_with("| gpipe")
                     || l.starts_with("| interleaved")
+                    || l.starts_with("| zb-h1")
             })
             .map(|l| l.split('|').nth(2).unwrap().trim())
             .collect();
-        assert_eq!(totals.len(), 3);
+        assert_eq!(totals.len(), 4);
         assert!(
             totals.iter().collect::<std::collections::HashSet<_>>().len() >= 2,
             "totals all identical: {totals:?}"

@@ -3,12 +3,17 @@
 //! Perlmutter/Vista).
 //!
 //! A batch executes the event-accurate pipeline schedule selected by
-//! [`ParallelCfg::schedule`] (1F1B, GPipe, or interleaved-1F1B) with
-//! per-op jittered latencies from [`ClusterSim`], then overlaps DP
-//! gradient sync and the optimizer/all-gather update exactly as Figure 2
-//! describes: each stage starts its DP all-reduce when its own last
-//! backward drains, so only the first stage's sync is exposed on the
-//! critical path.
+//! [`ParallelCfg::schedule`] (1F1B, GPipe, interleaved-1F1B, or ZB-H1)
+//! with per-op jittered latencies from [`ClusterSim`]. Stage compute and
+//! PP P2P are kept SPLIT: each boundary crossing is sampled per (stage,
+//! micro-batch, direction) and handed to the executor as a first-class
+//! transfer edge (sender occupied for `1-α` of it, receiver delayed the
+//! full wall-clock), so interleaved chunks pay the true `v`× crossings.
+//! DP gradient sync and the optimizer/all-gather update overlap exactly
+//! as Figure 2 describes: each stage starts its DP all-reduce when its
+//! own gradients are complete (last backward, or last weight-grad task
+//! for ZB-H1), so only the first stage's sync is exposed on the critical
+//! path.
 
 use crate::config::{ModelCfg, ParallelCfg, Platform};
 use crate::ops::build::{
@@ -17,7 +22,9 @@ use crate::ops::build::{
 };
 use crate::ops::params::{stage_params_exact, StageRole};
 use crate::ops::{Dir, OpInstance, OpKind};
-use crate::pipeline::{encoder_allocation, execute, ScheduleError, TaskTimes};
+use crate::pipeline::{
+    encoder_allocation, execute, exposed_comm_us_given, ScheduleError, TaskTimes,
+};
 use crate::sim::ClusterSim;
 use crate::util::stats;
 
@@ -26,10 +33,16 @@ use crate::util::stats;
 pub struct StagePlan {
     pub role: StageRole,
     pub encoders: usize,
-    /// Ops run per micro-batch in the forward direction (pre-blocks,
-    /// encoder stack, post-blocks, P2P send where applicable).
+    /// COMPUTE ops run per micro-batch in each direction (pre-blocks,
+    /// encoder stack with its MP syncs, post-blocks). PP P2P is no
+    /// longer folded in here — see `pp_p2p`.
     pub fwd_ops: Vec<OpInstance>,
     pub bwd_ops: Vec<OpInstance>,
+    /// One stage-boundary P2P transfer (activation down / input-grad
+    /// up), handed to the executor as a first-class edge. `None` when
+    /// `pp == 1` (no boundary exists), which is also why `pp_p2p_us`
+    /// reports 0.0 — never NaN — for single-stage pipelines.
+    pub pp_p2p: Option<OpInstance>,
     /// Exact (Table II) local parameter count.
     pub params: f64,
     pub dp_allreduce: OpInstance,
@@ -73,14 +86,6 @@ pub fn stage_plans_mode(
             fwd.extend(post_encoder_ops(model, &wl, Dir::Fwd));
             bwd.extend(post_encoder_ops(model, &wl, Dir::Bwd));
         }
-        // PP_P2P billed to the sender: fwd sends downstream (all but the
-        // last stage), bwd sends upstream (all but the first stage).
-        if s + 1 < par.pp {
-            fwd.push(pp_p2p(&wl));
-        }
-        if s > 0 {
-            bwd.push(pp_p2p(&wl));
-        }
         let params = if paper_params {
             stage_params_paper(role, n_enc, model.d, wl.v, par.mp)
         } else {
@@ -91,6 +96,10 @@ pub fn stage_plans_mode(
             encoders: n_enc,
             fwd_ops: fwd,
             bwd_ops: bwd,
+            // Every stage can be a sender (interleaving wraps the last
+            // stage's chunk boundary back to the first), so the transfer
+            // op exists on all stages whenever the pipeline has one.
+            pp_p2p: (par.pp > 1).then(|| pp_p2p(&wl)),
             params,
             dp_allreduce: dp_allreduce(params, &wl),
             dp_allgather: dp_allgather(params / par.dp as f64, &wl),
@@ -114,8 +123,13 @@ pub struct BatchTrace {
     pub encoder_bwd_us: f64,
     /// Mean single MP all-reduce invocation, µs.
     pub mp_allreduce_us: f64,
-    /// Mean single PP P2P transfer, µs.
+    /// Mean single PP P2P transfer, µs (0.0 — not NaN — when pp = 1 and
+    /// no boundary exists).
     pub pp_p2p_us: f64,
+    /// Makespan increase attributable to P2P: the schedule executed with
+    /// the sampled transfer times minus the same schedule with sends
+    /// zeroed (the comm-exposure column of the schedule reports), µs.
+    pub p2p_exposed_us: f64,
     /// First stage's DP all-reduce (the exposed one), µs.
     pub dp_allreduce_first_us: f64,
     /// DP all-gather of the max-update stage, µs.
@@ -181,6 +195,8 @@ pub fn try_run_batch_with_plans(
 
     let mut fwd = vec![vec![0.0; m]; s_count];
     let mut bwd = vec![vec![0.0; m]; s_count];
+    let mut fwd_send = vec![vec![0.0; m]; s_count];
+    let mut bwd_send = vec![vec![0.0; m]; s_count];
     let mut enc_fwd_samples = Vec::new();
     let mut enc_bwd_samples = Vec::new();
     let mut mp_ar_samples = Vec::new();
@@ -199,13 +215,19 @@ pub fn try_run_batch_with_plans(
                         mp_ar_samples.push(t);
                         enc_sum_f += t;
                     }
-                    OpKind::PpP2p => p2p_samples.push(t),
                     OpKind::Embedding
                     | OpKind::FinalLinear
                     | OpKind::ParallelCrossEntropy => {}
                     _ if plan.encoders > 0 => enc_sum_f += t,
                     _ => {}
                 }
+            }
+            // each boundary crossing is its own sampled transfer, no
+            // longer folded into the stage's compute time
+            if let Some(p2p) = &plan.pp_p2p {
+                let t = sim.sample_us(&p2p.lowered);
+                fwd_send[s][i] = t;
+                p2p_samples.push(t);
             }
             for op in &plan.bwd_ops {
                 let t = sim.sample_us(&op.lowered);
@@ -215,13 +237,17 @@ pub fn try_run_batch_with_plans(
                         mp_ar_samples.push(t);
                         enc_sum_b += t;
                     }
-                    OpKind::PpP2p => p2p_samples.push(t),
                     OpKind::Embedding
                     | OpKind::FinalLinear
                     | OpKind::ParallelCrossEntropy => {}
                     _ if plan.encoders > 0 => enc_sum_b += t,
                     _ => {}
                 }
+            }
+            if let Some(p2p) = &plan.pp_p2p {
+                let t = sim.sample_us(&p2p.lowered);
+                bwd_send[s][i] = t;
+                p2p_samples.push(t);
             }
             fwd[s][i] = tf;
             bwd[s][i] = tb;
@@ -232,10 +258,13 @@ pub fn try_run_batch_with_plans(
         }
     }
 
-    let times = TaskTimes { fwd: fwd.clone(), bwd: bwd.clone() };
+    let times = TaskTimes::compute(fwd.clone(), bwd.clone())
+        .with_sends(fwd_send, bwd_send)
+        .with_overlap(par.p2p_overlap());
     let schedule = par.schedule.build();
     let sched = execute(schedule.as_ref(), &times)?;
-    let last_bwd = sched.stage_last_bwd_end();
+    let p2p_exposed_us = exposed_comm_us_given(schedule.as_ref(), &times, sched.makespan())?;
+    let last_bwd = sched.stage_grads_ready();
 
     // Figure 2 overlap: each stage's DP all-reduce starts at its own last
     // backward; the update (optimizer + all-gather) follows its sync.
@@ -267,7 +296,10 @@ pub fn try_run_batch_with_plans(
         encoder_fwd_us: stats::mean(&enc_fwd_samples),
         encoder_bwd_us: stats::mean(&enc_bwd_samples),
         mp_allreduce_us: stats::mean(&mp_ar_samples),
+        // mean over an empty slice is 0.0 by contract (pp = 1 has no
+        // P2P samples), so this can never go NaN
         pp_p2p_us: stats::mean(&p2p_samples),
+        p2p_exposed_us,
         dp_allreduce_first_us: dp_first,
         dp_allgather_max_us: allgather_of_max,
         max_update_us: max_update,
@@ -364,19 +396,57 @@ mod tests {
     }
 
     #[test]
-    fn sender_side_p2p_assignment() {
+    fn p2p_is_a_first_class_edge_not_a_stage_op() {
         let (m, par, p) = gpt_plan();
         let plans = stage_plans(&m, &par, &p);
-        // fwd: stages 0..2 send; stage 3 does not
-        for s in 0..3 {
-            assert!(plans[s].fwd_ops.iter().any(|o| o.kind == OpKind::PpP2p), "stage {s}");
+        for (s, plan) in plans.iter().enumerate() {
+            // compute op lists carry no folded transfers any more...
+            assert!(!plan.fwd_ops.iter().any(|o| o.kind == OpKind::PpP2p), "stage {s}");
+            assert!(!plan.bwd_ops.iter().any(|o| o.kind == OpKind::PpP2p), "stage {s}");
+            // ...every stage owns the boundary-transfer op instead (the
+            // interleaved wrap makes even the last stage a sender)
+            assert_eq!(plan.pp_p2p.as_ref().map(|o| o.kind), Some(OpKind::PpP2p), "stage {s}");
         }
-        assert!(!plans[3].fwd_ops.iter().any(|o| o.kind == OpKind::PpP2p));
-        // bwd: stages 1..3 send; stage 0 does not
-        assert!(!plans[0].bwd_ops.iter().any(|o| o.kind == OpKind::PpP2p));
-        for s in 1..4 {
-            assert!(plans[s].bwd_ops.iter().any(|o| o.kind == OpKind::PpP2p), "stage {s}");
-        }
+    }
+
+    #[test]
+    fn single_stage_pipeline_reports_zero_p2p_not_nan() {
+        // pp = 1: no boundary, no samples — the mean must be a clean 0.0.
+        let mut m = ModelCfg::llemma7b();
+        m.iters_per_update = 4;
+        let par = ParallelCfg::new(1, 2, 2);
+        let p = Platform::perlmutter();
+        let plans = stage_plans(&m, &par, &p);
+        assert!(plans[0].pp_p2p.is_none());
+        let tr = run_batch(&m, &par, &p, 5);
+        assert_eq!(tr.pp_p2p_us, 0.0);
+        assert_eq!(tr.p2p_exposed_us, 0.0);
+        assert!(tr.total_us.is_finite() && tr.total_us > 0.0);
+    }
+
+    #[test]
+    fn p2p_exposure_measured_and_overlap_shrinks_batch() {
+        let (m, par, p) = gpt_plan();
+        let blocked = run_batch(&m, &par, &p, 11);
+        assert!(blocked.p2p_exposed_us > 0.0, "{}", blocked.p2p_exposed_us);
+        assert!(blocked.pp_p2p_us > 0.0);
+        let overlapped = run_batch(&m, &par.with_p2p_overlap(1.0), &p, 11);
+        assert!(
+            overlapped.total_us < blocked.total_us,
+            "overlap 1.0 {} vs 0.0 {}",
+            overlapped.total_us,
+            blocked.total_us
+        );
+    }
+
+    #[test]
+    fn zb_h1_batch_beats_1f1b() {
+        // Same seed -> identical sampled times; deferring weight grads
+        // off the critical path must shrink the batch.
+        let (m, par, p) = gpt_plan();
+        let t_1f1b = run_batch(&m, &par, &p, 17).total_us;
+        let t_zb = run_batch(&m, &par.with_schedule(ScheduleKind::ZbH1), &p, 17).total_us;
+        assert!(t_zb < t_1f1b, "zb-h1 {t_zb} vs 1f1b {t_1f1b}");
     }
 
     #[test]

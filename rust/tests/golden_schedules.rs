@@ -1,0 +1,230 @@
+//! Golden-trace snapshot suite for the pipeline-schedule executor.
+//!
+//! Every `ScheduleKind` × {uniform, skewed-stage} × v ∈ {1, 2, 4} fixture
+//! is executed event-accurately and its FULL task trace (compute
+//! start/end per task, weight-grad tasks, P2P arrival instants, sender
+//! occupancy, makespan) is compared against a checked-in JSON golden
+//! under `tests/golden/`. Aggregate-makespan tests can miss a schedule
+//! edit that reshuffles tasks without moving the total; these diffs are
+//! event-accurate.
+//!
+//! Updating the goldens after an intentional schedule change:
+//!
+//!     GOLDEN_REGEN=1 cargo test --test golden_schedules
+//!
+//! On mismatch the actual traces are also written to
+//! `target/golden-actual/` so CI can upload them as an inspectable
+//! artifact.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use fgpm::pipeline::{execute, ScheduleKind, TaskTimes};
+use fgpm::util::json::Json;
+
+/// Absolute-or-relative tolerance for trace instants (µs).
+const TOL: f64 = 1e-9;
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn actual_dir() -> PathBuf {
+    // workspace root target/, creating an uploadable artifact location
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("target")
+        .join("golden-actual")
+}
+
+/// The deterministic fixture set. Shapes stress different failure modes:
+/// `uniform` exercises the canonical bubble formulas with partial P2P
+/// overlap, `skewed` puts a 2.5× straggler on stage 2 with per-mb drift
+/// and stage-dependent crossing costs.
+fn fixtures() -> Vec<(&'static str, TaskTimes)> {
+    let (stages, m) = (4usize, 8usize);
+    let uniform = TaskTimes::uniform(stages, m, 2.0, 4.0)
+        .with_sends(
+            vec![vec![0.7; m]; stages],
+            vec![vec![0.9; m]; stages],
+        )
+        .with_overlap(0.5);
+
+    let base_f = [1.5, 2.0, 5.0, 2.5];
+    let base_b = [3.0, 4.0, 9.0, 5.0];
+    let skewed = TaskTimes::compute(
+        (0..stages)
+            .map(|s| (0..m).map(|i| base_f[s] + 0.125 * i as f64).collect())
+            .collect(),
+        (0..stages)
+            .map(|s| (0..m).map(|i| base_b[s] + 0.25 * i as f64).collect())
+            .collect(),
+    )
+    .with_sends(
+        (0..stages).map(|s| vec![0.4 + 0.05 * s as f64; m]).collect(),
+        (0..stages).map(|s| vec![0.6 + 0.05 * s as f64; m]).collect(),
+    )
+    .with_overlap(0.25);
+
+    vec![("uniform", uniform), ("skewed", skewed)]
+}
+
+/// Every selectable schedule kind, with the interleaved chunk axis
+/// v ∈ {1, 2, 4} spelled out.
+fn kinds() -> Vec<ScheduleKind> {
+    vec![
+        ScheduleKind::OneFOneB,
+        ScheduleKind::GPipe,
+        ScheduleKind::Interleaved1F1B { chunks: 1 },
+        ScheduleKind::Interleaved1F1B { chunks: 2 },
+        ScheduleKind::Interleaved1F1B { chunks: 4 },
+        ScheduleKind::ZbH1,
+    ]
+}
+
+fn file_name(kind: ScheduleKind, fixture: &str) -> String {
+    format!("{}__{}.json", kind.label().replace(':', "_"), fixture)
+}
+
+fn matrix(v: &[Vec<f64>]) -> Json {
+    Json::Arr(v.iter().map(|row| Json::arr_f64(row)).collect())
+}
+
+fn trace_json(kind: ScheduleKind, fixture: &str, times: &TaskTimes) -> Json {
+    let sched = execute(kind.build().as_ref(), times)
+        .unwrap_or_else(|e| panic!("{} on {fixture}: {e}", kind.label()));
+    Json::obj(vec![
+        ("schedule", Json::Str(kind.label())),
+        ("fixture", Json::Str(fixture.to_string())),
+        ("chunks", Json::Num(sched.chunks as f64)),
+        ("makespan", Json::Num(sched.makespan())),
+        ("fwd_start", matrix(&sched.fwd_start)),
+        ("fwd_end", matrix(&sched.fwd_end)),
+        ("bwd_start", matrix(&sched.bwd_start)),
+        ("bwd_end", matrix(&sched.bwd_end)),
+        ("wgt_start", matrix(&sched.wgt_start)),
+        ("wgt_end", matrix(&sched.wgt_end)),
+        ("fwd_arrive", matrix(&sched.fwd_arrive)),
+        ("bwd_arrive", matrix(&sched.bwd_arrive)),
+        ("send_busy", Json::arr_f64(&sched.send_busy)),
+    ])
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= TOL + TOL * a.abs().max(b.abs())
+}
+
+/// Recursive comparison with numeric tolerance; returns the path of the
+/// first difference.
+fn diff(path: &str, golden: &Json, actual: &Json) -> Option<String> {
+    match (golden, actual) {
+        (Json::Num(a), Json::Num(b)) => {
+            (!close(*a, *b)).then(|| format!("{path}: golden {a} vs actual {b}"))
+        }
+        (Json::Str(a), Json::Str(b)) => {
+            (a != b).then(|| format!("{path}: golden {a:?} vs actual {b:?}"))
+        }
+        (Json::Arr(a), Json::Arr(b)) => {
+            if a.len() != b.len() {
+                return Some(format!("{path}: golden len {} vs actual len {}", a.len(), b.len()));
+            }
+            a.iter()
+                .zip(b)
+                .enumerate()
+                .find_map(|(i, (ga, ac))| diff(&format!("{path}[{i}]"), ga, ac))
+        }
+        (Json::Obj(a), Json::Obj(b)) => {
+            let keys: std::collections::BTreeSet<&String> =
+                a.keys().chain(b.keys()).collect();
+            for k in keys {
+                match (a.get(k.as_str()), b.get(k.as_str())) {
+                    (Some(ga), Some(ac)) => {
+                        if let Some(d) = diff(&format!("{path}.{k}"), ga, ac) {
+                            return Some(d);
+                        }
+                    }
+                    (None, _) => return Some(format!("{path}.{k}: missing in golden")),
+                    (_, None) => return Some(format!("{path}.{k}: missing in actual")),
+                }
+            }
+            None
+        }
+        (g, a) => Some(format!("{path}: type mismatch golden {g} vs actual {a}")),
+    }
+}
+
+#[test]
+fn golden_traces_all_schedules_and_fixtures() {
+    // only the documented GOLDEN_REGEN=1 regenerates — a stray
+    // GOLDEN_REGEN=0 in the environment must NOT make the suite
+    // self-passing by overwriting the goldens with the actuals
+    let regen = std::env::var("GOLDEN_REGEN").is_ok_and(|v| v == "1");
+    let mut failures: Vec<String> = Vec::new();
+    let mut covered: BTreeMap<String, usize> = BTreeMap::new();
+
+    for (fixture, times) in fixtures() {
+        for kind in kinds() {
+            let name = file_name(kind, fixture);
+            let actual = trace_json(kind, fixture, &times);
+            let golden_path = golden_dir().join(&name);
+            if regen {
+                std::fs::create_dir_all(golden_dir()).unwrap();
+                std::fs::write(&golden_path, actual.to_string()).unwrap();
+            }
+            *covered.entry(fixture.to_string()).or_default() += 1;
+            let golden_text = match std::fs::read_to_string(&golden_path) {
+                Ok(t) => t,
+                Err(e) => {
+                    write_actual(&name, &actual);
+                    failures.push(format!("{name}: missing golden ({e})"));
+                    continue;
+                }
+            };
+            let golden = Json::parse(&golden_text)
+                .unwrap_or_else(|e| panic!("{name}: unparseable golden: {e}"));
+            if let Some(d) = diff("$", &golden, &actual) {
+                write_actual(&name, &actual);
+                failures.push(format!("{name}: {d}"));
+            }
+        }
+    }
+
+    // the suite must genuinely cross the full matrix
+    assert_eq!(covered.len(), 2, "fixture set changed: {covered:?}");
+    assert!(covered.values().all(|&n| n == 6), "kind set changed: {covered:?}");
+    assert!(
+        failures.is_empty(),
+        "golden trace mismatches (actuals written to {:?}; regen with \
+         GOLDEN_REGEN=1 cargo test --test golden_schedules):\n  {}",
+        actual_dir(),
+        failures.join("\n  ")
+    );
+}
+
+fn write_actual(name: &str, actual: &Json) {
+    let dir = actual_dir();
+    let _ = std::fs::create_dir_all(&dir);
+    let _ = std::fs::write(dir.join(name), actual.to_string());
+}
+
+#[test]
+fn golden_traces_are_internally_consistent() {
+    // Independent of the checked-in files: every fixture trace respects
+    // makespan >= all recorded ends, and arrival >= end for every task.
+    for (fixture, times) in fixtures() {
+        for kind in kinds() {
+            let sched = execute(kind.build().as_ref(), &times).unwrap();
+            let ms = sched.makespan();
+            for s in 0..times.stages() {
+                for ti in 0..sched.fwd_end[s].len() {
+                    assert!(sched.fwd_arrive[s][ti] >= sched.fwd_end[s][ti] - TOL);
+                    assert!(sched.bwd_arrive[s][ti] >= sched.bwd_end[s][ti] - TOL);
+                    assert!(ms >= sched.bwd_end[s][ti] - TOL, "{kind} {fixture}");
+                }
+                for ti in 0..sched.wgt_end[s].len() {
+                    assert!(ms >= sched.wgt_end[s][ti] - TOL, "{kind} {fixture}");
+                }
+            }
+        }
+    }
+}

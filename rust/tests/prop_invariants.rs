@@ -5,7 +5,8 @@ use fgpm::config::{ModelCfg, ParallelCfg, Platform};
 use fgpm::net::{allgather_time_us, allreduce_time_us, CommGeom};
 use fgpm::ops::params::padded_vocab;
 use fgpm::pipeline::{
-    encoder_allocation, execute, one_f_one_b, Interleaved1F1B, ScheduleKind, TaskTimes,
+    encoder_allocation, execute, one_f_one_b, ClosedFormInputs, Interleaved1F1B, ScheduleKind,
+    TaskTimes,
 };
 use fgpm::util::propcheck::check;
 use fgpm::util::rng::Rng;
@@ -15,7 +16,11 @@ fn random_times(r: &mut Rng, stages: usize, m: usize) -> TaskTimes {
         (0..stages).map(|_| (0..m).map(|_| r.uniform(0.1, 10.0)).collect()).collect();
     let bwd: Vec<Vec<f64>> =
         (0..stages).map(|_| (0..m).map(|_| r.uniform(0.1, 20.0)).collect()).collect();
-    TaskTimes { fwd, bwd }
+    TaskTimes::compute(fwd, bwd)
+}
+
+fn random_sends(r: &mut Rng, stages: usize, m: usize) -> Vec<Vec<f64>> {
+    (0..stages).map(|_| (0..m).map(|_| r.uniform(0.0, 4.0)).collect()).collect()
 }
 
 #[test]
@@ -86,7 +91,8 @@ fn prop_1f1b_schedule_valid_for_any_times() {
 fn prop_closed_forms_match_executor_on_uniform_times() {
     // On uniform task times every schedule's closed form must equal the
     // event-accurate executor's makespan exactly: 1F1B/GPipe at
-    // (m + s - 1)(f + b), interleaved at m(f+b) + (s-1)(f+b)/v.
+    // (m + s - 1)(f + b), interleaved at m(f+b) + (s-1)(f+b)/v, ZB-H1 at
+    // m(f+b) + (s-1)·max(f, b/2).
     check(
         "closed-form-agreement",
         150,
@@ -102,11 +108,14 @@ fn prop_closed_forms_match_executor_on_uniform_times() {
                 ScheduleKind::OneFOneB,
                 ScheduleKind::GPipe,
                 ScheduleKind::Interleaved1F1B { chunks: v },
+                ScheduleKind::ZbH1,
             ] {
                 let Ok(sched) = execute(kind.build().as_ref(), &t) else {
                     return false;
                 };
-                let closed = kind.closed_form_runtime_us(m, stages, f, b, 0.0, 0.0);
+                let closed = kind.closed_form_runtime_us(&ClosedFormInputs::compute_only(
+                    m, stages, f, b, 0.0, 0.0,
+                ));
                 if (sched.makespan() - closed).abs() > 1e-6 * closed.max(1.0) {
                     return false;
                 }
@@ -114,6 +123,124 @@ fn prop_closed_forms_match_executor_on_uniform_times() {
             true
         },
         |&(stages, m, v, _, _)| (stages * m * v) as f64,
+    );
+}
+
+#[test]
+fn prop_zero_p2p_reduces_to_folded_model() {
+    // The comm-aware executor must reproduce the historical folded model
+    // exactly in both degenerate directions, for any jittered times:
+    //  (a) all sends zero -> identical to the compute-only model;
+    //  (b) at α = 0 with v = 1, first-class sends == folding each send
+    //      into the producing task's compute (1F1B and GPipe).
+    check(
+        "zero-p2p-reduction",
+        60,
+        |r: &mut Rng| {
+            let stages = 1 + r.below(6);
+            let m = 1 + r.below(10);
+            let t = random_times(r, stages, m)
+                .with_sends(random_sends(r, stages, m), random_sends(r, stages, m));
+            t
+        },
+        |t| {
+            let stages = t.stages();
+            let m = t.micro_batches();
+            // folded copy: fwd sends into the sender's fwd compute (all
+            // but the last stage), bwd sends into the sender's bwd
+            // compute (all but the first stage)
+            let mut fwd = t.fwd.clone();
+            let mut bwd = t.bwd.clone();
+            for s in 0..stages {
+                for i in 0..m {
+                    if s + 1 < stages {
+                        fwd[s][i] += t.fwd_send[s][i];
+                    }
+                    if s > 0 {
+                        bwd[s][i] += t.bwd_send[s][i];
+                    }
+                }
+            }
+            let folded = TaskTimes::compute(fwd, bwd);
+            for kind in [ScheduleKind::OneFOneB, ScheduleKind::GPipe] {
+                let Ok(split) = execute(kind.build().as_ref(), t) else { return false };
+                let Ok(fold) = execute(kind.build().as_ref(), &folded) else { return false };
+                if (split.makespan() - fold.makespan()).abs() > 1e-9 {
+                    return false;
+                }
+                // (a): zeroed sends == compute-only executor, exactly
+                let Ok(zero) = execute(kind.build().as_ref(), &t.zero_sends()) else {
+                    return false;
+                };
+                let Ok(plain) =
+                    execute(kind.build().as_ref(), &TaskTimes::compute(t.fwd.clone(), t.bwd.clone()))
+                else {
+                    return false;
+                };
+                if (zero.makespan() - plain.makespan()).abs() > 1e-9 {
+                    return false;
+                }
+            }
+            true
+        },
+        |t| (t.stages() * t.micro_batches()) as f64,
+    );
+}
+
+#[test]
+fn prop_zbh1_bubble_never_worse_than_1f1b() {
+    // On uniform times ZB-H1's worst-stage bubble fraction (and its
+    // makespan) must be <= 1F1B's: the W tasks only ever FILL idle time.
+    check(
+        "zbh1-bubble-leq-1f1b",
+        100,
+        |r: &mut Rng| {
+            let stages = 1 + r.below(8);
+            let groups = 1 + r.below(5);
+            (stages, groups * stages, r.uniform(0.5, 5.0), r.uniform(0.5, 10.0))
+        },
+        |&(stages, m, f, b)| {
+            let t = TaskTimes::uniform(stages, m, f, b);
+            let Ok(zb) = execute(ScheduleKind::ZbH1.build().as_ref(), &t) else {
+                return false;
+            };
+            let f1 = one_f_one_b(&t);
+            if zb.makespan() > f1.makespan() + 1e-9 {
+                return false;
+            }
+            let worst = |s: &fgpm::pipeline::Schedule| {
+                (0..stages).map(|st| s.bubble_fraction(st)).fold(0.0, f64::max)
+            };
+            worst(&zb) <= worst(&f1) + 1e-9
+        },
+        |&(stages, m, _, _)| (stages * m) as f64,
+    );
+}
+
+#[test]
+fn prop_zbh1_closed_form_matches_executor() {
+    // Satellite invariant: ZB-H1's closed form m(f+b) + (S-1)·max(f, b/2)
+    // agrees with the event-queue executor on uniform times over its
+    // whole accepted domain — ANY m >= S, not just stage multiples
+    // (m < S is rejected by ZbH1::validate).
+    check(
+        "zbh1-closed-form",
+        120,
+        |r: &mut Rng| {
+            let stages = 1 + r.below(8);
+            let m = stages + r.below(24);
+            (stages, m, r.uniform(0.2, 8.0), r.uniform(0.2, 16.0))
+        },
+        |&(stages, m, f, b)| {
+            let t = TaskTimes::uniform(stages, m, f, b);
+            let Ok(sched) = execute(ScheduleKind::ZbH1.build().as_ref(), &t) else {
+                return false;
+            };
+            let closed = ScheduleKind::ZbH1
+                .closed_form_runtime_us(&ClosedFormInputs::compute_only(m, stages, f, b, 0.0, 0.0));
+            (sched.makespan() - closed).abs() <= 1e-6 * closed.max(1.0)
+        },
+        |&(stages, m, _, _)| (stages * m) as f64,
     );
 }
 
@@ -166,6 +293,7 @@ fn prop_all_schedules_respect_virtual_stage_deps() {
                 ScheduleKind::OneFOneB,
                 ScheduleKind::GPipe,
                 ScheduleKind::Interleaved1F1B { chunks: v },
+                ScheduleKind::ZbH1,
             ] {
                 let Ok(s) = execute(kind.build().as_ref(), t) else {
                     return false;
