@@ -1,0 +1,74 @@
+//! Sweep rank-map orderings for one model and print the predicted
+//! batch-time spread — reproducing the Table VIII (4-8-4)/(4-4-8)
+//! asymmetry qualitatively: GPT-20B(4-8-4) is ~2.5x slower than (4-4-8)
+//! on Perlmutter because mp=8 under the default tp-first placement spans
+//! two NVLink islands, and a dp-first placement does the same damage to
+//! (4-4-8) by striding even its mp=4 group across nodes.
+//!
+//!     cargo run --release --example topology_compare
+//!
+//! The same information is available from the CLI as
+//! `fgpm predict --rank-map dp-first` / `fgpm topo`.
+
+use fgpm::config::{ModelCfg, ParallelCfg, Platform};
+use fgpm::net::topology::{RankMap, RankOrder};
+use fgpm::predictor::e2e::OraclePredictor;
+use fgpm::predictor::predict;
+
+fn main() {
+    let platform = Platform::perlmutter();
+    let model = ModelCfg::gpt20b();
+    let mut oracle = OraclePredictor { platform: platform.clone() };
+
+    println!(
+        "[1/2] {} on {} — predicted batch seconds per (config, rank map):",
+        model.name, platform.name
+    );
+    let mut spread: Vec<(String, f64)> = Vec::new();
+    for cfg in ["4-4-8", "4-8-4"] {
+        let base = ParallelCfg::parse(cfg).expect("paper config");
+        for order in RankOrder::all() {
+            let par = base.with_rank_order(order);
+            let map = RankMap::new(&par, &platform);
+            let cp = predict(&model, &par, &platform, &mut oracle);
+            println!(
+                "  {cfg:>6} @{:<9} {:>7.2} s   (MP group: {:?}, fabric {})",
+                order.label(),
+                cp.total_us / 1e6,
+                map.mp_geom(),
+                map.mp_fabric().describe(),
+            );
+            spread.push((format!("{cfg}@{}", order.label()), cp.total_us));
+        }
+    }
+
+    let best = spread.iter().cloned().fold(None::<(String, f64)>, |a, b| match a {
+        Some(a) if a.1 <= b.1 => Some(a),
+        _ => Some(b),
+    });
+    let worst = spread.iter().cloned().fold(None::<(String, f64)>, |a, b| match a {
+        Some(a) if a.1 >= b.1 => Some(a),
+        _ => Some(b),
+    });
+    let (best, worst) = (best.unwrap(), worst.unwrap());
+    println!(
+        "\n[2/2] placement spread: best {} ({:.2} s) vs worst {} ({:.2} s) — {:.2}x",
+        best.0,
+        best.1 / 1e6,
+        worst.0,
+        worst.1 / 1e6,
+        worst.1 / best.1
+    );
+
+    // the Table VIII asymmetry, qualitatively: mp spanning nodes loses
+    let t_448 = predict(&model, &ParallelCfg::parse("4-4-8").unwrap(), &platform, &mut oracle);
+    let t_484 = predict(&model, &ParallelCfg::parse("4-8-4").unwrap(), &platform, &mut oracle);
+    assert!(
+        t_484.total_us > t_448.total_us,
+        "expected 4-8-4 (mp spans nodes) slower than 4-4-8"
+    );
+    println!(
+        "confirmed: 4-8-4 is {:.2}x slower than 4-4-8 under tp-first (paper Table VIII: ~2.5x)",
+        t_484.total_us / t_448.total_us
+    );
+}

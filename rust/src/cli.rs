@@ -10,8 +10,9 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Context, Result};
 
 use crate::baselines::{Analytical, LogLinear};
-use crate::config::{ModelCfg, ParallelCfg, Platform};
+use crate::config::{ModelCfg, ParallelCfg, Platform, TopoSpec};
 use crate::coordinator::server;
+use crate::net::topology::RankOrder;
 use crate::pipeline::ScheduleKind;
 use crate::coordinator::{BatcherCfg, PredictionService};
 use crate::forest::persist::{load_registry, save_registry};
@@ -35,6 +36,7 @@ commands:
   train        fit + select per-operator regressors (80/20 validation)
   predict      predict one (model, parallel, platform) configuration
   sweep        rank all parallelism strategies for a model at a GPU count
+  topo         print the cluster tiers + group->tier traffic matrix for a config
   schedules    compare pipeline schedules (1F1B / GPipe / interleaved / ZB-H1) for one config
   table8       reproduce Table VIII (performance stability)
   table9       reproduce Table IX  (component-level prediction errors)
@@ -59,6 +61,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "train" => cmd_train(rest),
         "predict" => cmd_predict(rest),
         "sweep" => cmd_sweep(rest),
+        "topo" => cmd_topo(rest),
         "schedules" => cmd_schedules(rest),
         "table8" => cmd_table8(rest),
         "table9" => cmd_table9(rest),
@@ -115,7 +118,7 @@ fn apply_schedule_arg(args: &crate::util::cli::Args, par: ParallelCfg) -> Result
 }
 
 /// Apply `--p2p-overlap` (fraction of each PP transfer overlapped with
-/// the sender's compute) to a parsed `ParallelCfg`.
+/// the endpoints' compute) to a parsed `ParallelCfg`.
 fn apply_overlap_arg(args: &crate::util::cli::Args, par: ParallelCfg) -> Result<ParallelCfg> {
     let alpha = args.f64("p2p-overlap")?;
     anyhow::ensure!(
@@ -123,6 +126,37 @@ fn apply_overlap_arg(args: &crate::util::cli::Args, par: ParallelCfg) -> Result<
         "--p2p-overlap must be in [0, 1], got {alpha}"
     );
     Ok(par.with_p2p_overlap(alpha))
+}
+
+/// Apply `--rank-map` (how the pp/dp/mp cube is placed onto GPUs) to a
+/// parsed `ParallelCfg`. An explicit flag wins; a contradicting
+/// NON-DEFAULT `--parallel ...@<order>` suffix is rejected. (As with
+/// `--schedule` vs the `/<schedule>` suffix, an explicit default suffix
+/// — `@tp-first` — is indistinguishable from no suffix and yields to
+/// the flag.)
+fn apply_rank_map_arg(args: &crate::util::cli::Args, par: ParallelCfg) -> Result<ParallelCfg> {
+    let s = args.str("rank-map");
+    let order = RankOrder::parse(&s)
+        .with_context(|| format!("unknown rank map '{s}' (expected tp-first|dp-first|pp-first)"))?;
+    if !args.is_explicit("rank-map") {
+        return Ok(par); // keep whatever --parallel carried (default: tp-first)
+    }
+    anyhow::ensure!(
+        par.rank_order == RankOrder::TpFirst || par.rank_order == order,
+        "--rank-map {} contradicts --parallel suffix @{}; pass one or the other",
+        order.label(),
+        par.rank_order.label()
+    );
+    Ok(par.with_rank_order(order))
+}
+
+/// Apply `--topo` (fabric shape above the node tier) to a platform.
+fn apply_topo_arg(args: &crate::util::cli::Args, platform: Platform) -> Result<Platform> {
+    let s = args.str("topo");
+    let spec = TopoSpec::parse(&s).with_context(|| {
+        format!("unknown topology '{s}' (expected flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
+    })?;
+    Ok(platform.with_topo(spec))
 }
 
 /// Reject (model, parallel) combinations the schedule cannot run.
@@ -222,6 +256,14 @@ fn cmd_train(argv: &[String]) -> Result<i32> {
 fn registry_for(platform: &Platform, forests_dir: &str, seed: u64) -> Result<Registry> {
     let path = PathBuf::from(forests_dir).join(format!("{}.json", platform.name));
     if path.exists() {
+        if platform.topo != TopoSpec::Flat {
+            eprintln!(
+                "[fgpm] note: --topo {} changes the sampled fabric; a registry collected \
+                 under a different topology will not reflect it (delete {path:?} or re-run \
+                 `fgpm collect` to retrain)",
+                platform.topo.label()
+            );
+        }
         let (name, forests) = load_registry(&path)?;
         anyhow::ensure!(name == platform.name, "registry platform mismatch");
         return Ok(Registry { platform: name, forests });
@@ -249,19 +291,21 @@ fn backend_for(reg: Registry, use_xla: bool) -> Result<Box<dyn BatchPredictor>> 
 fn cmd_predict(argv: &[String]) -> Result<i32> {
     let spec = Spec::new("predict", "predict one configuration's batch time + components")
         .opt("model", "gpt20b", "model preset")
-        .opt("parallel", "4-4-8", "pp-mp-dp[/schedule]")
+        .opt("parallel", "4-4-8", "pp-mp-dp[/schedule][@rank-map]")
         .opt("platform", "perlmutter", "target platform")
         .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v]|zb-h1)")
         .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
+        .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first)")
+        .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
         .opt("forests", "forests", "trained registry directory")
         .opt("seed", "7", "rng seed")
         .flag("xla", "serve inference from the AOT Pallas executable (PJRT)");
     let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
-    let platform = platform_arg(&args)?;
+    let platform = apply_topo_arg(&args, platform_arg(&args)?)?;
     let model = model_arg(&args)?;
     let par = ParallelCfg::parse(&args.str("parallel"))
-        .context("bad --parallel (expected pp-mp-dp[/schedule])")?;
-    let par = apply_overlap_arg(&args, apply_schedule_arg(&args, par)?)?;
+        .context("bad --parallel (expected pp-mp-dp[/schedule][@rank-map])")?;
+    let par = apply_rank_map_arg(&args, apply_overlap_arg(&args, apply_schedule_arg(&args, par)?)?)?;
     validate_schedule(&model, &par)?;
     anyhow::ensure!(par.fits(&platform), "{} needs {} GPUs", par.label(), par.gpus());
     let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
@@ -279,11 +323,13 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         .opt("gpus", "128", "total GPUs")
         .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v]|zb-h1|all)")
         .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
+        .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first)")
+        .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
         .opt("forests", "forests", "trained registry directory")
         .opt("seed", "7", "rng seed")
         .flag("xla", "use the AOT Pallas executable");
     let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
-    let platform = platform_arg(&args)?;
+    let platform = apply_topo_arg(&args, platform_arg(&args)?)?;
     let model = model_arg(&args)?;
     let gpus = args.usize("gpus")?;
     let sched_str = args.str("schedule");
@@ -293,15 +339,17 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         vec![ScheduleKind::parse(&sched_str)
             .with_context(|| format!("unknown schedule '{sched_str}'"))?]
     };
-    // parse + range-check the constant overlap once, before enumerating
-    let overlap = apply_overlap_arg(&args, ParallelCfg::new(1, 1, 1))?.p2p_overlap();
+    // parse + range-check the constant overlap and rank map once,
+    // before enumerating
+    let base = apply_rank_map_arg(&args, apply_overlap_arg(&args, ParallelCfg::new(1, 1, 1))?)?;
+    let (overlap, rank_order) = (base.p2p_overlap(), base.rank_order);
     let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
     let mut backend = backend_for(reg, args.has_flag("xla"))?;
     let mut rows: Vec<(String, f64, f64)> = Vec::new();
     let mut skipped_oom = 0;
     let mut skipped_sched = 0;
     for par in ParallelCfg::enumerate_schedules(gpus, 16, 16, &kinds) {
-        let par = par.with_p2p_overlap(overlap);
+        let par = par.with_p2p_overlap(overlap).with_rank_order(rank_order);
         if !par.fits(&platform) || model.h % par.mp != 0 {
             continue;
         }
@@ -335,6 +383,30 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
     if skipped_sched > 0 {
         println!("({skipped_sched} strategies skipped: schedule rejects geometry)");
     }
+    Ok(0)
+}
+
+fn cmd_topo(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new(
+        "topo",
+        "print the cluster tier graph, group geometries under the rank map, and the \
+         group->tier traffic matrix (incl. the interleaved wrap-around hop's path)",
+    )
+    .opt("parallel", "4-4-8", "pp-mp-dp[@rank-map]")
+    .opt("platform", "perlmutter", "target platform")
+    .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first)")
+    .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
+    .opt("payload-mb", "25", "reference P2P payload for the per-boundary times, MB");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let platform = apply_topo_arg(&args, platform_arg(&args)?)?;
+    let par = ParallelCfg::parse(&args.str("parallel"))
+        .context("bad --parallel (expected pp-mp-dp[@rank-map])")?;
+    let par = apply_rank_map_arg(&args, par)?;
+    anyhow::ensure!(par.fits(&platform), "{} needs {} GPUs", par.label(), par.gpus());
+    let payload_mb = args.f64("payload-mb")?;
+    anyhow::ensure!(payload_mb > 0.0, "--payload-mb must be positive");
+    let md = crate::report::tables::topo_markdown(&par, &platform, payload_mb);
+    println!("{}", report::emit("topo.md", &md));
     Ok(0)
 }
 

@@ -7,4 +7,4 @@ pub mod parallel;
 
 pub use model::{ModelCfg, Norm};
 pub use parallel::ParallelCfg;
-pub use platform::{GpuSpec, JitterSpec, Platform};
+pub use platform::{GpuSpec, JitterSpec, Platform, TopoSpec};

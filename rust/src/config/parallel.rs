@@ -3,6 +3,7 @@
 //! pipeline schedule discipline (`x-y-z/gpipe`, `x-y-z/interleaved:2`).
 
 use crate::config::platform::Platform;
+use crate::net::topology::RankOrder;
 use crate::pipeline::{ScheduleError, ScheduleKind};
 
 /// Parallelism degrees. `gpus() = pp * mp * dp`.
@@ -21,17 +22,34 @@ pub struct ParallelCfg {
     /// historical folded model; 100 = transfers fully offloaded to the
     /// copy engine). Stored as percent so the config stays `Eq + Hash`.
     pub p2p_overlap_pct: u8,
+    /// How the (pp, dp, mp) cube is linearized onto physical GPUs
+    /// (`net::topology::RankMap`); `tp-first` is the historical Megatron
+    /// layout.
+    pub rank_order: RankOrder,
 }
 
 impl ParallelCfg {
     pub fn new(pp: usize, mp: usize, dp: usize) -> ParallelCfg {
         assert!(pp >= 1 && mp >= 1 && dp >= 1);
-        ParallelCfg { pp, mp, dp, schedule: ScheduleKind::OneFOneB, p2p_overlap_pct: 0 }
+        ParallelCfg {
+            pp,
+            mp,
+            dp,
+            schedule: ScheduleKind::OneFOneB,
+            p2p_overlap_pct: 0,
+            rank_order: RankOrder::TpFirst,
+        }
     }
 
     /// Same degrees, different pipeline schedule.
     pub fn with_schedule(mut self, schedule: ScheduleKind) -> ParallelCfg {
         self.schedule = schedule;
+        self
+    }
+
+    /// Same degrees, different rank placement (CLI `--rank-map`).
+    pub fn with_rank_order(mut self, order: RankOrder) -> ParallelCfg {
+        self.rank_order = order;
         self
     }
 
@@ -55,11 +73,16 @@ impl ParallelCfg {
     }
 
     /// Parse the paper's `x-y-z` notation (Pipeline-Model-Data), with an
-    /// optional `/<schedule>` suffix (`4-4-8/gpipe`, `4-4-8/interleaved:2`).
+    /// optional `/<schedule>` suffix (`4-4-8/gpipe`, `4-4-8/interleaved:2`)
+    /// and an optional `@<rank-order>` suffix (`4-8-4@dp-first`).
     pub fn parse(s: &str) -> Option<ParallelCfg> {
-        let (degrees, schedule) = match s.split_once('/') {
+        let (main, rank_order) = match s.rsplit_once('@') {
+            Some((m, o)) => (m, RankOrder::parse(o)?),
+            None => (s, RankOrder::TpFirst),
+        };
+        let (degrees, schedule) = match main.split_once('/') {
             Some((d, k)) => (d, ScheduleKind::parse(k)?),
-            None => (s, ScheduleKind::OneFOneB),
+            None => (main, ScheduleKind::OneFOneB),
         };
         let parts: Vec<usize> = degrees
             .split('-')
@@ -67,19 +90,25 @@ impl ParallelCfg {
             .collect::<Option<Vec<_>>>()?;
         match parts[..] {
             [pp, mp, dp] if pp > 0 && mp > 0 && dp > 0 => {
-                Some(ParallelCfg { pp, mp, dp, schedule, p2p_overlap_pct: 0 })
+                Some(ParallelCfg { pp, mp, dp, schedule, p2p_overlap_pct: 0, rank_order })
             }
             _ => None,
         }
     }
 
-    /// `pp-mp-dp`, suffixed `/<schedule>` when not the default 1F1B —
-    /// round-trips through [`ParallelCfg::parse`].
+    /// `pp-mp-dp`, suffixed `/<schedule>` when not the default 1F1B and
+    /// `@<rank-order>` when not the default tp-first — round-trips
+    /// through [`ParallelCfg::parse`].
     pub fn label(&self) -> String {
-        match self.schedule {
+        let mut s = match self.schedule {
             ScheduleKind::OneFOneB => format!("{}-{}-{}", self.pp, self.mp, self.dp),
             k => format!("{}-{}-{}/{}", self.pp, self.mp, self.dp, k.label()),
+        };
+        if self.rank_order != RankOrder::TpFirst {
+            s.push('@');
+            s.push_str(self.rank_order.label());
         }
+        s
     }
 
     pub fn gpus(&self) -> usize {
@@ -110,6 +139,11 @@ impl ParallelCfg {
     /// MP communication group geometry: (participating nodes, GPUs/node).
     /// MP ranks are consecutive, so a group spans ceil(mp/gpn) nodes with
     /// min(mp, gpn) members per node.
+    ///
+    /// Historical closed form for the default `tp-first` order only —
+    /// `net::topology::RankMap` derives the geometry from the actual
+    /// placement (and reproduces this formula under `tp-first`,
+    /// property-tested). Kept as the oracle for those tests.
     pub fn mp_group_geometry(&self, platform: &Platform) -> (usize, usize) {
         let gpn = platform.gpus_per_node;
         (self.mp.div_ceil(gpn), self.mp.min(gpn))
@@ -130,6 +164,11 @@ impl ParallelCfg {
 
     /// Is the PP stage boundary hop inter-node? Adjacent stages are
     /// `dp*mp` ranks apart.
+    ///
+    /// Historical single-bool guess (one classification for every
+    /// boundary, including the interleaved wrap-around hop) —
+    /// `net::topology::RankMap::pp_path` computes the true per-boundary
+    /// path instead. Kept for reference/tests.
     pub fn pp_hop_is_inter_node(&self, platform: &Platform) -> bool {
         self.dp * self.mp >= platform.gpus_per_node || self.pp == 1
     }
@@ -203,6 +242,26 @@ mod tests {
         assert_eq!(ParallelCfg::parse("4-4-8/1f1b").unwrap().label(), "4-4-8");
         assert!(ParallelCfg::parse("4-4-8/warp").is_none());
         assert!(ParallelCfg::parse("4-4-8/").is_none());
+    }
+
+    #[test]
+    fn parse_rank_order_suffix_roundtrip() {
+        use crate::net::topology::RankOrder;
+        for s in ["4-8-4@dp-first", "4-8-4@pp-first", "4-4-8/gpipe@dp-first"] {
+            let c = ParallelCfg::parse(s).unwrap();
+            assert_eq!(c.label(), s);
+        }
+        let c = ParallelCfg::parse("4-8-4@dp-first").unwrap();
+        assert_eq!(c.rank_order, RankOrder::DpFirst);
+        assert_eq!((c.pp, c.mp, c.dp), (4, 8, 4));
+        // the default order keeps the paper's bare label
+        assert_eq!(ParallelCfg::parse("4-8-4@tp-first").unwrap().label(), "4-8-4");
+        assert!(ParallelCfg::parse("4-8-4@column").is_none());
+        assert!(ParallelCfg::parse("4-8-4@").is_none());
+        // rank order participates in identity
+        let base = ParallelCfg::new(4, 8, 4);
+        assert_ne!(base.with_rank_order(RankOrder::DpFirst), base);
+        assert_eq!(base.with_rank_order(RankOrder::TpFirst), base);
     }
 
     #[test]

@@ -50,6 +50,53 @@ pub struct JitterSpec {
     pub fabric_sigma: f64,
 }
 
+/// Shape of the fabric above the node tier — consumed by
+/// `net::topology::ClusterTopology` to build the explicit cluster graph.
+/// Lives here (not in `net`) so `Platform` stays the single cluster
+/// description record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TopoSpec {
+    /// Degenerate two-tier graph: every node hangs off one uncounted
+    /// switch. Reproduces the historical scalar intra/inter model
+    /// bit-for-bit (the default for both presets).
+    Flat,
+    /// Three-tier rail/spine graph: `nodes_per_rail` nodes share a leaf
+    /// switch; crossing rails adds a spine hop at
+    /// `spine_bw_frac · inter_bw` (oversubscription taper) and doubled
+    /// latency, and NIC links count flows for contention.
+    RailSpine { nodes_per_rail: usize, spine_bw_frac: f64 },
+}
+
+impl TopoSpec {
+    /// Parse `flat`, `rail:<nodes_per_rail>`, or
+    /// `rail:<nodes_per_rail>:<spine_bw_frac>`.
+    pub fn parse(s: &str) -> Option<TopoSpec> {
+        let t = s.trim().to_ascii_lowercase();
+        if t == "flat" {
+            return Some(TopoSpec::Flat);
+        }
+        let rest = t.strip_prefix("rail:")?;
+        let (npr, frac) = match rest.split_once(':') {
+            Some((n, f)) => (n.parse::<usize>().ok()?, f.parse::<f64>().ok()?),
+            None => (rest.parse::<usize>().ok()?, 0.5),
+        };
+        if npr >= 1 && frac > 0.0 && frac <= 1.0 {
+            Some(TopoSpec::RailSpine { nodes_per_rail: npr, spine_bw_frac: frac })
+        } else {
+            None
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            TopoSpec::Flat => "flat".to_string(),
+            TopoSpec::RailSpine { nodes_per_rail, spine_bw_frac } => {
+                format!("rail:{nodes_per_rail}:{spine_bw_frac}")
+            }
+        }
+    }
+}
+
 /// A cluster: GPU spec + topology + interconnect + noise.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Platform {
@@ -65,6 +112,8 @@ pub struct Platform {
     pub inter_bw_gbs: f64,
     /// Inter-node per-message latency, µs.
     pub inter_lat_us: f64,
+    /// Fabric shape above the node tier (flat two-tier by default).
+    pub topo: TopoSpec,
     pub jitter: JitterSpec,
 }
 
@@ -91,6 +140,7 @@ impl Platform {
             intra_lat_us: 2.5,
             inter_bw_gbs: 25.0,
             inter_lat_us: 12.0,
+            topo: TopoSpec::Flat,
             jitter: JitterSpec {
                 compute_sigma: 0.004,
                 intra_comm_sigma: 0.015,
@@ -124,6 +174,7 @@ impl Platform {
             intra_lat_us: 1.5,
             inter_bw_gbs: 50.0,
             inter_lat_us: 8.0,
+            topo: TopoSpec::Flat,
             jitter: JitterSpec {
                 compute_sigma: 0.006,
                 intra_comm_sigma: 0.02,
@@ -151,6 +202,12 @@ impl Platform {
 
     pub fn max_gpus(&self) -> usize {
         self.gpus_per_node * self.max_nodes
+    }
+
+    /// Same cluster with a different fabric shape (CLI `--topo`).
+    pub fn with_topo(mut self, topo: TopoSpec) -> Platform {
+        self.topo = topo;
+        self
     }
 }
 
@@ -187,6 +244,23 @@ mod tests {
         let v = Platform::vista();
         assert!(v.gpu.peak_tflops_fp16 > p.gpu.peak_tflops_fp16);
         assert!(v.gpu.mem_bw_gbs > p.gpu.mem_bw_gbs);
+    }
+
+    #[test]
+    fn topo_spec_parse_label_roundtrip() {
+        assert_eq!(TopoSpec::parse("flat"), Some(TopoSpec::Flat));
+        assert_eq!(
+            TopoSpec::parse("rail:16"),
+            Some(TopoSpec::RailSpine { nodes_per_rail: 16, spine_bw_frac: 0.5 })
+        );
+        let full = TopoSpec::RailSpine { nodes_per_rail: 8, spine_bw_frac: 0.25 };
+        assert_eq!(TopoSpec::parse(&full.label()), Some(full));
+        assert!(TopoSpec::parse("rail:0").is_none());
+        assert!(TopoSpec::parse("rail:8:1.5").is_none());
+        assert!(TopoSpec::parse("torus").is_none());
+        // presets default to the degenerate two-tier graph
+        assert_eq!(Platform::perlmutter().topo, TopoSpec::Flat);
+        assert_eq!(Platform::vista().with_topo(full).topo, full);
     }
 
     #[test]

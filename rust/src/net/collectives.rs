@@ -11,6 +11,7 @@
 //! to ring (bandwidth-optimal) algorithms.
 
 use crate::config::platform::Platform;
+use crate::net::topology::{p2p_path_time_us, NetPath};
 
 /// Geometry of one communication group.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,7 +40,12 @@ impl CommGeom {
 /// NCCL flips from latency-optimal (tree) to bandwidth-optimal (ring)
 /// around hundreds of KiB; below the switch, time is dominated by hop
 /// latency rather than volume.
-const PROTO_SWITCH_BYTES: f64 = 512.0 * 1024.0;
+pub const PROTO_SWITCH_BYTES: f64 = 512.0 * 1024.0;
+
+/// Bounds of the inter-node collective efficiency ramp (public so the
+/// invariant tests can pin them).
+pub const INTER_MIN_EFF: f64 = 0.05;
+pub const INTER_MAX_EFF: f64 = 0.65;
 
 /// Inter-node collectives do NOT reach wire speed: protocol overheads,
 /// rendezvous, and chunking mean small/medium transfers see a fraction of
@@ -49,10 +55,20 @@ const PROTO_SWITCH_BYTES: f64 = 512.0 * 1024.0;
 /// GPT-20B(4-8-4) being 2.5x slower than (4-4-8) on Perlmutter despite
 /// using the same GPUs (paper Table VIII).
 pub fn inter_efficiency(bytes_on_wire: f64) -> f64 {
-    const MIN_EFF: f64 = 0.05;
-    const MAX_EFF: f64 = 0.65;
     const RAMP_BYTES: f64 = 150.0e6;
-    MIN_EFF + (MAX_EFF - MIN_EFF) * bytes_on_wire / (bytes_on_wire + RAMP_BYTES)
+    INTER_MIN_EFF + (INTER_MAX_EFF - INTER_MIN_EFF) * bytes_on_wire / (bytes_on_wire + RAMP_BYTES)
+}
+
+/// Per-flow link parameters of the fabric stage a spanning collective
+/// rides: the path's contended bottleneck bandwidth and its summed
+/// latency. A flat single-hop fabric returns the platform scalars
+/// unchanged (bit-for-bit — `x / 1.0` and `0.0 + x` are exact).
+fn fabric_link(fabric: &NetPath, platform: &Platform) -> (f64, f64) {
+    if fabric.hops.is_empty() {
+        (platform.inter_bw_gbs, platform.inter_lat_us)
+    } else {
+        (fabric.bottleneck_bw_gbs(), fabric.total_lat_us())
+    }
 }
 
 fn ring_allreduce_us(bytes: f64, members: usize, bw_gbs: f64, lat_us: f64, inter: bool) -> f64 {
@@ -86,11 +102,30 @@ fn allreduce_stage_us(bytes: f64, members: usize, bw_gbs: f64, lat_us: f64, inte
     }
 }
 
-/// Hierarchical all-reduce over `geom` on `platform`, in µs.
+/// Hierarchical all-reduce over `geom` on `platform` with the inter-node
+/// stage riding a flat single-hop fabric, in µs. Degenerate wrapper of
+/// [`allreduce_fabric_time_us`] — kept as the historical two-scalar
+/// entry point (and the oracle its property tests compare against).
 pub fn allreduce_time_us(bytes: f64, geom: CommGeom, platform: &Platform) -> f64 {
+    allreduce_fabric_time_us(bytes, geom, &NetPath::flat_inter(platform), platform)
+}
+
+/// Hierarchical all-reduce whose inter-node stage rides an explicit
+/// fabric path: reduce-scatter inside the node over NVLink, ring
+/// all-reduce across node leaders on the path's contended bottleneck
+/// link (a multi-hop rail+spine path contributes its summed latency and
+/// slowest per-flow hop — the conservative store-and-forward model), and
+/// an intra-node all-gather.
+pub fn allreduce_fabric_time_us(
+    bytes: f64,
+    geom: CommGeom,
+    fabric: &NetPath,
+    platform: &Platform,
+) -> f64 {
     if geom.world() <= 1 {
         return 0.0;
     }
+    let (inter_bw, inter_lat) = fabric_link(fabric, platform);
     let gpn = geom.gpus_per_node;
     if geom.nodes == 1 {
         return allreduce_stage_us(bytes, gpn, platform.intra_bw_gbs, platform.intra_lat_us, false)
@@ -98,33 +133,34 @@ pub fn allreduce_time_us(bytes: f64, geom: CommGeom, platform: &Platform) -> f64
     }
     if gpn == 1 {
         // pure inter-node ring (the Vista regime)
-        return allreduce_stage_us(
-            bytes,
-            geom.nodes,
-            platform.inter_bw_gbs,
-            platform.inter_lat_us,
-            true,
-        ) + platform.gpu.launch_us;
+        return allreduce_stage_us(bytes, geom.nodes, inter_bw, inter_lat, true)
+            + platform.gpu.launch_us;
     }
     // hierarchical: intra reduce-scatter, inter all-reduce on the shard,
     // intra all-gather — the shard is bytes/gpn per node leader.
     let p = gpn as f64;
     let rs = (p - 1.0) / p * bytes / (platform.intra_bw_gbs * 1e9) * 1e6
         + (p - 1.0) * platform.intra_lat_us;
-    let inter = allreduce_stage_us(
-        bytes / p,
-        geom.nodes,
-        platform.inter_bw_gbs,
-        platform.inter_lat_us,
-        true,
-    );
+    let inter = allreduce_stage_us(bytes / p, geom.nodes, inter_bw, inter_lat, true);
     let ag = (p - 1.0) / p * bytes / (platform.intra_bw_gbs * 1e9) * 1e6
         + (p - 1.0) * platform.intra_lat_us;
     rs + inter + ag + platform.gpu.launch_us
 }
 
-/// All-gather: one-directional ring over the same hierarchy.
+/// All-gather over a flat single-hop fabric (degenerate wrapper of
+/// [`allgather_fabric_time_us`]).
 pub fn allgather_time_us(bytes_out: f64, geom: CommGeom, platform: &Platform) -> f64 {
+    allgather_fabric_time_us(bytes_out, geom, &NetPath::flat_inter(platform), platform)
+}
+
+/// All-gather: one-directional ring over the same hierarchy, with the
+/// inter-node stage on an explicit fabric path.
+pub fn allgather_fabric_time_us(
+    bytes_out: f64,
+    geom: CommGeom,
+    fabric: &NetPath,
+    platform: &Platform,
+) -> f64 {
     if geom.world() <= 1 {
         return 0.0;
     }
@@ -134,27 +170,20 @@ pub fn allgather_time_us(bytes_out: f64, geom: CommGeom, platform: &Platform) ->
         (platform.intra_bw_gbs, platform.intra_lat_us, geom.gpus_per_node - 1, 1.0)
     } else {
         // inter-node traffic dominates; intra hops are comparatively free
-        (
-            platform.inter_bw_gbs,
-            platform.inter_lat_us,
-            geom.nodes - 1,
-            inter_efficiency(volume),
-        )
+        let (inter_bw, inter_lat) = fabric_link(fabric, platform);
+        (inter_bw, inter_lat, geom.nodes - 1, inter_efficiency(volume))
     };
     volume / (bw * eff * 1e9) * 1e6 + steps as f64 * lat + platform.gpu.launch_us
 }
 
-/// Point-to-point (pipeline boundary) transfer. Single-stream RDMA ramps
-/// faster than collectives (no ring synchronization), so the efficiency
-/// knee sits much lower.
+/// Point-to-point (pipeline boundary) transfer under the historical
+/// two-way classification. Single-stream RDMA ramps faster than
+/// collectives (no ring synchronization), so the efficiency knee sits
+/// much lower. Degenerate wrapper of
+/// [`crate::net::topology::p2p_path_time_us`] over a single-hop path.
 pub fn p2p_time_us(bytes: f64, inter_node: bool, platform: &Platform) -> f64 {
-    let (bw, lat, eff) = if inter_node {
-        let eff = 0.15 + 0.75 * bytes / (bytes + 8.0e6);
-        (platform.inter_bw_gbs, platform.inter_lat_us, eff)
-    } else {
-        (platform.intra_bw_gbs, platform.intra_lat_us, 1.0)
-    };
-    bytes / (bw * eff * 1e9) * 1e6 + lat + platform.gpu.launch_us
+    let path = if inter_node { NetPath::flat_inter(platform) } else { NetPath::intra(platform) };
+    p2p_path_time_us(bytes, &path, platform.gpu.launch_us)
 }
 
 #[cfg(test)]
@@ -217,6 +246,90 @@ mod tests {
         assert!(inter_efficiency(150e6) > 0.3);
         assert!(inter_efficiency(100e9) > 0.6);
         assert!(inter_efficiency(100e9) <= 0.65);
+    }
+
+    #[test]
+    fn inter_efficiency_monotone_and_bounded() {
+        // Invariants: strictly monotone in bytes and pinned to the
+        // published [INTER_MIN_EFF, INTER_MAX_EFF] band over 9 decades.
+        let mut prev = 0.0;
+        let mut bytes = 1.0;
+        while bytes <= 1e12 {
+            let e = inter_efficiency(bytes);
+            assert!(e > prev, "non-monotone at {bytes}: {e} <= {prev}");
+            assert!(e >= INTER_MIN_EFF, "{bytes}: {e}");
+            assert!(e <= INTER_MAX_EFF, "{bytes}: {e}");
+            prev = e;
+            bytes *= 10.0;
+        }
+        // the ramp approaches but never reaches the asymptote
+        assert!(inter_efficiency(f64::MAX) <= INTER_MAX_EFF);
+    }
+
+    #[test]
+    fn allreduce_no_backward_step_across_proto_switch() {
+        // Crossing PROTO_SWITCH_BYTES upward must never make the
+        // collective FASTER: below the switch the model takes
+        // min(tree, ring) <= ring(below) <= ring(above), so the tree/ring
+        // min guarantees continuity-in-the-monotone-sense at the kink.
+        for plat in [p(), v()] {
+            for members in [2usize, 4, 8, 16, 32] {
+                for geom in [CommGeom::new(members, 1), CommGeom::new(1, members)] {
+                    let lo = allreduce_time_us(PROTO_SWITCH_BYTES * (1.0 - 1e-9), geom, &plat);
+                    let hi = allreduce_time_us(PROTO_SWITCH_BYTES * (1.0 + 1e-9), geom, &plat);
+                    assert!(
+                        hi >= lo - 1e-9,
+                        "{} {members} {geom:?}: backward step {lo} -> {hi}",
+                        plat.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fabric_path_collectives_reduce_to_flat_wrappers() {
+        // An explicit single-hop rail path at the platform scalars must
+        // reproduce the two-scalar entry points bit-for-bit.
+        for plat in [p(), v()] {
+            let fabric = NetPath::flat_inter(&plat);
+            for geom in [CommGeom::new(4, 4), CommGeom::new(8, 1), CommGeom::new(1, 4)] {
+                for bytes in [4096.0, 1e6, 25e6, 1e9] {
+                    assert_eq!(
+                        allreduce_fabric_time_us(bytes, geom, &fabric, &plat),
+                        allreduce_time_us(bytes, geom, &plat),
+                    );
+                    assert_eq!(
+                        allgather_fabric_time_us(bytes, geom, &fabric, &plat),
+                        allgather_time_us(bytes, geom, &plat),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn contended_fabric_slows_spanning_collectives() {
+        use crate::net::topology::{Hop, TierLevel};
+        let plat = p();
+        let contended = NetPath {
+            hops: vec![Hop {
+                level: TierLevel::Rail,
+                bw_gbs: plat.inter_bw_gbs,
+                lat_us: plat.inter_lat_us,
+                contention: 4.0,
+            }],
+        };
+        let geom = CommGeom::new(4, 4);
+        let free = allreduce_time_us(200e6, geom, &plat);
+        let shared = allreduce_fabric_time_us(200e6, geom, &contended, &plat);
+        assert!(shared > 1.5 * free, "{shared} vs {free}");
+        // intra-only groups never touch the fabric path
+        let intra = CommGeom::new(1, 4);
+        assert_eq!(
+            allreduce_fabric_time_us(200e6, intra, &contended, &plat),
+            allreduce_time_us(200e6, intra, &plat)
+        );
     }
 
     #[test]

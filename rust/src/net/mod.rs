@@ -1,6 +1,16 @@
-//! Multi-tier interconnect model: hierarchical collectives (NCCL-style)
-//! and point-to-point transfers over NVLink / InfiniBand / Slingshot.
+//! Multi-tier interconnect model: the explicit cluster topology graph
+//! (`topology` — tiers, rank maps, per-hop paths with contention) and
+//! the hierarchical collective/point-to-point latency models
+//! (`collectives`) that consume it.
 
 pub mod collectives;
+pub mod topology;
 
-pub use collectives::{allgather_time_us, allreduce_time_us, p2p_time_us, CommGeom};
+pub use collectives::{
+    allgather_fabric_time_us, allgather_time_us, allreduce_fabric_time_us, allreduce_time_us,
+    inter_efficiency, p2p_time_us, CommGeom, INTER_MAX_EFF, INTER_MIN_EFF, PROTO_SWITCH_BYTES,
+};
+pub use topology::{
+    p2p_path_time_us, rdma_efficiency, ClusterTopology, Hop, NetPath, RankMap, RankOrder,
+    TierLevel, TrafficRow,
+};

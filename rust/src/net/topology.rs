@@ -1,0 +1,861 @@
+//! Topology-aware network subsystem: the explicit cluster graph, rank
+//! placement, and per-hop path model that replace the old single
+//! `inter_node: bool` classification.
+//!
+//! # Tier model
+//!
+//! A cluster is a tree of tiers: GPU → node (tier 0, NVLink/C2C) →
+//! leaf switch / rail (tier 1, NIC + first fabric stage) → spine
+//! (tier 2, switch-to-switch, only present for `TopoSpec::RailSpine`).
+//! A transfer between two GPUs resolves to a [`NetPath`]: the ordered
+//! list of [`Hop`]s it crosses, each hop carrying its own bandwidth,
+//! latency, and a shared-link contention multiplier (how many concurrent
+//! flows divide the link). Per-hop times replace the two scalar
+//! bandwidths that used to stand in for the whole fabric.
+//!
+//! # Mapping the paper's testbeds onto the tiers
+//!
+//! * **Perlmutter** (4× A100 per node, NVLink3, Slingshot-10): tier 0 is
+//!   the NVLink mesh (240 GB/s/dir, ~2.5 µs); tier 1 is the node's
+//!   Slingshot injection port (25 GB/s, ~12 µs). The default [`TopoSpec::Flat`]
+//!   stops there — a two-tier degenerate graph that reproduces the
+//!   historical intra/inter model bit-for-bit. A `rail:16` spec groups
+//!   16 nodes per leaf switch and adds a tapered spine tier, modeling
+//!   the dragonfly oversubscription the flat model hides.
+//! * **Vista** (1× GH200 per node, NDR InfiniBand): tier 0 (NVLink-C2C)
+//!   exists but no collective ever uses it — every group member sits
+//!   behind its own tier-1 NIC (50 GB/s, ~8 µs), which is exactly why
+//!   Vista's stability is fabric-bound (Table VIII).
+//!
+//! # Rank maps
+//!
+//! [`RankMap`] places the (pp, dp, mp) coordinate cube onto physical
+//! GPUs under a configurable linearization ([`RankOrder`]): `tp-first`
+//! (Megatron's default — MP innermost, so tensor-parallel groups pack
+//! onto NVLink), `dp-first` (DP innermost — MP groups stride across
+//! nodes), or `pp-first` (PP innermost — stage boundaries become
+//! intra-node hops). Group geometries, per-boundary pipeline paths
+//! (including the interleaved wrap-around hop from the last stage back
+//! to the first), and shared-NIC contention are all derived from the
+//! actual placement instead of the old closed-form guesses. The
+//! GPT-20B (4-8-4) vs (4-4-8) 2.5× gap on Perlmutter (paper Table VIII)
+//! is precisely a rank-map effect: mp = 8 under `tp-first` spans two
+//! nodes, pushing every MP all-reduce onto tier 1.
+
+use std::collections::BTreeMap;
+
+use crate::config::platform::{Platform, TopoSpec};
+use crate::config::ParallelCfg;
+use crate::net::collectives::CommGeom;
+
+/// Which tier of the cluster graph a hop crosses. Ordered by "depth":
+/// a spine hop is strictly worse (slower, jitterier) than a rail hop,
+/// which is worse than an intra-node hop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TierLevel {
+    /// Inside one node (NVLink / NVLink-C2C).
+    Intra,
+    /// Node NIC to leaf switch (the old "inter-node" link).
+    Rail,
+    /// Leaf switch to spine (crossing rail groups).
+    Spine,
+}
+
+/// One link crossing of a transfer: the tier it rides plus the resolved
+/// per-flow link parameters. `contention` >= 1 divides the hop's
+/// bandwidth when several concurrent flows share the physical link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hop {
+    pub level: TierLevel,
+    pub bw_gbs: f64,
+    pub lat_us: f64,
+    pub contention: f64,
+}
+
+/// The ordered hop list of one GPU-to-GPU transfer. Empty = same GPU
+/// (no transfer). Replaces the `inter_node: bool` that used to classify
+/// every P2P and collective.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NetPath {
+    pub hops: Vec<Hop>,
+}
+
+impl NetPath {
+    /// No transfer at all (same GPU / unused fabric slot).
+    pub fn local() -> NetPath {
+        NetPath { hops: Vec::new() }
+    }
+
+    /// A single uncontended hop.
+    pub fn single(level: TierLevel, bw_gbs: f64, lat_us: f64) -> NetPath {
+        NetPath { hops: vec![Hop { level, bw_gbs, lat_us, contention: 1.0 }] }
+    }
+
+    /// The degenerate intra-node path (old `inter_node = false`).
+    pub fn intra(platform: &Platform) -> NetPath {
+        NetPath::single(TierLevel::Intra, platform.intra_bw_gbs, platform.intra_lat_us)
+    }
+
+    /// The degenerate flat inter-node path (old `inter_node = true`):
+    /// one rail hop at the platform's scalar injection bandwidth.
+    pub fn flat_inter(platform: &Platform) -> NetPath {
+        NetPath::single(TierLevel::Rail, platform.inter_bw_gbs, platform.inter_lat_us)
+    }
+
+    /// Fabric path for a collective group laid out as `geom`: flat
+    /// inter-node when the group spans nodes, nothing otherwise.
+    pub fn fabric_for(geom: CommGeom, platform: &Platform) -> NetPath {
+        if geom.nodes > 1 {
+            NetPath::flat_inter(platform)
+        } else {
+            NetPath::local()
+        }
+    }
+
+    pub fn is_local(&self) -> bool {
+        self.hops.is_empty()
+    }
+
+    /// Does any hop leave the node? (drives the jitter class and the
+    /// correlated fabric multiplier, exactly like the old bool did)
+    pub fn is_inter_node(&self) -> bool {
+        self.hops.iter().any(|h| h.level >= TierLevel::Rail)
+    }
+
+    /// Deepest tier crossed, if any hop exists.
+    pub fn worst_level(&self) -> Option<TierLevel> {
+        self.hops.iter().map(|h| h.level).max()
+    }
+
+    /// Number of fabric (rail/spine) hops — each is an independent
+    /// congestion opportunity in the jitter model.
+    pub fn fabric_hops(&self) -> usize {
+        self.hops.iter().filter(|h| h.level >= TierLevel::Rail).count()
+    }
+
+    /// Sum of per-hop latencies, µs.
+    pub fn total_lat_us(&self) -> f64 {
+        let mut t = 0.0;
+        for h in &self.hops {
+            t += h.lat_us;
+        }
+        t
+    }
+
+    /// Slowest per-flow hop bandwidth along the path (contention
+    /// applied), GB/s. The conservative store-and-forward bottleneck a
+    /// ring stage riding this path sees.
+    pub fn bottleneck_bw_gbs(&self) -> f64 {
+        let mut bw = f64::INFINITY;
+        for h in &self.hops {
+            let eff = h.bw_gbs / h.contention.max(1.0);
+            if eff < bw {
+                bw = eff;
+            }
+        }
+        bw
+    }
+
+    /// Regressor feature encoding of the path class, preserving the old
+    /// `inter ? 2.0 : 1.0` values on flat topologies: 1.0 local/intra,
+    /// 2.0 rail, 3.0 spine.
+    pub fn tier_feature(&self) -> f64 {
+        match self.worst_level() {
+            None | Some(TierLevel::Intra) => 1.0,
+            Some(TierLevel::Rail) => 2.0,
+            Some(TierLevel::Spine) => 3.0,
+        }
+    }
+
+    /// Compact human-readable form for reports, e.g. `rail(25GB/s x1.0)`.
+    pub fn describe(&self) -> String {
+        if self.hops.is_empty() {
+            return "local".to_string();
+        }
+        self.hops
+            .iter()
+            .map(|h| {
+                let name = match h.level {
+                    TierLevel::Intra => "intra",
+                    TierLevel::Rail => "rail",
+                    TierLevel::Spine => "spine",
+                };
+                if h.contention > 1.0 {
+                    format!("{name}({}GB/s /{:.0})", h.bw_gbs, h.contention)
+                } else {
+                    format!("{name}({}GB/s)", h.bw_gbs)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+/// Single-stream RDMA efficiency ramp (the knee sits far lower than the
+/// collectives' ramp: no ring synchronization). This is the exact curve
+/// the old `p2p_time_us(_, true, _)` used inline.
+pub fn rdma_efficiency(bytes: f64) -> f64 {
+    0.15 + 0.75 * bytes / (bytes + 8.0e6)
+}
+
+/// Point-to-point time over an explicit path: per-hop store-and-forward
+/// volume + latency terms, plus one kernel-launch charge. A single-hop
+/// path reproduces the historical `p2p_time_us` expression bit-for-bit
+/// (property-tested in `tests/prop_invariants.rs`).
+pub fn p2p_path_time_us(bytes: f64, path: &NetPath, launch_us: f64) -> f64 {
+    let mut t = 0.0;
+    for hop in &path.hops {
+        let eff = match hop.level {
+            TierLevel::Intra => 1.0,
+            _ => rdma_efficiency(bytes),
+        };
+        let bw = hop.bw_gbs / hop.contention.max(1.0);
+        t += bytes / (bw * eff * 1e9) * 1e6 + hop.lat_us;
+    }
+    t + launch_us
+}
+
+/// One tier of the cluster graph with its link-sharing capacity:
+/// `link_capacity` is how many concurrent flows a link carries at full
+/// bandwidth before contention divides it (`f64::INFINITY` = uncounted,
+/// the degenerate/flat behaviour).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Tier {
+    pub level: TierLevel,
+    pub bw_gbs: f64,
+    pub lat_us: f64,
+    pub link_capacity: f64,
+}
+
+/// The resolved cluster graph: GPU → node → rail (→ spine) with per-tier
+/// link parameters, built from a [`Platform`] and its [`TopoSpec`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterTopology {
+    pub gpus_per_node: usize,
+    /// Nodes sharing one leaf switch (`usize::MAX` = all of them, i.e.
+    /// the flat two-tier graph with no spine).
+    pub nodes_per_rail: usize,
+    pub intra: Tier,
+    pub rail: Tier,
+    pub spine: Option<Tier>,
+}
+
+impl ClusterTopology {
+    /// Build the topology `platform.topo` describes.
+    pub fn of(platform: &Platform) -> ClusterTopology {
+        match platform.topo {
+            TopoSpec::Flat => ClusterTopology::flat(platform),
+            TopoSpec::RailSpine { nodes_per_rail, spine_bw_frac } => ClusterTopology {
+                gpus_per_node: platform.gpus_per_node,
+                nodes_per_rail: nodes_per_rail.max(1),
+                intra: Tier {
+                    level: TierLevel::Intra,
+                    bw_gbs: platform.intra_bw_gbs,
+                    lat_us: platform.intra_lat_us,
+                    link_capacity: f64::INFINITY,
+                },
+                rail: Tier {
+                    level: TierLevel::Rail,
+                    bw_gbs: platform.inter_bw_gbs,
+                    lat_us: platform.inter_lat_us,
+                    link_capacity: 1.0,
+                },
+                spine: Some(Tier {
+                    level: TierLevel::Spine,
+                    bw_gbs: platform.inter_bw_gbs * spine_bw_frac,
+                    lat_us: platform.inter_lat_us * 2.0,
+                    link_capacity: 1.0,
+                }),
+            },
+        }
+    }
+
+    /// The degenerate two-tier graph: every node hangs off one giant
+    /// switch with uncounted links. Reproduces the historical scalar
+    /// intra/inter model exactly.
+    pub fn flat(platform: &Platform) -> ClusterTopology {
+        ClusterTopology {
+            gpus_per_node: platform.gpus_per_node,
+            nodes_per_rail: usize::MAX,
+            intra: Tier {
+                level: TierLevel::Intra,
+                bw_gbs: platform.intra_bw_gbs,
+                lat_us: platform.intra_lat_us,
+                link_capacity: f64::INFINITY,
+            },
+            rail: Tier {
+                level: TierLevel::Rail,
+                bw_gbs: platform.inter_bw_gbs,
+                lat_us: platform.inter_lat_us,
+                link_capacity: f64::INFINITY,
+            },
+            spine: None,
+        }
+    }
+
+    pub fn node_of(&self, gpu: usize) -> usize {
+        gpu / self.gpus_per_node
+    }
+
+    pub fn rail_of(&self, node: usize) -> usize {
+        node / self.nodes_per_rail
+    }
+
+    fn hop(&self, tier: &Tier, flows: f64) -> Hop {
+        Hop {
+            level: tier.level,
+            bw_gbs: tier.bw_gbs,
+            lat_us: tier.lat_us,
+            contention: (flows / tier.link_capacity).max(1.0),
+        }
+    }
+
+    /// `path(a, b)`: the hop list a transfer from GPU `a` to GPU `b`
+    /// crosses, with no link sharing assumed.
+    pub fn path(&self, a: usize, b: usize) -> NetPath {
+        self.path_with_flows(a, b, 1.0)
+    }
+
+    /// [`ClusterTopology::path`] with `flows` concurrent same-pattern
+    /// transfers sharing each link (the contention multiplier divides
+    /// every finite-capacity hop's bandwidth).
+    pub fn path_with_flows(&self, a: usize, b: usize, flows: f64) -> NetPath {
+        if a == b {
+            return NetPath::local();
+        }
+        let (na, nb) = (self.node_of(a), self.node_of(b));
+        if na == nb {
+            return NetPath { hops: vec![self.hop(&self.intra, flows)] };
+        }
+        let mut hops = vec![self.hop(&self.rail, flows)];
+        if self.rail_of(na) != self.rail_of(nb) {
+            if let Some(spine) = &self.spine {
+                hops.push(self.hop(spine, flows));
+            }
+        }
+        NetPath { hops }
+    }
+
+    /// Tier summary rows for `fgpm topo`: (name, bw GB/s, lat µs,
+    /// link capacity).
+    pub fn tier_rows(&self) -> Vec<(&'static str, f64, f64, f64)> {
+        let mut rows = vec![
+            ("intra (NVLink)", self.intra.bw_gbs, self.intra.lat_us, self.intra.link_capacity),
+            ("rail (NIC/leaf)", self.rail.bw_gbs, self.rail.lat_us, self.rail.link_capacity),
+        ];
+        if let Some(s) = &self.spine {
+            rows.push(("spine (switch)", s.bw_gbs, s.lat_us, s.link_capacity));
+        }
+        rows
+    }
+}
+
+/// Linearization of the (pp, dp, mp) coordinate cube onto global ranks
+/// (and through sequential packing, onto physical GPUs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum RankOrder {
+    /// MP innermost (Megatron/GPT-NeoX convention, the historical
+    /// behaviour): tensor-parallel groups pack onto consecutive GPUs.
+    #[default]
+    TpFirst,
+    /// DP innermost: data-parallel replicas pack together, MP groups
+    /// stride across nodes (the pathological layout for TP traffic).
+    DpFirst,
+    /// PP innermost: adjacent pipeline stages share a node, stage
+    /// boundaries become NVLink hops.
+    PpFirst,
+}
+
+impl RankOrder {
+    pub fn parse(s: &str) -> Option<RankOrder> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "tp-first" | "tp" | "megatron" => Some(RankOrder::TpFirst),
+            "dp-first" | "dp" => Some(RankOrder::DpFirst),
+            "pp-first" | "pp" => Some(RankOrder::PpFirst),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RankOrder::TpFirst => "tp-first",
+            RankOrder::DpFirst => "dp-first",
+            RankOrder::PpFirst => "pp-first",
+        }
+    }
+
+    pub fn all() -> Vec<RankOrder> {
+        vec![RankOrder::TpFirst, RankOrder::DpFirst, RankOrder::PpFirst]
+    }
+}
+
+impl std::fmt::Display for RankOrder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// One row of the group→tier traffic matrix `fgpm topo` prints: how many
+/// member-pair transfers of a communication pattern land on each tier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficRow {
+    pub kind: String,
+    pub intra: usize,
+    pub rail: usize,
+    pub spine: usize,
+}
+
+/// Placement of one parallelism configuration onto a cluster: the thing
+/// every layer queries instead of re-deriving geometry from closed-form
+/// guesses.
+#[derive(Clone, Debug)]
+pub struct RankMap {
+    pub order: RankOrder,
+    pub pp: usize,
+    pub mp: usize,
+    pub dp: usize,
+    pub topo: ClusterTopology,
+}
+
+impl RankMap {
+    pub fn new(par: &ParallelCfg, platform: &Platform) -> RankMap {
+        RankMap {
+            order: par.rank_order,
+            pp: par.pp,
+            mp: par.mp,
+            dp: par.dp,
+            topo: ClusterTopology::of(platform),
+        }
+    }
+
+    /// Global rank (== physical GPU id under sequential packing) of the
+    /// (pp, dp, mp) coordinate.
+    pub fn gpu(&self, pp_idx: usize, dp_idx: usize, mp_idx: usize) -> usize {
+        assert!(pp_idx < self.pp && dp_idx < self.dp && mp_idx < self.mp);
+        match self.order {
+            RankOrder::TpFirst => (pp_idx * self.dp + dp_idx) * self.mp + mp_idx,
+            RankOrder::DpFirst => (pp_idx * self.mp + mp_idx) * self.dp + dp_idx,
+            RankOrder::PpFirst => (dp_idx * self.mp + mp_idx) * self.pp + pp_idx,
+        }
+    }
+
+    /// Members of the MP group at (pp, dp).
+    pub fn mp_members(&self, pp_idx: usize, dp_idx: usize) -> Vec<usize> {
+        (0..self.mp).map(|m| self.gpu(pp_idx, dp_idx, m)).collect()
+    }
+
+    /// Members of the DP group at (pp, mp).
+    pub fn dp_members(&self, pp_idx: usize, mp_idx: usize) -> Vec<usize> {
+        (0..self.dp).map(|d| self.gpu(pp_idx, d, mp_idx)).collect()
+    }
+
+    fn geom_of(&self, members: &[usize]) -> CommGeom {
+        let mut per_node: BTreeMap<usize, usize> = BTreeMap::new();
+        for &g in members {
+            *per_node.entry(self.topo.node_of(g)).or_insert(0) += 1;
+        }
+        let gpn = per_node.values().copied().max().unwrap_or(1);
+        CommGeom::new(per_node.len().max(1), gpn)
+    }
+
+    fn worst_group<F: Fn(usize, usize) -> Vec<usize>>(
+        &self,
+        outer: usize,
+        inner: usize,
+        members: F,
+    ) -> (Vec<usize>, CommGeom) {
+        let mut best: Option<(Vec<usize>, CommGeom)> = None;
+        for a in 0..outer {
+            for b in 0..inner {
+                let m = members(a, b);
+                let g = self.geom_of(&m);
+                let better = match &best {
+                    None => true,
+                    Some((_, bg)) => {
+                        g.nodes > bg.nodes || (g.nodes == bg.nodes && g.gpus_per_node > bg.gpus_per_node)
+                    }
+                };
+                if better {
+                    best = Some((m, g));
+                }
+            }
+        }
+        best.expect("at least one group exists")
+    }
+
+    /// Worst-case MP group geometry under this placement. Under the
+    /// default `tp-first` order this equals the historical
+    /// `ParallelCfg::mp_group_geometry` closed form (property-tested).
+    pub fn mp_geom(&self) -> CommGeom {
+        self.worst_group(self.pp, self.dp, |p, d| self.mp_members(p, d)).1
+    }
+
+    /// Worst-case DP group geometry under this placement.
+    pub fn dp_geom(&self) -> CommGeom {
+        self.worst_group(self.pp, self.mp, |p, m| self.dp_members(p, m)).1
+    }
+
+    /// Max concurrent fabric flows any node's NIC carries when every
+    /// group of the pattern runs its inter-node stage at once (1 node
+    /// leader flow per spanning group per touched node).
+    fn fabric_flows<F: Fn(usize, usize) -> Vec<usize>>(
+        &self,
+        outer: usize,
+        inner: usize,
+        members: F,
+    ) -> f64 {
+        let mut per_node: BTreeMap<usize, usize> = BTreeMap::new();
+        for a in 0..outer {
+            for b in 0..inner {
+                let m = members(a, b);
+                if self.geom_of(&m).nodes <= 1 {
+                    continue;
+                }
+                let mut nodes: Vec<usize> = m.iter().map(|&g| self.topo.node_of(g)).collect();
+                nodes.sort_unstable();
+                nodes.dedup();
+                for n in nodes {
+                    *per_node.entry(n).or_insert(0) += 1;
+                }
+            }
+        }
+        per_node.values().copied().max().unwrap_or(0).max(1) as f64
+    }
+
+    /// Path "badness" rank: deepest tier first, then hop count — the
+    /// ordering every worst-pair selection in this module shares.
+    fn path_key(&self, a: usize, b: usize) -> (usize, usize) {
+        let p = self.topo.path(a, b);
+        (p.worst_level().map_or(0, |l| l as usize), p.hops.len())
+    }
+
+    /// The pair whose transfer crosses the deepest/longest path.
+    fn worst_pair(&self, pairs: impl Iterator<Item = (usize, usize)>) -> Option<(usize, usize)> {
+        pairs.max_by_key(|&(a, b)| self.path_key(a, b))
+    }
+
+    fn group_fabric<F: Fn(usize, usize) -> Vec<usize> + Copy>(
+        &self,
+        outer: usize,
+        inner: usize,
+        members: F,
+    ) -> NetPath {
+        let (group, geom) = self.worst_group(outer, inner, members);
+        if geom.nodes <= 1 {
+            return NetPath::local();
+        }
+        let flows = self.fabric_flows(outer, inner, members);
+        // worst member pair of the worst group carries the fabric stage
+        let pairs = group
+            .iter()
+            .enumerate()
+            .flat_map(|(i, &a)| group.iter().skip(i + 1).map(move |&b| (a, b)));
+        let (a, b) = self.worst_pair(pairs).expect("spanning group has >= 2 members");
+        self.topo.path_with_flows(a, b, flows)
+    }
+
+    /// Fabric path (with contention) for the inter-node stage of the
+    /// worst MP group's hierarchical all-reduce. `local()` when no group
+    /// spans nodes.
+    pub fn mp_fabric(&self) -> NetPath {
+        self.group_fabric(self.pp, self.dp, |p, d| self.mp_members(p, d))
+    }
+
+    /// Fabric path for the worst DP group.
+    pub fn dp_fabric(&self) -> NetPath {
+        self.group_fabric(self.pp, self.mp, |p, m| self.dp_members(p, m))
+    }
+
+    /// Path of the pipeline boundary from `from_stage` to `to_stage`
+    /// (same (dp, mp) coordinate on both sides): the worst member-pair
+    /// path, with shared-NIC contention from co-located senders. The
+    /// wrap-around hop interleaved-1F1B takes from the last stage back
+    /// to the first is simply `pp_path(S-1, 0)` — it gets its TRUE
+    /// classification instead of inheriting the interior boundaries'.
+    pub fn pp_path(&self, from_stage: usize, to_stage: usize) -> NetPath {
+        assert!(from_stage < self.pp && to_stage < self.pp);
+        if self.pp == 1 || from_stage == to_stage {
+            return NetPath::local();
+        }
+        // senders per node that actually cross the fabric, worst node
+        let mut flows_per_node: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut pairs = Vec::with_capacity(self.dp * self.mp);
+        for d in 0..self.dp {
+            for m in 0..self.mp {
+                let a = self.gpu(from_stage, d, m);
+                let b = self.gpu(to_stage, d, m);
+                if self.topo.path(a, b).is_inter_node() {
+                    *flows_per_node.entry(self.topo.node_of(a)).or_insert(0) += 1;
+                }
+                pairs.push((a, b));
+            }
+        }
+        let (a, b) = self.worst_pair(pairs.into_iter()).expect("dp*mp >= 1");
+        let flows = flows_per_node.values().copied().max().unwrap_or(0).max(1) as f64;
+        self.topo.path_with_flows(a, b, flows)
+    }
+
+    /// Forward-direction boundary paths per physical stage: entry `s` is
+    /// the hop stage `s` sends activations over — to `s+1` for interior
+    /// stages, and the wrap-around hop back to stage 0 for the last
+    /// entry (used only by interleaved schedules' chunk walks).
+    pub fn pp_fwd_paths(&self) -> Vec<NetPath> {
+        if self.pp <= 1 {
+            return Vec::new();
+        }
+        (0..self.pp).map(|s| self.pp_path(s, (s + 1) % self.pp)).collect()
+    }
+
+    /// Backward-direction boundary paths per physical stage: entry `s`
+    /// is the hop stage `s` sends input-gradients over — to `s-1`, with
+    /// stage 0 wrapping to the last stage (interleaved chunk drains).
+    pub fn pp_bwd_paths(&self) -> Vec<NetPath> {
+        if self.pp <= 1 {
+            return Vec::new();
+        }
+        (0..self.pp)
+            .map(|s| self.pp_path(s, (s + self.pp - 1) % self.pp))
+            .collect()
+    }
+
+    fn classify_pairs(&self, pairs: impl Iterator<Item = (usize, usize)>) -> (usize, usize, usize) {
+        let (mut intra, mut rail, mut spine) = (0usize, 0usize, 0usize);
+        for (a, b) in pairs {
+            match self.topo.path(a, b).worst_level() {
+                None | Some(TierLevel::Intra) => intra += 1,
+                Some(TierLevel::Rail) => rail += 1,
+                Some(TierLevel::Spine) => spine += 1,
+            }
+        }
+        (intra, rail, spine)
+    }
+
+    /// The group→tier traffic matrix: for each communication pattern,
+    /// how many of its member-pair transfers ride each tier. Collective
+    /// rows count ring-adjacent pairs of the worst group; pipeline rows
+    /// count the `dp·mp` simultaneous boundary transfers.
+    pub fn traffic_matrix(&self) -> Vec<TrafficRow> {
+        let mut rows = Vec::new();
+        let ring_pairs = |members: Vec<usize>| -> Vec<(usize, usize)> {
+            let n = members.len();
+            if n < 2 {
+                return Vec::new();
+            }
+            (0..n).map(|i| (members[i], members[(i + 1) % n])).collect()
+        };
+        let (mp_group, _) = self.worst_group(self.pp, self.dp, |p, d| self.mp_members(p, d));
+        let (i, r, s) = self.classify_pairs(ring_pairs(mp_group).into_iter());
+        rows.push(TrafficRow { kind: "MP all-reduce ring".into(), intra: i, rail: r, spine: s });
+        let (dp_group, _) = self.worst_group(self.pp, self.mp, |p, m| self.dp_members(p, m));
+        let (i, r, s) = self.classify_pairs(ring_pairs(dp_group).into_iter());
+        rows.push(TrafficRow { kind: "DP all-reduce ring".into(), intra: i, rail: r, spine: s });
+        if self.pp > 1 {
+            let boundary = |from: usize, to: usize| -> Vec<(usize, usize)> {
+                let mut v = Vec::new();
+                for d in 0..self.dp {
+                    for m in 0..self.mp {
+                        v.push((self.gpu(from, d, m), self.gpu(to, d, m)));
+                    }
+                }
+                v
+            };
+            let mut interior = Vec::new();
+            for st in 0..self.pp - 1 {
+                interior.extend(boundary(st, st + 1));
+            }
+            let (i, r, s) = self.classify_pairs(interior.into_iter());
+            rows.push(TrafficRow { kind: "PP boundaries".into(), intra: i, rail: r, spine: s });
+            let (i, r, s) = self.classify_pairs(boundary(self.pp - 1, 0).into_iter());
+            rows.push(TrafficRow { kind: "PP wrap-around".into(), intra: i, rail: r, spine: s });
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn perl() -> Platform {
+        Platform::perlmutter()
+    }
+
+    fn map(pp: usize, mp: usize, dp: usize, order: RankOrder, platform: &Platform) -> RankMap {
+        let par = ParallelCfg::new(pp, mp, dp).with_rank_order(order);
+        RankMap::new(&par, platform)
+    }
+
+    #[test]
+    fn flat_topology_paths_match_old_classification() {
+        let t = ClusterTopology::flat(&perl()); // 4 GPUs/node
+        assert!(t.path(0, 0).is_local());
+        let intra = t.path(0, 3);
+        assert_eq!(intra.worst_level(), Some(TierLevel::Intra));
+        assert_eq!(intra.hops.len(), 1);
+        let inter = t.path(0, 4);
+        assert_eq!(inter.worst_level(), Some(TierLevel::Rail));
+        assert_eq!(inter.hops.len(), 1);
+        assert_eq!(inter.hops[0].contention, 1.0);
+        // flat = one giant rail: no pair ever crosses a spine
+        assert_eq!(t.path(0, 127).fabric_hops(), 1);
+    }
+
+    #[test]
+    fn rail_spine_adds_a_hop_across_rails() {
+        let p = perl().with_topo(TopoSpec::RailSpine { nodes_per_rail: 4, spine_bw_frac: 0.5 });
+        let t = ClusterTopology::of(&p);
+        // nodes 0 and 3 share the first rail; node 4 sits on the second
+        let same_rail = t.path(0, 3 * 4);
+        assert_eq!(same_rail.fabric_hops(), 1);
+        let cross_rail = t.path(0, 4 * 4);
+        assert_eq!(cross_rail.fabric_hops(), 2);
+        assert_eq!(cross_rail.worst_level(), Some(TierLevel::Spine));
+        assert!(cross_rail.total_lat_us() > same_rail.total_lat_us());
+        assert!(cross_rail.bottleneck_bw_gbs() < same_rail.bottleneck_bw_gbs());
+        assert_eq!(cross_rail.tier_feature(), 3.0);
+    }
+
+    #[test]
+    fn contention_divides_finite_links_only() {
+        let p = perl();
+        let flat = ClusterTopology::flat(&p);
+        // uncounted links: contention stays 1 no matter the flow count
+        assert_eq!(flat.path_with_flows(0, 4, 16.0).hops[0].contention, 1.0);
+        let railed = ClusterTopology::of(
+            &p.with_topo(TopoSpec::RailSpine { nodes_per_rail: 8, spine_bw_frac: 0.5 }),
+        );
+        let contended = railed.path_with_flows(0, 4, 4.0);
+        assert_eq!(contended.hops[0].contention, 4.0);
+        let t1 = p2p_path_time_us(25e6, &railed.path(0, 4), 0.0);
+        let t4 = p2p_path_time_us(25e6, &contended, 0.0);
+        assert!(t4 > 2.0 * t1, "{t4} vs {t1}");
+    }
+
+    #[test]
+    fn tp_first_reproduces_historical_geometry() {
+        // The default rank order must agree with the closed-form
+        // geometry helpers everywhere the sweep space reaches.
+        for platform in [Platform::perlmutter(), Platform::vista()] {
+            for &pp in &[1usize, 2, 4, 8] {
+                for &mp in &[1usize, 2, 4, 8] {
+                    for &dp in &[1usize, 2, 4, 8] {
+                        let par = ParallelCfg::new(pp, mp, dp);
+                        let m = RankMap::new(&par, &platform);
+                        let (mn, mg) = par.mp_group_geometry(&platform);
+                        assert_eq!(
+                            m.mp_geom(),
+                            CommGeom::new(mn, mg),
+                            "mp geom {pp}-{mp}-{dp} on {}",
+                            platform.name
+                        );
+                        let (dn, dg) = par.dp_group_geometry(&platform);
+                        assert_eq!(
+                            m.dp_geom(),
+                            CommGeom::new(dn, dg),
+                            "dp geom {pp}-{mp}-{dp} on {}",
+                            platform.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dp_first_strides_mp_groups_across_nodes() {
+        // 4-4-8 on Perlmutter: tp-first keeps mp=4 on one node; dp-first
+        // puts the 4 MP members 8 ranks apart -> 4 distinct nodes.
+        let p = perl();
+        let tp = map(4, 4, 8, RankOrder::TpFirst, &p);
+        assert_eq!(tp.mp_geom(), CommGeom::new(1, 4));
+        let dpf = map(4, 4, 8, RankOrder::DpFirst, &p);
+        assert_eq!(dpf.mp_geom(), CommGeom::new(4, 1));
+        assert!(dpf.mp_fabric().is_inter_node());
+        assert!(tp.mp_fabric().is_local());
+        // and the DP groups collapse onto NVLink instead
+        assert_eq!(dpf.dp_geom(), CommGeom::new(2, 4));
+    }
+
+    #[test]
+    fn pp_first_makes_stage_boundaries_intra_node() {
+        let p = perl();
+        let ppf = map(4, 2, 2, RankOrder::PpFirst, &p);
+        // adjacent stages are 1 rank apart: NVLink hop
+        let path = ppf.pp_path(0, 1);
+        assert_eq!(path.worst_level(), Some(TierLevel::Intra));
+        let tpf = map(4, 2, 2, RankOrder::TpFirst, &p);
+        assert_eq!(tpf.pp_path(0, 1).worst_level(), Some(TierLevel::Rail));
+    }
+
+    #[test]
+    fn wrap_around_hop_gets_its_true_classification() {
+        // pp=4, dp*mp=2 < gpn=4 under tp-first: the 0->1 boundary stays
+        // on-node for some pairs but the wrap 3->0 spans 6 ranks — the
+        // old single inter/intra guess called BOTH intra.
+        let p = perl();
+        let m = map(4, 1, 2, RankOrder::TpFirst, &p);
+        let wrap = m.pp_path(3, 0);
+        assert_eq!(wrap.worst_level(), Some(TierLevel::Rail), "{wrap:?}");
+        let fwd = m.pp_fwd_paths();
+        assert_eq!(fwd.len(), 4);
+        assert_eq!(fwd[3], wrap);
+        let bwd = m.pp_bwd_paths();
+        assert_eq!(bwd[0], m.pp_path(0, 3));
+    }
+
+    #[test]
+    fn rank_map_is_a_bijection_for_every_order() {
+        for order in RankOrder::all() {
+            let m = map(2, 4, 3, order, &perl());
+            let mut seen = vec![false; 24];
+            for p in 0..2 {
+                for d in 0..3 {
+                    for t in 0..4 {
+                        let g = m.gpu(p, d, t);
+                        assert!(!seen[g], "{order}: duplicate gpu {g}");
+                        seen[g] = true;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&x| x));
+        }
+    }
+
+    #[test]
+    fn traffic_matrix_accounts_every_boundary_pair() {
+        let m = map(4, 4, 8, RankOrder::TpFirst, &perl());
+        let rows = m.traffic_matrix();
+        assert_eq!(rows.len(), 4);
+        let pp = rows.iter().find(|r| r.kind == "PP boundaries").unwrap();
+        // 3 interior boundaries x 32 (dp*mp) transfers
+        assert_eq!(pp.intra + pp.rail + pp.spine, 3 * 32);
+        assert_eq!(pp.intra, 0, "dp*mp=32 >= gpn: every boundary crosses nodes");
+        let wrap = rows.iter().find(|r| r.kind == "PP wrap-around").unwrap();
+        assert_eq!(wrap.intra + wrap.rail + wrap.spine, 32);
+        let mp = rows.iter().find(|r| r.kind == "MP all-reduce ring").unwrap();
+        assert_eq!(mp.rail + mp.spine, 0, "mp=4 fits one Perlmutter node");
+    }
+
+    #[test]
+    fn single_hop_path_time_matches_p2p_formula_shape() {
+        let p = perl();
+        let bytes = 25e6;
+        let inter = p2p_path_time_us(bytes, &NetPath::flat_inter(&p), p.gpu.launch_us);
+        let expect = bytes / (p.inter_bw_gbs * rdma_efficiency(bytes) * 1e9) * 1e6
+            + p.inter_lat_us
+            + p.gpu.launch_us;
+        assert_eq!(inter, expect);
+        let local = p2p_path_time_us(bytes, &NetPath::local(), p.gpu.launch_us);
+        assert_eq!(local, p.gpu.launch_us);
+    }
+
+    #[test]
+    fn rank_order_parse_label_roundtrip() {
+        for o in RankOrder::all() {
+            assert_eq!(RankOrder::parse(o.label()), Some(o));
+        }
+        assert_eq!(RankOrder::parse("megatron"), Some(RankOrder::TpFirst));
+        assert!(RankOrder::parse("column-major").is_none());
+        assert_eq!(RankOrder::default(), RankOrder::TpFirst);
+    }
+}

@@ -5,11 +5,14 @@
 
 use crate::config::{ModelCfg, Norm, ParallelCfg, Platform};
 use crate::hw::{GemmShape, MemOpKind};
+use crate::net::topology::{NetPath, RankMap};
 use crate::net::CommGeom;
 use crate::ops::params::padded_vocab;
 use crate::ops::{Dir, LoweredOp, OpInstance, OpKind};
 
 /// Resolved per-GPU workload context shared by all operator builders.
+/// Communication geometry and paths come from the configuration's
+/// [`RankMap`] (placement-derived), not from closed-form guesses.
 #[derive(Clone, Debug)]
 pub struct Workload {
     /// Micro-batch size b.
@@ -24,22 +27,31 @@ pub struct Workload {
     pub v: usize,
     /// Model-parallel degree |mp|.
     pub mp: usize,
-    /// MP collective geometry on the target platform.
+    /// MP collective geometry under the rank map.
     pub mp_geom: CommGeom,
-    /// DP collective geometry on the target platform.
+    /// DP collective geometry under the rank map.
     pub dp_geom: CommGeom,
+    /// Fabric path of the MP group's inter-node stage (local when the
+    /// group fits one node).
+    pub mp_fabric: NetPath,
+    /// Fabric path of the DP group's inter-node stage.
+    pub dp_fabric: NetPath,
     /// Data-parallel degree |dp|.
     pub dp: usize,
-    /// Whether the PP stage boundary crosses nodes.
-    pub pp_inter_node: bool,
+    /// Per-stage forward-direction boundary paths: entry `s` is the hop
+    /// stage `s` sends activations over (`(s+1) % pp`; the last entry is
+    /// the interleaved wrap-around hop). Empty when `pp == 1`.
+    pub pp_fwd_paths: Vec<NetPath>,
+    /// Per-stage backward-direction boundary paths (`(s-1+pp) % pp`;
+    /// entry 0 is the backward wrap). Empty when `pp == 1`.
+    pub pp_bwd_paths: Vec<NetPath>,
 }
 
 impl Workload {
     pub fn new(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> Workload {
         assert_eq!(model.h % par.mp, 0, "heads must divide mp");
         assert_eq!(model.d % model.h, 0, "d must divide h");
-        let (mp_nodes, mp_gpn) = par.mp_group_geometry(platform);
-        let (dp_nodes, dp_gpn) = par.dp_group_geometry(platform);
+        let map = RankMap::new(par, platform);
         Workload {
             b: model.micro_batch,
             l: model.l,
@@ -47,10 +59,13 @@ impl Workload {
             h: model.h,
             v: padded_vocab(model.vocab, par.mp),
             mp: par.mp,
-            mp_geom: CommGeom::new(mp_nodes, mp_gpn),
-            dp_geom: CommGeom::new(dp_nodes, dp_gpn),
+            mp_geom: map.mp_geom(),
+            dp_geom: map.dp_geom(),
+            mp_fabric: map.mp_fabric(),
+            dp_fabric: map.dp_fabric(),
             dp: par.dp,
-            pp_inter_node: par.pp_hop_is_inter_node(platform),
+            pp_fwd_paths: map.pp_fwd_paths(),
+            pp_bwd_paths: map.pp_bwd_paths(),
         }
     }
 
@@ -67,8 +82,8 @@ impl Workload {
         dp: usize,
     ) -> Workload {
         let par = ParallelCfg::new(1, mp, dp.max(1));
-        let (mp_nodes, mp_gpn) = par.mp_group_geometry(platform);
-        let (dp_nodes, dp_gpn) = par.dp_group_geometry(platform);
+        let map = RankMap::new(&par, platform);
+        let (mp_geom, dp_geom) = (map.mp_geom(), map.dp_geom());
         Workload {
             b,
             l,
@@ -76,10 +91,15 @@ impl Workload {
             h,
             v: padded_vocab(v, mp),
             mp,
-            mp_geom: CommGeom::new(mp_nodes, mp_gpn),
-            dp_geom: CommGeom::new(dp_nodes, dp_gpn),
+            mp_geom,
+            dp_geom,
+            mp_fabric: NetPath::fabric_for(mp_geom, platform),
+            dp_fabric: NetPath::fabric_for(dp_geom, platform),
             dp: dp.max(1),
-            pp_inter_node: true,
+            // single-stage synthetic pipelines keep the historical "the
+            // boundary would be inter-node" stand-in for benchmark ops
+            pp_fwd_paths: vec![NetPath::flat_inter(platform)],
+            pp_bwd_paths: vec![NetPath::flat_inter(platform)],
         }
     }
 
@@ -229,7 +249,11 @@ pub fn mp_allreduce(wl: &Workload) -> OpInstance {
         kind: OpKind::MpAllReduce,
         dir: Dir::Fwd,
         features: vec![bld, wl.mp_geom.nodes as f64, wl.mp_geom.gpus_per_node as f64],
-        lowered: LoweredOp::AllReduce { bytes: bld * FP16, geom: wl.mp_geom },
+        lowered: LoweredOp::AllReduce {
+            bytes: bld * FP16,
+            geom: wl.mp_geom,
+            fabric: wl.mp_fabric.clone(),
+        },
     }
 }
 
@@ -239,7 +263,11 @@ pub fn dp_allreduce(entries: f64, wl: &Workload) -> OpInstance {
         kind: OpKind::DpAllReduce,
         dir: Dir::Fwd,
         features: vec![entries, wl.dp_geom.nodes as f64, wl.dp_geom.gpus_per_node as f64],
-        lowered: LoweredOp::AllReduce { bytes: entries * FP16, geom: wl.dp_geom },
+        lowered: LoweredOp::AllReduce {
+            bytes: entries * FP16,
+            geom: wl.dp_geom,
+            fabric: wl.dp_fabric.clone(),
+        },
     }
 }
 
@@ -249,24 +277,40 @@ pub fn dp_allgather(entries: f64, wl: &Workload) -> OpInstance {
         kind: OpKind::DpAllGather,
         dir: Dir::Fwd,
         features: vec![entries, wl.dp_geom.nodes as f64, wl.dp_geom.gpus_per_node as f64],
-        lowered: LoweredOp::AllGather { bytes_out: entries * FP16, geom: wl.dp_geom },
+        lowered: LoweredOp::AllGather {
+            bytes_out: entries * FP16,
+            geom: wl.dp_geom,
+            fabric: wl.dp_fabric.clone(),
+        },
     }
 }
 
-/// PP_P2P boundary transfer: bld/|mp| fp16 elements (Megatron
-/// scatter-gather optimization), billed to the sender stage.
-pub fn pp_p2p(wl: &Workload) -> OpInstance {
+/// One PP_P2P boundary transfer over an explicit path: bld/|mp| fp16
+/// elements (Megatron scatter-gather optimization). The second feature
+/// encodes the path class (1 intra / 2 rail / 3 spine), preserving the
+/// historical `inter ? 2 : 1` values on flat topologies.
+fn pp_p2p_on(wl: &Workload, path: &NetPath) -> OpInstance {
     let elems = (wl.b * wl.l * wl.d) as f64 / wl.mp as f64;
     OpInstance {
         kind: OpKind::PpP2p,
         dir: Dir::Fwd,
-        features: vec![
-            elems,
-            if wl.pp_inter_node { 2.0 } else { 1.0 },
-            wl.mp_geom.gpus_per_node as f64,
-        ],
-        lowered: LoweredOp::P2p { bytes: elems * FP16, inter_node: wl.pp_inter_node },
+        features: vec![elems, path.tier_feature(), wl.mp_geom.gpus_per_node as f64],
+        lowered: LoweredOp::P2p { bytes: elems * FP16, path: path.clone() },
     }
+}
+
+/// The forward-direction boundary transfer SENT by physical `stage`
+/// (activations to the next stage; the last stage's entry is the
+/// interleaved wrap-around hop back to stage 0, with its own true path).
+pub fn pp_p2p_fwd(wl: &Workload, stage: usize) -> OpInstance {
+    pp_p2p_on(wl, &wl.pp_fwd_paths[stage])
+}
+
+/// The backward-direction boundary transfer SENT by physical `stage`
+/// (input gradients to the previous stage; stage 0's entry is the
+/// backward wrap-around hop).
+pub fn pp_p2p_bwd(wl: &Workload, stage: usize) -> OpInstance {
+    pp_p2p_on(wl, &wl.pp_bwd_paths[stage])
 }
 
 /// FusedAdam update over `dim` local parameters
@@ -359,6 +403,25 @@ mod tests {
         assert_eq!(w.head_dim(), 96);
         assert_eq!(w.mp_geom, CommGeom::new(1, 4)); // mp=4 fits one node
         assert_eq!(w.dp_geom, CommGeom::new(8, 1)); // dp members across nodes
+        assert!(w.mp_fabric.is_local()); // intra-node group: no fabric stage
+        assert!(w.dp_fabric.is_inter_node());
+        // pp=4: one boundary path per stage, the last being the wrap
+        assert_eq!(w.pp_fwd_paths.len(), 4);
+        assert!(w.pp_fwd_paths.iter().all(|p| p.is_inter_node()));
+    }
+
+    #[test]
+    fn dp_first_rank_order_flips_mp_onto_the_fabric() {
+        // Same degrees, different placement: dp-first strides the MP
+        // group across nodes, so its all-reduce rides the rail tier.
+        use crate::net::topology::RankOrder;
+        let m = ModelCfg::gpt20b();
+        let p = Platform::perlmutter();
+        let par = ParallelCfg::new(4, 4, 8).with_rank_order(RankOrder::DpFirst);
+        let w = Workload::new(&m, &par, &p);
+        assert_eq!(w.mp_geom, CommGeom::new(4, 1));
+        assert!(w.mp_fabric.is_inter_node());
+        assert!(mp_allreduce(&w).lowered.is_inter_node());
     }
 
     #[test]
@@ -467,10 +530,33 @@ mod tests {
         let ar = mp_allreduce(&w);
         assert_eq!(ar.features.len(), 3);
         assert_eq!(ar.features[0], (4 * 2048 * 6144) as f64);
-        let p2p = pp_p2p(&w);
+        let p2p = pp_p2p_fwd(&w, 0);
         assert_eq!(p2p.features[0], (4 * 2048 * 6144 / 4) as f64);
+        // dp*mp = 32 >= gpn: the boundary rides the rail tier -> 2.0,
+        // the historical inter-node feature value
+        assert_eq!(p2p.features[1], 2.0);
         let opt = optimizer(1e8, 11, &w);
         assert_eq!(opt.features, vec![4.0, 1e8, 11.0]);
+    }
+
+    #[test]
+    fn wrap_around_send_has_its_own_path() {
+        // pp=4, mp=1, dp=2 on Perlmutter (dp*mp=2 < gpn=4): the 0->1
+        // boundary stays on-node, but the last stage's forward send is
+        // the wrap hop back to stage 0 — 6 ranks away, across nodes.
+        let m = ModelCfg::gpt20b();
+        let p = Platform::perlmutter();
+        let par = ParallelCfg::new(4, 1, 2);
+        let w = Workload::new(&m, &par, &p);
+        let interior = pp_p2p_fwd(&w, 0);
+        let wrap = pp_p2p_fwd(&w, 3);
+        assert_eq!(interior.features[1], 1.0, "{:?}", w.pp_fwd_paths[0]);
+        assert_eq!(wrap.features[1], 2.0, "{:?}", w.pp_fwd_paths[3]);
+        assert!(!interior.lowered.is_inter_node());
+        assert!(wrap.lowered.is_inter_node());
+        // backward wrap mirrors it on stage 0
+        assert!(pp_p2p_bwd(&w, 0).lowered.is_inter_node());
+        assert!(!pp_p2p_bwd(&w, 1).lowered.is_inter_node());
     }
 
     #[test]

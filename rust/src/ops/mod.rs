@@ -12,6 +12,7 @@ pub mod params;
 pub use build::Workload;
 
 use crate::hw::{GemmShape, MemOpKind};
+use crate::net::topology::{NetPath, TierLevel};
 use crate::net::CommGeom;
 
 /// The fundamental operator vocabulary (Table I).
@@ -126,6 +127,11 @@ impl Dir {
 }
 
 /// Lowered form: what the cluster simulator actually executes.
+/// Communication lowerings carry the resolved [`NetPath`] their traffic
+/// rides (per-hop bandwidth/latency/contention) instead of the old
+/// `inter_node: bool` classification; collectives keep the group
+/// geometry for the hierarchical model and add the fabric path of their
+/// inter-node stage.
 #[derive(Clone, Debug, PartialEq)]
 pub enum LoweredOp {
     Gemm(GemmShape),
@@ -137,9 +143,9 @@ pub enum LoweredOp {
     },
     /// FlashAttention: fused compute with its own efficiency profile.
     Flash { flops: f64, bytes: f64 },
-    AllReduce { bytes: f64, geom: CommGeom },
-    AllGather { bytes_out: f64, geom: CommGeom },
-    P2p { bytes: f64, inter_node: bool },
+    AllReduce { bytes: f64, geom: CommGeom, fabric: NetPath },
+    AllGather { bytes_out: f64, geom: CommGeom, fabric: NetPath },
+    P2p { bytes: f64, path: NetPath },
     /// Several primitives executed back-to-back (e.g. a backward pass's
     /// dgrad + wgrad GEMM pair).
     Seq(Vec<LoweredOp>),
@@ -155,15 +161,54 @@ impl LoweredOp {
         }
     }
 
-    /// Does any part cross the inter-node fabric? (drives jitter class)
+    /// Does any part cross the inter-node fabric? (drives the
+    /// correlated fabric-state multiplier)
     pub fn is_inter_node(&self) -> bool {
         match self {
-            LoweredOp::AllReduce { geom, .. } | LoweredOp::AllGather { bytes_out: _, geom } => {
+            LoweredOp::AllReduce { geom, .. } | LoweredOp::AllGather { geom, .. } => {
                 geom.nodes > 1
             }
-            LoweredOp::P2p { inter_node, .. } => *inter_node,
+            LoweredOp::P2p { path, .. } => path.is_inter_node(),
             LoweredOp::Seq(v) => v.iter().any(|o| o.is_inter_node()),
             _ => false,
+        }
+    }
+
+    /// Deepest network tier any part of this op touches — `None` for
+    /// pure compute. Drives the per-tier jitter sigma (intra vs rail vs
+    /// spine) instead of the old two-way inter/intra split.
+    pub fn worst_tier(&self) -> Option<TierLevel> {
+        match self {
+            LoweredOp::AllReduce { geom, fabric, .. }
+            | LoweredOp::AllGather { geom, fabric, .. } => {
+                if geom.nodes > 1 {
+                    Some(fabric.worst_level().unwrap_or(TierLevel::Rail))
+                } else {
+                    Some(TierLevel::Intra)
+                }
+            }
+            LoweredOp::P2p { path, .. } => Some(path.worst_level().unwrap_or(TierLevel::Intra)),
+            LoweredOp::Seq(v) => v.iter().filter_map(|o| o.worst_tier()).max(),
+            _ => None,
+        }
+    }
+
+    /// Number of fabric (rail/spine) hops the op's traffic crosses —
+    /// each is an independent congestion opportunity in the jitter
+    /// model (per-tier congestion, not one global draw).
+    pub fn fabric_hops(&self) -> usize {
+        match self {
+            LoweredOp::AllReduce { geom, fabric, .. }
+            | LoweredOp::AllGather { geom, fabric, .. } => {
+                if geom.nodes > 1 {
+                    fabric.fabric_hops().max(1)
+                } else {
+                    0
+                }
+            }
+            LoweredOp::P2p { path, .. } => path.fabric_hops(),
+            LoweredOp::Seq(v) => v.iter().map(|o| o.fabric_hops()).max().unwrap_or(0),
+            _ => 0,
         }
     }
 }
@@ -220,12 +265,30 @@ mod tests {
 
     #[test]
     fn lowered_inter_node_detection() {
-        let intra = LoweredOp::AllReduce { bytes: 1e6, geom: CommGeom::new(1, 4) };
-        let inter = LoweredOp::AllReduce { bytes: 1e6, geom: CommGeom::new(4, 1) };
+        let p = crate::config::Platform::perlmutter();
+        let intra = LoweredOp::AllReduce {
+            bytes: 1e6,
+            geom: CommGeom::new(1, 4),
+            fabric: NetPath::local(),
+        };
+        let inter = LoweredOp::AllReduce {
+            bytes: 1e6,
+            geom: CommGeom::new(4, 1),
+            fabric: NetPath::flat_inter(&p),
+        };
         assert!(!intra.is_inter_node());
         assert!(inter.is_inter_node());
+        assert_eq!(intra.worst_tier(), Some(TierLevel::Intra));
+        assert_eq!(inter.worst_tier(), Some(TierLevel::Rail));
+        assert_eq!(intra.fabric_hops(), 0);
+        assert_eq!(inter.fabric_hops(), 1);
         let seq = LoweredOp::Seq(vec![intra, inter]);
         assert!(seq.is_inter_node() && seq.is_comm());
+        assert_eq!(seq.worst_tier(), Some(TierLevel::Rail));
+        // pure compute carries no tier at all
+        let gemm = LoweredOp::Gemm(GemmShape::new(8, 8, 8));
+        assert_eq!(gemm.worst_tier(), None);
+        assert_eq!(gemm.fabric_hops(), 0);
     }
 
     #[test]

@@ -18,9 +18,12 @@
 //! their own stage's input-grad task. Every crossing between distinct
 //! physical stages is a real transfer billed as sender-side occupancy
 //! `(1-α)·send` — the configurable compute/communication overlap — while
-//! the receiver always waits the full `send` wall-clock. Chunk transfers
-//! carry full-size boundary activations, so interleaved-1F1B pays the
-//! true `v`× crossings the folded model used to undercount.
+//! the receiver always waits the full `send` wall-clock and then spends
+//! `(1-α)·recv` of copy-in occupancy before the consuming task can run
+//! (the receiver-side mirror of the sender's hold, behind the same α
+//! knob). Chunk transfers carry full-size boundary activations, so
+//! interleaved-1F1B pays the true `v`× crossings the folded model used
+//! to undercount.
 
 use std::collections::VecDeque;
 
@@ -169,6 +172,7 @@ pub fn execute(
     let mut fa = vec![vec![f64::NAN; vm]; s_count]; // fwd payload arrival
     let mut ba = vec![vec![f64::NAN; vm]; s_count]; // bwd payload arrival
     let mut send_busy = vec![0.0f64; s_count];
+    let mut recv_busy = vec![0.0f64; s_count];
     let mut cursor = vec![0usize; s_count]; // next task index per stage
     let mut avail = vec![0.0f64; s_count]; // stage-free instant
     let mut queued = vec![true; s_count];
@@ -227,7 +231,21 @@ pub fn execute(
                 }
             };
             let Some(ready) = dep else { break };
-            let start = ready.max(avail[s]);
+            // receiver-side copy-in: a payload that crossed a physical
+            // stage boundary occupies the receiving stage for
+            // `(1-α)·recv` after arrival, before the consuming task runs
+            // (the mirror of the sender's `(1-α)·send` hold).
+            let copy = match t.kind {
+                TaskKind::Fwd if vidx > 0 && s_count > 1 => {
+                    occupancy * times.fwd_send[(vidx - 1) % s_count][t.mb]
+                }
+                TaskKind::Bwd if vidx < v_stages - 1 && s_count > 1 => {
+                    occupancy * times.bwd_send[(vidx + 1) % s_count][t.mb]
+                }
+                _ => 0.0,
+            };
+            let start = ready.max(avail[s]) + copy;
+            recv_busy[s] += copy;
             let dur = match t.kind {
                 TaskKind::Fwd => times.fwd[s][t.mb] / v as f64,
                 TaskKind::Bwd => times.bwd[s][t.mb] / v as f64 * (1.0 - wgt_frac),
@@ -306,6 +324,7 @@ pub fn execute(
         fwd_arrive: fa,
         bwd_arrive: ba,
         send_busy,
+        recv_busy,
     })
 }
 

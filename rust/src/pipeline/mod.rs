@@ -23,8 +23,10 @@ pub use schedule::{
 /// `max_update` is the max over stages of Optimizer + DP_AllGather(stage
 /// params / |dp|). The schedule subsystem generalizes this via
 /// [`PipelineSchedule::closed_form_runtime_us`], which takes the
-/// compute/communication SPLIT inputs ([`ClosedFormInputs`]) and reduces
-/// to this exact expression at `p2p_overlap = 0` with folded times.
+/// compute/communication SPLIT inputs ([`ClosedFormInputs`]); with both
+/// endpoint occupancies modeled (sender hold + receiver copy-in), its
+/// α = 0 reduction folds each crossing into BOTH adjacent stages'
+/// compute rather than this sender-only historical form.
 pub fn eq7_runtime_us(
     micro_batches: usize,
     pipeline_stages: usize,

@@ -169,7 +169,9 @@ impl Task {
 /// when no crossing exists). `wgt_start`/`wgt_end` are populated only for
 /// schedules that split the backward (`wgt_frac() > 0`); otherwise the
 /// inner vectors are empty. `send_busy[s]` is the total sender-side P2P
-/// occupancy `(1-α)·send` charged to stage `s`.
+/// occupancy `(1-α)·send` charged to stage `s`; `recv_busy[s]` is the
+/// mirrored receiver-side copy-in occupancy `(1-α)·recv` it pays before
+/// each consuming task.
 #[derive(Clone, Debug)]
 pub struct Schedule {
     /// Virtual chunks per physical stage (1 except interleaved-1F1B).
@@ -183,6 +185,7 @@ pub struct Schedule {
     pub fwd_arrive: Vec<Vec<f64>>,
     pub bwd_arrive: Vec<Vec<f64>>,
     pub send_busy: Vec<f64>,
+    pub recv_busy: Vec<f64>,
 }
 
 impl Schedule {
@@ -214,7 +217,7 @@ impl Schedule {
     }
 
     /// Total busy time of one stage: compute intervals plus sender-side
-    /// P2P occupancy.
+    /// and receiver-side P2P occupancy.
     pub fn busy_us(&self, stage: usize) -> f64 {
         let span = |s: &[f64], e: &[f64]| -> f64 {
             s.iter().zip(e).map(|(a, b)| b - a).sum::<f64>()
@@ -223,6 +226,7 @@ impl Schedule {
             + span(&self.bwd_start[stage], &self.bwd_end[stage])
             + span(&self.wgt_start[stage], &self.wgt_end[stage])
             + self.send_busy[stage]
+            + self.recv_busy[stage]
     }
 
     /// Pipeline bubble fraction for a stage: idle / makespan. Degenerate
@@ -347,15 +351,18 @@ fn one_f_one_b_order(stage: usize, stages: usize, m: usize) -> Vec<Task> {
 }
 
 /// Shared steady-phase closed-form skeleton:
-/// `m·(f + b) + steady_send_occupancy + bubble + sync + update`, where
-/// the bubble term carries the fill/drain crossings (2 exposed transfers
-/// per pipeline depth step). At α = 0 and v = 1 this is EXACTLY the
-/// historical folded eq (7): `(m - 1 + S)(f + c + b + c)`.
+/// `m·(f + b) + steady_occupancy + bubble + sync + update`, where every
+/// steady crossing charges BOTH endpoints `(1-α)·c` (sender hold +
+/// receiver copy-in) and the bubble term carries the fill/drain
+/// crossings (2 exposed transfers per pipeline depth step). At α = 0 and
+/// v = 1 the steady term reduces to `4·m·c` — the both-endpoints folded
+/// model (each crossing folds into the producing task's AND the
+/// consuming task's compute; see `prop_zero_p2p_reduces_to_folded_model`).
 fn steady_closed_form(inp: &ClosedFormInputs, sends_per_mb: f64, bubble_per_step: f64) -> f64 {
     let (m, s) = (inp.micro_batches as f64, inp.stages as f64);
     let (c, o) = inp.p2p_terms();
     m * (inp.max_fwd + inp.max_bwd)
-        + m * sends_per_mb * o
+        + m * sends_per_mb * 2.0 * o
         + (s - 1.0) * (bubble_per_step + 2.0 * c)
         + inp.first_stage_sync
         + inp.max_update
@@ -892,9 +899,13 @@ mod tests {
     }
 
     #[test]
-    fn closed_form_alpha_zero_matches_folded_eq7() {
-        // With α = 0 the 1F1B closed form must equal the historical
-        // folded eq (7): (m - 1 + S)(f + c + b + c).
+    fn closed_form_alpha_zero_charges_both_endpoints() {
+        // With α = 0 every steady crossing costs its sender hold AND its
+        // receiver copy-in: the 1F1B closed form must equal
+        //   m(f+b) + 4mc + (S-1)(f + b + 2c) + sync + upd
+        // spelled out by hand. (Before receiver-side occupancy was
+        // modeled, this test pinned the sender-only folded eq (7),
+        // (m-1+S)(f+c+b+c).)
         let (m, s, f, b, c) = (16, 4, 3.0, 5.0, 0.7);
         let inp = ClosedFormInputs {
             micro_batches: m,
@@ -907,9 +918,17 @@ mod tests {
             max_update: 3.0,
         };
         let split = ScheduleKind::OneFOneB.closed_form_runtime_us(&inp);
-        let folded =
-            crate::pipeline::eq7_runtime_us(m, s, f + c, b + c, 11.0, 3.0);
-        assert!((split - folded).abs() < 1e-9, "{split} vs {folded}");
+        let (mf, sf) = (m as f64, s as f64);
+        let expect = mf * (f + b) + 4.0 * mf * c + (sf - 1.0) * (f + b + 2.0 * c) + 11.0 + 3.0;
+        assert!((split - expect).abs() < 1e-9, "{split} vs {expect}");
+        // at α = 1 only the raw wall-clock crossings of fill/drain remain
+        let overlapped =
+            ScheduleKind::OneFOneB.closed_form_runtime_us(&ClosedFormInputs {
+                p2p_overlap: 1.0,
+                ..inp
+            });
+        let expect_ov = mf * (f + b) + (sf - 1.0) * (f + b + 2.0 * c) + 11.0 + 3.0;
+        assert!((overlapped - expect_ov).abs() < 1e-9, "{overlapped} vs {expect_ov}");
     }
 
     #[test]
@@ -937,9 +956,10 @@ mod tests {
             - ScheduleKind::OneFOneB.closed_form_runtime_us(&base);
         let ilv = ScheduleKind::Interleaved1F1B { chunks: 4 };
         let d_ilv = ilv.closed_form_runtime_us(&with_c) - ilv.closed_form_runtime_us(&base);
-        // 1F1B: 2·m·c + 2(S-1)c = 38c; ilv v=4: 8·m·c + 2(S-1)c = 134c
-        assert!((d_1f1b - 38.0 * 10.0).abs() < 1e-9, "{d_1f1b}");
-        assert!((d_ilv - 134.0 * 10.0).abs() < 1e-9, "{d_ilv}");
+        // both endpoints pay (1-α)c per crossing:
+        // 1F1B: 2·m·2c + 2(S-1)c = 70c; ilv v=4: 8·m·2c + 2(S-1)c = 262c
+        assert!((d_1f1b - 70.0 * 10.0).abs() < 1e-9, "{d_1f1b}");
+        assert!((d_ilv - 262.0 * 10.0).abs() < 1e-9, "{d_ilv}");
     }
 
     #[test]
@@ -1000,14 +1020,19 @@ mod tests {
             .with_overlap(0.4);
         let s = one_f_one_b(&t);
         for i in 0..2 {
-            // arrival = sender compute end + full wall transfer
+            // arrival = sender compute end + full wall transfer; the
+            // consuming task additionally waits out the copy-in
             assert!((s.fwd_arrive[0][i] - (s.fwd_end[0][i] + 1.5)).abs() < 1e-12);
-            assert!(s.fwd_start[1][i] >= s.fwd_arrive[0][i] - 1e-12);
+            assert!(s.fwd_start[1][i] >= s.fwd_arrive[0][i] + 0.6 * 1.5 - 1e-12);
         }
         // sender occupancy = (1 - α)·send per crossing; stage 0 sends two
         // forward crossings, stage 1 two backward crossings
         assert!((s.send_busy[0] - 2.0 * 0.6 * 1.5).abs() < 1e-12, "{:?}", s.send_busy);
         assert!((s.send_busy[1] - 2.0 * 0.6 * 1.5).abs() < 1e-12, "{:?}", s.send_busy);
+        // receiver copy-in mirrors it: stage 1 receives two forward
+        // payloads, stage 0 two backward payloads
+        assert!((s.recv_busy[1] - 2.0 * 0.6 * 1.5).abs() < 1e-12, "{:?}", s.recv_busy);
+        assert!((s.recv_busy[0] - 2.0 * 0.6 * 1.5).abs() < 1e-12, "{:?}", s.recv_busy);
     }
 
     #[test]

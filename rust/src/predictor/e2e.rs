@@ -161,7 +161,8 @@ pub fn predict(
                 p.fwd_ops
                     .iter()
                     .chain(p.bwd_ops.iter())
-                    .chain(p.pp_p2p.iter())
+                    .chain(p.pp_send_fwd.iter())
+                    .chain(p.pp_send_bwd.iter())
                     .chain(std::iter::once(&p.dp_allreduce))
                     .chain(std::iter::once(&p.dp_allgather))
                     .chain(std::iter::once(&p.optimizer))
@@ -188,12 +189,27 @@ pub fn predict(
         mp_ars.extend(ars_b);
     }
 
-    // One boundary crossing (same payload on every stage boundary);
-    // 0.0 — never NaN — for single-stage pipelines with no boundary.
-    let p2p_us = plans[0]
-        .pp_p2p
-        .as_ref()
-        .map_or(0.0, |op| cache.predict(pred, op));
+    // Worst boundary crossing the CONFIGURED schedule actually
+    // traverses (per-stage paths can differ — the wrap-around hop may
+    // cross deeper tiers, but only interleaved chunk walks take it, so
+    // charging 1F1B's closed form for it would inflate every steady
+    // crossing). On a flat topology every op is identical, reproducing
+    // the historical single prediction. 0.0 — never NaN — for
+    // single-stage pipelines with no boundary.
+    let wraps = matches!(par.schedule, crate::pipeline::ScheduleKind::Interleaved1F1B { chunks } if chunks > 1);
+    let mut p2p_us = 0.0f64;
+    for (s, plan) in plans.iter().enumerate() {
+        if let Some(op) = &plan.pp_send_fwd {
+            if wraps || s + 1 < plans.len() {
+                p2p_us = p2p_us.max(cache.predict(pred, op));
+            }
+        }
+        if let Some(op) = &plan.pp_send_bwd {
+            if wraps || s > 0 {
+                p2p_us = p2p_us.max(cache.predict(pred, op));
+            }
+        }
+    }
 
     let dp_first = cache.predict(pred, &plans[0].dp_allreduce);
     let mut max_update = f64::NEG_INFINITY;
@@ -304,6 +320,27 @@ mod tests {
         // larger (v x the steady crossings)
         assert!(base.pp_p2p_us > 0.0 && base.pp_p2p_exposed_us > 0.0);
         assert!(ilv.pp_p2p_exposed_us > base.pp_p2p_exposed_us);
+    }
+
+    #[test]
+    fn rank_map_ordering_changes_predicted_total() {
+        // Acceptance: a TP-spanning-nodes placement must predict
+        // measurably slower. dp-first strides GPT-20B's mp=4 group across
+        // 4 Perlmutter nodes, pushing every MP all-reduce onto the rail
+        // tier; tp-first keeps it on NVLink.
+        use crate::net::topology::RankOrder;
+        let (m, par, p) = cfg();
+        let mut oracle = OraclePredictor { platform: p.clone() };
+        let tp = predict(&m, &par, &p, &mut oracle);
+        let dpf = predict(&m, &par.with_rank_order(RankOrder::DpFirst), &p, &mut oracle);
+        assert!(
+            dpf.total_us > 1.2 * tp.total_us,
+            "dp-first {} vs tp-first {}",
+            dpf.total_us,
+            tp.total_us
+        );
+        assert!(dpf.mp_allreduce_us > 5.0 * tp.mp_allreduce_us);
+        assert_eq!(dpf.label, "GPT-20B(4-4-8@dp-first)");
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub fn fig2_markdown(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -
     let plans = stage_plans(model, par, platform);
     let sim = crate::sim::ClusterSim::new(platform.clone(), 1);
     let p2p_det = plans[0]
-        .pp_p2p
+        .pp_send_fwd
         .as_ref()
         .map_or(0.0, |op| sim.deterministic_us(&op.lowered));
     let times = TaskTimes::compute(

@@ -2,6 +2,7 @@
 //! prediction errors), and the pipeline-schedule comparison generators.
 
 use crate::config::{ModelCfg, ParallelCfg, Platform};
+use crate::net::topology::{ClusterTopology, RankMap};
 use crate::pipeline::{execute, ScheduleError, ScheduleKind, TaskTimes};
 use crate::predictor::errors::ComponentErrors;
 use crate::predictor::registry::BatchPredictor;
@@ -167,6 +168,77 @@ pub fn schedule_compare_markdown(
     ))
 }
 
+/// `fgpm topo`: cluster tiers, group geometries under the rank map, the
+/// group→tier traffic matrix, and every pipeline boundary's resolved
+/// path (the wrap-around hop included) with its per-hop time for a
+/// reference payload.
+pub fn topo_markdown(par: &ParallelCfg, platform: &Platform, payload_mb: f64) -> String {
+    use crate::net::topology::p2p_path_time_us;
+    let topo = ClusterTopology::of(platform);
+    let map = RankMap::new(par, platform);
+    let bytes = payload_mb * 1e6;
+
+    let tier_rows: Vec<Vec<String>> = topo
+        .tier_rows()
+        .into_iter()
+        .map(|(name, bw, lat, cap)| {
+            vec![
+                name.to_string(),
+                format!("{bw:.0}"),
+                format!("{lat:.1}"),
+                if cap.is_finite() { format!("{cap:.0}") } else { "∞".to_string() },
+            ]
+        })
+        .collect();
+    let tiers = markdown_table(
+        &["tier".into(), "GB/s".into(), "lat µs".into(), "flows/link".into()],
+        &tier_rows,
+    );
+
+    let traffic_rows: Vec<Vec<String>> = map
+        .traffic_matrix()
+        .into_iter()
+        .map(|r| {
+            vec![r.kind, r.intra.to_string(), r.rail.to_string(), r.spine.to_string()]
+        })
+        .collect();
+    let traffic = markdown_table(
+        &["group traffic".into(), "intra".into(), "rail".into(), "spine".into()],
+        &traffic_rows,
+    );
+
+    let mut s = format!(
+        "# Topology — {} ({}) under rank map `{}`, topo `{}`\n\n\
+         MP group: {:?} fabric {} · DP group: {:?} fabric {}\n\n{tiers}\n{traffic}",
+        platform.name,
+        par.label(),
+        par.rank_order.label(),
+        platform.topo.label(),
+        map.mp_geom(),
+        map.mp_fabric().describe(),
+        map.dp_geom(),
+        map.dp_fabric().describe(),
+    );
+    if par.pp > 1 {
+        s.push('\n');
+        let mut rows = Vec::new();
+        for (st, path) in map.pp_fwd_paths().iter().enumerate() {
+            let to = (st + 1) % par.pp;
+            let label = if to == (st + 1) { format!("stage {st} → {to}") } else { format!("stage {st} → {to} (wrap)") };
+            rows.push(vec![
+                label,
+                path.describe(),
+                format!("{:.1}", p2p_path_time_us(bytes, path, platform.gpu.launch_us)),
+            ]);
+        }
+        s.push_str(&markdown_table(
+            &["PP boundary (fwd)".into(), "path".into(), format!("µs @ {payload_mb:.0} MB")],
+            &rows,
+        ));
+    }
+    s
+}
+
 /// Table IX over one platform given a ready BatchPredictor.
 pub fn table9_errors(
     platform: &Platform,
@@ -295,6 +367,24 @@ mod tests {
         assert!(md.contains("| 1f1b |"));
         assert!(md.contains("| gpipe |"));
         assert!(md.contains("unavailable:"), "{md}");
+    }
+
+    #[test]
+    fn topo_markdown_renders_matrix_and_wrap() {
+        let md = topo_markdown(&ParallelCfg::parse("4-4-8").unwrap(), &Platform::perlmutter(), 25.0);
+        assert!(md.contains("MP all-reduce ring"), "{md}");
+        assert!(md.contains("PP wrap-around"), "{md}");
+        assert!(md.contains("(wrap)"), "{md}");
+        assert!(md.contains("rail"), "{md}");
+        assert!(md.contains("tp-first"), "{md}");
+        // dp-first flips the MP fabric onto the rail tier
+        let dpf = topo_markdown(
+            &ParallelCfg::parse("4-4-8@dp-first").unwrap(),
+            &Platform::perlmutter(),
+            25.0,
+        );
+        assert!(dpf.contains("dp-first"), "{dpf}");
+        assert!(dpf.contains("MP group: CommGeom { nodes: 4"), "{dpf}");
     }
 
     #[test]

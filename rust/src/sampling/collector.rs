@@ -156,7 +156,7 @@ pub fn collect_platform(platform: &Platform, seed: u64) -> HashMap<DatasetKey, D
     // Communication operators (geometry embedded in the plan points).
     for kind in [OpKind::MpAllReduce, OpKind::DpAllReduce, OpKind::DpAllGather, OpKind::PpP2p] {
         for c in comm_plan(kind, platform) {
-            let op = comm_instance(kind, c.entries, c.geom);
+            let op = comm_instance(kind, c.entries, c.geom, platform);
             record(&mut out, &mut seen, &mut sim, &op);
         }
     }
@@ -171,14 +171,43 @@ pub fn collect_platform(platform: &Platform, seed: u64) -> HashMap<DatasetKey, D
 }
 
 /// Build a comm OpInstance directly from (entries, geometry) — the
-/// micro-benchmark form, bypassing a model workload.
-pub fn comm_instance(kind: OpKind, entries: f64, geom: crate::net::CommGeom) -> OpInstance {
-    let features = vec![entries, geom.nodes as f64, geom.gpus_per_node as f64];
+/// micro-benchmark form, bypassing a model workload. Benchmarks ride the
+/// platform's configured topology as an isolated group spanning its
+/// worst tier (nodes 0..nodes-1, no cross-group contention — the
+/// paper's operators-in-isolation protocol): on the default flat
+/// two-tier graph this is exactly the historical single rail hop, while
+/// a rail/spine topo makes the samples (and the PpP2p tier feature)
+/// cover spine-crossing paths so trained regressors see them in-support.
+pub fn comm_instance(
+    kind: OpKind,
+    entries: f64,
+    geom: crate::net::CommGeom,
+    platform: &Platform,
+) -> OpInstance {
+    use crate::net::topology::ClusterTopology;
+    let topo = ClusterTopology::of(platform);
+    // farthest member pair the geometry implies under sequential packing
+    // (node 0 -> last node; first two GPUs of node 0 for intra groups)
+    let far_gpu = if geom.nodes > 1 { (geom.nodes - 1) * topo.gpus_per_node } else { 1 };
+    let path = topo.path(0, far_gpu);
+    let fabric = if geom.nodes > 1 { path.clone() } else { crate::net::topology::NetPath::local() };
     let bytes = entries * 2.0;
-    let lowered = match kind {
-        OpKind::MpAllReduce | OpKind::DpAllReduce => LoweredOp::AllReduce { bytes, geom },
-        OpKind::DpAllGather => LoweredOp::AllGather { bytes_out: bytes, geom },
-        OpKind::PpP2p => LoweredOp::P2p { bytes, inter_node: geom.nodes > 1 },
+    let (features, lowered) = match kind {
+        OpKind::MpAllReduce | OpKind::DpAllReduce => (
+            vec![entries, geom.nodes as f64, geom.gpus_per_node as f64],
+            LoweredOp::AllReduce { bytes, geom, fabric },
+        ),
+        OpKind::DpAllGather => (
+            vec![entries, geom.nodes as f64, geom.gpus_per_node as f64],
+            LoweredOp::AllGather { bytes_out: bytes, geom, fabric },
+        ),
+        // PpP2p's second feature is the PATH CLASS (1 intra / 2 rail /
+        // 3 spine), matching ops::build::pp_p2p_on — on flat topologies
+        // identical to the old nodes-count encoding (1.0 / 2.0).
+        OpKind::PpP2p => (
+            vec![entries, path.tier_feature(), geom.gpus_per_node as f64],
+            LoweredOp::P2p { bytes, path },
+        ),
         other => panic!("{other:?} is not a communication op"),
     };
     OpInstance { kind, dir: Dir::Fwd, features, lowered }
@@ -269,9 +298,13 @@ mod tests {
 
     #[test]
     fn comm_instance_shapes() {
-        let op = comm_instance(OpKind::DpAllGather, 1e8, CommGeom::new(4, 1));
+        let p = Platform::perlmutter();
+        let op = comm_instance(OpKind::DpAllGather, 1e8, CommGeom::new(4, 1), &p);
         assert_eq!(op.features, vec![1e8, 4.0, 1.0]);
         assert!(op.lowered.is_comm());
+        assert!(op.lowered.is_inter_node());
+        let p2p = comm_instance(OpKind::PpP2p, 1e7, CommGeom::new(1, 2), &p);
+        assert!(!p2p.lowered.is_inter_node());
     }
 
     // Full collection is exercised by integration tests; here we keep a

@@ -11,9 +11,14 @@
 
 use crate::config::Platform;
 use crate::hw::{gemm_time_us, membound_time_us};
-use crate::net::{allgather_time_us, allreduce_time_us, p2p_time_us};
+use crate::net::topology::{p2p_path_time_us, TierLevel};
+use crate::net::{allgather_fabric_time_us, allreduce_fabric_time_us};
 use crate::ops::LoweredOp;
 use crate::util::rng::Rng;
+
+/// Spine hops sit behind an extra switching stage with adaptive routing:
+/// their jitter sigma is amplified relative to the rail tier.
+const SPINE_SIGMA_FACTOR: f64 = 1.5;
 
 /// A simulated cluster: a platform plus a jitter stream.
 pub struct ClusterSim {
@@ -67,21 +72,23 @@ impl ClusterSim {
         base * self.jitter_factor(op) * fabric
     }
 
-    /// Multiplicative jitter for one execution, by operator class.
+    /// Multiplicative jitter for one execution, by the deepest network
+    /// tier the op touches (compute < intra < rail < spine), with one
+    /// independent congestion opportunity PER fabric hop rather than a
+    /// single global draw — a rail+spine path can get unlucky twice.
     fn jitter_factor(&mut self, op: &LoweredOp) -> f64 {
         let j = &self.platform.jitter;
-        let sigma = if op.is_comm() {
-            if op.is_inter_node() {
-                j.inter_comm_sigma
-            } else {
-                j.intra_comm_sigma
-            }
-        } else {
-            j.compute_sigma
+        let sigma = match op.worst_tier() {
+            None => j.compute_sigma,
+            Some(TierLevel::Intra) => j.intra_comm_sigma,
+            Some(TierLevel::Rail) => j.inter_comm_sigma,
+            Some(TierLevel::Spine) => j.inter_comm_sigma * SPINE_SIGMA_FACTOR,
         };
         let mut f = self.rng.lognormal(sigma);
-        if op.is_comm() && op.is_inter_node() && self.rng.chance(j.congestion_prob) {
-            f *= j.congestion_mult;
+        for _ in 0..op.fabric_hops() {
+            if self.rng.chance(j.congestion_prob) {
+                f *= j.congestion_mult;
+            }
         }
         f
     }
@@ -102,9 +109,13 @@ pub fn deterministic_us(op: &LoweredOp, platform: &Platform) -> f64 {
             let t_mem = bytes / (gpu.mem_bw_gbs * 1e9) * 1e6;
             t_compute.max(t_mem) + gpu.launch_us
         }
-        LoweredOp::AllReduce { bytes, geom } => allreduce_time_us(*bytes, *geom, platform),
-        LoweredOp::AllGather { bytes_out, geom } => allgather_time_us(*bytes_out, *geom, platform),
-        LoweredOp::P2p { bytes, inter_node } => p2p_time_us(*bytes, *inter_node, platform),
+        LoweredOp::AllReduce { bytes, geom, fabric } => {
+            allreduce_fabric_time_us(*bytes, *geom, fabric, platform)
+        }
+        LoweredOp::AllGather { bytes_out, geom, fabric } => {
+            allgather_fabric_time_us(*bytes_out, *geom, fabric, platform)
+        }
+        LoweredOp::P2p { bytes, path } => p2p_path_time_us(*bytes, path, platform.gpu.launch_us),
         LoweredOp::Seq(v) => v.iter().map(|o| deterministic_us(o, platform)).sum(),
     }
 }

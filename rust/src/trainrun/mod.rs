@@ -17,7 +17,7 @@
 
 use crate::config::{ModelCfg, ParallelCfg, Platform};
 use crate::ops::build::{
-    dp_allgather, dp_allreduce, encoder_ops, optimizer, post_encoder_ops, pp_p2p,
+    dp_allgather, dp_allreduce, encoder_ops, optimizer, post_encoder_ops, pp_p2p_bwd, pp_p2p_fwd,
     pre_encoder_ops, Workload,
 };
 use crate::ops::params::{stage_params_exact, StageRole};
@@ -35,14 +35,18 @@ pub struct StagePlan {
     pub encoders: usize,
     /// COMPUTE ops run per micro-batch in each direction (pre-blocks,
     /// encoder stack with its MP syncs, post-blocks). PP P2P is no
-    /// longer folded in here — see `pp_p2p`.
+    /// longer folded in here — see `pp_send_fwd`/`pp_send_bwd`.
     pub fwd_ops: Vec<OpInstance>,
     pub bwd_ops: Vec<OpInstance>,
-    /// One stage-boundary P2P transfer (activation down / input-grad
-    /// up), handed to the executor as a first-class edge. `None` when
-    /// `pp == 1` (no boundary exists), which is also why `pp_p2p_us`
-    /// reports 0.0 — never NaN — for single-stage pipelines.
-    pub pp_p2p: Option<OpInstance>,
+    /// THIS stage's forward-direction boundary send (activations to the
+    /// next stage; on the last stage this is the interleaved wrap-around
+    /// hop with its own topology path). `None` when `pp == 1` (no
+    /// boundary exists), which is also why `pp_p2p_us` reports 0.0 —
+    /// never NaN — for single-stage pipelines.
+    pub pp_send_fwd: Option<OpInstance>,
+    /// THIS stage's backward-direction boundary send (input gradients to
+    /// the previous stage; stage 0's entry is the backward wrap hop).
+    pub pp_send_bwd: Option<OpInstance>,
     /// Exact (Table II) local parameter count.
     pub params: f64,
     pub dp_allreduce: OpInstance,
@@ -97,9 +101,11 @@ pub fn stage_plans_mode(
             fwd_ops: fwd,
             bwd_ops: bwd,
             // Every stage can be a sender (interleaving wraps the last
-            // stage's chunk boundary back to the first), so the transfer
-            // op exists on all stages whenever the pipeline has one.
-            pp_p2p: (par.pp > 1).then(|| pp_p2p(&wl)),
+            // stage's chunk boundary back to the first), so transfer ops
+            // exist on all stages whenever the pipeline has a boundary —
+            // each carrying its OWN topology path (the wrap hop included).
+            pp_send_fwd: (par.pp > 1).then(|| pp_p2p_fwd(&wl, s)),
+            pp_send_bwd: (par.pp > 1).then(|| pp_p2p_bwd(&wl, s)),
             params,
             dp_allreduce: dp_allreduce(params, &wl),
             dp_allgather: dp_allgather(params / par.dp as f64, &wl),
@@ -201,6 +207,16 @@ pub fn try_run_batch_with_plans(
     let mut enc_bwd_samples = Vec::new();
     let mut mp_ar_samples = Vec::new();
     let mut p2p_samples = Vec::new();
+    // Only interleaved chunk walks traverse the wrap-around hops (last
+    // stage's fwd send, stage 0's bwd send); for single-chunk schedules
+    // those transfers never execute, so keep them out of the reported
+    // pp_p2p_us mean (they can ride a different path than the interior
+    // boundaries). They are still SAMPLED so the executor's send
+    // matrices are complete and the jitter stream stays stable.
+    let wraps = matches!(
+        par.schedule,
+        crate::pipeline::ScheduleKind::Interleaved1F1B { chunks } if chunks > 1
+    );
 
     for (s, plan) in plans.iter().enumerate() {
         for i in 0..m {
@@ -224,10 +240,12 @@ pub fn try_run_batch_with_plans(
             }
             // each boundary crossing is its own sampled transfer, no
             // longer folded into the stage's compute time
-            if let Some(p2p) = &plan.pp_p2p {
+            if let Some(p2p) = &plan.pp_send_fwd {
                 let t = sim.sample_us(&p2p.lowered);
                 fwd_send[s][i] = t;
-                p2p_samples.push(t);
+                if wraps || s + 1 < s_count {
+                    p2p_samples.push(t);
+                }
             }
             for op in &plan.bwd_ops {
                 let t = sim.sample_us(&op.lowered);
@@ -244,10 +262,12 @@ pub fn try_run_batch_with_plans(
                     _ => {}
                 }
             }
-            if let Some(p2p) = &plan.pp_p2p {
+            if let Some(p2p) = &plan.pp_send_bwd {
                 let t = sim.sample_us(&p2p.lowered);
                 bwd_send[s][i] = t;
-                p2p_samples.push(t);
+                if wraps || s > 0 {
+                    p2p_samples.push(t);
+                }
             }
             fwd[s][i] = tf;
             bwd[s][i] = tb;
@@ -403,10 +423,32 @@ mod tests {
             // compute op lists carry no folded transfers any more...
             assert!(!plan.fwd_ops.iter().any(|o| o.kind == OpKind::PpP2p), "stage {s}");
             assert!(!plan.bwd_ops.iter().any(|o| o.kind == OpKind::PpP2p), "stage {s}");
-            // ...every stage owns the boundary-transfer op instead (the
-            // interleaved wrap makes even the last stage a sender)
-            assert_eq!(plan.pp_p2p.as_ref().map(|o| o.kind), Some(OpKind::PpP2p), "stage {s}");
+            // ...every stage owns BOTH boundary-transfer ops instead (the
+            // interleaved wraps make even the edge stages senders)
+            assert_eq!(
+                plan.pp_send_fwd.as_ref().map(|o| o.kind),
+                Some(OpKind::PpP2p),
+                "stage {s}"
+            );
+            assert_eq!(
+                plan.pp_send_bwd.as_ref().map(|o| o.kind),
+                Some(OpKind::PpP2p),
+                "stage {s}"
+            );
         }
+    }
+
+    #[test]
+    fn rank_map_ordering_changes_simulated_batch() {
+        // Acceptance: at least one rank-map ordering shows a measurable
+        // time difference for a TP-spanning-nodes placement. dp-first
+        // strides the 4-wide MP group across 4 Perlmutter nodes, so every
+        // encoder's MP all-reduce rides the fabric.
+        use crate::net::topology::RankOrder;
+        let (m, par, p) = gpt_plan();
+        let tp = run_batch(&m, &par, &p, 23).total_us;
+        let dpf = run_batch(&m, &par.with_rank_order(RankOrder::DpFirst), &p, 23).total_us;
+        assert!(dpf > 1.2 * tp, "dp-first {dpf} vs tp-first {tp}");
     }
 
     #[test]
@@ -417,7 +459,8 @@ mod tests {
         let par = ParallelCfg::new(1, 2, 2);
         let p = Platform::perlmutter();
         let plans = stage_plans(&m, &par, &p);
-        assert!(plans[0].pp_p2p.is_none());
+        assert!(plans[0].pp_send_fwd.is_none());
+        assert!(plans[0].pp_send_bwd.is_none());
         let tr = run_batch(&m, &par, &p, 5);
         assert_eq!(tr.pp_p2p_us, 0.0);
         assert_eq!(tr.p2p_exposed_us, 0.0);

@@ -107,6 +107,7 @@ fn trace_json(kind: ScheduleKind, fixture: &str, times: &TaskTimes) -> Json {
         ("fwd_arrive", matrix(&sched.fwd_arrive)),
         ("bwd_arrive", matrix(&sched.bwd_arrive)),
         ("send_busy", Json::arr_f64(&sched.send_busy)),
+        ("recv_busy", Json::arr_f64(&sched.recv_busy)),
     ])
 }
 

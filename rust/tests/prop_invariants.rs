@@ -2,7 +2,11 @@
 //! modeling substrates (util::propcheck — the in-repo proptest stand-in).
 
 use fgpm::config::{ModelCfg, ParallelCfg, Platform};
-use fgpm::net::{allgather_time_us, allreduce_time_us, CommGeom};
+use fgpm::net::topology::{p2p_path_time_us, ClusterTopology, NetPath, RankMap, RankOrder};
+use fgpm::net::{
+    allgather_fabric_time_us, allgather_time_us, allreduce_fabric_time_us, allreduce_time_us,
+    p2p_time_us, CommGeom,
+};
 use fgpm::ops::params::padded_vocab;
 use fgpm::pipeline::{
     encoder_allocation, execute, one_f_one_b, ClosedFormInputs, Interleaved1F1B, ScheduleKind,
@@ -128,11 +132,13 @@ fn prop_closed_forms_match_executor_on_uniform_times() {
 
 #[test]
 fn prop_zero_p2p_reduces_to_folded_model() {
-    // The comm-aware executor must reproduce the historical folded model
-    // exactly in both degenerate directions, for any jittered times:
+    // The comm-aware executor must reproduce a folded model exactly in
+    // both degenerate directions, for any jittered times:
     //  (a) all sends zero -> identical to the compute-only model;
-    //  (b) at α = 0 with v = 1, first-class sends == folding each send
-    //      into the producing task's compute (1F1B and GPipe).
+    //  (b) at α = 0 with v = 1, first-class sends == folding each
+    //      crossing into BOTH endpoints' compute: the send into the
+    //      producing task (sender hold) AND into the consuming task
+    //      (receiver copy-in), for 1F1B and GPipe.
     check(
         "zero-p2p-reduction",
         60,
@@ -146,18 +152,19 @@ fn prop_zero_p2p_reduces_to_folded_model() {
         |t| {
             let stages = t.stages();
             let m = t.micro_batches();
-            // folded copy: fwd sends into the sender's fwd compute (all
-            // but the last stage), bwd sends into the sender's bwd
-            // compute (all but the first stage)
+            // folded copy: each crossing charges its sender's compute
+            // (outgoing) and its receiver's compute (incoming copy-in)
             let mut fwd = t.fwd.clone();
             let mut bwd = t.bwd.clone();
             for s in 0..stages {
                 for i in 0..m {
                     if s + 1 < stages {
-                        fwd[s][i] += t.fwd_send[s][i];
+                        fwd[s][i] += t.fwd_send[s][i]; // sender hold
+                        bwd[s][i] += t.bwd_send[s + 1][i]; // grad copy-in
                     }
                     if s > 0 {
-                        bwd[s][i] += t.bwd_send[s][i];
+                        bwd[s][i] += t.bwd_send[s][i]; // sender hold
+                        fwd[s][i] += t.fwd_send[s - 1][i]; // act copy-in
                     }
                 }
             }
@@ -355,6 +362,120 @@ fn prop_collectives_monotone_in_volume() {
                     >= allgather_time_us(bytes, geom, &p) - 1e-9
         },
         |&(bytes, _)| bytes,
+    );
+}
+
+#[test]
+fn prop_degenerate_topology_reproduces_scalar_model_bit_for_bit() {
+    // Acceptance invariant of the topology subsystem: on the degenerate
+    // two-tier (flat) cluster graph, path-based P2P and fabric-based
+    // collectives must reproduce the historical two-scalar model
+    // EXACTLY (==, not approximately) for any volume and geometry.
+    check(
+        "degenerate-topology-exact",
+        400,
+        |r: &mut Rng| {
+            let bytes = r.uniform(1.0, 2e9) * r.uniform(0.001, 1.0);
+            let nodes = 1 + r.below(32);
+            let gpn = 1 << r.below(3);
+            (bytes, nodes, gpn, r.below(2) == 0)
+        },
+        |&(bytes, nodes, gpn, perl)| {
+            let p = if perl { Platform::perlmutter() } else { Platform::vista() };
+            let topo = ClusterTopology::flat(&p);
+            // P2P: intra pair (GPUs 0,1 of node 0 when gpn > 1) and an
+            // inter pair (nodes 0 and 1) against the bool classification
+            let inter_path = topo.path(0, p.gpus_per_node);
+            if p2p_path_time_us(bytes, &inter_path, p.gpu.launch_us)
+                != p2p_time_us(bytes, true, &p)
+            {
+                return false;
+            }
+            if p.gpus_per_node > 1 {
+                let intra_path = topo.path(0, 1);
+                if p2p_path_time_us(bytes, &intra_path, p.gpu.launch_us)
+                    != p2p_time_us(bytes, false, &p)
+                {
+                    return false;
+                }
+            }
+            // collectives: the flat fabric path vs the scalar wrappers
+            let geom = CommGeom::new(nodes, gpn);
+            let fabric = NetPath::fabric_for(geom, &p);
+            allreduce_fabric_time_us(bytes, geom, &fabric, &p) == allreduce_time_us(bytes, geom, &p)
+                && allgather_fabric_time_us(bytes, geom, &fabric, &p)
+                    == allgather_time_us(bytes, geom, &p)
+        },
+        |&(bytes, _, _, _)| bytes,
+    );
+}
+
+#[test]
+fn prop_default_rank_map_matches_closed_form_geometry() {
+    // Under the default tp-first order on the flat topology, the
+    // placement-derived geometries and boundary classifications must
+    // reproduce the historical ParallelCfg closed forms across the
+    // power-of-two sweep space.
+    check(
+        "rankmap-default-geometry",
+        300,
+        |r: &mut Rng| {
+            let pp = 1 << r.below(4);
+            let mp = 1 << r.below(4);
+            let dp = 1 << r.below(4);
+            (ParallelCfg::new(pp, mp, dp), r.below(2) == 0)
+        },
+        |&(par, perl)| {
+            let p = if perl { Platform::perlmutter() } else { Platform::vista() };
+            let map = RankMap::new(&par, &p);
+            let (mn, mg) = par.mp_group_geometry(&p);
+            let (dn, dg) = par.dp_group_geometry(&p);
+            if map.mp_geom() != CommGeom::new(mn, mg) || map.dp_geom() != CommGeom::new(dn, dg) {
+                return false;
+            }
+            // interior boundaries agree with the old bool wherever the
+            // old guess was exact (dp*mp >= gpn => truly inter-node)
+            if par.pp > 1 && par.dp * par.mp >= p.gpus_per_node {
+                if !par.pp_hop_is_inter_node(&p) {
+                    return false;
+                }
+                if !map.pp_fwd_paths().iter().all(|path| path.is_inter_node()) {
+                    return false;
+                }
+            }
+            true
+        },
+        |&(par, _)| par.gpus() as f64,
+    );
+}
+
+#[test]
+fn prop_rank_orders_preserve_group_worlds() {
+    // Every rank order is a bijection, and the derived group geometries
+    // always account for every member of the group.
+    check(
+        "rankmap-worlds",
+        200,
+        |r: &mut Rng| {
+            let pp = 1 + r.below(6);
+            let mp = 1 + r.below(6);
+            let dp = 1 + r.below(6);
+            let o = r.below(3);
+            (pp, mp, dp, o)
+        },
+        |&(pp, mp, dp, o)| {
+            let order = RankOrder::all()[o];
+            let par = ParallelCfg::new(pp, mp, dp).with_rank_order(order);
+            let p = Platform::perlmutter();
+            let map = RankMap::new(&par, &p);
+            let mg = map.mp_geom();
+            let dg = map.dp_geom();
+            mg.nodes * mg.gpus_per_node >= mp
+                && dg.nodes * dg.gpus_per_node >= dp
+                && mg.gpus_per_node <= p.gpus_per_node
+                && dg.gpus_per_node <= p.gpus_per_node
+        },
+        |&(pp, mp, dp, _)| (pp * mp * dp) as f64,
     );
 }
 
