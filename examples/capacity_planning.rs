@@ -1,13 +1,16 @@
 //! Capacity planning: the paper's motivating use case — pick the best
 //! 3D-parallelism strategy for GPT-20B on 128 Perlmutter GPUs WITHOUT
 //! burning node-hours, by sweeping every pp-mp-dp factorization through
-//! the predictor (all on CPU).
+//! the predictor (all on CPU). Runs on the sweep engine: one batched
+//! op-prefetch across every strategy, then scoped-thread parallel
+//! composition behind the shared op cache.
 //!
 //!     cargo run --release --example capacity_planning
 
-use fgpm::config::{ModelCfg, ParallelCfg, Platform};
-use fgpm::predictor::{predict, Registry};
+use fgpm::config::{ModelCfg, Platform};
+use fgpm::predictor::Registry;
 use fgpm::sampling::collect_platform;
+use fgpm::sweep::{Engine, SweepSpec};
 use fgpm::trainrun::stability;
 
 fn main() {
@@ -19,25 +22,25 @@ fn main() {
     let datasets = collect_platform(&platform, 7);
     let mut registry = Registry::train(platform.name, &datasets, 7);
 
-    let mut ranked: Vec<(ParallelCfg, f64)> = Vec::new();
-    for par in ParallelCfg::enumerate(gpus, 16, 16) {
-        if !par.fits(&platform) || model.h % par.mp != 0 || model.iters_per_update < par.pp {
-            continue;
-        }
-        let cp = predict(&model, &par, &platform, &mut registry);
-        ranked.push((par, cp.total_us / 1e6));
-    }
-    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let engine = Engine::new();
+    let report = engine.sweep(&model, &platform, &SweepSpec::new(gpus), &mut registry);
 
     println!("\n{} on {} GPUs — predicted batch seconds:", model.name, gpus);
-    for (i, (par, s)) in ranked.iter().enumerate() {
-        println!("  {:>2}. {:<8} {:>7.2} s", i + 1, par.label(), s);
+    for (i, row) in report.rows.iter().enumerate() {
+        println!("  {:>2}. {:<8} {:>7.2} s   {:>5.1} GiB/GPU", i + 1, row.par.label(), row.seconds(), row.mem_gib);
     }
+    println!(
+        "  ({} configs in {:.0?}, {:.0} configs/s, op-cache hit-rate {:.0}%)",
+        report.rows.len(),
+        report.elapsed,
+        report.configs_per_sec(),
+        report.cache.hit_rate() * 100.0
+    );
 
     // Verify the ranking makes sense: run the top pick and the worst pick
     // on the "real" (simulated) cluster.
-    let (best, _) = ranked.first().expect("no feasible strategy");
-    let (worst, _) = ranked.last().unwrap();
+    let best = &report.rows.first().expect("no feasible strategy").par;
+    let worst = &report.rows.last().unwrap().par;
     println!("\nvalidating best={} vs worst={} on the simulated cluster ...", best, worst);
     let b = stability(&model, best, &platform, 3, 99);
     let w = stability(&model, worst, &platform, 3, 99);

@@ -1,18 +1,28 @@
 //! Hot-path micro-benchmarks (the §Perf targets): XLA forest inference
 //! (the Layer-1 Pallas kernel via PJRT), native forest inference, the
-//! dynamic batcher, and the 1F1B scheduler.
+//! dynamic batcher, the 1F1B scheduler, and the sweep engine (which
+//! additionally emits `BENCH_sweep.json` — configs/sec and the
+//! cross-config op-cache hit-rate — to seed the perf trajectory).
 //!
 //!     make artifacts && cargo bench --bench bench_hotpath
+//!
+//! Pass `-- --smoke` for the CI-sized fixture (small model/GPU count,
+//! fewer iterations; still writes BENCH_sweep.json).
 
 use std::time::Duration;
 
+use fgpm::config::{ModelCfg, Platform};
 use fgpm::coordinator::batcher::{BatcherCfg, DynamicBatcher, PendingQuery};
 use fgpm::forest::ensemble::{to_log, Forest, RfParams};
 use fgpm::forest::FlatForest;
 use fgpm::ops::{Dir, OpKind};
-use fgpm::pipeline::{one_f_one_b, TaskTimes};
+use fgpm::pipeline::{one_f_one_b, ScheduleKind, TaskTimes};
+use fgpm::predictor::e2e::OraclePredictor;
+use fgpm::predictor::predict;
 use fgpm::runtime::{artifacts_dir, Engine};
+use fgpm::sweep::{feasible_configs, SweepReport, SweepSpec};
 use fgpm::util::benchkit::{black_box, Bench};
+use fgpm::util::json::Json;
 use fgpm::util::rng::Rng;
 
 fn trained_forest(seed: u64) -> (Vec<Vec<f64>>, Forest) {
@@ -30,9 +40,35 @@ fn trained_forest(seed: u64) -> (Vec<Vec<f64>>, Forest) {
     (x, f)
 }
 
+fn write_bench_sweep_json(case: &str, report: &SweepReport, smoke: bool) {
+    let json = Json::obj(vec![
+        ("bench", Json::Str("sweep".into())),
+        ("case", Json::Str(case.into())),
+        ("smoke", Json::Bool(smoke)),
+        ("configs_evaluated", Json::Num(report.rows.len() as f64)),
+        ("skipped_oom", Json::Num(report.skipped_oom as f64)),
+        ("skipped_sched", Json::Num(report.skipped_sched as f64)),
+        ("elapsed_us", Json::Num(report.elapsed.as_secs_f64() * 1e6)),
+        ("configs_per_sec", Json::Num(report.configs_per_sec())),
+        ("cache_hits", Json::Num(report.cache.hits as f64)),
+        ("cache_misses", Json::Num(report.cache.misses as f64)),
+        ("cache_hit_rate", Json::Num(report.cache.hit_rate())),
+        ("distinct_ops", Json::Num(report.cache.entries as f64)),
+    ]);
+    match std::fs::write("BENCH_sweep.json", json.to_string()) {
+        Ok(()) => println!("wrote BENCH_sweep.json: {json}"),
+        Err(e) => eprintln!("could not write BENCH_sweep.json: {e}"),
+    }
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let (x, forest) = trained_forest(1);
-    let mut b = Bench::new("hot paths").with_iters(3, 15);
+    let mut b = if smoke {
+        Bench::new("hot paths").with_iters(1, 3)
+    } else {
+        Bench::new("hot paths").with_iters(3, 15)
+    };
 
     // native rust traversal, batch of 256
     b.case("native forest inference (256 queries)", || {
@@ -98,6 +134,41 @@ fn main() {
     b.case("1F1B schedule (8 stages x 32 micro-batches)", || {
         black_box(one_f_one_b(&times));
     });
+
+    // Sweep engine: the strategy x schedule cross-product through the
+    // cross-config op cache + scoped-thread evaluation, vs the serial
+    // uncached baseline (fresh predict() per config). The oracle backend
+    // keeps the measurement about the sweep hot path, not forest quality.
+    let (model, gpus, case_name) = if smoke {
+        (ModelCfg::llemma7b(), 16, "sweep_16gpu_all_schedules (smoke)")
+    } else {
+        (ModelCfg::gpt20b(), 128, "sweep_128gpu_all_schedules")
+    };
+    let platform = Platform::perlmutter();
+    let mut spec = SweepSpec::new(gpus);
+    spec.schedules = ScheduleKind::all(2);
+    let (cfgs, _, _) = feasible_configs(&model, &platform, &spec);
+    b.case("serial uncached sweep (baseline)", || {
+        for par in &cfgs {
+            let mut oracle = OraclePredictor { platform: platform.clone() };
+            black_box(predict(&model, par, &platform, &mut oracle));
+        }
+    });
+    let mut last: Option<SweepReport> = None;
+    b.case(case_name, || {
+        let engine = fgpm::sweep::Engine::new();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        last = Some(engine.sweep(&model, &platform, &spec, &mut oracle));
+    });
+    let report = last.expect("sweep case ran");
+    assert_eq!(report.rows.len(), cfgs.len());
+    write_bench_sweep_json(case_name, &report, smoke);
+    if !smoke && report.cache.hit_rate() < 0.5 {
+        eprintln!(
+            "WARNING: cross-config cache hit-rate {:.1}% below the 50% acceptance floor",
+            report.cache.hit_rate() * 100.0
+        );
+    }
 
     b.finish();
 }

@@ -42,7 +42,7 @@ fn ridge(x: &[Vec<f64>], y: &[f64], lambda: f64) -> Vec<f64> {
     let mut b = aty;
     for col in 0..d {
         let piv = (col..d)
-            .max_by(|&a, &bb| m[a][col].abs().partial_cmp(&m[bb][col].abs()).unwrap())
+            .max_by(|&a, &bb| m[a][col].abs().total_cmp(&m[bb][col].abs()))
             .unwrap();
         m.swap(col, piv);
         b.swap(col, piv);

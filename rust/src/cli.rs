@@ -323,8 +323,9 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         .opt("gpus", "128", "total GPUs")
         .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v]|zb-h1|all)")
         .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
-        .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first)")
+        .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first|all)")
         .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
+        .opt("jobs", "0", "evaluation worker threads (0 = one per core)")
         .opt("forests", "forests", "trained registry directory")
         .opt("seed", "7", "rng seed")
         .flag("xla", "use the AOT Pallas executable");
@@ -339,50 +340,61 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         vec![ScheduleKind::parse(&sched_str)
             .with_context(|| format!("unknown schedule '{sched_str}'"))?]
     };
-    // parse + range-check the constant overlap and rank map once,
-    // before enumerating
-    let base = apply_rank_map_arg(&args, apply_overlap_arg(&args, ParallelCfg::new(1, 1, 1))?)?;
-    let (overlap, rank_order) = (base.p2p_overlap(), base.rank_order);
+    // `--rank-map all` crosses placements the way `--schedule all`
+    // crosses schedules
+    let rank_str = args.str("rank-map");
+    let orders: Vec<RankOrder> = if rank_str == "all" {
+        RankOrder::all()
+    } else {
+        vec![RankOrder::parse(&rank_str)
+            .with_context(|| format!("unknown rank map '{rank_str}' (expected tp-first|dp-first|pp-first|all)"))?]
+    };
+    // parse + range-check the constant overlap once, before enumerating
+    let overlap = apply_overlap_arg(&args, ParallelCfg::new(1, 1, 1))?.p2p_overlap();
     let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
     let mut backend = backend_for(reg, args.has_flag("xla"))?;
-    let mut rows: Vec<(String, f64, f64)> = Vec::new();
-    let mut skipped_oom = 0;
-    let mut skipped_sched = 0;
-    for par in ParallelCfg::enumerate_schedules(gpus, 16, 16, &kinds) {
-        let par = par.with_p2p_overlap(overlap).with_rank_order(rank_order);
-        if !par.fits(&platform) || model.h % par.mp != 0 {
-            continue;
-        }
-        if model.iters_per_update < par.pp {
-            continue; // deep pipelines need enough micro-batches
-        }
-        if validate_schedule(&model, &par).is_err() {
-            skipped_sched += 1;
-            continue; // e.g. interleaving needs m % stages == 0
-        }
-        if !crate::ops::memory::fits_memory(&model, &par, &platform) {
-            skipped_oom += 1;
-            continue; // would OOM before producing a single batch
-        }
-        let mem = crate::ops::memory::estimate(&model, &par, &platform).total_gib();
-        let cp = predict(&model, &par, &platform, backend.as_mut());
-        rows.push((par.label(), cp.total_us / 1e6, mem));
+    let sweep_spec = crate::sweep::SweepSpec {
+        gpus,
+        max_pp: 16,
+        max_mp: 16,
+        schedules: kinds,
+        rank_orders: orders,
+        p2p_overlap: overlap,
+    };
+    let jobs = args.usize("jobs")?;
+    let mut engine = crate::sweep::Engine::new();
+    if jobs > 0 {
+        engine = engine.with_threads(jobs);
     }
-    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let report = engine.sweep(&model, &platform, &sweep_spec, backend.as_mut());
     println!("{} on {} with {} GPUs — predicted batch seconds:", model.name, platform.name, gpus);
-    for (i, (label, s, mem)) in rows.iter().enumerate() {
+    for (i, row) in report.rows.iter().enumerate() {
         println!(
-            "{:>2}. {label:<9} {s:>8.2} s   {mem:>5.1} GiB/GPU{}",
+            "{:>2}. {:<9} {:>8.2} s   {:>5.1} GiB/GPU{}",
             i + 1,
+            row.par.label(),
+            row.seconds(),
+            row.mem_gib,
             if i == 0 { "   <- best" } else { "" }
         );
     }
-    if skipped_oom > 0 {
-        println!("({skipped_oom} strategies skipped: exceed {} GiB HBM)", platform.gpu.hbm_gib);
+    if report.skipped_oom > 0 {
+        println!(
+            "({} strategies skipped: exceed {} GiB HBM)",
+            report.skipped_oom, platform.gpu.hbm_gib
+        );
     }
-    if skipped_sched > 0 {
-        println!("({skipped_sched} strategies skipped: schedule rejects geometry)");
+    if report.skipped_sched > 0 {
+        println!("({} strategies skipped: schedule rejects geometry)", report.skipped_sched);
     }
+    println!(
+        "evaluated {} configs in {:.0?} ({:.0} configs/s, op-cache hit-rate {:.0}%, {} distinct ops)",
+        report.rows.len(),
+        report.elapsed,
+        report.configs_per_sec(),
+        report.cache.hit_rate() * 100.0,
+        report.cache.entries
+    );
     Ok(0)
 }
 
@@ -390,8 +402,10 @@ fn cmd_topo(argv: &[String]) -> Result<i32> {
     let spec = Spec::new(
         "topo",
         "print the cluster tier graph, group geometries under the rank map, and the \
-         group->tier traffic matrix (incl. the interleaved wrap-around hop's path)",
+         group->tier traffic matrix — crossing counts AND per-tier bytes \
+         (incl. the interleaved wrap-around hop's path)",
     )
+    .opt("model", "gpt20b", "model preset (sets the per-transfer traffic volumes)")
     .opt("parallel", "4-4-8", "pp-mp-dp[@rank-map]")
     .opt("platform", "perlmutter", "target platform")
     .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first)")
@@ -399,13 +413,14 @@ fn cmd_topo(argv: &[String]) -> Result<i32> {
     .opt("payload-mb", "25", "reference P2P payload for the per-boundary times, MB");
     let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
     let platform = apply_topo_arg(&args, platform_arg(&args)?)?;
+    let model = model_arg(&args)?;
     let par = ParallelCfg::parse(&args.str("parallel"))
         .context("bad --parallel (expected pp-mp-dp[@rank-map])")?;
     let par = apply_rank_map_arg(&args, par)?;
     anyhow::ensure!(par.fits(&platform), "{} needs {} GPUs", par.label(), par.gpus());
     let payload_mb = args.f64("payload-mb")?;
     anyhow::ensure!(payload_mb > 0.0, "--payload-mb must be positive");
-    let md = crate::report::tables::topo_markdown(&par, &platform, payload_mb);
+    let md = crate::report::tables::topo_markdown(&model, &par, &platform, payload_mb);
     println!("{}", report::emit("topo.md", &md));
     Ok(0)
 }

@@ -46,7 +46,17 @@ pub fn handle_line(svc: &PredictionService, line: &str) -> String {
     };
     match req.get("cmd").and_then(|c| c.as_str()).unwrap_or("predict") {
         "ping" => Json::obj(vec![("ok", Json::Bool(true))]).to_string(),
-        "stats" => svc.metrics.snapshot().to_json().to_string(),
+        "stats" => {
+            let mut j = svc.metrics.snapshot().to_json();
+            let cache = svc.op_cache.stats();
+            if let Json::Obj(m) = &mut j {
+                m.insert("op_cache_hits".into(), Json::Num(cache.hits as f64));
+                m.insert("op_cache_misses".into(), Json::Num(cache.misses as f64));
+                m.insert("op_cache_entries".into(), Json::Num(cache.entries as f64));
+                m.insert("op_cache_hit_rate".into(), Json::Num(cache.hit_rate()));
+            }
+            j.to_string()
+        }
         "predict" => {
             let Some(model) = req
                 .get("model")

@@ -13,6 +13,7 @@ use crate::config::{ModelCfg, ParallelCfg, Platform};
 use crate::coordinator::batcher::{Batch, BatcherCfg, DynamicBatcher, PendingQuery};
 use crate::coordinator::metrics::Metrics;
 use crate::predictor::e2e::ComponentPrediction;
+use crate::predictor::opcache::OpPredictionCache;
 use crate::predictor::registry::BatchPredictor;
 use crate::sampling::DatasetKey;
 
@@ -26,6 +27,11 @@ pub struct PredictionService {
     tx: Sender<Msg>,
     executor: Option<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    /// Cross-request op-prediction cache: configurations served earlier
+    /// (any schedule/strategy) pre-pay the op latencies of later ones,
+    /// so repeated `predict_config` calls stop re-batching identical
+    /// rows through the executor. Exposed over the TCP `stats` command.
+    pub op_cache: Arc<OpPredictionCache>,
 }
 
 /// Cheap per-thread client; implements [`BatchPredictor`] by pushing
@@ -108,14 +114,20 @@ impl PredictionService {
                 }
             })
             .expect("spawn executor");
-        PredictionService { tx, executor: Some(executor), metrics }
+        PredictionService {
+            tx,
+            executor: Some(executor),
+            metrics,
+            op_cache: Arc::new(OpPredictionCache::new()),
+        }
     }
 
     pub fn client(&self) -> QueryClient {
         QueryClient { tx: self.tx.clone(), metrics: self.metrics.clone() }
     }
 
-    /// Serve one end-to-end configuration prediction.
+    /// Serve one end-to-end configuration prediction through the
+    /// service's persistent cross-config op cache.
     pub fn predict_config(
         &self,
         model: &ModelCfg,
@@ -123,7 +135,13 @@ impl PredictionService {
         platform: &Platform,
     ) -> ComponentPrediction {
         let mut client = self.client();
-        let cp = crate::predictor::e2e::predict(model, par, platform, &mut client);
+        let cp = crate::predictor::e2e::predict_with_cache(
+            model,
+            par,
+            platform,
+            &mut client,
+            &self.op_cache,
+        );
         self.metrics.add(&self.metrics.predictions, 1);
         cp
     }
@@ -255,6 +273,30 @@ mod tests {
         assert_eq!(out, vec![7.0]);
         let snap = svc.metrics.snapshot();
         assert!(snap.deadline_flushes >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn repeated_config_predictions_hit_the_service_cache() {
+        let sizes = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let svc = PredictionService::start(
+            Box::new(Recording { sizes }),
+            BatcherCfg { max_batch: 256, max_wait: Duration::from_millis(1) },
+        );
+        let model = crate::config::ModelCfg::llemma7b();
+        let par = crate::config::ParallelCfg::new(2, 2, 2);
+        let platform = crate::config::Platform::perlmutter();
+        let a = svc.predict_config(&model, &par, &platform);
+        let first = svc.metrics.snapshot().queries;
+        assert!(first > 0);
+        let b = svc.predict_config(&model, &par, &platform);
+        // the second serve composes entirely from the op cache: zero new
+        // executor queries, bit-identical output
+        assert_eq!(svc.metrics.snapshot().queries, first);
+        assert_eq!(a.total_us, b.total_us);
+        assert_eq!(a.stage_fwd_us, b.stage_fwd_us);
+        let s = svc.op_cache.stats();
+        assert!(s.hits > 0 && s.hit_rate() > 0.4, "{s:?}");
         svc.shutdown();
     }
 

@@ -81,7 +81,7 @@ fn best_split(
     for &f in &candidates {
         // sort subset by feature value
         let mut order: Vec<usize> = idx.to_vec();
-        order.sort_by(|&a, &b| x[a][f].partial_cmp(&x[b][f]).unwrap());
+        order.sort_by(|&a, &b| x[a][f].total_cmp(&x[b][f]));
         // prefix sums for O(n) scan
         let n = order.len();
         let mut prefix_sum = vec![0.0; n + 1];

@@ -42,7 +42,8 @@
 //! is precisely a rank-map effect: mp = 8 under `tp-first` spans two
 //! nodes, pushing every MP all-reduce onto tier 1.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::config::platform::{Platform, TopoSpec};
 use crate::config::ParallelCfg;
@@ -215,6 +216,67 @@ pub fn p2p_path_time_us(bytes: f64, path: &NetPath, launch_us: f64) -> f64 {
     t + launch_us
 }
 
+/// The four path shapes a two/three-tier cluster graph can produce.
+/// Every [`ClusterTopology::path`] result is fully determined by its
+/// class (plus the flow count), which is what makes path results
+/// memoizable and the O(n²) worst-pair scans allocation-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PathClass {
+    /// Same GPU — no transfer.
+    Local,
+    /// One NVLink hop inside a node.
+    Intra,
+    /// One NIC/leaf hop (same rail group, or flat topology).
+    Rail,
+    /// NIC/leaf hop plus a spine crossing (rail groups differ).
+    RailSpine,
+}
+
+impl PathClass {
+    /// Deepest tier crossed (mirrors [`NetPath::worst_level`]).
+    pub fn worst_level(&self) -> Option<TierLevel> {
+        match self {
+            PathClass::Local => None,
+            PathClass::Intra => Some(TierLevel::Intra),
+            PathClass::Rail => Some(TierLevel::Rail),
+            PathClass::RailSpine => Some(TierLevel::Spine),
+        }
+    }
+
+    /// Hop count of the materialized path.
+    pub fn hops(&self) -> usize {
+        match self {
+            PathClass::Local => 0,
+            PathClass::Intra | PathClass::Rail => 1,
+            PathClass::RailSpine => 2,
+        }
+    }
+
+    /// Does the path leave the node? (mirrors [`NetPath::is_inter_node`])
+    pub fn is_inter_node(&self) -> bool {
+        matches!(self, PathClass::Rail | PathClass::RailSpine)
+    }
+}
+
+/// Bit-exact identity of one tier (memo-key component).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TierKey {
+    pub bw: u64,
+    pub lat: u64,
+    pub cap: u64,
+}
+
+/// Bit-exact identity of a resolved [`ClusterTopology`] — the
+/// "(topology, …)" part of the geometry memo key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TopoKey {
+    pub gpus_per_node: usize,
+    pub nodes_per_rail: usize,
+    pub intra: TierKey,
+    pub rail: TierKey,
+    pub spine: Option<TierKey>,
+}
+
 /// One tier of the cluster graph with its link-sharing capacity:
 /// `link_capacity` is how many concurrent flows a link carries at full
 /// bandwidth before contention divides it (`f64::INFINITY` = uncounted,
@@ -299,6 +361,45 @@ impl ClusterTopology {
 
     pub fn rail_of(&self, node: usize) -> usize {
         node / self.nodes_per_rail
+    }
+
+    /// Allocation-free classification of the path between two GPUs —
+    /// the memoizable identity of every `path()` result (a path's hops
+    /// depend only on this class and the flow count). The worst-pair /
+    /// traffic-matrix scans use this instead of materializing a
+    /// [`NetPath`] per candidate pair.
+    pub fn class_of(&self, a: usize, b: usize) -> PathClass {
+        if a == b {
+            return PathClass::Local;
+        }
+        let (na, nb) = (self.node_of(a), self.node_of(b));
+        if na == nb {
+            PathClass::Intra
+        } else if self.rail_of(na) != self.rail_of(nb) && self.spine.is_some() {
+            PathClass::RailSpine
+        } else {
+            PathClass::Rail
+        }
+    }
+
+    /// Stable memo key over the resolved tier parameters (f64s keyed by
+    /// exact bit patterns) — two topologies with equal keys produce
+    /// byte-identical paths.
+    pub fn memo_key(&self) -> TopoKey {
+        fn tier(t: &Tier) -> TierKey {
+            TierKey {
+                bw: t.bw_gbs.to_bits(),
+                lat: t.lat_us.to_bits(),
+                cap: t.link_capacity.to_bits(),
+            }
+        }
+        TopoKey {
+            gpus_per_node: self.gpus_per_node,
+            nodes_per_rail: self.nodes_per_rail,
+            intra: tier(&self.intra),
+            rail: tier(&self.rail),
+            spine: self.spine.as_ref().map(tier),
+        }
     }
 
     fn hop(&self, tier: &Tier, flows: f64) -> Hop {
@@ -396,14 +497,70 @@ impl std::fmt::Display for RankOrder {
 }
 
 /// One row of the group→tier traffic matrix `fgpm topo` prints: how many
-/// member-pair transfers of a communication pattern land on each tier.
+/// member-pair transfers of a communication pattern land on each tier,
+/// and — when per-transfer volumes are supplied — how many bytes each
+/// tier carries per invocation of the pattern.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrafficRow {
     pub kind: String,
     pub intra: usize,
     pub rail: usize,
     pub spine: usize,
+    /// Per-tier bytes = crossing count × per-pair transfer volume (0.0
+    /// when the matrix was built without volumes).
+    pub intra_bytes: f64,
+    pub rail_bytes: f64,
+    pub spine_bytes: f64,
 }
+
+/// Per-invocation transfer volume each member pair of a pattern carries,
+/// used to turn crossing counts into per-tier bytes: ring collectives
+/// put `2·(n-1)/n · V` on every adjacent link of an all-reduce over `V`
+/// bytes; a PP boundary pair carries the boundary activation verbatim.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TrafficVolumes {
+    /// Bytes per ring-adjacent pair of one MP all-reduce.
+    pub mp_ring_bytes: f64,
+    /// Bytes per ring-adjacent pair of one DP all-reduce.
+    pub dp_ring_bytes: f64,
+    /// Bytes per boundary pair of one PP crossing.
+    pub pp_bytes: f64,
+}
+
+impl TrafficVolumes {
+    /// Ring all-reduce per-link volume for a group of `n` members over
+    /// `bytes` payload: reduce-scatter + all-gather each move
+    /// `(n-1)/n · bytes` across every adjacent pair.
+    pub fn ring_link_bytes(n: usize, bytes: f64) -> f64 {
+        if n < 2 {
+            return 0.0;
+        }
+        2.0 * (n as f64 - 1.0) / n as f64 * bytes
+    }
+}
+
+/// Derived placement geometry of one (topology, rank order, pp-mp-dp
+/// cube): everything [`crate::ops::build::Workload`] needs, memoized
+/// process-wide so sweeps, `fgpm topo`, and the coordinator service stop
+/// re-running the O(groups · members²) placement scans per call.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankGeometry {
+    pub mp_geom: CommGeom,
+    pub dp_geom: CommGeom,
+    pub mp_fabric: NetPath,
+    pub dp_fabric: NetPath,
+    /// Per-stage forward boundary paths (entry `pp-1` is the wrap hop);
+    /// empty when `pp == 1`.
+    pub pp_fwd_paths: Vec<NetPath>,
+    /// Per-stage backward boundary paths (entry `0` is the wrap hop).
+    pub pp_bwd_paths: Vec<NetPath>,
+}
+
+type GeomKey = (TopoKey, RankOrder, usize, usize, usize);
+
+/// Process-wide geometry memo. Bounded in practice by the sweep space
+/// (distinct (topology, order, cube) keys), so entries are never evicted.
+static GEOM_MEMO: OnceLock<Mutex<HashMap<GeomKey, Arc<RankGeometry>>>> = OnceLock::new();
 
 /// Placement of one parallelism configuration onto a cluster: the thing
 /// every layer queries instead of re-deriving geometry from closed-form
@@ -524,9 +681,10 @@ impl RankMap {
 
     /// Path "badness" rank: deepest tier first, then hop count — the
     /// ordering every worst-pair selection in this module shares.
+    /// Classification only — no path is materialized per candidate pair.
     fn path_key(&self, a: usize, b: usize) -> (usize, usize) {
-        let p = self.topo.path(a, b);
-        (p.worst_level().map_or(0, |l| l as usize), p.hops.len())
+        let c = self.topo.class_of(a, b);
+        (c.worst_level().map_or(0, |l| l as usize), c.hops())
     }
 
     /// The pair whose transfer crosses the deepest/longest path.
@@ -584,7 +742,7 @@ impl RankMap {
             for m in 0..self.mp {
                 let a = self.gpu(from_stage, d, m);
                 let b = self.gpu(to_stage, d, m);
-                if self.topo.path(a, b).is_inter_node() {
+                if self.topo.class_of(a, b).is_inter_node() {
                     *flows_per_node.entry(self.topo.node_of(a)).or_insert(0) += 1;
                 }
                 pairs.push((a, b));
@@ -621,7 +779,7 @@ impl RankMap {
     fn classify_pairs(&self, pairs: impl Iterator<Item = (usize, usize)>) -> (usize, usize, usize) {
         let (mut intra, mut rail, mut spine) = (0usize, 0usize, 0usize);
         for (a, b) in pairs {
-            match self.topo.path(a, b).worst_level() {
+            match self.topo.class_of(a, b).worst_level() {
                 None | Some(TierLevel::Intra) => intra += 1,
                 Some(TierLevel::Rail) => rail += 1,
                 Some(TierLevel::Spine) => spine += 1,
@@ -630,12 +788,51 @@ impl RankMap {
         (intra, rail, spine)
     }
 
+    /// The full derived geometry bundle, memoized per (topology, order,
+    /// pp, mp, dp). The first call for a key runs the placement scans;
+    /// every later call — from any thread — returns the shared result.
+    pub fn geometry(&self) -> Arc<RankGeometry> {
+        let key: GeomKey = (self.topo.memo_key(), self.order, self.pp, self.mp, self.dp);
+        let memo = GEOM_MEMO.get_or_init(|| Mutex::new(HashMap::new()));
+        if let Some(g) = memo.lock().unwrap().get(&key) {
+            return g.clone();
+        }
+        // compute OUTSIDE the lock: scans are the expensive part and two
+        // threads racing the same key just insert the same value twice
+        let g = Arc::new(RankGeometry {
+            mp_geom: self.mp_geom(),
+            dp_geom: self.dp_geom(),
+            mp_fabric: self.mp_fabric(),
+            dp_fabric: self.dp_fabric(),
+            pp_fwd_paths: self.pp_fwd_paths(),
+            pp_bwd_paths: self.pp_bwd_paths(),
+        });
+        memo.lock().unwrap().entry(key).or_insert(g).clone()
+    }
+
     /// The group→tier traffic matrix: for each communication pattern,
-    /// how many of its member-pair transfers ride each tier. Collective
+    /// how many of its member-pair transfers ride each tier (byte
+    /// columns zero; see [`RankMap::traffic_matrix_with`]). Collective
     /// rows count ring-adjacent pairs of the worst group; pipeline rows
     /// count the `dp·mp` simultaneous boundary transfers.
     pub fn traffic_matrix(&self) -> Vec<TrafficRow> {
+        self.traffic_matrix_with(&TrafficVolumes::default())
+    }
+
+    /// [`RankMap::traffic_matrix`] with per-tier BYTES: each row's byte
+    /// columns are its crossing counts times the pattern's per-pair
+    /// volume from `vol`.
+    pub fn traffic_matrix_with(&self, vol: &TrafficVolumes) -> Vec<TrafficRow> {
         let mut rows = Vec::new();
+        let row = |kind: &str, (i, r, s): (usize, usize, usize), per_pair: f64| TrafficRow {
+            kind: kind.to_string(),
+            intra: i,
+            rail: r,
+            spine: s,
+            intra_bytes: i as f64 * per_pair,
+            rail_bytes: r as f64 * per_pair,
+            spine_bytes: s as f64 * per_pair,
+        };
         let ring_pairs = |members: Vec<usize>| -> Vec<(usize, usize)> {
             let n = members.len();
             if n < 2 {
@@ -644,11 +841,11 @@ impl RankMap {
             (0..n).map(|i| (members[i], members[(i + 1) % n])).collect()
         };
         let (mp_group, _) = self.worst_group(self.pp, self.dp, |p, d| self.mp_members(p, d));
-        let (i, r, s) = self.classify_pairs(ring_pairs(mp_group).into_iter());
-        rows.push(TrafficRow { kind: "MP all-reduce ring".into(), intra: i, rail: r, spine: s });
+        let c = self.classify_pairs(ring_pairs(mp_group).into_iter());
+        rows.push(row("MP all-reduce ring", c, vol.mp_ring_bytes));
         let (dp_group, _) = self.worst_group(self.pp, self.mp, |p, m| self.dp_members(p, m));
-        let (i, r, s) = self.classify_pairs(ring_pairs(dp_group).into_iter());
-        rows.push(TrafficRow { kind: "DP all-reduce ring".into(), intra: i, rail: r, spine: s });
+        let c = self.classify_pairs(ring_pairs(dp_group).into_iter());
+        rows.push(row("DP all-reduce ring", c, vol.dp_ring_bytes));
         if self.pp > 1 {
             let boundary = |from: usize, to: usize| -> Vec<(usize, usize)> {
                 let mut v = Vec::new();
@@ -663,10 +860,10 @@ impl RankMap {
             for st in 0..self.pp - 1 {
                 interior.extend(boundary(st, st + 1));
             }
-            let (i, r, s) = self.classify_pairs(interior.into_iter());
-            rows.push(TrafficRow { kind: "PP boundaries".into(), intra: i, rail: r, spine: s });
-            let (i, r, s) = self.classify_pairs(boundary(self.pp - 1, 0).into_iter());
-            rows.push(TrafficRow { kind: "PP wrap-around".into(), intra: i, rail: r, spine: s });
+            let c = self.classify_pairs(interior.into_iter());
+            rows.push(row("PP boundaries", c, vol.pp_bytes));
+            let c = self.classify_pairs(boundary(self.pp - 1, 0).into_iter());
+            rows.push(row("PP wrap-around", c, vol.pp_bytes));
         }
         rows
     }
@@ -847,6 +1044,94 @@ mod tests {
         assert_eq!(inter, expect);
         let local = p2p_path_time_us(bytes, &NetPath::local(), p.gpu.launch_us);
         assert_eq!(local, p.gpu.launch_us);
+    }
+
+    #[test]
+    fn class_of_agrees_with_materialized_paths() {
+        for spec in [
+            TopoSpec::Flat,
+            TopoSpec::RailSpine { nodes_per_rail: 2, spine_bw_frac: 0.5 },
+        ] {
+            let t = ClusterTopology::of(&perl().with_topo(spec));
+            for a in 0..32 {
+                for b in 0..32 {
+                    let p = t.path(a, b);
+                    let c = t.class_of(a, b);
+                    assert_eq!(c.worst_level(), p.worst_level(), "{a}->{b} {spec:?}");
+                    assert_eq!(c.hops(), p.hops.len(), "{a}->{b} {spec:?}");
+                    assert_eq!(c.is_inter_node(), p.is_inter_node(), "{a}->{b} {spec:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn geometry_memo_matches_direct_computation() {
+        for order in RankOrder::all() {
+            for spec in [
+                TopoSpec::Flat,
+                TopoSpec::RailSpine { nodes_per_rail: 4, spine_bw_frac: 0.5 },
+            ] {
+                let p = perl().with_topo(spec);
+                let m = map(4, 4, 8, order, &p);
+                let g = m.geometry();
+                assert_eq!(g.mp_geom, m.mp_geom(), "{order} {spec:?}");
+                assert_eq!(g.dp_geom, m.dp_geom());
+                assert_eq!(g.mp_fabric, m.mp_fabric());
+                assert_eq!(g.dp_fabric, m.dp_fabric());
+                assert_eq!(g.pp_fwd_paths, m.pp_fwd_paths());
+                assert_eq!(g.pp_bwd_paths, m.pp_bwd_paths());
+                // second call returns the SAME shared entry
+                let g2 = m.geometry();
+                assert!(Arc::ptr_eq(&g, &g2));
+            }
+        }
+    }
+
+    #[test]
+    fn memo_key_distinguishes_topologies_and_cubes() {
+        let flat = ClusterTopology::flat(&perl());
+        let railed = ClusterTopology::of(
+            &perl().with_topo(TopoSpec::RailSpine { nodes_per_rail: 4, spine_bw_frac: 0.5 }),
+        );
+        assert_ne!(flat.memo_key(), railed.memo_key());
+        assert_eq!(flat.memo_key(), ClusterTopology::flat(&perl()).memo_key());
+        let a = map(4, 4, 8, RankOrder::TpFirst, &perl());
+        let b = map(4, 8, 4, RankOrder::TpFirst, &perl());
+        assert_ne!(a.geometry().mp_geom, b.geometry().mp_geom);
+    }
+
+    #[test]
+    fn traffic_matrix_bytes_on_known_4_4_8_geometry() {
+        // gpt20b-shaped volumes on the paper's 4-4-8 Perlmutter layout:
+        // mp = 4 fits one node, so the MP ring's 4 adjacent pairs are all
+        // intra and each carries 2·(3/4)·V_mp bytes.
+        let m = map(4, 4, 8, RankOrder::TpFirst, &perl());
+        let v_mp = 4.0 * 2048.0 * 6144.0 * 2.0; // b·l·d fp16
+        let vol = TrafficVolumes {
+            mp_ring_bytes: TrafficVolumes::ring_link_bytes(4, v_mp),
+            dp_ring_bytes: TrafficVolumes::ring_link_bytes(8, 1e9),
+            pp_bytes: v_mp / 4.0,
+        };
+        assert_eq!(vol.mp_ring_bytes, 1.5 * v_mp);
+        let rows = m.traffic_matrix_with(&vol);
+        let mp = rows.iter().find(|r| r.kind == "MP all-reduce ring").unwrap();
+        assert_eq!(mp.intra, 4);
+        assert_eq!(mp.intra_bytes, 4.0 * 1.5 * v_mp);
+        assert_eq!(mp.rail_bytes, 0.0);
+        let dp = rows.iter().find(|r| r.kind == "DP all-reduce ring").unwrap();
+        // dp members are all on distinct nodes: every ring pair rides rail
+        assert_eq!(dp.rail, 8);
+        assert_eq!(dp.rail_bytes, 8.0 * 2.0 * (7.0 / 8.0) * 1e9);
+        let pp = rows.iter().find(|r| r.kind == "PP boundaries").unwrap();
+        assert_eq!(pp.rail_bytes, (3 * 32) as f64 * v_mp / 4.0);
+        assert_eq!(pp.intra_bytes, 0.0);
+        // ring factor degenerates to zero for single-member groups
+        assert_eq!(TrafficVolumes::ring_link_bytes(1, 1e9), 0.0);
+        // and the zero-volume matrix keeps the counts with zero bytes
+        let plain = m.traffic_matrix();
+        assert_eq!(plain[0].intra, 4);
+        assert_eq!(plain[0].intra_bytes, 0.0);
     }
 
     #[test]

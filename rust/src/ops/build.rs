@@ -51,7 +51,10 @@ impl Workload {
     pub fn new(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> Workload {
         assert_eq!(model.h % par.mp, 0, "heads must divide mp");
         assert_eq!(model.d % model.h, 0, "d must divide h");
-        let map = RankMap::new(par, platform);
+        // placement scans are memoized per (topology, order, cube), so
+        // repeated plan builds over the same configuration (sweeps, the
+        // coordinator service, stability loops) resolve to a shared Arc
+        let geom = RankMap::new(par, platform).geometry();
         Workload {
             b: model.micro_batch,
             l: model.l,
@@ -59,13 +62,13 @@ impl Workload {
             h: model.h,
             v: padded_vocab(model.vocab, par.mp),
             mp: par.mp,
-            mp_geom: map.mp_geom(),
-            dp_geom: map.dp_geom(),
-            mp_fabric: map.mp_fabric(),
-            dp_fabric: map.dp_fabric(),
+            mp_geom: geom.mp_geom,
+            dp_geom: geom.dp_geom,
+            mp_fabric: geom.mp_fabric.clone(),
+            dp_fabric: geom.dp_fabric.clone(),
             dp: par.dp,
-            pp_fwd_paths: map.pp_fwd_paths(),
-            pp_bwd_paths: map.pp_bwd_paths(),
+            pp_fwd_paths: geom.pp_fwd_paths.clone(),
+            pp_bwd_paths: geom.pp_bwd_paths.clone(),
         }
     }
 

@@ -29,6 +29,57 @@ use std::collections::VecDeque;
 
 use crate::pipeline::schedule::{PipelineSchedule, Schedule, TaskKind, TaskTimes};
 
+/// Reusable executor state: small scheduling scratch plus a pool of
+/// recycled [`Schedule`] outputs, so sim-side callers that execute many
+/// schedules back to back (stability loops, sweeps, the zero-send
+/// counterfactual of every exposure measurement) stop paying ~10 matrix
+/// allocations per run. The free function [`execute`] remains the
+/// one-shot entry point and behaves identically.
+#[derive(Default)]
+pub struct Executor {
+    pool: Vec<Schedule>,
+    cursor: Vec<usize>,
+    avail: Vec<f64>,
+    queued: Vec<bool>,
+    queue: VecDeque<usize>,
+}
+
+/// Reshape a recycled matrix to `rows` × `cols`, every cell `fill`.
+fn reshape(m: &mut Vec<Vec<f64>>, rows: usize, cols: usize, fill: f64) {
+    m.truncate(rows);
+    while m.len() < rows {
+        m.push(Vec::new());
+    }
+    for r in m.iter_mut() {
+        r.clear();
+        r.resize(cols, fill);
+    }
+}
+
+impl Executor {
+    pub fn new() -> Executor {
+        Executor::default()
+    }
+
+    /// Hand a finished [`Schedule`] back so its matrices back the next
+    /// [`Executor::execute`] call instead of fresh allocations.
+    pub fn recycle(&mut self, sched: Schedule) {
+        if self.pool.len() < 4 {
+            self.pool.push(sched);
+        }
+    }
+
+    /// [`execute`] with buffer reuse. See the free function for the
+    /// contract; results are identical.
+    pub fn execute(
+        &mut self,
+        schedule: &dyn PipelineSchedule,
+        times: &TaskTimes,
+    ) -> Result<Schedule, ScheduleError> {
+        execute_with(self, schedule, times)
+    }
+}
+
 /// Why a schedule could not be executed. Returned (not panicked) so a
 /// sweep over many configurations can skip and report bad combinations.
 #[derive(Clone, Debug, PartialEq)]
@@ -73,6 +124,14 @@ impl std::error::Error for ScheduleError {}
 /// per-micro-batch COMPUTE time; chunk-boundary transfers cost the full
 /// per-crossing send time (boundary activations do not shrink with `v`).
 pub fn execute(
+    schedule: &dyn PipelineSchedule,
+    times: &TaskTimes,
+) -> Result<Schedule, ScheduleError> {
+    execute_with(&mut Executor::new(), schedule, times)
+}
+
+fn execute_with(
+    exec: &mut Executor,
     schedule: &dyn PipelineSchedule,
     times: &TaskTimes,
 ) -> Result<Schedule, ScheduleError> {
@@ -162,21 +221,60 @@ pub fn execute(
         orders.push(order);
     }
 
-    let mut fs = vec![vec![f64::NAN; vm]; s_count];
-    let mut fe = vec![vec![f64::NAN; vm]; s_count];
-    let mut bs = vec![vec![f64::NAN; vm]; s_count];
-    let mut be = vec![vec![f64::NAN; vm]; s_count];
+    // outputs come from the executor's recycle pool when shapes allow
+    let mut sched = exec.pool.pop().unwrap_or_else(|| Schedule {
+        chunks: 0,
+        fwd_start: Vec::new(),
+        fwd_end: Vec::new(),
+        bwd_start: Vec::new(),
+        bwd_end: Vec::new(),
+        wgt_start: Vec::new(),
+        wgt_end: Vec::new(),
+        fwd_arrive: Vec::new(),
+        bwd_arrive: Vec::new(),
+        send_busy: Vec::new(),
+        recv_busy: Vec::new(),
+    });
+    sched.chunks = v;
     let wgt_len = if has_wgt { vm } else { 0 };
-    let mut ws = vec![vec![f64::NAN; wgt_len]; s_count];
-    let mut we = vec![vec![f64::NAN; wgt_len]; s_count];
-    let mut fa = vec![vec![f64::NAN; vm]; s_count]; // fwd payload arrival
-    let mut ba = vec![vec![f64::NAN; vm]; s_count]; // bwd payload arrival
-    let mut send_busy = vec![0.0f64; s_count];
-    let mut recv_busy = vec![0.0f64; s_count];
-    let mut cursor = vec![0usize; s_count]; // next task index per stage
-    let mut avail = vec![0.0f64; s_count]; // stage-free instant
-    let mut queued = vec![true; s_count];
-    let mut queue: VecDeque<usize> = (0..s_count).collect();
+    reshape(&mut sched.fwd_start, s_count, vm, f64::NAN);
+    reshape(&mut sched.fwd_end, s_count, vm, f64::NAN);
+    reshape(&mut sched.bwd_start, s_count, vm, f64::NAN);
+    reshape(&mut sched.bwd_end, s_count, vm, f64::NAN);
+    reshape(&mut sched.wgt_start, s_count, wgt_len, f64::NAN);
+    reshape(&mut sched.wgt_end, s_count, wgt_len, f64::NAN);
+    reshape(&mut sched.fwd_arrive, s_count, vm, f64::NAN); // fwd payload arrival
+    reshape(&mut sched.bwd_arrive, s_count, vm, f64::NAN); // bwd payload arrival
+    sched.send_busy.clear();
+    sched.send_busy.resize(s_count, 0.0);
+    sched.recv_busy.clear();
+    sched.recv_busy.resize(s_count, 0.0);
+    let Schedule {
+        fwd_start: fs,
+        fwd_end: fe,
+        bwd_start: bs,
+        bwd_end: be,
+        wgt_start: ws,
+        wgt_end: we,
+        fwd_arrive: fa,
+        bwd_arrive: ba,
+        send_busy,
+        recv_busy,
+        ..
+    } = &mut sched;
+
+    let cursor = &mut exec.cursor; // next task index per stage
+    cursor.clear();
+    cursor.resize(s_count, 0);
+    let avail = &mut exec.avail; // stage-free instant
+    avail.clear();
+    avail.resize(s_count, 0.0);
+    let queued = &mut exec.queued;
+    queued.clear();
+    queued.resize(s_count, true);
+    let queue = &mut exec.queue;
+    queue.clear();
+    queue.extend(0..s_count);
     let mut done = 0usize;
 
     while let Some(s) = queue.pop_front() {
@@ -310,22 +408,10 @@ pub fn execute(
 
     if done != total {
         return Err(ScheduleError::Deadlock {
-            diagnosis: diagnose(&orders, &cursor, s_count, v_stages),
+            diagnosis: diagnose(&orders, &exec.cursor, s_count, v_stages),
         });
     }
-    Ok(Schedule {
-        chunks: v,
-        fwd_start: fs,
-        fwd_end: fe,
-        bwd_start: bs,
-        bwd_end: be,
-        wgt_start: ws,
-        wgt_end: we,
-        fwd_arrive: fa,
-        bwd_arrive: ba,
-        send_busy,
-        recv_busy,
-    })
+    Ok(sched)
 }
 
 /// Makespan increase attributable to P2P: the schedule executed with the
@@ -348,10 +434,23 @@ pub fn exposed_comm_us_given(
     times: &TaskTimes,
     with_comm_makespan: f64,
 ) -> Result<f64, ScheduleError> {
+    exposed_comm_us_given_exec(schedule, times, with_comm_makespan, &mut Executor::new())
+}
+
+/// [`exposed_comm_us_given`] with executor buffer reuse — the zero-send
+/// counterfactual run borrows and returns the caller's recycled matrices.
+pub fn exposed_comm_us_given_exec(
+    schedule: &dyn PipelineSchedule,
+    times: &TaskTimes,
+    with_comm_makespan: f64,
+    exec: &mut Executor,
+) -> Result<f64, ScheduleError> {
     if !times.has_sends() {
         return Ok(0.0);
     }
-    let without = execute(schedule, &times.zero_sends())?.makespan();
+    let zeroed = exec.execute(schedule, &times.zero_sends())?;
+    let without = zeroed.makespan();
+    exec.recycle(zeroed);
     Ok((with_comm_makespan - without).max(0.0))
 }
 
@@ -532,6 +631,33 @@ mod tests {
                 assert!(s.wgt_start[st][i] >= s.bwd_end[st][i] - 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn executor_reuse_is_bit_identical_across_shapes() {
+        // Recycled matrices must produce the same schedules as fresh
+        // allocations, including when the shape shrinks or grows between
+        // runs and when W-task matrices appear/disappear.
+        let mut exec = Executor::new();
+        for kind in ScheduleKind::all(2) {
+            let t = TaskTimes::uniform_comm(4, 8, 2.0, 4.0, 0.5).with_overlap(0.3);
+            let fresh = execute(kind.build().as_ref(), &t).unwrap();
+            let reused = exec.execute(kind.build().as_ref(), &t).unwrap();
+            assert_eq!(fresh.fwd_start, reused.fwd_start, "{kind}");
+            assert_eq!(fresh.bwd_end, reused.bwd_end, "{kind}");
+            assert_eq!(fresh.wgt_start, reused.wgt_start, "{kind}");
+            assert_eq!(fresh.fwd_arrive, reused.fwd_arrive, "{kind}");
+            assert_eq!(fresh.send_busy, reused.send_busy, "{kind}");
+            assert_eq!(fresh.recv_busy, reused.recv_busy, "{kind}");
+            assert_eq!(fresh.makespan(), reused.makespan(), "{kind}");
+            exec.recycle(reused);
+        }
+        let t2 = TaskTimes::uniform(2, 3, 1.0, 2.0);
+        let fresh = execute(&OneFOneB, &t2).unwrap();
+        let reused = exec.execute(&OneFOneB, &t2).unwrap();
+        assert_eq!(fresh.fwd_start, reused.fwd_start);
+        assert_eq!(fresh.wgt_start, reused.wgt_start);
+        assert_eq!(fresh.makespan(), reused.makespan());
     }
 
     #[test]

@@ -8,7 +8,10 @@ pub mod exec;
 pub mod partition;
 pub mod schedule;
 
-pub use exec::{execute, exposed_comm_us, exposed_comm_us_given, ScheduleError};
+pub use exec::{
+    execute, exposed_comm_us, exposed_comm_us_given, exposed_comm_us_given_exec, Executor,
+    ScheduleError,
+};
 pub use partition::{encoder_allocation, paper_allocation};
 pub use schedule::{
     one_f_one_b, render_ascii, render_ascii_for, ClosedFormInputs, GPipe, Interleaved1F1B,

@@ -1050,7 +1050,7 @@ mod tests {
                 for ti in 0..s.wgt_start[st].len() {
                     intervals.push((s.wgt_start[st][ti], s.wgt_end[st][ti]));
                 }
-                intervals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                intervals.sort_by(|a, b| a.0.total_cmp(&b.0));
                 for w in intervals.windows(2) {
                     assert!(w[1].0 >= w[0].1 - 1e-12, "overlap at stage {st} under {kind}");
                 }

@@ -18,6 +18,7 @@ use std::collections::HashMap;
 
 use crate::config::{ModelCfg, ParallelCfg, Platform};
 use crate::ops::{OpInstance, OpKind};
+use crate::predictor::opcache::{op_key, LocalOpCache, OpKey, OpPredictionCache};
 use crate::predictor::registry::BatchPredictor;
 use crate::sampling::DatasetKey;
 use crate::trainrun::{stage_plans_mode, StagePlan};
@@ -59,70 +60,25 @@ impl ComponentPrediction {
     }
 }
 
-/// Predict every distinct operator once, reusing results across the
-/// repeated encoder blocks (the hot path for sweeps: unique ops per
-/// config ~ 40, not ~ 4000).
-///
-/// Two-phase: `prefetch` gathers all distinct (operator, features) pairs
-/// and issues ONE `predict_batch` call per route, so the XLA/coordinator
-/// backend sees full batches instead of 1-row deadline flushes (§Perf:
-/// this cut served-prediction latency ~5x and raised mean batch fill from
-/// 1.0 to ~7 rows on the e2e driver).
-struct OpCache {
-    cache: HashMap<(DatasetKey, Vec<u64>), f64>,
-}
-
-fn op_bits(op: &OpInstance) -> Vec<u64> {
-    op.features.iter().map(|f| f.to_bits()).collect()
-}
-
-impl OpCache {
-    fn new() -> OpCache {
-        OpCache { cache: HashMap::new() }
-    }
-
-    /// Batch-predict every distinct op in `ops` in one call per route.
-    fn prefetch<'a>(
-        &mut self,
-        pred: &mut dyn BatchPredictor,
-        ops: impl Iterator<Item = &'a OpInstance>,
-    ) {
-        let mut by_key: HashMap<DatasetKey, (Vec<Vec<u64>>, Vec<Vec<f64>>)> = HashMap::new();
-        for op in ops {
-            let bits = op_bits(op);
-            let key = (op.kind, op.dir);
-            if self.cache.contains_key(&(key, bits.clone())) {
-                continue;
-            }
-            let (seen, rows) = by_key.entry(key).or_default();
-            if !seen.contains(&bits) {
-                seen.push(bits);
-                rows.push(op.features.clone());
-            }
-        }
-        for (key, (seen, rows)) in by_key {
-            let preds = pred.predict_batch(key, &rows);
-            for (bits, v) in seen.into_iter().zip(preds) {
-                self.cache.insert((key, bits), v);
-            }
-        }
-    }
-
-    fn predict(&mut self, pred: &mut dyn BatchPredictor, op: &OpInstance) -> f64 {
-        let key = ((op.kind, op.dir), op_bits(op));
-        if let Some(&v) = self.cache.get(&key) {
-            return v;
-        }
-        let v = pred.predict_op(op);
-        self.cache.insert(key, v);
-        v
-    }
+/// Every operator a set of stage plans predicts, in deterministic plan
+/// order — the exact stream both the per-request prefetch and the sweep
+/// engine's cross-config prefetch dedup over.
+pub fn plan_ops(plans: &[StagePlan]) -> impl Iterator<Item = &OpInstance> {
+    plans.iter().flat_map(|p| {
+        p.fwd_ops
+            .iter()
+            .chain(p.bwd_ops.iter())
+            .chain(p.pp_send_fwd.iter())
+            .chain(p.pp_send_bwd.iter())
+            .chain(std::iter::once(&p.dp_allreduce))
+            .chain(std::iter::once(&p.dp_allgather))
+            .chain(std::iter::once(&p.optimizer))
+    })
 }
 
 fn stage_time(
     plan_ops: &[OpInstance],
-    cache: &mut OpCache,
-    pred: &mut dyn BatchPredictor,
+    get: &mut dyn FnMut(&OpInstance) -> f64,
 ) -> (f64, f64, Vec<f64>) {
     // returns (stage_compute_total, encoder_portion, mp_ar_samples);
     // PP P2P is predicted separately as a first-class transfer edge
@@ -130,7 +86,7 @@ fn stage_time(
     let mut enc = 0.0;
     let mut ars = Vec::new();
     for op in plan_ops {
-        let t = cache.predict(pred, op);
+        let t = get(op);
         total += t;
         match op.kind {
             OpKind::MpAllReduce => {
@@ -144,41 +100,80 @@ fn stage_time(
     (total, enc, ars)
 }
 
-/// Predict all components for one configuration.
+/// Predict all components for one configuration (private per-call cache;
+/// see [`predict_with_cache`] for the cross-config variant).
 pub fn predict(
     model: &ModelCfg,
     par: &ParallelCfg,
     platform: &Platform,
     pred: &mut dyn BatchPredictor,
 ) -> ComponentPrediction {
-    let plans: Vec<StagePlan> = stage_plans_mode(model, par, platform, /*paper_params=*/ true);
-    let mut cache = OpCache::new();
-    // Phase 1: one batched call per (operator, direction) route.
-    if pred.supports_batch() {
-        cache.prefetch(
-            pred,
-            plans.iter().flat_map(|p| {
-                p.fwd_ops
-                    .iter()
-                    .chain(p.bwd_ops.iter())
-                    .chain(p.pp_send_fwd.iter())
-                    .chain(p.pp_send_bwd.iter())
-                    .chain(std::iter::once(&p.dp_allreduce))
-                    .chain(std::iter::once(&p.dp_allgather))
-                    .chain(std::iter::once(&p.optimizer))
-            }),
-        );
-    }
+    let shared = OpPredictionCache::new();
+    predict_with_cache(model, par, platform, pred, &shared)
+}
 
+/// [`predict`] over a SHARED cross-config cache: distinct ops already
+/// predicted by earlier calls (any config, any schedule) are reused
+/// without a backend round-trip. The two-phase prefetch (one batched
+/// call per route — §Perf: this cut served-prediction latency ~5x and
+/// raised mean batch fill from 1.0 to ~7 rows on the e2e driver) now
+/// only fetches the cross-call misses; backends without batch support
+/// are prefetched per-op instead.
+pub fn predict_with_cache(
+    model: &ModelCfg,
+    par: &ParallelCfg,
+    platform: &Platform,
+    pred: &mut dyn BatchPredictor,
+    shared: &OpPredictionCache,
+) -> ComponentPrediction {
+    let plans: Vec<StagePlan> = stage_plans_mode(model, par, platform, /*paper_params=*/ true);
+    let mut cache = LocalOpCache::new(shared);
+    cache.prefetch(&mut *pred, plan_ops(&plans));
+    compose(model, par, &plans, &mut |op| cache.predict(&mut *pred, op))
+}
+
+/// Compose a prediction purely from an already-populated cache — no
+/// backend at all. The sweep engine uses this on its scoped worker
+/// threads after a single global prefetch over every enumerated config;
+/// `plans` MUST be the same plans that were prefetched (panics on a
+/// missing op, which would mean op enumeration is nondeterministic).
+pub fn predict_prefetched(
+    model: &ModelCfg,
+    par: &ParallelCfg,
+    plans: &[StagePlan],
+    shared: &OpPredictionCache,
+) -> ComponentPrediction {
+    let mut local: HashMap<OpKey, f64> = HashMap::new();
+    compose(model, par, plans, &mut |op| {
+        let key = op_key(op);
+        if let Some(&v) = local.get(&key) {
+            return v;
+        }
+        let v = shared
+            .lookup(&key)
+            .unwrap_or_else(|| panic!("op {:?} missing from prefetched cache", op.kind));
+        local.insert(key, v);
+        v
+    })
+}
+
+/// The component composition (eqs (3)-(7) and the per-schedule closed
+/// forms), parameterized over the per-op latency source.
+fn compose(
+    model: &ModelCfg,
+    par: &ParallelCfg,
+    plans: &[StagePlan],
+    get: &mut dyn FnMut(&OpInstance) -> f64,
+) -> ComponentPrediction {
     let mut stage_fwd = Vec::with_capacity(plans.len());
     let mut stage_bwd = Vec::with_capacity(plans.len());
     let mut enc_fwd = Vec::new();
     let mut enc_bwd = Vec::new();
     let mut mp_ars = Vec::new();
 
-    for plan in &plans {
-        let (tf, ef, ars_f) = stage_time(&plan.fwd_ops, &mut cache, pred);
-        let (tb, eb, ars_b) = stage_time(&plan.bwd_ops, &mut cache, pred);
+    for plan in plans {
+        let (tf, ef, ars_f) = stage_time(&plan.fwd_ops, get);
+        let (tb, eb, ars_b) = stage_time(&plan.bwd_ops, get);
         stage_fwd.push(tf);
         stage_bwd.push(tb);
         if plan.encoders > 0 {
@@ -201,23 +196,23 @@ pub fn predict(
     for (s, plan) in plans.iter().enumerate() {
         if let Some(op) = &plan.pp_send_fwd {
             if wraps || s + 1 < plans.len() {
-                p2p_us = p2p_us.max(cache.predict(pred, op));
+                p2p_us = p2p_us.max(get(op));
             }
         }
         if let Some(op) = &plan.pp_send_bwd {
             if wraps || s > 0 {
-                p2p_us = p2p_us.max(cache.predict(pred, op));
+                p2p_us = p2p_us.max(get(op));
             }
         }
     }
 
-    let dp_first = cache.predict(pred, &plans[0].dp_allreduce);
+    let dp_first = get(&plans[0].dp_allreduce);
     let mut max_update = f64::NEG_INFINITY;
     let mut allgather_of_max = 0.0;
     let mut updates = Vec::with_capacity(plans.len());
-    for plan in &plans {
-        let t_opt = cache.predict(pred, &plan.optimizer);
-        let t_ag = cache.predict(pred, &plan.dp_allgather);
+    for plan in plans {
+        let t_opt = get(&plan.optimizer);
+        let t_ag = get(&plan.dp_allgather);
         let u = t_opt + t_ag;
         updates.push(u);
         if u > max_update {
@@ -290,6 +285,7 @@ impl BatchPredictor for OraclePredictor {
 mod tests {
     use super::*;
     use crate::pipeline::ScheduleKind;
+    use crate::sampling::DatasetKey;
 
     fn cfg() -> (ModelCfg, ParallelCfg, Platform) {
         (ModelCfg::gpt20b(), ParallelCfg::new(4, 4, 8), Platform::perlmutter())
@@ -451,5 +447,43 @@ mod tests {
         let _ = predict(&m, &par, &p, &mut c);
         // 44 encoders x ~12 ops x 2 dirs would be >1000 without the cache
         assert!(c.0 < 120, "predicted {} ops", c.0);
+    }
+
+    #[test]
+    fn shared_cache_reuses_ops_across_configs_and_schedules() {
+        // Same degrees, different schedule: the op set is identical, so
+        // the second predict through a shared cache must cost ZERO new
+        // backend rows and return bit-identical per-op components.
+        struct Counting(usize);
+        impl BatchPredictor for Counting {
+            fn predict_batch(&mut self, _k: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+                self.0 += rows.len();
+                rows.iter().map(|r| r.iter().sum::<f64>().sqrt() + 1.0).collect()
+            }
+        }
+        use crate::predictor::opcache::OpPredictionCache;
+        let (m, par, p) = cfg();
+        let shared = OpPredictionCache::new();
+        let mut c = Counting(0);
+        let base = predict_with_cache(&m, &par, &p, &mut c, &shared);
+        let rows_first = c.0;
+        assert!(rows_first > 0);
+        let gpipe = predict_with_cache(
+            &m,
+            &par.with_schedule(ScheduleKind::GPipe),
+            &p,
+            &mut c,
+            &shared,
+        );
+        assert_eq!(c.0, rows_first, "schedule change must not refetch ops");
+        assert_eq!(base.stage_fwd_us, gpipe.stage_fwd_us);
+        assert_eq!(base.pp_p2p_us, gpipe.pp_p2p_us);
+        let s = shared.stats();
+        assert!(s.hits > 0 && s.hit_rate() > 0.4, "{s:?}");
+        // and predict_prefetched composes the same numbers with no backend
+        let plans = stage_plans_mode(&m, &par, &p, true);
+        let pre = predict_prefetched(&m, &par, &plans, &shared);
+        assert_eq!(pre.total_us, base.total_us);
+        assert_eq!(pre.update_us, base.update_us);
     }
 }

@@ -3,9 +3,11 @@
 //! Table-IX-style error analysis against simulated ground truth.
 
 pub mod registry;
+pub mod opcache;
 pub mod e2e;
 pub mod errors;
 
-pub use e2e::{predict, ComponentPrediction};
+pub use e2e::{predict, predict_with_cache, ComponentPrediction};
 pub use errors::{evaluate, ComponentErrors};
+pub use opcache::{CacheStats, OpPredictionCache};
 pub use registry::{BatchPredictor, Registry};

@@ -1,0 +1,434 @@
+//! Cross-config operator-prediction cache — the shareable keyed store
+//! (op-bits → µs) that used to live as a private per-`predict()` map
+//! inside `predictor::e2e`.
+//!
+//! Many configurations of a sweep lower to identical operator instances
+//! (the same `mp` produces the same GEMM shapes and collective volumes
+//! regardless of `pp`/`dp`/schedule), so a store that persists ACROSS
+//! `predict()` calls makes the second configuration onward near-free.
+//! The store is sharded behind [`std::sync::Mutex`]es so the sweep
+//! engine's scoped worker threads can read it concurrently, and it
+//! keeps hit/miss counters whose unit is deliberately coarse: one
+//! consult per DISTINCT operator per prediction request (never one per
+//! op occurrence — repeated encoder blocks would otherwise inflate the
+//! hit-rate to ~99% and hide how much cross-config sharing actually
+//! happens).
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::net::topology::NetPath;
+use crate::net::CommGeom;
+use crate::ops::{LoweredOp, OpInstance};
+use crate::predictor::registry::BatchPredictor;
+use crate::sampling::DatasetKey;
+
+/// Identity of one prediction: the (operator, direction) route plus the
+/// exact numeric identity bits — the regressor FEATURES and the LOWERED
+/// op (paths with per-hop contention, geometries, shapes). Two ops with
+/// the same key predict the same latency under ANY deterministic
+/// backend: feature-based regressors read only the feature section, but
+/// the simulator oracle reads the lowered op, and on contended
+/// topologies two ops can share features (same payload, same tier
+/// class) while their paths carry different contention — keying by
+/// features alone would let one config's time answer for another's.
+pub type OpKey = (DatasetKey, Vec<u64>);
+
+/// The cache key of an operator instance. The bit encoding is
+/// prefix-free (length-prefixed sections, tagged lowered variants), so
+/// distinct (features, lowered) pairs never collide.
+pub fn op_key(op: &OpInstance) -> OpKey {
+    let mut bits = Vec::with_capacity(op.features.len() + 12);
+    bits.push(op.features.len() as u64);
+    bits.extend(op.features.iter().map(|f| f.to_bits()));
+    lowered_bits(&op.lowered, &mut bits);
+    ((op.kind, op.dir), bits)
+}
+
+fn geom_bits(g: &CommGeom, out: &mut Vec<u64>) {
+    out.push(g.nodes as u64);
+    out.push(g.gpus_per_node as u64);
+}
+
+fn path_bits(p: &NetPath, out: &mut Vec<u64>) {
+    out.push(p.hops.len() as u64);
+    for h in &p.hops {
+        out.push(h.level as u64);
+        out.push(h.bw_gbs.to_bits());
+        out.push(h.lat_us.to_bits());
+        out.push(h.contention.to_bits());
+    }
+}
+
+fn lowered_bits(op: &LoweredOp, out: &mut Vec<u64>) {
+    match op {
+        LoweredOp::Gemm(s) => {
+            out.push(1);
+            out.extend([s.batch as u64, s.m as u64, s.k as u64, s.n as u64]);
+        }
+        LoweredOp::Mem { kind, elems, elem_bytes, rows } => {
+            out.push(2);
+            out.push(*kind as u64);
+            out.extend([elems.to_bits(), elem_bytes.to_bits(), rows.to_bits()]);
+        }
+        LoweredOp::Flash { flops, bytes } => {
+            out.push(3);
+            out.extend([flops.to_bits(), bytes.to_bits()]);
+        }
+        LoweredOp::AllReduce { bytes, geom, fabric } => {
+            out.push(4);
+            out.push(bytes.to_bits());
+            geom_bits(geom, out);
+            path_bits(fabric, out);
+        }
+        LoweredOp::AllGather { bytes_out, geom, fabric } => {
+            out.push(5);
+            out.push(bytes_out.to_bits());
+            geom_bits(geom, out);
+            path_bits(fabric, out);
+        }
+        LoweredOp::P2p { bytes, path } => {
+            out.push(6);
+            out.push(bytes.to_bits());
+            path_bits(path, out);
+        }
+        LoweredOp::Seq(v) => {
+            out.push(7);
+            out.push(v.len() as u64);
+            for o in v {
+                lowered_bits(o, out);
+            }
+        }
+    }
+}
+
+const SHARDS: usize = 16;
+
+/// Hit/miss/size snapshot of an [`OpPredictionCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Distinct-op consults served from the store (or from the pending
+    /// set of the same batched prefetch round).
+    pub hits: u64,
+    /// Distinct-op consults that required a backend round-trip.
+    pub misses: u64,
+    /// Distinct (route, features) entries currently stored.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// hits / (hits + misses); 0.0 before any consult.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Sharded-lock keyed store of per-operator latency predictions, µs.
+/// Safe to share across the sweep engine's scoped worker threads.
+pub struct OpPredictionCache {
+    shards: Vec<Mutex<HashMap<OpKey, f64>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for OpPredictionCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OpPredictionCache {
+    pub fn new() -> OpPredictionCache {
+        OpPredictionCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &OpKey) -> &Mutex<HashMap<OpKey, f64>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % SHARDS]
+    }
+
+    /// Stat-free lookup (used when re-reading ops already accounted for,
+    /// e.g. the engine's post-prefetch composition phase).
+    pub fn lookup(&self, key: &OpKey) -> Option<f64> {
+        self.shard(key).lock().unwrap().get(key).copied()
+    }
+
+    /// Counted lookup: the unit of the reported hit-rate. Call once per
+    /// distinct op per prediction request.
+    pub fn fetch(&self, key: &OpKey) -> Option<f64> {
+        let v = self.lookup(key);
+        self.record(v.is_some());
+        v
+    }
+
+    /// Record a consult outcome without touching the store — the sweep
+    /// engine uses this when an op is satisfied by the PENDING set of the
+    /// same global prefetch round (deduped before the round-trip, i.e. a
+    /// cross-config hit even though the store has no value yet).
+    pub fn record(&self, hit: bool) {
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn insert(&self, key: OpKey, v: f64) {
+        self.shard(&key).lock().unwrap().insert(key, v);
+    }
+
+    /// Distinct entries stored.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+
+    /// Fetch a set of distinct, known-uncached ops through the backend —
+    /// ONE `predict_batch` call per (operator, direction) route, or one
+    /// `predict_op` per op for backends without batch support — storing
+    /// and returning every (key, value). The single fetch path shared by
+    /// the per-request prefetch and the sweep engine's cross-config
+    /// prefetch.
+    pub fn fetch_misses(
+        &self,
+        pred: &mut dyn BatchPredictor,
+        misses: &[&OpInstance],
+    ) -> Vec<(OpKey, f64)> {
+        let mut out = Vec::with_capacity(misses.len());
+        if pred.supports_batch() {
+            let mut by_route: HashMap<DatasetKey, (Vec<OpKey>, Vec<Vec<f64>>)> = HashMap::new();
+            for op in misses {
+                let (keys, rows) = by_route.entry((op.kind, op.dir)).or_default();
+                keys.push(op_key(op));
+                rows.push(op.features.clone());
+            }
+            for (route, (keys, rows)) in by_route {
+                let preds = pred.predict_batch(route, &rows);
+                for (key, v) in keys.into_iter().zip(preds) {
+                    self.insert(key.clone(), v);
+                    out.push((key, v));
+                }
+            }
+        } else {
+            for op in misses {
+                let v = pred.predict_op(op);
+                let key = op_key(op);
+                self.insert(key.clone(), v);
+                out.push((key, v));
+            }
+        }
+        out
+    }
+}
+
+/// Per-prediction-request view over a shared [`OpPredictionCache`]:
+/// dedups the request's own repeated ops locally (repeated encoder
+/// blocks), consults the shared store once per distinct op (counted),
+/// and falls back to the backend only on a true cross-request miss.
+/// This is the two-phase `OpCache` that used to live in `predictor::e2e`,
+/// now backed by the shareable store.
+pub struct LocalOpCache<'a> {
+    shared: &'a OpPredictionCache,
+    local: HashMap<OpKey, f64>,
+}
+
+impl<'a> LocalOpCache<'a> {
+    pub fn new(shared: &'a OpPredictionCache) -> LocalOpCache<'a> {
+        LocalOpCache { shared, local: HashMap::new() }
+    }
+
+    /// Batch-predict every distinct uncached op in `ops`: one
+    /// `predict_batch` call per (operator, direction) route (§Perf: full
+    /// batches instead of 1-row deadline flushes). For backends without
+    /// batch support this is a NO-OP — they are predicted lazily by
+    /// [`LocalOpCache::predict`], only for the ops the composition
+    /// actually consults (the historical behavior; eager per-op
+    /// prefetching would charge e.g. the simulator oracle for wrap-hop
+    /// sends a non-interleaved closed form never reads).
+    pub fn prefetch<'b>(
+        &mut self,
+        pred: &mut dyn BatchPredictor,
+        ops: impl Iterator<Item = &'b OpInstance>,
+    ) {
+        if !pred.supports_batch() {
+            return;
+        }
+        let mut pending: HashSet<OpKey> = HashSet::new();
+        let mut misses: Vec<&OpInstance> = Vec::new();
+        for op in ops {
+            let key = op_key(op);
+            if self.local.contains_key(&key) || pending.contains(&key) {
+                continue;
+            }
+            if let Some(v) = self.shared.fetch(&key) {
+                self.local.insert(key, v);
+                continue;
+            }
+            pending.insert(key);
+            misses.push(op);
+        }
+        for (key, v) in self.shared.fetch_misses(pred, &misses) {
+            self.local.insert(key, v);
+        }
+    }
+
+    /// Cached single-op prediction: local → shared (counted) → backend.
+    pub fn predict(&mut self, pred: &mut dyn BatchPredictor, op: &OpInstance) -> f64 {
+        let key = op_key(op);
+        if let Some(&v) = self.local.get(&key) {
+            return v;
+        }
+        if let Some(v) = self.shared.fetch(&key) {
+            self.local.insert(key, v);
+            return v;
+        }
+        let v = pred.predict_op(op);
+        self.shared.insert(key.clone(), v);
+        self.local.insert(key, v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelCfg, ParallelCfg, Platform};
+    use crate::ops::build::{encoder_ops, Workload};
+    use crate::ops::Dir;
+
+    /// Backend that counts rows it was actually asked to predict.
+    struct Counting {
+        rows: usize,
+        ops: usize,
+    }
+
+    impl BatchPredictor for Counting {
+        fn predict_batch(&mut self, _k: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+            self.rows += rows.len();
+            rows.iter().map(|r| r.iter().sum()).collect()
+        }
+
+        fn predict_op(&mut self, op: &OpInstance) -> f64 {
+            self.ops += 1;
+            op.features.iter().sum()
+        }
+    }
+
+    fn sample_ops() -> Vec<OpInstance> {
+        let m = ModelCfg::gpt20b();
+        let wl = Workload::new(&m, &ParallelCfg::new(4, 4, 8), &Platform::perlmutter());
+        let mut ops = encoder_ops(&m, &wl, Dir::Fwd);
+        ops.extend(encoder_ops(&m, &wl, Dir::Fwd)); // duplicate encoder
+        ops
+    }
+
+    #[test]
+    fn prefetch_dedupes_within_and_across_requests() {
+        let shared = OpPredictionCache::new();
+        let ops = sample_ops();
+        let distinct: HashSet<OpKey> = ops.iter().map(op_key).collect();
+        let mut pred = Counting { rows: 0, ops: 0 };
+        let mut local = LocalOpCache::new(&shared);
+        local.prefetch(&mut pred, ops.iter());
+        assert_eq!(pred.rows, distinct.len(), "one row per distinct op");
+        assert_eq!(shared.len(), distinct.len());
+        let s = shared.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.misses, distinct.len() as u64);
+        // a second request over the same ops hits the shared store
+        let mut local2 = LocalOpCache::new(&shared);
+        local2.prefetch(&mut pred, ops.iter());
+        assert_eq!(pred.rows, distinct.len(), "no new backend rows");
+        let s = shared.stats();
+        assert_eq!(s.hits, distinct.len() as u64);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_batch_backends_prefetch_nothing_and_predict_lazily() {
+        struct NoBatch(Counting);
+        impl BatchPredictor for NoBatch {
+            fn predict_batch(&mut self, k: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+                self.0.predict_batch(k, rows)
+            }
+            fn predict_op(&mut self, op: &OpInstance) -> f64 {
+                self.0.predict_op(op)
+            }
+            fn supports_batch(&self) -> bool {
+                false
+            }
+        }
+        let shared = OpPredictionCache::new();
+        let ops = sample_ops();
+        let distinct: HashSet<OpKey> = ops.iter().map(op_key).collect();
+        let mut pred = NoBatch(Counting { rows: 0, ops: 0 });
+        let mut local = LocalOpCache::new(&shared);
+        // prefetch is a no-op: lazy backends only pay for consulted ops
+        local.prefetch(&mut pred, ops.iter());
+        assert_eq!(pred.0.rows, 0, "no batch calls");
+        assert_eq!(pred.0.ops, 0, "no eager per-op calls");
+        for op in &ops {
+            local.predict(&mut pred, op);
+        }
+        assert_eq!(pred.0.ops, distinct.len(), "one lazy predict_op per distinct op");
+        // the eager path for backend-free composition is fetch_misses
+        let shared2 = OpPredictionCache::new();
+        let mut pred2 = NoBatch(Counting { rows: 0, ops: 0 });
+        let refs: Vec<&OpInstance> = {
+            let mut seen = HashSet::new();
+            ops.iter().filter(|o| seen.insert(op_key(o))).collect()
+        };
+        let fetched = shared2.fetch_misses(&mut pred2, &refs);
+        assert_eq!(fetched.len(), distinct.len());
+        assert_eq!(pred2.0.ops, distinct.len());
+        assert_eq!(shared2.len(), distinct.len());
+    }
+
+    #[test]
+    fn predict_consults_shared_once_per_distinct_op() {
+        let shared = OpPredictionCache::new();
+        let ops = sample_ops();
+        let mut pred = Counting { rows: 0, ops: 0 };
+        let mut local = LocalOpCache::new(&shared);
+        for op in &ops {
+            let v = local.predict(&mut pred, op);
+            assert_eq!(v, op.features.iter().sum::<f64>());
+        }
+        let distinct: HashSet<OpKey> = ops.iter().map(op_key).collect();
+        let s = shared.stats();
+        // each distinct op: one counted miss, duplicates served locally
+        assert_eq!(s.misses, distinct.len() as u64);
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.entries, distinct.len());
+    }
+
+    #[test]
+    fn empty_cache_reports_zero_rate() {
+        let c = OpPredictionCache::new();
+        assert!(c.is_empty());
+        assert_eq!(c.stats().hit_rate(), 0.0);
+    }
+}

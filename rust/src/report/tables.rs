@@ -2,12 +2,12 @@
 //! prediction errors), and the pipeline-schedule comparison generators.
 
 use crate::config::{ModelCfg, ParallelCfg, Platform};
-use crate::net::topology::{ClusterTopology, RankMap};
-use crate::pipeline::{execute, ScheduleError, ScheduleKind, TaskTimes};
+use crate::net::topology::{ClusterTopology, RankMap, TrafficVolumes};
+use crate::pipeline::{Executor, ScheduleError, ScheduleKind, TaskTimes};
 use crate::predictor::errors::ComponentErrors;
 use crate::predictor::registry::BatchPredictor;
 use crate::predictor::{evaluate, predict};
-use crate::trainrun::{stability, stage_plans, try_run_batch_with_plans, BatchTrace};
+use crate::trainrun::{stability, stage_plans, try_run_batch_with_plans_exec, BatchTrace};
 use crate::util::stats;
 
 /// The five evaluation configurations of Tables VIII/IX:
@@ -87,6 +87,23 @@ pub fn schedule_compare_markdown(
 ) -> Result<String, ScheduleError> {
     let m = model.iters_per_update;
     let n_batches = n_batches.max(1);
+    // Predicted column: all valid schedules evaluated through the sweep
+    // engine's shared op cache in one pass (their op sets are identical,
+    // so every schedule after the first composes entirely from cache).
+    let valid: Vec<ParallelCfg> = ScheduleKind::all(interleave_chunks)
+        .into_iter()
+        .filter(|k| k.build().validate(par.pp, m).is_ok())
+        .map(|k| par.with_schedule(k))
+        .collect();
+    let engine = crate::sweep::Engine::new();
+    let mut oracle = crate::predictor::e2e::OraclePredictor { platform: platform.clone() };
+    let predicted: std::collections::HashMap<ScheduleKind, f64> = engine
+        .evaluate(model, platform, &valid, &mut oracle)
+        .into_iter()
+        .map(|row| (row.par.schedule, row.prediction.total_us))
+        .collect();
+    // one executor across every schedule's batches and counterfactuals
+    let mut exec = Executor::new();
     let mut rows = Vec::new();
     for kind in ScheduleKind::all(interleave_chunks) {
         let cfg = par.with_schedule(kind);
@@ -98,6 +115,7 @@ pub fn schedule_compare_markdown(
                 "—".into(),
                 "—".into(),
                 "—".into(),
+                "—".into(),
                 format!("unavailable: {e}"),
             ]);
             continue;
@@ -105,7 +123,8 @@ pub fn schedule_compare_markdown(
         let plans = stage_plans(model, &cfg, platform);
         let mut best: Option<BatchTrace> = None;
         for i in 0..n_batches {
-            let tr = try_run_batch_with_plans(model, &cfg, &plans, platform, seed + i as u64)?;
+            let tr =
+                try_run_batch_with_plans_exec(model, &cfg, &plans, platform, seed + i as u64, &mut exec)?;
             if best.as_ref().is_none_or(|b| tr.total_us < b.total_us) {
                 best = Some(tr);
             }
@@ -131,11 +150,16 @@ pub fn schedule_compare_markdown(
         )
         .with_uniform_sends(tr.pp_p2p_us)
         .with_overlap(cfg.p2p_overlap());
-        let sched = execute(kind.build().as_ref(), &times)?;
+        let sched = exec.execute(kind.build().as_ref(), &times)?;
         let bubble = (0..cfg.pp).map(|s| sched.bubble_fraction(s)).fold(0.0, f64::max);
+        exec.recycle(sched);
         rows.push(vec![
             kind.label(),
             format!("{:.2}", tr.total_us / 1e6),
+            predicted
+                .get(&kind)
+                .map(|us| format!("{:.2}", us / 1e6))
+                .unwrap_or_else(|| "—".into()),
             format!("{:.2}", closed / 1e6),
             format!("{:+.2}%", stats::rel_err_pct(closed, tr.total_us)),
             format!("{:.1}%", bubble * 100.0),
@@ -145,6 +169,7 @@ pub fn schedule_compare_markdown(
     let headers: Vec<String> = [
         "Schedule",
         "Simulated (s)",
+        "Predicted (s)",
         "Closed form (s)",
         "Closed-form err",
         "Max bubble",
@@ -155,10 +180,12 @@ pub fn schedule_compare_markdown(
     .collect();
     Ok(format!(
         "# Pipeline schedules — {}({}) on {}, {} micro-batches, P2P overlap {:.0}%\n\n{}\n\
-         Simulated = fastest of {n_batches} event-accurate batches; closed form uses the\n\
-         measured max stage times plus the per-crossing P2P (1F1B and GPipe share one\n\
-         closed form). \"P2P exposed\" is the simulated makespan minus the same schedule\n\
-         with every transfer zeroed.\n",
+         Simulated = fastest of {n_batches} event-accurate batches; predicted = the\n\
+         oracle-fed predictor composition via the sweep engine's shared op cache (all\n\
+         schedules share one op set, so only the first pays backend calls); closed form\n\
+         uses the measured max stage times plus the per-crossing P2P (1F1B and GPipe\n\
+         share one closed form). \"P2P exposed\" is the simulated makespan minus the\n\
+         same schedule with every transfer zeroed.\n",
         model.name,
         par.label(),
         platform.name,
@@ -168,11 +195,42 @@ pub fn schedule_compare_markdown(
     ))
 }
 
+/// Per-invocation transfer volumes of a (model, parallelism) pair, for
+/// the byte columns of the group→tier traffic matrix: the MP all-reduce
+/// moves `b·l·d` fp16 activations, the DP all-reduce the worst stage's
+/// fp16 gradients, and each PP boundary `b·l·d/|mp|` fp16 activations
+/// (Megatron scatter-gather).
+pub fn traffic_volumes(model: &ModelCfg, par: &ParallelCfg) -> TrafficVolumes {
+    use crate::ops::params::{stage_params_paper, StageRole};
+    use crate::pipeline::encoder_allocation;
+    let bld = (model.micro_batch * model.l * model.d) as f64 * 2.0; // fp16
+    let vocab = crate::ops::params::padded_vocab(model.vocab, par.mp);
+    let alloc = encoder_allocation(model.encoders, par.pp);
+    let max_params = alloc
+        .iter()
+        .enumerate()
+        .map(|(s, &n_enc)| {
+            stage_params_paper(StageRole::of(s, par.pp), n_enc, model.d, vocab, par.mp)
+        })
+        .fold(0.0, f64::max);
+    TrafficVolumes {
+        mp_ring_bytes: TrafficVolumes::ring_link_bytes(par.mp, bld),
+        dp_ring_bytes: TrafficVolumes::ring_link_bytes(par.dp, max_params * 2.0),
+        pp_bytes: bld / par.mp as f64,
+    }
+}
+
 /// `fgpm topo`: cluster tiers, group geometries under the rank map, the
-/// group→tier traffic matrix, and every pipeline boundary's resolved
+/// group→tier traffic matrix (crossing counts AND per-tier bytes for the
+/// model's transfer volumes), and every pipeline boundary's resolved
 /// path (the wrap-around hop included) with its per-hop time for a
 /// reference payload.
-pub fn topo_markdown(par: &ParallelCfg, platform: &Platform, payload_mb: f64) -> String {
+pub fn topo_markdown(
+    model: &ModelCfg,
+    par: &ParallelCfg,
+    platform: &Platform,
+    payload_mb: f64,
+) -> String {
     use crate::net::topology::p2p_path_time_us;
     let topo = ClusterTopology::of(platform);
     let map = RankMap::new(par, platform);
@@ -195,15 +253,39 @@ pub fn topo_markdown(par: &ParallelCfg, platform: &Platform, payload_mb: f64) ->
         &tier_rows,
     );
 
+    let gib = |b: f64| {
+        if b == 0.0 {
+            "0".to_string()
+        } else {
+            format!("{:.3}", b / (1024.0 * 1024.0 * 1024.0))
+        }
+    };
+    let vols = traffic_volumes(model, par);
     let traffic_rows: Vec<Vec<String>> = map
-        .traffic_matrix()
+        .traffic_matrix_with(&vols)
         .into_iter()
         .map(|r| {
-            vec![r.kind, r.intra.to_string(), r.rail.to_string(), r.spine.to_string()]
+            vec![
+                r.kind,
+                r.intra.to_string(),
+                r.rail.to_string(),
+                r.spine.to_string(),
+                gib(r.intra_bytes),
+                gib(r.rail_bytes),
+                gib(r.spine_bytes),
+            ]
         })
         .collect();
     let traffic = markdown_table(
-        &["group traffic".into(), "intra".into(), "rail".into(), "spine".into()],
+        &[
+            "group traffic".into(),
+            "intra".into(),
+            "rail".into(),
+            "spine".into(),
+            "intra GiB".into(),
+            "rail GiB".into(),
+            "spine GiB".into(),
+        ],
         &traffic_rows,
     );
 
@@ -371,20 +453,46 @@ mod tests {
 
     #[test]
     fn topo_markdown_renders_matrix_and_wrap() {
-        let md = topo_markdown(&ParallelCfg::parse("4-4-8").unwrap(), &Platform::perlmutter(), 25.0);
+        let model = ModelCfg::gpt20b();
+        let md = topo_markdown(
+            &model,
+            &ParallelCfg::parse("4-4-8").unwrap(),
+            &Platform::perlmutter(),
+            25.0,
+        );
         assert!(md.contains("MP all-reduce ring"), "{md}");
         assert!(md.contains("PP wrap-around"), "{md}");
         assert!(md.contains("(wrap)"), "{md}");
         assert!(md.contains("rail"), "{md}");
         assert!(md.contains("tp-first"), "{md}");
+        assert!(md.contains("intra GiB"), "{md}");
+        // mp=4 on one node: the MP ring's bytes land on the intra tier —
+        // 4 pairs x 1.5 x (b·l·d fp16) = 4 x 1.5 x 0.09375 GiB
+        assert!(md.contains("| MP all-reduce ring | 4 | 0 | 0 | 0.562 | 0 | 0 |"), "{md}");
         // dp-first flips the MP fabric onto the rail tier
         let dpf = topo_markdown(
+            &model,
             &ParallelCfg::parse("4-4-8@dp-first").unwrap(),
             &Platform::perlmutter(),
             25.0,
         );
         assert!(dpf.contains("dp-first"), "{dpf}");
         assert!(dpf.contains("MP group: CommGeom { nodes: 4"), "{dpf}");
+    }
+
+    #[test]
+    fn traffic_volumes_match_table_i_shapes() {
+        let model = ModelCfg::gpt20b();
+        let par = ParallelCfg::parse("4-4-8").unwrap();
+        let v = traffic_volumes(&model, &par);
+        let bld = (4 * 2048 * 6144) as f64 * 2.0;
+        assert_eq!(v.mp_ring_bytes, 1.5 * bld); // 2·(4-1)/4
+        assert_eq!(v.pp_bytes, bld / 4.0);
+        assert!(v.dp_ring_bytes > 0.0);
+        // single-member groups carry nothing
+        let solo = traffic_volumes(&model, &ParallelCfg::new(4, 1, 1));
+        assert_eq!(solo.mp_ring_bytes, 0.0);
+        assert_eq!(solo.dp_ring_bytes, 0.0);
     }
 
     #[test]

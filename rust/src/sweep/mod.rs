@@ -1,0 +1,385 @@
+//! The sweep engine: evaluates the strategy × schedule × rank-map
+//! cross-product through a cross-config op-prediction cache, a single
+//! batched prefetch round-trip, and scoped-thread parallel composition.
+//!
+//! The paper's headline value is rapid CPU-only design-space exploration
+//! (pick the best pp-mp-dp strategy without burning node-hours), but a
+//! naive sweep rebuilds the entire prediction pipeline per strategy.
+//! This engine exploits two structural facts:
+//!
+//! 1. **Configs share operators.** The lowered op set depends only on
+//!    (model, mp, topology paths) — not on the schedule, and largely not
+//!    on pp/dp — so a `--schedule all` sweep re-predicts identical
+//!    GEMM/collective shapes four times over. The engine dedups distinct
+//!    ops ACROSS every enumerated config first and issues ONE
+//!    [`BatchPredictor::predict_batch`] call per route for the union,
+//!    making the second config onward near-free
+//!    ([`OpPredictionCache`] hit-rates ≥ 50% on `--schedule all`).
+//! 2. **Composition is embarrassingly parallel.** Once every op latency
+//!    sits in the shared cache, per-config composition needs no backend
+//!    at all, so configs shard across `std::thread::scope` workers (the
+//!    coordinator's no-tokio crate policy) behind the sharded-lock cache
+//!    with results slotted by index — output is deterministic and
+//!    bit-identical to the serial uncached path (property-tested in
+//!    `tests/prop_sweep.rs`).
+//!
+//! `fgpm sweep`, `fgpm schedules`, `examples/capacity_planning.rs`, and
+//! the coordinator service all ride this path; `benches/bench_hotpath.rs`
+//! measures it and emits `BENCH_sweep.json` (configs/sec, hit-rate).
+
+use std::time::{Duration, Instant};
+
+use crate::config::{ModelCfg, ParallelCfg, Platform};
+use crate::net::topology::RankOrder;
+use crate::ops::memory;
+use crate::pipeline::ScheduleKind;
+use crate::predictor::e2e::{plan_ops, predict_prefetched, ComponentPrediction};
+use crate::predictor::opcache::{op_key, CacheStats, OpKey, OpPredictionCache};
+use crate::predictor::registry::BatchPredictor;
+use crate::trainrun::{stage_plans_mode, StagePlan};
+
+/// The cross-product a sweep enumerates.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Total GPUs every strategy must use exactly.
+    pub gpus: usize,
+    /// Pipeline/model parallel degree caps (power-of-two enumeration).
+    pub max_pp: usize,
+    pub max_mp: usize,
+    /// Pipeline schedules to cross (e.g. [`ScheduleKind::all`]).
+    pub schedules: Vec<ScheduleKind>,
+    /// Rank placements to cross (e.g. [`RankOrder::all`]).
+    pub rank_orders: Vec<RankOrder>,
+    /// PP P2P / compute overlap fraction applied to every config.
+    pub p2p_overlap: f64,
+}
+
+impl SweepSpec {
+    /// The default sweep shape: pp/mp capped at 16, 1F1B only, tp-first.
+    pub fn new(gpus: usize) -> SweepSpec {
+        SweepSpec {
+            gpus,
+            max_pp: 16,
+            max_mp: 16,
+            schedules: vec![ScheduleKind::OneFOneB],
+            rank_orders: vec![RankOrder::TpFirst],
+            p2p_overlap: 0.0,
+        }
+    }
+}
+
+/// One evaluated configuration.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub par: ParallelCfg,
+    pub prediction: ComponentPrediction,
+    /// Estimated per-GPU memory, GiB.
+    pub mem_gib: f64,
+}
+
+impl SweepRow {
+    /// Predicted batch seconds (the ranking key).
+    pub fn seconds(&self) -> f64 {
+        self.prediction.total_us / 1e6
+    }
+}
+
+/// Everything a sweep produced, rows ranked fastest-first.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub rows: Vec<SweepRow>,
+    /// Strategies skipped because they exceed HBM.
+    pub skipped_oom: usize,
+    /// Strategies skipped because the schedule rejects the geometry.
+    pub skipped_sched: usize,
+    /// Cache counters accumulated on the engine (hit unit: one consult
+    /// per distinct op per config).
+    pub cache: CacheStats,
+    pub elapsed: Duration,
+}
+
+impl SweepReport {
+    pub fn configs_per_sec(&self) -> f64 {
+        let s = self.elapsed.as_secs_f64();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.rows.len() as f64 / s
+        }
+    }
+}
+
+/// Enumerate the feasible members of the cross-product, in deterministic
+/// (degrees, schedule, rank-order) order, with the same filters the
+/// historical serial sweep applied. Returns (configs, skipped_oom,
+/// skipped_sched).
+pub fn feasible_configs(
+    model: &ModelCfg,
+    platform: &Platform,
+    spec: &SweepSpec,
+) -> (Vec<ParallelCfg>, usize, usize) {
+    let mut cfgs = Vec::new();
+    let (mut skipped_oom, mut skipped_sched) = (0usize, 0usize);
+    for par in ParallelCfg::enumerate_schedules(spec.gpus, spec.max_pp, spec.max_mp, &spec.schedules)
+    {
+        // every filter below is placement-independent, so it runs (and
+        // its skip counter increments) once per strategy — not once per
+        // crossed rank order
+        let par = par.with_p2p_overlap(spec.p2p_overlap);
+        if !par.fits(platform) || model.h % par.mp != 0 {
+            continue;
+        }
+        if model.iters_per_update < par.pp {
+            continue; // deep pipelines need enough micro-batches
+        }
+        if par.validate_schedule(model.iters_per_update).is_err() {
+            skipped_sched += 1;
+            continue; // e.g. interleaving needs m % stages == 0
+        }
+        if !memory::fits_memory(model, &par, platform) {
+            skipped_oom += 1;
+            continue; // would OOM before producing a single batch
+        }
+        for &order in &spec.rank_orders {
+            cfgs.push(par.with_rank_order(order));
+        }
+    }
+    (cfgs, skipped_oom, skipped_sched)
+}
+
+/// The sweep engine: owns the cross-config [`OpPredictionCache`] and the
+/// worker budget. Construct once per command/service; reuse across
+/// sweeps to keep the cache warm.
+pub struct Engine {
+    cache: OpPredictionCache,
+    threads: usize,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    /// One worker per available core.
+    pub fn new() -> Engine {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Engine { cache: OpPredictionCache::new(), threads }
+    }
+
+    /// Cap (or pin, with 1) the evaluation worker count.
+    pub fn with_threads(mut self, threads: usize) -> Engine {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// The shared op-prediction store (hit/miss counters included).
+    pub fn cache(&self) -> &OpPredictionCache {
+        &self.cache
+    }
+
+    /// Evaluate an explicit list of configurations (all must be feasible:
+    /// `model.h % mp == 0`, schedule accepts the geometry). Results come
+    /// back in input order. Phase A builds every config's plans and
+    /// prefetches the cross-config-deduped op union in one
+    /// `predict_batch` round-trip per route; phase B composes each
+    /// config on scoped worker threads from the cache alone.
+    pub fn evaluate(
+        &self,
+        model: &ModelCfg,
+        platform: &Platform,
+        cfgs: &[ParallelCfg],
+        pred: &mut dyn BatchPredictor,
+    ) -> Vec<SweepRow> {
+        if cfgs.is_empty() {
+            return Vec::new();
+        }
+        let plans: Vec<Vec<StagePlan>> = cfgs
+            .iter()
+            .map(|par| stage_plans_mode(model, par, platform, /*paper_params=*/ true))
+            .collect();
+        self.prefetch(&plans, pred);
+
+        // Phase B: shard configs across scoped workers; slot results by
+        // index so output order (and therefore every downstream sort) is
+        // deterministic regardless of worker interleaving.
+        let mut out: Vec<Option<SweepRow>> = (0..cfgs.len()).map(|_| None).collect();
+        let threads = self.threads.min(cfgs.len()).max(1);
+        if threads == 1 {
+            for (slot, (par, plans)) in out.iter_mut().zip(cfgs.iter().zip(plans.iter())) {
+                *slot = Some(self.eval_one(model, platform, par, plans));
+            }
+        } else {
+            let chunk = cfgs.len().div_ceil(threads);
+            std::thread::scope(|scope| {
+                for ((slots, pars), plan_chunk) in
+                    out.chunks_mut(chunk).zip(cfgs.chunks(chunk)).zip(plans.chunks(chunk))
+                {
+                    scope.spawn(move || {
+                        for (slot, (par, plans)) in
+                            slots.iter_mut().zip(pars.iter().zip(plan_chunk.iter()))
+                        {
+                            *slot = Some(self.eval_one(model, platform, par, plans));
+                        }
+                    });
+                }
+            });
+        }
+        out.into_iter().map(|r| r.expect("every slot filled")).collect()
+    }
+
+    /// Run the full cross-product sweep: enumerate + filter, evaluate,
+    /// rank fastest-first (NaN-safe `total_cmp`; stable sort keeps the
+    /// deterministic enumeration order on exact ties, e.g. 1F1B vs GPipe
+    /// closed forms).
+    pub fn sweep(
+        &self,
+        model: &ModelCfg,
+        platform: &Platform,
+        spec: &SweepSpec,
+        pred: &mut dyn BatchPredictor,
+    ) -> SweepReport {
+        let t0 = Instant::now();
+        let (cfgs, skipped_oom, skipped_sched) = feasible_configs(model, platform, spec);
+        let mut rows = self.evaluate(model, platform, &cfgs, pred);
+        rows.sort_by(|a, b| a.prediction.total_us.total_cmp(&b.prediction.total_us));
+        SweepReport {
+            rows,
+            skipped_oom,
+            skipped_sched,
+            cache: self.cache.stats(),
+            elapsed: t0.elapsed(),
+        }
+    }
+
+    /// Phase A: dedup distinct ops across ALL configs (counting one
+    /// cache consult per distinct op per config — the cross-config
+    /// hit-rate), then fetch the union through
+    /// [`OpPredictionCache::fetch_misses`] — one `predict_batch` per
+    /// route, or per-op for backends without batch support (the engine
+    /// MUST fetch eagerly either way: phase B composes with no backend).
+    fn prefetch(&self, plans: &[Vec<StagePlan>], pred: &mut dyn BatchPredictor) {
+        use std::collections::HashSet;
+        let mut pending: HashSet<OpKey> = HashSet::new();
+        let mut misses: Vec<&crate::ops::OpInstance> = Vec::new();
+        for cfg_plans in plans {
+            let mut seen_cfg: HashSet<OpKey> = HashSet::new();
+            for op in plan_ops(cfg_plans) {
+                let key = op_key(op);
+                if !seen_cfg.insert(key.clone()) {
+                    continue; // repeated encoder block within this config
+                }
+                if pending.contains(&key) {
+                    // deduped against an earlier config of this same
+                    // round: a cross-config hit even though the backend
+                    // round-trip has not happened yet
+                    self.cache.record(true);
+                    continue;
+                }
+                if self.cache.fetch(&key).is_some() {
+                    continue;
+                }
+                pending.insert(key);
+                misses.push(op);
+            }
+        }
+        self.cache.fetch_misses(pred, &misses);
+    }
+
+    fn eval_one(
+        &self,
+        model: &ModelCfg,
+        platform: &Platform,
+        par: &ParallelCfg,
+        plans: &[StagePlan],
+    ) -> SweepRow {
+        let prediction = predict_prefetched(model, par, plans, &self.cache);
+        let mem_gib = memory::estimate(model, par, platform).total_gib();
+        SweepRow { par: *par, prediction, mem_gib }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::e2e::OraclePredictor;
+    use crate::predictor::predict;
+
+    fn small_spec() -> (ModelCfg, Platform, SweepSpec) {
+        let mut spec = SweepSpec::new(16);
+        spec.schedules = ScheduleKind::all(2);
+        (ModelCfg::llemma7b(), Platform::perlmutter(), spec)
+    }
+
+    #[test]
+    fn sweep_matches_serial_predictions_and_counts_hits() {
+        let (model, platform, spec) = small_spec();
+        let (cfgs, _, _) = feasible_configs(&model, &platform, &spec);
+        assert!(!cfgs.is_empty());
+        let engine = Engine::new();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let report = engine.sweep(&model, &platform, &spec, &mut oracle);
+        assert_eq!(report.rows.len(), cfgs.len());
+        // every row matches a fresh serial prediction bit-for-bit
+        for row in &report.rows {
+            let mut oracle = OraclePredictor { platform: platform.clone() };
+            let serial = predict(&model, &row.par, &platform, &mut oracle);
+            assert_eq!(row.prediction.total_us, serial.total_us, "{}", row.par.label());
+            assert_eq!(row.prediction.stage_fwd_us, serial.stage_fwd_us);
+        }
+        // schedules share their op sets: cross-config hits dominate
+        assert!(report.cache.hits > 0, "{:?}", report.cache);
+        // ranking is fastest-first
+        for w in report.rows.windows(2) {
+            assert!(w[0].seconds() <= w[1].seconds());
+        }
+        assert!(report.configs_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn rank_order_crossing_multiplies_rows() {
+        let (model, platform, mut spec) = small_spec();
+        spec.schedules = vec![ScheduleKind::OneFOneB];
+        let engine = Engine::new();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let base = engine.sweep(&model, &platform, &spec, &mut oracle);
+        spec.rank_orders = RankOrder::all();
+        let crossed = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        // feasibility filters are placement-independent: exactly 3x rows
+        assert_eq!(crossed.rows.len(), 3 * base.rows.len());
+        assert!(crossed.rows.iter().any(|r| r.par.label().ends_with("@dp-first")));
+    }
+
+    #[test]
+    fn single_thread_engine_equals_parallel_engine() {
+        let (model, platform, spec) = small_spec();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let par_rows = Engine::new().sweep(&model, &platform, &spec, &mut oracle).rows;
+        let ser_rows =
+            Engine::new().with_threads(1).sweep(&model, &platform, &spec, &mut oracle).rows;
+        assert_eq!(par_rows.len(), ser_rows.len());
+        for (a, b) in par_rows.iter().zip(&ser_rows) {
+            assert_eq!(a.par, b.par);
+            assert_eq!(a.prediction.total_us, b.prediction.total_us);
+            assert_eq!(a.mem_gib, b.mem_gib);
+        }
+    }
+
+    #[test]
+    fn feasible_configs_apply_historical_filters() {
+        let (model, platform, mut spec) = small_spec();
+        spec.schedules = vec![ScheduleKind::Interleaved1F1B { chunks: 2 }];
+        let (cfgs, _oom, sched) = feasible_configs(&model, &platform, &spec);
+        // llemma7b has m = 8 micro-batches: pp ∈ {1, 2, 4, 8} divide it,
+        // but interleaving ALSO needs m % pp == 0, already satisfied —
+        // pp = 8 with chunks means 8 % 8 == 0 ok; nothing extra rejected
+        // beyond the pp > m cut, so just sanity-check shape invariants.
+        for c in &cfgs {
+            assert_eq!(c.gpus(), 16);
+            assert_eq!(model.h % c.mp, 0);
+            assert!(c.pp <= model.iters_per_update);
+        }
+        let _ = sched;
+    }
+}

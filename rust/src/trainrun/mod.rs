@@ -23,7 +23,7 @@ use crate::ops::build::{
 use crate::ops::params::{stage_params_exact, StageRole};
 use crate::ops::{Dir, OpInstance, OpKind};
 use crate::pipeline::{
-    encoder_allocation, execute, exposed_comm_us_given, ScheduleError, TaskTimes,
+    encoder_allocation, exposed_comm_us_given_exec, Executor, ScheduleError, TaskTimes,
 };
 use crate::sim::ClusterSim;
 use crate::util::stats;
@@ -192,6 +192,21 @@ pub fn try_run_batch_with_plans(
     platform: &Platform,
     seed: u64,
 ) -> Result<BatchTrace, ScheduleError> {
+    try_run_batch_with_plans_exec(model, par, plans, platform, seed, &mut Executor::new())
+}
+
+/// [`try_run_batch_with_plans`] with executor buffer reuse: repeated
+/// batches over the same plans (stability loops, schedule reports) hand
+/// one [`Executor`] through and stop re-allocating the schedule matrices
+/// for both the real run and its zero-send counterfactual.
+pub fn try_run_batch_with_plans_exec(
+    model: &ModelCfg,
+    par: &ParallelCfg,
+    plans: &[StagePlan],
+    platform: &Platform,
+    seed: u64,
+    exec: &mut Executor,
+) -> Result<BatchTrace, ScheduleError> {
     let mut sim = ClusterSim::new(platform.clone(), seed);
     // one correlated fabric state per training batch, scaled to the job's
     // node footprint (a 128-node job congests itself; a benchmark doesn't)
@@ -282,9 +297,11 @@ pub fn try_run_batch_with_plans(
         .with_sends(fwd_send, bwd_send)
         .with_overlap(par.p2p_overlap());
     let schedule = par.schedule.build();
-    let sched = execute(schedule.as_ref(), &times)?;
-    let p2p_exposed_us = exposed_comm_us_given(schedule.as_ref(), &times, sched.makespan())?;
+    let sched = exec.execute(schedule.as_ref(), &times)?;
+    let p2p_exposed_us =
+        exposed_comm_us_given_exec(schedule.as_ref(), &times, sched.makespan(), exec)?;
     let last_bwd = sched.stage_grads_ready();
+    exec.recycle(sched);
 
     // Figure 2 overlap: each stage's DP all-reduce starts at its own last
     // backward; the update (optimizer + all-gather) follows its sync.
@@ -346,8 +363,15 @@ pub fn stability(
     seed: u64,
 ) -> StabilityStats {
     let plans = stage_plans(model, par, platform);
+    // one executor across all repetitions: schedule matrices are recycled
+    let mut exec = Executor::new();
     let samples: Vec<f64> = (0..n)
-        .map(|i| run_batch_with_plans(model, par, &plans, platform, seed + i as u64).total_us / 1e6)
+        .map(|i| {
+            try_run_batch_with_plans_exec(model, par, &plans, platform, seed + i as u64, &mut exec)
+                .unwrap_or_else(|e| panic!("{}({}): {e}", model.name, par.label()))
+                .total_us
+                / 1e6
+        })
         .collect();
     let min_s = stats::min(&samples);
     let avg_s = stats::mean(&samples);

@@ -20,7 +20,8 @@ pub fn stddev(xs: &[f64]) -> f64 {
 
 fn sorted(xs: &[f64]) -> Vec<f64> {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN sorts last instead of panicking mid-report
+    v.sort_by(f64::total_cmp);
     v
 }
 

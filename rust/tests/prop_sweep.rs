@@ -1,0 +1,115 @@
+//! Sweep-engine invariants: the cached + scoped-thread-parallel sweep
+//! must be BIT-IDENTICAL to the serial uncached path (same rows, same
+//! labels, same f64 seconds and GiB), on flat and rail topologies,
+//! across all schedules and rank orders — and the cross-config cache
+//! must actually hit (≥ 50% on the gpt20b/128-GPU `--schedule all`
+//! acceptance sweep).
+
+use fgpm::config::{ModelCfg, Platform, TopoSpec};
+use fgpm::net::topology::RankOrder;
+use fgpm::ops::memory;
+use fgpm::pipeline::ScheduleKind;
+use fgpm::predictor::e2e::OraclePredictor;
+use fgpm::predictor::predict;
+use fgpm::sweep::{feasible_configs, Engine, SweepSpec};
+
+/// Serial baseline: fresh predictor cache per config, stable
+/// fastest-first sort with the same total_cmp key the engine uses.
+fn serial_rows(
+    model: &ModelCfg,
+    platform: &Platform,
+    spec: &SweepSpec,
+) -> Vec<(String, f64, f64)> {
+    let (cfgs, _, _) = feasible_configs(model, platform, spec);
+    let mut rows: Vec<(String, f64, f64)> = cfgs
+        .iter()
+        .map(|par| {
+            let mut oracle = OraclePredictor { platform: platform.clone() };
+            let cp = predict(model, par, platform, &mut oracle);
+            let mem = memory::estimate(model, par, platform).total_gib();
+            (par.label(), cp.total_us, mem)
+        })
+        .collect();
+    rows.sort_by(|a, b| a.1.total_cmp(&b.1));
+    rows
+}
+
+#[test]
+fn cached_parallel_sweep_bit_identical_to_serial_uncached() {
+    let model = ModelCfg::llemma7b();
+    for topo in [
+        TopoSpec::Flat,
+        TopoSpec::RailSpine { nodes_per_rail: 2, spine_bw_frac: 0.5 },
+    ] {
+        let platform = Platform::perlmutter().with_topo(topo);
+        let mut spec = SweepSpec::new(16);
+        spec.schedules = ScheduleKind::all(2);
+        spec.rank_orders = RankOrder::all();
+        let baseline = serial_rows(&model, &platform, &spec);
+        assert!(!baseline.is_empty(), "no feasible configs under {topo:?}");
+
+        let engine = Engine::new();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let report = engine.sweep(&model, &platform, &spec, &mut oracle);
+
+        assert_eq!(report.rows.len(), baseline.len(), "{topo:?}");
+        for (row, (label, total_us, mem)) in report.rows.iter().zip(&baseline) {
+            assert_eq!(&row.par.label(), label, "{topo:?}");
+            // bit-identical, not approximately equal
+            assert_eq!(row.prediction.total_us, *total_us, "{topo:?} {label}");
+            assert_eq!(row.mem_gib, *mem, "{topo:?} {label}");
+        }
+        // schedule x rank-order crossing shares op sets: hits observed
+        assert!(report.cache.hits > 0, "{topo:?}: {:?}", report.cache);
+    }
+}
+
+#[test]
+fn schedule_all_sweep_cache_hit_rate_at_least_half() {
+    // Acceptance: gpt20b at 128 GPUs with --schedule all. The four
+    // schedules lower to identical op sets per (pp, mp, dp), so at
+    // least 3/4 of distinct-op consults must be cross-config hits.
+    let model = ModelCfg::gpt20b();
+    let platform = Platform::perlmutter();
+    let mut spec = SweepSpec::new(128);
+    spec.schedules = ScheduleKind::all(2);
+    let engine = Engine::new();
+    let mut oracle = OraclePredictor { platform: platform.clone() };
+    let report = engine.sweep(&model, &platform, &spec, &mut oracle);
+    assert!(!report.rows.is_empty());
+    let stats = report.cache;
+    assert!(
+        stats.hit_rate() >= 0.5,
+        "cross-config hit-rate {:.1}% < 50% ({stats:?})",
+        stats.hit_rate() * 100.0
+    );
+}
+
+#[test]
+fn rank_map_all_crossing_is_deterministic_and_labeled() {
+    // `sweep --rank-map all` crosses placements like `--schedule all`
+    // crosses schedules: every order appears, labels carry the suffix,
+    // and two runs produce identical row orderings.
+    let model = ModelCfg::llemma7b();
+    let platform = Platform::perlmutter();
+    let mut spec = SweepSpec::new(16);
+    spec.rank_orders = RankOrder::all();
+    let run = |engine: &Engine| {
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        engine.sweep(&model, &platform, &spec, &mut oracle)
+    };
+    let a = run(&Engine::new());
+    let b = run(&Engine::new().with_threads(1));
+    assert_eq!(a.rows.len(), b.rows.len());
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.par, rb.par);
+        assert_eq!(ra.prediction.total_us, rb.prediction.total_us);
+    }
+    for order in RankOrder::all() {
+        assert!(
+            a.rows.iter().any(|r| r.par.rank_order == order),
+            "missing rank order {order}"
+        );
+    }
+    assert!(a.rows.iter().any(|r| r.par.label().ends_with("@dp-first")));
+}
