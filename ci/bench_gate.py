@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""CI perf-trajectory gate for the sweep bench.
+
+Usage:
+    python3 ci/bench_gate.py BENCH_sweep.json BENCH_baseline.json BENCH_trajectory.jsonl
+
+Reads the record `cargo bench --bench bench_hotpath -- --smoke` wrote,
+compares it against the committed baseline, appends it to the rolling
+trajectory file (restored across runs via actions/cache, uploaded as an
+artifact every run), and FAILS the job when:
+
+  * `cache_hit_rate`    < HIT_RATE_FLOOR   (0.50) — the cross-config
+    cache stopped deduplicating (absolute floor, baseline-independent);
+  * `warm_hit_rate`     < WARM_RATE_FLOOR  (0.95) — the disk warm-start
+    tier stopped serving a second cold process;
+  * `configs_per_sec`   < (1 - TOLERANCE) x baseline — throughput
+    regressed more than 30% vs the committed baseline. The tolerance is
+    deliberately wide (shared CI runners are noisy) and the baseline is
+    deliberately conservative; re-baseline BENCH_baseline.json when the
+    bench fixture or runner class changes.
+
+Exit code 0 = gate passed, 1 = regression, 2 = malformed input.
+"""
+
+import json
+import os
+import sys
+import time
+
+HIT_RATE_FLOOR = 0.50
+WARM_RATE_FLOOR = 0.95
+TOLERANCE = 0.30
+
+
+def die(code, msg):
+    print(f"bench-gate: FAIL: {msg}", file=sys.stderr)
+    sys.exit(code)
+
+
+def main(argv):
+    if len(argv) != 4:
+        die(2, f"usage: {argv[0]} BENCH_sweep.json BENCH_baseline.json BENCH_trajectory.jsonl")
+    actual_path, baseline_path, trajectory_path = argv[1], argv[2], argv[3]
+
+    try:
+        with open(actual_path) as f:
+            actual = json.load(f)
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        die(2, f"cannot read inputs: {e}")
+
+    for field in ("configs_evaluated", "configs_per_sec", "cache_hit_rate"):
+        if field not in actual:
+            die(2, f"{actual_path} missing '{field}': {actual}")
+    if actual["configs_evaluated"] <= 0:
+        die(2, f"no configs evaluated: {actual}")
+    if not (0.0 <= actual["cache_hit_rate"] <= 1.0):
+        die(2, f"cache_hit_rate out of [0,1]: {actual}")
+
+    # append BEFORE gating so failed runs are visible in the history too
+    record = {
+        "ts": int(time.time()),
+        "sha": os.environ.get("GITHUB_SHA", "local"),
+        "run_id": os.environ.get("GITHUB_RUN_ID", "local"),
+        "case": actual.get("case", "?"),
+        "configs_evaluated": actual["configs_evaluated"],
+        "configs_per_sec": actual["configs_per_sec"],
+        "cache_hit_rate": actual["cache_hit_rate"],
+        "warm_hit_rate": actual.get("warm_hit_rate"),
+        "elapsed_us": actual.get("elapsed_us"),
+    }
+    with open(trajectory_path, "a") as f:
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+    with open(trajectory_path) as f:
+        n = sum(1 for _ in f)
+    print(f"bench-gate: appended run to {trajectory_path} ({n} records)")
+
+    failures = []
+    if actual["cache_hit_rate"] < HIT_RATE_FLOOR:
+        failures.append(
+            f"cache_hit_rate {actual['cache_hit_rate']:.3f} < floor {HIT_RATE_FLOOR}"
+        )
+    warm = actual.get("warm_hit_rate")
+    if warm is not None and warm < WARM_RATE_FLOOR:
+        failures.append(f"warm_hit_rate {warm:.3f} < floor {WARM_RATE_FLOOR}")
+    base_cps = baseline.get("configs_per_sec", 0.0)
+    floor_cps = (1.0 - TOLERANCE) * base_cps
+    if actual["configs_per_sec"] < floor_cps:
+        failures.append(
+            f"configs_per_sec {actual['configs_per_sec']:.1f} < "
+            f"{floor_cps:.1f} (= {1 - TOLERANCE:.0%} of baseline {base_cps:.1f})"
+        )
+
+    if failures:
+        die(1, "; ".join(failures))
+    print(
+        f"bench-gate: PASS — {actual['configs_per_sec']:.1f} configs/s "
+        f"(baseline {base_cps:.1f}), hit-rate {actual['cache_hit_rate']:.2f}, "
+        f"warm {warm if warm is not None else 'n/a'}"
+    )
+
+
+if __name__ == "__main__":
+    main(sys.argv)

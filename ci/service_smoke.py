@@ -1,0 +1,179 @@
+#!/usr/bin/env python3
+"""CI service-smoke client for the fgpm coordinator.
+
+Usage:
+    python3 ci/service_smoke.py --addr 127.0.0.1:7171 --local local_sweep.txt \
+        --model llemma7b --platform perlmutter --gpus 16 --schedule all
+
+Drives the JSON-lines TCP protocol end to end against a running
+`fgpm serve`:
+
+  1. `ping`    — liveness;
+  2. `predict` — one end-to-end configuration prediction;
+  3. `stats`   — metrics + op-cache tier counters present and sane;
+  4. `sweep`   — one STREAMED sweep, rows-then-summary framing checked;
+
+then asserts the streamed rows match the table `fgpm sweep` printed
+locally on the same spec (`--local`): same labels in the same ranked
+order, seconds agreeing at the table's printed precision.
+
+Exit code 0 = all checks passed; 1 = any mismatch/protocol violation.
+"""
+
+import argparse
+import json
+import re
+import socket
+import sys
+
+ROW_RE = re.compile(r"^\s*\d+\.\s+(\S+)\s+([0-9.]+) s\s+([0-9.]+) GiB/GPU")
+
+
+def fail(msg):
+    print(f"service-smoke: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+class Client:
+    def __init__(self, addr, timeout=600.0):
+        host, port = addr.rsplit(":", 1)
+        self.sock = socket.create_connection((host, int(port)), timeout=timeout)
+        self.rfile = self.sock.makefile("r", encoding="utf-8")
+
+    def send(self, obj):
+        self.sock.sendall((json.dumps(obj) + "\n").encode())
+
+    def recv(self):
+        line = self.rfile.readline()
+        if not line:
+            fail("server closed the connection")
+        try:
+            return json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"unparseable server line {line!r}: {e}")
+
+    def request(self, obj):
+        self.send(obj)
+        resp = self.recv()
+        if "error" in resp:
+            fail(f"server error for {obj}: {resp['error']}")
+        return resp
+
+
+def parse_local_table(path):
+    rows = []
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            m = ROW_RE.match(line)
+            if m:
+                rows.append((m.group(1), float(m.group(2)), float(m.group(3))))
+    if not rows:
+        fail(f"no sweep rows found in {path}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--addr", required=True)
+    ap.add_argument("--local", required=True, help="output of the local `fgpm sweep` run")
+    ap.add_argument("--model", default="llemma7b")
+    ap.add_argument("--platform", default="perlmutter")
+    ap.add_argument("--gpus", type=int, default=16)
+    ap.add_argument("--schedule", default="all")
+    args = ap.parse_args()
+
+    c = Client(args.addr)
+
+    # 1. ping
+    pong = c.request({"cmd": "ping"})
+    if pong.get("ok") is not True:
+        fail(f"bad ping response: {pong}")
+    print("service-smoke: ping ok")
+
+    # 2. predict
+    pred = c.request(
+        {"cmd": "predict", "model": args.model, "parallel": "2-2-2", "platform": args.platform}
+    )
+    if not (isinstance(pred.get("total_s"), (int, float)) and pred["total_s"] > 0):
+        fail(f"bad predict response: {pred}")
+    print(f"service-smoke: predict ok ({pred['label']}: {pred['total_s']:.2f}s)")
+
+    # 3. stats
+    stats = c.request({"cmd": "stats"})
+    for field in (
+        "queries",
+        "predictions",
+        "sweeps",
+        "op_cache_hits",
+        "op_cache_disk_hits",
+        "op_cache_misses",
+        "op_cache_hit_rate",
+    ):
+        if field not in stats:
+            fail(f"stats missing '{field}': {stats}")
+    if not (0.0 <= stats["op_cache_hit_rate"] <= 1.0):
+        fail(f"op_cache_hit_rate out of range: {stats}")
+    print("service-smoke: stats ok")
+
+    # 4. streamed sweep
+    schedules = (
+        ["1f1b", "gpipe", "interleaved:2", "zb-h1"]
+        if args.schedule == "all"
+        else [args.schedule]
+    )
+    c.send(
+        {
+            "cmd": "sweep",
+            "spec": {
+                "model": args.model,
+                "platform": args.platform,
+                "gpus": args.gpus,
+                "schedules": schedules,
+            },
+        }
+    )
+    rows, summary = [], None
+    while True:
+        msg = c.recv()
+        if "error" in msg:
+            fail(f"sweep error: {msg['error']}")
+        if "row" in msg:
+            if summary is not None:
+                fail("row after summary")
+            r = msg["row"]
+            rows.append((r["label"], r["total_us"], r["mem_gib"]))
+            continue
+        if "summary" in msg:
+            summary = msg["summary"]
+            break
+        fail(f"unexpected sweep line: {msg}")
+    if summary["configs"] != len(rows):
+        fail(f"summary configs {summary['configs']} != streamed rows {len(rows)}")
+    if not rows:
+        fail("sweep streamed no rows")
+    ranked = [r[1] for r in rows]
+    if ranked != sorted(ranked):
+        fail("rows not ranked fastest-first")
+    print(
+        f"service-smoke: sweep ok ({len(rows)} rows, "
+        f"{summary['configs_per_sec']:.0f} configs/s, "
+        f"hit-rate {summary['cache_hit_rate']:.2f} "
+        f"[mem {summary['cache_memory_hit_rate']:.2f} / disk {summary['cache_disk_hit_rate']:.2f}])"
+    )
+
+    # 5. parity with the local run
+    local = parse_local_table(args.local)
+    if len(local) != len(rows):
+        fail(f"local table has {len(local)} rows, stream has {len(rows)}")
+    for i, ((l_label, l_secs, l_mem), (r_label, r_us, r_mem)) in enumerate(zip(local, rows)):
+        if l_label != r_label:
+            fail(f"row {i + 1}: local label {l_label!r} != remote {r_label!r}")
+        if abs(l_secs - r_us / 1e6) > 0.005 + 1e-9:
+            fail(f"row {i + 1} ({l_label}): local {l_secs}s vs remote {r_us / 1e6}s")
+        if abs(l_mem - r_mem) > 0.05 + 1e-9:
+            fail(f"row {i + 1} ({l_label}): local {l_mem} GiB vs remote {r_mem} GiB")
+    print(f"service-smoke: parity ok — {len(rows)} remote rows match the local sweep")
+
+
+if __name__ == "__main__":
+    main()

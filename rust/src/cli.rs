@@ -9,6 +9,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::predictor::opcache::{self, OpPredictionCache};
+
 use crate::baselines::{Analytical, LogLinear};
 use crate::config::{ModelCfg, ParallelCfg, Platform, TopoSpec};
 use crate::coordinator::server;
@@ -36,6 +38,7 @@ commands:
   train        fit + select per-operator regressors (80/20 validation)
   predict      predict one (model, parallel, platform) configuration
   sweep        rank all parallelism strategies for a model at a GPU count
+               (add --remote host:port to run it on a served coordinator)
   topo         print the cluster tiers + group->tier traffic matrix for a config
   schedules    compare pipeline schedules (1F1B / GPipe / interleaved / ZB-H1) for one config
   table8       reproduce Table VIII (performance stability)
@@ -43,7 +46,8 @@ commands:
   fig2         reproduce Figure 2  (pipeline timelines, ASCII)
   fig3         reproduce Figure 3  (component time proportions)
   ablate       compare regressors vs analytical/linear baselines
-  serve        run the JSON-lines TCP prediction service
+  serve        run the JSON-lines TCP prediction service (predict/stats/ping
+               + whole sweeps streamed over TCP, disk-persistent op cache)
   e2e          full pipeline: collect -> train -> validate both platforms
 
 run `fgpm <command> --help` for options.";
@@ -253,7 +257,10 @@ fn cmd_train(argv: &[String]) -> Result<i32> {
 }
 
 /// Load a registry file if present; otherwise collect + train in-process.
-fn registry_for(platform: &Platform, forests_dir: &str, seed: u64) -> Result<Registry> {
+/// Also returns the registry-content hash (file bytes when loaded from
+/// disk, canonical JSON when freshly trained) — one ingredient of the
+/// disk op-cache fingerprint.
+fn registry_for(platform: &Platform, forests_dir: &str, seed: u64) -> Result<(Registry, u64)> {
     let path = PathBuf::from(forests_dir).join(format!("{}.json", platform.name));
     if path.exists() {
         if platform.topo != TopoSpec::Flat {
@@ -264,15 +271,53 @@ fn registry_for(platform: &Platform, forests_dir: &str, seed: u64) -> Result<Reg
                 platform.topo.label()
             );
         }
+        let bytes = std::fs::read(&path)?;
+        let hash = opcache::fnv1a64(&bytes);
         let (name, forests) = load_registry(&path)?;
         anyhow::ensure!(name == platform.name, "registry platform mismatch");
-        return Ok(Registry { platform: name, forests });
+        return Ok((Registry { platform: name, forests }, hash));
     }
     eprintln!("[fgpm] no registry at {path:?}; collecting + training in-process...");
     let data = collect_platform(platform, seed);
     let reg = Registry::train(platform.name, &data, seed);
     let _ = save_registry(platform.name, &reg.forests, &path);
-    Ok(reg)
+    let hash = opcache::fnv1a64(
+        crate::forest::persist::registry_to_json(platform.name, &reg.forests)
+            .to_string()
+            .as_bytes(),
+    );
+    Ok((reg, hash))
+}
+
+/// Fingerprint keying the `--cache-dir` disk op cache: a cached
+/// prediction is only reusable while the trained sampling registry, the
+/// platform spec (incl. `--topo`), and the inference backend flavor all
+/// match what produced it.
+fn cache_fingerprint(registry_hash: u64, platform: &Platform, xla: bool) -> u64 {
+    opcache::combine_hashes(&[
+        registry_hash,
+        opcache::fnv1a64(format!("{platform:?}").as_bytes()),
+        opcache::fnv1a64(if xla { "xla" } else { "native" }.as_bytes()),
+    ])
+}
+
+/// Where the disk op cache lives under `--cache-dir`. The fingerprint
+/// is part of the FILE NAME (not just the header): runs differing in
+/// topology, registry, or backend each keep their own warm file instead
+/// of alternately clobbering a shared one into permanent cold starts.
+fn op_cache_path(cache_dir: &str, platform: &Platform, fingerprint: u64) -> PathBuf {
+    Path::new(cache_dir).join(format!("opcache_{}_{fingerprint:016x}.bin", platform.name))
+}
+
+/// The tier-split cache line printed by predict/sweep after a cached run.
+fn cache_stats_line(s: &crate::predictor::opcache::CacheStats) -> String {
+    format!(
+        "op-cache hit-rate {:.0}% [mem {:.0}% / disk {:.0}%], {} distinct ops",
+        s.hit_rate() * 100.0,
+        s.memory_hit_rate() * 100.0,
+        s.disk_hit_rate() * 100.0,
+        s.entries
+    )
 }
 
 /// Wrap a registry in the requested inference backend (current thread —
@@ -298,6 +343,7 @@ fn cmd_predict(argv: &[String]) -> Result<i32> {
         .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first)")
         .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
         .opt("forests", "forests", "trained registry directory")
+        .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
         .opt("seed", "7", "rng seed")
         .flag("xla", "serve inference from the AOT Pallas executable (PJRT)");
     let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
@@ -308,9 +354,30 @@ fn cmd_predict(argv: &[String]) -> Result<i32> {
     let par = apply_rank_map_arg(&args, apply_overlap_arg(&args, apply_schedule_arg(&args, par)?)?)?;
     validate_schedule(&model, &par)?;
     anyhow::ensure!(par.fits(&platform), "{} needs {} GPUs", par.label(), par.gpus());
-    let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
-    let mut backend = backend_for(reg, args.has_flag("xla"))?;
-    let cp = predict(&model, &par, &platform, backend.as_mut());
+    let (reg, reg_hash) = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
+    let use_xla = args.has_flag("xla");
+    let mut backend = backend_for(reg, use_xla)?;
+    let cache_dir = args.str("cache-dir");
+    let cp = if cache_dir.is_empty() {
+        predict(&model, &par, &platform, backend.as_mut())
+    } else {
+        let fp = cache_fingerprint(reg_hash, &platform, use_xla);
+        let path = op_cache_path(&cache_dir, &platform, fp);
+        let cache = OpPredictionCache::new();
+        eprintln!("[fgpm] op cache {path:?}: {}", cache.load(&path, fp).describe());
+        let cp = crate::predictor::e2e::predict_with_cache(
+            &model,
+            &par,
+            &platform,
+            backend.as_mut(),
+            &cache,
+        );
+        if let Err(e) = cache.save(&path, fp) {
+            eprintln!("[fgpm] WARNING: could not save op cache {path:?}: {e}");
+        }
+        eprintln!("[fgpm] {}", cache_stats_line(&cache.stats()));
+        cp
+    };
     println!("{}", server::prediction_to_json(&cp));
     println!("\npredicted batch time: {:.2} s", cp.total_us / 1e6);
     Ok(0)
@@ -326,6 +393,8 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first|all)")
         .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
         .opt("jobs", "0", "evaluation worker threads (0 = one per core)")
+        .opt("remote", "", "run the sweep on a coordinator at host:port instead of locally")
+        .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
         .opt("forests", "forests", "trained registry directory")
         .opt("seed", "7", "rng seed")
         .flag("xla", "use the AOT Pallas executable");
@@ -351,8 +420,6 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
     };
     // parse + range-check the constant overlap once, before enumerating
     let overlap = apply_overlap_arg(&args, ParallelCfg::new(1, 1, 1))?.p2p_overlap();
-    let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
-    let mut backend = backend_for(reg, args.has_flag("xla"))?;
     let sweep_spec = crate::sweep::SweepSpec {
         gpus,
         max_pp: 16,
@@ -361,39 +428,112 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         rank_orders: orders,
         p2p_overlap: overlap,
     };
+    let title = format!(
+        "{} on {} with {} GPUs — predicted batch seconds:",
+        model.name, platform.name, gpus
+    );
+
+    let remote = args.str("remote");
+    if !remote.is_empty() {
+        // local-only knobs have no effect on a remote coordinator (it
+        // chose its backend, cache, and worker count at startup); reject
+        // explicitly-typed ones instead of silently ignoring them
+        for opt in ["cache-dir", "forests", "jobs", "seed"] {
+            anyhow::ensure!(
+                !args.is_explicit(opt),
+                "--{opt} has no effect with --remote (the coordinator's own settings apply)"
+            );
+        }
+        anyhow::ensure!(
+            !args.has_flag("xla"),
+            "--xla has no effect with --remote (the coordinator chose its backend at startup)"
+        );
+        // thin client: the coordinator runs the sweep on ITS persistent
+        // cache; we only re-render the streamed rows (same table code as
+        // the local path — byte-identical output, property-tested)
+        let request = server::sweep_request_json(
+            &args.str("model"),
+            &args.str("platform"),
+            &platform.topo,
+            &sweep_spec,
+        );
+        let rs = server::remote_sweep(&remote, &request).map_err(|e| anyhow!("{e}"))?;
+        let rows: Vec<(String, f64, f64)> = rs
+            .rows
+            .iter()
+            .map(|r| (r.label.clone(), r.total_us / 1e6, r.mem_gib))
+            .collect();
+        let skipped_oom = rs.summary.usize_at("skipped_oom").unwrap_or(0);
+        let skipped_sched = rs.summary.usize_at("skipped_sched").unwrap_or(0);
+        print!(
+            "{}",
+            crate::report::tables::sweep_table_text(
+                &title,
+                &rows,
+                skipped_oom,
+                skipped_sched,
+                platform.gpu.hbm_gib
+            )
+        );
+        println!(
+            "evaluated {} configs in {:.0?} on {remote} ({:.0} configs/s, op-cache hit-rate {:.0}% [mem {:.0}% / disk {:.0}%], {} distinct ops)",
+            rows.len(),
+            std::time::Duration::from_secs_f64(
+                rs.summary.f64_at("elapsed_us").unwrap_or(0.0) / 1e6
+            ),
+            rs.summary.f64_at("configs_per_sec").unwrap_or(0.0),
+            rs.summary.f64_at("cache_hit_rate").unwrap_or(0.0) * 100.0,
+            rs.summary.f64_at("cache_memory_hit_rate").unwrap_or(0.0) * 100.0,
+            rs.summary.f64_at("cache_disk_hit_rate").unwrap_or(0.0) * 100.0,
+            rs.summary.usize_at("distinct_ops").unwrap_or(0)
+        );
+        return Ok(0);
+    }
+
+    let (reg, reg_hash) = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
+    let use_xla = args.has_flag("xla");
+    let mut backend = backend_for(reg, use_xla)?;
     let jobs = args.usize("jobs")?;
     let mut engine = crate::sweep::Engine::new();
     if jobs > 0 {
         engine = engine.with_threads(jobs);
     }
+    let cache_dir = args.str("cache-dir");
+    let persist = if cache_dir.is_empty() {
+        None
+    } else {
+        let fp = cache_fingerprint(reg_hash, &platform, use_xla);
+        let path = op_cache_path(&cache_dir, &platform, fp);
+        eprintln!("[fgpm] op cache {path:?}: {}", engine.cache().load(&path, fp).describe());
+        Some((path, fp))
+    };
     let report = engine.sweep(&model, &platform, &sweep_spec, backend.as_mut());
-    println!("{} on {} with {} GPUs — predicted batch seconds:", model.name, platform.name, gpus);
-    for (i, row) in report.rows.iter().enumerate() {
-        println!(
-            "{:>2}. {:<9} {:>8.2} s   {:>5.1} GiB/GPU{}",
-            i + 1,
-            row.par.label(),
-            row.seconds(),
-            row.mem_gib,
-            if i == 0 { "   <- best" } else { "" }
-        );
+    if let Some((path, fp)) = persist {
+        if let Err(e) = engine.cache().save(&path, fp) {
+            eprintln!("[fgpm] WARNING: could not save op cache {path:?}: {e}");
+        }
     }
-    if report.skipped_oom > 0 {
-        println!(
-            "({} strategies skipped: exceed {} GiB HBM)",
-            report.skipped_oom, platform.gpu.hbm_gib
-        );
-    }
-    if report.skipped_sched > 0 {
-        println!("({} strategies skipped: schedule rejects geometry)", report.skipped_sched);
-    }
+    let rows: Vec<(String, f64, f64)> = report
+        .rows
+        .iter()
+        .map(|r| (r.par.label(), r.seconds(), r.mem_gib))
+        .collect();
+    print!(
+        "{}",
+        crate::report::tables::sweep_table_text(
+            &title,
+            &rows,
+            report.skipped_oom,
+            report.skipped_sched,
+            platform.gpu.hbm_gib
+        )
+    );
     println!(
-        "evaluated {} configs in {:.0?} ({:.0} configs/s, op-cache hit-rate {:.0}%, {} distinct ops)",
+        "evaluated {} configs in {:.0?} ({:.0} configs/s, {})",
         report.rows.len(),
         report.elapsed,
         report.configs_per_sec(),
-        report.cache.hit_rate() * 100.0,
-        report.cache.entries
+        cache_stats_line(&report.cache)
     );
     Ok(0)
 }
@@ -485,7 +625,7 @@ fn cmd_table9(argv: &[String]) -> Result<i32> {
     let n = args.usize("batches")?;
     let mut results = Vec::new();
     for platform in Platform::all() {
-        let reg = registry_for(&platform, &args.str("forests"), seed)?;
+        let (reg, _) = registry_for(&platform, &args.str("forests"), seed)?;
         let mut backend = backend_for(reg, args.has_flag("xla"))?;
         let errs =
             crate::report::tables::table9_errors(&platform, backend.as_mut(), n, seed);
@@ -519,7 +659,7 @@ fn cmd_fig3(argv: &[String]) -> Result<i32> {
     let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
     let mut out = String::new();
     for platform in Platform::all() {
-        let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
+        let (reg, _) = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
         let mut backend = backend_for(reg, args.has_flag("xla"))?;
         out.push_str(&fig3_markdown(&platform, backend.as_mut()));
         out.push('\n');
@@ -567,26 +707,40 @@ fn cmd_ablate(argv: &[String]) -> Result<i32> {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<i32> {
-    let spec = Spec::new("serve", "JSON-lines TCP prediction service")
+    let spec = Spec::new("serve", "JSON-lines TCP prediction service (predict/stats/ping/sweep)")
         .opt("addr", "127.0.0.1:7070", "bind address")
         .opt("platform", "perlmutter", "platform whose regressors to serve")
         .opt("forests", "forests", "trained registry directory")
+        .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
+        .opt("jobs", "0", "sweep evaluation worker threads (0 = one per core)")
+        .opt("max-conns", "64", "concurrent-connection cap (excess sheds {\"error\":\"busy\"})")
+        .opt("read-timeout-ms", "60000", "per-connection socket read/write timeout")
         .opt("seed", "7", "rng seed")
         .opt("max-batch", "256", "dynamic batcher max rows")
         .opt("max-wait-ms", "2", "dynamic batcher deadline")
         .flag("xla", "serve inference from the AOT Pallas executable");
     let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
     let platform = platform_arg(&args)?;
-    let reg = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
+    let (reg, reg_hash) = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
     let use_xla = args.has_flag("xla");
-    let svc = PredictionService::start_with(
+    let mut svc = PredictionService::start_with(
         move || backend_for(reg, use_xla).expect("backend init"),
         BatcherCfg {
             max_batch: args.usize("max-batch")?,
             max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms")?),
         },
-    );
-    server::serve(svc, &args.str("addr"))?;
+    )
+    .with_sweep_threads(args.usize("jobs")?);
+    let cache_dir = args.str("cache-dir");
+    if !cache_dir.is_empty() {
+        let fp = cache_fingerprint(reg_hash, &platform, use_xla);
+        svc = svc.with_cache_persist(op_cache_path(&cache_dir, &platform, fp), fp);
+    }
+    let opts = server::ServeOpts {
+        max_conns: args.usize("max-conns")?.max(1),
+        read_timeout: std::time::Duration::from_millis(args.u64("read-timeout-ms")?.max(1)),
+    };
+    server::serve_opts(svc, &args.str("addr"), opts)?;
     Ok(0)
 }
 

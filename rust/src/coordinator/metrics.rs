@@ -19,6 +19,10 @@ pub struct Metrics {
     pub exec_us: AtomicU64,
     /// End-to-end config predictions served.
     pub predictions: AtomicU64,
+    /// Whole-sweep requests served (TCP `sweep` command / service API).
+    pub sweeps: AtomicU64,
+    /// Ranked rows streamed back across all served sweeps.
+    pub sweep_rows: AtomicU64,
 }
 
 impl Metrics {
@@ -31,6 +35,8 @@ impl Metrics {
             batched_rows: self.batched_rows.load(Ordering::Relaxed),
             exec_us: self.exec_us.load(Ordering::Relaxed),
             predictions: self.predictions.load(Ordering::Relaxed),
+            sweeps: self.sweeps.load(Ordering::Relaxed),
+            sweep_rows: self.sweep_rows.load(Ordering::Relaxed),
         }
     }
 
@@ -48,6 +54,8 @@ pub struct MetricsSnapshot {
     pub batched_rows: u64,
     pub exec_us: u64,
     pub predictions: u64,
+    pub sweeps: u64,
+    pub sweep_rows: u64,
 }
 
 impl MetricsSnapshot {
@@ -69,6 +77,8 @@ impl MetricsSnapshot {
             ("mean_batch_rows", Json::Num(self.mean_batch_rows())),
             ("exec_us", Json::Num(self.exec_us as f64)),
             ("predictions", Json::Num(self.predictions as f64)),
+            ("sweeps", Json::Num(self.sweeps as f64)),
+            ("sweep_rows", Json::Num(self.sweep_rows as f64)),
         ])
     }
 }

@@ -1,19 +1,37 @@
 //! JSON-lines TCP front end (thread-per-connection; the offline crate set
-//! has no tokio — see DESIGN.md §3).
+//! has no tokio — see DESIGN.md §3) plus the matching thin client for
+//! remote sweeps.
 //!
-//! Protocol — one JSON object per line:
+//! Protocol — one JSON object per line (full request/response schemas,
+//! streaming framing, and error objects are documented in PROTOCOL.md
+//! next to this file):
 //!   {"cmd":"predict","model":"gpt20b","parallel":"4-4-8","platform":"perlmutter"}
 //!   {"cmd":"stats"}
 //!   {"cmd":"ping"}
-//! Responses are single JSON lines; errors come back as {"error": "..."}.
+//!   {"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":128,...}}
+//! `predict`/`stats`/`ping` answer with a single JSON line; `sweep`
+//! STREAMS one `{"row":...}` line per ranked configuration followed by a
+//! terminal `{"summary":...}` object. Errors come back as
+//! {"error": "..."}.
+//!
+//! The accept loop sheds load instead of queueing unboundedly: beyond
+//! [`ServeOpts::max_conns`] concurrent connections a client gets one
+//! `{"error":"busy"}` line and is disconnected, and every accepted
+//! socket carries a read/write timeout so a stuck peer cannot pin a
+//! handler thread (or the whole service) forever.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use crate::config::{ModelCfg, ParallelCfg, Platform};
+use crate::config::{ModelCfg, ParallelCfg, Platform, TopoSpec};
 use crate::coordinator::service::PredictionService;
+use crate::net::topology::RankOrder;
+use crate::pipeline::ScheduleKind;
 use crate::predictor::e2e::ComponentPrediction;
+use crate::sweep::{SweepReport, SweepSpec};
 use crate::util::json::Json;
 
 pub fn prediction_to_json(cp: &ComponentPrediction) -> Json {
@@ -38,45 +56,286 @@ fn err_json(msg: &str) -> String {
     Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
 }
 
-/// Handle one request line; pure function for testability.
+// ---------------------------------------------------------------------------
+// sweep wire format (shared by the server and the `--remote` thin client)
+// ---------------------------------------------------------------------------
+
+/// A parsed server-side sweep request.
+pub struct SweepRequest {
+    pub model: ModelCfg,
+    pub platform: Platform,
+    pub spec: SweepSpec,
+}
+
+/// Build the `{"cmd":"sweep","spec":{...}}` request line.
+pub fn sweep_request_json(
+    model: &str,
+    platform: &str,
+    topo: &TopoSpec,
+    spec: &SweepSpec,
+) -> Json {
+    let scheds = spec.schedules.iter().map(|k| Json::Str(k.label())).collect();
+    let orders = spec
+        .rank_orders
+        .iter()
+        .map(|o| Json::Str(o.label().to_string()))
+        .collect();
+    Json::obj(vec![
+        ("cmd", Json::Str("sweep".into())),
+        (
+            "spec",
+            Json::obj(vec![
+                ("model", Json::Str(model.to_string())),
+                ("platform", Json::Str(platform.to_string())),
+                ("topo", Json::Str(topo.label())),
+                ("gpus", Json::Num(spec.gpus as f64)),
+                ("max_pp", Json::Num(spec.max_pp as f64)),
+                ("max_mp", Json::Num(spec.max_mp as f64)),
+                ("schedules", Json::Arr(scheds)),
+                ("rank_maps", Json::Arr(orders)),
+                ("p2p_overlap", Json::Num(spec.p2p_overlap)),
+            ]),
+        ),
+    ])
+}
+
+/// Degree caps a remote client may request — enumeration is cheap, but
+/// unbounded values are still rejected as malformed.
+const MAX_SWEEP_DEGREE: usize = 4096;
+
+/// Validate + materialize a `{"cmd":"sweep"}` request. Every failure is
+/// a client error string (served as an `{"error":...}` object).
+pub fn parse_sweep_request(req: &Json) -> Result<SweepRequest, String> {
+    let spec = req.get("spec").ok_or("sweep needs a \"spec\" object")?;
+    let model = spec
+        .str_at("model")
+        .and_then(ModelCfg::by_name)
+        .ok_or("unknown model (gpt20b | llama13b | llemma7b)")?;
+    let platform = spec
+        .str_at("platform")
+        .and_then(Platform::by_name)
+        .ok_or("unknown platform (perlmutter | vista)")?;
+    let topo = match spec.str_at("topo") {
+        None => TopoSpec::Flat,
+        Some(t) => TopoSpec::parse(t)
+            .ok_or("bad topo (expected flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")?,
+    };
+    let platform = platform.with_topo(topo);
+    let gpus = spec.usize_at("gpus").ok_or("spec needs a numeric \"gpus\"")?;
+    if gpus == 0 || gpus > MAX_SWEEP_DEGREE * MAX_SWEEP_DEGREE {
+        return Err("gpus out of range".to_string());
+    }
+    let max_pp = spec.usize_at("max_pp").unwrap_or(16);
+    let max_mp = spec.usize_at("max_mp").unwrap_or(16);
+    if max_pp == 0 || max_pp > MAX_SWEEP_DEGREE || max_mp == 0 || max_mp > MAX_SWEEP_DEGREE {
+        return Err("max_pp/max_mp out of range".to_string());
+    }
+    let schedules = match spec.get("schedules").and_then(|s| s.as_arr()) {
+        None => vec![ScheduleKind::OneFOneB],
+        Some(arr) => {
+            let mut kinds = Vec::with_capacity(arr.len());
+            for s in arr {
+                let label = s.as_str().ok_or("schedules must be strings")?;
+                kinds.push(
+                    ScheduleKind::parse(label)
+                        .ok_or_else(|| format!("unknown schedule '{label}'"))?,
+                );
+            }
+            if kinds.is_empty() {
+                vec![ScheduleKind::OneFOneB]
+            } else {
+                kinds
+            }
+        }
+    };
+    let rank_orders = match spec.get("rank_maps").and_then(|s| s.as_arr()) {
+        None => vec![RankOrder::TpFirst],
+        Some(arr) => {
+            let mut orders = Vec::with_capacity(arr.len());
+            for s in arr {
+                let label = s.as_str().ok_or("rank_maps must be strings")?;
+                orders.push(
+                    RankOrder::parse(label)
+                        .ok_or_else(|| format!("unknown rank map '{label}'"))?,
+                );
+            }
+            if orders.is_empty() {
+                vec![RankOrder::TpFirst]
+            } else {
+                orders
+            }
+        }
+    };
+    let p2p_overlap = spec.f64_at("p2p_overlap").unwrap_or(0.0);
+    if !(0.0..=1.0).contains(&p2p_overlap) {
+        return Err("p2p_overlap must be in [0, 1]".to_string());
+    }
+    Ok(SweepRequest {
+        model,
+        platform,
+        spec: SweepSpec { gpus, max_pp, max_mp, schedules, rank_orders, p2p_overlap },
+    })
+}
+
+/// One streamed ranked row (full-precision `total_us`: the JSON writer
+/// emits shortest-round-trip floats, so the client re-parses the exact
+/// f64 the engine produced).
+fn row_json(row: &crate::sweep::SweepRow) -> Json {
+    Json::obj(vec![(
+        "row",
+        Json::obj(vec![
+            ("label", Json::Str(row.par.label())),
+            ("total_us", Json::Num(row.prediction.total_us)),
+            ("mem_gib", Json::Num(row.mem_gib)),
+        ]),
+    )])
+}
+
+/// The terminal summary object of a sweep stream.
+fn summary_json(report: &SweepReport) -> Json {
+    Json::obj(vec![(
+        "summary",
+        Json::obj(vec![
+            ("configs", Json::Num(report.rows.len() as f64)),
+            ("skipped_oom", Json::Num(report.skipped_oom as f64)),
+            ("skipped_sched", Json::Num(report.skipped_sched as f64)),
+            ("elapsed_us", Json::Num(report.elapsed.as_secs_f64() * 1e6)),
+            ("configs_per_sec", Json::Num(report.configs_per_sec())),
+            ("cache_hits", Json::Num(report.cache.hits as f64)),
+            ("cache_disk_hits", Json::Num(report.cache.disk_hits as f64)),
+            ("cache_misses", Json::Num(report.cache.misses as f64)),
+            ("cache_hit_rate", Json::Num(report.cache.hit_rate())),
+            ("cache_memory_hit_rate", Json::Num(report.cache.memory_hit_rate())),
+            ("cache_disk_hit_rate", Json::Num(report.cache.disk_hit_rate())),
+            ("distinct_ops", Json::Num(report.cache.entries as f64)),
+            ("disk_entries", Json::Num(report.cache.disk_entries as f64)),
+        ]),
+    )])
+}
+
+/// Serve one sweep request as a stream: rows fastest-first, then the
+/// summary. Parse errors come back as a single `{"error":...}` line.
+pub fn handle_sweep(
+    svc: &PredictionService,
+    req: &Json,
+    out: &mut dyn Write,
+) -> std::io::Result<()> {
+    let parsed = match parse_sweep_request(req) {
+        Ok(p) => p,
+        Err(msg) => return writeln!(out, "{}", err_json(&msg)),
+    };
+    let report = svc.sweep(&parsed.model, &parsed.platform, &parsed.spec);
+    for row in &report.rows {
+        writeln!(out, "{}", row_json(row))?;
+    }
+    writeln!(out, "{}", summary_json(&report))?;
+    // persist only AFTER the stream: the client has its rows; the
+    // O(store-size) serialize + fsync happens off its critical path
+    svc.persist_cache();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// remote sweep client
+// ---------------------------------------------------------------------------
+
+/// One row streamed back from a remote sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RemoteRow {
+    pub label: String,
+    pub total_us: f64,
+    pub mem_gib: f64,
+}
+
+/// Everything a remote sweep returned.
+#[derive(Clone, Debug)]
+pub struct RemoteSweep {
+    pub rows: Vec<RemoteRow>,
+    /// The server's terminal summary object (configs/sec, per-tier
+    /// cache hit rates, skip counters).
+    pub summary: Json,
+}
+
+/// How long the thin client waits on the server before giving up.
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Run a sweep on a remote coordinator: send one request line, collect
+/// the streamed rows until the summary arrives.
+pub fn remote_sweep(addr: &str, request: &Json) -> Result<RemoteSweep, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let _ = stream.set_read_timeout(Some(CLIENT_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(CLIENT_TIMEOUT));
+    let mut writer = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+    writer
+        .write_all(format!("{request}\n").as_bytes())
+        .map_err(|e| format!("send request: {e}"))?;
+    let mut reader = BufReader::new(stream);
+    let mut rows = Vec::new();
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("server closed the stream before the summary".to_string());
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("bad server line: {e}"))?;
+        if let Some(msg) = j.str_at("error") {
+            return Err(format!("server error: {msg}"));
+        }
+        if let Some(row) = j.get("row") {
+            let (Some(label), Some(total_us), Some(mem_gib)) =
+                (row.str_at("label"), row.f64_at("total_us"), row.f64_at("mem_gib"))
+            else {
+                return Err(format!("malformed row: {line}"));
+            };
+            rows.push(RemoteRow { label: label.to_string(), total_us, mem_gib });
+            continue;
+        }
+        if let Some(summary) = j.get("summary") {
+            return Ok(RemoteSweep { rows, summary: summary.clone() });
+        }
+        return Err(format!("unexpected server line: {line}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// single-line commands
+// ---------------------------------------------------------------------------
+
+/// Handle one single-response request line; pure function for
+/// testability. (`sweep` is the one streaming command and is dispatched
+/// by [`handle_conn`] to [`handle_sweep`] instead.)
 pub fn handle_line(svc: &PredictionService, line: &str) -> String {
     let req = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => return err_json(&format!("bad json: {e}")),
     };
-    match req.get("cmd").and_then(|c| c.as_str()).unwrap_or("predict") {
+    match req.str_at("cmd").unwrap_or("predict") {
         "ping" => Json::obj(vec![("ok", Json::Bool(true))]).to_string(),
         "stats" => {
             let mut j = svc.metrics.snapshot().to_json();
             let cache = svc.op_cache.stats();
-            if let Json::Obj(m) = &mut j {
-                m.insert("op_cache_hits".into(), Json::Num(cache.hits as f64));
-                m.insert("op_cache_misses".into(), Json::Num(cache.misses as f64));
-                m.insert("op_cache_entries".into(), Json::Num(cache.entries as f64));
-                m.insert("op_cache_hit_rate".into(), Json::Num(cache.hit_rate()));
-            }
+            j.insert("op_cache_hits", Json::Num(cache.hits as f64));
+            j.insert("op_cache_disk_hits", Json::Num(cache.disk_hits as f64));
+            j.insert("op_cache_misses", Json::Num(cache.misses as f64));
+            j.insert("op_cache_entries", Json::Num(cache.entries as f64));
+            j.insert("op_cache_disk_entries", Json::Num(cache.disk_entries as f64));
+            j.insert("op_cache_hit_rate", Json::Num(cache.hit_rate()));
+            j.insert("op_cache_memory_hit_rate", Json::Num(cache.memory_hit_rate()));
+            j.insert("op_cache_disk_hit_rate", Json::Num(cache.disk_hit_rate()));
             j.to_string()
         }
         "predict" => {
-            let Some(model) = req
-                .get("model")
-                .and_then(|m| m.as_str())
-                .and_then(ModelCfg::by_name)
-            else {
+            let Some(model) = req.str_at("model").and_then(ModelCfg::by_name) else {
                 return err_json("unknown model (gpt20b | llama13b | llemma7b)");
             };
-            let Some(par) = req
-                .get("parallel")
-                .and_then(|p| p.as_str())
-                .and_then(ParallelCfg::parse)
-            else {
+            let Some(par) = req.str_at("parallel").and_then(ParallelCfg::parse) else {
                 return err_json("bad parallel config (expected pp-mp-dp[/schedule])");
             };
-            let Some(platform) = req
-                .get("platform")
-                .and_then(|p| p.as_str())
-                .and_then(Platform::by_name)
-            else {
+            let Some(platform) = req.str_at("platform").and_then(Platform::by_name) else {
                 return err_json("unknown platform (perlmutter | vista)");
             };
             if !par.fits(&platform) {
@@ -97,52 +356,121 @@ pub fn handle_line(svc: &PredictionService, line: &str) -> String {
     }
 }
 
-fn handle_conn(svc: Arc<PredictionService>, stream: TcpStream) {
-    let peer = stream.peer_addr().ok();
+// ---------------------------------------------------------------------------
+// accept loop
+// ---------------------------------------------------------------------------
+
+/// Service-protection knobs for the accept loop.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// Concurrent-connection cap; connection `max_conns + 1` is shed
+    /// with a single `{"error":"busy"}` line.
+    pub max_conns: usize,
+    /// Per-connection socket read AND write timeout: an idle or stuck
+    /// peer is disconnected instead of pinning its handler thread.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { max_conns: 64, read_timeout: Duration::from_secs(60) }
+    }
+}
+
+/// RAII slot in the bounded accept semaphore.
+struct ConnPermit(Arc<AtomicUsize>);
+
+impl Drop for ConnPermit {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn handle_conn(svc: Arc<PredictionService>, stream: TcpStream, _permit: ConnPermit) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
     let reader = BufReader::new(stream);
     for line in reader.lines() {
+        // a read timeout surfaces as Err -> disconnect the stuck peer
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        let resp = handle_line(&svc, &line);
-        if writer.write_all(resp.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
-            break;
+        // parse once; the streaming command dispatches on the value,
+        // everything else goes through the single-line handler (which
+        // also owns the bad-json error reply)
+        match Json::parse(&line) {
+            Ok(req) if req.str_at("cmd") == Some("sweep") => {
+                if handle_sweep(&svc, &req, &mut writer).is_err() {
+                    break;
+                }
+            }
+            _ => {
+                let resp = handle_line(&svc, &line);
+                if writer.write_all(resp.as_bytes()).is_err() || writer.write_all(b"\n").is_err()
+                {
+                    break;
+                }
+            }
         }
     }
-    let _ = peer; // connection closed
 }
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:7070").
-pub fn serve(svc: PredictionService, addr: &str) -> std::io::Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    eprintln!("fgpm serving on {addr}");
-    let svc = Arc::new(svc);
+fn accept_loop(listener: TcpListener, svc: Arc<PredictionService>, opts: ServeOpts) {
+    let active = Arc::new(AtomicUsize::new(0));
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
+        // only this loop increments, so check-then-add cannot overshoot;
+        // handler threads decrementing concurrently can only free slots
+        if active.load(Ordering::SeqCst) >= opts.max_conns {
+            let mut s = stream;
+            let _ = s.set_write_timeout(Some(Duration::from_secs(1)));
+            let _ = s.write_all(b"{\"error\":\"busy\"}\n");
+            continue; // dropping the stream closes it
+        }
+        active.fetch_add(1, Ordering::SeqCst);
+        let permit = ConnPermit(active.clone());
+        let _ = stream.set_read_timeout(Some(opts.read_timeout));
+        let _ = stream.set_write_timeout(Some(opts.read_timeout));
         let svc = svc.clone();
-        std::thread::spawn(move || handle_conn(svc, stream));
+        std::thread::spawn(move || handle_conn(svc, stream, permit));
     }
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7070") with the given
+/// protection knobs.
+pub fn serve_opts(svc: PredictionService, addr: &str, opts: ServeOpts) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!(
+        "fgpm serving on {addr} (max {} conns, {:?} socket timeout)",
+        opts.max_conns, opts.read_timeout
+    );
+    accept_loop(listener, Arc::new(svc), opts);
     Ok(())
+}
+
+/// Serve forever with default protection knobs.
+pub fn serve(svc: PredictionService, addr: &str) -> std::io::Result<()> {
+    serve_opts(svc, addr, ServeOpts::default())
 }
 
 /// Bind an ephemeral port and serve in a background thread; returns the
 /// bound address (test/demo harness).
 pub fn serve_background(svc: PredictionService) -> std::io::Result<std::net::SocketAddr> {
+    serve_background_opts(svc, ServeOpts::default())
+}
+
+/// [`serve_background`] with explicit protection knobs.
+pub fn serve_background_opts(
+    svc: PredictionService,
+    opts: ServeOpts,
+) -> std::io::Result<std::net::SocketAddr> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     let svc = Arc::new(svc);
-    std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            let Ok(stream) = stream else { continue };
-            let svc = svc.clone();
-            std::thread::spawn(move || handle_conn(svc, stream));
-        }
-    });
+    std::thread::spawn(move || accept_loop(listener, svc, opts));
     Ok(addr)
 }
 
@@ -170,6 +498,8 @@ mod tests {
         assert!(handle_line(&s, r#"{"cmd":"ping"}"#).contains("true"));
         let stats = handle_line(&s, r#"{"cmd":"stats"}"#);
         assert!(stats.contains("queries"));
+        assert!(stats.contains("op_cache_disk_hits"), "{stats}");
+        assert!(stats.contains("sweeps"), "{stats}");
         s.shutdown();
     }
 
@@ -226,6 +556,94 @@ mod tests {
     }
 
     #[test]
+    fn sweep_request_roundtrip_and_validation() {
+        let spec = SweepSpec {
+            gpus: 16,
+            max_pp: 8,
+            max_mp: 8,
+            schedules: ScheduleKind::all(2),
+            rank_orders: RankOrder::all(),
+            p2p_overlap: 0.25,
+        };
+        let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
+        let parsed = parse_sweep_request(&Json::parse(&req.to_string()).unwrap()).unwrap();
+        assert_eq!(parsed.model.name, "Llemma-7B");
+        assert_eq!(parsed.platform.name, "perlmutter");
+        assert_eq!(parsed.spec.gpus, 16);
+        assert_eq!(parsed.spec.schedules, spec.schedules);
+        assert_eq!(parsed.spec.rank_orders, spec.rank_orders);
+        assert_eq!(parsed.spec.p2p_overlap, 0.25);
+
+        let bad = |line: &str, what: &str| {
+            let e = parse_sweep_request(&Json::parse(line).unwrap()).unwrap_err();
+            assert!(e.contains(what), "{e}");
+        };
+        bad(r#"{"cmd":"sweep"}"#, "spec");
+        bad(r#"{"cmd":"sweep","spec":{"model":"bert","platform":"perlmutter","gpus":16}}"#, "model");
+        bad(r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"summit","gpus":16}}"#, "platform");
+        bad(r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":0}}"#, "gpus");
+        bad(
+            r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":16,"schedules":["warp"]}}"#,
+            "schedule",
+        );
+        bad(
+            r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":16,"p2p_overlap":1.5}}"#,
+            "p2p_overlap",
+        );
+        // omitted optionals default like the CLI
+        let min = parse_sweep_request(
+            &Json::parse(r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":16}}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(min.spec.schedules, vec![ScheduleKind::OneFOneB]);
+        assert_eq!(min.spec.rank_orders, vec![RankOrder::TpFirst]);
+        assert_eq!((min.spec.max_pp, min.spec.max_mp), (16, 16));
+    }
+
+    #[test]
+    fn handle_sweep_streams_rows_then_summary() {
+        let s = svc();
+        let spec = SweepSpec::new(16);
+        let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
+        let mut out: Vec<u8> = Vec::new();
+        handle_sweep(&s, &req, &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= 2, "{text}");
+        for l in &lines[..lines.len() - 1] {
+            let j = Json::parse(l).unwrap();
+            assert!(j.get("row").is_some(), "{l}");
+        }
+        let last = Json::parse(lines[lines.len() - 1]).unwrap();
+        let summary = last.get("summary").unwrap();
+        assert_eq!(summary.usize_at("configs"), Some(lines.len() - 1));
+        assert!(summary.f64_at("cache_hit_rate").unwrap() >= 0.0);
+        // rows arrive ranked fastest-first
+        let mut prev = f64::NEG_INFINITY;
+        for l in &lines[..lines.len() - 1] {
+            let t = Json::parse(l).unwrap().get("row").unwrap().f64_at("total_us").unwrap();
+            assert!(t >= prev);
+            prev = t;
+        }
+        // the service metrics saw one sweep
+        assert_eq!(s.metrics.snapshot().sweeps, 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn handle_sweep_reports_parse_errors_inline() {
+        let s = svc();
+        let req = Json::parse(r#"{"cmd":"sweep","spec":{"model":"bert","platform":"perlmutter","gpus":16}}"#).unwrap();
+        let mut out: Vec<u8> = Vec::new();
+        handle_sweep(&s, &req, &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("error"), "{text}");
+        assert_eq!(text.lines().count(), 1);
+        s.shutdown();
+    }
+
+    #[test]
     fn tcp_end_to_end() {
         use std::io::{BufRead, BufReader, Write};
         let addr = serve_background(svc()).unwrap();
@@ -242,5 +660,39 @@ mod tests {
         let mut line2 = String::new();
         reader.read_line(&mut line2).unwrap();
         assert!(line2.contains("total_s"), "{line2}");
+    }
+
+    #[test]
+    fn busy_shed_beyond_connection_cap() {
+        use std::io::{BufRead, BufReader};
+        let addr = serve_background_opts(
+            svc(),
+            ServeOpts { max_conns: 0, read_timeout: Duration::from_secs(5) },
+        )
+        .unwrap();
+        let conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), r#"{"error":"busy"}"#);
+        // and the connection is closed afterwards
+        let mut rest = String::new();
+        assert_eq!(reader.read_line(&mut rest).unwrap(), 0);
+    }
+
+    #[test]
+    fn idle_connection_is_disconnected_by_read_timeout() {
+        use std::io::Read;
+        let addr = serve_background_opts(
+            svc(),
+            ServeOpts { max_conns: 4, read_timeout: Duration::from_millis(100) },
+        )
+        .unwrap();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // send nothing: the server must hang up on its own
+        let mut buf = [0u8; 16];
+        let n = conn.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "server should close the idle connection");
     }
 }

@@ -4,6 +4,7 @@
 //! [`QueryClient`]s, which implement [`BatchPredictor`] so the whole
 //! `predictor::e2e` composition runs unmodified on top of the service.
 
+use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -13,13 +14,22 @@ use crate::config::{ModelCfg, ParallelCfg, Platform};
 use crate::coordinator::batcher::{Batch, BatcherCfg, DynamicBatcher, PendingQuery};
 use crate::coordinator::metrics::Metrics;
 use crate::predictor::e2e::ComponentPrediction;
-use crate::predictor::opcache::OpPredictionCache;
+use crate::predictor::opcache::{LoadOutcome, OpPredictionCache};
 use crate::predictor::registry::BatchPredictor;
 use crate::sampling::DatasetKey;
+use crate::sweep::{SweepReport, SweepSpec};
 
 enum Msg {
     Query { key: DatasetKey, q: PendingQuery },
     Shutdown,
+}
+
+/// Persistence hookup for the service's op cache: the target path plus
+/// the fingerprint (registry + platform + backend, see
+/// `cli::cache_fingerprint`) the saved snapshots are keyed by.
+struct CachePersist {
+    path: PathBuf,
+    fingerprint: u64,
 }
 
 /// Handle to the running service.
@@ -30,8 +40,14 @@ pub struct PredictionService {
     /// Cross-request op-prediction cache: configurations served earlier
     /// (any schedule/strategy) pre-pay the op latencies of later ones,
     /// so repeated `predict_config` calls stop re-batching identical
-    /// rows through the executor. Exposed over the TCP `stats` command.
+    /// rows through the executor. Exposed over the TCP `stats` command,
+    /// optionally warm-started from / persisted to disk
+    /// ([`PredictionService::with_cache_persist`]).
     pub op_cache: Arc<OpPredictionCache>,
+    /// Sweep engine sharing `op_cache` — the TCP `sweep` command runs
+    /// whole [`SweepSpec`]s server-side on the persistent store.
+    engine: crate::sweep::Engine,
+    persist: Option<CachePersist>,
 }
 
 /// Cheap per-thread client; implements [`BatchPredictor`] by pushing
@@ -114,12 +130,38 @@ impl PredictionService {
                 }
             })
             .expect("spawn executor");
+        let op_cache = Arc::new(OpPredictionCache::new());
         PredictionService {
             tx,
             executor: Some(executor),
             metrics,
-            op_cache: Arc::new(OpPredictionCache::new()),
+            engine: crate::sweep::Engine::with_cache(op_cache.clone()),
+            op_cache,
+            persist: None,
         }
+    }
+
+    /// Cap the sweep engine's evaluation worker count (`serve --jobs`).
+    pub fn with_sweep_threads(mut self, threads: usize) -> PredictionService {
+        if threads > 0 {
+            self.engine.set_threads(threads);
+        }
+        self
+    }
+
+    /// Warm-start the op cache from `path` (ignored with a warning when
+    /// missing/corrupt/mismatched) and save it back after every served
+    /// sweep and on shutdown.
+    pub fn with_cache_persist(mut self, path: PathBuf, fingerprint: u64) -> PredictionService {
+        let outcome = self.op_cache.load(&path, fingerprint);
+        match outcome {
+            LoadOutcome::Loaded(_) | LoadOutcome::Missing => {
+                eprintln!("[fgpm] op cache {path:?}: {}", outcome.describe())
+            }
+            _ => eprintln!("[fgpm] WARNING: op cache {path:?}: {}", outcome.describe()),
+        }
+        self.persist = Some(CachePersist { path, fingerprint });
+        self
     }
 
     pub fn client(&self) -> QueryClient {
@@ -146,7 +188,34 @@ impl PredictionService {
         cp
     }
 
+    /// Run a whole sweep server-side on the persistent cache: enumerate,
+    /// prefetch the cross-config op union through the batching executor,
+    /// compose on the engine's scoped workers, rank. The report's cache
+    /// counters are THIS run's delta (the store is long-lived). Callers
+    /// that stream results should call [`Self::persist_cache`] AFTER the
+    /// rows have been written (the TCP handler does) so no client waits
+    /// out an O(store) disk write for already-computed results; the
+    /// cache is also persisted on drop.
+    pub fn sweep(&self, model: &ModelCfg, platform: &Platform, spec: &SweepSpec) -> SweepReport {
+        let mut client = self.client();
+        let report = self.engine.sweep(model, platform, spec, &mut client);
+        self.metrics.add(&self.metrics.sweeps, 1);
+        self.metrics.add(&self.metrics.sweep_rows, report.rows.len() as u64);
+        report
+    }
+
+    /// Save the op cache to its configured path (no-op otherwise).
+    pub fn persist_cache(&self) {
+        if let Some(p) = &self.persist {
+            if let Err(e) = self.op_cache.save(&p.path, p.fingerprint) {
+                eprintln!("[fgpm] WARNING: could not save op cache {:?}: {e}", p.path);
+            }
+        }
+    }
+
     pub fn shutdown(mut self) {
+        // Drop (which runs when `self` leaves scope here) persists the
+        // cache; no need to save twice.
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(h) = self.executor.take() {
             let _ = h.join();
@@ -156,6 +225,7 @@ impl PredictionService {
 
 impl Drop for PredictionService {
     fn drop(&mut self) {
+        self.persist_cache();
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(h) = self.executor.take() {
             let _ = h.join();

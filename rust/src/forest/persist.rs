@@ -107,12 +107,10 @@ pub fn key_from_name(name: &str) -> Option<DatasetKey> {
     Some((kind, dir))
 }
 
-/// Save a trained registry map to one JSON file.
-pub fn save_registry(
-    platform: &str,
-    forests: &HashMap<DatasetKey, TunedForest>,
-    path: &Path,
-) -> Result<()> {
+/// The canonical JSON form of a trained registry (sorted keys, so the
+/// same forests always serialize to the same bytes — the op-cache
+/// fingerprint hashes this when no registry file is on disk).
+pub fn registry_to_json(platform: &str, forests: &HashMap<DatasetKey, TunedForest>) -> Json {
     let mut entries = Vec::new();
     for (key, tuned) in forests {
         entries.push((
@@ -124,13 +122,22 @@ pub fn save_registry(
         ));
     }
     entries.sort_by(|a, b| a.0.cmp(&b.0));
-    let j = Json::obj(vec![
+    Json::obj(vec![
         ("platform", Json::Str(platform.to_string())),
         (
             "forests",
             Json::Obj(entries.into_iter().map(|(k, v)| (k, v)).collect()),
         ),
-    ]);
+    ])
+}
+
+/// Save a trained registry map to one JSON file.
+pub fn save_registry(
+    platform: &str,
+    forests: &HashMap<DatasetKey, TunedForest>,
+    path: &Path,
+) -> Result<()> {
+    let j = registry_to_json(platform, forests);
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }

@@ -13,15 +13,26 @@
 //! op occurrence — repeated encoder blocks would otherwise inflate the
 //! hit-rate to ~99% and hide how much cross-config sharing actually
 //! happens).
+//!
+//! Two tiers: the sharded **memory** store, and an optional read-mostly
+//! **disk** tier warm-started from a [`OpPredictionCache::save`] file so
+//! a SECOND process pays no backend round-trips for ops a previous run
+//! already predicted. The on-disk format is versioned and keyed by a
+//! caller-supplied fingerprint of everything a prediction depends on
+//! (trained sampling registry, platform spec, backend flavor) — a file
+//! whose fingerprint does not match, or that fails any structural
+//! check, is IGNORED with a warning (cold start), never trusted.
 
 use std::collections::{HashMap, HashSet};
 use std::hash::{Hash, Hasher};
+use std::io::{Read, Write};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::net::topology::NetPath;
 use crate::net::CommGeom;
-use crate::ops::{LoweredOp, OpInstance};
+use crate::ops::{Dir, LoweredOp, OpInstance, OpKind};
 use crate::predictor::registry::BatchPredictor;
 use crate::sampling::DatasetKey;
 
@@ -106,26 +117,125 @@ fn lowered_bits(op: &LoweredOp, out: &mut Vec<u64>) {
 
 const SHARDS: usize = 16;
 
-/// Hit/miss/size snapshot of an [`OpPredictionCache`].
+/// On-disk format: magic + version byte, then the fingerprint, then a
+/// count-prefixed list of (route, bits, value) entries, all
+/// little-endian. Bump the last magic byte on any layout change.
+const DISK_MAGIC: [u8; 8] = *b"FGPMOPC\x01";
+/// Structural sanity bound: no real op key carries this many bit words
+/// (the largest `Seq` lowerings are tens of words); anything bigger
+/// means a corrupt or hostile file.
+const MAX_KEY_WORDS: u32 = 1 << 16;
+
+/// 64-bit FNV-1a — the fingerprint hash for cache-file keying (stable
+/// across builds, unlike `DefaultHasher`).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fold several fingerprint parts into one (order-sensitive).
+pub fn combine_hashes(parts: &[u64]) -> u64 {
+    let mut bytes = Vec::with_capacity(parts.len() * 8);
+    for p in parts {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    fnv1a64(&bytes)
+}
+
+/// Result of warm-starting a cache from disk. Everything except
+/// `Loaded` leaves the cache cold and usable — a bad file is never
+/// trusted and never fatal.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LoadOutcome {
+    /// Entries now serving from the disk tier.
+    Loaded(usize),
+    /// No file at the given path (normal first run).
+    Missing,
+    /// The file's fingerprint differs — the sampling registry, platform
+    /// spec, or backend changed since it was written.
+    Mismatch { found: u64, expected: u64 },
+    /// Truncated / malformed file (tolerated as a cold start).
+    Corrupt(String),
+}
+
+impl LoadOutcome {
+    /// Human-readable one-liner for CLI/service logs.
+    pub fn describe(&self) -> String {
+        match self {
+            LoadOutcome::Loaded(n) => format!("warm-started {n} cached op predictions"),
+            LoadOutcome::Missing => "no cache file (cold start)".to_string(),
+            LoadOutcome::Mismatch { found, expected } => format!(
+                "cache file ignored: fingerprint {found:#x} != expected {expected:#x} \
+                 (registry/platform/backend changed)"
+            ),
+            LoadOutcome::Corrupt(why) => format!("cache file ignored: {why}"),
+        }
+    }
+}
+
+/// Hit/miss/size snapshot of an [`OpPredictionCache`], split by tier.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
-    /// Distinct-op consults served from the store (or from the pending
-    /// set of the same batched prefetch round).
+    /// Distinct-op consults served from the MEMORY store (or from the
+    /// pending set of the same batched prefetch round).
     pub hits: u64,
+    /// Distinct-op consults served from the DISK warm-start tier (the
+    /// op was predicted by a previous process).
+    pub disk_hits: u64,
     /// Distinct-op consults that required a backend round-trip.
     pub misses: u64,
-    /// Distinct (route, features) entries currently stored.
+    /// Distinct (route, features) entries currently in the memory store.
     pub entries: usize,
+    /// Entries in the disk warm-start snapshot (0 without `load`).
+    pub disk_entries: usize,
 }
 
 impl CacheStats {
-    /// hits / (hits + misses); 0.0 before any consult.
+    fn total(&self) -> u64 {
+        self.hits + self.disk_hits + self.misses
+    }
+
+    /// Combined (memory + disk) hit rate; 0.0 before any consult.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
-        if total == 0 {
+        if self.total() == 0 {
             0.0
         } else {
-            self.hits as f64 / total as f64
+            (self.hits + self.disk_hits) as f64 / self.total() as f64
+        }
+    }
+
+    /// Memory-tier share of all consults.
+    pub fn memory_hit_rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.total() as f64
+        }
+    }
+
+    /// Disk-tier share of all consults.
+    pub fn disk_hit_rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.disk_hits as f64 / self.total() as f64
+        }
+    }
+
+    /// Counter delta vs an earlier snapshot of the SAME cache (sizes are
+    /// kept from `self`) — how the sweep engine reports per-run rates on
+    /// a long-lived store.
+    pub fn delta_since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            disk_hits: self.disk_hits.saturating_sub(earlier.disk_hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            entries: self.entries,
+            disk_entries: self.disk_entries,
         }
     }
 }
@@ -134,7 +244,11 @@ impl CacheStats {
 /// Safe to share across the sweep engine's scoped worker threads.
 pub struct OpPredictionCache {
     shards: Vec<Mutex<HashMap<OpKey, f64>>>,
+    /// Warm-start snapshot loaded from disk; consulted after a memory
+    /// miss, with hits promoted into the memory shards.
+    disk: Mutex<HashMap<OpKey, f64>>,
     hits: AtomicU64,
+    disk_hits: AtomicU64,
     misses: AtomicU64,
 }
 
@@ -148,7 +262,9 @@ impl OpPredictionCache {
     pub fn new() -> OpPredictionCache {
         OpPredictionCache {
             shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            disk: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
     }
@@ -159,18 +275,40 @@ impl OpPredictionCache {
         &self.shards[(h.finish() as usize) % SHARDS]
     }
 
+    /// Tiered lookup: memory first, then the disk snapshot (promoting a
+    /// disk hit into memory). Returns `(value, from_disk)`.
+    fn lookup_tiered(&self, key: &OpKey) -> Option<(f64, bool)> {
+        if let Some(v) = self.shard(key).lock().unwrap().get(key).copied() {
+            return Some((v, false));
+        }
+        let v = self.disk.lock().unwrap().get(key).copied()?;
+        self.shard(key).lock().unwrap().insert(key.clone(), v);
+        Some((v, true))
+    }
+
     /// Stat-free lookup (used when re-reading ops already accounted for,
     /// e.g. the engine's post-prefetch composition phase).
     pub fn lookup(&self, key: &OpKey) -> Option<f64> {
-        self.shard(key).lock().unwrap().get(key).copied()
+        self.lookup_tiered(key).map(|(v, _)| v)
     }
 
     /// Counted lookup: the unit of the reported hit-rate. Call once per
     /// distinct op per prediction request.
     pub fn fetch(&self, key: &OpKey) -> Option<f64> {
-        let v = self.lookup(key);
-        self.record(v.is_some());
-        v
+        match self.lookup_tiered(key) {
+            Some((v, false)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            Some((v, true)) => {
+                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
     }
 
     /// Record a consult outcome without touching the store — the sweep
@@ -189,7 +327,7 @@ impl OpPredictionCache {
         self.shard(&key).lock().unwrap().insert(key, v);
     }
 
-    /// Distinct entries stored.
+    /// Distinct entries stored in the memory tier.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
@@ -201,9 +339,145 @@ impl OpPredictionCache {
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             entries: self.len(),
+            disk_entries: self.disk.lock().unwrap().len(),
         }
+    }
+
+    /// Persist the union of both tiers (memory wins on overlap, though
+    /// values are identical by construction) under `fingerprint`.
+    /// Written to a process-unique temp file in the target directory and
+    /// atomically renamed into place, so concurrent saves from two
+    /// engines cannot interleave bytes — the file is always one writer's
+    /// complete snapshot.
+    pub fn save(&self, path: &Path, fingerprint: u64) -> std::io::Result<()> {
+        let mut union: HashMap<OpKey, f64> = self.disk.lock().unwrap().clone();
+        for shard in &self.shards {
+            for (k, v) in shard.lock().unwrap().iter() {
+                union.insert(k.clone(), *v);
+            }
+        }
+        let mut entries: Vec<(OpKey, f64)> = union.into_iter().collect();
+        // deterministic file bytes for a given store content
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+
+        let mut buf: Vec<u8> = Vec::with_capacity(32 + entries.len() * 64);
+        buf.extend_from_slice(&DISK_MAGIC);
+        buf.extend_from_slice(&fingerprint.to_le_bytes());
+        buf.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+        for ((route, bits), v) in &entries {
+            let kind_idx = OpKind::ALL
+                .iter()
+                .position(|k| *k == route.0)
+                .expect("OpKind::ALL is exhaustive") as u8;
+            buf.push(kind_idx);
+            buf.push(match route.1 {
+                Dir::Fwd => 0u8,
+                Dir::Bwd => 1,
+            });
+            buf.extend_from_slice(&(bits.len() as u32).to_le_bytes());
+            for w in bits {
+                buf.extend_from_slice(&w.to_le_bytes());
+            }
+            buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        // unique per process AND per save: two engines (threads) saving
+        // the same path concurrently must not share a temp file
+        static SAVE_SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SAVE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp = path.with_extension(format!("tmp.{}.{seq}", std::process::id()));
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&buf)?;
+            f.sync_all()?;
+        }
+        match std::fs::rename(&tmp, path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+
+    /// Warm-start the disk tier from a [`save`](Self::save) file.
+    /// Anything but a structurally valid file whose fingerprint equals
+    /// `expected` leaves the cache untouched — see [`LoadOutcome`].
+    pub fn load(&self, path: &Path, expected: u64) -> LoadOutcome {
+        let mut bytes = Vec::new();
+        match std::fs::File::open(path) {
+            Ok(mut f) => {
+                if let Err(e) = f.read_to_end(&mut bytes) {
+                    return LoadOutcome::Corrupt(format!("read failed: {e}"));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return LoadOutcome::Missing,
+            Err(e) => return LoadOutcome::Corrupt(format!("open failed: {e}")),
+        }
+        match Self::decode(&bytes, expected) {
+            Ok(map) => {
+                let n = map.len();
+                *self.disk.lock().unwrap() = map;
+                LoadOutcome::Loaded(n)
+            }
+            Err(outcome) => outcome,
+        }
+    }
+
+    fn decode(bytes: &[u8], expected: u64) -> Result<HashMap<OpKey, f64>, LoadOutcome> {
+        let mut cur = Cursor { bytes, pos: 0 };
+        if cur.take(8)? != &DISK_MAGIC[..] {
+            return Err(LoadOutcome::Corrupt("bad magic / unsupported version".into()));
+        }
+        let found = cur.u64()?;
+        if found != expected {
+            return Err(LoadOutcome::Mismatch { found, expected });
+        }
+        let count = cur.u64()?;
+        // each entry is at least 14 bytes (route + word count + value):
+        // a count the remaining bytes cannot possibly hold is corrupt,
+        // and rejecting it BEFORE with_capacity keeps a flipped count
+        // field from amplifying into a multi-GB allocation
+        if count > (bytes.len() as u64) / 14 {
+            return Err(LoadOutcome::Corrupt("entry count exceeds file size".into()));
+        }
+        let mut map = HashMap::with_capacity(count as usize);
+        for _ in 0..count {
+            let kind_idx = cur.u8()? as usize;
+            if kind_idx >= OpKind::ALL.len() {
+                return Err(LoadOutcome::Corrupt("bad op kind".into()));
+            }
+            let dir = match cur.u8()? {
+                0 => Dir::Fwd,
+                1 => Dir::Bwd,
+                _ => return Err(LoadOutcome::Corrupt("bad direction".into())),
+            };
+            let nwords = cur.u32()?;
+            if nwords > MAX_KEY_WORDS {
+                return Err(LoadOutcome::Corrupt("oversized key".into()));
+            }
+            let mut words = Vec::with_capacity(nwords as usize);
+            for _ in 0..nwords {
+                words.push(cur.u64()?);
+            }
+            let v = f64::from_bits(cur.u64()?);
+            if !v.is_finite() {
+                return Err(LoadOutcome::Corrupt("non-finite prediction".into()));
+            }
+            map.insert(((OpKind::ALL[kind_idx], dir), words), v);
+        }
+        if cur.pos != bytes.len() {
+            return Err(LoadOutcome::Corrupt("trailing bytes".into()));
+        }
+        Ok(map)
     }
 
     /// Fetch a set of distinct, known-uncached ops through the backend —
@@ -241,6 +515,38 @@ impl OpPredictionCache {
             }
         }
         out
+    }
+}
+
+/// Bounds-checked little-endian reader over a cache file's bytes; every
+/// overrun is a [`LoadOutcome::Corrupt`], never a panic.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], LoadOutcome> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| LoadOutcome::Corrupt("truncated file".into()))?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, LoadOutcome> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, LoadOutcome> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, LoadOutcome> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 }
 

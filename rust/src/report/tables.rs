@@ -29,6 +29,43 @@ pub fn paper_configs() -> Vec<(ModelCfg, ParallelCfg)> {
         .collect()
 }
 
+/// The ranked `fgpm sweep` table: one `(strategy label, predicted batch
+/// seconds, GiB/GPU)` row per feasible configuration, fastest first,
+/// plus the skip-reason footers. BOTH the local engine path and the
+/// `sweep --remote` thin client render through this function, so a
+/// remote sweep's table is byte-identical to a local run on the same
+/// spec (property-tested in `tests/remote_sweep.rs`).
+pub fn sweep_table_text(
+    title: &str,
+    rows: &[(String, f64, f64)],
+    skipped_oom: usize,
+    skipped_sched: usize,
+    hbm_gib: f64,
+) -> String {
+    let mut s = format!("{title}\n");
+    for (i, (label, seconds, mem_gib)) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "{:>2}. {:<9} {:>8.2} s   {:>5.1} GiB/GPU{}\n",
+            i + 1,
+            label,
+            seconds,
+            mem_gib,
+            if i == 0 { "   <- best" } else { "" }
+        ));
+    }
+    if skipped_oom > 0 {
+        s.push_str(&format!(
+            "({skipped_oom} strategies skipped: exceed {hbm_gib} GiB HBM)\n"
+        ));
+    }
+    if skipped_sched > 0 {
+        s.push_str(&format!(
+            "({skipped_sched} strategies skipped: schedule rejects geometry)\n"
+        ));
+    }
+    s
+}
+
 /// Generic markdown table.
 pub fn markdown_table(headers: &[String], rows: &[Vec<String>]) -> String {
     let mut s = format!("| {} |\n", headers.join(" | "));
@@ -493,6 +530,27 @@ mod tests {
         let solo = traffic_volumes(&model, &ParallelCfg::new(4, 1, 1));
         assert_eq!(solo.mp_ring_bytes, 0.0);
         assert_eq!(solo.dp_ring_bytes, 0.0);
+    }
+
+    #[test]
+    fn sweep_table_text_shape() {
+        let rows = vec![
+            ("2-2-4".to_string(), 12.3456, 5.67),
+            ("4-2-2/gpipe".to_string(), 13.0, 6.0),
+        ];
+        let t = sweep_table_text("demo — predicted batch seconds:", &rows, 2, 1, 40.0);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 5);
+        assert_eq!(lines[0], "demo — predicted batch seconds:");
+        assert!(lines[1].starts_with(" 1. 2-2-4"));
+        assert!(lines[1].ends_with("<- best"));
+        assert!(lines[1].contains("12.35 s"), "{}", lines[1]);
+        assert!(!lines[2].contains("best"));
+        assert_eq!(lines[3], "(2 strategies skipped: exceed 40 GiB HBM)");
+        assert_eq!(lines[4], "(1 strategies skipped: schedule rejects geometry)");
+        // skip footers vanish when nothing was skipped
+        let t0 = sweep_table_text("t", &rows, 0, 0, 40.0);
+        assert_eq!(t0.lines().count(), 3);
     }
 
     #[test]

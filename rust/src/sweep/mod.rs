@@ -27,6 +27,7 @@
 //! the coordinator service all ride this path; `benches/bench_hotpath.rs`
 //! measures it and emits `BENCH_sweep.json` (configs/sec, hit-rate).
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::{ModelCfg, ParallelCfg, Platform};
@@ -147,11 +148,14 @@ pub fn feasible_configs(
     (cfgs, skipped_oom, skipped_sched)
 }
 
-/// The sweep engine: owns the cross-config [`OpPredictionCache`] and the
-/// worker budget. Construct once per command/service; reuse across
-/// sweeps to keep the cache warm.
+/// The sweep engine: owns (or shares) the cross-config
+/// [`OpPredictionCache`] and the worker budget. Construct once per
+/// command/service; reuse across sweeps to keep the cache warm — and
+/// warm-start the store across PROCESSES via
+/// [`OpPredictionCache::load`]/[`OpPredictionCache::save`] (the
+/// `--cache-dir` knob).
 pub struct Engine {
-    cache: OpPredictionCache,
+    cache: Arc<OpPredictionCache>,
     threads: usize,
 }
 
@@ -162,16 +166,28 @@ impl Default for Engine {
 }
 
 impl Engine {
-    /// One worker per available core.
+    /// One worker per available core, private cache.
     pub fn new() -> Engine {
+        Engine::with_cache(Arc::new(OpPredictionCache::new()))
+    }
+
+    /// An engine over an EXTERNAL store — how the coordinator service
+    /// runs sweeps on the same persistent cache its per-config
+    /// predictions use.
+    pub fn with_cache(cache: Arc<OpPredictionCache>) -> Engine {
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        Engine { cache: OpPredictionCache::new(), threads }
+        Engine { cache, threads }
     }
 
     /// Cap (or pin, with 1) the evaluation worker count.
     pub fn with_threads(mut self, threads: usize) -> Engine {
-        self.threads = threads.max(1);
+        self.set_threads(threads);
         self
+    }
+
+    /// In-place worker-count override (for already-constructed owners).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     /// The shared op-prediction store (hit/miss counters included).
@@ -241,6 +257,7 @@ impl Engine {
         pred: &mut dyn BatchPredictor,
     ) -> SweepReport {
         let t0 = Instant::now();
+        let before = self.cache.stats();
         let (cfgs, skipped_oom, skipped_sched) = feasible_configs(model, platform, spec);
         let mut rows = self.evaluate(model, platform, &cfgs, pred);
         rows.sort_by(|a, b| a.prediction.total_us.total_cmp(&b.prediction.total_us));
@@ -248,7 +265,9 @@ impl Engine {
             rows,
             skipped_oom,
             skipped_sched,
-            cache: self.cache.stats(),
+            // THIS run's consult counters (the store may be long-lived —
+            // the coordinator service reuses one engine across requests)
+            cache: self.cache.stats().delta_since(&before),
             elapsed: t0.elapsed(),
         }
     }

@@ -88,6 +88,30 @@ impl Json {
         self.as_arr()?.iter().map(|j| j.as_f64()).collect()
     }
 
+    // ---- keyed accessors (object field + coercion in one step) ------------
+    pub fn str_at(&self, key: &str) -> Option<&str> {
+        self.get(key)?.as_str()
+    }
+
+    pub fn f64_at(&self, key: &str) -> Option<f64> {
+        self.get(key)?.as_f64()
+    }
+
+    pub fn usize_at(&self, key: &str) -> Option<usize> {
+        self.get(key)?.as_usize()
+    }
+
+    /// Insert/overwrite a field; returns false (no-op) on non-objects.
+    pub fn insert(&mut self, key: &str, v: Json) -> bool {
+        match self {
+            Json::Obj(m) => {
+                m.insert(key.to_string(), v);
+                true
+            }
+            _ => false,
+        }
+    }
+
     // ---- parsing ----------------------------------------------------------
     pub fn parse(text: &str) -> Result<Json, ParseError> {
         let b = text.as_bytes();
@@ -412,6 +436,19 @@ mod tests {
         let j = Json::parse("[1, 2, 3]").unwrap();
         assert_eq!(j.as_f64_vec().unwrap(), vec![1.0, 2.0, 3.0]);
         assert!(Json::parse("[1, \"x\"]").unwrap().as_f64_vec().is_none());
+    }
+
+    #[test]
+    fn keyed_accessors_and_insert() {
+        let mut j = Json::parse(r#"{"name":"x","n":3.5,"k":7}"#).unwrap();
+        assert_eq!(j.str_at("name"), Some("x"));
+        assert_eq!(j.f64_at("n"), Some(3.5));
+        assert_eq!(j.usize_at("k"), Some(7));
+        assert_eq!(j.str_at("missing"), None);
+        assert!(j.insert("extra", Json::Bool(true)));
+        assert_eq!(j.get("extra").unwrap().as_bool(), Some(true));
+        let mut arr = Json::parse("[1]").unwrap();
+        assert!(!arr.insert("k", Json::Null), "insert on non-object is a no-op");
     }
 
     #[test]

@@ -1,0 +1,285 @@
+//! Disk-tier invariants for the op-prediction cache: save → load is
+//! bit-identical, fingerprint mismatches and corrupt/truncated files are
+//! tolerated as cold starts (never trusted, never fatal), concurrent
+//! saves cannot corrupt the file (write-to-temp + rename), and a warmed
+//! cache lets a SECOND cold engine run the smoke sweep with ≥ 95%
+//! combined hit rate and zero backend calls.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use fgpm::config::{ModelCfg, ParallelCfg, Platform};
+use fgpm::ops::{Dir, OpInstance};
+use fgpm::pipeline::ScheduleKind;
+use fgpm::predictor::e2e::OraclePredictor;
+use fgpm::predictor::opcache::{op_key, LoadOutcome, OpKey, OpPredictionCache};
+use fgpm::predictor::registry::BatchPredictor;
+use fgpm::sampling::DatasetKey;
+use fgpm::sweep::{Engine, SweepSpec};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fgpm_opcache_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A realistic keyed population: every distinct op of a real workload,
+/// with synthetic but exactly-reproducible values.
+fn sample_entries() -> Vec<(OpKey, f64)> {
+    let m = ModelCfg::gpt20b();
+    let p = Platform::perlmutter();
+    let wl = fgpm::ops::Workload::new(&m, &ParallelCfg::new(4, 4, 8), &p);
+    let mut ops: Vec<OpInstance> = fgpm::ops::build::encoder_ops(&m, &wl, Dir::Fwd);
+    ops.extend(fgpm::ops::build::encoder_ops(&m, &wl, Dir::Bwd));
+    let mut seen = HashSet::new();
+    let mut out = Vec::new();
+    for (i, op) in ops.iter().enumerate() {
+        let key = op_key(op);
+        if seen.insert(key.clone()) {
+            // include awkward values: tiny, huge, negative-exponent
+            out.push((key, 1.0e-7 + (i as f64) * 1234.5678910111213));
+        }
+    }
+    assert!(out.len() > 10, "need a non-trivial population");
+    out
+}
+
+const FP: u64 = 0xDEAD_BEEF_0BAD_CAFE;
+
+#[test]
+fn save_load_roundtrip_bit_identical() {
+    let dir = tmp_dir("roundtrip");
+    let path = dir.join("opcache.bin");
+    let entries = sample_entries();
+    let cache = OpPredictionCache::new();
+    for (k, v) in &entries {
+        cache.insert(k.clone(), *v);
+    }
+    cache.save(&path, FP).unwrap();
+
+    let fresh = OpPredictionCache::new();
+    assert_eq!(fresh.load(&path, FP), LoadOutcome::Loaded(entries.len()));
+    let s = fresh.stats();
+    assert_eq!(s.disk_entries, entries.len());
+    assert_eq!(s.entries, 0, "disk tier only until consulted");
+    for (k, v) in &entries {
+        // bit-identical, not approximately equal
+        assert_eq!(fresh.lookup(k), Some(*v));
+    }
+    // consults were stat-free lookups; now counted fetches hit disk tier
+    let fresh2 = OpPredictionCache::new();
+    fresh2.load(&path, FP);
+    for (k, _) in entries.iter().take(5) {
+        fresh2.fetch(k);
+    }
+    let s2 = fresh2.stats();
+    assert_eq!(s2.disk_hits, 5);
+    assert_eq!(s2.hits, 0);
+    assert_eq!(s2.misses, 0);
+    assert_eq!(s2.hit_rate(), 1.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn save_is_deterministic_and_second_save_roundtrips_union() {
+    let dir = tmp_dir("determinism");
+    let (p1, p2) = (dir.join("a.bin"), dir.join("b.bin"));
+    let entries = sample_entries();
+    let cache = OpPredictionCache::new();
+    for (k, v) in &entries {
+        cache.insert(k.clone(), *v);
+    }
+    cache.save(&p1, FP).unwrap();
+    cache.save(&p2, FP).unwrap();
+    assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+
+    // loading then saving from a fresh cache preserves the union
+    let reload = OpPredictionCache::new();
+    reload.load(&p1, FP);
+    let mut extra_key = entries[0].0.clone();
+    extra_key.1.push(0xFFFF); // a synthetic new key
+    reload.insert(extra_key.clone(), 42.0);
+    let p3 = dir.join("c.bin");
+    reload.save(&p3, FP).unwrap();
+    let back = OpPredictionCache::new();
+    assert_eq!(back.load(&p3, FP), LoadOutcome::Loaded(entries.len() + 1));
+    assert_eq!(back.lookup(&extra_key), Some(42.0));
+    assert_eq!(back.lookup(&entries[3].0), Some(entries[3].1));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fingerprint_mismatch_is_rejected_cold() {
+    let dir = tmp_dir("mismatch");
+    let path = dir.join("opcache.bin");
+    let cache = OpPredictionCache::new();
+    for (k, v) in sample_entries() {
+        cache.insert(k, v);
+    }
+    cache.save(&path, FP).unwrap();
+
+    let fresh = OpPredictionCache::new();
+    let outcome = fresh.load(&path, FP ^ 1);
+    assert_eq!(outcome, LoadOutcome::Mismatch { found: FP, expected: FP ^ 1 });
+    assert!(outcome.describe().contains("ignored"));
+    assert_eq!(fresh.stats().disk_entries, 0, "mismatched file must not be trusted");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_and_corrupt_files_tolerated_as_cold_start() {
+    let dir = tmp_dir("corrupt");
+    let path = dir.join("opcache.bin");
+    let cache = OpPredictionCache::new();
+    for (k, v) in sample_entries() {
+        cache.insert(k, v);
+    }
+    cache.save(&path, FP).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // missing file
+    let fresh = OpPredictionCache::new();
+    assert_eq!(fresh.load(&dir.join("nope.bin"), FP), LoadOutcome::Missing);
+
+    // truncations at every interesting boundary
+    for cut in [0, 4, 8, 15, 23, good.len() / 2, good.len() - 1] {
+        std::fs::write(&path, &good[..cut]).unwrap();
+        let fresh = OpPredictionCache::new();
+        let outcome = fresh.load(&path, FP);
+        assert!(
+            matches!(outcome, LoadOutcome::Corrupt(_)),
+            "cut at {cut}: {outcome:?}"
+        );
+        assert_eq!(fresh.stats().disk_entries, 0);
+    }
+
+    // flipped magic
+    let mut bad = good.clone();
+    bad[0] ^= 0xFF;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(matches!(
+        OpPredictionCache::new().load(&path, FP),
+        LoadOutcome::Corrupt(_)
+    ));
+
+    // garbage trailing bytes
+    let mut trailing = good.clone();
+    trailing.extend_from_slice(b"junk");
+    std::fs::write(&path, &trailing).unwrap();
+    assert!(matches!(
+        OpPredictionCache::new().load(&path, FP),
+        LoadOutcome::Corrupt(_)
+    ));
+
+    // pure garbage
+    std::fs::write(&path, b"definitely not a cache file").unwrap();
+    let fresh = OpPredictionCache::new();
+    assert!(matches!(fresh.load(&path, FP), LoadOutcome::Corrupt(_)));
+    // ... and the cache is still fully usable afterwards
+    let entries = sample_entries();
+    let (k, v) = &entries[0];
+    fresh.insert(k.clone(), *v);
+    assert_eq!(fresh.lookup(k), Some(*v));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_saves_never_corrupt_the_file() {
+    let dir = tmp_dir("concurrent");
+    let path = dir.join("opcache.bin");
+    let entries = sample_entries();
+    // two writers with DIFFERENT values: after any interleaving the file
+    // must be exactly one writer's complete snapshot
+    let make = |offset: f64| {
+        let c = OpPredictionCache::new();
+        for (k, v) in &entries {
+            c.insert(k.clone(), *v + offset);
+        }
+        c
+    };
+    let a = make(0.0);
+    let b = make(1.0e6);
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            for _ in 0..20 {
+                a.save(&path, FP).unwrap();
+            }
+        });
+        s.spawn(|| {
+            for _ in 0..20 {
+                b.save(&path, FP).unwrap();
+            }
+        });
+    });
+    let fresh = OpPredictionCache::new();
+    assert_eq!(fresh.load(&path, FP), LoadOutcome::Loaded(entries.len()));
+    let probe = fresh.lookup(&entries[0].0).unwrap();
+    let offset = if probe == entries[0].1 { 0.0 } else { 1.0e6 };
+    for (k, v) in &entries {
+        assert_eq!(fresh.lookup(k), Some(*v + offset), "mixed-writer snapshot");
+    }
+    // no temp droppings left behind
+    let leftovers: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path() != path)
+        .collect();
+    assert!(leftovers.is_empty(), "{leftovers:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Backend that fails the test if the engine ever reaches it.
+struct PanicBackend;
+
+impl BatchPredictor for PanicBackend {
+    fn predict_batch(&mut self, key: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+        panic!("warm engine must not refetch: {key:?} x {}", rows.len());
+    }
+
+    fn predict_op(&mut self, op: &OpInstance) -> f64 {
+        panic!("warm engine must not refetch: {:?}", op.kind);
+    }
+}
+
+#[test]
+fn warmed_disk_cache_serves_smoke_sweep_without_backend() {
+    // Acceptance: a second cold process with a warmed --cache-dir
+    // reports >= 95% combined hit rate on the smoke sweep. Here it is
+    // exactly 100%: the backend PANICS on any call.
+    let dir = tmp_dir("warm_sweep");
+    let path = dir.join("opcache_perlmutter.bin");
+    let model = ModelCfg::llemma7b();
+    let platform = Platform::perlmutter();
+    let mut spec = SweepSpec::new(16);
+    spec.schedules = ScheduleKind::all(2);
+
+    let engine = Engine::new();
+    let mut oracle = OraclePredictor { platform: platform.clone() };
+    let cold = engine.sweep(&model, &platform, &spec, &mut oracle);
+    assert!(!cold.rows.is_empty());
+    engine.cache().save(&path, FP).unwrap();
+
+    // "new process": fresh engine, fresh stats, disk tier only
+    let warm_engine = Engine::new();
+    assert_eq!(
+        warm_engine.cache().load(&path, FP),
+        LoadOutcome::Loaded(cold.cache.entries)
+    );
+    let warm = warm_engine.sweep(&model, &platform, &spec, &mut PanicBackend);
+    assert_eq!(warm.rows.len(), cold.rows.len());
+    for (w, c) in warm.rows.iter().zip(&cold.rows) {
+        assert_eq!(w.par, c.par);
+        assert_eq!(w.prediction.total_us, c.prediction.total_us, "{}", w.par.label());
+        assert_eq!(w.mem_gib, c.mem_gib);
+    }
+    assert!(warm.cache.disk_hits > 0, "{:?}", warm.cache);
+    assert_eq!(warm.cache.misses, 0, "{:?}", warm.cache);
+    assert!(
+        warm.cache.hit_rate() >= 0.95,
+        "combined warm hit-rate {:.3} below the 95% acceptance floor ({:?})",
+        warm.cache.hit_rate(),
+        warm.cache
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,205 @@
+//! Remote-sweep parity: `fgpm sweep --remote` must produce output
+//! BYTE-IDENTICAL to the local engine on the same `SweepSpec` — same
+//! rows, same exact f64s after the JSON round-trip, same rendered table
+//! — on flat AND rail topologies, across schedule × rank-map crossings.
+//! Plus service-level behavior: per-request summary deltas, the
+//! persistent cross-request cache, and disk warm-start through a
+//! service restart.
+
+use fgpm::config::{ModelCfg, Platform, TopoSpec};
+use fgpm::coordinator::server::{remote_sweep, serve_background, sweep_request_json};
+use fgpm::coordinator::{BatcherCfg, PredictionService};
+use fgpm::net::topology::RankOrder;
+use fgpm::ops::OpKind;
+use fgpm::pipeline::ScheduleKind;
+use fgpm::predictor::opcache::fnv1a64;
+use fgpm::predictor::registry::BatchPredictor;
+use fgpm::report::tables::sweep_table_text;
+use fgpm::sampling::DatasetKey;
+use fgpm::sweep::{Engine, SweepSpec};
+use fgpm::util::json::Json;
+
+/// Deterministic batch-capable backend used on BOTH sides of the parity
+/// check: latency = f(route, features), bit-reproducible anywhere.
+struct Det;
+
+impl BatchPredictor for Det {
+    fn predict_batch(&mut self, key: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+        let salt = OpKind::ALL.iter().position(|k| *k == key.0).unwrap() as f64;
+        rows.iter()
+            .map(|r| 3.0 + salt * 0.37 + r.iter().sum::<f64>().sqrt() / 41.0)
+            .collect()
+    }
+}
+
+fn svc() -> PredictionService {
+    PredictionService::start(Box::new(Det), BatcherCfg::default())
+}
+
+fn specs() -> Vec<SweepSpec> {
+    let mut crossed = SweepSpec::new(16);
+    crossed.schedules = ScheduleKind::all(2);
+    crossed.rank_orders = RankOrder::all();
+    let mut overlapped = SweepSpec::new(16);
+    overlapped.schedules = vec![ScheduleKind::OneFOneB, ScheduleKind::ZbH1];
+    overlapped.p2p_overlap = 0.5;
+    vec![SweepSpec::new(16), crossed, overlapped]
+}
+
+#[test]
+fn remote_rows_and_rendered_table_bit_identical_to_local() {
+    let model = ModelCfg::llemma7b();
+    for topo in [
+        TopoSpec::Flat,
+        TopoSpec::RailSpine { nodes_per_rail: 2, spine_bw_frac: 0.5 },
+    ] {
+        let platform = Platform::perlmutter().with_topo(topo);
+        let addr = serve_background(svc()).unwrap();
+        for spec in specs() {
+            // local reference run (fresh engine, same deterministic backend)
+            let local = Engine::new().sweep(&model, &platform, &spec, &mut Det);
+            assert!(!local.rows.is_empty(), "{topo:?}");
+
+            let request = sweep_request_json("llemma7b", "perlmutter", &topo, &spec);
+            let remote = remote_sweep(&addr.to_string(), &request).unwrap();
+
+            assert_eq!(remote.rows.len(), local.rows.len(), "{topo:?}");
+            for (r, l) in remote.rows.iter().zip(&local.rows) {
+                assert_eq!(r.label, l.par.label(), "{topo:?}");
+                // exact f64 equality across the JSON round-trip
+                assert_eq!(r.total_us, l.prediction.total_us, "{topo:?} {}", r.label);
+                assert_eq!(r.mem_gib, l.mem_gib, "{topo:?} {}", r.label);
+            }
+
+            // the TABLE the two CLI paths print must match byte for byte
+            let title = "parity — predicted batch seconds:";
+            let local_rows: Vec<(String, f64, f64)> = local
+                .rows
+                .iter()
+                .map(|r| (r.par.label(), r.seconds(), r.mem_gib))
+                .collect();
+            let remote_rows: Vec<(String, f64, f64)> = remote
+                .rows
+                .iter()
+                .map(|r| (r.label.clone(), r.total_us / 1e6, r.mem_gib))
+                .collect();
+            let skipped_oom = remote.summary.usize_at("skipped_oom").unwrap();
+            let skipped_sched = remote.summary.usize_at("skipped_sched").unwrap();
+            assert_eq!(skipped_oom, local.skipped_oom);
+            assert_eq!(skipped_sched, local.skipped_sched);
+            let hbm = platform.gpu.hbm_gib;
+            assert_eq!(
+                sweep_table_text(title, &remote_rows, skipped_oom, skipped_sched, hbm),
+                sweep_table_text(title, &local_rows, local.skipped_oom, local.skipped_sched, hbm),
+                "{topo:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn summary_reports_per_request_deltas_on_the_persistent_cache() {
+    let model = ModelCfg::llemma7b();
+    let platform = Platform::perlmutter();
+    let mut spec = SweepSpec::new(16);
+    spec.schedules = ScheduleKind::all(2);
+    let service = svc();
+    let addr = serve_background(service).unwrap();
+    let request = sweep_request_json(model.name, "perlmutter", &TopoSpec::Flat, &spec);
+
+    let first = remote_sweep(&addr.to_string(), &request).unwrap();
+    let misses1 = first.summary.f64_at("cache_misses").unwrap();
+    assert!(misses1 > 0.0, "cold run must miss");
+
+    // second request: the service's engine cache is warm — all hits,
+    // zero new misses, and the delta summary reflects exactly this run
+    let second = remote_sweep(&addr.to_string(), &request).unwrap();
+    assert_eq!(second.summary.f64_at("cache_misses").unwrap(), 0.0);
+    assert_eq!(second.summary.f64_at("cache_hit_rate").unwrap(), 1.0);
+    assert_eq!(second.rows.len(), first.rows.len());
+    for (a, b) in first.rows.iter().zip(&second.rows) {
+        assert_eq!(a, b, "warm serve must be bit-identical");
+    }
+}
+
+#[test]
+fn cache_dir_warm_starts_a_restarted_service() {
+    let dir = std::env::temp_dir().join(format!("fgpm_remote_sweep_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("opcache_perlmutter.bin");
+    let fp = fnv1a64(b"remote_sweep_test");
+
+    let mut spec = SweepSpec::new(16);
+    spec.schedules = ScheduleKind::all(2);
+    let request = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
+
+    let svc1 = svc().with_cache_persist(path.clone(), fp);
+    let addr1 = serve_background(svc1).unwrap();
+    let cold = remote_sweep(&addr1.to_string(), &request).unwrap();
+    // the save runs AFTER the stream (off the client's critical path),
+    // so allow the server a moment to finish it
+    for _ in 0..200 {
+        if path.exists() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    assert!(path.exists(), "service must persist after a served sweep");
+
+    // acceptance: a second cold process with a warmed --cache-dir
+    // reports >= 95% combined (memory+disk) hit rate on the smoke sweep
+    let svc2 = svc().with_cache_persist(path.clone(), fp);
+    let addr2 = serve_background(svc2).unwrap();
+    let warm = remote_sweep(&addr2.to_string(), &request).unwrap();
+    assert_eq!(warm.rows.len(), cold.rows.len());
+    for (a, b) in cold.rows.iter().zip(&warm.rows) {
+        assert_eq!(a, b, "restart must not change a single bit");
+    }
+    let rate = warm.summary.f64_at("cache_hit_rate").unwrap();
+    let disk_rate = warm.summary.f64_at("cache_disk_hit_rate").unwrap();
+    assert!(rate >= 0.95, "combined warm hit-rate {rate} < 0.95: {}", warm.summary);
+    assert!(disk_rate > 0.0, "warm start must be served by the DISK tier: {}", warm.summary);
+    assert_eq!(warm.summary.f64_at("cache_misses").unwrap(), 0.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sweep_and_single_line_commands_interleave_on_one_connection() {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = serve_background(svc()).unwrap();
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+
+    conn.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("true"));
+
+    let spec = SweepSpec::new(16);
+    let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
+    conn.write_all(format!("{req}\n").as_bytes()).unwrap();
+    let mut rows = 0usize;
+    loop {
+        let mut l = String::new();
+        assert!(reader.read_line(&mut l).unwrap() > 0, "stream ended early");
+        let j = Json::parse(l.trim()).unwrap();
+        if j.get("row").is_some() {
+            rows += 1;
+            continue;
+        }
+        let summary = j.get("summary").expect("rows then summary only");
+        assert_eq!(summary.usize_at("configs"), Some(rows));
+        break;
+    }
+    assert!(rows > 0);
+
+    // the connection is still usable for single-line commands
+    line.clear();
+    conn.write_all(b"{\"cmd\":\"stats\"}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let stats = Json::parse(line.trim()).unwrap();
+    assert_eq!(stats.f64_at("sweeps"), Some(1.0));
+    assert!(stats.f64_at("sweep_rows").unwrap() >= rows as f64);
+    assert!(stats.f64_at("op_cache_hit_rate").is_some());
+}
