@@ -18,6 +18,11 @@ artifact every run), and FAILS the job when:
     deliberately wide (shared CI runners are noisy) and the baseline is
     deliberately conservative; re-baseline BENCH_baseline.json when the
     bench fixture or runner class changes.
+  * `pruned_frac`       < PRUNED_FRAC_FLOOR (0.30) — the branch-and-bound
+    bound stopped skipping work on the all-schedules x all-rank-maps
+    top-8 fixture (absolute floor, baseline-independent);
+  * `batch_predict_ns_per_row` > (1 + TOLERANCE) x baseline — the flat
+    SoA batched forest path regressed more than 30% per row.
 
 Exit code 0 = gate passed, 1 = regression, 2 = malformed input.
 """
@@ -29,6 +34,7 @@ import time
 
 HIT_RATE_FLOOR = 0.50
 WARM_RATE_FLOOR = 0.95
+PRUNED_FRAC_FLOOR = 0.30
 TOLERANCE = 0.30
 
 
@@ -50,7 +56,13 @@ def main(argv):
     except (OSError, json.JSONDecodeError) as e:
         die(2, f"cannot read inputs: {e}")
 
-    for field in ("configs_evaluated", "configs_per_sec", "cache_hit_rate"):
+    for field in (
+        "configs_evaluated",
+        "configs_per_sec",
+        "cache_hit_rate",
+        "pruned_frac",
+        "batch_predict_ns_per_row",
+    ):
         if field not in actual:
             die(2, f"{actual_path} missing '{field}': {actual}")
     if actual["configs_evaluated"] <= 0:
@@ -69,6 +81,9 @@ def main(argv):
         "cache_hit_rate": actual["cache_hit_rate"],
         "warm_hit_rate": actual.get("warm_hit_rate"),
         "elapsed_us": actual.get("elapsed_us"),
+        "pruned_frac": actual.get("pruned_frac"),
+        "batch_predict_ns_per_row": actual.get("batch_predict_ns_per_row"),
+        "batch_speedup": actual.get("batch_speedup"),
     }
     with open(trajectory_path, "a") as f:
         f.write(json.dumps(record, sort_keys=True) + "\n")
@@ -91,13 +106,26 @@ def main(argv):
             f"configs_per_sec {actual['configs_per_sec']:.1f} < "
             f"{floor_cps:.1f} (= {1 - TOLERANCE:.0%} of baseline {base_cps:.1f})"
         )
+    if actual["pruned_frac"] < PRUNED_FRAC_FLOOR:
+        failures.append(
+            f"pruned_frac {actual['pruned_frac']:.3f} < floor {PRUNED_FRAC_FLOOR}"
+        )
+    base_batch_ns = baseline.get("batch_predict_ns_per_row", 0.0)
+    ceil_batch_ns = (1.0 + TOLERANCE) * base_batch_ns
+    if base_batch_ns > 0.0 and actual["batch_predict_ns_per_row"] > ceil_batch_ns:
+        failures.append(
+            f"batch_predict_ns_per_row {actual['batch_predict_ns_per_row']:.0f} > "
+            f"{ceil_batch_ns:.0f} (= {1 + TOLERANCE:.0%} of baseline {base_batch_ns:.0f})"
+        )
 
     if failures:
         die(1, "; ".join(failures))
     print(
         f"bench-gate: PASS — {actual['configs_per_sec']:.1f} configs/s "
         f"(baseline {base_cps:.1f}), hit-rate {actual['cache_hit_rate']:.2f}, "
-        f"warm {warm if warm is not None else 'n/a'}"
+        f"warm {warm if warm is not None else 'n/a'}, "
+        f"pruned {actual['pruned_frac']:.0%}, "
+        f"batch {actual['batch_predict_ns_per_row']:.0f} ns/row"
     )
 
 

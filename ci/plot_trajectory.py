@@ -1,0 +1,163 @@
+#!/usr/bin/env python3
+"""Render the rolling perf trajectory as a standalone SVG.
+
+Usage:
+    python3 ci/plot_trajectory.py BENCH_trajectory.jsonl BENCH_trajectory.svg
+
+Reads the JSONL history ci/bench_gate.py appends to on every CI run and
+draws two series over run index:
+
+  * configs_per_sec (left axis, solid line) — sweep throughput;
+  * cache_hit_rate  (right axis 0..1, dashed line) — cross-config
+    op-cache effectiveness.
+
+Stdlib only (no matplotlib on the runners); the output is uploaded as a
+CI artifact next to the JSONL so a regression can be eyeballed without
+downloading the history. Missing or empty input produces a placeholder
+SVG and exit code 0 — the plot must never fail the job. Exit 2 only on
+usage errors.
+"""
+
+import json
+import sys
+
+WIDTH, HEIGHT = 880, 360
+MARGIN_L, MARGIN_R, MARGIN_T, MARGIN_B = 64, 64, 36, 44
+PLOT_W = WIDTH - MARGIN_L - MARGIN_R
+PLOT_H = HEIGHT - MARGIN_T - MARGIN_B
+
+CPS_COLOR = "#1f77b4"
+HIT_COLOR = "#d62728"
+
+
+def load_records(path):
+    records = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue  # tolerate a torn append from a cancelled run
+                if isinstance(rec.get("configs_per_sec"), (int, float)):
+                    records.append(rec)
+    except OSError:
+        pass
+    return records
+
+
+def svg_header(title):
+    return [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{WIDTH}" height="{HEIGHT}" '
+        f'viewBox="0 0 {WIDTH} {HEIGHT}" font-family="monospace" font-size="12">',
+        f'<rect width="{WIDTH}" height="{HEIGHT}" fill="white"/>',
+        f'<text x="{WIDTH / 2}" y="20" text-anchor="middle" font-size="14">{title}</text>',
+    ]
+
+
+def placeholder_svg(msg):
+    parts = svg_header("fgpm sweep perf trajectory")
+    parts.append(
+        f'<text x="{WIDTH / 2}" y="{HEIGHT / 2}" text-anchor="middle" '
+        f'fill="#888">{msg}</text>'
+    )
+    parts.append("</svg>")
+    return "\n".join(parts) + "\n"
+
+
+def x_of(i, n):
+    if n <= 1:
+        return MARGIN_L + PLOT_W / 2
+    return MARGIN_L + PLOT_W * i / (n - 1)
+
+
+def y_of(v, lo, hi):
+    if hi <= lo:
+        return MARGIN_T + PLOT_H / 2
+    return MARGIN_T + PLOT_H * (1.0 - (v - lo) / (hi - lo))
+
+
+def polyline(points, color, dashed=False):
+    pts = " ".join(f"{px:.1f},{py:.1f}" for px, py in points)
+    dash = ' stroke-dasharray="6,4"' if dashed else ""
+    return f'<polyline points="{pts}" fill="none" stroke="{color}" stroke-width="2"{dash}/>'
+
+
+def render(records):
+    n = len(records)
+    cps = [float(r["configs_per_sec"]) for r in records]
+    hit = [float(r.get("cache_hit_rate") or 0.0) for r in records]
+    cps_hi = max(cps) * 1.1 or 1.0
+
+    parts = svg_header(f"fgpm sweep perf trajectory ({n} runs)")
+    # frame + horizontal grid with dual-axis tick labels
+    parts.append(
+        f'<rect x="{MARGIN_L}" y="{MARGIN_T}" width="{PLOT_W}" height="{PLOT_H}" '
+        f'fill="none" stroke="#ccc"/>'
+    )
+    for frac in (0.0, 0.25, 0.5, 0.75, 1.0):
+        gy = MARGIN_T + PLOT_H * (1.0 - frac)
+        parts.append(
+            f'<line x1="{MARGIN_L}" y1="{gy:.1f}" x2="{MARGIN_L + PLOT_W}" y2="{gy:.1f}" '
+            f'stroke="#eee"/>'
+        )
+        parts.append(
+            f'<text x="{MARGIN_L - 6}" y="{gy + 4:.1f}" text-anchor="end" '
+            f'fill="{CPS_COLOR}">{cps_hi * frac:.0f}</text>'
+        )
+        parts.append(
+            f'<text x="{MARGIN_L + PLOT_W + 6}" y="{gy + 4:.1f}" text-anchor="start" '
+            f'fill="{HIT_COLOR}">{frac:.2f}</text>'
+        )
+    # axis titles + legend
+    parts.append(
+        f'<text x="{MARGIN_L}" y="{HEIGHT - 10}" fill="{CPS_COLOR}">configs/sec (left)</text>'
+    )
+    parts.append(
+        f'<text x="{MARGIN_L + PLOT_W}" y="{HEIGHT - 10}" text-anchor="end" '
+        f'fill="{HIT_COLOR}">cache hit-rate (right, dashed)</text>'
+    )
+    parts.append(
+        f'<text x="{WIDTH / 2}" y="{HEIGHT - 10}" text-anchor="middle" fill="#666">run index '
+        f"(oldest → newest)</text>"
+    )
+
+    cps_pts = [(x_of(i, n), y_of(v, 0.0, cps_hi)) for i, v in enumerate(cps)]
+    hit_pts = [(x_of(i, n), y_of(v, 0.0, 1.0)) for i, v in enumerate(hit)]
+    parts.append(polyline(cps_pts, CPS_COLOR))
+    parts.append(polyline(hit_pts, HIT_COLOR, dashed=True))
+    for px, py in cps_pts:
+        parts.append(f'<circle cx="{px:.1f}" cy="{py:.1f}" r="2.5" fill="{CPS_COLOR}"/>')
+    for px, py in hit_pts:
+        parts.append(f'<circle cx="{px:.1f}" cy="{py:.1f}" r="2.5" fill="{HIT_COLOR}"/>')
+    # annotate the newest run
+    last = records[-1]
+    label = f"{cps[-1]:.0f} cfg/s · hit {hit[-1]:.2f} · {str(last.get('sha', ''))[:8]}"
+    parts.append(
+        f'<text x="{MARGIN_L + PLOT_W}" y="{MARGIN_T - 8}" text-anchor="end" '
+        f'fill="#333">latest: {label}</text>'
+    )
+    parts.append("</svg>")
+    return "\n".join(parts) + "\n"
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(f"usage: {argv[0]} BENCH_trajectory.jsonl OUT.svg", file=sys.stderr)
+        sys.exit(2)
+    records = load_records(argv[1])
+    if not records:
+        svg = placeholder_svg(f"no trajectory records in {argv[1]} yet")
+        print(f"plot-trajectory: no records in {argv[1]}; wrote placeholder {argv[2]}")
+    else:
+        svg = render(records)
+        print(f"plot-trajectory: rendered {len(records)} runs -> {argv[2]}")
+    with open(argv[2], "w") as f:
+        f.write(svg)
+
+
+if __name__ == "__main__":
+    main(sys.argv)

@@ -9,12 +9,13 @@
 //! Pass `-- --smoke` for the CI-sized fixture (small model/GPU count,
 //! fewer iterations; still writes BENCH_sweep.json).
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use fgpm::config::{ModelCfg, Platform};
 use fgpm::coordinator::batcher::{BatcherCfg, DynamicBatcher, PendingQuery};
 use fgpm::forest::ensemble::{to_log, Forest, RfParams};
-use fgpm::forest::FlatForest;
+use fgpm::forest::{FlatEnsemble, FlatForest};
+use fgpm::net::topology::RankOrder;
 use fgpm::ops::{Dir, OpKind};
 use fgpm::pipeline::{one_f_one_b, ScheduleKind, TaskTimes};
 use fgpm::predictor::e2e::OraclePredictor;
@@ -40,7 +41,16 @@ fn trained_forest(seed: u64) -> (Vec<Vec<f64>>, Forest) {
     (x, f)
 }
 
-fn write_bench_sweep_json(case: &str, report: &SweepReport, warm: &SweepReport, smoke: bool) {
+#[allow(clippy::too_many_arguments)]
+fn write_bench_sweep_json(
+    case: &str,
+    report: &SweepReport,
+    warm: &SweepReport,
+    pruned: &SweepReport,
+    batch_ns_per_row: f64,
+    recursive_ns_per_row: f64,
+    smoke: bool,
+) {
     let json = Json::obj(vec![
         ("bench", Json::Str("sweep".into())),
         ("case", Json::Str(case.into())),
@@ -61,6 +71,17 @@ fn write_bench_sweep_json(case: &str, report: &SweepReport, warm: &SweepReport, 
         ("warm_disk_hits", Json::Num(warm.cache.disk_hits as f64)),
         ("warm_misses", Json::Num(warm.cache.misses as f64)),
         ("warm_configs_per_sec", Json::Num(warm.configs_per_sec())),
+        // branch-and-bound top-k sweep (all schedules x rank maps,
+        // top_k = 8): fraction of enumerated configs the admissible
+        // analytical bound skipped without full lowering + composition
+        ("pruned_frac", Json::Num(pruned.pruned_frac())),
+        ("pruned", Json::Num(pruned.pruned as f64)),
+        ("bound_consults", Json::Num(pruned.bound_consults as f64)),
+        ("pruned_configs_per_sec", Json::Num(pruned.configs_per_sec())),
+        // flat SoA batched forest inference vs the recursive pointer walk
+        ("batch_predict_ns_per_row", Json::Num(batch_ns_per_row)),
+        ("recursive_predict_ns_per_row", Json::Num(recursive_ns_per_row)),
+        ("batch_speedup", Json::Num(recursive_ns_per_row / batch_ns_per_row.max(1e-9))),
     ]);
     match std::fs::write("BENCH_sweep.json", json.to_string()) {
         Ok(()) => println!("wrote BENCH_sweep.json: {json}"),
@@ -115,6 +136,37 @@ fn main() {
             black_box(flat.predict_us(row, 16));
         }
     });
+
+    // flat SoA batched inference (the registry's multi-row route),
+    // measured against the recursive pointer walk on the same rows
+    let flat64 = FlatEnsemble::compile(&forest);
+    let batch_rows: Vec<Vec<f64>> = x.iter().take(256).cloned().collect();
+    for (row, got) in batch_rows.iter().zip(flat64.predict_us_batch(&batch_rows)) {
+        assert_eq!(got, forest.predict_us(row), "flat batch diverged from recursive");
+    }
+    b.case("flat SoA batched inference (256 queries)", || {
+        black_box(flat64.predict_us_batch(&batch_rows));
+    });
+    let timing_iters: u32 = if smoke { 30 } else { 300 };
+    let t = Instant::now();
+    for _ in 0..timing_iters {
+        black_box(flat64.predict_us_batch(&batch_rows));
+    }
+    let batch_ns_per_row =
+        t.elapsed().as_nanos() as f64 / (timing_iters as usize * batch_rows.len()) as f64;
+    let t = Instant::now();
+    for _ in 0..timing_iters {
+        for row in &batch_rows {
+            black_box(forest.predict_us(row));
+        }
+    }
+    let recursive_ns_per_row =
+        t.elapsed().as_nanos() as f64 / (timing_iters as usize * batch_rows.len()) as f64;
+    println!(
+        "per-row forest inference: batched {batch_ns_per_row:.0} ns vs recursive \
+         {recursive_ns_per_row:.0} ns ({:.2}x)",
+        recursive_ns_per_row / batch_ns_per_row.max(1e-9)
+    );
 
     // dynamic batcher policy throughput
     b.case("dynamic batcher push+flush (4096 queries)", || {
@@ -198,7 +250,47 @@ fn main() {
     assert_eq!(warm.rows.len(), cfgs.len());
     let _ = std::fs::remove_dir_all(&cache_dir);
 
-    write_bench_sweep_json(case_name, &report, &warm, smoke);
+    // branch-and-bound pruned top-k sweep: all schedules x rank maps,
+    // k = 8 — the acceptance fixture for the bench gate's pruned_frac
+    // floor. The no-prune reference proves the top-k is bit-identical.
+    let mut topk_spec = spec.clone();
+    topk_spec.rank_orders = RankOrder::all();
+    topk_spec.top_k = Some(8);
+    let reference = {
+        let mut full_spec = topk_spec.clone();
+        full_spec.prune = false;
+        let engine = fgpm::sweep::Engine::new();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        engine.sweep(&model, &platform, &full_spec, &mut oracle)
+    };
+    let mut pruned_report = None;
+    b.case("pruned top-8 sweep (all schedules x rank maps)", || {
+        let engine = fgpm::sweep::Engine::new();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        pruned_report = Some(engine.sweep(&model, &platform, &topk_spec, &mut oracle));
+    });
+    let pruned = pruned_report.expect("pruned case ran");
+    assert_eq!(pruned.rows.len(), reference.rows.len());
+    for (got, want) in pruned.rows.iter().zip(&reference.rows) {
+        assert_eq!(got.par, want.par, "pruned top-k diverged from no-prune");
+        assert_eq!(got.prediction.total_us, want.prediction.total_us, "{}", want.par.label());
+    }
+    println!(
+        "pruned sweep: skipped {} of {} configs ({:.0}%)",
+        pruned.pruned,
+        pruned.evaluated + pruned.pruned,
+        pruned.pruned_frac() * 100.0
+    );
+
+    write_bench_sweep_json(
+        case_name,
+        &report,
+        &warm,
+        &pruned,
+        batch_ns_per_row,
+        recursive_ns_per_row,
+        smoke,
+    );
     if !smoke && report.cache.hit_rate() < 0.5 {
         eprintln!(
             "WARNING: cross-config cache hit-rate {:.1}% below the 50% acceptance floor",

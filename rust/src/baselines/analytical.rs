@@ -7,8 +7,12 @@
 //! the paper's introduction; the ablation bench quantifies how much the
 //! sampled regressors buy over it.
 
-use crate::config::Platform;
-use crate::ops::{Dir, OpKind};
+use crate::config::{ModelCfg, ParallelCfg, Platform};
+use crate::net::{CommGeom, INTER_MAX_EFF};
+use crate::ops::build::{dp_allgather, dp_allreduce, encoder_ops, optimizer, Workload};
+use crate::ops::params::{stage_params_paper, StageRole};
+use crate::ops::{Dir, LoweredOp, OpKind};
+use crate::pipeline::encoder_allocation;
 use crate::predictor::registry::BatchPredictor;
 use crate::sampling::DatasetKey;
 
@@ -108,6 +112,114 @@ impl BatchPredictor for Analytical {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Admissible lower bounds (branch-and-bound pruning support)
+//
+// Unlike [`Analytical::predict_row`] above — a deliberately sloppy flat-80%
+// comparator that OVERestimates many ops — these floors are provable
+// UNDERestimates of `sim::deterministic_us` for every lowered op: compute at
+// full peak (the simulator's efficiency model never exceeds 1), memory
+// traffic at L2 bandwidth (the logistic blend is bounded above by it),
+// collective volume on the fastest tier at the maximum efficiency the
+// collective model can reach, and no launch/latency/reduction/contention
+// terms anywhere. `sweep::Engine` uses them to skip configs that provably
+// cannot reach the running top-k.
+// ---------------------------------------------------------------------------
+
+/// Ring all-reduce volume floor: `2(P-1)/P · bytes` on the fastest tier at
+/// unit efficiency, refined for node-spanning groups by the inter-node
+/// stage's own floor (the hierarchical model must move at least the
+/// per-leader shard across the fabric at ≤ [`INTER_MAX_EFF`]).
+fn allreduce_floor_us(bytes: f64, geom: CommGeom, platform: &Platform) -> f64 {
+    if geom.world() <= 1 {
+        return 0.0;
+    }
+    let p = geom.world() as f64;
+    let bw_best = platform.intra_bw_gbs.max(platform.inter_bw_gbs);
+    let mut floor = 2.0 * (p - 1.0) / p * bytes / (bw_best * 1e9) * 1e6;
+    if geom.nodes > 1 {
+        let n = geom.nodes as f64;
+        let shard = bytes / geom.gpus_per_node as f64;
+        let spanning =
+            2.0 * (n - 1.0) / n * shard / (platform.inter_bw_gbs * INTER_MAX_EFF * 1e9) * 1e6;
+        floor = floor.max(spanning);
+    }
+    floor
+}
+
+/// All-gather analog: one-directional `(P-1)/P · bytes_out` volume.
+fn allgather_floor_us(bytes_out: f64, geom: CommGeom, platform: &Platform) -> f64 {
+    if geom.world() <= 1 {
+        return 0.0;
+    }
+    let p = geom.world() as f64;
+    let volume = (p - 1.0) / p * bytes_out;
+    let bw_best = platform.intra_bw_gbs.max(platform.inter_bw_gbs);
+    let mut floor = volume / (bw_best * 1e9) * 1e6;
+    if geom.nodes > 1 {
+        let spanning = volume / (platform.inter_bw_gbs * INTER_MAX_EFF * 1e9) * 1e6;
+        floor = floor.max(spanning);
+    }
+    floor
+}
+
+/// Admissible per-op floor, µs: provably ≤ `sim::deterministic_us(op)` on
+/// the same platform, for every op variant and every topology (rail/spine
+/// fabrics only ever LOWER the effective inter-node bandwidth relative to
+/// the flat `inter_bw_gbs` these floors assume).
+pub fn op_floor_us(op: &LoweredOp, platform: &Platform) -> f64 {
+    let gpu = &platform.gpu;
+    match op {
+        // eff = base_eff·util_tile·util_wave·(0.55+0.45·k_eff) ≤ 0.62 < 1,
+        // and the HBM floor + launch only add time
+        LoweredOp::Gemm(shape) => shape.flops() / (gpu.peak_tflops_fp16 * 1e12) * 1e6,
+        // effective bandwidth is a logistic blend of l2_bw and mem_bw,
+        // bounded above by l2_bw; reduction + launch terms dropped
+        LoweredOp::Mem { kind, elems, elem_bytes, .. } => {
+            elems * elem_bytes * kind.passes() / (gpu.l2_bw_gbs * 1e9) * 1e6
+        }
+        // the simulator divides peak by 0.60 — full peak is strictly below
+        LoweredOp::Flash { flops, .. } => flops / (gpu.peak_tflops_fp16 * 1e12) * 1e6,
+        LoweredOp::AllReduce { bytes, geom, .. } => allreduce_floor_us(*bytes, *geom, platform),
+        LoweredOp::AllGather { bytes_out, geom, .. } => {
+            allgather_floor_us(*bytes_out, *geom, platform)
+        }
+        // pure latency floor would be tier-dependent; 0 is trivially safe
+        LoweredOp::P2p { .. } => 0.0,
+        LoweredOp::Seq(ops) => ops.iter().map(|o| op_floor_us(o, platform)).sum(),
+    }
+}
+
+/// Admissible lower bound on a config's predicted batch time, µs.
+///
+/// Every schedule's closed form is
+/// `m·(max_fwd + max_bwd) + steady/bubble/P2P terms (all ≥ 0)
+///  + first_stage_sync + max_update`, where `max_fwd`/`max_bwd` are maxima
+/// over per-stage op-time sums. The heaviest stage holds
+/// `max(encoder_allocation)` encoders, `first_stage_sync` is exactly stage
+/// 0's DP all-reduce, and `max_update` is at least stage 0's
+/// optimizer + all-gather — so summing per-op floors over one encoder
+/// (forward + backward), scaling by `m · n_enc_max`, and adding stage 0's
+/// sync/update floors can never exceed the engine's prediction under the
+/// deterministic oracle. (Asserted over the gpt20b/128 enumeration in this
+/// module's tests and over full sweeps in `tests/prop_sweep.rs`.)
+pub fn sweep_lower_bound_us(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> f64 {
+    let wl = Workload::new(model, par, platform);
+    let floor_sum = |dir: Dir| -> f64 {
+        encoder_ops(model, &wl, dir).iter().map(|op| op_floor_us(&op.lowered, platform)).sum()
+    };
+    let enc_floor = floor_sum(Dir::Fwd) + floor_sum(Dir::Bwd);
+    let alloc = encoder_allocation(model.encoders, par.pp);
+    let n_enc_max = alloc.iter().copied().max().unwrap_or(0) as f64;
+    let params0 =
+        stage_params_paper(StageRole::of(0, par.pp), alloc[0], model.d, wl.v, par.mp);
+    let sync_floor = op_floor_us(&dp_allreduce(params0, &wl).lowered, platform);
+    let update_floor = op_floor_us(&optimizer(params0, alloc[0], &wl).lowered, platform)
+        + op_floor_us(&dp_allgather(params0 / par.dp as f64, &wl).lowered, platform);
+    let m = model.iters_per_update as f64;
+    m * n_enc_max * enc_floor + sync_floor + update_floor
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +277,66 @@ mod tests {
         // same volume term; analytical barely distinguishes them
         let rel = (spread - packed).abs() / spread;
         assert!(rel < 0.3, "{spread} vs {packed}");
+    }
+
+    #[test]
+    fn op_floor_below_deterministic_for_every_lowered_op() {
+        // Per-op admissibility across models, parallelisms, and both
+        // directions: the floor must never exceed the simulator's
+        // deterministic time for any op the planner can build.
+        use crate::ops::build::{encoder_ops, post_encoder_ops, pre_encoder_ops};
+        for model in ModelCfg::all() {
+            for par in [ParallelCfg::new(4, 4, 8), ParallelCfg::new(2, 8, 8), ParallelCfg::new(1, 1, 16)] {
+                for p in [Platform::perlmutter(), Platform::vista()] {
+                    let wl = Workload::new(&model, &par, &p);
+                    for dir in [Dir::Fwd, Dir::Bwd] {
+                        let mut ops = encoder_ops(&model, &wl, dir);
+                        ops.extend(pre_encoder_ops(&model, &wl, dir));
+                        ops.extend(post_encoder_ops(&model, &wl, dir));
+                        for op in &ops {
+                            let floor = op_floor_us(&op.lowered, &p);
+                            let det = deterministic_us(&op.lowered, &p);
+                            assert!(
+                                floor <= det,
+                                "{} {:?} {:?} on {}: floor {floor} > det {det}",
+                                model.name, op.kind, dir, p.name
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bound_admissible_over_gpt20b_128_enumeration() {
+        // The branch-and-bound contract: for EVERY feasible config in the
+        // gpt20b/128 smoke enumeration (all schedules x all rank maps),
+        // the analytical lower bound must sit at or below the full engine
+        // prediction — otherwise pruning could drop a true top-k row.
+        use crate::net::topology::RankOrder;
+        use crate::pipeline::ScheduleKind;
+        use crate::predictor::e2e::OraclePredictor;
+        use crate::sweep::{Engine, SweepSpec};
+
+        let model = ModelCfg::gpt20b();
+        let platform = Platform::perlmutter();
+        let mut spec = SweepSpec::new(128);
+        spec.schedules = ScheduleKind::all(2);
+        spec.rank_orders = RankOrder::all();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let report = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        assert!(!report.rows.is_empty());
+        for row in &report.rows {
+            let bound = sweep_lower_bound_us(&model, &row.par, &platform);
+            assert!(
+                bound <= row.prediction.total_us,
+                "inadmissible bound for {}: {bound} > {}",
+                row.par.label(),
+                row.prediction.total_us
+            );
+            assert!(bound > 0.0, "degenerate bound for {}", row.par.label());
+        }
     }
 
     #[test]

@@ -275,7 +275,7 @@ fn registry_for(platform: &Platform, forests_dir: &str, seed: u64) -> Result<(Re
         let hash = opcache::fnv1a64(&bytes);
         let (name, forests) = load_registry(&path)?;
         anyhow::ensure!(name == platform.name, "registry platform mismatch");
-        return Ok((Registry { platform: name, forests }, hash));
+        return Ok((Registry::from_forests(name, forests), hash));
     }
     eprintln!("[fgpm] no registry at {path:?}; collecting + training in-process...");
     let data = collect_platform(platform, seed);
@@ -392,6 +392,8 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
         .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first|all)")
         .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
+        .opt("top-k", "0", "return only the k fastest configs, branch-and-bound pruning the rest (0 = full table)")
+        .flag("no-prune", "with --top-k: evaluate every config anyway (disable the analytical bound)")
         .opt("jobs", "0", "evaluation worker threads (0 = one per core)")
         .opt("remote", "", "run the sweep on a coordinator at host:port instead of locally")
         .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
@@ -420,6 +422,7 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
     };
     // parse + range-check the constant overlap once, before enumerating
     let overlap = apply_overlap_arg(&args, ParallelCfg::new(1, 1, 1))?.p2p_overlap();
+    let top_k = args.usize("top-k")?;
     let sweep_spec = crate::sweep::SweepSpec {
         gpus,
         max_pp: 16,
@@ -427,6 +430,8 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         schedules: kinds,
         rank_orders: orders,
         p2p_overlap: overlap,
+        top_k: (top_k > 0).then_some(top_k),
+        prune: !args.has_flag("no-prune"),
     };
     let title = format!(
         "{} on {} with {} GPUs — predicted batch seconds:",
@@ -475,9 +480,18 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
                 platform.gpu.hbm_gib
             )
         );
+        let remote_pruned = rs.summary.usize_at("pruned").unwrap_or(0);
+        let prune_note = if remote_pruned > 0 {
+            format!(
+                ", pruned {remote_pruned} configs via bound ({:.0}%)",
+                rs.summary.f64_at("pruned_frac").unwrap_or(0.0) * 100.0
+            )
+        } else {
+            String::new()
+        };
         println!(
-            "evaluated {} configs in {:.0?} on {remote} ({:.0} configs/s, op-cache hit-rate {:.0}% [mem {:.0}% / disk {:.0}%], {} distinct ops)",
-            rows.len(),
+            "evaluated {} configs in {:.0?} on {remote} ({:.0} configs/s, op-cache hit-rate {:.0}% [mem {:.0}% / disk {:.0}%], {} distinct ops{prune_note})",
+            rs.summary.usize_at("evaluated").unwrap_or(rows.len()),
             std::time::Duration::from_secs_f64(
                 rs.summary.f64_at("elapsed_us").unwrap_or(0.0) / 1e6
             ),
@@ -528,9 +542,19 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
             platform.gpu.hbm_gib
         )
     );
+    let prune_note = if report.pruned > 0 {
+        format!(
+            ", pruned {} of {} configs via bound ({:.0}%)",
+            report.pruned,
+            report.evaluated + report.pruned,
+            report.pruned_frac() * 100.0
+        )
+    } else {
+        String::new()
+    };
     println!(
-        "evaluated {} configs in {:.0?} ({:.0} configs/s, {})",
-        report.rows.len(),
+        "evaluated {} configs in {:.0?} ({:.0} configs/s, {}{prune_note})",
+        report.evaluated,
         report.elapsed,
         report.configs_per_sec(),
         cache_stats_line(&report.cache)

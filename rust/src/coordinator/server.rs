@@ -80,23 +80,26 @@ pub fn sweep_request_json(
         .iter()
         .map(|o| Json::Str(o.label().to_string()))
         .collect();
-    Json::obj(vec![
-        ("cmd", Json::Str("sweep".into())),
-        (
-            "spec",
-            Json::obj(vec![
-                ("model", Json::Str(model.to_string())),
-                ("platform", Json::Str(platform.to_string())),
-                ("topo", Json::Str(topo.label())),
-                ("gpus", Json::Num(spec.gpus as f64)),
-                ("max_pp", Json::Num(spec.max_pp as f64)),
-                ("max_mp", Json::Num(spec.max_mp as f64)),
-                ("schedules", Json::Arr(scheds)),
-                ("rank_maps", Json::Arr(orders)),
-                ("p2p_overlap", Json::Num(spec.p2p_overlap)),
-            ]),
-        ),
-    ])
+    let mut fields = vec![
+        ("model", Json::Str(model.to_string())),
+        ("platform", Json::Str(platform.to_string())),
+        ("topo", Json::Str(topo.label())),
+        ("gpus", Json::Num(spec.gpus as f64)),
+        ("max_pp", Json::Num(spec.max_pp as f64)),
+        ("max_mp", Json::Num(spec.max_mp as f64)),
+        ("schedules", Json::Arr(scheds)),
+        ("rank_maps", Json::Arr(orders)),
+        ("p2p_overlap", Json::Num(spec.p2p_overlap)),
+    ];
+    // optional knobs are omitted at their defaults so requests stay
+    // byte-compatible with older coordinators
+    if let Some(k) = spec.top_k {
+        fields.push(("top_k", Json::Num(k as f64)));
+    }
+    if !spec.prune {
+        fields.push(("prune", Json::Bool(false)));
+    }
+    Json::obj(vec![("cmd", Json::Str("sweep".into())), ("spec", Json::obj(fields))])
 }
 
 /// Degree caps a remote client may request — enumeration is cheap, but
@@ -170,10 +173,28 @@ pub fn parse_sweep_request(req: &Json) -> Result<SweepRequest, String> {
     if !(0.0..=1.0).contains(&p2p_overlap) {
         return Err("p2p_overlap must be in [0, 1]".to_string());
     }
+    let top_k = match spec.usize_at("top_k") {
+        None => None,
+        Some(0) => return Err("top_k must be >= 1".to_string()),
+        Some(k) if k > MAX_SWEEP_DEGREE * MAX_SWEEP_DEGREE => {
+            return Err("top_k out of range".to_string())
+        }
+        Some(k) => Some(k),
+    };
+    let prune = spec.get("prune").and_then(|p| p.as_bool()).unwrap_or(true);
     Ok(SweepRequest {
         model,
         platform,
-        spec: SweepSpec { gpus, max_pp, max_mp, schedules, rank_orders, p2p_overlap },
+        spec: SweepSpec {
+            gpus,
+            max_pp,
+            max_mp,
+            schedules,
+            rank_orders,
+            p2p_overlap,
+            top_k,
+            prune,
+        },
     })
 }
 
@@ -197,6 +218,10 @@ fn summary_json(report: &SweepReport) -> Json {
         "summary",
         Json::obj(vec![
             ("configs", Json::Num(report.rows.len() as f64)),
+            ("evaluated", Json::Num(report.evaluated as f64)),
+            ("pruned", Json::Num(report.pruned as f64)),
+            ("bound_consults", Json::Num(report.bound_consults as f64)),
+            ("pruned_frac", Json::Num(report.pruned_frac())),
             ("skipped_oom", Json::Num(report.skipped_oom as f64)),
             ("skipped_sched", Json::Num(report.skipped_sched as f64)),
             ("elapsed_us", Json::Num(report.elapsed.as_secs_f64() * 1e6)),
@@ -564,6 +589,8 @@ mod tests {
             schedules: ScheduleKind::all(2),
             rank_orders: RankOrder::all(),
             p2p_overlap: 0.25,
+            top_k: Some(5),
+            prune: false,
         };
         let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
         let parsed = parse_sweep_request(&Json::parse(&req.to_string()).unwrap()).unwrap();
@@ -573,6 +600,8 @@ mod tests {
         assert_eq!(parsed.spec.schedules, spec.schedules);
         assert_eq!(parsed.spec.rank_orders, spec.rank_orders);
         assert_eq!(parsed.spec.p2p_overlap, 0.25);
+        assert_eq!(parsed.spec.top_k, Some(5));
+        assert!(!parsed.spec.prune);
 
         let bad = |line: &str, what: &str| {
             let e = parse_sweep_request(&Json::parse(line).unwrap()).unwrap_err();
@@ -590,6 +619,10 @@ mod tests {
             r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":16,"p2p_overlap":1.5}}"#,
             "p2p_overlap",
         );
+        bad(
+            r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":16,"top_k":0}}"#,
+            "top_k",
+        );
         // omitted optionals default like the CLI
         let min = parse_sweep_request(
             &Json::parse(r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":16}}"#)
@@ -599,6 +632,8 @@ mod tests {
         assert_eq!(min.spec.schedules, vec![ScheduleKind::OneFOneB]);
         assert_eq!(min.spec.rank_orders, vec![RankOrder::TpFirst]);
         assert_eq!((min.spec.max_pp, min.spec.max_mp), (16, 16));
+        assert_eq!(min.spec.top_k, None);
+        assert!(min.spec.prune);
     }
 
     #[test]
@@ -628,6 +663,28 @@ mod tests {
         }
         // the service metrics saw one sweep
         assert_eq!(s.metrics.snapshot().sweeps, 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn handle_sweep_top_k_streams_k_rows_and_counts_bounds() {
+        let s = svc();
+        let mut spec = SweepSpec::new(16);
+        spec.schedules = ScheduleKind::all(2);
+        spec.top_k = Some(4);
+        let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
+        let mut out: Vec<u8> = Vec::new();
+        handle_sweep(&s, &req, &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5, "{text}");
+        let summary = Json::parse(lines[4]).unwrap().get("summary").unwrap().clone();
+        assert_eq!(summary.usize_at("configs"), Some(4));
+        assert!(summary.usize_at("bound_consults").unwrap() > 0, "{summary}");
+        assert_eq!(
+            summary.usize_at("evaluated").unwrap() + summary.usize_at("pruned").unwrap(),
+            summary.usize_at("bound_consults").unwrap()
+        );
         s.shutdown();
     }
 

@@ -1,0 +1,220 @@
+//! Flattened SoA batched forest inference: compile a trained [`Forest`]
+//! into contiguous node arrays (feature / threshold / left / right /
+//! value, one span per tree) and evaluate a whole feature matrix
+//! breadth-first, one tree level per step — the level-synchronous
+//! traversal `python/compile/kernels/forest.py` runs on the accelerator,
+//! here in native f64 for the sweep hot path.
+//!
+//! Unlike [`crate::forest::export::FlatForest`] (the f32 AOT tensor
+//! layout, which folds the GBT base into a stump tree), this layout keeps
+//! full f64 precision, the scalar base, and the exact per-tree
+//! accumulation order of [`Forest::predict_log`], so batched predictions
+//! are BIT-IDENTICAL to the recursive pointer walk — the sweep engine can
+//! route through either path without perturbing rankings.
+
+use crate::forest::ensemble::Forest;
+use crate::forest::export::LEAF;
+
+/// A [`Forest`] compiled to structure-of-arrays form. Tree `t` occupies
+/// `offsets[t]..offsets[t+1]` in the node arrays; node indices stored in
+/// `left`/`right` are tree-local (root = 0), matching the CART arena.
+#[derive(Clone, Debug)]
+pub struct FlatEnsemble {
+    /// Per-tree start offsets into the node arrays (len = trees + 1).
+    offsets: Vec<usize>,
+    /// Split feature per node; [`LEAF`] (-1) marks leaves.
+    feat: Vec<i32>,
+    thresh: Vec<f64>,
+    left: Vec<u32>,
+    right: Vec<u32>,
+    value: Vec<f64>,
+    /// Per-tree weights, in the ensemble's accumulation order.
+    weights: Vec<f64>,
+    /// Additive base (0 for RF, mean target for GBT) — kept scalar, not
+    /// folded into a stump, to preserve `base + Σ w·tree` exactly.
+    base: f64,
+    /// Levels to walk per tree: `depth - 1` edges reach every leaf.
+    steps: Vec<usize>,
+}
+
+impl FlatEnsemble {
+    /// Flatten a trained forest. O(total nodes); done once per operator,
+    /// then reused for every batch.
+    pub fn compile(forest: &Forest) -> FlatEnsemble {
+        let total: usize = forest.trees.iter().map(|t| t.nodes.len()).sum();
+        let mut f = FlatEnsemble {
+            offsets: Vec::with_capacity(forest.trees.len() + 1),
+            feat: Vec::with_capacity(total),
+            thresh: Vec::with_capacity(total),
+            left: Vec::with_capacity(total),
+            right: Vec::with_capacity(total),
+            value: Vec::with_capacity(total),
+            weights: forest.weights.clone(),
+            base: forest.base,
+            steps: Vec::with_capacity(forest.trees.len()),
+        };
+        f.offsets.push(0);
+        for tree in &forest.trees {
+            assert!(!tree.nodes.is_empty(), "cannot compile an empty tree");
+            for n in &tree.nodes {
+                f.feat.push(n.feature);
+                f.thresh.push(n.threshold);
+                f.left.push(n.left);
+                f.right.push(n.right);
+                f.value.push(n.value);
+            }
+            f.steps.push(tree.depth() - 1);
+            f.offsets.push(f.feat.len());
+        }
+        f
+    }
+
+    /// Raw ensemble outputs in log1p space, one per input row.
+    ///
+    /// Level-synchronous: for each tree, every row holds a current node
+    /// index; one pass per level advances all rows in lock-step (lanes
+    /// already at a leaf stay put), then the leaf values are accumulated
+    /// with the tree's weight. Because thresholds, leaf values, and the
+    /// `base + Σ w·leaf` accumulation order are the f64 originals in tree
+    /// order, each output is bit-identical to [`Forest::predict_log`].
+    pub fn predict_log_batch(&self, rows: &[Vec<f64>]) -> Vec<f64> {
+        let mut acc = vec![self.base; rows.len()];
+        let mut at = vec![0u32; rows.len()];
+        for (t, &w) in self.weights.iter().enumerate() {
+            let lo = self.offsets[t];
+            at.fill(0);
+            for _ in 0..self.steps[t] {
+                for (lane, row) in at.iter_mut().zip(rows) {
+                    let i = lo + *lane as usize;
+                    let f = self.feat[i];
+                    if f != LEAF {
+                        *lane = if row[f as usize] <= self.thresh[i] {
+                            self.left[i]
+                        } else {
+                            self.right[i]
+                        };
+                    }
+                }
+            }
+            for (a, lane) in acc.iter_mut().zip(&at) {
+                *a += w * self.value[lo + *lane as usize];
+            }
+        }
+        acc
+    }
+
+    /// Latency predictions in µs (inverse log1p transform, floored at 0)
+    /// — the batched counterpart of [`Forest::predict_us`].
+    pub fn predict_us_batch(&self, rows: &[Vec<f64>]) -> Vec<f64> {
+        let mut out = self.predict_log_batch(rows);
+        for v in &mut out {
+            *v = v.exp_m1().max(0.0);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::ensemble::{to_log, GbtParams, RfParams};
+    use crate::util::rng::Rng;
+
+    fn surface(seed: u64, n: usize, f: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let row: Vec<f64> = (0..f).map(|_| rng.uniform(0.0, 100.0)).collect();
+            let v = 5.0 + row[0] * 2.0 + if row[1] > 40.0 { 80.0 } else { 0.0 };
+            x.push(row);
+            y.push(v);
+        }
+        (x, y)
+    }
+
+    fn assert_bit_identical(forest: &Forest, rows: &[Vec<f64>]) {
+        let flat = FlatEnsemble::compile(forest);
+        let batch = flat.predict_us_batch(rows);
+        assert_eq!(batch.len(), rows.len());
+        for (row, got) in rows.iter().zip(&batch) {
+            let want = forest.predict_us(row);
+            // exact f64 equality, not approximate — the sweep ranking
+            // must not move when routing through the batched path
+            assert_eq!(*got, want, "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn rf_batch_bit_identical_to_recursive() {
+        let (x, y) = surface(11, 500, 3);
+        let f = Forest::fit_rf(
+            &x,
+            &to_log(&y),
+            &RfParams { n_trees: 40, max_depth: 12, min_samples_leaf: 2, mtry: Some(2) },
+            7,
+        );
+        assert_bit_identical(&f, &x);
+    }
+
+    #[test]
+    fn gbt_batch_bit_identical_to_recursive_including_base() {
+        let (x, y) = surface(13, 500, 3);
+        let f = Forest::fit_gbt(
+            &x,
+            &to_log(&y),
+            &GbtParams { n_trees: 80, max_depth: 6, min_samples_leaf: 2, learning_rate: 0.1 },
+            7,
+        );
+        assert!(f.base != 0.0);
+        assert_bit_identical(&f, &x);
+    }
+
+    #[test]
+    fn property_random_probes_bit_identical() {
+        // Probes off the training manifold (including out-of-range and
+        // boundary-ish values) must still agree exactly.
+        let (x, y) = surface(17, 300, 4);
+        let f = Forest::fit_rf(
+            &x,
+            &to_log(&y),
+            &RfParams { n_trees: 30, max_depth: 14, min_samples_leaf: 1, mtry: None },
+            3,
+        );
+        let mut rng = Rng::new(99);
+        let probes: Vec<Vec<f64>> = (0..200)
+            .map(|_| (0..4).map(|_| rng.uniform(-50.0, 250.0)).collect())
+            .collect();
+        assert_bit_identical(&f, &probes);
+    }
+
+    #[test]
+    fn empty_and_single_row_batches() {
+        let (x, y) = surface(19, 200, 2);
+        let f = Forest::fit_rf(
+            &x,
+            &to_log(&y),
+            &RfParams { n_trees: 10, max_depth: 8, min_samples_leaf: 2, mtry: None },
+            1,
+        );
+        let flat = FlatEnsemble::compile(&f);
+        assert!(flat.predict_us_batch(&[]).is_empty());
+        let one = flat.predict_us_batch(std::slice::from_ref(&x[0]));
+        assert_eq!(one[0], f.predict_us(&x[0]));
+    }
+
+    #[test]
+    fn predictions_nonnegative() {
+        let (x, y) = surface(23, 200, 2);
+        let f = Forest::fit_gbt(
+            &x,
+            &to_log(&y),
+            &GbtParams { n_trees: 40, max_depth: 4, min_samples_leaf: 2, learning_rate: 0.2 },
+            5,
+        );
+        let flat = FlatEnsemble::compile(&f);
+        for v in flat.predict_us_batch(&[vec![0.0, 0.0], vec![-10.0, -10.0]]) {
+            assert!(v >= 0.0);
+        }
+    }
+}

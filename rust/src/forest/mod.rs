@@ -10,10 +10,12 @@
 pub mod cart;
 pub mod ensemble;
 pub mod export;
+pub mod flat;
 pub mod persist;
 pub mod tune;
 
 pub use cart::{CartParams, Tree};
 pub use ensemble::{Forest, ForestKind, GbtParams, RfParams};
 pub use export::FlatForest;
+pub use flat::FlatEnsemble;
 pub use tune::{train_best, TunedForest};

@@ -4,7 +4,7 @@
 
 use std::collections::HashMap;
 
-use crate::forest::{train_best, FlatForest, TunedForest};
+use crate::forest::{train_best, FlatEnsemble, FlatForest, TunedForest};
 use crate::ops::{Dir, OpInstance, OpKind};
 use crate::sampling::{Dataset, DatasetKey};
 
@@ -31,16 +31,24 @@ pub trait BatchPredictor {
 pub struct Registry {
     pub platform: String,
     pub forests: HashMap<DatasetKey, TunedForest>,
+    /// Lazily compiled SoA forests for batched inference — one per key,
+    /// built on the first multi-row `predict_batch` call and reused.
+    flat: HashMap<DatasetKey, FlatEnsemble>,
 }
 
 impl Registry {
+    /// Wrap already-trained forests (e.g. loaded from a registry file).
+    pub fn from_forests(platform: String, forests: HashMap<DatasetKey, TunedForest>) -> Registry {
+        Registry { platform, forests, flat: HashMap::new() }
+    }
+
     /// Train one tuned forest per collected dataset.
     pub fn train(platform: &str, datasets: &HashMap<DatasetKey, Dataset>, seed: u64) -> Registry {
         let mut forests = HashMap::new();
         for (key, ds) in datasets {
             forests.insert(*key, train_best(ds, seed ^ key_tag(*key)));
         }
-        Registry { platform: platform.to_string(), forests }
+        Registry::from_forests(platform.to_string(), forests)
     }
 
     pub fn get(&self, key: DatasetKey) -> Option<&TunedForest> {
@@ -79,6 +87,14 @@ impl BatchPredictor for Registry {
             .forests
             .get(&key)
             .unwrap_or_else(|| panic!("no regressor for {key:?}"));
+        // multi-row batches take the level-synchronous SoA path
+        // (bit-identical to the pointer walk; see forest::flat);
+        // single rows keep the recursive traversal.
+        if rows.len() > 1 {
+            let flat =
+                self.flat.entry(key).or_insert_with(|| FlatEnsemble::compile(&tuned.forest));
+            return flat.predict_us_batch(rows);
+        }
         rows.iter().map(|r| tuned.forest.predict_us(r)).collect()
     }
 }
@@ -118,6 +134,21 @@ mod tests {
         assert_eq!(pred.len(), 2);
         let want0 = 5.0 + 5000.0 / 4.0 * 0.01;
         assert!((pred[0] - want0).abs() / want0 < 0.15, "{} vs {want0}", pred[0]);
+    }
+
+    #[test]
+    fn batch_path_bit_identical_to_single_row_path() {
+        // multi-row calls route through the flat SoA forest; answers must
+        // be exactly the recursive per-row predictions
+        let mut reg = Registry::train("perlmutter", &fake_datasets(), 1);
+        let key = (OpKind::Linear1, Dir::Fwd);
+        let rows: Vec<Vec<f64>> =
+            (0..64).map(|i| vec![150.0 + 123.0 * i as f64, 1.0 + (i % 8) as f64]).collect();
+        let batch = reg.predict_batch(key, &rows);
+        for (row, got) in rows.iter().zip(&batch) {
+            let single = reg.predict_batch(key, std::slice::from_ref(row));
+            assert_eq!(single[0], *got, "row {row:?}");
+        }
     }
 
     #[test]

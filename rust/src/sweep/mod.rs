@@ -30,6 +30,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::baselines::analytical::sweep_lower_bound_us;
 use crate::config::{ModelCfg, ParallelCfg, Platform};
 use crate::net::topology::RankOrder;
 use crate::ops::memory;
@@ -38,6 +39,10 @@ use crate::predictor::e2e::{plan_ops, predict_prefetched, ComponentPrediction};
 use crate::predictor::opcache::{op_key, CacheStats, OpKey, OpPredictionCache};
 use crate::predictor::registry::BatchPredictor;
 use crate::trainrun::{stage_plans_mode, StagePlan};
+
+/// Minimum branch-and-bound evaluation chunk: fixed (NOT derived from the
+/// worker count) so the pruned-config count is identical on every machine.
+const BB_CHUNK_MIN: usize = 8;
 
 /// The cross-product a sweep enumerates.
 #[derive(Clone, Debug)]
@@ -53,10 +58,20 @@ pub struct SweepSpec {
     pub rank_orders: Vec<RankOrder>,
     /// PP P2P / compute overlap fraction applied to every config.
     pub p2p_overlap: f64,
+    /// Keep only the fastest `k` rows. `None` (the default) returns the
+    /// full ranked table and disables pruning entirely.
+    pub top_k: Option<usize>,
+    /// With `top_k` set, score every feasible config with the admissible
+    /// analytical lower bound first and skip full lowering + composition
+    /// for configs that provably cannot reach the top-k (`true`, the
+    /// default). `false` is the `--no-prune` escape hatch: evaluate
+    /// everything, then truncate — bit-identical rows, no skipping.
+    pub prune: bool,
 }
 
 impl SweepSpec {
-    /// The default sweep shape: pp/mp capped at 16, 1F1B only, tp-first.
+    /// The default sweep shape: pp/mp capped at 16, 1F1B only, tp-first,
+    /// full table (no top-k, so no pruning).
     pub fn new(gpus: usize) -> SweepSpec {
         SweepSpec {
             gpus,
@@ -65,6 +80,8 @@ impl SweepSpec {
             schedules: vec![ScheduleKind::OneFOneB],
             rank_orders: vec![RankOrder::TpFirst],
             p2p_overlap: 0.0,
+            top_k: None,
+            prune: true,
         }
     }
 }
@@ -93,6 +110,14 @@ pub struct SweepReport {
     pub skipped_oom: usize,
     /// Strategies skipped because the schedule rejects the geometry.
     pub skipped_sched: usize,
+    /// Configs that went through full lowering + composition.
+    pub evaluated: usize,
+    /// Configs skipped because their admissible lower bound exceeded the
+    /// running top-k threshold (0 unless `top_k` pruning is active).
+    pub pruned: usize,
+    /// Lower-bound evaluations performed (one per enumerated config when
+    /// pruning is active, 0 otherwise).
+    pub bound_consults: usize,
     /// Cache counters accumulated on the engine (hit unit: one consult
     /// per distinct op per config).
     pub cache: CacheStats,
@@ -100,12 +125,24 @@ pub struct SweepReport {
 }
 
 impl SweepReport {
+    /// Fully-evaluated configs per wall-clock second (pruned configs cost
+    /// a bound consult, not an evaluation, so they are excluded).
     pub fn configs_per_sec(&self) -> f64 {
         let s = self.elapsed.as_secs_f64();
         if s <= 0.0 {
             0.0
         } else {
-            self.rows.len() as f64 / s
+            self.evaluated as f64 / s
+        }
+    }
+
+    /// Fraction of enumerated configs the bound pruned away.
+    pub fn pruned_frac(&self) -> f64 {
+        let total = self.evaluated + self.pruned;
+        if total == 0 {
+            0.0
+        } else {
+            self.pruned as f64 / total as f64
         }
     }
 }
@@ -245,10 +282,11 @@ impl Engine {
         out.into_iter().map(|r| r.expect("every slot filled")).collect()
     }
 
-    /// Run the full cross-product sweep: enumerate + filter, evaluate,
-    /// rank fastest-first (NaN-safe `total_cmp`; stable sort keeps the
-    /// deterministic enumeration order on exact ties, e.g. 1F1B vs GPipe
-    /// closed forms).
+    /// Run the full cross-product sweep: enumerate + filter, evaluate
+    /// (branch-and-bound pruned when `spec.top_k` + `spec.prune` ask for
+    /// it), rank fastest-first (NaN-safe `total_cmp`; stable sort keeps
+    /// the deterministic enumeration order on exact ties, e.g. 1F1B vs
+    /// GPipe closed forms), and truncate to `top_k` when set.
     pub fn sweep(
         &self,
         model: &ModelCfg,
@@ -259,17 +297,96 @@ impl Engine {
         let t0 = Instant::now();
         let before = self.cache.stats();
         let (cfgs, skipped_oom, skipped_sched) = feasible_configs(model, platform, spec);
-        let mut rows = self.evaluate(model, platform, &cfgs, pred);
+        let (mut rows, evaluated, pruned, bound_consults) = match spec.top_k {
+            Some(k) if spec.prune && k > 0 => {
+                self.evaluate_top_k(model, platform, &cfgs, pred, k)
+            }
+            _ => {
+                let rows = self.evaluate(model, platform, &cfgs, pred);
+                let n = rows.len();
+                (rows, n, 0, 0)
+            }
+        };
         rows.sort_by(|a, b| a.prediction.total_us.total_cmp(&b.prediction.total_us));
+        if let Some(k) = spec.top_k {
+            rows.truncate(k);
+        }
         SweepReport {
             rows,
             skipped_oom,
             skipped_sched,
+            evaluated,
+            pruned,
+            bound_consults,
             // THIS run's consult counters (the store may be long-lived —
             // the coordinator service reuses one engine across requests)
             cache: self.cache.stats().delta_since(&before),
             elapsed: t0.elapsed(),
         }
+    }
+
+    /// Branch-and-bound top-k evaluation: score every config with the
+    /// admissible lower bound, walk configs in bound-ascending order in
+    /// deterministic chunks, and stop as soon as the next bound exceeds
+    /// the k-th smallest evaluated total. Returned rows are sorted by
+    /// `(total_us, enumeration index)` and truncated to `k` — exactly the
+    /// full sweep's stable fastest-first top-k:
+    ///
+    /// - a pruned config has `total ≥ bound > threshold ≥ T_k` (the k-th
+    ///   smallest total overall), so it sits strictly outside the top-k;
+    /// - a true top-k member has `bound ≤ total ≤ T_k ≤ threshold` at
+    ///   every point, so it is never pruned (ties included).
+    ///
+    /// The chunk size is `k.max(BB_CHUNK_MIN)` — deliberately independent
+    /// of the worker count so `pruned` is machine-independent (workers
+    /// still parallelize WITHIN each chunk via [`Engine::evaluate`]).
+    fn evaluate_top_k(
+        &self,
+        model: &ModelCfg,
+        platform: &Platform,
+        cfgs: &[ParallelCfg],
+        pred: &mut dyn BatchPredictor,
+        k: usize,
+    ) -> (Vec<SweepRow>, usize, usize, usize) {
+        if cfgs.is_empty() {
+            return (Vec::new(), 0, 0, 0);
+        }
+        let bounds: Vec<f64> =
+            cfgs.iter().map(|par| sweep_lower_bound_us(model, par, platform)).collect();
+        let bound_consults = bounds.len();
+        let mut order: Vec<usize> = (0..cfgs.len()).collect();
+        order.sort_by(|&a, &b| bounds[a].total_cmp(&bounds[b]).then(a.cmp(&b)));
+        let chunk = k.max(BB_CHUNK_MIN);
+        let mut kept: Vec<(usize, SweepRow)> = Vec::new();
+        let mut threshold: Option<f64> = None;
+        let mut next = 0;
+        while next < order.len() {
+            if let Some(t) = threshold {
+                // bounds ascend along `order`: the first config over the
+                // threshold proves every remaining one is over it too
+                if bounds[order[next]] > t {
+                    break;
+                }
+            }
+            let batch = &order[next..(next + chunk).min(order.len())];
+            let batch_cfgs: Vec<ParallelCfg> = batch.iter().map(|&i| cfgs[i]).collect();
+            let rows = self.evaluate(model, platform, &batch_cfgs, pred);
+            kept.extend(batch.iter().copied().zip(rows));
+            next += batch.len();
+            if kept.len() >= k {
+                let mut totals: Vec<f64> =
+                    kept.iter().map(|(_, row)| row.prediction.total_us).collect();
+                totals.sort_by(|a, b| a.total_cmp(b));
+                threshold = Some(totals[k - 1]);
+            }
+        }
+        let (evaluated, pruned) = (next, order.len() - next);
+        // (total, enumeration index) == the full path's stable sort key
+        kept.sort_by(|(ia, a), (ib, b)| {
+            a.prediction.total_us.total_cmp(&b.prediction.total_us).then(ia.cmp(ib))
+        });
+        kept.truncate(k);
+        (kept.into_iter().map(|(_, row)| row).collect(), evaluated, pruned, bound_consults)
     }
 
     /// Phase A: dedup distinct ops across ALL configs (counting one
@@ -382,6 +499,58 @@ mod tests {
             assert_eq!(a.par, b.par);
             assert_eq!(a.prediction.total_us, b.prediction.total_us);
             assert_eq!(a.mem_gib, b.mem_gib);
+        }
+    }
+
+    #[test]
+    fn top_k_without_prune_truncates_the_full_table() {
+        let (model, platform, mut spec) = small_spec();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let full = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        spec.top_k = Some(5);
+        spec.prune = false;
+        let truncated = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        assert_eq!(truncated.rows.len(), 5);
+        assert_eq!(truncated.pruned, 0);
+        assert_eq!(truncated.bound_consults, 0);
+        assert_eq!(truncated.evaluated, full.rows.len());
+        for (a, b) in truncated.rows.iter().zip(&full.rows) {
+            assert_eq!(a.par, b.par);
+            assert_eq!(a.prediction.total_us, b.prediction.total_us);
+        }
+    }
+
+    #[test]
+    fn pruned_top_k_bit_identical_to_full_sweep_and_skips_work() {
+        let (model, platform, mut spec) = small_spec();
+        spec.rank_orders = RankOrder::all();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let full = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        spec.top_k = Some(8);
+        let pruned = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        assert_eq!(pruned.rows.len(), 8);
+        for (a, b) in pruned.rows.iter().zip(&full.rows) {
+            assert_eq!(a.par, b.par);
+            assert_eq!(a.prediction.total_us, b.prediction.total_us);
+            assert_eq!(a.mem_gib, b.mem_gib);
+        }
+        // the acceptance bar: ≥ 30% of enumerated configs skipped
+        assert_eq!(pruned.evaluated + pruned.pruned, full.rows.len());
+        assert_eq!(pruned.bound_consults, full.rows.len());
+        assert!(
+            pruned.pruned_frac() >= 0.3,
+            "pruned {}/{} ({:.1}%)",
+            pruned.pruned,
+            full.rows.len(),
+            pruned.pruned_frac() * 100.0
+        );
+        // chunking is thread-independent: identical counts either way
+        let serial = Engine::new().with_threads(1).sweep(&model, &platform, &spec, &mut oracle);
+        assert_eq!(serial.pruned, pruned.pruned);
+        assert_eq!(serial.evaluated, pruned.evaluated);
+        for (a, b) in serial.rows.iter().zip(&pruned.rows) {
+            assert_eq!(a.par, b.par);
+            assert_eq!(a.prediction.total_us, b.prediction.total_us);
         }
     }
 

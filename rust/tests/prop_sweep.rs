@@ -86,6 +86,48 @@ fn schedule_all_sweep_cache_hit_rate_at_least_half() {
 }
 
 #[test]
+fn pruned_top_k_exactly_equals_full_sweep_top_k() {
+    // The branch-and-bound path must return EXACTLY the full sweep's
+    // fastest-k rows — same order, exact f64 equality — on flat and rail
+    // fabrics, across all schedules × rank maps, for several k.
+    let model = ModelCfg::llemma7b();
+    for topo in [
+        TopoSpec::Flat,
+        TopoSpec::RailSpine { nodes_per_rail: 2, spine_bw_frac: 0.5 },
+    ] {
+        let platform = Platform::perlmutter().with_topo(topo);
+        let mut spec = SweepSpec::new(16);
+        spec.schedules = ScheduleKind::all(2);
+        spec.rank_orders = RankOrder::all();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let full = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        assert!(!full.rows.is_empty(), "no feasible configs under {topo:?}");
+
+        for k in [1usize, 4, 8, full.rows.len() + 10] {
+            let mut pruned_spec = spec.clone();
+            pruned_spec.top_k = Some(k);
+            let pruned = Engine::new().sweep(&model, &platform, &pruned_spec, &mut oracle);
+            assert_eq!(pruned.rows.len(), k.min(full.rows.len()), "{topo:?} k={k}");
+            for (got, want) in pruned.rows.iter().zip(&full.rows) {
+                assert_eq!(got.par, want.par, "{topo:?} k={k}");
+                // bit-identical, not approximately equal
+                assert_eq!(
+                    got.prediction.total_us,
+                    want.prediction.total_us,
+                    "{topo:?} k={k} {}",
+                    want.par.label()
+                );
+                assert_eq!(got.mem_gib, want.mem_gib, "{topo:?} k={k}");
+            }
+            // every enumerated config was either evaluated or pruned,
+            // after exactly one bound consult each
+            assert_eq!(pruned.evaluated + pruned.pruned, full.rows.len(), "{topo:?} k={k}");
+            assert_eq!(pruned.bound_consults, full.rows.len(), "{topo:?} k={k}");
+        }
+    }
+}
+
+#[test]
 fn rank_map_all_crossing_is_deterministic_and_labeled() {
     // `sweep --rank-map all` crosses placements like `--schedule all`
     // crosses schedules: every order appears, labels carry the suffix,
