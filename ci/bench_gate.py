@@ -23,6 +23,10 @@ artifact every run), and FAILS the job when:
     top-8 fixture (absolute floor, baseline-independent);
   * `batch_predict_ns_per_row` > (1 + TOLERANCE) x baseline — the flat
     SoA batched forest path regressed more than 30% per row.
+  * `goodput_smoke_identical` != 1.0 — annotating a sweep with the
+    fault-free FaultSpec no longer reproduces the plain sweep's rows
+    bit-identically (the `--faults off` identity broke; absolute,
+    baseline-independent).
 
 Exit code 0 = gate passed, 1 = regression, 2 = malformed input.
 """
@@ -62,6 +66,7 @@ def main(argv):
         "cache_hit_rate",
         "pruned_frac",
         "batch_predict_ns_per_row",
+        "goodput_smoke_identical",
     ):
         if field not in actual:
             die(2, f"{actual_path} missing '{field}': {actual}")
@@ -84,6 +89,7 @@ def main(argv):
         "pruned_frac": actual.get("pruned_frac"),
         "batch_predict_ns_per_row": actual.get("batch_predict_ns_per_row"),
         "batch_speedup": actual.get("batch_speedup"),
+        "goodput_smoke_identical": actual.get("goodput_smoke_identical"),
     }
     with open(trajectory_path, "a") as f:
         f.write(json.dumps(record, sort_keys=True) + "\n")
@@ -116,6 +122,11 @@ def main(argv):
         failures.append(
             f"batch_predict_ns_per_row {actual['batch_predict_ns_per_row']:.0f} > "
             f"{ceil_batch_ns:.0f} (= {1 + TOLERANCE:.0%} of baseline {base_batch_ns:.0f})"
+        )
+    if actual["goodput_smoke_identical"] != 1.0:
+        failures.append(
+            f"goodput_smoke_identical {actual['goodput_smoke_identical']} != 1.0 "
+            "(fault-free FaultSpec perturbed sweep rows)"
         )
 
     if failures:

@@ -23,7 +23,9 @@ fn main() {
     let mut registry = Registry::train(platform.name, &datasets, 7);
 
     let engine = Engine::new();
-    let report = engine.sweep(&model, &platform, &SweepSpec::new(gpus), &mut registry);
+    let report = engine
+        .sweep(&model, &platform, &SweepSpec::new(gpus), &mut registry)
+        .expect("sweep failed");
 
     println!("\n{} on {} GPUs — predicted batch seconds:", model.name, gpus);
     for (i, row) in report.rows.iter().enumerate() {

@@ -15,7 +15,6 @@
 use fgpm::config::{ModelCfg, Platform, TopoSpec};
 use fgpm::coordinator::server::{remote_sweep, serve_background, sweep_request_json};
 use fgpm::coordinator::{BatcherCfg, PredictionService};
-use fgpm::net::topology::RankOrder;
 use fgpm::pipeline::ScheduleKind;
 use fgpm::predictor::opcache::fnv1a64;
 use fgpm::predictor::registry::BatchPredictor;
@@ -58,6 +57,7 @@ fn run_remote(addr: std::net::SocketAddr, request: &Json, label: &str) -> usize 
             &rows[..rows.len().min(5)],
             rs.summary.usize_at("skipped_oom").unwrap_or(0),
             rs.summary.usize_at("skipped_sched").unwrap_or(0),
+            rs.summary.usize_at("skipped_microbatch").unwrap_or(0),
             Platform::perlmutter().gpu.hbm_gib,
         )
     );
@@ -78,14 +78,8 @@ fn main() {
     let cache_path = dir.join("opcache_perlmutter.bin");
     let fingerprint = fnv1a64(b"sweep_service_demo/toy-backend/perlmutter");
 
-    let spec = SweepSpec {
-        gpus: 16,
-        max_pp: 16,
-        max_mp: 16,
-        schedules: ScheduleKind::all(2),
-        rank_orders: vec![RankOrder::TpFirst],
-        p2p_overlap: 0.0,
-    };
+    let mut spec = SweepSpec::new(16);
+    spec.schedules = ScheduleKind::all(2);
     let request = sweep_request_json(model.name, "perlmutter", &TopoSpec::Flat, &spec);
 
     // act 1+2: one service, cold then warm (memory tier)

@@ -49,6 +49,7 @@ fn write_bench_sweep_json(
     pruned: &SweepReport,
     batch_ns_per_row: f64,
     recursive_ns_per_row: f64,
+    goodput_smoke_identical: f64,
     smoke: bool,
 ) {
     let json = Json::obj(vec![
@@ -82,6 +83,9 @@ fn write_bench_sweep_json(
         ("batch_predict_ns_per_row", Json::Num(batch_ns_per_row)),
         ("recursive_predict_ns_per_row", Json::Num(recursive_ns_per_row)),
         ("batch_speedup", Json::Num(recursive_ns_per_row / batch_ns_per_row.max(1e-9))),
+        // goodput smoke: 1.0 iff the fault-free FaultSpec reproduced the
+        // plain sweep's rows bit-identically (the --faults off identity)
+        ("goodput_smoke_identical", Json::Num(goodput_smoke_identical)),
     ]);
     match std::fs::write("BENCH_sweep.json", json.to_string()) {
         Ok(()) => println!("wrote BENCH_sweep.json: {json}"),
@@ -206,7 +210,7 @@ fn main() {
     let platform = Platform::perlmutter();
     let mut spec = SweepSpec::new(gpus);
     spec.schedules = ScheduleKind::all(2);
-    let (cfgs, _, _) = feasible_configs(&model, &platform, &spec);
+    let (cfgs, _, _, _) = feasible_configs(&model, &platform, &spec);
     b.case("serial uncached sweep (baseline)", || {
         for par in &cfgs {
             let mut oracle = OraclePredictor { platform: platform.clone() };
@@ -217,7 +221,7 @@ fn main() {
     b.case(case_name, || {
         let engine = fgpm::sweep::Engine::new();
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        last = Some(engine.sweep(&model, &platform, &spec, &mut oracle));
+        last = Some(engine.sweep(&model, &platform, &spec, &mut oracle).expect("sweep"));
     });
     let report = last.expect("sweep case ran");
     assert_eq!(report.rows.len(), cfgs.len());
@@ -230,7 +234,7 @@ fn main() {
     {
         let cold_engine = fgpm::sweep::Engine::new();
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        let _ = cold_engine.sweep(&model, &platform, &spec, &mut oracle);
+        let _ = cold_engine.sweep(&model, &platform, &spec, &mut oracle).expect("cold sweep");
         cold_engine.cache().save(&cache_path, fp).expect("save bench cache");
     }
     // every iteration is a true "second cold process": fresh engine,
@@ -244,7 +248,7 @@ fn main() {
             "{outcome:?}"
         );
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        warm_report = Some(engine.sweep(&model, &platform, &spec, &mut oracle));
+        warm_report = Some(engine.sweep(&model, &platform, &spec, &mut oracle).expect("warm sweep"));
     });
     let warm = warm_report.expect("warm case ran");
     assert_eq!(warm.rows.len(), cfgs.len());
@@ -261,13 +265,14 @@ fn main() {
         full_spec.prune = false;
         let engine = fgpm::sweep::Engine::new();
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        engine.sweep(&model, &platform, &full_spec, &mut oracle)
+        engine.sweep(&model, &platform, &full_spec, &mut oracle).expect("no-prune sweep")
     };
     let mut pruned_report = None;
     b.case("pruned top-8 sweep (all schedules x rank maps)", || {
         let engine = fgpm::sweep::Engine::new();
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        pruned_report = Some(engine.sweep(&model, &platform, &topk_spec, &mut oracle));
+        pruned_report =
+            Some(engine.sweep(&model, &platform, &topk_spec, &mut oracle).expect("pruned sweep"));
     });
     let pruned = pruned_report.expect("pruned case ran");
     assert_eq!(pruned.rows.len(), reference.rows.len());
@@ -282,6 +287,32 @@ fn main() {
         pruned.pruned_frac() * 100.0
     );
 
+    // goodput smoke: annotating a sweep with the fault-free FaultSpec
+    // must reproduce the plain sweep's rows bit-identically — the fault
+    // layer only annotates, it never touches total_us or the ranking
+    let goodput_smoke_identical = {
+        let mut fault_spec = spec.clone();
+        fault_spec.faults =
+            Some(fgpm::faults::FaultPlan::new(fgpm::faults::FaultSpec::off(), 64));
+        let engine = fgpm::sweep::Engine::new();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let annotated =
+            engine.sweep(&model, &platform, &fault_spec, &mut oracle).expect("goodput smoke");
+        assert_eq!(annotated.rows.len(), report.rows.len());
+        let identical = annotated.rows.iter().zip(&report.rows).all(|(a, b)| {
+            a.par == b.par
+                && a.prediction.total_us == b.prediction.total_us
+                && a.mem_gib == b.mem_gib
+        });
+        assert!(identical, "fault-free goodput annotation perturbed the sweep");
+        for row in &annotated.rows {
+            let g = row.goodput.expect("fault-mode rows carry goodput");
+            assert_eq!(g.failures_per_day, 0.0, "{}", row.par.label());
+        }
+        println!("goodput smoke: fault-free spec reproduced {} rows bit-identically", report.rows.len());
+        1.0
+    };
+
     write_bench_sweep_json(
         case_name,
         &report,
@@ -289,6 +320,7 @@ fn main() {
         &pruned,
         batch_ns_per_row,
         recursive_ns_per_row,
+        goodput_smoke_identical,
         smoke,
     );
     if !smoke && report.cache.hit_rate() < 0.5 {

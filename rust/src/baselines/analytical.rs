@@ -220,6 +220,35 @@ pub fn sweep_lower_bound_us(model: &ModelCfg, par: &ParallelCfg, platform: &Plat
     m * n_enc_max * enc_floor + sync_floor + update_floor
 }
 
+/// Compute-only floor on a config's batch time, µs: the heaviest stage's
+/// encoder GEMM/memory/flash floors (collectives and P2P excluded) over
+/// all `m` micro-batches. This is the irreducible ideal-FLOP time of a
+/// step — `faults::GoodputParams::compute_frac` divides it by the
+/// predicted step time to turn goodput into a useful-FLOP fraction.
+/// A subset of [`sweep_lower_bound_us`]'s terms, so it inherits the same
+/// admissibility argument (compute floors never exceed the simulator).
+pub fn compute_floor_us(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> f64 {
+    fn is_compute(op: &LoweredOp) -> bool {
+        match op {
+            LoweredOp::Gemm(_) | LoweredOp::Mem { .. } | LoweredOp::Flash { .. } => true,
+            LoweredOp::Seq(v) => v.iter().all(is_compute),
+            _ => false,
+        }
+    }
+    let wl = Workload::new(model, par, platform);
+    let compute_sum = |dir: Dir| -> f64 {
+        encoder_ops(model, &wl, dir)
+            .iter()
+            .filter(|op| is_compute(&op.lowered))
+            .map(|op| op_floor_us(&op.lowered, platform))
+            .sum()
+    };
+    let enc_floor = compute_sum(Dir::Fwd) + compute_sum(Dir::Bwd);
+    let alloc = encoder_allocation(model.encoders, par.pp);
+    let n_enc_max = alloc.iter().copied().max().unwrap_or(0) as f64;
+    model.iters_per_update as f64 * n_enc_max * enc_floor
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -325,7 +354,7 @@ mod tests {
         spec.schedules = ScheduleKind::all(2);
         spec.rank_orders = RankOrder::all();
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        let report = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        let report = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
         assert!(!report.rows.is_empty());
         for row in &report.rows {
             let bound = sweep_lower_bound_us(&model, &row.par, &platform);
@@ -336,6 +365,21 @@ mod tests {
                 row.prediction.total_us
             );
             assert!(bound > 0.0, "degenerate bound for {}", row.par.label());
+        }
+    }
+
+    #[test]
+    fn compute_floor_positive_and_below_full_bound() {
+        // The compute-only floor is a strict subset of the full bound's
+        // terms, so it must sit in (0, sweep_lower_bound_us].
+        for model in ModelCfg::all() {
+            for par in [ParallelCfg::new(4, 4, 8), ParallelCfg::new(1, 4, 4)] {
+                let p = Platform::perlmutter();
+                let cf = compute_floor_us(&model, &par, &p);
+                let full = sweep_lower_bound_us(&model, &par, &p);
+                assert!(cf > 0.0, "{} {}", model.name, par.label());
+                assert!(cf <= full, "{} {}: {cf} > {full}", model.name, par.label());
+            }
         }
     }
 

@@ -38,7 +38,10 @@ commands:
   train        fit + select per-operator regressors (80/20 validation)
   predict      predict one (model, parallel, platform) configuration
   sweep        rank all parallelism strategies for a model at a GPU count
-               (add --remote host:port to run it on a served coordinator)
+               (add --remote host:port to run it on a served coordinator;
+               add --faults spec for goodput / useful-FLOP columns)
+  goodput      checkpoint-interval x MTBF goodput grid for one config
+               (closed-form Daly/Young estimate + event-sim cross-check)
   topo         print the cluster tiers + group->tier traffic matrix for a config
   schedules    compare pipeline schedules (1F1B / GPipe / interleaved / ZB-H1) for one config
   table8       reproduce Table VIII (performance stability)
@@ -65,6 +68,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "train" => cmd_train(rest),
         "predict" => cmd_predict(rest),
         "sweep" => cmd_sweep(rest),
+        "goodput" => cmd_goodput(rest),
         "topo" => cmd_topo(rest),
         "schedules" => cmd_schedules(rest),
         "table8" => cmd_table8(rest),
@@ -166,6 +170,53 @@ fn apply_topo_arg(args: &crate::util::cli::Args, platform: Platform) -> Result<P
 /// Reject (model, parallel) combinations the schedule cannot run.
 fn validate_schedule(model: &ModelCfg, par: &ParallelCfg) -> Result<()> {
     par.validate_schedule(model.iters_per_update).map_err(|e| anyhow!("{e}"))
+}
+
+/// Parse `--faults off|spec` (+ its satellite knobs) into the sweep
+/// spec's optional fault plan. `off` is the exact fault-free path —
+/// every existing output stays bit-identical — and rejects
+/// explicitly-typed fault knobs rather than silently ignoring them.
+fn faults_arg(args: &crate::util::cli::Args) -> Result<Option<crate::faults::FaultPlan>> {
+    let mode = args.str("faults");
+    match mode.as_str() {
+        "off" => {
+            for opt in ["mtbf-gpu-h", "ckpt-interval"] {
+                anyhow::ensure!(
+                    !args.is_explicit(opt),
+                    "--{opt} has no effect with --faults off (pass --faults spec)"
+                );
+            }
+            Ok(None)
+        }
+        "spec" => {
+            let mut fs = crate::faults::FaultSpec::production();
+            let mtbf = args.f64("mtbf-gpu-h")?;
+            anyhow::ensure!(
+                mtbf.is_finite() && mtbf > 0.0,
+                "--mtbf-gpu-h must be a positive number of hours, got {mtbf}"
+            );
+            fs.mtbf_gpu_h = mtbf;
+            let interval = args.usize("ckpt-interval")?;
+            anyhow::ensure!(interval >= 1, "--ckpt-interval must be >= 1 step");
+            Ok(Some(crate::faults::FaultPlan::new(fs, interval)))
+        }
+        other => Err(anyhow!("--faults expects off|spec, got '{other}'")),
+    }
+}
+
+/// Parse a comma-separated numeric list option with a per-item check.
+fn list_arg<T>(
+    args: &crate::util::cli::Args,
+    name: &str,
+    parse: impl Fn(&str) -> Option<T>,
+) -> Result<Vec<T>> {
+    args.str(name)
+        .split(',')
+        .map(|s| {
+            parse(s.trim())
+                .ok_or_else(|| anyhow!("--{name}: bad list entry '{}'", s.trim()))
+        })
+        .collect()
 }
 
 fn cmd_models() -> Result<i32> {
@@ -394,6 +445,9 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
         .opt("top-k", "0", "return only the k fastest configs, branch-and-bound pruning the rest (0 = full table)")
         .flag("no-prune", "with --top-k: evaluate every config anyway (disable the analytical bound)")
+        .opt("faults", "off", "fault model for goodput columns (off | spec = production rates)")
+        .opt("mtbf-gpu-h", "40000", "with --faults spec: per-GPU mean time between failures, hours")
+        .opt("ckpt-interval", "64", "with --faults spec: checkpoint every N steps")
         .opt("jobs", "0", "evaluation worker threads (0 = one per core)")
         .opt("remote", "", "run the sweep on a coordinator at host:port instead of locally")
         .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
@@ -423,6 +477,7 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
     // parse + range-check the constant overlap once, before enumerating
     let overlap = apply_overlap_arg(&args, ParallelCfg::new(1, 1, 1))?.p2p_overlap();
     let top_k = args.usize("top-k")?;
+    let faults = faults_arg(&args)?;
     let sweep_spec = crate::sweep::SweepSpec {
         gpus,
         max_pp: 16,
@@ -432,6 +487,7 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         p2p_overlap: overlap,
         top_k: (top_k > 0).then_some(top_k),
         prune: !args.has_flag("no-prune"),
+        faults,
     };
     let title = format!(
         "{} on {} with {} GPUs — predicted batch seconds:",
@@ -463,23 +519,47 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
             &sweep_spec,
         );
         let rs = server::remote_sweep(&remote, &request).map_err(|e| anyhow!("{e}"))?;
-        let rows: Vec<(String, f64, f64)> = rs
-            .rows
-            .iter()
-            .map(|r| (r.label.clone(), r.total_us / 1e6, r.mem_gib))
-            .collect();
         let skipped_oom = rs.summary.usize_at("skipped_oom").unwrap_or(0);
         let skipped_sched = rs.summary.usize_at("skipped_sched").unwrap_or(0);
-        print!(
-            "{}",
-            crate::report::tables::sweep_table_text(
-                &title,
-                &rows,
-                skipped_oom,
-                skipped_sched,
-                platform.gpu.hbm_gib
-            )
-        );
+        let skipped_microbatch = rs.summary.usize_at("skipped_microbatch").unwrap_or(0);
+        if sweep_spec.faults.is_some() {
+            let rows: Vec<(String, f64, f64, f64, f64, f64)> = rs
+                .rows
+                .iter()
+                .map(|r| {
+                    let (g, u, c) = r.goodput.unwrap_or((0.0, 0.0, 0.0));
+                    (r.label.clone(), r.total_us / 1e6, r.mem_gib, g, u, c)
+                })
+                .collect();
+            print!(
+                "{}",
+                crate::report::tables::goodput_sweep_table_text(
+                    &title,
+                    &rows,
+                    skipped_oom,
+                    skipped_sched,
+                    skipped_microbatch,
+                    platform.gpu.hbm_gib
+                )
+            );
+        } else {
+            let rows: Vec<(String, f64, f64)> = rs
+                .rows
+                .iter()
+                .map(|r| (r.label.clone(), r.total_us / 1e6, r.mem_gib))
+                .collect();
+            print!(
+                "{}",
+                crate::report::tables::sweep_table_text(
+                    &title,
+                    &rows,
+                    skipped_oom,
+                    skipped_sched,
+                    skipped_microbatch,
+                    platform.gpu.hbm_gib
+                )
+            );
+        }
         let remote_pruned = rs.summary.usize_at("pruned").unwrap_or(0);
         let prune_note = if remote_pruned > 0 {
             format!(
@@ -489,9 +569,17 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         } else {
             String::new()
         };
+        let goodput_note = match rs.summary.f64_at("best_goodput_frac") {
+            Some(g) => format!(
+                ", best goodput {:.1}% (useful FLOPs {:.1}%)",
+                g * 100.0,
+                rs.summary.f64_at("best_useful_flop_frac").unwrap_or(0.0) * 100.0
+            ),
+            None => String::new(),
+        };
         println!(
-            "evaluated {} configs in {:.0?} on {remote} ({:.0} configs/s, op-cache hit-rate {:.0}% [mem {:.0}% / disk {:.0}%], {} distinct ops{prune_note})",
-            rs.summary.usize_at("evaluated").unwrap_or(rows.len()),
+            "evaluated {} configs in {:.0?} on {remote} ({:.0} configs/s, op-cache hit-rate {:.0}% [mem {:.0}% / disk {:.0}%], {} distinct ops{prune_note}{goodput_note})",
+            rs.summary.usize_at("evaluated").unwrap_or(rs.rows.len()),
             std::time::Duration::from_secs_f64(
                 rs.summary.f64_at("elapsed_us").unwrap_or(0.0) / 1e6
             ),
@@ -521,27 +609,55 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         eprintln!("[fgpm] op cache {path:?}: {}", engine.cache().load(&path, fp).describe());
         Some((path, fp))
     };
-    let report = engine.sweep(&model, &platform, &sweep_spec, backend.as_mut());
+    let report = engine
+        .sweep(&model, &platform, &sweep_spec, backend.as_mut())
+        .map_err(|e| anyhow!("{e}"))?;
     if let Some((path, fp)) = persist {
         if let Err(e) = engine.cache().save(&path, fp) {
             eprintln!("[fgpm] WARNING: could not save op cache {path:?}: {e}");
         }
     }
-    let rows: Vec<(String, f64, f64)> = report
-        .rows
-        .iter()
-        .map(|r| (r.par.label(), r.seconds(), r.mem_gib))
-        .collect();
-    print!(
-        "{}",
-        crate::report::tables::sweep_table_text(
-            &title,
-            &rows,
-            report.skipped_oom,
-            report.skipped_sched,
-            platform.gpu.hbm_gib
-        )
-    );
+    if sweep_spec.faults.is_some() {
+        let rows: Vec<(String, f64, f64, f64, f64, f64)> = report
+            .rows
+            .iter()
+            .map(|r| {
+                let (g, u, c) = r
+                    .goodput
+                    .map(|g| (g.goodput_frac, g.useful_flop_frac, g.ckpt_overhead_frac))
+                    .unwrap_or((0.0, 0.0, 0.0));
+                (r.par.label(), r.seconds(), r.mem_gib, g, u, c)
+            })
+            .collect();
+        print!(
+            "{}",
+            crate::report::tables::goodput_sweep_table_text(
+                &title,
+                &rows,
+                report.skipped_oom,
+                report.skipped_sched,
+                report.skipped_microbatch,
+                platform.gpu.hbm_gib
+            )
+        );
+    } else {
+        let rows: Vec<(String, f64, f64)> = report
+            .rows
+            .iter()
+            .map(|r| (r.par.label(), r.seconds(), r.mem_gib))
+            .collect();
+        print!(
+            "{}",
+            crate::report::tables::sweep_table_text(
+                &title,
+                &rows,
+                report.skipped_oom,
+                report.skipped_sched,
+                report.skipped_microbatch,
+                platform.gpu.hbm_gib
+            )
+        );
+    }
     let prune_note = if report.pruned > 0 {
         format!(
             ", pruned {} of {} configs via bound ({:.0}%)",
@@ -552,12 +668,132 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
     } else {
         String::new()
     };
+    let goodput_note = if sweep_spec.faults.is_some() {
+        format!(
+            ", best goodput {:.1}% (useful FLOPs {:.1}%)",
+            report.best_goodput_frac() * 100.0,
+            report.best_useful_flop_frac() * 100.0
+        )
+    } else {
+        String::new()
+    };
     println!(
-        "evaluated {} configs in {:.0?} ({:.0} configs/s, {}{prune_note})",
+        "evaluated {} configs in {:.0?} ({:.0} configs/s, {}{prune_note}{goodput_note})",
         report.evaluated,
         report.elapsed,
         report.configs_per_sec(),
         cache_stats_line(&report.cache)
+    );
+    Ok(0)
+}
+
+fn cmd_goodput(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new(
+        "goodput",
+        "checkpoint-interval x MTBF goodput grid for one configuration \
+         (closed-form Daly/Young estimate, cross-checked against the \
+         fault event simulator at the starred cell)",
+    )
+    .opt("model", "gpt20b", "model preset")
+    .opt("parallel", "4-4-8", "pp-mp-dp[/schedule][@rank-map]")
+    .opt("platform", "perlmutter", "target platform")
+    .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
+    .opt("mtbf-gpu-h", "10000,40000,160000", "per-GPU MTBF values to cross, hours (comma list)")
+    .opt("ckpt-interval", "16,64,256,1024", "checkpoint intervals to cross, steps (comma list)")
+    .opt("straggler-prob", "0.02", "per-step straggler probability [0,1]")
+    .opt("straggler-mult", "1.15", "step multiplier when a straggler strikes (>= 1)")
+    .opt("sim-steps", "2000", "event-simulated steps for the cross-check line")
+    .opt("forests", "forests", "trained registry directory")
+    .opt("seed", "7", "rng seed")
+    .flag("xla", "use the AOT Pallas executable");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let platform = apply_topo_arg(&args, platform_arg(&args)?)?;
+    let model = model_arg(&args)?;
+    let par = ParallelCfg::parse(&args.str("parallel"))
+        .context("bad --parallel (expected pp-mp-dp[/schedule][@rank-map])")?;
+    validate_schedule(&model, &par)?;
+    anyhow::ensure!(par.fits(&platform), "{} needs {} GPUs", par.label(), par.gpus());
+    let intervals = list_arg(&args, "ckpt-interval", |s| {
+        s.parse::<usize>().ok().filter(|&n| n >= 1)
+    })?;
+    let mtbfs = list_arg(&args, "mtbf-gpu-h", |s| {
+        s.parse::<f64>().ok().filter(|m| m.is_finite() && *m > 0.0)
+    })?;
+    let straggler_prob = args.f64("straggler-prob")?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&straggler_prob),
+        "--straggler-prob must be in [0, 1], got {straggler_prob}"
+    );
+    let straggler_mult = args.f64("straggler-mult")?;
+    anyhow::ensure!(straggler_mult >= 1.0, "--straggler-mult must be >= 1, got {straggler_mult}");
+
+    let (reg, _) = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
+    let mut backend = backend_for(reg, args.has_flag("xla"))?;
+    let cp = predict(&model, &par, &platform, backend.as_mut());
+    let step_s = cp.total_seconds();
+
+    let params_for = |mtbf_h: f64, interval: usize| {
+        let mut fs = crate::faults::FaultSpec::production();
+        fs.mtbf_gpu_h = mtbf_h;
+        fs.straggler_prob = straggler_prob;
+        fs.straggler_mult = straggler_mult;
+        let plan = crate::faults::FaultPlan::new(fs, interval);
+        crate::faults::GoodputParams::resolve(&model, &par, &platform, &plan, step_s)
+    };
+    let mut grid: Vec<Vec<f64>> = Vec::with_capacity(intervals.len());
+    let mut optimal_s: Vec<f64> = Vec::new();
+    for (i, &interval) in intervals.iter().enumerate() {
+        let mut row = Vec::with_capacity(mtbfs.len());
+        for &mtbf_h in &mtbfs {
+            let est = crate::faults::closed_form(&params_for(mtbf_h, interval));
+            row.push(est.goodput_frac);
+            if i == 0 {
+                // λ and δ do not depend on the interval: one Young
+                // optimum per MTBF column
+                optimal_s.push(est.optimal_ckpt_interval_s);
+            }
+        }
+        grid.push(row);
+    }
+    let p0 = params_for(mtbfs[0], intervals[0]);
+    let title = format!(
+        "{} {} on {} — closed-form goodput (step {:.2} s, ckpt write {:.1} s, restart {:.1} s):",
+        model.name,
+        par.label(),
+        platform.name,
+        step_s,
+        p0.ckpt_write_s,
+        p0.restart_s
+    );
+    print!(
+        "{}",
+        crate::report::tables::goodput_grid_text(&title, &intervals, &mtbfs, &grid, &optimal_s)
+    );
+
+    // cross-check the starred cell against the event simulation
+    let (mut bi, mut bj) = (0, 0);
+    for (i, row) in grid.iter().enumerate() {
+        for (j, &g) in row.iter().enumerate() {
+            if g.total_cmp(&grid[bi][bj]) == std::cmp::Ordering::Greater {
+                (bi, bj) = (i, j);
+            }
+        }
+    }
+    let p = params_for(mtbfs[bj], intervals[bi]);
+    let sim_steps = args.usize("sim-steps")?.max(1);
+    let sim = crate::faults::simulate(&p, sim_steps, args.u64("seed")?);
+    let sim_frac = sim.goodput_frac(step_s);
+    println!(
+        "event-sim cross-check at ckpt {} x mtbf {:.0}h over {} steps: closed form {:.2}% \
+         vs simulated {:.2}% ({} failures, {} stragglers, {} checkpoints)",
+        intervals[bi],
+        mtbfs[bj],
+        sim_steps,
+        grid[bi][bj] * 100.0,
+        sim_frac * 100.0,
+        sim.failures,
+        sim.stragglers,
+        sim.checkpoints
     );
     Ok(0)
 }

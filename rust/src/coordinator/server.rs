@@ -99,7 +99,68 @@ pub fn sweep_request_json(
     if !spec.prune {
         fields.push(("prune", Json::Bool(false)));
     }
+    if let Some(plan) = &spec.faults {
+        let s = &plan.spec;
+        fields.push((
+            "faults",
+            Json::obj(vec![
+                ("mtbf_gpu_h", Json::Num(s.mtbf_gpu_h)),
+                ("mtbf_nic_h", Json::Num(s.mtbf_nic_h)),
+                ("mtbf_link_h", Json::Num(s.mtbf_link_h)),
+                ("mtbf_node_h", Json::Num(s.mtbf_node_h)),
+                ("straggler_prob", Json::Num(s.straggler_prob)),
+                ("straggler_mult", Json::Num(s.straggler_mult)),
+                ("ckpt_write_gbs", Json::Num(s.ckpt_write_gbs)),
+                ("ckpt_read_gbs", Json::Num(s.ckpt_read_gbs)),
+                ("restart_overhead_s", Json::Num(s.restart_overhead_s)),
+                ("ckpt_interval_steps", Json::Num(plan.ckpt_interval_steps as f64)),
+            ]),
+        ));
+    }
     Json::obj(vec![("cmd", Json::Str("sweep".into())), ("spec", Json::obj(fields))])
+}
+
+/// Parse + validate the optional `faults` object of a sweep request.
+fn parse_faults(spec: &Json) -> Result<Option<crate::faults::FaultPlan>, String> {
+    let Some(f) = spec.get("faults") else { return Ok(None) };
+    // every rate/bandwidth must be finite and >= 0 (0 disables it)
+    let field = |name: &str, default: f64| -> Result<f64, String> {
+        let v = f.f64_at(name).unwrap_or(default);
+        if v.is_finite() && v >= 0.0 {
+            Ok(v)
+        } else {
+            Err(format!("faults.{name} must be finite and >= 0"))
+        }
+    };
+    let base = crate::faults::FaultSpec::production();
+    let fault_spec = crate::faults::FaultSpec {
+        mtbf_gpu_h: field("mtbf_gpu_h", base.mtbf_gpu_h)?,
+        mtbf_nic_h: field("mtbf_nic_h", base.mtbf_nic_h)?,
+        mtbf_link_h: field("mtbf_link_h", base.mtbf_link_h)?,
+        mtbf_node_h: field("mtbf_node_h", base.mtbf_node_h)?,
+        straggler_prob: {
+            let p = field("straggler_prob", base.straggler_prob)?;
+            if p > 1.0 {
+                return Err("faults.straggler_prob must be in [0, 1]".to_string());
+            }
+            p
+        },
+        straggler_mult: {
+            let m = field("straggler_mult", base.straggler_mult)?;
+            if m < 1.0 {
+                return Err("faults.straggler_mult must be >= 1".to_string());
+            }
+            m
+        },
+        ckpt_write_gbs: field("ckpt_write_gbs", base.ckpt_write_gbs)?,
+        ckpt_read_gbs: field("ckpt_read_gbs", base.ckpt_read_gbs)?,
+        restart_overhead_s: field("restart_overhead_s", base.restart_overhead_s)?,
+    };
+    let interval = f.usize_at("ckpt_interval_steps").unwrap_or(64);
+    if interval == 0 {
+        return Err("faults.ckpt_interval_steps must be >= 1".to_string());
+    }
+    Ok(Some(crate::faults::FaultPlan::new(fault_spec, interval)))
 }
 
 /// Degree caps a remote client may request — enumeration is cheap, but
@@ -182,6 +243,7 @@ pub fn parse_sweep_request(req: &Json) -> Result<SweepRequest, String> {
         Some(k) => Some(k),
     };
     let prune = spec.get("prune").and_then(|p| p.as_bool()).unwrap_or(true);
+    let faults = parse_faults(spec)?;
     Ok(SweepRequest {
         model,
         platform,
@@ -194,6 +256,7 @@ pub fn parse_sweep_request(req: &Json) -> Result<SweepRequest, String> {
             p2p_overlap,
             top_k,
             prune,
+            faults,
         },
     })
 }
@@ -202,40 +265,53 @@ pub fn parse_sweep_request(req: &Json) -> Result<SweepRequest, String> {
 /// emits shortest-round-trip floats, so the client re-parses the exact
 /// f64 the engine produced).
 fn row_json(row: &crate::sweep::SweepRow) -> Json {
-    Json::obj(vec![(
-        "row",
-        Json::obj(vec![
-            ("label", Json::Str(row.par.label())),
-            ("total_us", Json::Num(row.prediction.total_us)),
-            ("mem_gib", Json::Num(row.mem_gib)),
-        ]),
-    )])
+    let mut fields = vec![
+        ("label", Json::Str(row.par.label())),
+        ("total_us", Json::Num(row.prediction.total_us)),
+        ("mem_gib", Json::Num(row.mem_gib)),
+    ];
+    // goodput columns exist only on fault-mode sweeps: fault-free rows
+    // stay byte-identical to pre-fault coordinators
+    if let Some(g) = &row.goodput {
+        fields.push(("goodput_frac", Json::Num(g.goodput_frac)));
+        fields.push(("useful_flop_frac", Json::Num(g.useful_flop_frac)));
+        fields.push(("ckpt_overhead_frac", Json::Num(g.ckpt_overhead_frac)));
+    }
+    Json::obj(vec![("row", Json::obj(fields))])
 }
 
-/// The terminal summary object of a sweep stream.
+/// The terminal summary object of a sweep stream. New counters are
+/// omitted at their defaults (`skipped_microbatch` at 0; the goodput
+/// aggregates when no row carries a fault annotation), so a fault-free
+/// default sweep's summary bytes are identical to pre-fault servers.
 fn summary_json(report: &SweepReport) -> Json {
-    Json::obj(vec![(
-        "summary",
-        Json::obj(vec![
-            ("configs", Json::Num(report.rows.len() as f64)),
-            ("evaluated", Json::Num(report.evaluated as f64)),
-            ("pruned", Json::Num(report.pruned as f64)),
-            ("bound_consults", Json::Num(report.bound_consults as f64)),
-            ("pruned_frac", Json::Num(report.pruned_frac())),
-            ("skipped_oom", Json::Num(report.skipped_oom as f64)),
-            ("skipped_sched", Json::Num(report.skipped_sched as f64)),
-            ("elapsed_us", Json::Num(report.elapsed.as_secs_f64() * 1e6)),
-            ("configs_per_sec", Json::Num(report.configs_per_sec())),
-            ("cache_hits", Json::Num(report.cache.hits as f64)),
-            ("cache_disk_hits", Json::Num(report.cache.disk_hits as f64)),
-            ("cache_misses", Json::Num(report.cache.misses as f64)),
-            ("cache_hit_rate", Json::Num(report.cache.hit_rate())),
-            ("cache_memory_hit_rate", Json::Num(report.cache.memory_hit_rate())),
-            ("cache_disk_hit_rate", Json::Num(report.cache.disk_hit_rate())),
-            ("distinct_ops", Json::Num(report.cache.entries as f64)),
-            ("disk_entries", Json::Num(report.cache.disk_entries as f64)),
-        ]),
-    )])
+    let mut fields = vec![
+        ("configs", Json::Num(report.rows.len() as f64)),
+        ("evaluated", Json::Num(report.evaluated as f64)),
+        ("pruned", Json::Num(report.pruned as f64)),
+        ("bound_consults", Json::Num(report.bound_consults as f64)),
+        ("pruned_frac", Json::Num(report.pruned_frac())),
+        ("skipped_oom", Json::Num(report.skipped_oom as f64)),
+        ("skipped_sched", Json::Num(report.skipped_sched as f64)),
+        ("elapsed_us", Json::Num(report.elapsed.as_secs_f64() * 1e6)),
+        ("configs_per_sec", Json::Num(report.configs_per_sec())),
+        ("cache_hits", Json::Num(report.cache.hits as f64)),
+        ("cache_disk_hits", Json::Num(report.cache.disk_hits as f64)),
+        ("cache_misses", Json::Num(report.cache.misses as f64)),
+        ("cache_hit_rate", Json::Num(report.cache.hit_rate())),
+        ("cache_memory_hit_rate", Json::Num(report.cache.memory_hit_rate())),
+        ("cache_disk_hit_rate", Json::Num(report.cache.disk_hit_rate())),
+        ("distinct_ops", Json::Num(report.cache.entries as f64)),
+        ("disk_entries", Json::Num(report.cache.disk_entries as f64)),
+    ];
+    if report.skipped_microbatch > 0 {
+        fields.push(("skipped_microbatch", Json::Num(report.skipped_microbatch as f64)));
+    }
+    if report.rows.iter().any(|r| r.goodput.is_some()) {
+        fields.push(("best_goodput_frac", Json::Num(report.best_goodput_frac())));
+        fields.push(("best_useful_flop_frac", Json::Num(report.best_useful_flop_frac())));
+    }
+    Json::obj(vec![("summary", Json::obj(fields))])
 }
 
 /// Serve one sweep request as a stream: rows fastest-first, then the
@@ -249,7 +325,12 @@ pub fn handle_sweep(
         Ok(p) => p,
         Err(msg) => return writeln!(out, "{}", err_json(&msg)),
     };
-    let report = svc.sweep(&parsed.model, &parsed.platform, &parsed.spec);
+    // a worker panic is served as one {"error":...} line — the
+    // connection (and the whole coordinator) stays usable afterwards
+    let report = match svc.sweep(&parsed.model, &parsed.platform, &parsed.spec) {
+        Ok(r) => r,
+        Err(e) => return writeln!(out, "{}", err_json(&e.to_string())),
+    };
     for row in &report.rows {
         writeln!(out, "{}", row_json(row))?;
     }
@@ -270,6 +351,9 @@ pub struct RemoteRow {
     pub label: String,
     pub total_us: f64,
     pub mem_gib: f64,
+    /// `(goodput_frac, useful_flop_frac, ckpt_overhead_frac)` — present
+    /// only when the server ran a fault-mode sweep.
+    pub goodput: Option<(f64, f64, f64)>,
 }
 
 /// Everything a remote sweep returned.
@@ -316,7 +400,15 @@ pub fn remote_sweep(addr: &str, request: &Json) -> Result<RemoteSweep, String> {
             else {
                 return Err(format!("malformed row: {line}"));
             };
-            rows.push(RemoteRow { label: label.to_string(), total_us, mem_gib });
+            let goodput = match (
+                row.f64_at("goodput_frac"),
+                row.f64_at("useful_flop_frac"),
+                row.f64_at("ckpt_overhead_frac"),
+            ) {
+                (Some(g), Some(u), Some(c)) => Some((g, u, c)),
+                _ => None,
+            };
+            rows.push(RemoteRow { label: label.to_string(), total_us, mem_gib, goodput });
             continue;
         }
         if let Some(summary) = j.get("summary") {
@@ -591,8 +683,12 @@ mod tests {
             p2p_overlap: 0.25,
             top_k: Some(5),
             prune: false,
+            faults: None,
         };
         let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
+        // the default (faults off) request carries NO faults key at all —
+        // byte-compatible with pre-fault coordinators
+        assert!(!req.to_string().contains("faults"), "{req}");
         let parsed = parse_sweep_request(&Json::parse(&req.to_string()).unwrap()).unwrap();
         assert_eq!(parsed.model.name, "Llemma-7B");
         assert_eq!(parsed.platform.name, "perlmutter");
@@ -602,6 +698,7 @@ mod tests {
         assert_eq!(parsed.spec.p2p_overlap, 0.25);
         assert_eq!(parsed.spec.top_k, Some(5));
         assert!(!parsed.spec.prune);
+        assert!(parsed.spec.faults.is_none());
 
         let bad = |line: &str, what: &str| {
             let e = parse_sweep_request(&Json::parse(line).unwrap()).unwrap_err();
@@ -634,6 +731,122 @@ mod tests {
         assert_eq!((min.spec.max_pp, min.spec.max_mp), (16, 16));
         assert_eq!(min.spec.top_k, None);
         assert!(min.spec.prune);
+    }
+
+    #[test]
+    fn faults_request_roundtrip_and_validation() {
+        use crate::faults::{FaultPlan, FaultSpec};
+        let mut fault_spec = FaultSpec::production();
+        fault_spec.mtbf_gpu_h = 12_345.0;
+        let mut spec = SweepSpec::new(16);
+        spec.faults = Some(FaultPlan::new(fault_spec, 32));
+        let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
+        let parsed = parse_sweep_request(&Json::parse(&req.to_string()).unwrap()).unwrap();
+        let plan = parsed.spec.faults.expect("faults survive the roundtrip");
+        assert_eq!(plan.spec.mtbf_gpu_h, 12_345.0);
+        assert_eq!(plan.spec.straggler_prob, fault_spec.straggler_prob);
+        assert_eq!(plan.ckpt_interval_steps, 32);
+
+        let bad = |line: &str, what: &str| {
+            let e = parse_sweep_request(&Json::parse(line).unwrap()).unwrap_err();
+            assert!(e.contains(what), "{e}");
+        };
+        bad(
+            r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":16,"faults":{"mtbf_gpu_h":-1}}}"#,
+            "mtbf_gpu_h",
+        );
+        bad(
+            r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":16,"faults":{"straggler_mult":0.5}}}"#,
+            "straggler_mult",
+        );
+        bad(
+            r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":16,"faults":{"straggler_prob":1.5}}}"#,
+            "straggler_prob",
+        );
+        bad(
+            r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":16,"faults":{"ckpt_interval_steps":0}}}"#,
+            "ckpt_interval_steps",
+        );
+        // an empty faults object gets the production defaults
+        let dflt = parse_sweep_request(
+            &Json::parse(r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":16,"faults":{}}}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        let plan = dflt.spec.faults.unwrap();
+        assert_eq!(plan.spec, FaultSpec::production());
+        assert_eq!(plan.ckpt_interval_steps, 64);
+    }
+
+    #[test]
+    fn handle_sweep_fault_mode_streams_goodput_fields() {
+        use crate::faults::{FaultPlan, FaultSpec};
+        let s = svc();
+        let mut spec = SweepSpec::new(16);
+        spec.faults = Some(FaultPlan::new(FaultSpec::production(), 64));
+        let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
+        let mut out: Vec<u8> = Vec::new();
+        handle_sweep(&s, &req, &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= 2, "{text}");
+        for l in &lines[..lines.len() - 1] {
+            let j = Json::parse(l).unwrap();
+            let row = j.get("row").unwrap();
+            let g = row.f64_at("goodput_frac").unwrap();
+            assert!(g > 0.0 && g <= 1.0, "{l}");
+            assert!(row.f64_at("useful_flop_frac").unwrap() <= g, "{l}");
+            assert!(row.f64_at("ckpt_overhead_frac").is_some(), "{l}");
+        }
+        let summary = Json::parse(lines[lines.len() - 1]).unwrap().get("summary").unwrap().clone();
+        assert!(summary.f64_at("best_goodput_frac").unwrap() > 0.0, "{summary}");
+        assert!(summary.f64_at("best_useful_flop_frac").is_some(), "{summary}");
+        s.shutdown();
+    }
+
+    #[test]
+    fn handle_sweep_fault_free_wire_bytes_carry_no_goodput_keys() {
+        let s = svc();
+        // cap pp at the micro-batch count so no strategy is skipped for
+        // pipeline depth: every new summary key then sits at its default
+        let mut spec = SweepSpec::new(16);
+        spec.max_pp = 8;
+        let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
+        let mut out: Vec<u8> = Vec::new();
+        handle_sweep(&s, &req, &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        // omit-at-default: the fault-free stream is byte-compatible with
+        // pre-fault servers — none of the new keys appear
+        assert!(!text.contains("goodput"), "{text}");
+        assert!(!text.contains("skipped_microbatch"), "{text}");
+        s.shutdown();
+    }
+
+    /// A backend that answers every batch short: queued queries never get
+    /// responses, so the service client panics inside the sweep prefetch.
+    struct Short;
+    impl BatchPredictor for Short {
+        fn predict_batch(&mut self, _k: DatasetKey, _rows: &[Vec<f64>]) -> Vec<f64> {
+            Vec::new()
+        }
+    }
+
+    #[test]
+    fn handle_sweep_worker_panic_serves_one_error_line_and_connection_survives() {
+        let s = PredictionService::start(Box::new(Short), BatcherCfg::default());
+        let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &SweepSpec::new(16));
+        let mut out: Vec<u8> = Vec::new();
+        handle_sweep(&s, &req, &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(text.lines().count(), 1, "{text}");
+        let j = Json::parse(text.trim()).unwrap();
+        let msg = j.str_at("error").unwrap();
+        assert!(msg.contains("sweep failed at config"), "{msg}");
+        // the handler (and therefore its connection) is still usable
+        assert!(handle_line(&s, r#"{"cmd":"ping"}"#).contains("true"));
+        // failed sweeps do not count as served sweeps
+        assert_eq!(s.metrics.snapshot().sweeps, 0);
+        s.shutdown();
     }
 
     #[test]

@@ -196,12 +196,21 @@ impl PredictionService {
     /// rows have been written (the TCP handler does) so no client waits
     /// out an O(store) disk write for already-computed results; the
     /// cache is also persisted on drop.
-    pub fn sweep(&self, model: &ModelCfg, platform: &Platform, spec: &SweepSpec) -> SweepReport {
+    ///
+    /// A worker panic surfaces as `Err(SweepError)` naming the offending
+    /// config — the caller (and its TCP connection) stays usable, and the
+    /// sweep metrics only count completed sweeps.
+    pub fn sweep(
+        &self,
+        model: &ModelCfg,
+        platform: &Platform,
+        spec: &SweepSpec,
+    ) -> Result<SweepReport, crate::sweep::SweepError> {
         let mut client = self.client();
-        let report = self.engine.sweep(model, platform, spec, &mut client);
+        let report = self.engine.sweep(model, platform, spec, &mut client)?;
         self.metrics.add(&self.metrics.sweeps, 1);
         self.metrics.add(&self.metrics.sweep_rows, report.rows.len() as u64);
-        report
+        Ok(report)
     }
 
     /// Save the op cache to its configured path (no-op otherwise).

@@ -1,0 +1,567 @@
+//! Fault-aware goodput modeling: failures, stragglers, and
+//! checkpoint/restart layered on top of the fault-free step-time model.
+//!
+//! The paper predicts *ideal* batch time; at production scale the
+//! dominant unknown is **goodput** — the fraction of wall-clock spent on
+//! work that survives to a checkpoint. This module provides:
+//!
+//! * [`FaultSpec`] — per-component MTBF rates (GPU / NIC / fabric link /
+//!   node) aggregated over the job's [`ComponentCensus`] (drawn from the
+//!   [`ClusterTopology`](crate::net::topology::ClusterTopology) tiers),
+//!   plus a straggler layer (per-step probability × slowdown multiplier,
+//!   the tail-latency companion of the per-tier jitter model) and
+//!   checkpoint-I/O bandwidths.
+//! * [`GoodputParams`] — the resolved per-config quantities: fault-free
+//!   step seconds, checkpoint write/restore seconds derived from
+//!   [`ops::memory`](crate::ops::memory) residency (fp16 params + ZeRO-1
+//!   optimizer shard over the DP-shard write path), restart cost, and the
+//!   aggregate failure rate.
+//! * [`closed_form`] — an optimal-checkpoint-interval-style first-order
+//!   approximation of expected goodput, and [`simulate`] — the
+//!   step-granular event simulation (exponential failure arrivals, roll
+//!   back to the last checkpoint, pay restore + re-warm-up) it is
+//!   cross-checked against. The two agree within [`CLOSED_FORM_RTOL`]
+//!   in the closed form's validity regime (property-tested in
+//!   `tests/prop_sweep.rs`, the same closed-form-vs-executor pattern the
+//!   schedule subsystem uses).
+//!
+//! A [`FaultSpec::off`] spec is the degenerate identity: goodput 1.0,
+//! zero overhead fractions, and — by construction — NO effect on any
+//! fault-free output (the fault layer only ever annotates predictions,
+//! it never modifies `total_us`; guarded by the bench goodput-smoke
+//! case and a property test).
+
+use crate::config::{ModelCfg, ParallelCfg, Platform};
+use crate::net::topology::ClusterTopology;
+use crate::ops::memory;
+use crate::util::rng::Rng;
+
+/// Relative tolerance within which the closed form tracks the event
+/// simulation in its validity regime (expected failures per checkpoint
+/// segment `λ·(τ+δ) ≲ 0.2` AND restart cheap relative to the failure
+/// spacing, `λ·R ≲ 0.2` — both first-order assumptions; many segments
+/// simulated). Documented here, asserted in `tests/prop_sweep.rs`.
+pub const CLOSED_FORM_RTOL: f64 = 0.10;
+
+/// Per-component failure rates and straggler/checkpoint-I/O parameters.
+/// An MTBF of `0.0` means "this component never fails" (rate 0), so the
+/// all-zero [`FaultSpec::off`] spec is the exact fault-free identity.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Mean time between failures of one GPU, hours (0 = never).
+    pub mtbf_gpu_h: f64,
+    /// MTBF of one node NIC, hours (one NIC modeled per node).
+    pub mtbf_nic_h: f64,
+    /// MTBF of one fabric link (rail uplink or spine crossing), hours.
+    pub mtbf_link_h: f64,
+    /// MTBF of one node (host DRAM / PSU / kernel), hours.
+    pub mtbf_node_h: f64,
+    /// Per-step probability that some rank straggles the whole step.
+    pub straggler_prob: f64,
+    /// Step-time multiplier when a straggler strikes (>= 1).
+    pub straggler_mult: f64,
+    /// Per-writer checkpoint write bandwidth to the parallel FS, GB/s.
+    pub ckpt_write_gbs: f64,
+    /// Per-reader restore bandwidth, GB/s.
+    pub ckpt_read_gbs: f64,
+    /// Fixed restart overhead beyond state restore (rendezvous, NCCL
+    /// re-init, scheduler requeue), seconds.
+    pub restart_overhead_s: f64,
+}
+
+impl FaultSpec {
+    /// The degenerate fault-free spec: nothing fails, nobody straggles.
+    pub fn off() -> FaultSpec {
+        FaultSpec {
+            mtbf_gpu_h: 0.0,
+            mtbf_nic_h: 0.0,
+            mtbf_link_h: 0.0,
+            mtbf_node_h: 0.0,
+            straggler_prob: 0.0,
+            straggler_mult: 1.0,
+            ckpt_write_gbs: 5.0,
+            ckpt_read_gbs: 10.0,
+            restart_overhead_s: 120.0,
+        }
+    }
+
+    /// Production-flavored defaults (per-component rates in the range
+    /// published large-scale training postmortems report; the `--faults
+    /// spec` CLI baseline, individually overridable).
+    pub fn production() -> FaultSpec {
+        FaultSpec {
+            mtbf_gpu_h: 40_000.0,
+            mtbf_nic_h: 200_000.0,
+            mtbf_link_h: 500_000.0,
+            mtbf_node_h: 150_000.0,
+            straggler_prob: 0.02,
+            straggler_mult: 1.15,
+            ckpt_write_gbs: 5.0,
+            ckpt_read_gbs: 10.0,
+            restart_overhead_s: 120.0,
+        }
+    }
+
+    /// True when no failure source and no straggler layer is active —
+    /// the spec that must reproduce fault-free outputs bit-identically.
+    pub fn is_off(&self) -> bool {
+        self.mtbf_gpu_h == 0.0
+            && self.mtbf_nic_h == 0.0
+            && self.mtbf_link_h == 0.0
+            && self.mtbf_node_h == 0.0
+            && (self.straggler_prob == 0.0 || self.straggler_mult <= 1.0)
+    }
+
+    /// Aggregate job failure rate, failures per second, over a census.
+    /// Independent exponential components superpose: `λ = Σ nᵢ/MTBFᵢ`.
+    pub fn failure_rate_per_s(&self, census: &ComponentCensus) -> f64 {
+        let rate_h = |count: usize, mtbf_h: f64| {
+            if mtbf_h > 0.0 {
+                count as f64 / mtbf_h
+            } else {
+                0.0
+            }
+        };
+        (rate_h(census.gpus, self.mtbf_gpu_h)
+            + rate_h(census.nics, self.mtbf_nic_h)
+            + rate_h(census.fabric_links, self.mtbf_link_h)
+            + rate_h(census.nodes, self.mtbf_node_h))
+            / 3600.0
+    }
+
+    /// Expected step-time dilation from the straggler layer: with
+    /// probability `p` the whole step runs at `mult`× (the batch is gated
+    /// by its slowest rank), so `E[mult] = 1 + p·(mult − 1)`.
+    pub fn straggler_dilation(&self) -> f64 {
+        1.0 + self.straggler_prob.clamp(0.0, 1.0) * (self.straggler_mult.max(1.0) - 1.0)
+    }
+}
+
+/// Failure-exposed component counts of one job footprint, derived from
+/// the cluster graph tiers (see [`ClusterTopology::fault_census`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ComponentCensus {
+    pub gpus: usize,
+    pub nodes: usize,
+    /// One injection NIC modeled per node.
+    pub nics: usize,
+    /// Fabric links exposed to the job: rail uplinks (one per node) plus
+    /// spine crossings (one per rail group) when the topology has a
+    /// spine tier.
+    pub fabric_links: usize,
+}
+
+impl ComponentCensus {
+    /// Census of a parallel strategy's footprint on a platform.
+    pub fn of(par: &ParallelCfg, platform: &Platform) -> ComponentCensus {
+        ClusterTopology::of(platform).fault_census(par.gpus())
+    }
+}
+
+/// The fault/checkpoint knobs a goodput sweep crosses with the strategy
+/// space: the spec plus the checkpoint cadence in steps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub spec: FaultSpec,
+    /// Steps of useful work between checkpoints (>= 1).
+    pub ckpt_interval_steps: usize,
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec, ckpt_interval_steps: usize) -> FaultPlan {
+        FaultPlan { spec, ckpt_interval_steps: ckpt_interval_steps.max(1) }
+    }
+}
+
+/// Everything the closed form and the event simulation need about ONE
+/// configuration, fully resolved to seconds and rates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GoodputParams {
+    /// Fault-free step wall time, seconds (the predictor's `total_us`).
+    pub step_s: f64,
+    /// Useful steps between checkpoints.
+    pub ckpt_interval_steps: usize,
+    /// Checkpoint write stall, seconds (critical-path writer).
+    pub ckpt_write_s: f64,
+    /// Restart cost: state restore + fixed overhead + one re-warm-up
+    /// step, seconds.
+    pub restart_s: f64,
+    /// Aggregate failure rate, per second.
+    pub failure_rate_per_s: f64,
+    /// Per-step straggler probability / multiplier (see [`FaultSpec`]).
+    pub straggler_prob: f64,
+    pub straggler_mult: f64,
+    /// Fraction of a fault-free step that is irreducible compute (ideal
+    /// FLOP time / step time) — scales goodput into useful-FLOP terms.
+    pub compute_frac: f64,
+}
+
+impl GoodputParams {
+    /// Resolve a (model, strategy, platform, plan) into simulation
+    /// parameters, given the fault-free predicted step seconds. The
+    /// checkpoint volume rides the ZeRO-1 DP-shard write path: the
+    /// critical-path writer (dp rank 0 of the worst stage) writes its
+    /// fp16 params + its optimizer shard; restore reads the same.
+    pub fn resolve(
+        model: &ModelCfg,
+        par: &ParallelCfg,
+        platform: &Platform,
+        plan: &FaultPlan,
+        step_s: f64,
+    ) -> GoodputParams {
+        let vol = memory::checkpoint_volume(model, par, platform);
+        let spec = &plan.spec;
+        let write_s = if spec.ckpt_write_gbs > 0.0 {
+            vol.total_bytes() / (spec.ckpt_write_gbs * 1e9)
+        } else {
+            0.0
+        };
+        let read_s = if spec.ckpt_read_gbs > 0.0 {
+            vol.total_bytes() / (spec.ckpt_read_gbs * 1e9)
+        } else {
+            0.0
+        };
+        let census = ComponentCensus::of(par, platform);
+        let compute_floor_s =
+            crate::baselines::analytical::compute_floor_us(model, par, platform) / 1e6;
+        let compute_frac = ratio_or_zero(compute_floor_s, step_s).min(1.0);
+        GoodputParams {
+            step_s,
+            ckpt_interval_steps: plan.ckpt_interval_steps.max(1),
+            ckpt_write_s: write_s,
+            // re-warm-up: the first step after a restart refills caches /
+            // re-JITs kernels — modeled as one extra step on top of the
+            // restore read and the fixed overhead
+            restart_s: read_s + spec.restart_overhead_s + step_s,
+            failure_rate_per_s: spec.failure_rate_per_s(&census),
+            straggler_prob: spec.straggler_prob.clamp(0.0, 1.0),
+            straggler_mult: spec.straggler_mult.max(1.0),
+            compute_frac,
+        }
+    }
+
+    /// Straggler-dilated expected step seconds.
+    pub fn dilated_step_s(&self) -> f64 {
+        self.step_s * (1.0 + self.straggler_prob * (self.straggler_mult - 1.0))
+    }
+}
+
+/// `num / den` with the zero/NaN-denominator guard every rate helper in
+/// this crate uses (`SweepReport::configs_per_sec` pattern): returns 0.0
+/// instead of inf/NaN when the denominator is not strictly positive.
+pub fn ratio_or_zero(num: f64, den: f64) -> f64 {
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Closed-form goodput estimate (all ratios zero-denominator-guarded and
+/// total-orderable: never NaN for finite non-negative inputs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GoodputEstimate {
+    /// Committed fault-free step time / expected wall time — the
+    /// fraction of wall-clock producing surviving work. 1.0 when faults
+    /// are off and no checkpoints are written.
+    pub goodput_frac: f64,
+    /// `goodput_frac` × the step's irreducible-compute fraction: the
+    /// fraction of wall-clock doing ideal-peak FLOPs that survive.
+    pub useful_flop_frac: f64,
+    /// Checkpoint-write stalls as a fraction of a failure-free segment
+    /// (`δ / (τ + δ)`).
+    pub ckpt_overhead_frac: f64,
+    /// Expected failures per 24 h of wall-clock.
+    pub failures_per_day: f64,
+    /// Young's optimal checkpoint interval `√(2δ/λ)` in seconds of
+    /// useful work (`f64::INFINITY` when nothing fails — never
+    /// checkpoint).
+    pub optimal_ckpt_interval_s: f64,
+}
+
+/// First-order optimal-checkpoint-interval-style approximation.
+///
+/// With τ = dilated useful seconds per segment, δ = checkpoint write, R
+/// = restart cost and λ = failure rate: a failure-free segment costs
+/// `τ + δ`; failures arrive at rate λ, each costing `R` plus on average
+/// half the segment re-done, so
+///
+/// ```text
+/// E[wall per segment] ≈ (τ + δ) · (1 + λ·(R + (τ + δ)/2))
+/// goodput = n·step_s / E[wall per segment]
+/// ```
+///
+/// First-order in `λ(τ+δ)` and `λR`: valid (within [`CLOSED_FORM_RTOL`]
+/// of the event sim) while expected failures per segment stay ≲ 0.2 and
+/// the restart cost stays small against the failure spacing (`λR ≲
+/// 0.2`); outside that, trust [`simulate`].
+pub fn closed_form(p: &GoodputParams) -> GoodputEstimate {
+    let n = p.ckpt_interval_steps.max(1) as f64;
+    let tau = n * p.dilated_step_s();
+    let delta = p.ckpt_write_s.max(0.0);
+    let lambda = p.failure_rate_per_s.max(0.0);
+    let segment = tau + delta;
+    let wall = segment * (1.0 + lambda * (p.restart_s.max(0.0) + segment / 2.0));
+    let committed = n * p.step_s;
+    // faults fully off AND checkpointing free: exact identity 1.0
+    let goodput_frac = ratio_or_zero(committed, wall).min(1.0);
+    GoodputEstimate {
+        goodput_frac,
+        useful_flop_frac: goodput_frac * p.compute_frac.clamp(0.0, 1.0),
+        ckpt_overhead_frac: ratio_or_zero(delta, segment),
+        failures_per_day: lambda * 86_400.0,
+        optimal_ckpt_interval_s: if lambda > 0.0 && delta > 0.0 {
+            (2.0 * delta / lambda).sqrt()
+        } else {
+            f64::INFINITY
+        },
+    }
+}
+
+/// One event in a simulated fault trace (deterministic given the seed —
+/// the determinism property test asserts bit-identical traces).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// A step straggled: it ran at `mult`× the base step time.
+    Straggle { step: usize },
+    /// A checkpoint was written after `step` committed steps.
+    Checkpoint { step: usize, at_s: f64 },
+    /// A component failed at wall-clock `at_s`; `lost_steps` of work
+    /// since the last checkpoint were discarded and the restart cost
+    /// paid.
+    Failure { at_s: f64, lost_steps: usize },
+}
+
+/// Outcome of one simulated run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimOutcome {
+    /// Steps that survived to a checkpoint (== requested steps).
+    pub committed_steps: usize,
+    /// Total wall-clock, seconds.
+    pub wall_s: f64,
+    pub failures: usize,
+    pub stragglers: usize,
+    pub checkpoints: usize,
+    /// The full deterministic event trace.
+    pub events: Vec<FaultEvent>,
+}
+
+impl SimOutcome {
+    /// Measured goodput: committed fault-free step time over wall-clock
+    /// (zero-denominator-guarded like every rate helper here).
+    pub fn goodput_frac(&self, step_s: f64) -> f64 {
+        ratio_or_zero(self.committed_steps as f64 * step_s, self.wall_s)
+    }
+}
+
+/// Event-granular fault simulation: run `steps` useful steps to
+/// completion, checkpointing every `ckpt_interval_steps`, with
+/// exponential failure inter-arrivals (`Rng`-driven, replayable), the
+/// straggler layer on each step, and restart semantics — roll back to
+/// the last checkpoint, pay restore + fixed overhead + one re-warm-up
+/// step. A failure can also strike during a checkpoint write, voiding
+/// it.
+///
+/// The trailing partial segment is checkpointed too (the run must end
+/// committed), matching the closed form's per-segment accounting.
+pub fn simulate(p: &GoodputParams, steps: usize, seed: u64) -> SimOutcome {
+    let mut rng = Rng::new(seed ^ 0xFA_07_5E_ED);
+    let lambda = p.failure_rate_per_s.max(0.0);
+    let mut draw_fail = |rng: &mut Rng, now: f64| -> f64 {
+        if lambda > 0.0 {
+            // inverse-CDF exponential; 1-f64() is in (0, 1], ln finite
+            now - (1.0 - rng.f64()).ln() / lambda
+        } else {
+            f64::INFINITY
+        }
+    };
+    let interval = p.ckpt_interval_steps.max(1);
+    let mut t = 0.0f64;
+    let mut committed = 0usize;
+    let mut uncommitted = 0usize;
+    let mut events = Vec::new();
+    let (mut failures, mut stragglers, mut checkpoints) = (0usize, 0usize, 0usize);
+    let mut next_fail = draw_fail(&mut rng, 0.0);
+    while committed < steps {
+        let straggle = p.straggler_prob > 0.0 && rng.chance(p.straggler_prob);
+        let step_t = if straggle { p.step_s * p.straggler_mult } else { p.step_s };
+        if t + step_t >= next_fail {
+            // failure mid-step: work since the last checkpoint is lost
+            t = next_fail + p.restart_s;
+            failures += 1;
+            events.push(FaultEvent::Failure { at_s: next_fail, lost_steps: uncommitted });
+            uncommitted = 0;
+            next_fail = draw_fail(&mut rng, t);
+            continue;
+        }
+        if straggle {
+            stragglers += 1;
+            events.push(FaultEvent::Straggle { step: committed + uncommitted });
+        }
+        t += step_t;
+        uncommitted += 1;
+        if uncommitted == interval || committed + uncommitted == steps {
+            // the write window is failure-exposed: a failure inside it
+            // voids the checkpoint and re-does the whole segment
+            if t + p.ckpt_write_s >= next_fail {
+                t = next_fail + p.restart_s;
+                failures += 1;
+                events.push(FaultEvent::Failure { at_s: next_fail, lost_steps: uncommitted });
+                uncommitted = 0;
+                next_fail = draw_fail(&mut rng, t);
+                continue;
+            }
+            t += p.ckpt_write_s;
+            committed += uncommitted;
+            uncommitted = 0;
+            checkpoints += 1;
+            events.push(FaultEvent::Checkpoint { step: committed, at_s: t });
+        }
+    }
+    SimOutcome { committed_steps: committed, wall_s: t, failures, stragglers, checkpoints, events }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(step_s: f64, lambda: f64, interval: usize) -> GoodputParams {
+        GoodputParams {
+            step_s,
+            ckpt_interval_steps: interval,
+            ckpt_write_s: 8.0,
+            restart_s: 200.0,
+            failure_rate_per_s: lambda,
+            straggler_prob: 0.0,
+            straggler_mult: 1.0,
+            compute_frac: 0.5,
+        }
+    }
+
+    #[test]
+    fn off_spec_is_exact_identity() {
+        let spec = FaultSpec::off();
+        assert!(spec.is_off());
+        assert_eq!(spec.straggler_dilation(), 1.0);
+        let census = ComponentCensus { gpus: 4096, nodes: 1024, nics: 1024, fabric_links: 1100 };
+        assert_eq!(spec.failure_rate_per_s(&census), 0.0);
+        // zero write cost + zero rate -> goodput exactly 1.0
+        let mut p = params(20.0, 0.0, 16);
+        p.ckpt_write_s = 0.0;
+        let est = closed_form(&p);
+        assert_eq!(est.goodput_frac, 1.0);
+        assert_eq!(est.ckpt_overhead_frac, 0.0);
+        assert_eq!(est.failures_per_day, 0.0);
+        assert!(est.optimal_ckpt_interval_s.is_infinite());
+    }
+
+    #[test]
+    fn ratios_are_guarded_and_total_orderable() {
+        // zero denominators -> 0.0, never NaN/inf (the pruned_frac
+        // contract), so total_cmp sorts of goodput columns are safe
+        assert_eq!(ratio_or_zero(5.0, 0.0), 0.0);
+        assert_eq!(ratio_or_zero(0.0, 0.0), 0.0);
+        assert_eq!(ratio_or_zero(5.0, -1.0), 0.0);
+        let degenerate = params(0.0, 0.0, 1);
+        let est = closed_form(&degenerate);
+        assert!(est.goodput_frac.is_finite() && est.useful_flop_frac.is_finite());
+        assert!(est.ckpt_overhead_frac.is_finite());
+        let outcome = SimOutcome {
+            committed_steps: 0,
+            wall_s: 0.0,
+            failures: 0,
+            stragglers: 0,
+            checkpoints: 0,
+            events: Vec::new(),
+        };
+        assert_eq!(outcome.goodput_frac(0.0), 0.0);
+    }
+
+    #[test]
+    fn closed_form_monotone_in_failure_rate() {
+        let lo = closed_form(&params(20.0, 1e-6, 16));
+        let hi = closed_form(&params(20.0, 1e-4, 16));
+        assert!(lo.goodput_frac > hi.goodput_frac, "{} vs {}", lo.goodput_frac, hi.goodput_frac);
+        assert!(hi.failures_per_day > lo.failures_per_day);
+        // Young's interval shrinks as failures get more frequent
+        assert!(hi.optimal_ckpt_interval_s < lo.optimal_ckpt_interval_s);
+    }
+
+    #[test]
+    fn simulation_is_deterministic_and_seed_sensitive() {
+        let p = params(20.0, 5e-5, 16);
+        let a = simulate(&p, 2_000, 42);
+        let b = simulate(&p, 2_000, 42);
+        // bit-identical trace, not just statistics
+        assert_eq!(a, b);
+        assert!(a.failures > 0, "rate high enough to observe failures");
+        let c = simulate(&p, 2_000, 43);
+        assert_ne!(a.events, c.events, "different seed, different trace");
+    }
+
+    #[test]
+    fn simulation_commits_all_steps_and_charges_restarts() {
+        let p = params(20.0, 5e-5, 16);
+        let out = simulate(&p, 500, 7);
+        assert_eq!(out.committed_steps, 500);
+        // wall >= useful + checkpoint stalls actually paid
+        let useful = 500.0 * p.step_s;
+        assert!(out.wall_s > useful, "wall {} useful {useful}", out.wall_s);
+        let g = out.goodput_frac(p.step_s);
+        assert!(g > 0.0 && g < 1.0, "{g}");
+    }
+
+    #[test]
+    fn closed_form_tracks_simulation_in_validity_regime() {
+        // λ(τ+δ) ≈ 0.017 — comfortably first-order; 40k steps ≈ 2.4k
+        // segments keeps the sampling error small
+        let p = params(20.0, 5e-5, 16);
+        let sim = simulate(&p, 40_000, 11);
+        let cf = closed_form(&p);
+        let rel = (sim.goodput_frac(p.step_s) - cf.goodput_frac).abs() / cf.goodput_frac;
+        assert!(rel < CLOSED_FORM_RTOL, "sim {} vs closed {}", sim.goodput_frac(p.step_s), cf.goodput_frac);
+    }
+
+    #[test]
+    fn straggler_layer_dilates_wall_clock() {
+        let mut p = params(20.0, 0.0, 16);
+        p.straggler_prob = 0.25;
+        p.straggler_mult = 1.5;
+        let out = simulate(&p, 4_000, 3);
+        assert!(out.stragglers > 500, "{}", out.stragglers);
+        let g = out.goodput_frac(p.step_s);
+        let expected = closed_form(&p).goodput_frac;
+        assert!((g - expected).abs() / expected < CLOSED_FORM_RTOL, "{g} vs {expected}");
+        // and the dilation helper matches the spec-level view
+        let mut spec = FaultSpec::off();
+        spec.straggler_prob = 0.25;
+        spec.straggler_mult = 1.5;
+        assert!((spec.straggler_dilation() - 1.125).abs() < 1e-12);
+        assert!(!spec.is_off());
+    }
+
+    #[test]
+    fn census_resolves_from_topology() {
+        let p = Platform::perlmutter(); // 4 GPUs/node, flat topo
+        let par = ParallelCfg::new(4, 4, 8); // 128 GPUs, 32 nodes
+        let c = ComponentCensus::of(&par, &p);
+        assert_eq!(c.gpus, 128);
+        assert_eq!(c.nodes, 32);
+        assert_eq!(c.nics, 32);
+        assert_eq!(c.fabric_links, 32, "flat topo: one rail uplink per node");
+        let rail = p.with_topo(crate::config::platform::TopoSpec::parse("rail:8").unwrap());
+        let c2 = ComponentCensus::of(&par, &rail);
+        assert_eq!(c2.fabric_links, 32 + 4, "4 rail groups add spine crossings");
+    }
+
+    #[test]
+    fn production_spec_failure_math() {
+        let spec = FaultSpec::production();
+        assert!(!spec.is_off());
+        let census = ComponentCensus { gpus: 128, nodes: 32, nics: 32, fabric_links: 32 };
+        let lam = spec.failure_rate_per_s(&census);
+        // 128/40k + 32/200k + 32/500k + 32/150k per hour ≈ 3.62e-3/h
+        let per_h = lam * 3600.0;
+        assert!((3.0e-3..4.5e-3).contains(&per_h), "{per_h}");
+    }
+}

@@ -31,6 +31,7 @@ pub mod trainrun;
 pub mod sampling;
 pub mod forest;
 pub mod predictor;
+pub mod faults;
 pub mod sweep;
 pub mod baselines;
 pub mod runtime;

@@ -437,6 +437,26 @@ impl ClusterTopology {
         NetPath { hops }
     }
 
+    /// Failure-exposed component counts of a `gpus`-wide job on this
+    /// graph (the fault model's census — see
+    /// [`faults::ComponentCensus`](crate::faults::ComponentCensus)):
+    /// one injection NIC and one rail uplink per occupied node, plus one
+    /// spine crossing per occupied rail group when a spine tier exists.
+    pub fn fault_census(&self, gpus: usize) -> crate::faults::ComponentCensus {
+        let nodes = gpus.div_ceil(self.gpus_per_node.max(1));
+        let rail_groups = if self.spine.is_some() && self.nodes_per_rail > 0 {
+            nodes.div_ceil(self.nodes_per_rail)
+        } else {
+            0
+        };
+        crate::faults::ComponentCensus {
+            gpus,
+            nodes,
+            nics: nodes,
+            fabric_links: nodes + rail_groups,
+        }
+    }
+
     /// Tier summary rows for `fgpm topo`: (name, bw GB/s, lat µs,
     /// link capacity).
     pub fn tier_rows(&self) -> Vec<(&'static str, f64, f64, f64)> {

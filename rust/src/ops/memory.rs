@@ -115,6 +115,39 @@ pub fn estimate(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> Mem
     worst
 }
 
+/// Per-writer checkpoint volume over the ZeRO-1 DP-shard write path,
+/// bytes. The critical-path writer is dp rank 0 of the worst stage: it
+/// writes the stage's fp16 model params AND its own optimizer shard
+/// (fp32 master + moments, `12 B/param / |dp|`); the other dp ranks only
+/// write their optimizer shards, so they finish first. Restore reads the
+/// same volume back. Activations and gradients are never checkpointed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CkptVolume {
+    /// fp16 model weights of the worst stage's (pp, mp) shard.
+    pub params_bytes: f64,
+    /// This rank's ZeRO-1 optimizer shard.
+    pub optimizer_bytes: f64,
+}
+
+impl CkptVolume {
+    pub fn total_bytes(&self) -> f64 {
+        self.params_bytes + self.optimizer_bytes
+    }
+
+    pub fn total_gib(&self) -> f64 {
+        self.total_bytes() / (1024.0 * 1024.0 * 1024.0)
+    }
+}
+
+/// Critical-path checkpoint volume of a strategy — derived from the same
+/// worst-stage residency [`estimate`] computes (params and optimizer
+/// state are exactly the checkpointed tensors; the schedule-dependent
+/// activation term plays no part).
+pub fn checkpoint_volume(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> CkptVolume {
+    let est = estimate(model, par, platform);
+    CkptVolume { params_bytes: est.params_bytes, optimizer_bytes: est.optimizer_bytes }
+}
+
 /// Does the strategy fit the platform's HBM (with a safety margin for
 /// framework overhead / fragmentation)?
 pub fn fits_memory(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> bool {
@@ -228,6 +261,22 @@ mod tests {
         let zb = estimate(&model, &base.with_schedule(ScheduleKind::ZbH1), &p);
         assert_eq!(f1.activation_bytes, zb.activation_bytes);
         assert_eq!(f1.total_bytes(), zb.total_bytes());
+    }
+
+    #[test]
+    fn checkpoint_volume_rides_the_dp_shard_path() {
+        let model = ModelCfg::gpt20b();
+        let p = Platform::perlmutter();
+        let dp2 = checkpoint_volume(&model, &ParallelCfg::new(4, 4, 2), &p);
+        let dp8 = checkpoint_volume(&model, &ParallelCfg::new(4, 4, 8), &p);
+        // params are NOT dp-sharded; the optimizer shard is
+        assert_eq!(dp2.params_bytes, dp8.params_bytes);
+        assert!((dp8.optimizer_bytes - dp2.optimizer_bytes / 4.0).abs() / dp2.optimizer_bytes < 0.01);
+        // volumes mirror the residency estimate exactly (same tensors)
+        let est = estimate(&model, &ParallelCfg::new(4, 4, 8), &p);
+        assert_eq!(dp8.params_bytes, est.params_bytes);
+        assert_eq!(dp8.optimizer_bytes, est.optimizer_bytes);
+        assert!(dp8.total_gib() > 1.0, "{}", dp8.total_gib());
     }
 
     #[test]

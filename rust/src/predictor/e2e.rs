@@ -58,6 +58,12 @@ impl ComponentPrediction {
     pub fn stage_bwd_max(&self) -> f64 {
         self.stage_bwd_us.iter().cloned().fold(0.0, f64::max)
     }
+
+    /// End-to-end batch time in seconds — the unit the fault/goodput
+    /// layer works in ([`crate::faults::GoodputParams::step_s`]).
+    pub fn total_seconds(&self) -> f64 {
+        self.total_us / 1e6
+    }
 }
 
 /// Every operator a set of stage plans predicts, in deterministic plan

@@ -40,6 +40,7 @@ pub fn sweep_table_text(
     rows: &[(String, f64, f64)],
     skipped_oom: usize,
     skipped_sched: usize,
+    skipped_microbatch: usize,
     hbm_gib: f64,
 ) -> String {
     let mut s = format!("{title}\n");
@@ -63,6 +64,98 @@ pub fn sweep_table_text(
             "({skipped_sched} strategies skipped: schedule rejects geometry)\n"
         ));
     }
+    if skipped_microbatch > 0 {
+        s.push_str(&format!(
+            "({skipped_microbatch} strategies skipped: too few micro-batches for pipeline depth)\n"
+        ));
+    }
+    s
+}
+
+/// The fault-mode sweep table: the plain ranked rows plus the closed-form
+/// goodput columns. Row tuples are `(label, seconds, mem_gib,
+/// goodput_frac, useful_flop_frac, ckpt_overhead_frac)` — the same shape
+/// the coordinator's fault-mode row JSON carries, so the local engine
+/// path and `sweep --remote` render byte-identically.
+pub fn goodput_sweep_table_text(
+    title: &str,
+    rows: &[(String, f64, f64, f64, f64, f64)],
+    skipped_oom: usize,
+    skipped_sched: usize,
+    skipped_microbatch: usize,
+    hbm_gib: f64,
+) -> String {
+    let mut s = format!("{title}\n");
+    for (i, (label, seconds, mem_gib, goodput, useful, ckpt)) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "{:>2}. {:<9} {:>8.2} s   {:>5.1} GiB/GPU   good {:>5.1}%  useful {:>5.1}%  ckpt {:>4.1}%{}\n",
+            i + 1,
+            label,
+            seconds,
+            mem_gib,
+            goodput * 100.0,
+            useful * 100.0,
+            ckpt * 100.0,
+            if i == 0 { "   <- best" } else { "" }
+        ));
+    }
+    if skipped_oom > 0 {
+        s.push_str(&format!(
+            "({skipped_oom} strategies skipped: exceed {hbm_gib} GiB HBM)\n"
+        ));
+    }
+    if skipped_sched > 0 {
+        s.push_str(&format!(
+            "({skipped_sched} strategies skipped: schedule rejects geometry)\n"
+        ));
+    }
+    if skipped_microbatch > 0 {
+        s.push_str(&format!(
+            "({skipped_microbatch} strategies skipped: too few micro-batches for pipeline depth)\n"
+        ));
+    }
+    s
+}
+
+/// The `fgpm goodput` grid: closed-form goodput fraction over checkpoint
+/// interval (rows) × GPU MTBF (columns), with the per-column Young
+/// optimum `√(2δ/λ)` annotated under the table and the best cell marked.
+pub fn goodput_grid_text(
+    title: &str,
+    interval_steps: &[usize],
+    mtbf_hours: &[f64],
+    goodput: &[Vec<f64>],
+    optimal_interval_s: &[f64],
+) -> String {
+    let mut s = format!("{title}\n");
+    s.push_str(&format!("{:>12}", "ckpt every"));
+    for m in mtbf_hours {
+        s.push_str(&format!("  {:>11}", format!("mtbf {m:.0}h")));
+    }
+    s.push('\n');
+    // best cell: max goodput, first (shortest interval, smallest mtbf) on ties
+    let mut best = (0usize, 0usize, f64::NEG_INFINITY);
+    for (i, row) in goodput.iter().enumerate() {
+        for (j, &g) in row.iter().enumerate() {
+            if g.total_cmp(&best.2).is_gt() {
+                best = (i, j, g);
+            }
+        }
+    }
+    for (i, (&steps, row)) in interval_steps.iter().zip(goodput).enumerate() {
+        s.push_str(&format!("{:>12}", format!("{steps} steps")));
+        for (j, &g) in row.iter().enumerate() {
+            let mark = if (i, j) == (best.0, best.1) { '*' } else { ' ' };
+            s.push_str(&format!("  {:>10.2}%{mark}", g * 100.0));
+        }
+        s.push('\n');
+    }
+    s.push_str(&format!("{:>12}", "Young opt"));
+    for &t in optimal_interval_s {
+        let cell = if t.is_finite() { format!("{t:.0} s") } else { "∞".to_string() };
+        s.push_str(&format!("  {cell:>11}"));
+    }
+    s.push_str("\n(* best closed-form goodput; Young opt = √(2·ckpt_write/λ) wall-clock interval)\n");
     s
 }
 
@@ -134,11 +227,14 @@ pub fn schedule_compare_markdown(
         .collect();
     let engine = crate::sweep::Engine::new();
     let mut oracle = crate::predictor::e2e::OraclePredictor { platform: platform.clone() };
+    // a worker panic degrades the predicted column to "—" instead of
+    // failing the whole comparison (the simulated columns stand alone)
     let predicted: std::collections::HashMap<ScheduleKind, f64> = engine
         .evaluate(model, platform, &valid, &mut oracle)
-        .into_iter()
-        .map(|row| (row.par.schedule, row.prediction.total_us))
-        .collect();
+        .map(|rows| {
+            rows.into_iter().map(|row| (row.par.schedule, row.prediction.total_us)).collect()
+        })
+        .unwrap_or_default();
     // one executor across every schedule's batches and counterfactuals
     let mut exec = Executor::new();
     let mut rows = Vec::new();
@@ -538,7 +634,7 @@ mod tests {
             ("2-2-4".to_string(), 12.3456, 5.67),
             ("4-2-2/gpipe".to_string(), 13.0, 6.0),
         ];
-        let t = sweep_table_text("demo — predicted batch seconds:", &rows, 2, 1, 40.0);
+        let t = sweep_table_text("demo — predicted batch seconds:", &rows, 2, 1, 0, 40.0);
         let lines: Vec<&str> = t.lines().collect();
         assert_eq!(lines.len(), 5);
         assert_eq!(lines[0], "demo — predicted batch seconds:");
@@ -549,8 +645,54 @@ mod tests {
         assert_eq!(lines[3], "(2 strategies skipped: exceed 40 GiB HBM)");
         assert_eq!(lines[4], "(1 strategies skipped: schedule rejects geometry)");
         // skip footers vanish when nothing was skipped
-        let t0 = sweep_table_text("t", &rows, 0, 0, 40.0);
+        let t0 = sweep_table_text("t", &rows, 0, 0, 0, 40.0);
         assert_eq!(t0.lines().count(), 3);
+        // the new micro-batch footer is invisible at zero, visible above it
+        let tm = sweep_table_text("t", &rows, 0, 0, 3, 40.0);
+        assert_eq!(tm.lines().count(), 4);
+        assert_eq!(
+            tm.lines().last().unwrap(),
+            "(3 strategies skipped: too few micro-batches for pipeline depth)"
+        );
+    }
+
+    #[test]
+    fn goodput_sweep_table_text_shape() {
+        let rows = vec![
+            ("2-2-4".to_string(), 12.3456, 5.67, 0.934, 0.801, 0.021),
+            ("4-2-2".to_string(), 13.0, 6.0, 0.91, 0.78, 0.03),
+        ];
+        let t = goodput_sweep_table_text("demo:", &rows, 0, 0, 2, 40.0);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[1].contains("good  93.4%"), "{}", lines[1]);
+        assert!(lines[1].contains("useful  80.1%"), "{}", lines[1]);
+        assert!(lines[1].contains("ckpt  2.1%"), "{}", lines[1]);
+        assert!(lines[1].ends_with("<- best"));
+        assert_eq!(
+            lines[3],
+            "(2 strategies skipped: too few micro-batches for pipeline depth)"
+        );
+    }
+
+    #[test]
+    fn goodput_grid_text_marks_best_cell_and_young_optimum() {
+        let t = goodput_grid_text(
+            "goodput grid:",
+            &[16, 64],
+            &[10_000.0, 40_000.0],
+            &[vec![0.90, 0.95], vec![0.88, 0.97]],
+            &[1200.0, f64::INFINITY],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 6, "{t}");
+        assert!(lines[1].contains("mtbf 10000h"), "{t}");
+        // exactly one best-cell marker, on the 0.97 cell
+        assert_eq!(t.matches('%').count(), 4, "{t}"); // one per grid cell
+        assert_eq!(t.matches("%*").count(), 1, "{t}");
+        assert!(lines[3].contains("97.00%*"), "{t}");
+        assert!(lines[4].contains("1200 s"), "{t}");
+        assert!(lines[4].contains('∞'), "{t}");
     }
 
     #[test]

@@ -67,6 +67,11 @@ pub struct SweepSpec {
     /// default). `false` is the `--no-prune` escape hatch: evaluate
     /// everything, then truncate — bit-identical rows, no skipping.
     pub prune: bool,
+    /// Fault/checkpoint model to annotate rows with (`--faults spec`).
+    /// `None` (the default) is the exact fault-free path: no goodput
+    /// columns, every output bit-identical to a spec without the field
+    /// (the annotation NEVER modifies `total_us` — property-tested).
+    pub faults: Option<crate::faults::FaultPlan>,
 }
 
 impl SweepSpec {
@@ -82,8 +87,40 @@ impl SweepSpec {
             p2p_overlap: 0.0,
             top_k: None,
             prune: true,
+            faults: None,
         }
     }
+}
+
+/// A sweep failed on one configuration: a scoped evaluation worker (or
+/// the shared prefetch phase) panicked. Carrying the offending config's
+/// label lets callers — the CLI, and especially the coordinator serving
+/// sweeps over TCP — report WHICH config died instead of aborting the
+/// whole process (and poisoning the connection) on one bad composition.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SweepError {
+    /// Label of the config whose evaluation panicked, or `"<prefetch>"`
+    /// when the shared phase-A batch prediction died.
+    pub label: String,
+    /// The downcast panic payload (or a generic marker).
+    pub detail: String,
+}
+
+impl std::fmt::Display for SweepError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "sweep failed at config {}: {}", self.label, self.detail)
+    }
+}
+
+impl std::error::Error for SweepError {}
+
+/// Best-effort stringification of a caught panic payload.
+fn panic_detail(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "evaluation worker panicked".to_string())
 }
 
 /// One evaluated configuration.
@@ -93,12 +130,16 @@ pub struct SweepRow {
     pub prediction: ComponentPrediction,
     /// Estimated per-GPU memory, GiB.
     pub mem_gib: f64,
+    /// Closed-form goodput annotation — `Some` only when the spec carried
+    /// a [`crate::faults::FaultPlan`]. Annotated AFTER ranking: faults
+    /// never perturb `prediction` or the sort order.
+    pub goodput: Option<crate::faults::GoodputEstimate>,
 }
 
 impl SweepRow {
     /// Predicted batch seconds (the ranking key).
     pub fn seconds(&self) -> f64 {
-        self.prediction.total_us / 1e6
+        self.prediction.total_seconds()
     }
 }
 
@@ -110,6 +151,10 @@ pub struct SweepReport {
     pub skipped_oom: usize,
     /// Strategies skipped because the schedule rejects the geometry.
     pub skipped_sched: usize,
+    /// Strategies skipped because the pipeline is deeper than the
+    /// micro-batch count (`iters_per_update < pp`). Historically dropped
+    /// silently — every other filter has a counter; now this one does too.
+    pub skipped_microbatch: usize,
     /// Configs that went through full lowering + composition.
     pub evaluated: usize,
     /// Configs skipped because their admissible lower bound exceeded the
@@ -145,19 +190,55 @@ impl SweepReport {
             self.pruned as f64 / total as f64
         }
     }
+
+    /// The row with the best (largest) goodput fraction, if any row
+    /// carries a fault annotation. Ties resolve to the earlier (faster)
+    /// row; `total_cmp` keeps the scan total-ordered even on NaN.
+    pub fn best_goodput_row(&self) -> Option<&SweepRow> {
+        self.rows
+            .iter()
+            .filter(|r| r.goodput.is_some())
+            .max_by(|a, b| {
+                let ga = a.goodput.as_ref().map(|g| g.goodput_frac).unwrap_or(0.0);
+                let gb = b.goodput.as_ref().map(|g| g.goodput_frac).unwrap_or(0.0);
+                ga.total_cmp(&gb)
+            })
+    }
+
+    /// Best goodput fraction across annotated rows; 0.0 when the sweep is
+    /// empty or ran fault-free (same guard contract as [`pruned_frac`](Self::pruned_frac)).
+    pub fn best_goodput_frac(&self) -> f64 {
+        self.best_goodput_row().and_then(|r| r.goodput.as_ref()).map(|g| g.goodput_frac).unwrap_or(0.0)
+    }
+
+    /// Useful-FLOP fraction of the best-goodput row; 0.0 when absent.
+    pub fn best_useful_flop_frac(&self) -> f64 {
+        self.best_goodput_row()
+            .and_then(|r| r.goodput.as_ref())
+            .map(|g| g.useful_flop_frac)
+            .unwrap_or(0.0)
+    }
+
+    /// Checkpoint-overhead fraction of the best-goodput row; 0.0 when absent.
+    pub fn best_ckpt_overhead_frac(&self) -> f64 {
+        self.best_goodput_row()
+            .and_then(|r| r.goodput.as_ref())
+            .map(|g| g.ckpt_overhead_frac)
+            .unwrap_or(0.0)
+    }
 }
 
 /// Enumerate the feasible members of the cross-product, in deterministic
 /// (degrees, schedule, rank-order) order, with the same filters the
 /// historical serial sweep applied. Returns (configs, skipped_oom,
-/// skipped_sched).
+/// skipped_sched, skipped_microbatch).
 pub fn feasible_configs(
     model: &ModelCfg,
     platform: &Platform,
     spec: &SweepSpec,
-) -> (Vec<ParallelCfg>, usize, usize) {
+) -> (Vec<ParallelCfg>, usize, usize, usize) {
     let mut cfgs = Vec::new();
-    let (mut skipped_oom, mut skipped_sched) = (0usize, 0usize);
+    let (mut skipped_oom, mut skipped_sched, mut skipped_microbatch) = (0usize, 0usize, 0usize);
     for par in ParallelCfg::enumerate_schedules(spec.gpus, spec.max_pp, spec.max_mp, &spec.schedules)
     {
         // every filter below is placement-independent, so it runs (and
@@ -168,6 +249,7 @@ pub fn feasible_configs(
             continue;
         }
         if model.iters_per_update < par.pp {
+            skipped_microbatch += 1;
             continue; // deep pipelines need enough micro-batches
         }
         if par.validate_schedule(model.iters_per_update).is_err() {
@@ -182,7 +264,7 @@ pub fn feasible_configs(
             cfgs.push(par.with_rank_order(order));
         }
     }
-    (cfgs, skipped_oom, skipped_sched)
+    (cfgs, skipped_oom, skipped_sched, skipped_microbatch)
 }
 
 /// The sweep engine: owns (or shares) the cross-config
@@ -238,30 +320,49 @@ impl Engine {
     /// prefetches the cross-config-deduped op union in one
     /// `predict_batch` round-trip per route; phase B composes each
     /// config on scoped worker threads from the cache alone.
+    ///
+    /// Per-config panics (a backend returning a short batch, a malformed
+    /// plan) are caught at the worker and surface as [`SweepError`]
+    /// naming the offending config — one bad composition no longer
+    /// aborts the process (or a served coordinator connection). On
+    /// error the FIRST failing config in input order wins, so the
+    /// reported label is deterministic regardless of worker interleaving.
     pub fn evaluate(
         &self,
         model: &ModelCfg,
         platform: &Platform,
         cfgs: &[ParallelCfg],
         pred: &mut dyn BatchPredictor,
-    ) -> Vec<SweepRow> {
+    ) -> Result<Vec<SweepRow>, SweepError> {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
         if cfgs.is_empty() {
-            return Vec::new();
+            return Ok(Vec::new());
         }
-        let plans: Vec<Vec<StagePlan>> = cfgs
-            .iter()
-            .map(|par| stage_plans_mode(model, par, platform, /*paper_params=*/ true))
-            .collect();
-        self.prefetch(&plans, pred);
+        // Phase A: plan building + the shared batched prefetch. A panic
+        // here is not attributable to one config (the op union is
+        // cross-config), so it carries the `<prefetch>` marker label.
+        let plans: Vec<Vec<StagePlan>> = catch_unwind(AssertUnwindSafe(|| {
+            let plans: Vec<Vec<StagePlan>> = cfgs
+                .iter()
+                .map(|par| stage_plans_mode(model, par, platform, /*paper_params=*/ true))
+                .collect();
+            self.prefetch(&plans, pred);
+            plans
+        }))
+        .map_err(|payload| SweepError {
+            label: "<prefetch>".to_string(),
+            detail: panic_detail(payload),
+        })?;
 
         // Phase B: shard configs across scoped workers; slot results by
         // index so output order (and therefore every downstream sort) is
         // deterministic regardless of worker interleaving.
-        let mut out: Vec<Option<SweepRow>> = (0..cfgs.len()).map(|_| None).collect();
+        let mut out: Vec<Option<Result<SweepRow, SweepError>>> =
+            (0..cfgs.len()).map(|_| None).collect();
         let threads = self.threads.min(cfgs.len()).max(1);
         if threads == 1 {
             for (slot, (par, plans)) in out.iter_mut().zip(cfgs.iter().zip(plans.iter())) {
-                *slot = Some(self.eval_one(model, platform, par, plans));
+                *slot = Some(self.eval_one_caught(model, platform, par, plans));
             }
         } else {
             let chunk = cfgs.len().div_ceil(threads);
@@ -273,13 +374,30 @@ impl Engine {
                         for (slot, (par, plans)) in
                             slots.iter_mut().zip(pars.iter().zip(plan_chunk.iter()))
                         {
-                            *slot = Some(self.eval_one(model, platform, par, plans));
+                            *slot = Some(self.eval_one_caught(model, platform, par, plans));
                         }
                     });
                 }
             });
         }
-        out.into_iter().map(|r| r.expect("every slot filled")).collect()
+        out.into_iter()
+            .map(|r| r.expect("every slot filled"))
+            .collect::<Result<Vec<SweepRow>, SweepError>>()
+    }
+
+    /// [`Engine::eval_one`] behind a panic boundary: a worker panic
+    /// becomes `Err(SweepError)` labelled with the config that died.
+    fn eval_one_caught(
+        &self,
+        model: &ModelCfg,
+        platform: &Platform,
+        par: &ParallelCfg,
+        plans: &[StagePlan],
+    ) -> Result<SweepRow, SweepError> {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.eval_one(model, platform, par, plans)
+        }))
+        .map_err(|payload| SweepError { label: par.label(), detail: panic_detail(payload) })
     }
 
     /// Run the full cross-product sweep: enumerate + filter, evaluate
@@ -293,16 +411,17 @@ impl Engine {
         platform: &Platform,
         spec: &SweepSpec,
         pred: &mut dyn BatchPredictor,
-    ) -> SweepReport {
+    ) -> Result<SweepReport, SweepError> {
         let t0 = Instant::now();
         let before = self.cache.stats();
-        let (cfgs, skipped_oom, skipped_sched) = feasible_configs(model, platform, spec);
+        let (cfgs, skipped_oom, skipped_sched, skipped_microbatch) =
+            feasible_configs(model, platform, spec);
         let (mut rows, evaluated, pruned, bound_consults) = match spec.top_k {
             Some(k) if spec.prune && k > 0 => {
-                self.evaluate_top_k(model, platform, &cfgs, pred, k)
+                self.evaluate_top_k(model, platform, &cfgs, pred, k)?
             }
             _ => {
-                let rows = self.evaluate(model, platform, &cfgs, pred);
+                let rows = self.evaluate(model, platform, &cfgs, pred)?;
                 let n = rows.len();
                 (rows, n, 0, 0)
             }
@@ -311,10 +430,22 @@ impl Engine {
         if let Some(k) = spec.top_k {
             rows.truncate(k);
         }
-        SweepReport {
+        // Fault-mode annotation happens LAST, on the final ranked rows
+        // only: the fault layer reads `total_us`, never writes it, so the
+        // fault-free outputs above stay bit-identical by construction.
+        if let Some(plan) = &spec.faults {
+            for row in &mut rows {
+                let step_s = row.prediction.total_seconds();
+                let params =
+                    crate::faults::GoodputParams::resolve(model, &row.par, platform, plan, step_s);
+                row.goodput = Some(crate::faults::closed_form(&params));
+            }
+        }
+        Ok(SweepReport {
             rows,
             skipped_oom,
             skipped_sched,
+            skipped_microbatch,
             evaluated,
             pruned,
             bound_consults,
@@ -322,7 +453,7 @@ impl Engine {
             // the coordinator service reuses one engine across requests)
             cache: self.cache.stats().delta_since(&before),
             elapsed: t0.elapsed(),
-        }
+        })
     }
 
     /// Branch-and-bound top-k evaluation: score every config with the
@@ -347,9 +478,9 @@ impl Engine {
         cfgs: &[ParallelCfg],
         pred: &mut dyn BatchPredictor,
         k: usize,
-    ) -> (Vec<SweepRow>, usize, usize, usize) {
+    ) -> Result<(Vec<SweepRow>, usize, usize, usize), SweepError> {
         if cfgs.is_empty() {
-            return (Vec::new(), 0, 0, 0);
+            return Ok((Vec::new(), 0, 0, 0));
         }
         let bounds: Vec<f64> =
             cfgs.iter().map(|par| sweep_lower_bound_us(model, par, platform)).collect();
@@ -370,7 +501,7 @@ impl Engine {
             }
             let batch = &order[next..(next + chunk).min(order.len())];
             let batch_cfgs: Vec<ParallelCfg> = batch.iter().map(|&i| cfgs[i]).collect();
-            let rows = self.evaluate(model, platform, &batch_cfgs, pred);
+            let rows = self.evaluate(model, platform, &batch_cfgs, pred)?;
             kept.extend(batch.iter().copied().zip(rows));
             next += batch.len();
             if kept.len() >= k {
@@ -386,7 +517,7 @@ impl Engine {
             a.prediction.total_us.total_cmp(&b.prediction.total_us).then(ia.cmp(ib))
         });
         kept.truncate(k);
-        (kept.into_iter().map(|(_, row)| row).collect(), evaluated, pruned, bound_consults)
+        Ok((kept.into_iter().map(|(_, row)| row).collect(), evaluated, pruned, bound_consults))
     }
 
     /// Phase A: dedup distinct ops across ALL configs (counting one
@@ -432,7 +563,7 @@ impl Engine {
     ) -> SweepRow {
         let prediction = predict_prefetched(model, par, plans, &self.cache);
         let mem_gib = memory::estimate(model, par, platform).total_gib();
-        SweepRow { par: *par, prediction, mem_gib }
+        SweepRow { par: *par, prediction, mem_gib, goodput: None }
     }
 }
 
@@ -451,11 +582,11 @@ mod tests {
     #[test]
     fn sweep_matches_serial_predictions_and_counts_hits() {
         let (model, platform, spec) = small_spec();
-        let (cfgs, _, _) = feasible_configs(&model, &platform, &spec);
+        let (cfgs, _, _, _) = feasible_configs(&model, &platform, &spec);
         assert!(!cfgs.is_empty());
         let engine = Engine::new();
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        let report = engine.sweep(&model, &platform, &spec, &mut oracle);
+        let report = engine.sweep(&model, &platform, &spec, &mut oracle).unwrap();
         assert_eq!(report.rows.len(), cfgs.len());
         // every row matches a fresh serial prediction bit-for-bit
         for row in &report.rows {
@@ -479,9 +610,9 @@ mod tests {
         spec.schedules = vec![ScheduleKind::OneFOneB];
         let engine = Engine::new();
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        let base = engine.sweep(&model, &platform, &spec, &mut oracle);
+        let base = engine.sweep(&model, &platform, &spec, &mut oracle).unwrap();
         spec.rank_orders = RankOrder::all();
-        let crossed = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        let crossed = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
         // feasibility filters are placement-independent: exactly 3x rows
         assert_eq!(crossed.rows.len(), 3 * base.rows.len());
         assert!(crossed.rows.iter().any(|r| r.par.label().ends_with("@dp-first")));
@@ -491,9 +622,9 @@ mod tests {
     fn single_thread_engine_equals_parallel_engine() {
         let (model, platform, spec) = small_spec();
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        let par_rows = Engine::new().sweep(&model, &platform, &spec, &mut oracle).rows;
+        let par_rows = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap().rows;
         let ser_rows =
-            Engine::new().with_threads(1).sweep(&model, &platform, &spec, &mut oracle).rows;
+            Engine::new().with_threads(1).sweep(&model, &platform, &spec, &mut oracle).unwrap().rows;
         assert_eq!(par_rows.len(), ser_rows.len());
         for (a, b) in par_rows.iter().zip(&ser_rows) {
             assert_eq!(a.par, b.par);
@@ -506,10 +637,10 @@ mod tests {
     fn top_k_without_prune_truncates_the_full_table() {
         let (model, platform, mut spec) = small_spec();
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        let full = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        let full = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
         spec.top_k = Some(5);
         spec.prune = false;
-        let truncated = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        let truncated = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
         assert_eq!(truncated.rows.len(), 5);
         assert_eq!(truncated.pruned, 0);
         assert_eq!(truncated.bound_consults, 0);
@@ -525,9 +656,9 @@ mod tests {
         let (model, platform, mut spec) = small_spec();
         spec.rank_orders = RankOrder::all();
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        let full = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        let full = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
         spec.top_k = Some(8);
-        let pruned = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        let pruned = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
         assert_eq!(pruned.rows.len(), 8);
         for (a, b) in pruned.rows.iter().zip(&full.rows) {
             assert_eq!(a.par, b.par);
@@ -545,7 +676,8 @@ mod tests {
             pruned.pruned_frac() * 100.0
         );
         // chunking is thread-independent: identical counts either way
-        let serial = Engine::new().with_threads(1).sweep(&model, &platform, &spec, &mut oracle);
+        let serial =
+            Engine::new().with_threads(1).sweep(&model, &platform, &spec, &mut oracle).unwrap();
         assert_eq!(serial.pruned, pruned.pruned);
         assert_eq!(serial.evaluated, pruned.evaluated);
         for (a, b) in serial.rows.iter().zip(&pruned.rows) {
@@ -554,11 +686,127 @@ mod tests {
         }
     }
 
+    /// A broken backend: answers every batch with the wrong (empty)
+    /// length. `fetch_misses` zips keys with predictions, so every op
+    /// silently stays missing and composition panics INSIDE a scoped
+    /// worker — exactly the failure mode the typed error must survive.
+    struct ShortBatchBackend;
+
+    impl BatchPredictor for ShortBatchBackend {
+        fn predict_batch(
+            &mut self,
+            _key: crate::sampling::DatasetKey,
+            _rows: &[Vec<f64>],
+        ) -> Vec<f64> {
+            Vec::new()
+        }
+    }
+
+    #[test]
+    fn worker_panic_surfaces_as_typed_error_with_config_label() {
+        let (model, platform, spec) = small_spec();
+        let (cfgs, _, _, _) = feasible_configs(&model, &platform, &spec);
+        assert!(!cfgs.is_empty());
+        let engine = Engine::new();
+        let err = engine
+            .sweep(&model, &platform, &spec, &mut ShortBatchBackend)
+            .expect_err("short-batch backend must fail the sweep");
+        // first failing config in input order wins: deterministic label
+        assert_eq!(err.label, cfgs[0].label(), "{err}");
+        assert!(err.detail.contains("missing from prefetched cache"), "{err}");
+        // the engine (and therefore a served coordinator connection)
+        // survives: the very next sweep on a good backend succeeds
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let report = engine.sweep(&model, &platform, &spec, &mut oracle).unwrap();
+        assert_eq!(report.rows.len(), cfgs.len());
+        // serial path takes the same typed-error route
+        let serial_err = Engine::new()
+            .with_threads(1)
+            .sweep(&model, &platform, &spec, &mut ShortBatchBackend)
+            .expect_err("serial path must fail identically");
+        assert_eq!(serial_err.label, err.label);
+    }
+
+    #[test]
+    fn microbatch_skips_are_counted() {
+        // llemma7b runs m = 8 micro-batches; pp = 16 strategies exceed it
+        let (model, platform, spec) = small_spec();
+        assert!(model.iters_per_update < 16);
+        let (cfgs, _, _, skipped_microbatch) = feasible_configs(&model, &platform, &spec);
+        assert!(skipped_microbatch > 0, "pp=16 > m=8 must be counted, not silently dropped");
+        for c in &cfgs {
+            assert!(c.pp <= model.iters_per_update);
+        }
+        // the report carries the same counter
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let report = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
+        assert_eq!(report.skipped_microbatch, skipped_microbatch);
+        // capping pp at the micro-batch count makes the counter vanish
+        let mut shallow = spec.clone();
+        shallow.max_pp = model.iters_per_update;
+        let (_, _, _, none_skipped) = feasible_configs(&model, &platform, &shallow);
+        assert_eq!(none_skipped, 0);
+    }
+
+    #[test]
+    fn goodput_helpers_are_zero_guarded_on_empty_and_fault_free_sweeps() {
+        let empty = SweepReport {
+            rows: Vec::new(),
+            skipped_oom: 0,
+            skipped_sched: 0,
+            skipped_microbatch: 0,
+            evaluated: 0,
+            pruned: 0,
+            bound_consults: 0,
+            cache: CacheStats::default(),
+            elapsed: Duration::ZERO,
+        };
+        // the pruned_frac contract: total-ordered, never NaN, 0.0 on empty
+        assert_eq!(empty.best_goodput_frac(), 0.0);
+        assert_eq!(empty.best_useful_flop_frac(), 0.0);
+        assert_eq!(empty.best_ckpt_overhead_frac(), 0.0);
+        assert!(empty.best_goodput_row().is_none());
+        assert_eq!(empty.pruned_frac(), 0.0);
+        assert_eq!(empty.configs_per_sec(), 0.0);
+        // a fault-free sweep has rows but no annotations: same guard
+        let (model, platform, spec) = small_spec();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let report = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
+        assert!(!report.rows.is_empty());
+        assert!(report.rows.iter().all(|r| r.goodput.is_none()));
+        assert_eq!(report.best_goodput_frac(), 0.0);
+        assert!(report.best_goodput_frac().total_cmp(&0.0).is_eq());
+    }
+
+    #[test]
+    fn fault_annotation_never_perturbs_ranking_or_totals() {
+        use crate::faults::{FaultPlan, FaultSpec};
+        let (model, platform, spec) = small_spec();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let baseline = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
+        let mut faulty_spec = spec.clone();
+        faulty_spec.faults = Some(FaultPlan::new(FaultSpec::production(), 64));
+        let faulty = Engine::new().sweep(&model, &platform, &faulty_spec, &mut oracle).unwrap();
+        assert_eq!(baseline.rows.len(), faulty.rows.len());
+        for (a, b) in baseline.rows.iter().zip(&faulty.rows) {
+            // structural bit-compat: the fault layer only ADDS a column
+            assert_eq!(a.par, b.par);
+            assert_eq!(a.prediction.total_us, b.prediction.total_us);
+            assert_eq!(a.mem_gib, b.mem_gib);
+            let g = b.goodput.as_ref().expect("fault-mode rows are annotated");
+            assert!(g.goodput_frac > 0.0 && g.goodput_frac <= 1.0, "{}", g.goodput_frac);
+            assert!(g.useful_flop_frac <= g.goodput_frac);
+        }
+        assert!(faulty.best_goodput_frac() > 0.0);
+        assert!(faulty.best_ckpt_overhead_frac() > 0.0);
+        assert!(faulty.best_useful_flop_frac() <= faulty.best_goodput_frac());
+    }
+
     #[test]
     fn feasible_configs_apply_historical_filters() {
         let (model, platform, mut spec) = small_spec();
         spec.schedules = vec![ScheduleKind::Interleaved1F1B { chunks: 2 }];
-        let (cfgs, _oom, sched) = feasible_configs(&model, &platform, &spec);
+        let (cfgs, _oom, sched, _mb) = feasible_configs(&model, &platform, &spec);
         // llemma7b has m = 8 micro-batches: pp ∈ {1, 2, 4, 8} divide it,
         // but interleaving ALSO needs m % pp == 0, already satisfied —
         // pp = 8 with chunks means 8 % 8 == 0 ok; nothing extra rejected

@@ -344,6 +344,47 @@ pub fn try_run_batch_with_plans_exec(
     })
 }
 
+/// A fault-aware run: the fault-free simulated batch time plus the
+/// checkpoint/restart event-loop outcome and its closed-form cross-check.
+#[derive(Clone, Debug)]
+pub struct FaultRun {
+    /// Fault-free step (batch) seconds measured from one simulated batch.
+    pub step_s: f64,
+    /// Resolved per-config fault parameters (checkpoint write/restore
+    /// seconds, aggregate failure rate, straggler layer).
+    pub params: crate::faults::GoodputParams,
+    /// The event simulation: failures roll work back to the last
+    /// checkpoint and pay restore + fixed overhead + one re-warm-up step.
+    pub outcome: crate::faults::SimOutcome,
+    /// The optimal-checkpoint-interval-style closed form over the same
+    /// parameters (property-tested against `outcome` in
+    /// `tests/prop_sweep.rs`).
+    pub closed_form: crate::faults::GoodputEstimate,
+}
+
+/// Execute a fault-aware training run: one simulated batch (jittered,
+/// seed-deterministic) fixes the fault-free step time; the
+/// [`faults`](crate::faults) event loop then plays `steps` steps through
+/// failures, stragglers, and checkpoint/restart. Restart semantics: all
+/// work since the last checkpoint is lost, and the job pays state
+/// restore + rendezvous overhead + one re-warm-up step before making
+/// progress again.
+pub fn run_with_faults(
+    model: &ModelCfg,
+    par: &ParallelCfg,
+    platform: &Platform,
+    plan: &crate::faults::FaultPlan,
+    steps: usize,
+    seed: u64,
+) -> Result<FaultRun, ScheduleError> {
+    let trace = try_run_batch(model, par, platform, seed)?;
+    let step_s = trace.total_us / 1e6;
+    let params = crate::faults::GoodputParams::resolve(model, par, platform, plan, step_s);
+    let outcome = crate::faults::simulate(&params, steps, seed);
+    let closed_form = crate::faults::closed_form(&params);
+    Ok(FaultRun { step_s, params, outcome, closed_form })
+}
+
 /// Table VIII statistics over `n` repeated batches.
 #[derive(Clone, Debug)]
 pub struct StabilityStats {
@@ -549,6 +590,41 @@ mod tests {
         let tr = run_batch(&m, &par, &p, 1);
         let s = tr.total_us / 1e6;
         assert!((2.0..60.0).contains(&s), "batch time {s} s");
+    }
+
+    #[test]
+    fn fault_run_deterministic_and_restart_costs_show() {
+        use crate::faults::{FaultPlan, FaultSpec};
+        let (m, par, p) = gpt_plan();
+        let mut spec = FaultSpec::production();
+        // crank the GPU rate so a 200-step run sees failures for sure
+        spec.mtbf_gpu_h = 20.0;
+        let plan = FaultPlan::new(spec, 8);
+        let a = run_with_faults(&m, &par, &p, &plan, 200, 42).unwrap();
+        let b = run_with_faults(&m, &par, &p, &plan, 200, 42).unwrap();
+        assert_eq!(a.outcome, b.outcome, "same seed, bit-identical fault trace");
+        assert!(a.outcome.failures > 0, "failures expected at 20h/GPU MTBF");
+        assert_eq!(a.outcome.committed_steps, 200);
+        let g = a.outcome.goodput_frac(a.step_s);
+        assert!(g > 0.0 && g < 1.0, "{g}");
+        // restarts cost wall-clock the fault-free run never pays
+        assert!(a.outcome.wall_s > 200.0 * a.step_s);
+    }
+
+    #[test]
+    fn fault_run_off_spec_has_only_checkpoint_overhead() {
+        use crate::faults::{FaultPlan, FaultSpec};
+        let (m, par, p) = gpt_plan();
+        let plan = FaultPlan::new(FaultSpec::off(), 4);
+        let run = run_with_faults(&m, &par, &p, &plan, 40, 7).unwrap();
+        assert_eq!(run.outcome.failures, 0);
+        assert_eq!(run.outcome.stragglers, 0);
+        assert_eq!(run.outcome.checkpoints, 10);
+        // wall = useful + exactly the checkpoint writes
+        let expected = 40.0 * run.step_s + 10.0 * run.params.ckpt_write_s;
+        assert!((run.outcome.wall_s - expected).abs() < 1e-6, "{} vs {expected}", run.outcome.wall_s);
+        assert!(run.closed_form.goodput_frac < 1.0, "write stalls still cost");
+        assert!(run.closed_form.ckpt_overhead_frac > 0.0);
     }
 
     #[test]

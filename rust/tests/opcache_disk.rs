@@ -256,7 +256,7 @@ fn warmed_disk_cache_serves_smoke_sweep_without_backend() {
 
     let engine = Engine::new();
     let mut oracle = OraclePredictor { platform: platform.clone() };
-    let cold = engine.sweep(&model, &platform, &spec, &mut oracle);
+    let cold = engine.sweep(&model, &platform, &spec, &mut oracle).unwrap();
     assert!(!cold.rows.is_empty());
     engine.cache().save(&path, FP).unwrap();
 
@@ -266,7 +266,7 @@ fn warmed_disk_cache_serves_smoke_sweep_without_backend() {
         warm_engine.cache().load(&path, FP),
         LoadOutcome::Loaded(cold.cache.entries)
     );
-    let warm = warm_engine.sweep(&model, &platform, &spec, &mut PanicBackend);
+    let warm = warm_engine.sweep(&model, &platform, &spec, &mut PanicBackend).unwrap();
     assert_eq!(warm.rows.len(), cold.rows.len());
     for (w, c) in warm.rows.iter().zip(&cold.rows) {
         assert_eq!(w.par, c.par);

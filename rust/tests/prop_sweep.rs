@@ -6,6 +6,9 @@
 //! acceptance sweep).
 
 use fgpm::config::{ModelCfg, Platform, TopoSpec};
+use fgpm::faults::{
+    closed_form, simulate, FaultPlan, FaultSpec, GoodputParams, CLOSED_FORM_RTOL,
+};
 use fgpm::net::topology::RankOrder;
 use fgpm::ops::memory;
 use fgpm::pipeline::ScheduleKind;
@@ -20,7 +23,7 @@ fn serial_rows(
     platform: &Platform,
     spec: &SweepSpec,
 ) -> Vec<(String, f64, f64)> {
-    let (cfgs, _, _) = feasible_configs(model, platform, spec);
+    let (cfgs, _, _, _) = feasible_configs(model, platform, spec);
     let mut rows: Vec<(String, f64, f64)> = cfgs
         .iter()
         .map(|par| {
@@ -50,7 +53,7 @@ fn cached_parallel_sweep_bit_identical_to_serial_uncached() {
 
         let engine = Engine::new();
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        let report = engine.sweep(&model, &platform, &spec, &mut oracle);
+        let report = engine.sweep(&model, &platform, &spec, &mut oracle).unwrap();
 
         assert_eq!(report.rows.len(), baseline.len(), "{topo:?}");
         for (row, (label, total_us, mem)) in report.rows.iter().zip(&baseline) {
@@ -75,7 +78,7 @@ fn schedule_all_sweep_cache_hit_rate_at_least_half() {
     spec.schedules = ScheduleKind::all(2);
     let engine = Engine::new();
     let mut oracle = OraclePredictor { platform: platform.clone() };
-    let report = engine.sweep(&model, &platform, &spec, &mut oracle);
+    let report = engine.sweep(&model, &platform, &spec, &mut oracle).unwrap();
     assert!(!report.rows.is_empty());
     let stats = report.cache;
     assert!(
@@ -100,13 +103,14 @@ fn pruned_top_k_exactly_equals_full_sweep_top_k() {
         spec.schedules = ScheduleKind::all(2);
         spec.rank_orders = RankOrder::all();
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        let full = Engine::new().sweep(&model, &platform, &spec, &mut oracle);
+        let full = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
         assert!(!full.rows.is_empty(), "no feasible configs under {topo:?}");
 
         for k in [1usize, 4, 8, full.rows.len() + 10] {
             let mut pruned_spec = spec.clone();
             pruned_spec.top_k = Some(k);
-            let pruned = Engine::new().sweep(&model, &platform, &pruned_spec, &mut oracle);
+            let pruned =
+                Engine::new().sweep(&model, &platform, &pruned_spec, &mut oracle).unwrap();
             assert_eq!(pruned.rows.len(), k.min(full.rows.len()), "{topo:?} k={k}");
             for (got, want) in pruned.rows.iter().zip(&full.rows) {
                 assert_eq!(got.par, want.par, "{topo:?} k={k}");
@@ -138,7 +142,7 @@ fn rank_map_all_crossing_is_deterministic_and_labeled() {
     spec.rank_orders = RankOrder::all();
     let run = |engine: &Engine| {
         let mut oracle = OraclePredictor { platform: platform.clone() };
-        engine.sweep(&model, &platform, &spec, &mut oracle)
+        engine.sweep(&model, &platform, &spec, &mut oracle).unwrap()
     };
     let a = run(&Engine::new());
     let b = run(&Engine::new().with_threads(1));
@@ -154,4 +158,141 @@ fn rank_map_all_crossing_is_deterministic_and_labeled() {
         );
     }
     assert!(a.rows.iter().any(|r| r.par.label().ends_with("@dp-first")));
+}
+
+#[test]
+fn fault_free_spec_is_bit_identical_to_no_faults() {
+    // `--faults off` acceptance: annotating a sweep with the all-zero
+    // FaultSpec must keep every row — order, f64 total, f64 GiB —
+    // bit-identical to the plain fault-free sweep, on flat and rail
+    // fabrics across all schedules. The annotation itself reports the
+    // degenerate identity (nothing ever fails).
+    let model = ModelCfg::llemma7b();
+    for topo in [
+        TopoSpec::Flat,
+        TopoSpec::RailSpine { nodes_per_rail: 2, spine_bw_frac: 0.5 },
+    ] {
+        let platform = Platform::perlmutter().with_topo(topo);
+        let mut spec = SweepSpec::new(16);
+        spec.schedules = ScheduleKind::all(2);
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let plain = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
+
+        let mut fault_spec = spec.clone();
+        fault_spec.faults = Some(FaultPlan::new(FaultSpec::off(), 32));
+        let annotated =
+            Engine::new().sweep(&model, &platform, &fault_spec, &mut oracle).unwrap();
+
+        assert_eq!(plain.rows.len(), annotated.rows.len(), "{topo:?}");
+        for (a, b) in plain.rows.iter().zip(&annotated.rows) {
+            assert_eq!(a.par, b.par, "{topo:?}");
+            // bit-identical, not approximately equal
+            assert_eq!(a.prediction.total_us, b.prediction.total_us, "{topo:?}");
+            assert_eq!(a.mem_gib, b.mem_gib, "{topo:?}");
+            assert!(a.goodput.is_none(), "{topo:?}: fault-free rows must not be annotated");
+            let g = b.goodput.expect("fault-mode rows carry goodput");
+            assert_eq!(g.failures_per_day, 0.0, "{topo:?}");
+            assert_eq!(g.optimal_ckpt_interval_s, f64::INFINITY, "{topo:?}");
+        }
+        assert_eq!(plain.skipped_microbatch, annotated.skipped_microbatch, "{topo:?}");
+    }
+}
+
+#[test]
+fn closed_form_goodput_tracks_event_sim_across_schedules_and_topologies() {
+    // The closed form must agree with the step-granular event simulation
+    // within CLOSED_FORM_RTOL in its validity regime (expected failures
+    // per checkpoint segment pinned at 0.05), for every schedule on flat
+    // and rail fabrics. Step time and checkpoint write cost come from the
+    // real memory model via GoodputParams::resolve; the failure rate AND
+    // the restart cost are pinned so the regime is controlled: with
+    // restart = segment, λ·(R + segment/2) = 0.075 no matter how large
+    // the resolved restart was (a resolved R >> segment would leave the
+    // first-order expansion — the regime the docs say not to trust),
+    // while the simulation still sees enough failures to measure.
+    let model = ModelCfg::llemma7b();
+    let interval = 16usize;
+    for topo in [
+        TopoSpec::Flat,
+        TopoSpec::RailSpine { nodes_per_rail: 2, spine_bw_frac: 0.5 },
+    ] {
+        let platform = Platform::perlmutter().with_topo(topo);
+        let mut spec = SweepSpec::new(16);
+        spec.schedules = ScheduleKind::all(2);
+        let (cfgs, _, _, _) = feasible_configs(&model, &platform, &spec);
+        for sched in ScheduleKind::all(2) {
+            let par = cfgs
+                .iter()
+                .find(|c| c.schedule == sched)
+                .unwrap_or_else(|| panic!("no feasible config for {sched:?} under {topo:?}"));
+            let mut oracle = OraclePredictor { platform: platform.clone() };
+            let step_s = predict(&model, par, &platform, &mut oracle).total_seconds();
+            let plan = FaultPlan::new(FaultSpec::production(), interval);
+            let mut p = GoodputParams::resolve(&model, par, &platform, &plan, step_s);
+            let segment = interval as f64 * p.dilated_step_s() + p.ckpt_write_s;
+            p.failure_rate_per_s = 0.05 / segment;
+            p.restart_s = segment;
+
+            let est = closed_form(&p);
+            let sim = simulate(&p, 20_000, 0xFA17);
+            let sim_frac = sim.goodput_frac(p.step_s);
+            assert!(
+                sim.failures > 10,
+                "{topo:?} {sched:?}: only {} simulated failures — regime too tame to check",
+                sim.failures
+            );
+            assert!(sim_frac > 0.0 && est.goodput_frac > 0.0, "{topo:?} {sched:?}");
+            let rel = (est.goodput_frac - sim_frac).abs() / sim_frac;
+            assert!(
+                rel <= CLOSED_FORM_RTOL,
+                "{topo:?} {sched:?}: closed form {:.4} vs sim {:.4} (rel {:.3} > {})",
+                est.goodput_frac,
+                sim_frac,
+                rel,
+                CLOSED_FORM_RTOL
+            );
+        }
+    }
+}
+
+#[test]
+fn fault_simulation_is_deterministic_per_seed() {
+    // Same seed => bit-identical fault trace (events, f64 wall-clock and
+    // all); different seed => a different trace.
+    let p = GoodputParams {
+        step_s: 20.0,
+        ckpt_interval_steps: 16,
+        ckpt_write_s: 8.0,
+        restart_s: 300.0,
+        failure_rate_per_s: 1.0 / 3000.0,
+        straggler_prob: 0.02,
+        straggler_mult: 1.15,
+        compute_frac: 0.6,
+    };
+    let a = simulate(&p, 5_000, 42);
+    let b = simulate(&p, 5_000, 42);
+    assert_eq!(a, b, "same seed must replay the identical trace");
+    assert!(a.failures > 0 && a.stragglers > 0, "{a:?}");
+    let c = simulate(&p, 5_000, 43);
+    assert_ne!(a.events, c.events, "different seeds must diverge");
+}
+
+#[test]
+fn microbatch_skip_accounting_matches_enumeration() {
+    // llemma7b has 8 micro-batches; the default max_pp of 16 enumerates
+    // pipeline depths the model cannot fill. Those skips must be counted
+    // (not silently dropped) and agree between the enumerator and the
+    // sweep report.
+    let model = ModelCfg::llemma7b();
+    let platform = Platform::perlmutter();
+    let spec = SweepSpec::new(16);
+    let (cfgs, oom, sched, micro) = feasible_configs(&model, &platform, &spec);
+    assert!(micro > 0, "expected pp > micro-batch skips in the default enumeration");
+    let mut oracle = OraclePredictor { platform: platform.clone() };
+    let report = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
+    assert_eq!(report.rows.len(), cfgs.len());
+    assert_eq!(
+        (report.skipped_oom, report.skipped_sched, report.skipped_microbatch),
+        (oom, sched, micro)
+    );
 }

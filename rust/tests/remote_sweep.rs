@@ -8,6 +8,7 @@
 
 use fgpm::config::{ModelCfg, Platform, TopoSpec};
 use fgpm::coordinator::server::{remote_sweep, serve_background, sweep_request_json};
+use fgpm::faults::{FaultPlan, FaultSpec};
 use fgpm::coordinator::{BatcherCfg, PredictionService};
 use fgpm::net::topology::RankOrder;
 use fgpm::ops::OpKind;
@@ -57,7 +58,7 @@ fn remote_rows_and_rendered_table_bit_identical_to_local() {
         let addr = serve_background(svc()).unwrap();
         for spec in specs() {
             // local reference run (fresh engine, same deterministic backend)
-            let local = Engine::new().sweep(&model, &platform, &spec, &mut Det);
+            let local = Engine::new().sweep(&model, &platform, &spec, &mut Det).unwrap();
             assert!(!local.rows.is_empty(), "{topo:?}");
 
             let request = sweep_request_json("llemma7b", "perlmutter", &topo, &spec);
@@ -85,16 +86,62 @@ fn remote_rows_and_rendered_table_bit_identical_to_local() {
                 .collect();
             let skipped_oom = remote.summary.usize_at("skipped_oom").unwrap();
             let skipped_sched = remote.summary.usize_at("skipped_sched").unwrap();
+            let skipped_micro = remote.summary.usize_at("skipped_microbatch").unwrap_or(0);
             assert_eq!(skipped_oom, local.skipped_oom);
             assert_eq!(skipped_sched, local.skipped_sched);
+            assert_eq!(skipped_micro, local.skipped_microbatch);
+            // fault-free rows carry no goodput annotation over the wire
+            assert!(remote.rows.iter().all(|r| r.goodput.is_none()), "{topo:?}");
             let hbm = platform.gpu.hbm_gib;
             assert_eq!(
-                sweep_table_text(title, &remote_rows, skipped_oom, skipped_sched, hbm),
-                sweep_table_text(title, &local_rows, local.skipped_oom, local.skipped_sched, hbm),
+                sweep_table_text(title, &remote_rows, skipped_oom, skipped_sched, skipped_micro, hbm),
+                sweep_table_text(
+                    title,
+                    &local_rows,
+                    local.skipped_oom,
+                    local.skipped_sched,
+                    local.skipped_microbatch,
+                    hbm
+                ),
                 "{topo:?}"
             );
         }
     }
+}
+
+#[test]
+fn remote_goodput_annotation_matches_local_closed_form() {
+    // fault-mode sweeps work over TCP: every streamed row carries the
+    // same closed-form goodput columns the local engine annotates, exact
+    // f64 across the JSON round-trip, and the summary carries the maxima
+    let model = ModelCfg::llemma7b();
+    let platform = Platform::perlmutter();
+    let mut spec = SweepSpec::new(16);
+    spec.faults = Some(FaultPlan::new(FaultSpec::production(), 64));
+    let local = Engine::new().sweep(&model, &platform, &spec, &mut Det).unwrap();
+    assert!(!local.rows.is_empty());
+
+    let addr = serve_background(svc()).unwrap();
+    let request = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
+    let remote = remote_sweep(&addr.to_string(), &request).unwrap();
+
+    assert_eq!(remote.rows.len(), local.rows.len());
+    for (r, l) in remote.rows.iter().zip(&local.rows) {
+        assert_eq!(r.total_us, l.prediction.total_us, "{}", r.label);
+        let (g, u, c) = r.goodput.expect("fault-mode rows carry goodput over the wire");
+        let want = l.goodput.expect("local fault-mode rows are annotated");
+        assert_eq!(g, want.goodput_frac, "{}", r.label);
+        assert_eq!(u, want.useful_flop_frac, "{}", r.label);
+        assert_eq!(c, want.ckpt_overhead_frac, "{}", r.label);
+    }
+    assert_eq!(
+        remote.summary.f64_at("best_goodput_frac").unwrap(),
+        local.best_goodput_frac()
+    );
+    assert_eq!(
+        remote.summary.f64_at("best_useful_flop_frac").unwrap(),
+        local.best_useful_flop_frac()
+    );
 }
 
 #[test]
