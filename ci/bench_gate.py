@@ -67,6 +67,11 @@ def main(argv):
         "pruned_frac",
         "batch_predict_ns_per_row",
         "goodput_smoke_identical",
+        # phase-attribution keys (presence only, no threshold: wall-clock
+        # splits are informational until the trajectory shows a trend)
+        "prefetch_us",
+        "compose_us",
+        "bound_us",
     ):
         if field not in actual:
             die(2, f"{actual_path} missing '{field}': {actual}")
@@ -90,6 +95,9 @@ def main(argv):
         "batch_predict_ns_per_row": actual.get("batch_predict_ns_per_row"),
         "batch_speedup": actual.get("batch_speedup"),
         "goodput_smoke_identical": actual.get("goodput_smoke_identical"),
+        "prefetch_us": actual.get("prefetch_us"),
+        "compose_us": actual.get("compose_us"),
+        "bound_us": actual.get("bound_us"),
     }
     with open(trajectory_path, "a") as f:
         f.write(json.dumps(record, sort_keys=True) + "\n")

@@ -11,11 +11,16 @@ Drives the JSON-lines TCP protocol end to end against a running
   1. `ping`    — liveness;
   2. `predict` — one end-to-end configuration prediction;
   3. `stats`   — metrics + op-cache tier counters present and sane;
-  4. `sweep`   — one STREAMED sweep, rows-then-summary framing checked;
-
-then asserts the streamed rows match the table `fgpm sweep` printed
-locally on the same spec (`--local`): same labels in the same ranked
-order, seconds agreeing at the table's printed precision.
+  4. `sweep`   — one STREAMED sweep, rows-then-summary framing checked
+                 (incl. the per-phase prefetch/compose timings);
+  5. parity    — the streamed rows match the table `fgpm sweep` printed
+                 locally on the same spec (`--local`): same labels in the
+                 same ranked order, seconds agreeing at the table's
+                 printed precision;
+  6. `stats`   — the latency histograms saw the predict and the sweep
+                 (non-zero p50/p99 quantiles);
+  7. `metrics` — the Prometheus text exposition parses, carries TYPE
+                 lines, and its histogram buckets are cumulative.
 
 Exit code 0 = all checks passed; 1 = any mismatch/protocol violation.
 """
@@ -58,6 +63,18 @@ class Client:
         if "error" in resp:
             fail(f"server error for {obj}: {resp['error']}")
         return resp
+
+    def recv_text_block(self):
+        """Read a raw multi-line response terminated by a blank line
+        (the `metrics` command's Prometheus exposition framing)."""
+        lines = []
+        while True:
+            line = self.rfile.readline()
+            if not line:
+                fail("server closed the connection mid text block")
+            if line == "\n":
+                return lines
+            lines.append(line.rstrip("\n"))
 
 
 def parse_local_table(path):
@@ -161,6 +178,15 @@ def main():
         f"[mem {summary['cache_memory_hit_rate']:.2f} / disk {summary['cache_disk_hit_rate']:.2f}])"
     )
 
+    # the sweep summary attributes its wall-clock to engine phases
+    for key in ("prefetch_us", "compose_us"):
+        if not (isinstance(summary.get(key), (int, float)) and summary[key] > 0):
+            fail(f"summary missing positive '{key}': {summary}")
+    print(
+        f"service-smoke: phase timings ok (prefetch {summary['prefetch_us']:.0f}us, "
+        f"compose {summary['compose_us']:.0f}us, bound {summary.get('bound_us', 0.0):.0f}us)"
+    )
+
     # 5. parity with the local run
     local = parse_local_table(args.local)
     if len(local) != len(rows):
@@ -173,6 +199,66 @@ def main():
         if abs(l_mem - r_mem) > 0.05 + 1e-9:
             fail(f"row {i + 1} ({l_label}): local {l_mem} GiB vs remote {r_mem} GiB")
     print(f"service-smoke: parity ok — {len(rows)} remote rows match the local sweep")
+
+    # 6. the latency histograms saw the predict and the sweep
+    stats = c.request({"cmd": "stats"})
+    for prefix in ("predict", "sweep"):
+        for q in ("p50", "p99"):
+            key = f"{prefix}_{q}_us"
+            if not (isinstance(stats.get(key), (int, float)) and stats[key] > 0):
+                fail(f"stats missing positive '{key}' after serving a {prefix}: {stats}")
+    print(
+        f"service-smoke: latency quantiles ok (predict p50 {stats['predict_p50_us']:.0f}us "
+        f"p99 {stats['predict_p99_us']:.0f}us, sweep p50 {stats['sweep_p50_us']:.0f}us)"
+    )
+
+    # 7. Prometheus text exposition
+    c.send({"cmd": "metrics", "format": "prometheus"})
+    text = c.recv_text_block()
+    check_prometheus(text)
+    print(f"service-smoke: prometheus ok ({len(text)} exposition lines)")
+
+
+def check_prometheus(lines):
+    """Minimal Prometheus text-format validation: every sample line is
+    `name{labels} value`, TYPE lines cover the core metrics, and each
+    histogram's buckets are cumulative with a +Inf cap matching _count."""
+    if lines and lines[0].startswith("{"):
+        fail(f"metrics returned an error: {lines[0]}")
+    sample_re = re.compile(r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})?\s+(-?[0-9.e+]+|\+Inf)$')
+    types, samples = {}, []
+    for line in lines:
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in ("counter", "gauge", "histogram"):
+                fail(f"malformed TYPE line: {line!r}")
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue
+        m = sample_re.match(line)
+        if not m:
+            fail(f"unparseable exposition line: {line!r}")
+        samples.append((m.group(1), m.group(2), float(m.group(3))))
+    for name in ("fgpm_queries_total", "fgpm_predictions_total", "fgpm_sweeps_total"):
+        if types.get(name) != "counter":
+            fail(f"missing counter TYPE for {name} (got {types})")
+    values = {name: v for name, labels, v in samples if labels is None}
+    if values.get("fgpm_predictions_total", 0) < 1 or values.get("fgpm_sweeps_total", 0) < 1:
+        fail(f"served commands not visible in exposition: {values}")
+    for hist in ("fgpm_predict_latency_us", "fgpm_sweep_latency_us"):
+        if types.get(hist) != "histogram":
+            fail(f"missing histogram TYPE for {hist} (got {types})")
+        buckets = [
+            (labels, v) for name, labels, v in samples if name == f"{hist}_bucket"
+        ]
+        if not buckets or buckets[-1][0] != '{le="+Inf"}':
+            fail(f"{hist}: bucket list missing or not capped by +Inf: {buckets}")
+        cum = [v for _, v in buckets]
+        if cum != sorted(cum):
+            fail(f"{hist}: buckets not cumulative: {cum}")
+        if cum[-1] != values.get(f"{hist}_count"):
+            fail(f"{hist}: +Inf bucket {cum[-1]} != _count {values.get(f'{hist}_count')}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file emitted by `fgpm trace` or
+`--trace-out` (stdlib only — runs in bare CI images).
+
+Checks:
+  - the file parses as JSON and `traceEvents` is a non-empty list
+  - every event carries `ph`, `ts`, `pid`, `tid`
+  - every `X` (complete) event has a non-negative `dur`
+  - `X` events are time-sorted within each (pid, tid) track
+  - `s`/`f` flow arrows come in exactly-matched id pairs
+
+Usage: trace_check.py <trace.json> [<trace.json> ...]
+Exits non-zero with a diagnostic on the first failure.
+"""
+import json
+import sys
+
+
+def fail(path, msg):
+    print(f"FAIL {path}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(path, f"unreadable or invalid JSON: {e}")
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(path, "traceEvents missing, not a list, or empty")
+
+    last_ts = {}  # (pid, tid) -> last X-event ts
+    flows = {"s": {}, "f": {}}  # ph -> id -> count
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(path, f"event {i} is not an object")
+        for key in ("ph", "ts", "pid", "tid"):
+            if key not in ev:
+                fail(path, f"event {i} missing '{key}': {ev}")
+        ph = ev["ph"]
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                fail(path, f"event {i}: X event with bad dur {dur!r}")
+            track = (ev["pid"], ev["tid"])
+            if ev["ts"] < last_ts.get(track, float("-inf")):
+                fail(path, f"event {i}: X events not time-sorted on track {track}")
+            last_ts[track] = ev["ts"]
+        elif ph in flows:
+            fid = ev.get("id")
+            if fid is None:
+                fail(path, f"event {i}: flow event without id")
+            flows[ph][fid] = flows[ph].get(fid, 0) + 1
+
+    if flows["s"] != flows["f"]:
+        starts = set(flows["s"]) - set(flows["f"])
+        ends = set(flows["f"]) - set(flows["s"])
+        fail(path, f"unpaired flow arrows (s-only ids {sorted(starts)[:5]}, "
+                   f"f-only ids {sorted(ends)[:5]})")
+
+    n_x = sum(1 for e in events if e.get("ph") == "X")
+    print(f"OK {path}: {len(events)} events ({n_x} slices, "
+          f"{sum(flows['s'].values())} flows, {len(last_ts)} tracks)")
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    for path in argv[1:]:
+        check(path)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

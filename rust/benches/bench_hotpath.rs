@@ -66,6 +66,12 @@ fn write_bench_sweep_json(
         ("cache_misses", Json::Num(report.cache.misses as f64)),
         ("cache_hit_rate", Json::Num(report.cache.hit_rate())),
         ("distinct_ops", Json::Num(report.cache.entries as f64)),
+        // per-phase wall-clock attribution of the cold sweep (prefetch =
+        // backend batch calls, compose = closed-form assembly); bound
+        // scoring only runs on the pruned top-k fixture below
+        ("prefetch_us", Json::Num(report.prefetch_us)),
+        ("compose_us", Json::Num(report.compose_us)),
+        ("bound_us", Json::Num(pruned.bound_us)),
         // disk warm-start: a FRESH engine re-running the same sweep from
         // the persisted cache file (the second-cold-process acceptance)
         ("warm_hit_rate", Json::Num(warm.cache.hit_rate())),

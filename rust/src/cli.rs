@@ -37,9 +37,16 @@ commands:
   collect      run the micro-benchmark sampling plans (Tables VI-VII)
   train        fit + select per-operator regressors (80/20 validation)
   predict      predict one (model, parallel, platform) configuration
+               (add --explain for the per-op cost ledger, --trace-out for
+               an engine execution trace)
+  explain      decompose one configuration's predicted step into the
+               op-class x direction x network-tier cost ledger
+  trace        render the predicted pipeline schedule as Chrome
+               trace-event JSON (load in Perfetto / chrome://tracing)
   sweep        rank all parallelism strategies for a model at a GPU count
                (add --remote host:port to run it on a served coordinator;
-               add --faults spec for goodput / useful-FLOP columns)
+               add --faults spec for goodput / useful-FLOP columns;
+               add --trace-out for an engine execution trace)
   goodput      checkpoint-interval x MTBF goodput grid for one config
                (closed-form Daly/Young estimate + event-sim cross-check)
   topo         print the cluster tiers + group->tier traffic matrix for a config
@@ -67,6 +74,8 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "collect" => cmd_collect(rest),
         "train" => cmd_train(rest),
         "predict" => cmd_predict(rest),
+        "explain" => cmd_explain(rest),
+        "trace" => cmd_trace(rest),
         "sweep" => cmd_sweep(rest),
         "goodput" => cmd_goodput(rest),
         "topo" => cmd_topo(rest),
@@ -395,7 +404,9 @@ fn cmd_predict(argv: &[String]) -> Result<i32> {
         .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
         .opt("forests", "forests", "trained registry directory")
         .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
+        .opt("trace-out", "", "write the engine's own execution trace (Chrome JSON) to this file")
         .opt("seed", "7", "rng seed")
+        .flag("explain", "append the per-op cost attribution ledger to the output")
         .flag("xla", "serve inference from the AOT Pallas executable (PJRT)");
     let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
     let platform = apply_topo_arg(&args, platform_arg(&args)?)?;
@@ -409,28 +420,175 @@ fn cmd_predict(argv: &[String]) -> Result<i32> {
     let use_xla = args.has_flag("xla");
     let mut backend = backend_for(reg, use_xla)?;
     let cache_dir = args.str("cache-dir");
-    let cp = if cache_dir.is_empty() {
+    let explain = args.has_flag("explain");
+    let trace_out = args.str("trace-out");
+    if !trace_out.is_empty() {
+        crate::obs::enable();
+    }
+    let mut ledger = None;
+    let cp = if cache_dir.is_empty() && !explain {
+        // the exact default path: no cache indirection at all
+        let _g = crate::obs::span(format!("predict {}", par.label()), "predict");
         predict(&model, &par, &platform, backend.as_mut())
     } else {
+        // --explain and --cache-dir both route through a shared op cache,
+        // so the ledger decomposes the SAME predictions the step time was
+        // composed from (no second round of backend calls)
         let fp = cache_fingerprint(reg_hash, &platform, use_xla);
-        let path = op_cache_path(&cache_dir, &platform, fp);
+        let persist = (!cache_dir.is_empty()).then(|| op_cache_path(&cache_dir, &platform, fp));
         let cache = OpPredictionCache::new();
-        eprintln!("[fgpm] op cache {path:?}: {}", cache.load(&path, fp).describe());
-        let cp = crate::predictor::e2e::predict_with_cache(
-            &model,
-            &par,
-            &platform,
-            backend.as_mut(),
-            &cache,
-        );
-        if let Err(e) = cache.save(&path, fp) {
-            eprintln!("[fgpm] WARNING: could not save op cache {path:?}: {e}");
+        if let Some(path) = &persist {
+            let _g = crate::obs::span("op-cache load", "cache");
+            eprintln!("[fgpm] op cache {path:?}: {}", cache.load(path, fp).describe());
+        }
+        let cp = {
+            let _g = crate::obs::span(format!("predict {}", par.label()), "predict");
+            crate::predictor::e2e::predict_with_cache(
+                &model,
+                &par,
+                &platform,
+                backend.as_mut(),
+                &cache,
+            )
+        };
+        if explain {
+            ledger = Some(crate::predictor::e2e::explain_with_cache(
+                &model,
+                &par,
+                &platform,
+                backend.as_mut(),
+                &cache,
+            ));
+        }
+        if let Some(path) = &persist {
+            let _g = crate::obs::span("op-cache save", "cache");
+            if let Err(e) = cache.save(path, fp) {
+                eprintln!("[fgpm] WARNING: could not save op cache {path:?}: {e}");
+            }
         }
         eprintln!("[fgpm] {}", cache_stats_line(&cache.stats()));
         cp
     };
+    if !trace_out.is_empty() {
+        crate::obs::disable();
+        let spans = crate::obs::drain();
+        std::fs::write(&trace_out, crate::obs::spans_to_trace_json(&spans).to_string())
+            .with_context(|| format!("writing --trace-out {trace_out}"))?;
+        eprintln!("[fgpm] wrote {} engine spans -> {trace_out}", spans.len());
+    }
     println!("{}", server::prediction_to_json(&cp));
+    if let Some(l) = &ledger {
+        println!("\n{}", crate::report::tables::explain_table_text(l));
+    }
     println!("\npredicted batch time: {:.2} s", cp.total_us / 1e6);
+    Ok(0)
+}
+
+/// `fgpm explain`: the per-op cost attribution ledger on its own —
+/// `predict --explain` without the prediction JSON.
+fn cmd_explain(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new(
+        "explain",
+        "decompose one configuration's predicted step into the op-class x \
+         direction x network-tier cost ledger (rows reconstruct the step \
+         time exactly; the closed forms are linear in their components)",
+    )
+    .opt("model", "gpt20b", "model preset")
+    .opt("parallel", "4-4-8", "pp-mp-dp[/schedule][@rank-map]")
+    .opt("platform", "perlmutter", "target platform")
+    .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v]|zb-h1)")
+    .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
+    .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first)")
+    .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
+    .opt("forests", "forests", "trained registry directory")
+    .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
+    .opt("seed", "7", "rng seed")
+    .flag("xla", "serve inference from the AOT Pallas executable (PJRT)");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let platform = apply_topo_arg(&args, platform_arg(&args)?)?;
+    let model = model_arg(&args)?;
+    let par = ParallelCfg::parse(&args.str("parallel"))
+        .context("bad --parallel (expected pp-mp-dp[/schedule][@rank-map])")?;
+    let par = apply_rank_map_arg(&args, apply_overlap_arg(&args, apply_schedule_arg(&args, par)?)?)?;
+    validate_schedule(&model, &par)?;
+    anyhow::ensure!(par.fits(&platform), "{} needs {} GPUs", par.label(), par.gpus());
+    let (reg, reg_hash) = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
+    let use_xla = args.has_flag("xla");
+    let mut backend = backend_for(reg, use_xla)?;
+    let cache_dir = args.str("cache-dir");
+    let cache = OpPredictionCache::new();
+    let persist = if cache_dir.is_empty() {
+        None
+    } else {
+        let fp = cache_fingerprint(reg_hash, &platform, use_xla);
+        let path = op_cache_path(&cache_dir, &platform, fp);
+        eprintln!("[fgpm] op cache {path:?}: {}", cache.load(&path, fp).describe());
+        Some((path, fp))
+    };
+    let ledger = crate::predictor::e2e::explain_with_cache(
+        &model,
+        &par,
+        &platform,
+        backend.as_mut(),
+        &cache,
+    );
+    if let Some((path, fp)) = persist {
+        if let Err(e) = cache.save(&path, fp) {
+            eprintln!("[fgpm] WARNING: could not save op cache {path:?}: {e}");
+        }
+    }
+    print!("{}", crate::report::tables::explain_table_text(&ledger));
+    Ok(0)
+}
+
+/// `fgpm trace`: render the predicted pipeline schedule as Chrome
+/// trace-event JSON. Deterministic — task times come from the
+/// closed-form operator model ([`crate::trainrun::deterministic_task_times`]),
+/// not a sampled run, so the same spec always produces the same bytes
+/// (the property the golden-trace tests pin).
+fn cmd_trace(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new(
+        "trace",
+        "render the predicted pipeline schedule as Chrome trace-event JSON \
+         (open in Perfetto or chrome://tracing; ranks are processes, \
+         virtual-stage chunks are threads, flow arrows mark P2P crossings)",
+    )
+    .opt("model", "gpt20b", "model preset")
+    .opt("parallel", "4-4-8", "pp-mp-dp[/schedule][@rank-map]")
+    .opt("platform", "perlmutter", "target platform")
+    .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v]|zb-h1)")
+    .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
+    .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first)")
+    .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
+    .opt("out", "trace.json", "output file");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let platform = apply_topo_arg(&args, platform_arg(&args)?)?;
+    let model = model_arg(&args)?;
+    let par = ParallelCfg::parse(&args.str("parallel"))
+        .context("bad --parallel (expected pp-mp-dp[/schedule][@rank-map])")?;
+    let par = apply_rank_map_arg(&args, apply_overlap_arg(&args, apply_schedule_arg(&args, par)?)?)?;
+    validate_schedule(&model, &par)?;
+    anyhow::ensure!(par.fits(&platform), "{} needs {} GPUs", par.label(), par.gpus());
+    let times = crate::trainrun::deterministic_task_times(&model, &par, &platform);
+    let sched = crate::pipeline::execute(par.schedule.build().as_ref(), &times)
+        .map_err(|e| anyhow!("{e}"))?;
+    let label = format!(
+        "{} {} on {} ({})",
+        model.name,
+        par.label(),
+        platform.name,
+        par.schedule.label()
+    );
+    let j = crate::obs::schedule_trace_json(&label, &sched);
+    let out = args.str("out");
+    let events = j.get("traceEvents").and_then(|a| a.as_arr().map(|v| v.len())).unwrap_or(0);
+    std::fs::write(&out, j.to_string()).with_context(|| format!("writing --out {out}"))?;
+    println!(
+        "wrote {events} trace events ({} ranks x {} micro-batches, makespan {:.2} ms) -> {out}",
+        sched.stages(),
+        sched.micro_batches(),
+        sched.makespan() / 1e3
+    );
     Ok(0)
 }
 
@@ -451,6 +609,7 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         .opt("jobs", "0", "evaluation worker threads (0 = one per core)")
         .opt("remote", "", "run the sweep on a coordinator at host:port instead of locally")
         .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
+        .opt("trace-out", "", "write the engine's own execution trace (Chrome JSON) to this file")
         .opt("forests", "forests", "trained registry directory")
         .opt("seed", "7", "rng seed")
         .flag("xla", "use the AOT Pallas executable");
@@ -499,7 +658,7 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         // local-only knobs have no effect on a remote coordinator (it
         // chose its backend, cache, and worker count at startup); reject
         // explicitly-typed ones instead of silently ignoring them
-        for opt in ["cache-dir", "forests", "jobs", "seed"] {
+        for opt in ["cache-dir", "forests", "jobs", "seed", "trace-out"] {
             anyhow::ensure!(
                 !args.is_explicit(opt),
                 "--{opt} has no effect with --remote (the coordinator's own settings apply)"
@@ -600,22 +759,38 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
     if jobs > 0 {
         engine = engine.with_threads(jobs);
     }
+    let trace_out = args.str("trace-out");
+    if !trace_out.is_empty() {
+        crate::obs::enable();
+    }
     let cache_dir = args.str("cache-dir");
     let persist = if cache_dir.is_empty() {
         None
     } else {
         let fp = cache_fingerprint(reg_hash, &platform, use_xla);
         let path = op_cache_path(&cache_dir, &platform, fp);
-        eprintln!("[fgpm] op cache {path:?}: {}", engine.cache().load(&path, fp).describe());
+        let loaded = {
+            let _g = crate::obs::span("op-cache load", "cache");
+            engine.cache().load(&path, fp)
+        };
+        eprintln!("[fgpm] op cache {path:?}: {}", loaded.describe());
         Some((path, fp))
     };
     let report = engine
         .sweep(&model, &platform, &sweep_spec, backend.as_mut())
         .map_err(|e| anyhow!("{e}"))?;
     if let Some((path, fp)) = persist {
+        let _g = crate::obs::span("op-cache save", "cache");
         if let Err(e) = engine.cache().save(&path, fp) {
             eprintln!("[fgpm] WARNING: could not save op cache {path:?}: {e}");
         }
+    }
+    if !trace_out.is_empty() {
+        crate::obs::disable();
+        let spans = crate::obs::drain();
+        std::fs::write(&trace_out, crate::obs::spans_to_trace_json(&spans).to_string())
+            .with_context(|| format!("writing --trace-out {trace_out}"))?;
+        eprintln!("[fgpm] wrote {} engine spans -> {trace_out}", spans.len());
     }
     if sweep_spec.faults.is_some() {
         let rows: Vec<(String, f64, f64, f64, f64, f64)> = report

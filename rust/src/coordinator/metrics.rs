@@ -1,7 +1,82 @@
-//! Service metrics: lock-free counters the executor updates and any
-//! thread can snapshot (exposed over the TCP protocol's `stats` command).
+//! Service metrics: lock-free counters and log₂-bucketed latency
+//! histograms the executor/handlers update and any thread can snapshot
+//! (exposed over the TCP protocol's `stats` command and the
+//! `{"cmd":"metrics","format":"prometheus"}` text exposition).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Histogram resolution: bucket `i` covers `[2^i, 2^(i+1))` µs (bucket 0
+/// also absorbs 0), so 40 buckets span sub-µs to ~2^40 µs ≈ 13 days —
+/// far past any plausible command latency.
+pub const HIST_BUCKETS: usize = 40;
+
+fn bucket_of(us: u64) -> usize {
+    ((63 - (us | 1).leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Lock-free log₂ latency histogram: one atomic add per record.
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time histogram state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub sum_us: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Upper bound (2^(i+1) µs) of the smallest bucket whose cumulative
+    /// count reaches quantile `q`; 0.0 on an empty histogram. Quantiles
+    /// are therefore conservative (rounded UP to a bucket boundary) and
+    /// non-zero whenever anything was recorded.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let count = self.count();
+        if count == 0 {
+            return 0.0;
+        }
+        let target = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return (1u128 << (i + 1)) as f64;
+            }
+        }
+        (1u128 << HIST_BUCKETS) as f64
+    }
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -23,6 +98,14 @@ pub struct Metrics {
     pub sweeps: AtomicU64,
     /// Ranked rows streamed back across all served sweeps.
     pub sweep_rows: AtomicU64,
+    /// Connections shed with `{"error":"busy"}` beyond the accept cap.
+    pub rejected_busy: AtomicU64,
+    /// Connections dropped by the socket read/write timeout.
+    pub conn_timeouts: AtomicU64,
+    /// Latency distributions per command class.
+    pub predict_hist: LatencyHistogram,
+    pub sweep_hist: LatencyHistogram,
+    pub flush_hist: LatencyHistogram,
 }
 
 impl Metrics {
@@ -37,11 +120,31 @@ impl Metrics {
             predictions: self.predictions.load(Ordering::Relaxed),
             sweeps: self.sweeps.load(Ordering::Relaxed),
             sweep_rows: self.sweep_rows.load(Ordering::Relaxed),
+            rejected_busy: self.rejected_busy.load(Ordering::Relaxed),
+            conn_timeouts: self.conn_timeouts.load(Ordering::Relaxed),
+            predict_hist: self.predict_hist.snapshot(),
+            sweep_hist: self.sweep_hist.snapshot(),
+            flush_hist: self.flush_hist.snapshot(),
         }
     }
 
     pub fn add(&self, c: &AtomicU64, n: u64) {
         c.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Largest u64 an f64 JSON number carries exactly.
+const MAX_EXACT: u64 = 1 << 53;
+
+/// Insert counter `name`, saturating above 2^53 (the f64-exact range)
+/// with an explicit `<name>_overflow` marker instead of silently
+/// rounding.
+fn insert_counter(j: &mut Json, name: &str, v: u64) {
+    if v > MAX_EXACT {
+        j.insert(name, Json::Num(MAX_EXACT as f64));
+        j.insert(&format!("{name}_overflow"), Json::Bool(true));
+    } else {
+        j.insert(name, Json::Num(v as f64));
     }
 }
 
@@ -56,6 +159,11 @@ pub struct MetricsSnapshot {
     pub predictions: u64,
     pub sweeps: u64,
     pub sweep_rows: u64,
+    pub rejected_busy: u64,
+    pub conn_timeouts: u64,
+    pub predict_hist: HistSnapshot,
+    pub sweep_hist: HistSnapshot,
+    pub flush_hist: HistSnapshot,
 }
 
 impl MetricsSnapshot {
@@ -67,19 +175,74 @@ impl MetricsSnapshot {
         }
     }
 
-    pub fn to_json(&self) -> crate::util::json::Json {
-        use crate::util::json::Json;
-        Json::obj(vec![
-            ("queries", Json::Num(self.queries as f64)),
-            ("batches", Json::Num(self.batches as f64)),
-            ("full_flushes", Json::Num(self.full_flushes as f64)),
-            ("deadline_flushes", Json::Num(self.deadline_flushes as f64)),
-            ("mean_batch_rows", Json::Num(self.mean_batch_rows())),
-            ("exec_us", Json::Num(self.exec_us as f64)),
-            ("predictions", Json::Num(self.predictions as f64)),
-            ("sweeps", Json::Num(self.sweeps as f64)),
-            ("sweep_rows", Json::Num(self.sweep_rows as f64)),
-        ])
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::Obj(Default::default());
+        insert_counter(&mut j, "queries", self.queries);
+        insert_counter(&mut j, "batches", self.batches);
+        insert_counter(&mut j, "full_flushes", self.full_flushes);
+        insert_counter(&mut j, "deadline_flushes", self.deadline_flushes);
+        j.insert("mean_batch_rows", Json::Num(self.mean_batch_rows()));
+        insert_counter(&mut j, "exec_us", self.exec_us);
+        insert_counter(&mut j, "predictions", self.predictions);
+        insert_counter(&mut j, "sweeps", self.sweeps);
+        insert_counter(&mut j, "sweep_rows", self.sweep_rows);
+        insert_counter(&mut j, "rejected_busy", self.rejected_busy);
+        insert_counter(&mut j, "conn_timeouts", self.conn_timeouts);
+        // quantiles are omitted while a histogram is empty, so a fresh
+        // server's stats stay free of meaningless zeros
+        for (prefix, h) in [
+            ("predict", &self.predict_hist),
+            ("sweep", &self.sweep_hist),
+            ("flush", &self.flush_hist),
+        ] {
+            if h.count() > 0 {
+                j.insert(&format!("{prefix}_p50_us"), Json::Num(h.quantile_us(0.50)));
+                j.insert(&format!("{prefix}_p95_us"), Json::Num(h.quantile_us(0.95)));
+                j.insert(&format!("{prefix}_p99_us"), Json::Num(h.quantile_us(0.99)));
+            }
+        }
+        j
+    }
+
+    /// Prometheus text exposition (version 0.0.4) of every counter and
+    /// histogram. The caller may append extra gauge lines (op-cache
+    /// stats) before serving.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in [
+            ("fgpm_queries_total", self.queries),
+            ("fgpm_batches_total", self.batches),
+            ("fgpm_full_flushes_total", self.full_flushes),
+            ("fgpm_deadline_flushes_total", self.deadline_flushes),
+            ("fgpm_batched_rows_total", self.batched_rows),
+            ("fgpm_exec_us_total", self.exec_us),
+            ("fgpm_predictions_total", self.predictions),
+            ("fgpm_sweeps_total", self.sweeps),
+            ("fgpm_sweep_rows_total", self.sweep_rows),
+            ("fgpm_rejected_busy_total", self.rejected_busy),
+            ("fgpm_conn_timeouts_total", self.conn_timeouts),
+        ] {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (name, h) in [
+            ("fgpm_predict_latency_us", &self.predict_hist),
+            ("fgpm_sweep_latency_us", &self.sweep_hist),
+            ("fgpm_flush_latency_us", &self.flush_hist),
+        ] {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let last = h.buckets.iter().rposition(|&n| n > 0);
+            let mut cum = 0u64;
+            if let Some(last) = last {
+                for (i, &n) in h.buckets.iter().enumerate().take(last + 1) {
+                    cum += n;
+                    out.push_str(&format!("{name}_bucket{{le=\"{}\"}} {cum}\n", 1u128 << (i + 1)));
+                }
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+            out.push_str(&format!("{name}_sum {}\n", h.sum_us));
+            out.push_str(&format!("{name}_count {cum}\n"));
+        }
+        out
     }
 }
 
@@ -105,10 +268,90 @@ mod tests {
         m.add(&m.predictions, 1);
         let j = m.snapshot().to_json();
         assert_eq!(j.get("predictions").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("rejected_busy").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("conn_timeouts").unwrap().as_f64(), Some(0.0));
+        // empty histograms contribute no quantile keys
+        assert!(j.get("predict_p50_us").is_none(), "{j}");
     }
 
     #[test]
     fn empty_mean_is_zero() {
         assert_eq!(Metrics::default().snapshot().mean_batch_rows(), 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.snapshot().quantile_us(0.5), 0.0, "empty histogram");
+        for us in [0, 1, 3, 100, 100, 100, 5000] {
+            h.record_us(us);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 7);
+        assert_eq!(s.sum_us, 5304);
+        // bucket upper bounds: p50 of {0,1,3,100,100,100,5000} lands in
+        // [64,128) -> reported 128; p99 in [4096,8192) -> 8192
+        assert_eq!(s.quantile_us(0.50), 128.0);
+        assert_eq!(s.quantile_us(0.99), 8192.0);
+        assert!(s.quantile_us(0.01) > 0.0, "any record makes quantiles non-zero");
+    }
+
+    #[test]
+    fn bucket_of_is_monotone_and_capped() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        let mut prev = 0;
+        for us in [0u64, 1, 2, 5, 17, 1000, 1 << 20, 1 << 45, u64::MAX] {
+            let b = bucket_of(us);
+            assert!(b >= prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn counters_above_2_pow_53_saturate_with_overflow_flag() {
+        let m = Metrics::default();
+        // exactly representable boundary: no flag
+        m.add(&m.queries, MAX_EXACT);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("queries").unwrap().as_f64(), Some(MAX_EXACT as f64));
+        assert!(j.get("queries_overflow").is_none(), "{j}");
+        // one past the boundary: saturate + explicit marker (2^53 + 1
+        // rounds back to 2^53 in f64, so without the flag the overflow
+        // would be silent)
+        m.add(&m.queries, 1);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("queries").unwrap().as_f64(), Some(MAX_EXACT as f64));
+        assert_eq!(j.get("queries_overflow").unwrap().as_bool(), Some(true));
+        // round-trips through the writer without losing the marker
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("queries_overflow").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let m = Metrics::default();
+        m.add(&m.queries, 3);
+        m.predict_hist.record_us(100);
+        m.predict_hist.record_us(200);
+        let text = m.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE fgpm_queries_total counter\nfgpm_queries_total 3\n"));
+        assert!(text.contains("# TYPE fgpm_predict_latency_us histogram\n"), "{text}");
+        assert!(text.contains("fgpm_predict_latency_us_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("fgpm_predict_latency_us_sum 300"), "{text}");
+        assert!(text.contains("fgpm_predict_latency_us_count 2"), "{text}");
+        // cumulative buckets are monotone non-decreasing
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("fgpm_predict_latency_us_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "{line}");
+            prev = v;
+        }
+        // an empty histogram still exposes +Inf/sum/count
+        assert!(text.contains("fgpm_sweep_latency_us_bucket{le=\"+Inf\"} 0"), "{text}");
     }
 }

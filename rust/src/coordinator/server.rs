@@ -311,6 +311,17 @@ fn summary_json(report: &SweepReport) -> Json {
         fields.push(("best_goodput_frac", Json::Num(report.best_goodput_frac())));
         fields.push(("best_useful_flop_frac", Json::Num(report.best_useful_flop_frac())));
     }
+    // phase attribution (wall-clock, so only meaningful when non-zero;
+    // omitted at the 0.0 default for byte-compat with older clients)
+    if report.prefetch_us > 0.0 {
+        fields.push(("prefetch_us", Json::Num(report.prefetch_us)));
+    }
+    if report.compose_us > 0.0 {
+        fields.push(("compose_us", Json::Num(report.compose_us)));
+    }
+    if report.bound_us > 0.0 {
+        fields.push(("bound_us", Json::Num(report.bound_us)));
+    }
     Json::obj(vec![("summary", Json::obj(fields))])
 }
 
@@ -445,6 +456,28 @@ pub fn handle_line(svc: &PredictionService, line: &str) -> String {
             j.insert("op_cache_disk_hit_rate", Json::Num(cache.disk_hit_rate()));
             j.to_string()
         }
+        "metrics" => {
+            // Prometheus text exposition (the only format). The reply
+            // ends with '\n', so the connection writer's newline leaves
+            // a BLANK line terminating the multi-line response — that is
+            // the framing scrapers read until (PROTOCOL.md §metrics).
+            if req.str_at("format").is_some_and(|f| f != "prometheus") {
+                return err_json("unknown metrics format (prometheus)");
+            }
+            let mut text = svc.metrics.snapshot().to_prometheus();
+            let cache = svc.op_cache.stats();
+            for (name, v) in [
+                ("fgpm_op_cache_hits", cache.hits as f64),
+                ("fgpm_op_cache_disk_hits", cache.disk_hits as f64),
+                ("fgpm_op_cache_misses", cache.misses as f64),
+                ("fgpm_op_cache_entries", cache.entries as f64),
+                ("fgpm_op_cache_disk_entries", cache.disk_entries as f64),
+                ("fgpm_op_cache_hit_rate", cache.hit_rate()),
+            ] {
+                text.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+            }
+            text
+        }
         "predict" => {
             let Some(model) = req.str_at("model").and_then(ModelCfg::by_name) else {
                 return err_json("unknown model (gpt20b | llama13b | llemma7b)");
@@ -511,7 +544,19 @@ fn handle_conn(svc: Arc<PredictionService>, stream: TcpStream, _permit: ConnPerm
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         // a read timeout surfaces as Err -> disconnect the stuck peer
-        let Ok(line) = line else { break };
+        // (and count it; other I/O errors are plain disconnects)
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                ) {
+                    svc.metrics.add(&svc.metrics.conn_timeouts, 1);
+                }
+                break;
+            }
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -542,6 +587,7 @@ fn accept_loop(listener: TcpListener, svc: Arc<PredictionService>, opts: ServeOp
         // only this loop increments, so check-then-add cannot overshoot;
         // handler threads decrementing concurrently can only free slots
         if active.load(Ordering::SeqCst) >= opts.max_conns {
+            svc.metrics.add(&svc.metrics.rejected_busy, 1);
             let mut s = stream;
             let _ = s.set_write_timeout(Some(Duration::from_secs(1)));
             let _ = s.write_all(b"{\"error\":\"busy\"}\n");
@@ -948,6 +994,77 @@ mod tests {
         // and the connection is closed afterwards
         let mut rest = String::new();
         assert_eq!(reader.read_line(&mut rest).unwrap(), 0);
+    }
+
+    #[test]
+    fn metrics_prometheus_exposition_over_handle_line() {
+        let s = svc();
+        let resp = handle_line(
+            &s,
+            r#"{"cmd":"predict","model":"llemma7b","parallel":"2-2-2","platform":"perlmutter"}"#,
+        );
+        assert!(!resp.contains("error"), "{resp}");
+        let text = handle_line(&s, r#"{"cmd":"metrics"}"#);
+        // newline-terminated, so the conn writer's extra '\n' leaves the
+        // blank line that frames the multi-line reply
+        assert!(text.ends_with('\n'), "{text:?}");
+        assert!(text.contains("# TYPE fgpm_predictions_total counter\nfgpm_predictions_total 1\n"), "{text}");
+        assert!(text.contains("# TYPE fgpm_predict_latency_us histogram"), "{text}");
+        assert!(text.contains("fgpm_predict_latency_us_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("fgpm_op_cache_hit_rate"), "{text}");
+        // the explicit format is accepted; anything else is rejected
+        assert!(handle_line(&s, r#"{"cmd":"metrics","format":"prometheus"}"#)
+            .contains("fgpm_queries_total"));
+        assert!(handle_line(&s, r#"{"cmd":"metrics","format":"json"}"#).contains("error"));
+        s.shutdown();
+    }
+
+    #[test]
+    fn busy_and_timeout_counters_are_served_over_stats() {
+        use std::io::{BufRead, BufReader, Read, Write};
+        let addr = serve_background_opts(
+            svc(),
+            ServeOpts { max_conns: 1, read_timeout: Duration::from_millis(150) },
+        )
+        .unwrap();
+        // the first connection occupies the single slot without sending
+        let mut held = std::net::TcpStream::connect(addr).unwrap();
+        held.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // ... so the next one is shed with a busy line (accepted in FIFO
+        // order behind the held connection, which already took the slot)
+        {
+            let conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn);
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert_eq!(line.trim(), r#"{"error":"busy"}"#);
+        }
+        // the held connection idles past the read timeout -> server hangs
+        // up (counting conn_timeouts) and frees the slot
+        let mut buf = [0u8; 16];
+        let n = held.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "server should time out the idle connection");
+        // the freed slot serves stats; retry while the handler thread is
+        // still releasing its permit (each shed retry only grows
+        // rejected_busy, which the assertion below tolerates)
+        let stats = 'retry: {
+            for _ in 0..200 {
+                let mut conn = std::net::TcpStream::connect(addr).unwrap();
+                conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+                conn.write_all(b"{\"cmd\":\"stats\"}\n").unwrap();
+                let mut reader = BufReader::new(conn);
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                if line.contains("queries") {
+                    break 'retry line;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            panic!("no free slot for stats after retries");
+        };
+        let j = Json::parse(stats.trim()).unwrap();
+        assert!(j.f64_at("rejected_busy").unwrap() >= 1.0, "{stats}");
+        assert!(j.f64_at("conn_timeouts").unwrap() >= 1.0, "{stats}");
     }
 
     #[test]

@@ -177,6 +177,7 @@ impl PredictionService {
         platform: &Platform,
     ) -> ComponentPrediction {
         let mut client = self.client();
+        let t0 = Instant::now();
         let cp = crate::predictor::e2e::predict_with_cache(
             model,
             par,
@@ -184,6 +185,7 @@ impl PredictionService {
             &mut client,
             &self.op_cache,
         );
+        self.metrics.predict_hist.record_us(t0.elapsed().as_micros() as u64);
         self.metrics.add(&self.metrics.predictions, 1);
         cp
     }
@@ -207,7 +209,10 @@ impl PredictionService {
         spec: &SweepSpec,
     ) -> Result<SweepReport, crate::sweep::SweepError> {
         let mut client = self.client();
+        let t0 = Instant::now();
         let report = self.engine.sweep(model, platform, spec, &mut client)?;
+        // failed sweeps count in neither the counter nor the histogram
+        self.metrics.sweep_hist.record_us(t0.elapsed().as_micros() as u64);
         self.metrics.add(&self.metrics.sweeps, 1);
         self.metrics.add(&self.metrics.sweep_rows, report.rows.len() as u64);
         Ok(report)
@@ -246,7 +251,9 @@ fn run_batch(backend: &mut dyn BatchPredictor, batch: Batch, m: &Metrics) {
     let rows: Vec<Vec<f64>> = batch.queries.iter().map(|q| q.row.clone()).collect();
     let t0 = Instant::now();
     let preds = backend.predict_batch(batch.key, &rows);
-    m.add(&m.exec_us, t0.elapsed().as_micros() as u64);
+    let elapsed_us = t0.elapsed().as_micros() as u64;
+    m.add(&m.exec_us, elapsed_us);
+    m.flush_hist.record_us(elapsed_us);
     m.add(&m.batches, 1);
     m.add(&m.batched_rows, rows.len() as u64);
     for (q, p) in batch.queries.into_iter().zip(preds) {
@@ -391,6 +398,28 @@ mod tests {
         let snap = svc.metrics.snapshot();
         assert_eq!(snap.queries, 4);
         assert!(snap.batches >= 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn latency_histograms_record_served_commands() {
+        let sizes = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let svc = PredictionService::start(
+            Box::new(Recording { sizes }),
+            BatcherCfg { max_batch: 256, max_wait: Duration::from_millis(1) },
+        );
+        let model = crate::config::ModelCfg::llemma7b();
+        let par = crate::config::ParallelCfg::new(2, 2, 2);
+        let platform = crate::config::Platform::perlmutter();
+        let _ = svc.predict_config(&model, &par, &platform);
+        let _ = svc.sweep(&model, &platform, &crate::sweep::SweepSpec::new(8)).unwrap();
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.predict_hist.count(), 1);
+        assert_eq!(snap.sweep_hist.count(), 1);
+        assert!(snap.flush_hist.count() >= 1, "every flushed batch lands in flush_hist");
+        // derived quantiles are non-zero once anything was recorded
+        assert!(snap.predict_hist.quantile_us(0.5) > 0.0);
+        assert!(snap.sweep_hist.quantile_us(0.99) > 0.0);
         svc.shutdown();
     }
 }

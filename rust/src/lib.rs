@@ -32,6 +32,7 @@ pub mod sampling;
 pub mod forest;
 pub mod predictor;
 pub mod faults;
+pub mod obs;
 pub mod sweep;
 pub mod baselines;
 pub mod runtime;

@@ -1,0 +1,23 @@
+//! Zero-dependency observability: Chrome trace-event JSON export
+//! (Perfetto / `chrome://tracing`-loadable, written via
+//! [`crate::util::json`]) plus a lock-free per-thread span recorder for
+//! profiling the engine's own execution.
+//!
+//! Two trace sources share one output format:
+//!
+//! * [`trace::schedule_trace_json`] renders a *predicted* run — an
+//!   executed [`crate::pipeline::Schedule`] — as per-(rank = pid,
+//!   chunk = tid) duration events with F/B/W/P2P categories and
+//!   send→recv flow arrows. Timestamps are deterministic model-µs, so
+//!   the output is golden-testable (`tests/golden_traces.rs`).
+//! * [`span::span`] + [`trace::spans_to_trace_json`] record the sweep
+//!   engine's *own* wall-clock execution (phase-A prefetch, batched
+//!   backend calls, per-worker phase-B compose, bound scoring, cache
+//!   save/load) when `--trace-out` is passed; with recording disabled
+//!   (the default) every span is a no-op and nothing is allocated.
+
+pub mod span;
+pub mod trace;
+
+pub use span::{disable, drain, enable, enabled, span, SpanGuard, SpanRecord};
+pub use trace::{schedule_trace_json, spans_to_trace_json};

@@ -1,0 +1,292 @@
+//! Chrome trace-event JSON renderers.
+//!
+//! Format reference: the Trace Event Format accepted by Perfetto and
+//! `chrome://tracing` — `"X"` complete events with `ts`/`dur`, `"M"`
+//! metadata events naming processes/threads, and `"s"`/`"f"` flow pairs
+//! drawing send→recv arrows. All timestamps are µs.
+//!
+//! Determinism contract (relied on by `tests/golden_traces.rs` and the
+//! `GOLDEN_REGEN=1` staleness gate): for a given [`Schedule`] the output
+//! bytes are a pure function of the schedule matrices — events are
+//! emitted in a fixed pass order, stably sorted by (pid, tid, ts), and
+//! serialized through [`Json`]'s sorted-key writer.
+
+use crate::pipeline::Schedule;
+use crate::util::json::Json;
+
+use super::span::SpanRecord;
+
+fn meta(pid: usize, tid: usize, what: &str, name: String) -> Json {
+    Json::obj(vec![
+        ("args", Json::obj(vec![("name", Json::Str(name))])),
+        ("name", Json::Str(what.to_string())),
+        ("ph", Json::Str("M".into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(0.0)),
+    ])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn complete(pid: usize, tid: usize, ts: f64, dur: f64, cat: &str, name: String, mb: usize) -> Json {
+    Json::obj(vec![
+        ("args", Json::obj(vec![("mb", Json::Num(mb as f64))])),
+        ("cat", Json::Str(cat.to_string())),
+        ("dur", Json::Num(dur)),
+        ("name", Json::Str(name)),
+        ("ph", Json::Str("X".into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts)),
+    ])
+}
+
+fn flow(pid: usize, tid: usize, ts: f64, ph: &str, id: usize) -> Json {
+    let mut fields = vec![
+        ("cat", Json::Str("P2P".into())),
+        ("id", Json::Num(id as f64)),
+        ("name", Json::Str("p2p".into())),
+        ("ph", Json::Str(ph.to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts)),
+    ];
+    if ph == "f" {
+        // bind to the enclosing slice's end so arrows land on the task
+        fields.push(("bp", Json::Str("e".into())));
+    }
+    Json::obj(fields)
+}
+
+/// Who consumes the transfer leaving task (s, c) in the given direction:
+/// forward activations flow down the pipeline (wrapping to the next
+/// chunk for interleaved walks), input gradients flow back up (wrapping
+/// to the previous chunk). `None` for the terminal task with no
+/// consumer — the executor pins `arrive == end` there, so no P2P event
+/// is emitted either way.
+fn receiver(fwd: bool, s: usize, c: usize, stages: usize, chunks: usize) -> Option<(usize, usize)> {
+    if fwd {
+        if s + 1 < stages {
+            Some((s + 1, c))
+        } else if c + 1 < chunks {
+            Some((0, c + 1))
+        } else {
+            None
+        }
+    } else if s > 0 {
+        Some((s - 1, c))
+    } else if c > 0 {
+        Some((stages - 1, c - 1))
+    } else {
+        None
+    }
+}
+
+/// Render an executed schedule as a complete trace: pipeline ranks
+/// become processes, virtual-stage chunks become threads, and every
+/// exposed boundary crossing gets a P2P slice on the sender's track plus
+/// a flow arrow to the consuming task's arrival instant.
+pub fn schedule_trace_json(label: &str, sched: &Schedule) -> Json {
+    let stages = sched.stages();
+    let m = sched.micro_batches();
+    let chunks = sched.chunks;
+    // (pid, tid, ts, event) — sorted stably at the end so ties keep
+    // this emission order (metadata first, then F, B, W passes)
+    let mut evs: Vec<(usize, usize, f64, Json)> = Vec::new();
+
+    for s in 0..stages {
+        evs.push((s, 0, 0.0, meta(s, 0, "process_name", format!("rank {s}"))));
+        for c in 0..chunks {
+            evs.push((s, c, 0.0, meta(s, c, "thread_name", format!("stage {s} chunk {c}"))));
+        }
+    }
+
+    // pass 2: forward tasks + their exposed sends
+    for s in 0..stages {
+        for c in 0..chunks {
+            for i in 0..m {
+                let idx = c * m + i;
+                let (ts, te) = (sched.fwd_start[s][idx], sched.fwd_end[s][idx]);
+                evs.push((s, c, ts, complete(s, c, ts, te - ts, "F", format!("F{i}"), i)));
+                let arrive = sched.fwd_arrive[s][idx];
+                if let Some((rs, rc)) = receiver(true, s, c, stages, chunks) {
+                    if arrive > te {
+                        let id = (s * chunks + c) * m + i;
+                        evs.push((s, c, te, complete(s, c, te, arrive - te, "P2P", format!("send F{i}"), i)));
+                        evs.push((s, c, te, flow(s, c, te, "s", id)));
+                        evs.push((rs, rc, arrive, flow(rs, rc, arrive, "f", id)));
+                    }
+                }
+            }
+        }
+    }
+
+    // pass 3: backward tasks + their exposed sends
+    for s in 0..stages {
+        for c in 0..chunks {
+            for i in 0..m {
+                let idx = c * m + i;
+                let (ts, te) = (sched.bwd_start[s][idx], sched.bwd_end[s][idx]);
+                evs.push((s, c, ts, complete(s, c, ts, te - ts, "B", format!("B{i}"), i)));
+                let arrive = sched.bwd_arrive[s][idx];
+                if let Some((rs, rc)) = receiver(false, s, c, stages, chunks) {
+                    if arrive > te {
+                        let id = stages * chunks * m + (s * chunks + c) * m + i;
+                        evs.push((s, c, te, complete(s, c, te, arrive - te, "P2P", format!("send B{i}"), i)));
+                        evs.push((s, c, te, flow(s, c, te, "s", id)));
+                        evs.push((rs, rc, arrive, flow(rs, rc, arrive, "f", id)));
+                    }
+                }
+            }
+        }
+    }
+
+    // pass 4: deferred weight-grad tasks (ZB-H1 only; empty elsewhere)
+    for s in 0..stages {
+        for idx in 0..sched.wgt_start[s].len() {
+            let (c, i) = (idx / m, idx % m);
+            let (ts, te) = (sched.wgt_start[s][idx], sched.wgt_end[s][idx]);
+            evs.push((s, c, ts, complete(s, c, ts, te - ts, "W", format!("W{i}"), i)));
+        }
+    }
+
+    evs.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.total_cmp(&b.2)));
+    Json::obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("schedule", Json::Str(label.to_string())),
+        ("traceEvents", Json::Arr(evs.into_iter().map(|e| e.3).collect())),
+    ])
+}
+
+/// Render drained engine spans ([`super::span::drain`]) as a trace: one
+/// process ("fgpm engine"), one thread per recorder tid.
+pub fn spans_to_trace_json(spans: &[SpanRecord]) -> Json {
+    let mut evs: Vec<(u64, f64, Json)> = Vec::new();
+    evs.push((0, 0.0, meta(0, 0, "process_name", "fgpm engine".to_string())));
+    let mut seen = std::collections::BTreeSet::new();
+    for sp in spans {
+        if seen.insert(sp.tid) {
+            evs.push((sp.tid, 0.0, meta(0, sp.tid as usize, "thread_name", format!("thread {}", sp.tid))));
+        }
+    }
+    for sp in spans {
+        evs.push((
+            sp.tid,
+            sp.start_us,
+            Json::obj(vec![
+                ("cat", Json::Str(sp.cat.to_string())),
+                ("dur", Json::Num(sp.dur_us)),
+                ("name", Json::Str(sp.name.clone())),
+                ("ph", Json::Str("X".into())),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(sp.tid as f64)),
+                ("ts", Json::Num(sp.start_us)),
+            ]),
+        ));
+    }
+    evs.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    Json::obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("traceEvents", Json::Arr(evs.into_iter().map(|e| e.2).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{execute, ScheduleKind, TaskTimes};
+
+    fn sched(kind: ScheduleKind) -> Schedule {
+        let times = TaskTimes::uniform(4, 8, 2.0, 4.0)
+            .with_sends(vec![vec![0.7; 8]; 4], vec![vec![0.9; 8]; 4])
+            .with_overlap(0.5);
+        execute(kind.build().as_ref(), &times).unwrap()
+    }
+
+    fn events(j: &Json) -> Vec<Json> {
+        j.get("traceEvents").unwrap().as_arr().unwrap().to_vec()
+    }
+
+    #[test]
+    fn schedule_trace_has_required_keys_and_sorted_tracks() {
+        let j = schedule_trace_json("1f1b", &sched(ScheduleKind::OneFOneB));
+        assert_eq!(j.str_at("displayTimeUnit"), Some("ms"));
+        assert_eq!(j.str_at("schedule"), Some("1f1b"));
+        let evs = events(&j);
+        assert!(!evs.is_empty());
+        let mut prev: Option<(i64, i64, f64)> = None;
+        for e in &evs {
+            for key in ["ph", "ts", "pid", "tid"] {
+                assert!(e.get(key).is_some(), "missing {key}: {e}");
+            }
+            if let Some(d) = e.f64_at("dur") {
+                assert!(d >= 0.0, "{e}");
+            }
+            let k = (
+                e.get("pid").unwrap().as_i64().unwrap(),
+                e.get("tid").unwrap().as_i64().unwrap(),
+                e.f64_at("ts").unwrap(),
+            );
+            if let Some(p) = prev {
+                assert!(k >= p, "events not sorted per track: {k:?} after {p:?}");
+            }
+            prev = Some(k);
+        }
+    }
+
+    #[test]
+    fn flow_arrows_come_in_matched_pairs() {
+        let j = schedule_trace_json("1f1b", &sched(ScheduleKind::OneFOneB));
+        let evs = events(&j);
+        let ids = |ph: &str| -> Vec<i64> {
+            let mut v: Vec<i64> = evs
+                .iter()
+                .filter(|e| e.str_at("ph") == Some(ph))
+                .map(|e| e.get("id").unwrap().as_i64().unwrap())
+                .collect();
+            v.sort();
+            v
+        };
+        let (starts, ends) = (ids("s"), ids("f"));
+        assert!(!starts.is_empty());
+        assert_eq!(starts, ends, "every flow start needs exactly one finish");
+    }
+
+    #[test]
+    fn task_counts_match_schedule_matrix() {
+        for (kind, has_w) in [
+            (ScheduleKind::OneFOneB, false),
+            (ScheduleKind::GPipe, false),
+            (ScheduleKind::Interleaved1F1B { chunks: 2 }, false),
+            (ScheduleKind::ZbH1, true),
+        ] {
+            let s = sched(kind);
+            let total = s.stages() * s.chunks * s.micro_batches();
+            let j = schedule_trace_json(&kind.label(), &s);
+            let evs = events(&j);
+            let count = |cat: &str| evs.iter().filter(|e| e.str_at("cat") == Some(cat)).count();
+            assert_eq!(count("F"), total, "{kind:?}");
+            assert_eq!(count("B"), total, "{kind:?}");
+            assert_eq!(count("W") > 0, has_w, "{kind:?}");
+            // terminal tasks have no consumer: strictly fewer P2P slices
+            // than tasks, but interior crossings are all exposed here
+            assert!(count("P2P") > 0 && count("P2P") < 2 * total, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn spans_render_with_one_track_per_tid() {
+        let spans = vec![
+            SpanRecord { name: "a".into(), cat: "t", tid: 3, start_us: 1.0, dur_us: 2.0 },
+            SpanRecord { name: "b".into(), cat: "t", tid: 1, start_us: 0.5, dur_us: 0.1 },
+        ];
+        let j = spans_to_trace_json(&spans);
+        let evs = events(&j);
+        let threads = evs.iter().filter(|e| e.str_at("name") == Some("thread_name")).count();
+        assert_eq!(threads, 2);
+        let xs: Vec<&Json> = evs.iter().filter(|e| e.str_at("ph") == Some("X")).collect();
+        assert_eq!(xs.len(), 2);
+        // sorted by (tid, ts): tid 1 before tid 3
+        assert_eq!(xs[0].str_at("name"), Some("b"));
+    }
+}

@@ -264,6 +264,252 @@ fn compose(
     }
 }
 
+// ---------------------------------------------------------------------------
+// per-op cost attribution (`fgpm explain` / `predict --explain`)
+// ---------------------------------------------------------------------------
+
+/// One attribution row of the cost ledger: an op class × direction ×
+/// worst-network-tier bucket with the µs of the predicted step it owns.
+#[derive(Clone, Debug)]
+pub struct LedgerRow {
+    /// Pipeline component the time belongs to ("pipeline-compute",
+    /// "pp-p2p", "dp-sync", "optimizer", "dp-allgather").
+    pub component: &'static str,
+    /// "gemm" | "mem" | "collective" | "p2p".
+    pub class: &'static str,
+    /// "fwd" | "bwd", or "-" for direction-free components.
+    pub dir: &'static str,
+    /// Worst network tier the op crosses ("intra" | "rail" | "spine"),
+    /// "-" for pure compute.
+    pub tier: &'static str,
+    /// µs of the predicted step attributed to this row.
+    pub us: f64,
+    /// Comm µs HIDDEN under compute by overlap — informational; not part
+    /// of the step-time sum.
+    pub overlapped_us: f64,
+}
+
+/// The decomposed step: rows sum back to `total_us` (fp rounding aside —
+/// the closed forms add first-stage sync and the slowest update linearly
+/// after the pipeline body, so the reconstruction is exact by
+/// construction, not by approximation).
+#[derive(Clone, Debug)]
+pub struct Ledger {
+    pub label: String,
+    pub rows: Vec<LedgerRow>,
+    /// The critical-path stage (argmax fwd+bwd) whose op mix the compute
+    /// split is read from.
+    pub critical_stage: usize,
+    pub total_us: f64,
+}
+
+impl Ledger {
+    /// Sum of attributed µs over all rows (≈ `total_us` to fp rounding).
+    pub fn rows_sum_us(&self) -> f64 {
+        self.rows.iter().map(|r| r.us).sum()
+    }
+}
+
+fn class_of(l: &crate::ops::LoweredOp) -> &'static str {
+    use crate::ops::LoweredOp as L;
+    match l {
+        L::Gemm(_) | L::Flash { .. } => "gemm",
+        L::Mem { .. } => "mem",
+        L::AllReduce { .. } | L::AllGather { .. } => "collective",
+        L::P2p { .. } => "p2p",
+        // mixed sequences: comm decides the bucket, then gemm, then mem
+        L::Seq(v) => {
+            let classes: Vec<&'static str> = v.iter().map(class_of).collect();
+            for want in ["collective", "p2p", "gemm"] {
+                if classes.contains(&want) {
+                    return want;
+                }
+            }
+            "mem"
+        }
+    }
+}
+
+fn tier_of(l: &crate::ops::LoweredOp) -> &'static str {
+    use crate::net::topology::TierLevel;
+    match l.worst_tier() {
+        None => "-",
+        Some(TierLevel::Intra) => "intra",
+        Some(TierLevel::Rail) => "rail",
+        Some(TierLevel::Spine) => "spine",
+    }
+}
+
+/// Decompose one configuration's predicted step into the cost ledger
+/// (private per-call cache; see [`explain_with_cache`]).
+pub fn explain(
+    model: &ModelCfg,
+    par: &ParallelCfg,
+    platform: &Platform,
+    pred: &mut dyn BatchPredictor,
+) -> Ledger {
+    let shared = OpPredictionCache::new();
+    explain_with_cache(model, par, platform, pred, &shared)
+}
+
+/// [`explain`] over a shared cross-config cache — the service/CLI path,
+/// so `predict --explain` costs no extra backend round-trips beyond the
+/// prediction itself.
+pub fn explain_with_cache(
+    model: &ModelCfg,
+    par: &ParallelCfg,
+    platform: &Platform,
+    pred: &mut dyn BatchPredictor,
+    shared: &OpPredictionCache,
+) -> Ledger {
+    let plans: Vec<StagePlan> = stage_plans_mode(model, par, platform, /*paper_params=*/ true);
+    let mut cache = LocalOpCache::new(shared);
+    cache.prefetch(&mut *pred, plan_ops(&plans));
+    let cp = compose(model, par, &plans, &mut |op| cache.predict(&mut *pred, op));
+    build_ledger(model, par, &plans, &cp, &mut |op| cache.predict(&mut *pred, op))
+}
+
+/// The exact-sum decomposition. Every closed form in
+/// `pipeline::schedule` is `steady(body) + first_stage_sync +
+/// max_update` with the P2P terms entering only through `p2p_us`, so:
+///
+/// - `T_compute  = closed_form(p2p=0) − sync − update`  (pipeline body)
+/// - `exposed    = total − closed_form(p2p=0)`          (P2P exposure)
+/// - `sync`, `optimizer`, `allgather` re-add linearly.
+///
+/// `T_compute` is then split across (class × dir × tier) buckets in
+/// proportion to the critical-path stage's per-op predictions.
+fn build_ledger(
+    model: &ModelCfg,
+    par: &ParallelCfg,
+    plans: &[StagePlan],
+    cp: &ComponentPrediction,
+    get: &mut dyn FnMut(&OpInstance) -> f64,
+) -> Ledger {
+    use std::collections::BTreeMap;
+    let no_p2p = crate::pipeline::ClosedFormInputs {
+        micro_batches: model.iters_per_update,
+        stages: par.pp,
+        max_fwd: cp.stage_fwd_max(),
+        max_bwd: cp.stage_bwd_max(),
+        p2p_us: 0.0,
+        p2p_overlap: par.p2p_overlap(),
+        first_stage_sync: cp.dp_allreduce_first_us,
+        max_update: cp.max_update_us,
+    };
+    let t_nop2p = par.schedule.closed_form_runtime_us(&no_p2p);
+    let t_compute = t_nop2p - cp.dp_allreduce_first_us - cp.max_update_us;
+    // UNclamped exposure (unlike `pp_p2p_exposed_us`) so rows sum back
+    // to total_us exactly
+    let exposed_p2p = cp.total_us - t_nop2p;
+    let unoverlapped = par.schedule.closed_form_runtime_us(&crate::pipeline::ClosedFormInputs {
+        p2p_us: cp.pp_p2p_us,
+        p2p_overlap: 0.0,
+        ..no_p2p
+    }) - t_nop2p;
+    let hidden_p2p = (unoverlapped - exposed_p2p).max(0.0);
+
+    let critical_stage = (0..plans.len())
+        .max_by(|&a, &b| {
+            (cp.stage_fwd_us[a] + cp.stage_bwd_us[a])
+                .total_cmp(&(cp.stage_fwd_us[b] + cp.stage_bwd_us[b]))
+        })
+        .unwrap_or(0);
+    let mut mix: BTreeMap<(&'static str, &'static str, &'static str), f64> = BTreeMap::new();
+    let plan = &plans[critical_stage];
+    for (ops, dir) in [(&plan.fwd_ops, "fwd"), (&plan.bwd_ops, "bwd")] {
+        for op in ops {
+            *mix.entry((class_of(&op.lowered), dir, tier_of(&op.lowered))).or_insert(0.0) +=
+                get(op);
+        }
+    }
+    let weight: f64 = mix.values().sum();
+    let mut rows = Vec::new();
+    for (&(class, dir, tier), &w) in &mix {
+        if w <= 0.0 || weight <= 0.0 {
+            continue;
+        }
+        rows.push(LedgerRow {
+            component: "pipeline-compute",
+            class,
+            dir,
+            tier,
+            us: t_compute * (w / weight),
+            overlapped_us: 0.0,
+        });
+    }
+
+    if cp.pp_p2p_us > 0.0 {
+        // tier of the worst LIVE crossing — same liveness rule compose
+        // applies (wrap hops only count for interleaved chunk walks)
+        let wraps = matches!(par.schedule, crate::pipeline::ScheduleKind::Interleaved1F1B { chunks } if chunks > 1);
+        let mut tier = "-";
+        let mut worst = f64::NEG_INFINITY;
+        for (s, plan) in plans.iter().enumerate() {
+            for (op, live) in [
+                (&plan.pp_send_fwd, wraps || s + 1 < plans.len()),
+                (&plan.pp_send_bwd, wraps || s > 0),
+            ] {
+                if let (Some(op), true) = (op, live) {
+                    let t = get(op);
+                    if t > worst {
+                        worst = t;
+                        tier = tier_of(&op.lowered);
+                    }
+                }
+            }
+        }
+        rows.push(LedgerRow {
+            component: "pp-p2p",
+            class: "p2p",
+            dir: "-",
+            tier,
+            us: exposed_p2p,
+            overlapped_us: hidden_p2p,
+        });
+    }
+
+    if cp.dp_allreduce_first_us > 0.0 {
+        let op = &plans[0].dp_allreduce;
+        rows.push(LedgerRow {
+            component: "dp-sync",
+            class: class_of(&op.lowered),
+            dir: "-",
+            tier: tier_of(&op.lowered),
+            us: cp.dp_allreduce_first_us,
+            overlapped_us: 0.0,
+        });
+    }
+
+    let update_stage = (0..cp.update_us.len())
+        .max_by(|&a, &b| cp.update_us[a].total_cmp(&cp.update_us[b]))
+        .unwrap_or(0);
+    let optimizer_us = cp.max_update_us - cp.dp_allgather_max_us;
+    if optimizer_us > 0.0 {
+        let op = &plans[update_stage].optimizer;
+        rows.push(LedgerRow {
+            component: "optimizer",
+            class: class_of(&op.lowered),
+            dir: "-",
+            tier: tier_of(&op.lowered),
+            us: optimizer_us,
+            overlapped_us: 0.0,
+        });
+    }
+    if cp.dp_allgather_max_us > 0.0 {
+        let op = &plans[update_stage].dp_allgather;
+        rows.push(LedgerRow {
+            component: "dp-allgather",
+            class: class_of(&op.lowered),
+            dir: "-",
+            tier: tier_of(&op.lowered),
+            us: cp.dp_allgather_max_us,
+            overlapped_us: 0.0,
+        });
+    }
+    Ledger { label: cp.label.clone(), rows, critical_stage, total_us: cp.total_us }
+}
+
 /// An oracle predictor that answers with the simulator's deterministic
 /// times — isolates composition error from regression error in tests and
 /// ablations.
@@ -436,6 +682,56 @@ mod tests {
         assert!(a.total_us != b.total_us);
         // 8-stage pipeline has fewer encoders per stage -> smaller max_fwd
         assert!(b.stage_fwd_max() < a.stage_fwd_max());
+    }
+
+    #[test]
+    fn explain_ledger_rows_sum_to_the_predicted_step() {
+        let (m, par, p) = cfg();
+        let mut oracle = OraclePredictor { platform: p.clone() };
+        let cp = predict(&m, &par, &p, &mut oracle);
+        let ledger = explain(&m, &par, &p, &mut oracle);
+        assert_eq!(ledger.total_us, cp.total_us);
+        let sum = ledger.rows_sum_us();
+        let rel = (sum - cp.total_us).abs() / cp.total_us;
+        // the acceptance bar is 0.1%; the decomposition is exact by
+        // construction, so hold it to fp-rounding tightness
+        assert!(rel < 1e-9, "ledger sum {sum} vs total {} (rel {rel})", cp.total_us);
+        // structure: compute split by class/dir, P2P, sync, update
+        assert!(ledger.rows.iter().any(|r| r.class == "gemm" && r.dir == "fwd"), "{ledger:?}");
+        assert!(ledger.rows.iter().any(|r| r.class == "mem" && r.dir == "bwd"), "{ledger:?}");
+        assert!(ledger.rows.iter().any(|r| r.component == "pp-p2p" && r.class == "p2p"));
+        assert!(ledger.rows.iter().any(|r| r.component == "dp-sync"));
+        assert!(ledger.rows.iter().any(|r| r.component == "optimizer"));
+        assert!(ledger
+            .rows
+            .iter()
+            .any(|r| r.component == "dp-allgather" && r.class == "collective"));
+        assert!(ledger.rows.iter().all(|r| r.us >= 0.0 && r.overlapped_us >= 0.0), "{ledger:?}");
+        // tp-first keeps MP collectives on NVLink: some tiered row exists
+        assert!(ledger.rows.iter().any(|r| r.class == "collective" && r.tier != "-"));
+        assert!(ledger.critical_stage < par.pp);
+    }
+
+    #[test]
+    fn explain_ledger_exact_across_schedules_and_overlap() {
+        let (m, base, p) = cfg();
+        for par in [
+            base,
+            base.with_schedule(ScheduleKind::GPipe),
+            base.with_schedule(ScheduleKind::Interleaved1F1B { chunks: 2 }),
+            base.with_schedule(ScheduleKind::ZbH1),
+            base.with_p2p_overlap(0.5),
+        ] {
+            let mut oracle = OraclePredictor { platform: p.clone() };
+            let ledger = explain(&m, &par, &p, &mut oracle);
+            let rel = (ledger.rows_sum_us() - ledger.total_us).abs() / ledger.total_us;
+            assert!(rel < 1e-9, "{}: rel {rel}", par.label());
+            if par.p2p_overlap() > 0.0 {
+                // overlap HIDES P2P — the ledger reports it, not drops it
+                let p2p = ledger.rows.iter().find(|r| r.class == "p2p").unwrap();
+                assert!(p2p.overlapped_us > 0.0, "{p2p:?}");
+            }
+        }
     }
 
     #[test]

@@ -117,6 +117,39 @@ pub fn goodput_sweep_table_text(
     s
 }
 
+/// The `fgpm explain` / `predict --explain` attribution table: one row
+/// per (component, op class, direction, worst network tier) bucket of
+/// the predicted step, with µs, % of step, and the comm µs hidden under
+/// compute by overlap. The rows reconstruct the step time exactly (the
+/// closed forms are linear in their components), so the footer's
+/// `sum` line is a built-in self-check rather than an approximation.
+pub fn explain_table_text(ledger: &crate::predictor::e2e::Ledger) -> String {
+    let mut s = format!(
+        "{} — predicted step {:.2} ms (critical-path stage {})\n",
+        ledger.label,
+        ledger.total_us / 1e3,
+        ledger.critical_stage
+    );
+    s.push_str(&format!(
+        "{:<18} {:<10} {:<4} {:<6} {:>12} {:>7} {:>12}\n",
+        "component", "class", "dir", "tier", "µs", "% step", "overlap µs"
+    ));
+    for r in &ledger.rows {
+        let pct = if ledger.total_us > 0.0 { r.us / ledger.total_us * 100.0 } else { 0.0 };
+        s.push_str(&format!(
+            "{:<18} {:<10} {:<4} {:<6} {:>12.1} {:>6.1}% {:>12.1}\n",
+            r.component, r.class, r.dir, r.tier, r.us, pct, r.overlapped_us
+        ));
+    }
+    let sum = ledger.rows_sum_us();
+    s.push_str(&format!(
+        "{:<18} {:<10} {:<4} {:<6} {:>12.1} {:>6.1}%\n",
+        "sum", "", "", "", sum,
+        if ledger.total_us > 0.0 { sum / ledger.total_us * 100.0 } else { 0.0 }
+    ));
+    s
+}
+
 /// The `fgpm goodput` grid: closed-form goodput fraction over checkpoint
 /// interval (rows) × GPU MTBF (columns), with the per-column Young
 /// optimum `√(2δ/λ)` annotated under the table and the best cell marked.
@@ -673,6 +706,29 @@ mod tests {
             lines[3],
             "(2 strategies skipped: too few micro-batches for pipeline depth)"
         );
+    }
+
+    #[test]
+    fn explain_table_renders_rows_and_exact_sum_footer() {
+        let ledger = crate::predictor::e2e::explain(
+            &ModelCfg::llemma7b(),
+            &ParallelCfg::new(4, 2, 2),
+            &Platform::perlmutter(),
+            &mut OraclePredictor { platform: Platform::perlmutter() },
+        );
+        let t = explain_table_text(&ledger);
+        assert!(t.contains("critical-path stage"), "{t}");
+        assert!(t.contains("pipeline-compute"), "{t}");
+        assert!(t.contains("gemm"), "{t}");
+        assert!(t.lines().next().unwrap().contains("predicted step"), "{t}");
+        // the footer's sum reconstructs the step within display precision
+        let sum_line = t.lines().last().unwrap();
+        assert!(sum_line.starts_with("sum"), "{t}");
+        assert!(sum_line.contains("100.0%"), "{t}");
+        // every body row carries all seven columns
+        for l in t.lines().skip(2) {
+            assert!(l.split_whitespace().count() >= 6, "{l}");
+        }
     }
 
     #[test]

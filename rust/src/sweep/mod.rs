@@ -167,6 +167,25 @@ pub struct SweepReport {
     /// per distinct op per config).
     pub cache: CacheStats,
     pub elapsed: Duration,
+    /// Wall-clock µs spent in phase A (plan building + the batched
+    /// cross-config prefetch), summed over branch-and-bound chunks.
+    /// Timing, not model output: rows are unaffected, and the wire
+    /// summary omits these keys at their 0.0 default.
+    pub prefetch_us: f64,
+    /// Wall-clock µs spent in phase B (per-config composition, serial or
+    /// across scoped workers), summed over chunks.
+    pub compose_us: f64,
+    /// Wall-clock µs spent scoring analytical lower bounds (0.0 unless
+    /// `top_k` pruning ran).
+    pub bound_us: f64,
+}
+
+/// Per-phase wall-clock accumulator threaded through one sweep.
+#[derive(Clone, Copy, Debug, Default)]
+struct PhaseTimings {
+    prefetch_us: f64,
+    compose_us: f64,
+    bound_us: f64,
 }
 
 impl SweepReport {
@@ -334,6 +353,21 @@ impl Engine {
         cfgs: &[ParallelCfg],
         pred: &mut dyn BatchPredictor,
     ) -> Result<Vec<SweepRow>, SweepError> {
+        self.evaluate_timed(model, platform, cfgs, pred, &mut PhaseTimings::default())
+    }
+
+    /// [`Engine::evaluate`] accumulating per-phase wall-clock into
+    /// `timings` (and emitting [`crate::obs`] spans when the recorder is
+    /// enabled) — the sweep path so `--trace-out` and the report's phase
+    /// attribution see every branch-and-bound chunk.
+    fn evaluate_timed(
+        &self,
+        model: &ModelCfg,
+        platform: &Platform,
+        cfgs: &[ParallelCfg],
+        pred: &mut dyn BatchPredictor,
+        timings: &mut PhaseTimings,
+    ) -> Result<Vec<SweepRow>, SweepError> {
         use std::panic::{catch_unwind, AssertUnwindSafe};
         if cfgs.is_empty() {
             return Ok(Vec::new());
@@ -341,36 +375,47 @@ impl Engine {
         // Phase A: plan building + the shared batched prefetch. A panic
         // here is not attributable to one config (the op union is
         // cross-config), so it carries the `<prefetch>` marker label.
-        let plans: Vec<Vec<StagePlan>> = catch_unwind(AssertUnwindSafe(|| {
-            let plans: Vec<Vec<StagePlan>> = cfgs
-                .iter()
-                .map(|par| stage_plans_mode(model, par, platform, /*paper_params=*/ true))
-                .collect();
-            self.prefetch(&plans, pred);
-            plans
-        }))
-        .map_err(|payload| SweepError {
-            label: "<prefetch>".to_string(),
-            detail: panic_detail(payload),
-        })?;
+        let t_a = Instant::now();
+        let plans: Vec<Vec<StagePlan>> = {
+            let _sp = crate::obs::span(format!("prefetch[{} cfgs]", cfgs.len()), "phaseA");
+            catch_unwind(AssertUnwindSafe(|| {
+                let plans: Vec<Vec<StagePlan>> = cfgs
+                    .iter()
+                    .map(|par| stage_plans_mode(model, par, platform, /*paper_params=*/ true))
+                    .collect();
+                self.prefetch(&plans, pred);
+                plans
+            }))
+            .map_err(|payload| SweepError {
+                label: "<prefetch>".to_string(),
+                detail: panic_detail(payload),
+            })?
+        };
+        timings.prefetch_us += t_a.elapsed().as_secs_f64() * 1e6;
 
         // Phase B: shard configs across scoped workers; slot results by
         // index so output order (and therefore every downstream sort) is
         // deterministic regardless of worker interleaving.
+        let t_b = Instant::now();
         let mut out: Vec<Option<Result<SweepRow, SweepError>>> =
             (0..cfgs.len()).map(|_| None).collect();
         let threads = self.threads.min(cfgs.len()).max(1);
         if threads == 1 {
+            let _sp = crate::obs::span(format!("compose[0..{}]", cfgs.len()), "phaseB");
             for (slot, (par, plans)) in out.iter_mut().zip(cfgs.iter().zip(plans.iter())) {
                 *slot = Some(self.eval_one_caught(model, platform, par, plans));
             }
         } else {
             let chunk = cfgs.len().div_ceil(threads);
             std::thread::scope(|scope| {
-                for ((slots, pars), plan_chunk) in
-                    out.chunks_mut(chunk).zip(cfgs.chunks(chunk)).zip(plans.chunks(chunk))
+                for (w, ((slots, pars), plan_chunk)) in
+                    out.chunks_mut(chunk).zip(cfgs.chunks(chunk)).zip(plans.chunks(chunk)).enumerate()
                 {
                     scope.spawn(move || {
+                        let _sp = crate::obs::span(
+                            format!("compose[{}..{}]", w * chunk, w * chunk + pars.len()),
+                            "phaseB",
+                        );
                         for (slot, (par, plans)) in
                             slots.iter_mut().zip(pars.iter().zip(plan_chunk.iter()))
                         {
@@ -380,6 +425,7 @@ impl Engine {
                 }
             });
         }
+        timings.compose_us += t_b.elapsed().as_secs_f64() * 1e6;
         out.into_iter()
             .map(|r| r.expect("every slot filled"))
             .collect::<Result<Vec<SweepRow>, SweepError>>()
@@ -414,14 +460,15 @@ impl Engine {
     ) -> Result<SweepReport, SweepError> {
         let t0 = Instant::now();
         let before = self.cache.stats();
+        let mut timings = PhaseTimings::default();
         let (cfgs, skipped_oom, skipped_sched, skipped_microbatch) =
             feasible_configs(model, platform, spec);
         let (mut rows, evaluated, pruned, bound_consults) = match spec.top_k {
             Some(k) if spec.prune && k > 0 => {
-                self.evaluate_top_k(model, platform, &cfgs, pred, k)?
+                self.evaluate_top_k(model, platform, &cfgs, pred, k, &mut timings)?
             }
             _ => {
-                let rows = self.evaluate(model, platform, &cfgs, pred)?;
+                let rows = self.evaluate_timed(model, platform, &cfgs, pred, &mut timings)?;
                 let n = rows.len();
                 (rows, n, 0, 0)
             }
@@ -453,6 +500,9 @@ impl Engine {
             // the coordinator service reuses one engine across requests)
             cache: self.cache.stats().delta_since(&before),
             elapsed: t0.elapsed(),
+            prefetch_us: timings.prefetch_us,
+            compose_us: timings.compose_us,
+            bound_us: timings.bound_us,
         })
     }
 
@@ -478,12 +528,17 @@ impl Engine {
         cfgs: &[ParallelCfg],
         pred: &mut dyn BatchPredictor,
         k: usize,
+        timings: &mut PhaseTimings,
     ) -> Result<(Vec<SweepRow>, usize, usize, usize), SweepError> {
         if cfgs.is_empty() {
             return Ok((Vec::new(), 0, 0, 0));
         }
-        let bounds: Vec<f64> =
-            cfgs.iter().map(|par| sweep_lower_bound_us(model, par, platform)).collect();
+        let t_bound = Instant::now();
+        let bounds: Vec<f64> = {
+            let _sp = crate::obs::span(format!("bound-scoring[{} cfgs]", cfgs.len()), "bound");
+            cfgs.iter().map(|par| sweep_lower_bound_us(model, par, platform)).collect()
+        };
+        timings.bound_us += t_bound.elapsed().as_secs_f64() * 1e6;
         let bound_consults = bounds.len();
         let mut order: Vec<usize> = (0..cfgs.len()).collect();
         order.sort_by(|&a, &b| bounds[a].total_cmp(&bounds[b]).then(a.cmp(&b)));
@@ -501,7 +556,7 @@ impl Engine {
             }
             let batch = &order[next..(next + chunk).min(order.len())];
             let batch_cfgs: Vec<ParallelCfg> = batch.iter().map(|&i| cfgs[i]).collect();
-            let rows = self.evaluate(model, platform, &batch_cfgs, pred)?;
+            let rows = self.evaluate_timed(model, platform, &batch_cfgs, pred, timings)?;
             kept.extend(batch.iter().copied().zip(rows));
             next += batch.len();
             if kept.len() >= k {
@@ -551,6 +606,7 @@ impl Engine {
                 misses.push(op);
             }
         }
+        let _sp = crate::obs::span(format!("predict_batch[{} ops]", misses.len()), "phaseA");
         self.cache.fetch_misses(pred, &misses);
     }
 
@@ -760,6 +816,9 @@ mod tests {
             bound_consults: 0,
             cache: CacheStats::default(),
             elapsed: Duration::ZERO,
+            prefetch_us: 0.0,
+            compose_us: 0.0,
+            bound_us: 0.0,
         };
         // the pruned_frac contract: total-ordered, never NaN, 0.0 on empty
         assert_eq!(empty.best_goodput_frac(), 0.0);
@@ -800,6 +859,26 @@ mod tests {
         assert!(faulty.best_goodput_frac() > 0.0);
         assert!(faulty.best_ckpt_overhead_frac() > 0.0);
         assert!(faulty.best_useful_flop_frac() <= faulty.best_goodput_frac());
+    }
+
+    #[test]
+    fn phase_timings_attribute_sweep_wall_clock() {
+        let (model, platform, spec) = small_spec();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let report = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
+        // both phases ran; no pruning means no bound scoring
+        assert!(report.prefetch_us > 0.0, "{}", report.prefetch_us);
+        assert!(report.compose_us > 0.0, "{}", report.compose_us);
+        assert_eq!(report.bound_us, 0.0);
+        // phases are a subset of the sweep wall-clock (disjoint intervals)
+        let total_us = report.elapsed.as_secs_f64() * 1e6;
+        assert!(report.prefetch_us + report.compose_us <= total_us, "{report:?}");
+        // top-k pruning accumulates bound-scoring time across its chunks
+        let mut pruned_spec = spec.clone();
+        pruned_spec.top_k = Some(4);
+        let pruned = Engine::new().sweep(&model, &platform, &pruned_spec, &mut oracle).unwrap();
+        assert!(pruned.bound_us > 0.0, "{}", pruned.bound_us);
+        assert!(pruned.prefetch_us > 0.0 && pruned.compose_us > 0.0);
     }
 
     #[test]

@@ -344,6 +344,41 @@ pub fn try_run_batch_with_plans_exec(
     })
 }
 
+/// Deterministic (jitter-free) per-task times for the configured
+/// pipeline: every micro-batch of a stage costs the same
+/// [`crate::sim::deterministic_us`] sum over the stage's plan ops, and
+/// every boundary crossing its deterministic transfer time. This is the
+/// matrix `fgpm trace` executes and renders — the model's EXPECTED
+/// timeline, bit-identical across runs and machines (no RNG anywhere),
+/// which is what makes the trace goldens pinnable.
+pub fn deterministic_task_times(
+    model: &ModelCfg,
+    par: &ParallelCfg,
+    platform: &Platform,
+) -> TaskTimes {
+    let plans = stage_plans(model, par, platform);
+    let m = model.iters_per_update;
+    let s_count = plans.len();
+    let mut fwd = vec![vec![0.0; m]; s_count];
+    let mut bwd = vec![vec![0.0; m]; s_count];
+    let mut fwd_send = vec![vec![0.0; m]; s_count];
+    let mut bwd_send = vec![vec![0.0; m]; s_count];
+    for (s, plan) in plans.iter().enumerate() {
+        let det = |op: &OpInstance| crate::sim::deterministic_us(&op.lowered, platform);
+        let tf: f64 = plan.fwd_ops.iter().map(det).sum();
+        let tb: f64 = plan.bwd_ops.iter().map(det).sum();
+        let sf = plan.pp_send_fwd.as_ref().map(det).unwrap_or(0.0);
+        let sb = plan.pp_send_bwd.as_ref().map(det).unwrap_or(0.0);
+        for i in 0..m {
+            fwd[s][i] = tf;
+            bwd[s][i] = tb;
+            fwd_send[s][i] = sf;
+            bwd_send[s][i] = sb;
+        }
+    }
+    TaskTimes::compute(fwd, bwd).with_sends(fwd_send, bwd_send).with_overlap(par.p2p_overlap())
+}
+
 /// A fault-aware run: the fault-free simulated batch time plus the
 /// checkpoint/restart event-loop outcome and its closed-form cross-check.
 #[derive(Clone, Debug)]
@@ -590,6 +625,30 @@ mod tests {
         let tr = run_batch(&m, &par, &p, 1);
         let s = tr.total_us / 1e6;
         assert!((2.0..60.0).contains(&s), "batch time {s} s");
+    }
+
+    #[test]
+    fn deterministic_task_times_are_reproducible_and_executable() {
+        let (m, par, p) = gpt_plan();
+        let a = deterministic_task_times(&m, &par, &p);
+        let b = deterministic_task_times(&m, &par, &p);
+        // no RNG anywhere: bit-identical across calls
+        assert_eq!(a.fwd, b.fwd);
+        assert_eq!(a.bwd, b.bwd);
+        // per-stage times are constant across micro-batches
+        for row in &a.fwd {
+            for t in row {
+                assert!(*t > 0.0 && t.is_finite());
+                assert_eq!(*t, row[0]);
+            }
+        }
+        // every schedule kind executes the matrix (the `fgpm trace` path)
+        for kind in ScheduleKind::all(2) {
+            let par = par.with_schedule(kind);
+            let times = deterministic_task_times(&m, &par, &p);
+            let sched = crate::pipeline::execute(par.schedule.build().as_ref(), &times).unwrap();
+            assert!(sched.makespan() > 0.0, "{}", kind.label());
+        }
     }
 
     #[test]

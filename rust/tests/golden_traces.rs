@@ -1,0 +1,141 @@
+//! Golden snapshot suite for the Chrome trace-event renderer
+//! (`fgpm::obs::schedule_trace_json` — the `fgpm trace` output).
+//!
+//! Unlike `golden_schedules` (numeric tolerance over schedule matrices),
+//! this suite pins the EXACT BYTES: the renderer's determinism contract
+//! is that a given schedule always serializes to the same string, so the
+//! comparison is `==` on the file contents. One fixture (`uniform`) per
+//! schedule kind keeps the checked-in surface small while still crossing
+//! every event pass (F/B/W slices, P2P sends, flow arrows, metadata).
+//!
+//! Updating the goldens after an intentional renderer change:
+//!
+//!     GOLDEN_REGEN=1 cargo test --test golden_traces
+//!
+//! On mismatch the actual traces are written to `target/golden-actual/`
+//! so CI can upload them as an inspectable artifact.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use fgpm::obs::schedule_trace_json;
+use fgpm::pipeline::{execute, ScheduleKind, TaskTimes};
+use fgpm::util::json::Json;
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn actual_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("target")
+        .join("golden-actual")
+}
+
+/// The `uniform` fixture of `golden_schedules`, verbatim: 4 stages,
+/// 8 micro-batches, partial P2P overlap — every kind admits it.
+fn uniform() -> TaskTimes {
+    TaskTimes::uniform(4, 8, 2.0, 4.0)
+        .with_sends(vec![vec![0.7; 8]; 4], vec![vec![0.9; 8]; 4])
+        .with_overlap(0.5)
+}
+
+fn kinds() -> Vec<ScheduleKind> {
+    vec![
+        ScheduleKind::OneFOneB,
+        ScheduleKind::GPipe,
+        ScheduleKind::Interleaved1F1B { chunks: 1 },
+        ScheduleKind::Interleaved1F1B { chunks: 2 },
+        ScheduleKind::Interleaved1F1B { chunks: 4 },
+        ScheduleKind::ZbH1,
+    ]
+}
+
+fn file_name(kind: ScheduleKind) -> String {
+    format!("trace_{}__uniform.json", kind.label().replace(':', "_"))
+}
+
+#[test]
+fn golden_trace_bytes_are_pinned_per_schedule_kind() {
+    let regen = std::env::var("GOLDEN_REGEN").is_ok_and(|v| v == "1");
+    let times = uniform();
+    let mut failures: Vec<String> = Vec::new();
+    let mut covered: BTreeMap<String, bool> = BTreeMap::new();
+
+    for kind in kinds() {
+        let name = file_name(kind);
+        let sched = execute(kind.build().as_ref(), &times)
+            .unwrap_or_else(|e| panic!("{}: {e}", kind.label()));
+        let actual = schedule_trace_json(&kind.label(), &sched).to_string();
+        let golden_path = golden_dir().join(&name);
+        if regen {
+            std::fs::create_dir_all(golden_dir()).unwrap();
+            std::fs::write(&golden_path, &actual).unwrap();
+        }
+        covered.insert(kind.label(), true);
+        match std::fs::read_to_string(&golden_path) {
+            Ok(golden) if golden == actual => {}
+            Ok(golden) => {
+                write_actual(&name, &actual);
+                let at = golden
+                    .bytes()
+                    .zip(actual.bytes())
+                    .position(|(g, a)| g != a)
+                    .unwrap_or(golden.len().min(actual.len()));
+                failures.push(format!(
+                    "{name}: bytes diverge at offset {at} (golden len {}, actual len {})",
+                    golden.len(),
+                    actual.len()
+                ));
+            }
+            Err(e) => {
+                write_actual(&name, &actual);
+                failures.push(format!("{name}: missing golden ({e})"));
+            }
+        }
+        // the pinned bytes must themselves be a loadable trace
+        let j = Json::parse(&actual).unwrap_or_else(|e| panic!("{name}: unparseable: {e}"));
+        assert_eq!(j.str_at("displayTimeUnit"), Some("ms"), "{name}");
+        assert!(
+            !j.get("traceEvents").unwrap().as_arr().unwrap().is_empty(),
+            "{name}: empty trace"
+        );
+    }
+
+    assert_eq!(covered.len(), 6, "kind set changed: {covered:?}");
+    assert!(
+        failures.is_empty(),
+        "golden trace mismatches (actuals written to {:?}; regen with \
+         GOLDEN_REGEN=1 cargo test --test golden_traces):\n  {}",
+        actual_dir(),
+        failures.join("\n  ")
+    );
+}
+
+fn write_actual(name: &str, actual: &str) {
+    let dir = actual_dir();
+    let _ = std::fs::create_dir_all(&dir);
+    let _ = std::fs::write(dir.join(name), actual);
+}
+
+#[test]
+fn rendered_traces_stay_consistent_with_their_schedules() {
+    // Independent of the checked-in files: per kind, the trace carries
+    // exactly stages*chunks*m F and B slices and every dur is >= 0.
+    let times = uniform();
+    for kind in kinds() {
+        let sched = execute(kind.build().as_ref(), &times).unwrap();
+        let total = sched.stages() * sched.chunks * sched.micro_batches();
+        let j = schedule_trace_json(&kind.label(), &sched);
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        let count = |cat: &str| evs.iter().filter(|e| e.str_at("cat") == Some(cat)).count();
+        assert_eq!(count("F"), total, "{kind:?}");
+        assert_eq!(count("B"), total, "{kind:?}");
+        for e in &evs {
+            if let Some(d) = e.f64_at("dur") {
+                assert!(d >= 0.0, "{kind:?}: negative dur in {e}");
+            }
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Observability-off-by-default property: running a sweep with the span
+//! recorder enabled (`--trace-out`) must leave every predicted row
+//! BIT-IDENTICAL to an untraced run — the recorder only observes
+//! wall-clock, never the model — on flat AND rail topologies. The
+//! drained spans must also render to a loadable trace naming the
+//! engine's phases.
+
+use fgpm::config::{ModelCfg, Platform, TopoSpec};
+use fgpm::ops::OpKind;
+use fgpm::predictor::registry::BatchPredictor;
+use fgpm::sampling::DatasetKey;
+use fgpm::sweep::{Engine, SweepSpec};
+
+/// Deterministic batch backend (same as `remote_sweep`'s): latency =
+/// f(route, features), bit-reproducible anywhere.
+struct Det;
+
+impl BatchPredictor for Det {
+    fn predict_batch(&mut self, key: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+        let salt = OpKind::ALL.iter().position(|k| *k == key.0).unwrap() as f64;
+        rows.iter()
+            .map(|r| 3.0 + salt * 0.37 + r.iter().sum::<f64>().sqrt() / 41.0)
+            .collect()
+    }
+}
+
+#[test]
+fn traced_sweep_rows_are_bit_identical_to_untraced() {
+    let model = ModelCfg::llemma7b();
+    for topo in [
+        TopoSpec::Flat,
+        TopoSpec::RailSpine { nodes_per_rail: 2, spine_bw_frac: 0.5 },
+    ] {
+        let platform = Platform::perlmutter().with_topo(topo);
+        let spec = SweepSpec::new(16);
+        let base = Engine::new().sweep(&model, &platform, &spec, &mut Det).unwrap();
+        assert!(!base.rows.is_empty(), "{topo:?}");
+
+        fgpm::obs::enable();
+        let traced = Engine::new().sweep(&model, &platform, &spec, &mut Det).unwrap();
+        fgpm::obs::disable();
+        let spans = fgpm::obs::drain();
+
+        assert_eq!(traced.rows.len(), base.rows.len(), "{topo:?}");
+        for (t, b) in traced.rows.iter().zip(&base.rows) {
+            assert_eq!(t.par.label(), b.par.label(), "{topo:?}");
+            // exact f64 equality: tracing must not perturb the model
+            assert_eq!(t.prediction.total_us, b.prediction.total_us, "{topo:?} {}", t.par.label());
+            assert_eq!(t.mem_gib, b.mem_gib, "{topo:?} {}", t.par.label());
+        }
+        assert_eq!(traced.skipped_oom, base.skipped_oom, "{topo:?}");
+        assert_eq!(traced.skipped_sched, base.skipped_sched, "{topo:?}");
+        assert_eq!(traced.skipped_microbatch, base.skipped_microbatch, "{topo:?}");
+
+        // the recorder actually captured the engine's phases...
+        assert!(spans.iter().any(|s| s.cat == "phaseA"), "{topo:?}: no phase-A span");
+        assert!(spans.iter().any(|s| s.cat == "phaseB"), "{topo:?}: no phase-B span");
+        assert!(spans.iter().all(|s| s.dur_us >= 0.0), "{topo:?}");
+        // ...and they render to a loadable trace
+        let j = fgpm::obs::spans_to_trace_json(&spans);
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs.len() > spans.len(), "{topo:?}: metadata rows missing");
+
+        // a later untraced run records nothing new
+        let _ = Engine::new().sweep(&model, &platform, &spec, &mut Det).unwrap();
+        assert!(fgpm::obs::drain().is_empty(), "{topo:?}: recorder leaked past disable()");
+    }
+}
