@@ -1,0 +1,209 @@
+#!/usr/bin/env python3
+"""CI chaos-smoke client for the resilient fgpm coordinator.
+
+Usage:
+    python3 ci/chaos_smoke.py chaos --addr 127.0.0.1:7272 \
+        --model llemma7b --platform perlmutter --gpus 16 --schedule all
+    python3 ci/chaos_smoke.py drained --log serve.log --cache-dir .fgpm-chaos-cache
+
+Phase `chaos` (run against a live `fgpm serve`):
+
+  1. baseline   — one full streamed sweep over a raw socket; its RAW
+                  response lines are the byte-level reference;
+  2. disconnect — start the same sweep, read two rows, then sever the
+                  connection mid-stream; the server must survive (a
+                  fresh connection still answers `ping`);
+  3. resume     — re-request with `resume_from` k in {0, 1, n/2, n}:
+                  every response must be the byte-identical suffix of
+                  the baseline, and the summary must acknowledge k;
+  4. stats      — the server counted the resumed sweeps.
+
+Phase `drained` (after SIGTERM has been delivered and the process has
+exited):
+
+  5. the serve log carries the final `fgpm drained:` line with the
+     persisted-cache confirmation;
+  6. the persisted op-cache file exists, carries the FGPMOPC\\x01 magic,
+     and is at least header-sized (24 bytes) — never half-written.
+
+Exit code 0 = all checks passed; 1 = any violation.
+
+The byte-identity check of the CLI's `--remote --retries` path against
+the local table lives in the workflow itself (`diff` of the rendered
+tables), mirroring the service-smoke job.
+"""
+
+import argparse
+import glob
+import json
+import os
+import socket
+import struct
+import sys
+
+OPCACHE_MAGIC = b"FGPMOPC\x01"
+OPCACHE_HEADER_BYTES = 24
+
+
+def fail(msg):
+    print(f"chaos-smoke: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def connect(addr, timeout=600.0):
+    host, port = addr.rsplit(":", 1)
+    return socket.create_connection((host, int(port)), timeout=timeout)
+
+
+def sweep_request(args, resume_from=None):
+    req = {
+        "cmd": "sweep",
+        "spec": {
+            "model": args.model,
+            "platform": args.platform,
+            "gpus": args.gpus,
+            "schedules": (
+                ["1f1b", "gpipe", "interleaved:2", "zb-h1"]
+                if args.schedule == "all"
+                else [args.schedule]
+            ),
+        },
+    }
+    if resume_from is not None:
+        req["resume_from"] = resume_from
+    return req
+
+
+def stream_sweep(addr, req):
+    """Send one sweep request; return (raw_row_lines, summary_obj).
+
+    Lines are kept VERBATIM (newline included) so suffix comparisons are
+    byte-exact, not merely value-equal.
+    """
+    sock = connect(addr)
+    sock.sendall((json.dumps(req) + "\n").encode())
+    rfile = sock.makefile("rb")
+    rows = []
+    while True:
+        line = rfile.readline()
+        if not line:
+            fail(f"server closed the stream before the summary (request {req})")
+        msg = json.loads(line)
+        if "error" in msg:
+            fail(f"sweep error for {req}: {msg['error']}")
+        if "summary" in msg:
+            sock.close()
+            return rows, msg["summary"]
+        if "row" not in msg:
+            fail(f"unexpected sweep line: {msg}")
+        rows.append(line)
+
+
+def single_request(addr, obj):
+    sock = connect(addr, timeout=30.0)
+    sock.sendall((json.dumps(obj) + "\n").encode())
+    line = sock.makefile("rb").readline()
+    sock.close()
+    if not line:
+        fail(f"no response for {obj}")
+    return json.loads(line)
+
+
+def phase_chaos(args):
+    # 1. baseline: the reference byte stream
+    reference, summary = stream_sweep(args.addr, sweep_request(args))
+    if len(reference) < 3:
+        fail(f"baseline sweep streamed only {len(reference)} rows")
+    if "resume_from" in summary:
+        fail(f"un-resumed summary must not acknowledge a resume: {summary}")
+    print(f"chaos-smoke: baseline ok ({len(reference)} rows)")
+
+    # 2. kill a connection mid-sweep: read two rows, then sever the
+    # socket abruptly (RST via SO_LINGER 0, the rudest realistic cut)
+    sock = connect(args.addr)
+    sock.sendall((json.dumps(sweep_request(args)) + "\n").encode())
+    rfile = sock.makefile("rb")
+    for i in range(2):
+        if not rfile.readline():
+            fail(f"mid-sweep stream ended at row {i}")
+    sock.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER, struct.pack("ii", 1, 0))
+    sock.close()
+    pong = single_request(args.addr, {"cmd": "ping"})
+    if pong.get("ok") is not True:
+        fail(f"server unhealthy after mid-sweep disconnect: {pong}")
+    print("chaos-smoke: server survived a mid-sweep disconnect")
+
+    # 3. resumed streams are byte-identical suffixes
+    n = len(reference)
+    for k in sorted({0, 1, n // 2, n}):
+        rows, summary = stream_sweep(args.addr, sweep_request(args, resume_from=k))
+        if rows != reference[k:]:
+            fail(f"resume_from={k}: response is not the byte-identical suffix")
+        ack = summary.get("resume_from")
+        want = k if k > 0 else None
+        if ack != want:
+            fail(f"resume_from={k}: summary acknowledged {ack!r}, want {want!r}")
+    print("chaos-smoke: resumed streams are byte-identical suffixes")
+
+    # 4. the server counted the client retries
+    stats = single_request(args.addr, {"cmd": "stats"})
+    if "error" in stats:
+        fail(f"stats error: {stats['error']}")
+    if not stats.get("retries", 0) >= 3:
+        fail(f"stats must count the resumed requests as retries: {stats}")
+    if not stats.get("resumed_sweeps", 0) >= 3:
+        fail(f"stats must count completed resumed sweeps: {stats}")
+    print(
+        f"chaos-smoke: stats ok (retries {stats['retries']:.0f}, "
+        f"resumed_sweeps {stats['resumed_sweeps']:.0f})"
+    )
+
+
+def phase_drained(args):
+    # 5. the drain left its final log line
+    with open(args.log, encoding="utf-8", errors="replace") as f:
+        log = f.read()
+    drain_lines = [ln for ln in log.splitlines() if ln.startswith("fgpm drained:")]
+    if not drain_lines:
+        fail(f"no 'fgpm drained:' line in {args.log}:\n{log}")
+    line = drain_lines[-1]
+    if "0 aborted" not in line:
+        fail(f"drain aborted in-flight work: {line}")
+    if "op cache persisted" not in line:
+        fail(f"drain line missing the persist confirmation: {line}")
+    print(f"chaos-smoke: drain ok ({line})")
+
+    # 6. the persisted cache file is whole
+    paths = sorted(glob.glob(os.path.join(args.cache_dir, "opcache_*.bin")))
+    if not paths:
+        fail(f"no persisted op-cache file under {args.cache_dir}")
+    for path in paths:
+        with open(path, "rb") as f:
+            blob = f.read()
+        if len(blob) < OPCACHE_HEADER_BYTES:
+            fail(f"{path}: {len(blob)} bytes is smaller than the header")
+        if not blob.startswith(OPCACHE_MAGIC):
+            fail(f"{path}: bad magic {blob[:8]!r}")
+        print(f"chaos-smoke: persisted cache ok ({path}, {len(blob)} bytes)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("phase", choices=["chaos", "drained"])
+    ap.add_argument("--addr", default="127.0.0.1:7272")
+    ap.add_argument("--model", default="llemma7b")
+    ap.add_argument("--platform", default="perlmutter")
+    ap.add_argument("--gpus", type=int, default=16)
+    ap.add_argument("--schedule", default="all")
+    ap.add_argument("--log", default="serve.log")
+    ap.add_argument("--cache-dir", default=".fgpm-chaos-cache")
+    args = ap.parse_args()
+    if args.phase == "chaos":
+        phase_chaos(args)
+    else:
+        phase_drained(args)
+    print(f"chaos-smoke: phase '{args.phase}' passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -608,7 +608,10 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         .opt("ckpt-interval", "64", "with --faults spec: checkpoint every N steps")
         .opt("jobs", "0", "evaluation worker threads (0 = one per core)")
         .opt("remote", "", "run the sweep on a coordinator at host:port instead of locally")
+        .opt("retries", "2", "with --remote: reconnect-and-resume attempts after a dropped stream")
+        .opt("backoff-ms", "100", "with --remote: base retry backoff (capped exponential, jittered)")
         .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
+        .opt("cache-max-mb", "0", "cap the persisted op-cache file, LRU-evicting (0 = unlimited)")
         .opt("trace-out", "", "write the engine's own execution trace (Chrome JSON) to this file")
         .opt("forests", "forests", "trained registry directory")
         .opt("seed", "7", "rng seed")
@@ -658,7 +661,7 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         // local-only knobs have no effect on a remote coordinator (it
         // chose its backend, cache, and worker count at startup); reject
         // explicitly-typed ones instead of silently ignoring them
-        for opt in ["cache-dir", "forests", "jobs", "seed", "trace-out"] {
+        for opt in ["cache-dir", "cache-max-mb", "forests", "jobs", "seed", "trace-out"] {
             anyhow::ensure!(
                 !args.is_explicit(opt),
                 "--{opt} has no effect with --remote (the coordinator's own settings apply)"
@@ -677,7 +680,16 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
             &platform.topo,
             &sweep_spec,
         );
-        let rs = server::remote_sweep(&remote, &request).map_err(|e| anyhow!("{e}"))?;
+        // a dropped stream resumes from the last row received; jitter is
+        // seeded from the request bytes so a given invocation's backoff
+        // schedule replays exactly
+        let retry_cfg = server::RetryCfg {
+            retries: args.u64("retries")? as u32,
+            backoff: std::time::Duration::from_millis(args.u64("backoff-ms")?.max(1)),
+            seed: crate::predictor::opcache::fnv1a64(request.to_string().as_bytes()),
+        };
+        let rs = server::remote_sweep_resilient(&remote, &request, &retry_cfg)
+            .map_err(|e| anyhow!("{e}"))?;
         let skipped_oom = rs.summary.usize_at("skipped_oom").unwrap_or(0);
         let skipped_sched = rs.summary.usize_at("skipped_sched").unwrap_or(0);
         let skipped_microbatch = rs.summary.usize_at("skipped_microbatch").unwrap_or(0);
@@ -751,6 +763,13 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         return Ok(0);
     }
 
+    // retry knobs only shape the remote reconnect loop
+    for opt in ["retries", "backoff-ms"] {
+        anyhow::ensure!(
+            !args.is_explicit(opt),
+            "--{opt} only applies with --remote (a local sweep has no connection to retry)"
+        );
+    }
     let (reg, reg_hash) = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
     let use_xla = args.has_flag("xla");
     let mut backend = backend_for(reg, use_xla)?;
@@ -781,7 +800,8 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         .map_err(|e| anyhow!("{e}"))?;
     if let Some((path, fp)) = persist {
         let _g = crate::obs::span("op-cache save", "cache");
-        if let Err(e) = engine.cache().save(&path, fp) {
+        let max_bytes = args.u64("cache-max-mb")?.checked_mul(1024 * 1024).filter(|&b| b > 0);
+        if let Err(e) = engine.cache().save_capped(&path, fp, max_bytes) {
             eprintln!("[fgpm] WARNING: could not save op cache {path:?}: {e}");
         }
     }
@@ -1150,6 +1170,10 @@ fn cmd_serve(argv: &[String]) -> Result<i32> {
         .opt("jobs", "0", "sweep evaluation worker threads (0 = one per core)")
         .opt("max-conns", "64", "concurrent-connection cap (excess sheds {\"error\":\"busy\"})")
         .opt("read-timeout-ms", "60000", "per-connection socket read/write timeout")
+        .opt("workers", "8", "connection worker pool size")
+        .opt("drain-timeout-ms", "5000", "graceful-shutdown budget for in-flight connections")
+        .opt("request-timeout-ms", "0", "per-sweep deadline, aborts with a typed error (0 = off)")
+        .opt("cache-max-mb", "0", "cap the persisted op-cache file, LRU-evicting (0 = unlimited)")
         .opt("seed", "7", "rng seed")
         .opt("max-batch", "256", "dynamic batcher max rows")
         .opt("max-wait-ms", "2", "dynamic batcher deadline")
@@ -1171,10 +1195,17 @@ fn cmd_serve(argv: &[String]) -> Result<i32> {
         let fp = cache_fingerprint(reg_hash, &platform, use_xla);
         svc = svc.with_cache_persist(op_cache_path(&cache_dir, &platform, fp), fp);
     }
+    svc = svc.with_cache_max_bytes(args.u64("cache-max-mb")? * 1024 * 1024);
+    let request_timeout_ms = args.u64("request-timeout-ms")?;
     let opts = server::ServeOpts {
         max_conns: args.usize("max-conns")?.max(1),
         read_timeout: std::time::Duration::from_millis(args.u64("read-timeout-ms")?.max(1)),
+        workers: args.usize("workers")?.max(1),
+        drain_timeout: std::time::Duration::from_millis(args.u64("drain-timeout-ms")?),
+        request_timeout: (request_timeout_ms > 0)
+            .then(|| std::time::Duration::from_millis(request_timeout_ms)),
     };
+    server::install_sigterm_handler();
     server::serve_opts(svc, &args.str("addr"), opts)?;
     Ok(0)
 }

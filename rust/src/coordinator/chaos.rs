@@ -1,0 +1,350 @@
+//! Deterministic chaos injection for the coordinator's I/O path.
+//!
+//! Compiled unconditionally but DEFAULT-OFF: the serving path threads an
+//! `Option<Arc<Chaos>>` through the accept loop, and `None` (the only
+//! thing the CLI ever constructs) injects nothing — the wrappers degrade
+//! to transparent pass-throughs, so fault-free wire bytes stay
+//! bit-identical to a chaos-free build. Tests reach the fault plane via
+//! [`server::serve_background_chaos`](crate::coordinator::server::serve_background_chaos),
+//! the test-only constructor.
+//!
+//! A [`ChaosPlan`] is plain data: which fault classes to arm and when.
+//! Plans are either hand-built (to pin one fault class in a test) or
+//! derived from a seed ([`ChaosPlan::seeded`]) so a whole fault mix
+//! replays exactly from one `u64`. The runtime [`Chaos`] state adds the
+//! only mutable piece — a per-accept connection counter — so the same
+//! plan assigns the same faults to the same connection ordinals on every
+//! run.
+
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Which faults to inject, and when. Everything defaults to OFF; an
+/// all-default plan is indistinguishable from no plan at all.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosPlan {
+    /// Close the first N accepted connections immediately (before any
+    /// byte is read or written) — an accept-level failure as seen by
+    /// the client: connect succeeds, then instant EOF.
+    pub accept_failures: usize,
+    /// Mid-stream disconnects: served connection `i` (0-based, counted
+    /// AFTER the `accept_failures` prefix) has its responses cut after
+    /// `disconnect_after_bytes[i]` bytes; connections beyond the list
+    /// run unmolested.
+    pub disconnect_after_bytes: Vec<u64>,
+    /// Short writes: every write syscall transfers at most this many
+    /// bytes, forcing `write_all` to loop (exercises partial-write
+    /// handling without changing the byte stream).
+    pub max_write: Option<usize>,
+    /// Read stall injected before every read syscall (exercises the
+    /// handler's cumulative idle-timeout accounting).
+    pub read_stall: Option<Duration>,
+    /// Flip one byte of the persisted op-cache file after every
+    /// server-side persist, simulating on-disk corruption between a
+    /// crash and the next warm start.
+    pub corrupt_cache: bool,
+}
+
+impl ChaosPlan {
+    /// Derive a mixed fault plan from a seed. Every field is drawn from
+    /// the seeded PRNG, so the same seed arms the same faults at the
+    /// same offsets on every run — the property the chaos suite sweeps
+    /// over seeds to get coverage without flakiness.
+    pub fn seeded(seed: u64) -> ChaosPlan {
+        let mut rng = Rng::new(seed).fork(0xCA05);
+        let accept_failures = rng.below(3);
+        let cuts = rng.below(3);
+        let disconnect_after_bytes = (0..cuts).map(|_| (16 + rng.below(512)) as u64).collect();
+        let max_write = rng.chance(0.5).then(|| 1 + rng.below(7));
+        let read_stall = rng
+            .chance(0.5)
+            .then(|| Duration::from_millis((1 + rng.below(20)) as u64));
+        let corrupt_cache = rng.chance(0.5);
+        ChaosPlan {
+            accept_failures,
+            disconnect_after_bytes,
+            max_write,
+            read_stall,
+            corrupt_cache,
+        }
+    }
+}
+
+/// Per-connection slice of a plan, resolved at accept time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConnChaos {
+    /// Cut the response stream after this many bytes.
+    pub cut_after: Option<u64>,
+    /// Cap per-syscall write length.
+    pub max_write: Option<usize>,
+    /// Stall before every read.
+    pub read_stall: Option<Duration>,
+    /// Corrupt the op-cache file after a persist on this connection.
+    pub corrupt_cache: bool,
+}
+
+/// What to do with a freshly accepted connection.
+#[derive(Debug)]
+pub enum AcceptFate {
+    /// Drop the connection on the floor (injected accept failure).
+    Fail,
+    /// Serve it, with this connection's fault slice.
+    Serve(ConnChaos),
+}
+
+/// Runtime chaos state: the immutable plan plus the accept ordinal that
+/// maps plan entries onto connections deterministically.
+#[derive(Debug)]
+pub struct Chaos {
+    plan: ChaosPlan,
+    accepted: AtomicUsize,
+}
+
+impl Chaos {
+    pub fn new(plan: ChaosPlan) -> Arc<Chaos> {
+        Arc::new(Chaos {
+            plan,
+            accepted: AtomicUsize::new(0),
+        })
+    }
+
+    /// Resolve the fate of the next accepted connection. Ordinals are
+    /// assigned in accept order: the first `accept_failures` fail, the
+    /// i-th served connection after that picks up
+    /// `disconnect_after_bytes[i]` (if any); stream-wide faults
+    /// (short writes, read stalls, cache corruption) apply to every
+    /// served connection.
+    pub fn on_accept(&self) -> AcceptFate {
+        let ordinal = self.accepted.fetch_add(1, Ordering::SeqCst);
+        if ordinal < self.plan.accept_failures {
+            return AcceptFate::Fail;
+        }
+        let served = ordinal - self.plan.accept_failures;
+        AcceptFate::Serve(ConnChaos {
+            cut_after: self.plan.disconnect_after_bytes.get(served).copied(),
+            max_write: self.plan.max_write,
+            read_stall: self.plan.read_stall,
+            corrupt_cache: self.plan.corrupt_cache,
+        })
+    }
+}
+
+/// Writer wrapper enforcing a connection's write-side faults: an
+/// optional byte budget (mid-stream disconnect once spent) and an
+/// optional per-syscall write cap (short writes). With both off it
+/// forwards verbatim.
+pub struct ChaosWriter<W: Write> {
+    inner: W,
+    budget: Option<u64>,
+    max_write: Option<usize>,
+}
+
+impl<W: Write> ChaosWriter<W> {
+    pub fn new(inner: W, chaos: ConnChaos) -> ChaosWriter<W> {
+        ChaosWriter {
+            inner,
+            budget: chaos.cut_after,
+            max_write: chaos.max_write,
+        }
+    }
+}
+
+impl<W: Write> Write for ChaosWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let mut len = buf.len();
+        if let Some(cap) = self.max_write {
+            len = len.min(cap.max(1));
+        }
+        if let Some(budget) = &mut self.budget {
+            if *budget == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "chaos: injected mid-stream disconnect",
+                ));
+            }
+            len = len.min(*budget as usize);
+            let n = self.inner.write(&buf[..len])?;
+            *budget -= n as u64;
+            Ok(n)
+        } else {
+            self.inner.write(&buf[..len])
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Reader wrapper injecting a stall before every read syscall.
+pub struct ChaosReader<R: Read> {
+    inner: R,
+    stall: Option<Duration>,
+}
+
+impl<R: Read> ChaosReader<R> {
+    pub fn new(inner: R, stall: Option<Duration>) -> ChaosReader<R> {
+        ChaosReader { inner, stall }
+    }
+}
+
+impl<R: Read> Read for ChaosReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if let Some(stall) = self.stall {
+            std::thread::sleep(stall);
+        }
+        self.inner.read(buf)
+    }
+}
+
+/// Flip one byte of `path` in place (XOR 0xFF at an offset derived from
+/// the file length), simulating on-disk corruption. The offset formula
+/// is deterministic, and lands inside the entry region for any real
+/// cache file (> 24-byte header) so the loader's bounds checks — not
+/// just the magic check — get exercised.
+pub fn corrupt_file(path: &Path) -> std::io::Result<()> {
+    let mut bytes = std::fs::read(path)?;
+    if bytes.is_empty() {
+        return Ok(());
+    }
+    let off = if bytes.len() > 24 {
+        24 + (bytes.len() - 24) / 2
+    } else {
+        bytes.len() / 2
+    };
+    bytes[off] ^= 0xFF;
+    std::fs::write(path, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_injects_nothing() {
+        let chaos = Chaos::new(ChaosPlan::default());
+        for _ in 0..8 {
+            match chaos.on_accept() {
+                AcceptFate::Serve(c) => {
+                    assert!(c.cut_after.is_none());
+                    assert!(c.max_write.is_none());
+                    assert!(c.read_stall.is_none());
+                    assert!(!c.corrupt_cache);
+                }
+                AcceptFate::Fail => panic!("default plan failed an accept"),
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_plans_replay_exactly_and_vary_by_seed() {
+        let a = ChaosPlan::seeded(7);
+        let b = ChaosPlan::seeded(7);
+        assert_eq!(a.accept_failures, b.accept_failures);
+        assert_eq!(a.disconnect_after_bytes, b.disconnect_after_bytes);
+        assert_eq!(a.max_write, b.max_write);
+        assert_eq!(a.read_stall, b.read_stall);
+        assert_eq!(a.corrupt_cache, b.corrupt_cache);
+        // at least one of the first few seeds must differ from seed 7
+        let differs = (0..8u64).any(|s| {
+            let p = ChaosPlan::seeded(s);
+            p.accept_failures != a.accept_failures
+                || p.disconnect_after_bytes != a.disconnect_after_bytes
+                || p.max_write != a.max_write
+                || p.read_stall != a.read_stall
+                || p.corrupt_cache != a.corrupt_cache
+        });
+        assert!(differs, "seeded plans never vary");
+    }
+
+    #[test]
+    fn accept_ordinals_map_failures_then_cuts() {
+        let chaos = Chaos::new(ChaosPlan {
+            accept_failures: 2,
+            disconnect_after_bytes: vec![10, 20],
+            ..ChaosPlan::default()
+        });
+        assert!(matches!(chaos.on_accept(), AcceptFate::Fail));
+        assert!(matches!(chaos.on_accept(), AcceptFate::Fail));
+        match chaos.on_accept() {
+            AcceptFate::Serve(c) => assert_eq!(c.cut_after, Some(10)),
+            AcceptFate::Fail => panic!("third accept should serve"),
+        }
+        match chaos.on_accept() {
+            AcceptFate::Serve(c) => assert_eq!(c.cut_after, Some(20)),
+            AcceptFate::Fail => panic!("fourth accept should serve"),
+        }
+        match chaos.on_accept() {
+            AcceptFate::Serve(c) => assert_eq!(c.cut_after, None),
+            AcceptFate::Fail => panic!("fifth accept should serve"),
+        }
+    }
+
+    #[test]
+    fn writer_budget_cuts_after_exact_byte_count() {
+        let mut out = Vec::new();
+        {
+            let mut w = ChaosWriter::new(
+                &mut out,
+                ConnChaos {
+                    cut_after: Some(5),
+                    ..ConnChaos::default()
+                },
+            );
+            assert!(w.write_all(b"abc").is_ok());
+            let err = w.write_all(b"defgh").unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe);
+        }
+        assert_eq!(out, b"abcde");
+    }
+
+    #[test]
+    fn short_writes_preserve_the_byte_stream() {
+        let mut out = Vec::new();
+        {
+            let mut w = ChaosWriter::new(
+                &mut out,
+                ConnChaos {
+                    max_write: Some(2),
+                    ..ConnChaos::default()
+                },
+            );
+            w.write_all(b"hello world").unwrap();
+        }
+        assert_eq!(out, b"hello world");
+    }
+
+    #[test]
+    fn passthrough_writer_is_transparent() {
+        let mut out = Vec::new();
+        {
+            let mut w = ChaosWriter::new(&mut out, ConnChaos::default());
+            w.write_all(b"unchanged bytes").unwrap();
+        }
+        assert_eq!(out, b"unchanged bytes");
+    }
+
+    #[test]
+    fn corrupt_file_flips_one_byte_deterministically() {
+        let dir = std::env::temp_dir().join(format!("fgpm_chaos_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("victim.bin");
+        let original: Vec<u8> = (0..64u8).collect();
+        std::fs::write(&path, &original).unwrap();
+        corrupt_file(&path).unwrap();
+        let mutated = std::fs::read(&path).unwrap();
+        let flipped: Vec<usize> = (0..original.len())
+            .filter(|&i| original[i] != mutated[i])
+            .collect();
+        assert_eq!(flipped, vec![24 + (64 - 24) / 2]);
+        // corruption is an involution: applying it twice restores the file
+        corrupt_file(&path).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), original);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

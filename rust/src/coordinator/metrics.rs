@@ -102,6 +102,15 @@ pub struct Metrics {
     pub rejected_busy: AtomicU64,
     /// Connections dropped by the socket read/write timeout.
     pub conn_timeouts: AtomicU64,
+    /// Sweep requests that arrived with `resume_from > 0` (client retry
+    /// after a dropped stream).
+    pub retries: AtomicU64,
+    /// Resumed sweeps that streamed their suffix to completion.
+    pub resumed_sweeps: AtomicU64,
+    /// In-flight connections that completed during graceful drain.
+    pub drained: AtomicU64,
+    /// Requests aborted by the per-request deadline or drain budget.
+    pub aborted_deadline: AtomicU64,
     /// Latency distributions per command class.
     pub predict_hist: LatencyHistogram,
     pub sweep_hist: LatencyHistogram,
@@ -122,6 +131,10 @@ impl Metrics {
             sweep_rows: self.sweep_rows.load(Ordering::Relaxed),
             rejected_busy: self.rejected_busy.load(Ordering::Relaxed),
             conn_timeouts: self.conn_timeouts.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            resumed_sweeps: self.resumed_sweeps.load(Ordering::Relaxed),
+            drained: self.drained.load(Ordering::Relaxed),
+            aborted_deadline: self.aborted_deadline.load(Ordering::Relaxed),
             predict_hist: self.predict_hist.snapshot(),
             sweep_hist: self.sweep_hist.snapshot(),
             flush_hist: self.flush_hist.snapshot(),
@@ -161,6 +174,10 @@ pub struct MetricsSnapshot {
     pub sweep_rows: u64,
     pub rejected_busy: u64,
     pub conn_timeouts: u64,
+    pub retries: u64,
+    pub resumed_sweeps: u64,
+    pub drained: u64,
+    pub aborted_deadline: u64,
     pub predict_hist: HistSnapshot,
     pub sweep_hist: HistSnapshot,
     pub flush_hist: HistSnapshot,
@@ -188,6 +205,18 @@ impl MetricsSnapshot {
         insert_counter(&mut j, "sweep_rows", self.sweep_rows);
         insert_counter(&mut j, "rejected_busy", self.rejected_busy);
         insert_counter(&mut j, "conn_timeouts", self.conn_timeouts);
+        // resilience counters stay omitted at zero so a fault-free
+        // server's stats bytes match the pre-resilience wire format
+        for (name, v) in [
+            ("retries", self.retries),
+            ("resumed_sweeps", self.resumed_sweeps),
+            ("drained", self.drained),
+            ("aborted_deadline", self.aborted_deadline),
+        ] {
+            if v > 0 {
+                insert_counter(&mut j, name, v);
+            }
+        }
         // quantiles are omitted while a histogram is empty, so a fresh
         // server's stats stay free of meaningless zeros
         for (prefix, h) in [
@@ -221,6 +250,10 @@ impl MetricsSnapshot {
             ("fgpm_sweep_rows_total", self.sweep_rows),
             ("fgpm_rejected_busy_total", self.rejected_busy),
             ("fgpm_conn_timeouts_total", self.conn_timeouts),
+            ("fgpm_retries_total", self.retries),
+            ("fgpm_resumed_sweeps_total", self.resumed_sweeps),
+            ("fgpm_drained_total", self.drained),
+            ("fgpm_aborted_deadline_total", self.aborted_deadline),
         ] {
             out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
         }
@@ -272,6 +305,17 @@ mod tests {
         assert_eq!(j.get("conn_timeouts").unwrap().as_f64(), Some(0.0));
         // empty histograms contribute no quantile keys
         assert!(j.get("predict_p50_us").is_none(), "{j}");
+        // resilience counters are omitted at zero (wire-compat with the
+        // pre-resilience stats payload) and appear once bumped
+        for key in ["retries", "resumed_sweeps", "drained", "aborted_deadline"] {
+            assert!(j.get(key).is_none(), "{key} should be omitted at 0: {j}");
+        }
+        m.add(&m.retries, 2);
+        m.add(&m.aborted_deadline, 1);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("retries").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("aborted_deadline").unwrap().as_f64(), Some(1.0));
+        assert!(j.get("resumed_sweeps").is_none(), "{j}");
     }
 
     #[test]
@@ -340,6 +384,12 @@ mod tests {
         m.predict_hist.record_us(200);
         let text = m.snapshot().to_prometheus();
         assert!(text.contains("# TYPE fgpm_queries_total counter\nfgpm_queries_total 3\n"));
+        // resilience counters are always exposed (Prometheus scrapers
+        // want series to exist from the first scrape)
+        assert!(text.contains("# TYPE fgpm_retries_total counter\nfgpm_retries_total 0\n"));
+        assert!(text.contains("fgpm_resumed_sweeps_total 0\n"));
+        assert!(text.contains("fgpm_drained_total 0\n"));
+        assert!(text.contains("fgpm_aborted_deadline_total 0\n"));
         assert!(text.contains("# TYPE fgpm_predict_latency_us histogram\n"), "{text}");
         assert!(text.contains("fgpm_predict_latency_us_bucket{le=\"+Inf\"} 2"), "{text}");
         assert!(text.contains("fgpm_predict_latency_us_sum 300"), "{text}");

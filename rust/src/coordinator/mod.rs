@@ -8,6 +8,7 @@
 //! see DESIGN.md §3).
 
 pub mod batcher;
+pub mod chaos;
 pub mod metrics;
 pub mod service;
 pub mod server;

@@ -14,25 +14,44 @@
 //! terminal `{"summary":...}` object. Errors come back as
 //! {"error": "..."}.
 //!
-//! The accept loop sheds load instead of queueing unboundedly: beyond
-//! [`ServeOpts::max_conns`] concurrent connections a client gets one
-//! `{"error":"busy"}` line and is disconnected, and every accepted
-//! socket carries a read/write timeout so a stuck peer cannot pin a
-//! handler thread (or the whole service) forever.
+//! The accept loop hands connections to a FIXED worker pool
+//! ([`ServeOpts::workers`]) and sheds load instead of queueing
+//! unboundedly: beyond [`ServeOpts::max_conns`] concurrent connections a
+//! client gets one `{"error":"busy"}` line and is disconnected, and
+//! every accepted socket carries a read/write timeout so a stuck peer
+//! cannot pin a handler thread (or the whole service) forever.
+//!
+//! Resilience layer (PROTOCOL.md §resume, §shutdown):
+//!   - a [`ShutdownSignal`] (SIGTERM via [`install_sigterm_handler`], or
+//!     the loopback-gated `{"cmd":"shutdown"}` command) stops accepting,
+//!     drains in-flight work up to [`ServeOpts::drain_timeout`], and the
+//!     caller persists the op cache exactly once;
+//!   - sweep rows carry IMPLICIT sequence numbers (their 0-based rank in
+//!     the deterministic ranked table), so a `resume_from` request field
+//!     re-streams the suffix byte-identically and a reconnecting client
+//!     splices it onto what it already saw ([`remote_sweep_resilient`],
+//!     capped exponential backoff with seeded jitter);
+//!   - [`ServeOpts::request_timeout`] aborts a runaway sweep with a
+//!     typed `deadline:` error instead of a hung socket;
+//!   - fault injection for the chaos suite threads through as
+//!     `Option<Arc<Chaos>>` (`None` everywhere outside tests — see
+//!     `coordinator::chaos`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::config::{ModelCfg, ParallelCfg, Platform, TopoSpec};
+use crate::coordinator::chaos::{AcceptFate, Chaos, ChaosReader, ChaosWriter, ConnChaos};
 use crate::coordinator::service::PredictionService;
 use crate::net::topology::RankOrder;
 use crate::pipeline::ScheduleKind;
 use crate::predictor::e2e::ComponentPrediction;
 use crate::sweep::{SweepReport, SweepSpec};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 pub fn prediction_to_json(cp: &ComponentPrediction) -> Json {
     Json::obj(vec![
@@ -65,6 +84,11 @@ pub struct SweepRequest {
     pub model: ModelCfg,
     pub platform: Platform,
     pub spec: SweepSpec,
+    /// Stream only rows with implicit sequence number (0-based rank in
+    /// the deterministic ranked table) `>= resume_from`. 0 — the value
+    /// an omitted field parses to — streams the whole table, keeping
+    /// default requests byte-identical to pre-resume clients.
+    pub resume_from: usize,
 }
 
 /// Build the `{"cmd":"sweep","spec":{...}}` request line.
@@ -244,9 +268,26 @@ pub fn parse_sweep_request(req: &Json) -> Result<SweepRequest, String> {
     };
     let prune = spec.get("prune").and_then(|p| p.as_bool()).unwrap_or(true);
     let faults = parse_faults(spec)?;
+    // resume_from rides at the REQUEST level (it addresses the stream,
+    // not the sweep): absent means 0, i.e. the full table
+    let resume_from = match req.get("resume_from") {
+        None => 0,
+        Some(v) => {
+            // validate on the raw f64: `as usize` saturates negatives
+            let x = v.as_f64().unwrap_or(-1.0);
+            if !(x >= 0.0 && x.fract() == 0.0) {
+                return Err("resume_from must be a non-negative integer".to_string());
+            }
+            if x > (MAX_SWEEP_DEGREE * MAX_SWEEP_DEGREE) as f64 {
+                return Err("resume_from out of range".to_string());
+            }
+            x as usize
+        }
+    };
     Ok(SweepRequest {
         model,
         platform,
+        resume_from,
         spec: SweepSpec {
             gpus,
             max_pp,
@@ -282,11 +323,12 @@ fn row_json(row: &crate::sweep::SweepRow) -> Json {
 
 /// The terminal summary object of a sweep stream. New counters are
 /// omitted at their defaults (`skipped_microbatch` at 0; the goodput
-/// aggregates when no row carries a fault annotation), so a fault-free
-/// default sweep's summary bytes are identical to pre-fault servers.
-fn summary_json(report: &SweepReport) -> Json {
+/// aggregates when no row carries a fault annotation; `resume_from` on
+/// a full stream), so a fault-free default sweep's summary bytes are
+/// identical to pre-fault servers.
+fn summary_json(report: &SweepReport, resume_from: usize) -> Json {
     let mut fields = vec![
-        ("configs", Json::Num(report.rows.len() as f64)),
+        ("configs", Json::Num((report.rows.len() - resume_from) as f64)),
         ("evaluated", Json::Num(report.evaluated as f64)),
         ("pruned", Json::Num(report.pruned as f64)),
         ("bound_consults", Json::Num(report.bound_consults as f64)),
@@ -322,34 +364,146 @@ fn summary_json(report: &SweepReport) -> Json {
     if report.bound_us > 0.0 {
         fields.push(("bound_us", Json::Num(report.bound_us)));
     }
+    // the resume acknowledgment: present exactly when the stream was a
+    // suffix, so resuming clients can distinguish a real resume from an
+    // older server re-streaming the full table
+    if resume_from > 0 {
+        fields.push(("resume_from", Json::Num(resume_from as f64)));
+    }
     Json::obj(vec![("summary", Json::obj(fields))])
 }
 
-/// Serve one sweep request as a stream: rows fastest-first, then the
-/// summary. Parse errors come back as a single `{"error":...}` line.
-pub fn handle_sweep(
+/// How one sweep execution ended, as seen by the stream writer.
+enum SweepOutcome {
+    Done(SweepReport),
+    Failed(String),
+    DeadlineExceeded(Duration),
+}
+
+/// Serve one sweep request as a stream: rows fastest-first (suffix only
+/// when resuming), then the summary. Parse errors come back as a single
+/// `{"error":...}` line. `run` supplies the execution strategy (inline,
+/// or deadline-guarded on the serving path).
+fn handle_sweep_impl(
     svc: &PredictionService,
     req: &Json,
     out: &mut dyn Write,
+    chaos: ConnChaos,
+    run: &mut dyn FnMut(SweepRequest) -> SweepOutcome,
 ) -> std::io::Result<()> {
     let parsed = match parse_sweep_request(req) {
         Ok(p) => p,
         Err(msg) => return writeln!(out, "{}", err_json(&msg)),
     };
+    let resume_from = parsed.resume_from;
+    if resume_from > 0 {
+        // a resume_from-carrying request IS a client retry, as the
+        // server observes it
+        svc.metrics.add(&svc.metrics.retries, 1);
+    }
     // a worker panic is served as one {"error":...} line — the
     // connection (and the whole coordinator) stays usable afterwards
-    let report = match svc.sweep(&parsed.model, &parsed.platform, &parsed.spec) {
-        Ok(r) => r,
-        Err(e) => return writeln!(out, "{}", err_json(&e.to_string())),
+    let report = match run(parsed) {
+        SweepOutcome::Done(r) => r,
+        SweepOutcome::Failed(msg) => {
+            // ops prefetched before the failure are real predictions:
+            // persist them so even "last request errored, then killed"
+            // still warm-starts the next process (chaos suite regression)
+            svc.persist_cache();
+            return writeln!(out, "{}", err_json(&msg));
+        }
+        SweepOutcome::DeadlineExceeded(d) => {
+            svc.metrics.add(&svc.metrics.aborted_deadline, 1);
+            return writeln!(
+                out,
+                "{}",
+                err_json(&format!("deadline: sweep aborted after {}ms", d.as_millis()))
+            );
+        }
     };
-    for row in &report.rows {
+    if resume_from > report.rows.len() {
+        // the sweep itself succeeded — keep its prefetched ops even
+        // though the request errors out
+        svc.persist_cache();
+        return writeln!(
+            out,
+            "{}",
+            err_json(&format!(
+                "resume_from {resume_from} beyond the {}-row table",
+                report.rows.len()
+            ))
+        );
+    }
+    for row in &report.rows[resume_from..] {
         writeln!(out, "{}", row_json(row))?;
     }
-    writeln!(out, "{}", summary_json(&report))?;
+    writeln!(out, "{}", summary_json(&report, resume_from))?;
+    if resume_from > 0 {
+        svc.metrics.add(&svc.metrics.resumed_sweeps, 1);
+    }
     // persist only AFTER the stream: the client has its rows; the
     // O(store-size) serialize + fsync happens off its critical path
     svc.persist_cache();
+    if chaos.corrupt_cache {
+        if let Some(path) = svc.persist_path() {
+            let _ = crate::coordinator::chaos::corrupt_file(path);
+        }
+    }
     Ok(())
+}
+
+/// [`handle_sweep_impl`] running the sweep inline (no deadline) — the
+/// in-process entry point tests and embedders use.
+pub fn handle_sweep(
+    svc: &PredictionService,
+    req: &Json,
+    out: &mut dyn Write,
+) -> std::io::Result<()> {
+    handle_sweep_impl(svc, req, out, ConnChaos::default(), &mut |p| {
+        match svc.sweep(&p.model, &p.platform, &p.spec) {
+            Ok(r) => SweepOutcome::Done(r),
+            Err(e) => SweepOutcome::Failed(e.to_string()),
+        }
+    })
+}
+
+/// The connection-layer sweep handler: adds the per-request deadline
+/// (the sweep runs on a helper thread that is ABANDONED on timeout —
+/// the `Arc` keeps the service alive for it — and the client gets a
+/// typed `deadline:` error instead of a hung socket) and the
+/// chaos-injection hooks.
+pub fn handle_sweep_conn(
+    svc: &Arc<PredictionService>,
+    req: &Json,
+    out: &mut dyn Write,
+    request_timeout: Option<Duration>,
+    chaos: ConnChaos,
+) -> std::io::Result<()> {
+    handle_sweep_impl(svc, req, out, chaos, &mut |p| match request_timeout {
+        None => match svc.sweep(&p.model, &p.platform, &p.spec) {
+            Ok(r) => SweepOutcome::Done(r),
+            Err(e) => SweepOutcome::Failed(e.to_string()),
+        },
+        Some(deadline) => {
+            let svc2 = Arc::clone(svc);
+            let (tx, rx) = std::sync::mpsc::channel();
+            let spawned = std::thread::Builder::new()
+                .name("fgpm-sweep-deadline".to_string())
+                .spawn(move || {
+                    let _ = tx.send(match svc2.sweep(&p.model, &p.platform, &p.spec) {
+                        Ok(r) => SweepOutcome::Done(r),
+                        Err(e) => SweepOutcome::Failed(e.to_string()),
+                    });
+                });
+            if spawned.is_err() {
+                return SweepOutcome::Failed("could not spawn sweep thread".to_string());
+            }
+            match rx.recv_timeout(deadline) {
+                Ok(outcome) => outcome,
+                Err(_) => SweepOutcome::DeadlineExceeded(deadline),
+            }
+        }
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -379,37 +533,109 @@ pub struct RemoteSweep {
 /// How long the thin client waits on the server before giving up.
 const CLIENT_TIMEOUT: Duration = Duration::from_secs(600);
 
-/// Run a sweep on a remote coordinator: send one request line, collect
-/// the streamed rows until the summary arrives.
-pub fn remote_sweep(addr: &str, request: &Json) -> Result<RemoteSweep, String> {
-    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+/// Client-side retry policy for [`remote_sweep_resilient`].
+#[derive(Clone, Copy, Debug)]
+pub struct RetryCfg {
+    /// Reconnect attempts AFTER the first (0 = single-shot, the plain
+    /// [`remote_sweep`] behavior).
+    pub retries: u32,
+    /// Base backoff before retry 1; doubled per retry up to
+    /// [`BACKOFF_CAP`].
+    pub backoff: Duration,
+    /// Jitter seed: the whole backoff schedule is a pure function of
+    /// `(retries, backoff, seed)`, so any given run replays exactly
+    /// while differently-seeded clients desynchronize.
+    pub seed: u64,
+}
+
+impl Default for RetryCfg {
+    fn default() -> RetryCfg {
+        RetryCfg { retries: 2, backoff: Duration::from_millis(100), seed: 0 }
+    }
+}
+
+/// Ceiling for the exponential backoff (the doubling stops here).
+pub const BACKOFF_CAP: Duration = Duration::from_secs(10);
+
+/// The sleep before each retry: capped exponential backoff
+/// (`backoff << attempt`, never above [`BACKOFF_CAP`]) scaled by a
+/// seeded jitter factor in `[0.5, 1.0)`. Deterministic per
+/// [`RetryCfg`] — the schedule is data, so tests pin it exactly.
+pub fn backoff_schedule(cfg: &RetryCfg) -> Vec<Duration> {
+    let mut rng = Rng::new(cfg.seed).fork(0xB0FF);
+    (0..cfg.retries)
+        .map(|attempt| {
+            let base = cfg.backoff.saturating_mul(1 << attempt.min(20)).min(BACKOFF_CAP);
+            base.mul_f64(rng.uniform(0.5, 1.0))
+        })
+        .collect()
+}
+
+/// One connection's worth of sweep streaming.
+enum Attempt {
+    /// Rows plus the terminal summary arrived.
+    Complete(Vec<RemoteRow>, Json),
+    /// Transport failure (connect/send/read error, premature EOF, or a
+    /// `busy` shed): retrying can help. Carries whatever complete rows
+    /// were streamed before the cut, so the caller can resume.
+    Cut(Vec<RemoteRow>, String),
+    /// Typed server refusal or malformed stream: retrying cannot help.
+    Fatal(String),
+}
+
+/// Drive one request/stream cycle on a fresh connection.
+fn sweep_attempt(addr: &str, request: &Json) -> Attempt {
+    let mut rows = Vec::new();
+    let stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(e) => return Attempt::Cut(rows, format!("connect {addr}: {e}")),
+    };
     let _ = stream.set_read_timeout(Some(CLIENT_TIMEOUT));
     let _ = stream.set_write_timeout(Some(CLIENT_TIMEOUT));
-    let mut writer = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
-    writer
-        .write_all(format!("{request}\n").as_bytes())
-        .map_err(|e| format!("send request: {e}"))?;
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => return Attempt::Cut(rows, format!("clone stream: {e}")),
+    };
+    if let Err(e) = writer.write_all(format!("{request}\n").as_bytes()) {
+        return Attempt::Cut(rows, format!("send request: {e}"));
+    }
     let mut reader = BufReader::new(stream);
-    let mut rows = Vec::new();
     loop {
         let mut line = String::new();
-        let n = reader.read_line(&mut line).map_err(|e| format!("read: {e}"))?;
+        let n = match reader.read_line(&mut line) {
+            Ok(n) => n,
+            Err(e) => return Attempt::Cut(rows, format!("read: {e}")),
+        };
         if n == 0 {
-            return Err("server closed the stream before the summary".to_string());
+            return Attempt::Cut(rows, "server closed the stream before the summary".to_string());
+        }
+        if !line.ends_with('\n') {
+            // EOF mid-line: drop the fragment — the resumed stream
+            // re-serves that row in full, keeping the splice byte-exact
+            return Attempt::Cut(rows, "server closed the stream mid-line".to_string());
         }
         let line = line.trim();
         if line.is_empty() {
             continue;
         }
-        let j = Json::parse(line).map_err(|e| format!("bad server line: {e}"))?;
+        let j = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => return Attempt::Fatal(format!("bad server line: {e}")),
+        };
         if let Some(msg) = j.str_at("error") {
-            return Err(format!("server error: {msg}"));
+            // "busy" is the shed signal — PROTOCOL.md tells clients to
+            // retry with backoff; every other error is a typed refusal
+            return if msg == "busy" {
+                Attempt::Cut(rows, format!("server error: {msg}"))
+            } else {
+                Attempt::Fatal(format!("server error: {msg}"))
+            };
         }
         if let Some(row) = j.get("row") {
             let (Some(label), Some(total_us), Some(mem_gib)) =
                 (row.str_at("label"), row.f64_at("total_us"), row.f64_at("mem_gib"))
             else {
-                return Err(format!("malformed row: {line}"));
+                return Attempt::Fatal(format!("malformed row: {line}"));
             };
             let goodput = match (
                 row.f64_at("goodput_frac"),
@@ -423,10 +649,82 @@ pub fn remote_sweep(addr: &str, request: &Json) -> Result<RemoteSweep, String> {
             continue;
         }
         if let Some(summary) = j.get("summary") {
-            return Ok(RemoteSweep { rows, summary: summary.clone() });
+            return Attempt::Complete(rows, summary.clone());
         }
-        return Err(format!("unexpected server line: {line}"));
+        return Attempt::Fatal(format!("unexpected server line: {line}"));
     }
+}
+
+/// Run a sweep on a remote coordinator: send one request line, collect
+/// the streamed rows until the summary arrives. Single-shot — transport
+/// failures surface as `Err` (see [`remote_sweep_resilient`] for the
+/// retrying variant the CLI uses).
+pub fn remote_sweep(addr: &str, request: &Json) -> Result<RemoteSweep, String> {
+    remote_sweep_resilient(addr, request, &RetryCfg { retries: 0, ..RetryCfg::default() })
+}
+
+/// [`remote_sweep`] with reconnect-and-resume: after a transport
+/// failure the client backs off ([`backoff_schedule`]), reconnects, and
+/// re-requests `resume_from: <rows seen>` — rows are deterministic and
+/// ranked, so the spliced stream is byte-identical to an uninterrupted
+/// one. A server that does not acknowledge the resume (no `resume_from`
+/// in its summary: an older coordinator re-streaming the full table) is
+/// detected and its full stream REPLACES the partial prefix, so the
+/// final table is correct either way.
+pub fn remote_sweep_resilient(
+    addr: &str,
+    request: &Json,
+    cfg: &RetryCfg,
+) -> Result<RemoteSweep, String> {
+    let schedule = backoff_schedule(cfg);
+    let mut rows: Vec<RemoteRow> = Vec::new();
+    let mut last_err = String::new();
+    for attempt in 0..=cfg.retries as usize {
+        if attempt > 0 {
+            std::thread::sleep(schedule[attempt - 1]);
+        }
+        let resumed_req;
+        let req = if rows.is_empty() {
+            request
+        } else {
+            let mut r = request.clone();
+            r.insert("resume_from", Json::Num(rows.len() as f64));
+            resumed_req = r;
+            &resumed_req
+        };
+        match sweep_attempt(addr, req) {
+            Attempt::Complete(got, summary) => {
+                if rows.is_empty() || summary.usize_at("resume_from") == Some(rows.len()) {
+                    rows.extend(got);
+                } else {
+                    // unacknowledged resume: the older server streamed
+                    // the table from row 0 — replace, don't splice
+                    rows = got;
+                }
+                return Ok(RemoteSweep { rows, summary });
+            }
+            Attempt::Cut(got, err) => {
+                last_err = err;
+                // rows within one sweep are distinct configs, so a
+                // first row matching ours means the server restarted
+                // from the top (unacknowledged resume, cut again):
+                // keep whichever prefix reaches further
+                if rows.is_empty() {
+                    rows = got;
+                } else if let Some(first) = got.first() {
+                    if *first == rows[0] {
+                        if got.len() > rows.len() {
+                            rows = got;
+                        }
+                    } else {
+                        rows.extend(got);
+                    }
+                }
+            }
+            Attempt::Fatal(err) => return Err(err),
+        }
+    }
+    Err(last_err)
 }
 
 // ---------------------------------------------------------------------------
@@ -434,8 +732,10 @@ pub fn remote_sweep(addr: &str, request: &Json) -> Result<RemoteSweep, String> {
 // ---------------------------------------------------------------------------
 
 /// Handle one single-response request line; pure function for
-/// testability. (`sweep` is the one streaming command and is dispatched
-/// by [`handle_conn`] to [`handle_sweep`] instead.)
+/// testability. (`sweep` — the one streaming command — and the
+/// connection-scoped `shutdown` admin command are dispatched by
+/// [`handle_conn`] to [`handle_sweep_conn`] / [`handle_shutdown`]
+/// instead.)
 pub fn handle_line(svc: &PredictionService, line: &str) -> String {
     let req = match Json::parse(line) {
         Ok(j) => j,
@@ -519,11 +819,87 @@ pub struct ServeOpts {
     /// Per-connection socket read AND write timeout: an idle or stuck
     /// peer is disconnected instead of pinning its handler thread.
     pub read_timeout: Duration,
+    /// Fixed connection worker-pool size; admitted connections beyond
+    /// it queue (the `max_conns` shed still bounds the queue depth).
+    pub workers: usize,
+    /// Graceful-shutdown budget: how long in-flight connections get to
+    /// finish before being abandoned.
+    pub drain_timeout: Duration,
+    /// Per-request sweep deadline; a sweep running longer is aborted
+    /// with a typed `deadline:` error (`None` = no deadline).
+    pub request_timeout: Option<Duration>,
 }
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
-        ServeOpts { max_conns: 64, read_timeout: Duration::from_secs(60) }
+        ServeOpts {
+            max_conns: 64,
+            read_timeout: Duration::from_secs(60),
+            workers: 8,
+            drain_timeout: Duration::from_secs(5),
+            request_timeout: None,
+        }
+    }
+}
+
+/// Process-wide SIGTERM latch (one atomic store: the only thing the
+/// handler does, keeping it async-signal-safe).
+static SIGTERM_FLAG: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_sigterm(_sig: i32) {
+    SIGTERM_FLAG.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGTERM into a graceful drain instead of an instant kill. Only
+/// the `fgpm serve` CLI path installs this — it is process-global, so
+/// library embedders and tests use per-server [`ShutdownSignal`]s.
+#[cfg(unix)]
+pub fn install_sigterm_handler() {
+    // no libc crate in the dependency set: bind the (POSIX-guaranteed)
+    // `signal` symbol from the already-linked system libc directly
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_sigterm as usize);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_sigterm_handler() {}
+
+/// Cooperative shutdown flag polled by the accept loop (between
+/// accepts) and every connection handler (between requests). Set by
+/// [`ShutdownSignal::trigger`] (the `{"cmd":"shutdown"}` admin command,
+/// tests) or process-wide by SIGTERM.
+pub struct ShutdownSignal(AtomicBool);
+
+impl ShutdownSignal {
+    pub fn new() -> Arc<ShutdownSignal> {
+        Arc::new(ShutdownSignal(AtomicBool::new(false)))
+    }
+
+    pub fn trigger(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_set(&self) -> bool {
+        self.0.load(Ordering::SeqCst) || SIGTERM_FLAG.load(Ordering::SeqCst)
+    }
+}
+
+/// Answer a `{"cmd":"shutdown"}` admin request: loopback peers trigger
+/// the drain, anyone else gets a typed refusal. Pure function over the
+/// peer address for testability.
+pub fn handle_shutdown(peer: Option<std::net::SocketAddr>, shutdown: &ShutdownSignal) -> String {
+    match peer {
+        Some(addr) if addr.ip().is_loopback() => {
+            shutdown.trigger();
+            Json::obj(vec![("ok", Json::Bool(true)), ("draining", Json::Bool(true))]).to_string()
+        }
+        _ => err_json("shutdown is only accepted from loopback"),
     }
 }
 
@@ -536,56 +912,162 @@ impl Drop for ConnPermit {
     }
 }
 
-fn handle_conn(svc: Arc<PredictionService>, stream: TcpStream, _permit: ConnPermit) {
-    let mut writer = match stream.try_clone() {
+/// How often the accept loop wakes to check the shutdown flag.
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+/// Socket-level read timeout used as the handler's POLL interval: short
+/// enough to notice a drain promptly; the full [`ServeOpts::read_timeout`]
+/// budget is still enforced ACROSS polls, so the client-visible idle
+/// timeout is unchanged.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+fn handle_conn(
+    svc: &Arc<PredictionService>,
+    stream: TcpStream,
+    _permit: ConnPermit,
+    opts: &ServeOpts,
+    shutdown: &ShutdownSignal,
+    chaos: ConnChaos,
+) {
+    let peer = stream.peer_addr().ok();
+    let write_half = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        // a read timeout surfaces as Err -> disconnect the stuck peer
-        // (and count it; other I/O errors are plain disconnects)
-        let line = match line {
-            Ok(l) => l,
-            Err(e) => {
+    let mut writer = ChaosWriter::new(write_half, chaos);
+    let mut reader = BufReader::new(ChaosReader::new(stream, chaos.read_stall));
+    let mut line = String::new();
+    let mut idle_since = Instant::now();
+    loop {
+        // graceful drain: only BETWEEN requests — an in-flight request
+        // (or a partially-read line, which read_line keeps in `line`
+        // across poll ticks) finishes first
+        if shutdown.is_set() && line.is_empty() {
+            break;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {
+                let owned = std::mem::take(&mut line);
+                idle_since = Instant::now();
+                let req_line = owned.trim();
+                if req_line.is_empty() {
+                    continue;
+                }
+                // parse once; the streaming command and the admin
+                // command dispatch on the value, everything else goes
+                // through the single-line handler (which also owns the
+                // bad-json error reply)
+                match Json::parse(req_line) {
+                    Ok(req) if req.str_at("cmd") == Some("sweep") => {
+                        if handle_sweep_conn(svc, &req, &mut writer, opts.request_timeout, chaos)
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    Ok(req) if req.str_at("cmd") == Some("shutdown") => {
+                        let resp = handle_shutdown(peer, shutdown);
+                        if writer.write_all(resp.as_bytes()).is_err()
+                            || writer.write_all(b"\n").is_err()
+                        {
+                            break;
+                        }
+                    }
+                    _ => {
+                        let resp = handle_line(svc, req_line);
+                        if writer.write_all(resp.as_bytes()).is_err()
+                            || writer.write_all(b"\n").is_err()
+                        {
+                            break;
+                        }
+                    }
+                }
+            }
+            Err(e)
                 if matches!(
                     e.kind(),
                     std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
-                ) {
+                ) =>
+            {
+                // poll tick; disconnect (and count) only once the FULL
+                // idle budget is spent
+                if idle_since.elapsed() >= opts.read_timeout {
                     svc.metrics.add(&svc.metrics.conn_timeouts, 1);
-                }
-                break;
-            }
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        // parse once; the streaming command dispatches on the value,
-        // everything else goes through the single-line handler (which
-        // also owns the bad-json error reply)
-        match Json::parse(&line) {
-            Ok(req) if req.str_at("cmd") == Some("sweep") => {
-                if handle_sweep(&svc, &req, &mut writer).is_err() {
                     break;
                 }
             }
-            _ => {
-                let resp = handle_line(&svc, &line);
-                if writer.write_all(resp.as_bytes()).is_err() || writer.write_all(b"\n").is_err()
-                {
-                    break;
-                }
-            }
+            Err(_) => break,
         }
     }
 }
 
-fn accept_loop(listener: TcpListener, svc: Arc<PredictionService>, opts: ServeOpts) {
+/// What a drained accept loop left behind.
+#[derive(Clone, Copy, Debug)]
+pub struct DrainReport {
+    /// Connections that finished their in-flight work inside the budget.
+    pub drained: usize,
+    /// Connections still busy at the deadline (their worker threads are
+    /// abandoned; the exiting process reaps them).
+    pub aborted: usize,
+}
+
+struct QueuedConn {
+    stream: TcpStream,
+    chaos: ConnChaos,
+    permit: ConnPermit,
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    svc: Arc<PredictionService>,
+    opts: ServeOpts,
+    shutdown: Arc<ShutdownSignal>,
+    chaos: Option<Arc<Chaos>>,
+) -> DrainReport {
     let active = Arc::new(AtomicUsize::new(0));
-    for stream in listener.incoming() {
-        let Ok(stream) = stream else { continue };
+    let (tx, rx) = std::sync::mpsc::channel::<QueuedConn>();
+    let rx = Arc::new(Mutex::new(rx));
+    let mut pool = Vec::new();
+    for i in 0..opts.workers.max(1) {
+        let rx = Arc::clone(&rx);
+        let svc = Arc::clone(&svc);
+        let shutdown = Arc::clone(&shutdown);
+        let worker = std::thread::Builder::new()
+            .name(format!("fgpm-conn-worker-{i}"))
+            .spawn(move || loop {
+                // hold the queue lock for the dequeue only, never while
+                // handling — one slow connection must not serialize the
+                // pool
+                let next = { rx.lock().unwrap().recv() };
+                let Ok(conn) = next else { break };
+                handle_conn(&svc, conn.stream, conn.permit, &opts, &shutdown, conn.chaos);
+            })
+            .expect("spawn connection worker");
+        pool.push(worker);
+    }
+    // nonblocking accepts so the loop can notice the shutdown flag; if
+    // the platform refuses, accepts block and the drain waits for the
+    // next connection — degraded, not broken
+    let _ = listener.set_nonblocking(true);
+    while !shutdown.is_set() {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+                continue;
+            }
+            Err(_) => continue,
+        };
+        // O_NONBLOCK inheritance across accept() is platform-dependent
+        let _ = stream.set_nonblocking(false);
+        let conn_chaos = match chaos.as_ref().map(|c| c.on_accept()) {
+            Some(AcceptFate::Fail) => continue, // injected accept failure: drop = close
+            Some(AcceptFate::Serve(c)) => c,
+            None => ConnChaos::default(),
+        };
         // only this loop increments, so check-then-add cannot overshoot;
-        // handler threads decrementing concurrently can only free slots
+        // worker threads decrementing concurrently can only free slots
         if active.load(Ordering::SeqCst) >= opts.max_conns {
             svc.metrics.add(&svc.metrics.rejected_busy, 1);
             let mut s = stream;
@@ -594,27 +1076,60 @@ fn accept_loop(listener: TcpListener, svc: Arc<PredictionService>, opts: ServeOp
             continue; // dropping the stream closes it
         }
         active.fetch_add(1, Ordering::SeqCst);
-        let permit = ConnPermit(active.clone());
-        let _ = stream.set_read_timeout(Some(opts.read_timeout));
+        let permit = ConnPermit(Arc::clone(&active));
+        let _ = stream.set_read_timeout(Some(opts.read_timeout.min(READ_POLL)));
         let _ = stream.set_write_timeout(Some(opts.read_timeout));
-        let svc = svc.clone();
-        std::thread::spawn(move || handle_conn(svc, stream, permit));
+        if tx.send(QueuedConn { stream, chaos: conn_chaos, permit }).is_err() {
+            break; // worker pool gone — nothing can serve
+        }
     }
+    // drain: close the listener first (new connects get refused, not
+    // black-holed), stop the queue, then give in-flight work its budget
+    drop(listener);
+    drop(tx);
+    let in_flight = active.load(Ordering::SeqCst);
+    let drain_start = Instant::now();
+    while active.load(Ordering::SeqCst) > 0 && drain_start.elapsed() < opts.drain_timeout {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let aborted = active.load(Ordering::SeqCst);
+    let drained = in_flight.saturating_sub(aborted);
+    svc.metrics.add(&svc.metrics.drained, drained as u64);
+    svc.metrics.add(&svc.metrics.aborted_deadline, aborted as u64);
+    if aborted == 0 {
+        // idle workers exit on the closed queue; reap them so the
+        // report means "nothing is still running"
+        for worker in pool {
+            let _ = worker.join();
+        }
+    }
+    DrainReport { drained, aborted }
 }
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:7070") with the given
-/// protection knobs.
+/// Serve on `addr` (e.g. "127.0.0.1:7070") with the given protection
+/// knobs until a shutdown signal (SIGTERM when
+/// [`install_sigterm_handler`] is active, or the loopback
+/// `{"cmd":"shutdown"}` command) drains the service. The op cache is
+/// persisted exactly once on the way out.
 pub fn serve_opts(svc: PredictionService, addr: &str, opts: ServeOpts) -> std::io::Result<()> {
     let listener = TcpListener::bind(addr)?;
+    let shutdown = ShutdownSignal::new();
     eprintln!(
-        "fgpm serving on {addr} (max {} conns, {:?} socket timeout)",
-        opts.max_conns, opts.read_timeout
+        "fgpm serving on {addr} ({} workers, max {} conns, {:?} socket timeout)",
+        opts.workers, opts.max_conns, opts.read_timeout
     );
-    accept_loop(listener, Arc::new(svc), opts);
+    let svc = Arc::new(svc);
+    let report = accept_loop(listener, Arc::clone(&svc), opts, shutdown, None);
+    // exactly-once persist: Drop sees the latch and skips its own save
+    svc.persist_cache_final();
+    eprintln!(
+        "fgpm drained: {} connection(s) completed, {} aborted (budget {:?}); op cache persisted",
+        report.drained, report.aborted, opts.drain_timeout
+    );
     Ok(())
 }
 
-/// Serve forever with default protection knobs.
+/// Serve with default protection knobs.
 pub fn serve(svc: PredictionService, addr: &str) -> std::io::Result<()> {
     serve_opts(svc, addr, ServeOpts::default())
 }
@@ -630,11 +1145,36 @@ pub fn serve_background_opts(
     svc: PredictionService,
     opts: ServeOpts,
 ) -> std::io::Result<std::net::SocketAddr> {
+    let (addr, _shutdown, _loop_thread) = serve_background_chaos(svc, opts, None)?;
+    Ok(addr)
+}
+
+/// Everything a test needs to drive a background server: its address,
+/// the shutdown signal, and the accept-loop thread whose join yields
+/// the [`DrainReport`].
+pub type ServerHandle =
+    (std::net::SocketAddr, Arc<ShutdownSignal>, std::thread::JoinHandle<DrainReport>);
+
+/// The test-only constructor behind the chaos suite:
+/// [`serve_background_opts`] plus fault injection and control handles.
+/// Passing `chaos: None` injects nothing — this is exactly the serving
+/// path, shutdown included.
+pub fn serve_background_chaos(
+    svc: PredictionService,
+    opts: ServeOpts,
+    chaos: Option<Arc<Chaos>>,
+) -> std::io::Result<ServerHandle> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
+    let shutdown = ShutdownSignal::new();
     let svc = Arc::new(svc);
-    std::thread::spawn(move || accept_loop(listener, svc, opts));
-    Ok(addr)
+    let signal = Arc::clone(&shutdown);
+    let loop_thread = std::thread::spawn(move || {
+        let report = accept_loop(listener, Arc::clone(&svc), opts, signal, chaos);
+        svc.persist_cache_final();
+        report
+    });
+    Ok((addr, shutdown, loop_thread))
 }
 
 #[cfg(test)]
@@ -865,6 +1405,10 @@ mod tests {
         // pre-fault servers — none of the new keys appear
         assert!(!text.contains("goodput"), "{text}");
         assert!(!text.contains("skipped_microbatch"), "{text}");
+        // ... and the resume layer stays silent on full streams: no
+        // explicit seq keys on rows, no resume ack in the summary
+        assert!(!text.contains("resume_from"), "{text}");
+        assert!(!text.contains("\"seq\""), "{text}");
         s.shutdown();
     }
 
@@ -983,7 +1527,11 @@ mod tests {
         use std::io::{BufRead, BufReader};
         let addr = serve_background_opts(
             svc(),
-            ServeOpts { max_conns: 0, read_timeout: Duration::from_secs(5) },
+            ServeOpts {
+                max_conns: 0,
+                read_timeout: Duration::from_secs(5),
+                ..ServeOpts::default()
+            },
         )
         .unwrap();
         let conn = std::net::TcpStream::connect(addr).unwrap();
@@ -1024,7 +1572,11 @@ mod tests {
         use std::io::{BufRead, BufReader, Read, Write};
         let addr = serve_background_opts(
             svc(),
-            ServeOpts { max_conns: 1, read_timeout: Duration::from_millis(150) },
+            ServeOpts {
+                max_conns: 1,
+                read_timeout: Duration::from_millis(150),
+                ..ServeOpts::default()
+            },
         )
         .unwrap();
         // the first connection occupies the single slot without sending
@@ -1072,7 +1624,11 @@ mod tests {
         use std::io::Read;
         let addr = serve_background_opts(
             svc(),
-            ServeOpts { max_conns: 4, read_timeout: Duration::from_millis(100) },
+            ServeOpts {
+                max_conns: 4,
+                read_timeout: Duration::from_millis(100),
+                ..ServeOpts::default()
+            },
         )
         .unwrap();
         let mut conn = std::net::TcpStream::connect(addr).unwrap();
@@ -1081,5 +1637,189 @@ mod tests {
         let mut buf = [0u8; 16];
         let n = conn.read(&mut buf).unwrap_or(0);
         assert_eq!(n, 0, "server should close the idle connection");
+    }
+
+    #[test]
+    fn backoff_schedule_is_capped_jittered_and_deterministic() {
+        let cfg = RetryCfg { retries: 8, backoff: Duration::from_millis(100), seed: 42 };
+        let a = backoff_schedule(&cfg);
+        assert_eq!(a, backoff_schedule(&cfg), "same cfg must replay the same schedule");
+        assert_eq!(a.len(), 8);
+        for (k, d) in a.iter().enumerate() {
+            let base = cfg.backoff.saturating_mul(1 << (k as u32).min(20)).min(BACKOFF_CAP);
+            assert!(
+                *d >= base.mul_f64(0.5) && *d <= base,
+                "attempt {k}: {d:?} outside the jitter band of {base:?}"
+            );
+        }
+        // the doubling stops at the cap: attempt 7 (100ms << 7 = 12.8s)
+        // lands in the capped band, not above it
+        assert!(a[7] <= BACKOFF_CAP && a[7] >= BACKOFF_CAP.mul_f64(0.5), "{:?}", a[7]);
+        // a different seed draws a different schedule
+        assert_ne!(a, backoff_schedule(&RetryCfg { seed: 43, ..cfg }));
+    }
+
+    #[test]
+    fn resume_from_parses_and_validates() {
+        let base = r#"{"cmd":"sweep","spec":{"model":"llemma7b","platform":"perlmutter","gpus":16}}"#;
+        let mut req = Json::parse(base).unwrap();
+        assert_eq!(parse_sweep_request(&req).unwrap().resume_from, 0);
+        req.insert("resume_from", Json::Num(3.0));
+        assert_eq!(parse_sweep_request(&req).unwrap().resume_from, 3);
+        req.insert("resume_from", Json::Num(-1.0));
+        assert!(parse_sweep_request(&req).unwrap_err().contains("resume_from"));
+        req.insert("resume_from", Json::Num(1e18));
+        assert!(parse_sweep_request(&req).unwrap_err().contains("resume_from"));
+    }
+
+    #[test]
+    fn resumed_stream_is_a_byte_exact_suffix_and_acks_resume_from() {
+        let s = svc();
+        let mut spec = SweepSpec::new(16);
+        spec.max_pp = 8;
+        let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
+        let mut full: Vec<u8> = Vec::new();
+        handle_sweep(&s, &req, &mut full).unwrap();
+        let full = String::from_utf8(full).unwrap();
+        let full_lines: Vec<&str> = full.lines().collect();
+        let rows = full_lines.len() - 1;
+        assert!(rows >= 3, "{full}");
+        // the implicit seq is the rank: resume_from=2 re-streams the
+        // byte-exact suffix (row values are deterministic, so the warm
+        // second run changes the summary's cache counters only)
+        let mut resumed_req = Json::parse(&req.to_string()).unwrap();
+        resumed_req.insert("resume_from", Json::Num(2.0));
+        let mut out: Vec<u8> = Vec::new();
+        handle_sweep(&s, &resumed_req, &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(&lines[..lines.len() - 1], &full_lines[2..rows]);
+        let summary =
+            Json::parse(lines[lines.len() - 1]).unwrap().get("summary").unwrap().clone();
+        assert_eq!(summary.usize_at("resume_from"), Some(2));
+        assert_eq!(summary.usize_at("configs"), Some(rows - 2));
+        // resuming beyond the table is a typed error, not a panic
+        resumed_req.insert("resume_from", Json::Num((rows + 1) as f64));
+        let mut out: Vec<u8> = Vec::new();
+        handle_sweep(&s, &resumed_req, &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("beyond"), "{text}");
+        // the server observed two client retries, one completed resume
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.retries, 2);
+        assert_eq!(snap.resumed_sweeps, 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn shutdown_command_is_loopback_gated() {
+        let shutdown = ShutdownSignal::new();
+        let remote: std::net::SocketAddr = "8.8.8.8:9".parse().unwrap();
+        assert!(handle_shutdown(Some(remote), &shutdown).contains("error"));
+        assert!(!shutdown.is_set());
+        assert!(handle_shutdown(None, &shutdown).contains("error"));
+        assert!(!shutdown.is_set());
+        let local: std::net::SocketAddr = "127.0.0.1:9".parse().unwrap();
+        let resp = handle_shutdown(Some(local), &shutdown);
+        assert!(resp.contains("draining"), "{resp}");
+        assert!(shutdown.is_set());
+    }
+
+    #[test]
+    fn shutdown_command_drains_the_server_over_tcp() {
+        use std::io::{BufRead, BufReader, Write};
+        let (addr, _signal, loop_thread) =
+            serve_background_chaos(svc(), ServeOpts::default(), None).unwrap();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        conn.write_all(b"{\"cmd\":\"shutdown\"}\n").unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("draining"), "{line}");
+        let report = loop_thread.join().unwrap();
+        assert_eq!(report.aborted, 0, "{report:?}");
+    }
+
+    #[test]
+    fn graceful_drain_closes_idle_connections_and_reports() {
+        use std::io::{BufRead, BufReader, Read, Write};
+        let (addr, signal, loop_thread) =
+            serve_background_chaos(svc(), ServeOpts::default(), None).unwrap();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        conn.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("true"));
+        signal.trigger();
+        // the drain closes the now-idle connection...
+        let mut buf = [0u8; 8];
+        assert_eq!(reader.read(&mut buf).unwrap_or(0), 0);
+        // ...and the loop exits without aborting anything (whether the
+        // handler released its permit before or after the drain snapshot
+        // is a race, so `drained` may legitimately be 0 or 1)
+        let report = loop_thread.join().unwrap();
+        assert_eq!(report.aborted, 0, "{report:?}");
+        assert!(report.drained <= 1, "{report:?}");
+    }
+
+    #[test]
+    fn worker_pool_queues_beyond_pool_size_without_shedding() {
+        use std::io::{BufRead, BufReader, Write};
+        let addr = serve_background_opts(
+            svc(),
+            ServeOpts {
+                workers: 1,
+                max_conns: 4,
+                read_timeout: Duration::from_millis(200),
+                ..ServeOpts::default()
+            },
+        )
+        .unwrap();
+        // the held connection occupies the single worker by idling (the
+        // read timeout frees it); the second QUEUES — under max_conns it
+        // must not be shed — and is served once the worker comes free
+        let held = std::net::TcpStream::connect(addr).unwrap();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        conn.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("true"), "{line}");
+        drop(held);
+    }
+
+    /// A backend that stalls every batch long enough to blow a short
+    /// request deadline.
+    struct Slow(Duration);
+    impl BatchPredictor for Slow {
+        fn predict_batch(&mut self, _k: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+            std::thread::sleep(self.0);
+            rows.iter().map(|_| 100.0).collect()
+        }
+    }
+
+    #[test]
+    fn request_deadline_aborts_runaway_sweep_with_typed_error() {
+        let s = Arc::new(PredictionService::start(
+            Box::new(Slow(Duration::from_millis(50))),
+            BatcherCfg::default(),
+        ));
+        let req =
+            sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &SweepSpec::new(16));
+        let mut out: Vec<u8> = Vec::new();
+        handle_sweep_conn(&s, &req, &mut out, Some(Duration::from_millis(10)), ConnChaos::default())
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(text.lines().count(), 1, "{text}");
+        let j = Json::parse(text.trim()).unwrap();
+        assert!(j.str_at("error").unwrap().starts_with("deadline:"), "{text}");
+        assert_eq!(s.metrics.snapshot().aborted_deadline, 1);
+        // the runaway sweep was abandoned, not the service: it still
+        // answers (the abandoned thread keeps its own Arc alive)
+        assert!(handle_line(&s, r#"{"cmd":"ping"}"#).contains("true"));
     }
 }

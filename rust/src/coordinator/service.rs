@@ -4,7 +4,8 @@
 //! [`QueryClient`]s, which implement [`BatchPredictor`] so the whole
 //! `predictor::e2e` composition runs unmodified on top of the service.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -48,6 +49,12 @@ pub struct PredictionService {
     /// whole [`SweepSpec`]s server-side on the persistent store.
     engine: crate::sweep::Engine,
     persist: Option<CachePersist>,
+    /// Disk-cache size cap ([`Self::with_cache_max_bytes`]); `None`
+    /// saves the whole store.
+    cache_max_bytes: Option<u64>,
+    /// Set by [`Self::persist_cache_final`] so the exactly-once final
+    /// save of a graceful drain is not repeated by `Drop`.
+    persist_done: AtomicBool,
 }
 
 /// Cheap per-thread client; implements [`BatchPredictor`] by pushing
@@ -138,6 +145,8 @@ impl PredictionService {
             engine: crate::sweep::Engine::with_cache(op_cache.clone()),
             op_cache,
             persist: None,
+            cache_max_bytes: None,
+            persist_done: AtomicBool::new(false),
         }
     }
 
@@ -162,6 +171,20 @@ impl PredictionService {
         }
         self.persist = Some(CachePersist { path, fingerprint });
         self
+    }
+
+    /// Cap the persisted disk snapshot at `bytes` (`serve
+    /// --cache-max-mb`); saves evict least-recently-hit entries
+    /// deterministically until the file fits. 0 disables the cap.
+    pub fn with_cache_max_bytes(mut self, bytes: u64) -> PredictionService {
+        self.cache_max_bytes = if bytes > 0 { Some(bytes) } else { None };
+        self
+    }
+
+    /// The configured persistence path, if any (chaos tests corrupt the
+    /// file through this).
+    pub fn persist_path(&self) -> Option<&Path> {
+        self.persist.as_ref().map(|p| p.path.as_path())
     }
 
     pub fn client(&self) -> QueryClient {
@@ -218,12 +241,24 @@ impl PredictionService {
         Ok(report)
     }
 
-    /// Save the op cache to its configured path (no-op otherwise).
+    /// Save the op cache to its configured path (no-op otherwise),
+    /// evicting down to `cache_max_bytes` when a cap is set.
     pub fn persist_cache(&self) {
         if let Some(p) = &self.persist {
-            if let Err(e) = self.op_cache.save(&p.path, p.fingerprint) {
+            if let Err(e) = self.op_cache.save_capped(&p.path, p.fingerprint, self.cache_max_bytes)
+            {
                 eprintln!("[fgpm] WARNING: could not save op cache {:?}: {e}", p.path);
             }
+        }
+    }
+
+    /// The exactly-once final persist of a graceful drain: saves now and
+    /// latches so the subsequent `Drop` does not write the file again
+    /// (a second write would race a restarting replacement process
+    /// warm-loading the same path).
+    pub fn persist_cache_final(&self) {
+        if !self.persist_done.swap(true, Ordering::SeqCst) {
+            self.persist_cache();
         }
     }
 
@@ -239,7 +274,12 @@ impl PredictionService {
 
 impl Drop for PredictionService {
     fn drop(&mut self) {
-        self.persist_cache();
+        // Persist even when the last request errored (the prefetched op
+        // rows are valid regardless); skip only after an explicit
+        // exactly-once final persist.
+        if !self.persist_done.load(Ordering::SeqCst) {
+            self.persist_cache();
+        }
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(h) = self.executor.take() {
             let _ = h.join();

@@ -247,6 +247,13 @@ pub struct OpPredictionCache {
     /// Warm-start snapshot loaded from disk; consulted after a memory
     /// miss, with hits promoted into the memory shards.
     disk: Mutex<HashMap<OpKey, f64>>,
+    /// Recency stamps for LRU eviction on capped saves
+    /// ([`Self::save_capped`]): a monotone tick recorded per key on
+    /// counted fetch hits and inserts. Keys no request ever consulted
+    /// (e.g. warm-start entries that stayed cold) carry no stamp and
+    /// evict first.
+    stamps: Mutex<HashMap<OpKey, u64>>,
+    tick: AtomicU64,
     hits: AtomicU64,
     disk_hits: AtomicU64,
     misses: AtomicU64,
@@ -263,6 +270,8 @@ impl OpPredictionCache {
         OpPredictionCache {
             shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             disk: Mutex::new(HashMap::new()),
+            stamps: Mutex::new(HashMap::new()),
+            tick: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             disk_hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -298,10 +307,12 @@ impl OpPredictionCache {
         match self.lookup_tiered(key) {
             Some((v, false)) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                self.touch(key);
                 Some(v)
             }
             Some((v, true)) => {
                 self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                self.touch(key);
                 Some(v)
             }
             None => {
@@ -309,6 +320,12 @@ impl OpPredictionCache {
                 None
             }
         }
+    }
+
+    /// Record `key` as just-used for LRU purposes.
+    fn touch(&self, key: &OpKey) {
+        let t = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        self.stamps.lock().unwrap().insert(key.clone(), t);
     }
 
     /// Record a consult outcome without touching the store — the sweep
@@ -324,6 +341,7 @@ impl OpPredictionCache {
     }
 
     pub fn insert(&self, key: OpKey, v: f64) {
+        self.touch(&key);
         self.shard(&key).lock().unwrap().insert(key, v);
     }
 
@@ -353,6 +371,21 @@ impl OpPredictionCache {
     /// engines cannot interleave bytes — the file is always one writer's
     /// complete snapshot.
     pub fn save(&self, path: &Path, fingerprint: u64) -> std::io::Result<()> {
+        self.save_capped(path, fingerprint, None)
+    }
+
+    /// [`save`](Self::save) with an optional size cap: when the encoded
+    /// file would exceed `max_bytes`, least-recently-hit entries are
+    /// evicted from the SNAPSHOT (the memory tier is untouched) until it
+    /// fits. Eviction is deterministic: never-hit entries go first
+    /// (recency stamp 0), ties break on key order, so two saves of the
+    /// same store state under the same cap produce identical bytes.
+    pub fn save_capped(
+        &self,
+        path: &Path,
+        fingerprint: u64,
+        max_bytes: Option<u64>,
+    ) -> std::io::Result<()> {
         let mut union: HashMap<OpKey, f64> = self.disk.lock().unwrap().clone();
         for shard in &self.shards {
             for (k, v) in shard.lock().unwrap().iter() {
@@ -362,6 +395,36 @@ impl OpPredictionCache {
         let mut entries: Vec<(OpKey, f64)> = union.into_iter().collect();
         // deterministic file bytes for a given store content
         entries.sort_by(|a, b| a.0.cmp(&b.0));
+
+        if let Some(cap) = max_bytes {
+            // encoded sizes: 24-byte header; per entry kind(1) + dir(1)
+            // + word count(4) + words(8 each) + value(8) = 14 + 8·words
+            let entry_bytes = |k: &OpKey| 14 + 8 * k.1.len() as u64;
+            let mut total: u64 = 24 + entries.iter().map(|(k, _)| entry_bytes(k)).sum::<u64>();
+            if total > cap {
+                let stamps = self.stamps.lock().unwrap();
+                let mut order: Vec<usize> = (0..entries.len()).collect();
+                order.sort_by(|&a, &b| {
+                    let sa = stamps.get(&entries[a].0).copied().unwrap_or(0);
+                    let sb = stamps.get(&entries[b].0).copied().unwrap_or(0);
+                    sa.cmp(&sb).then_with(|| entries[a].0.cmp(&entries[b].0))
+                });
+                let mut evict: HashSet<usize> = HashSet::new();
+                for &i in &order {
+                    if total <= cap {
+                        break;
+                    }
+                    total -= entry_bytes(&entries[i].0);
+                    evict.insert(i);
+                }
+                let mut idx = 0usize;
+                entries.retain(|_| {
+                    let keep = !evict.contains(&idx);
+                    idx += 1;
+                    keep
+                });
+            }
+        }
 
         let mut buf: Vec<u8> = Vec::with_capacity(32 + entries.len() * 64);
         buf.extend_from_slice(&DISK_MAGIC);

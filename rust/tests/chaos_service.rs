@@ -1,0 +1,403 @@
+//! Deterministic chaos suite for the resilient sweep service: every
+//! injected fault (accept failures, mid-stream disconnects at every row
+//! boundary AND mid-row, short writes, read stalls, cache-file
+//! corruption) must yield a typed error or a successful client retry —
+//! never a panic, a deadlock, a half-written cache file, or a resumed
+//! table that differs from the fault-free run by a single byte. The
+//! fault-free chaos path (plan = `None`) must stay bit-identical to the
+//! plain server, and graceful drain must leave a valid persisted cache
+//! even when the last request errored.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use fgpm::config::TopoSpec;
+use fgpm::coordinator::chaos::{corrupt_file, Chaos, ChaosPlan};
+use fgpm::coordinator::server::{
+    remote_sweep, remote_sweep_resilient, serve_background, serve_background_chaos,
+    sweep_request_json, RemoteRow, RetryCfg, ServeOpts,
+};
+use fgpm::coordinator::{BatcherCfg, PredictionService};
+use fgpm::ops::OpKind;
+use fgpm::predictor::opcache::{fnv1a64, LoadOutcome, OpPredictionCache};
+use fgpm::predictor::registry::BatchPredictor;
+use fgpm::sampling::DatasetKey;
+use fgpm::sweep::SweepSpec;
+use fgpm::util::json::Json;
+
+/// Deterministic batch backend (same formula as the remote-sweep parity
+/// suite): latency = f(route, features), bit-reproducible anywhere — so
+/// any two servers in this file agree on every row byte.
+struct Det;
+
+impl BatchPredictor for Det {
+    fn predict_batch(&mut self, key: DatasetKey, rows: &[Vec<f64>]) -> Vec<f64> {
+        let salt = OpKind::ALL.iter().position(|k| *k == key.0).unwrap() as f64;
+        rows.iter()
+            .map(|r| 3.0 + salt * 0.37 + r.iter().sum::<f64>().sqrt() / 41.0)
+            .collect()
+    }
+}
+
+fn svc() -> PredictionService {
+    PredictionService::start(Box::new(Det), BatcherCfg::default())
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fgpm_chaos_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn request(topo: &TopoSpec) -> Json {
+    sweep_request_json("llemma7b", "perlmutter", topo, &SweepSpec::new(16))
+}
+
+/// Drive one raw request/stream cycle and return the response lines
+/// VERBATIM (trailing newlines included): row lines, then the summary
+/// line. Panics on an error line — callers here expect success.
+fn raw_stream(addr: std::net::SocketAddr, req: &Json) -> (Vec<String>, String) {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    conn.write_all(format!("{req}\n").as_bytes()).unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut rows = Vec::new();
+    loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "stream ended before the summary");
+        let j = Json::parse(line.trim()).unwrap();
+        assert!(j.get("error").is_none(), "unexpected error line: {line}");
+        if j.get("summary").is_some() {
+            return (rows, line);
+        }
+        assert!(j.get("row").is_some(), "unexpected line: {line}");
+        rows.push(line);
+    }
+}
+
+#[test]
+fn resumed_streams_are_byte_exact_suffixes_at_every_row_boundary() {
+    for topo in [
+        TopoSpec::Flat,
+        TopoSpec::RailSpine { nodes_per_rail: 2, spine_bw_frac: 0.5 },
+    ] {
+        let addr = serve_background(svc()).unwrap();
+        let req = request(&topo);
+        let (reference, _summary) = raw_stream(addr, &req);
+        assert!(reference.len() >= 3, "{topo:?}");
+        for k in 0..=reference.len() {
+            let mut resumed = Json::parse(&req.to_string()).unwrap();
+            resumed.insert("resume_from", Json::Num(k as f64));
+            let (rows, summary) = raw_stream(addr, &resumed);
+            // the resumed stream IS the reference suffix, byte for byte
+            assert_eq!(rows, reference[k..], "{topo:?} resume_from={k}");
+            let s = Json::parse(summary.trim()).unwrap();
+            let ack = s.get("summary").unwrap().usize_at("resume_from");
+            assert_eq!(ack, (k > 0).then_some(k), "{topo:?} resume_from={k}");
+        }
+    }
+}
+
+#[test]
+fn disconnects_at_every_boundary_and_mid_row_retry_to_the_fault_free_table() {
+    for topo in [
+        TopoSpec::Flat,
+        TopoSpec::RailSpine { nodes_per_rail: 2, spine_bw_frac: 0.5 },
+    ] {
+        let req = request(&topo);
+        // fault-free reference: rows (parsed) and raw line lengths, from
+        // a plain server
+        let plain = serve_background(svc()).unwrap();
+        let reference = remote_sweep(&plain.to_string(), &req).unwrap();
+        let (raw_rows, raw_summary) = raw_stream(plain, &req);
+        assert_eq!(raw_rows.len(), reference.rows.len());
+
+        // cut offsets: every row boundary (0 = before the first byte),
+        // 3 bytes INTO every row line (mid-row), and mid-summary
+        let mut cum = 0u64;
+        let mut cuts: Vec<u64> = vec![0];
+        for line in &raw_rows {
+            cuts.push(cum + 3);
+            cum += line.len() as u64;
+            cuts.push(cum);
+        }
+        cuts.push(cum + 3); // mid-summary: all rows seen, no terminator
+        assert!(cuts.iter().all(|&c| c < cum + raw_summary.len() as u64));
+
+        // one chaos server serves every scenario: connection 2i is cut
+        // at cuts[i], connection 2i+1 (the client's retry) runs clean
+        let plan = ChaosPlan {
+            disconnect_after_bytes: cuts.iter().flat_map(|&c| [c, u64::MAX]).collect(),
+            ..ChaosPlan::default()
+        };
+        let (addr, signal, loop_thread) =
+            serve_background_chaos(svc(), ServeOpts::default(), Some(Chaos::new(plan))).unwrap();
+        for (i, &cut) in cuts.iter().enumerate() {
+            let cfg = RetryCfg {
+                retries: 2,
+                backoff: Duration::from_millis(1),
+                seed: i as u64,
+            };
+            let got = remote_sweep_resilient(&addr.to_string(), &req, &cfg)
+                .unwrap_or_else(|e| panic!("{topo:?} cut@{cut}: {e}"));
+            assert_eq!(
+                got.rows, reference.rows,
+                "{topo:?} cut@{cut}: spliced table differs from the fault-free run"
+            );
+        }
+        signal.trigger();
+        let report = loop_thread.join().unwrap();
+        assert_eq!(report.aborted, 0, "{topo:?} {report:?}");
+    }
+}
+
+#[test]
+fn seeded_chaos_plans_never_panic_and_clients_retry_through() {
+    let dir = tmp_dir("seeded");
+    let req = request(&TopoSpec::Flat);
+    let plain = serve_background(svc()).unwrap();
+    let reference = remote_sweep(&plain.to_string(), &req).unwrap();
+    for seed in 0..6u64 {
+        let path = dir.join(format!("opcache_{seed}.bin"));
+        let fp = fnv1a64(format!("chaos-seed-{seed}").as_bytes());
+        let service = svc().with_cache_persist(path.clone(), fp);
+        let plan = ChaosPlan::seeded(seed);
+        let (addr, signal, loop_thread) =
+            serve_background_chaos(service, ServeOpts::default(), Some(Chaos::new(plan))).unwrap();
+        // a seeded plan arms at most 2 accept failures + 2 cuts: 6
+        // retries guarantee a clean attempt remains
+        let cfg = RetryCfg { retries: 6, backoff: Duration::from_millis(1), seed };
+        let got = remote_sweep_resilient(&addr.to_string(), &req, &cfg)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(got.rows, reference.rows, "seed {seed}: table differs from fault-free");
+        // SIGTERM-equivalent drain: in-budget exit, cache file valid
+        // (the exactly-once final persist overwrites any injected
+        // corruption from this run)
+        signal.trigger();
+        let report = loop_thread.join().unwrap();
+        assert_eq!(report.aborted, 0, "seed {seed}: {report:?}");
+        let outcome = OpPredictionCache::new().load(&path, fp);
+        assert!(
+            matches!(outcome, LoadOutcome::Loaded(n) if n > 0),
+            "seed {seed}: drained cache file must be valid, got {outcome:?}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cache_corruption_is_tolerated_as_a_cold_start() {
+    let dir = tmp_dir("corrupt");
+    let path = dir.join("opcache.bin");
+    let fp = fnv1a64(b"chaos-corrupt");
+    let req = request(&TopoSpec::Flat);
+
+    // persist a real cache file, drained cleanly so the write is done
+    let service = svc().with_cache_persist(path.clone(), fp);
+    let (addr, signal, loop_thread) =
+        serve_background_chaos(service, ServeOpts::default(), None).unwrap();
+    let first = remote_sweep(&addr.to_string(), &req).unwrap();
+    signal.trigger();
+    assert_eq!(loop_thread.join().unwrap().aborted, 0);
+    let clean = std::fs::read(&path).unwrap();
+    assert!(matches!(OpPredictionCache::new().load(&path, fp), LoadOutcome::Loaded(n) if n > 0));
+
+    // the chaos flip on a REAL cache file: exactly one byte changes, at
+    // the deterministic mid-entry offset, and loading it never panics
+    corrupt_file(&path).unwrap();
+    let flipped = std::fs::read(&path).unwrap();
+    let diffs: Vec<usize> = (0..clean.len()).filter(|&i| clean[i] != flipped[i]).collect();
+    assert_eq!(diffs, vec![24 + (clean.len() - 24) / 2]);
+    let _tolerated = OpPredictionCache::new().load(&path, fp); // must not panic
+
+    // truncation is DETECTED corruption: the loader refuses the file
+    std::fs::write(&path, &clean[..clean.len() - 1]).unwrap();
+    assert!(
+        matches!(OpPredictionCache::new().load(&path, fp), LoadOutcome::Corrupt(_)),
+        "truncated cache file must be refused"
+    );
+
+    // a server warm-starting from the corrupt file runs COLD (the file
+    // is ignored, never trusted) and still serves the identical table
+    let warm = svc().with_cache_persist(path.clone(), fp);
+    let addr2 = serve_background(warm).unwrap();
+    let second = remote_sweep(&addr2.to_string(), &req).unwrap();
+    assert_eq!(second.rows, first.rows, "cold restart must not change a byte");
+    assert_eq!(second.summary.f64_at("cache_disk_hit_rate").unwrap(), 0.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn chaos_corrupt_hook_never_breaks_the_drained_cache() {
+    // plan.corrupt_cache flips a byte of the persisted file after every
+    // sweep; the exactly-once final persist on drain must still leave a
+    // valid file, and nothing in between may panic
+    let dir = tmp_dir("corrupt_hook");
+    let path = dir.join("opcache.bin");
+    let fp = fnv1a64(b"chaos-corrupt-hook");
+    let req = request(&TopoSpec::Flat);
+
+    let reference = {
+        let plain = serve_background(svc()).unwrap();
+        remote_sweep(&plain.to_string(), &req).unwrap()
+    };
+    let service = svc().with_cache_persist(path.clone(), fp);
+    let plan = ChaosPlan { corrupt_cache: true, ..ChaosPlan::default() };
+    let (addr, signal, loop_thread) =
+        serve_background_chaos(service, ServeOpts::default(), Some(Chaos::new(plan))).unwrap();
+    let got = remote_sweep(&addr.to_string(), &req).unwrap();
+    assert_eq!(got.rows, reference.rows, "corruption chaos must not touch served bytes");
+    signal.trigger();
+    let report = loop_thread.join().unwrap();
+    assert_eq!(report.aborted, 0, "{report:?}");
+    assert!(
+        matches!(OpPredictionCache::new().load(&path, fp), LoadOutcome::Loaded(n) if n > 0),
+        "final persist must overwrite the injected corruption"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn failed_request_then_kill_still_warm_starts_the_next_process() {
+    // Satellite regression: the op cache is persisted even when the LAST
+    // request errored, so a kill right after still warm-starts a
+    // restarted service to >= 95% hit rate.
+    let dir = tmp_dir("failed_persist");
+    let path = dir.join("opcache.bin");
+    let fp = fnv1a64(b"chaos-failed-persist");
+    let req = request(&TopoSpec::Flat);
+
+    let service = svc().with_cache_persist(path.clone(), fp);
+    let (addr, signal, loop_thread) =
+        serve_background_chaos(service, ServeOpts::default(), None).unwrap();
+    // resume_from far beyond the table: the sweep RUNS (prefetching
+    // every op) and the request then fails with a typed error
+    let mut bad = Json::parse(&req.to_string()).unwrap();
+    bad.insert("resume_from", Json::Num(100_000.0));
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    conn.write_all(format!("{bad}\n").as_bytes()).unwrap();
+    let mut line = String::new();
+    BufReader::new(conn).read_line(&mut line).unwrap();
+    assert!(line.contains("beyond"), "{line}");
+    // kill the server immediately after the failed request
+    signal.trigger();
+    let report = loop_thread.join().unwrap();
+    assert_eq!(report.aborted, 0, "{report:?}");
+    assert!(
+        matches!(OpPredictionCache::new().load(&path, fp), LoadOutcome::Loaded(n) if n > 0),
+        "errored request must still leave a valid persisted cache"
+    );
+
+    // warm restart: >= 95% combined hit rate on the same sweep
+    let warm = svc().with_cache_persist(path.clone(), fp);
+    let addr2 = serve_background(warm).unwrap();
+    let rs = remote_sweep(&addr2.to_string(), &req).unwrap();
+    let rate = rs.summary.f64_at("cache_hit_rate").unwrap();
+    assert!(rate >= 0.95, "warm hit-rate {rate} < 0.95: {}", rs.summary);
+    assert_eq!(rs.summary.f64_at("cache_misses").unwrap(), 0.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn final_persist_happens_exactly_once() {
+    let dir = tmp_dir("once");
+    let path = dir.join("opcache.bin");
+    let fp = fnv1a64(b"chaos-once");
+    let service = svc().with_cache_persist(path.clone(), fp);
+    service.persist_cache_final();
+    assert!(path.exists(), "final persist must write the file");
+    // deleting the file and dropping the service must NOT resurrect it:
+    // the drain's save is exactly-once, Drop honors the latch
+    std::fs::remove_file(&path).unwrap();
+    drop(service);
+    assert!(!path.exists(), "Drop must not persist again after the final save");
+    // control: without a final persist, Drop saves as before
+    let service = svc().with_cache_persist(path.clone(), fp);
+    drop(service);
+    assert!(path.exists(), "Drop must persist when no final save happened");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fault_free_chaos_path_is_byte_identical_to_the_plain_server() {
+    let req = request(&TopoSpec::Flat);
+    let plain = serve_background(svc()).unwrap();
+    let (plain_rows, plain_summary) = raw_stream(plain, &req);
+
+    let (addr, signal, loop_thread) =
+        serve_background_chaos(svc(), ServeOpts::default(), None).unwrap();
+    let (chaos_rows, chaos_summary) = raw_stream(addr, &req);
+    // row bytes are deterministic and must match exactly; the summary
+    // carries wall-clock fields, so compare its key set instead
+    assert_eq!(chaos_rows, plain_rows);
+    let keys = |line: &str| -> Vec<String> {
+        match Json::parse(line.trim()).unwrap().get("summary").unwrap() {
+            Json::Obj(fields) => fields.iter().map(|(k, _)| k.clone()).collect(),
+            _ => panic!("summary must be an object"),
+        }
+    };
+    assert_eq!(keys(&chaos_summary), keys(&plain_summary));
+    assert!(!chaos_summary.contains("resume_from"), "{chaos_summary}");
+
+    // fault-free stats carry NONE of the new resilience counters: the
+    // stats payload stays byte-compatible with the pre-resilience wire
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    conn.write_all(b"{\"cmd\":\"stats\"}\n").unwrap();
+    let mut stats = String::new();
+    BufReader::new(conn).read_line(&mut stats).unwrap();
+    for key in ["retries", "resumed_sweeps", "drained", "aborted_deadline"] {
+        assert!(!stats.contains(key), "{key} must be omitted at 0: {stats}");
+    }
+    signal.trigger();
+    let report = loop_thread.join().unwrap();
+    assert_eq!(report.aborted, 0, "{report:?}");
+}
+
+#[test]
+fn read_stalls_and_short_writes_do_not_change_served_bytes() {
+    let req = request(&TopoSpec::Flat);
+    let plain = serve_background(svc()).unwrap();
+    let (plain_rows, _) = raw_stream(plain, &req);
+
+    let plan = ChaosPlan {
+        max_write: Some(3),
+        read_stall: Some(Duration::from_millis(2)),
+        ..ChaosPlan::default()
+    };
+    let (addr, signal, loop_thread) =
+        serve_background_chaos(svc(), ServeOpts::default(), Some(Chaos::new(plan))).unwrap();
+    let (slow_rows, _) = raw_stream(addr, &req);
+    assert_eq!(slow_rows, plain_rows, "short writes / stalls must be invisible in the bytes");
+    signal.trigger();
+    let report = loop_thread.join().unwrap();
+    assert_eq!(report.aborted, 0, "{report:?}");
+}
+
+#[test]
+fn resilient_client_falls_back_when_a_resume_goes_unacknowledged() {
+    // remote_sweep with retries=0 must behave exactly like the old
+    // single-shot client, including its error strings
+    let err = remote_sweep("127.0.0.1:1", &request(&TopoSpec::Flat)).unwrap_err();
+    assert!(err.starts_with("connect 127.0.0.1:1"), "{err}");
+
+    // a busy shed is retryable: with a zero-capacity server every
+    // attempt sheds, and the final error is the busy signal
+    let addr = {
+        let opts = ServeOpts { max_conns: 0, ..ServeOpts::default() };
+        let (addr, _signal, _thread) = serve_background_chaos(svc(), opts, None).unwrap();
+        addr
+    };
+    let cfg = RetryCfg { retries: 1, backoff: Duration::from_millis(1), seed: 9 };
+    let err = remote_sweep_resilient(&addr.to_string(), &request(&TopoSpec::Flat), &cfg)
+        .unwrap_err();
+    assert!(err.contains("busy"), "{err}");
+
+    // splice bookkeeping: RemoteRow equality is the restart detector
+    let a = RemoteRow { label: "x".into(), total_us: 1.0, mem_gib: 2.0, goodput: None };
+    assert_eq!(a, a.clone());
+}

@@ -283,3 +283,147 @@ fn warmed_disk_cache_serves_smoke_sweep_without_backend() {
     );
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// Encoded size of one disk entry: kind(1) + dir(1) + nwords(4) +
+/// 8·words + value(8) — must mirror the on-disk format exactly so the
+/// cap tests can predict survivors to the byte.
+fn entry_bytes(k: &OpKey) -> u64 {
+    14 + 8 * k.1.len() as u64
+}
+
+#[test]
+fn capped_save_evicts_least_recently_used_first() {
+    let dir = tmp_dir("lru_cap");
+    let path = dir.join("opcache.bin");
+    let entries = sample_entries();
+    let cache = OpPredictionCache::new();
+    for (k, v) in &entries {
+        cache.insert(k.clone(), *v);
+    }
+    // re-touch four entries AFTER all inserts: they become the most
+    // recently used regardless of insertion order
+    let touched: Vec<&(OpKey, f64)> = entries.iter().take(4).collect();
+    for (k, _) in &touched {
+        assert!(cache.fetch(k).is_some());
+    }
+    // a cap that fits exactly the four touched entries
+    let cap = 24 + touched.iter().map(|(k, _)| entry_bytes(k)).sum::<u64>();
+    cache.save_capped(&path, FP, Some(cap)).unwrap();
+    assert!(std::fs::metadata(&path).unwrap().len() <= cap);
+
+    let fresh = OpPredictionCache::new();
+    assert_eq!(fresh.load(&path, FP), LoadOutcome::Loaded(touched.len()));
+    for (k, v) in &touched {
+        assert_eq!(fresh.lookup(k), Some(*v), "recently used entry must survive");
+    }
+    for (k, _) in entries.iter().skip(4) {
+        assert_eq!(fresh.lookup(k), None, "LRU entry must be evicted");
+    }
+    // the cache itself is untouched: eviction happens in the snapshot
+    // written to disk, never in the serving tiers
+    assert_eq!(cache.lookup(&entries[5].0), Some(entries[5].1));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn capped_save_is_deterministic_and_generous_caps_change_nothing() {
+    let dir = tmp_dir("lru_det");
+    let entries = sample_entries();
+    let build = || {
+        let c = OpPredictionCache::new();
+        for (k, v) in &entries {
+            c.insert(k.clone(), *v);
+        }
+        for (k, _) in entries.iter().take(3) {
+            c.fetch(k);
+        }
+        c
+    };
+    let cap = 24 + entries.iter().take(7).map(|(k, _)| entry_bytes(k)).sum::<u64>();
+    let (p1, p2) = (dir.join("a.bin"), dir.join("b.bin"));
+    build().save_capped(&p1, FP, Some(cap)).unwrap();
+    build().save_capped(&p2, FP, Some(cap)).unwrap();
+    // same population + same recency history => identical bytes
+    assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+
+    // a cap large enough for everything degenerates to the plain save
+    let (p3, p4) = (dir.join("c.bin"), dir.join("d.bin"));
+    let c = build();
+    c.save(&p3, FP).unwrap();
+    c.save_capped(&p4, FP, Some(u64::MAX)).unwrap();
+    assert_eq!(std::fs::read(&p3).unwrap(), std::fs::read(&p4).unwrap());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn never_fetched_disk_entries_evict_before_touched_ones() {
+    let dir = tmp_dir("lru_cold_tier");
+    let (warm_path, capped_path) = (dir.join("warm.bin"), dir.join("capped.bin"));
+    let entries = sample_entries();
+    let cache = OpPredictionCache::new();
+    for (k, v) in &entries {
+        cache.insert(k.clone(), *v);
+    }
+    cache.save(&warm_path, FP).unwrap();
+
+    // a warm-started cache: the loaded disk tier carries NO recency
+    // stamps, so under a cap those entries rank below anything the new
+    // process actually used
+    let warm = OpPredictionCache::new();
+    assert_eq!(warm.load(&warm_path, FP), LoadOutcome::Loaded(entries.len()));
+    let mut fresh_key = entries[0].0.clone();
+    fresh_key.1.push(0xFFFF);
+    warm.insert(fresh_key.clone(), 42.0);
+    let cap = 24 + entry_bytes(&fresh_key);
+    warm.save_capped(&capped_path, FP, Some(cap)).unwrap();
+
+    let back = OpPredictionCache::new();
+    assert_eq!(back.load(&capped_path, FP), LoadOutcome::Loaded(1));
+    assert_eq!(back.lookup(&fresh_key), Some(42.0), "the one used entry survives");
+    assert_eq!(back.lookup(&entries[0].0), None);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fetch_refreshes_recency_between_same_sized_entries() {
+    let dir = tmp_dir("lru_refresh");
+    let entries = sample_entries();
+    // two keys with identical encoded size, so the cap fits exactly one
+    // and only recency decides the survivor
+    let (a, b) = {
+        let mut pick = None;
+        'outer: for i in 0..entries.len() {
+            for j in (i + 1)..entries.len() {
+                if entries[i].0 .1.len() == entries[j].0 .1.len() {
+                    pick = Some((entries[i].clone(), entries[j].clone()));
+                    break 'outer;
+                }
+            }
+        }
+        pick.expect("sample population must contain two same-sized keys")
+    };
+    let cap = 24 + entry_bytes(&a.0);
+
+    // without a refresh, the later insert (b) is more recent: b survives
+    let path = dir.join("no_refresh.bin");
+    let c1 = OpPredictionCache::new();
+    c1.insert(a.0.clone(), a.1);
+    c1.insert(b.0.clone(), b.1);
+    c1.save_capped(&path, FP, Some(cap)).unwrap();
+    let fresh = OpPredictionCache::new();
+    assert_eq!(fresh.load(&path, FP), LoadOutcome::Loaded(1));
+    assert_eq!(fresh.lookup(&b.0), Some(b.1));
+
+    // fetching a AFTER b's insert refreshes a: now a survives
+    let path = dir.join("refresh.bin");
+    let c2 = OpPredictionCache::new();
+    c2.insert(a.0.clone(), a.1);
+    c2.insert(b.0.clone(), b.1);
+    assert!(c2.fetch(&a.0).is_some());
+    c2.save_capped(&path, FP, Some(cap)).unwrap();
+    let fresh = OpPredictionCache::new();
+    assert_eq!(fresh.load(&path, FP), LoadOutcome::Loaded(1));
+    assert_eq!(fresh.lookup(&a.0), Some(a.1));
+    assert_eq!(fresh.lookup(&b.0), None);
+    let _ = std::fs::remove_dir_all(&dir);
+}
