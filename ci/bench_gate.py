@@ -28,6 +28,11 @@ artifact every run), and FAILS the job when:
     bit-identically (the `--faults off` identity broke; absolute,
     baseline-independent).
 
+The serve-plan smoke keys (`serveplan_configs_per_sec`,
+`serveplan_cache_hit_rate`) are REQUIRED to be present (exit 2 when the
+bench stops emitting them) but carry no threshold yet — they seed the
+trajectory until a baseline exists.
+
 Exit code 0 = gate passed, 1 = regression, 2 = malformed input.
 """
 
@@ -72,6 +77,11 @@ def main(argv):
         "prefetch_us",
         "compose_us",
         "bound_us",
+        # serve-plan smoke keys (presence only, no threshold: the serving
+        # workload family must keep flowing through the shared op cache,
+        # but its throughput has no baseline yet)
+        "serveplan_configs_per_sec",
+        "serveplan_cache_hit_rate",
     ):
         if field not in actual:
             die(2, f"{actual_path} missing '{field}': {actual}")
@@ -98,6 +108,9 @@ def main(argv):
         "prefetch_us": actual.get("prefetch_us"),
         "compose_us": actual.get("compose_us"),
         "bound_us": actual.get("bound_us"),
+        "serveplan_configs_evaluated": actual.get("serveplan_configs_evaluated"),
+        "serveplan_configs_per_sec": actual.get("serveplan_configs_per_sec"),
+        "serveplan_cache_hit_rate": actual.get("serveplan_cache_hit_rate"),
     }
     with open(trajectory_path, "a") as f:
         f.write(json.dumps(record, sort_keys=True) + "\n")

@@ -1,0 +1,100 @@
+//! Serving deployment planning: pick the (tensor-parallel x replicas,
+//! max-batch) layout of an inference fleet that meets a QPS target and
+//! a p99 token-latency SLO — the `fgpm serve-plan` workflow as a
+//! library call.
+//!
+//!     cargo run --release --example serve_planning
+//!
+//! Three acts:
+//! 1. rank every feasible deployment of Llemma-7B on 8 Perlmutter GPUs
+//!    against 4 qps of 512-prompt/128-output requests under a 200 ms
+//!    p99 SLO (prefill + decode priced through the same shared op cache
+//!    as training sweeps — a second in-process plan composes without a
+//!    single backend call);
+//! 2. tighten the SLO and watch compliant configs fall out of the top
+//!    of the table (a violator can never outrank a compliant row);
+//! 3. read the KV-cache OOM bound: how many concurrent sequences each
+//!    tensor-parallel degree can hold at the worst-case context.
+
+use fgpm::config::{ModelCfg, Platform, ServingLoad};
+use fgpm::ops::memory;
+use fgpm::predictor::e2e::OraclePredictor;
+use fgpm::report::tables::serve_plan_table_text;
+use fgpm::sweep::{Engine, ServePlanSpec};
+
+fn main() {
+    let platform = Platform::perlmutter();
+    let model = ModelCfg::llemma7b();
+    let gpus = 8;
+
+    // act 1: rank deployments against the default load
+    let mut spec = ServePlanSpec::new(gpus);
+    spec.load = ServingLoad { qps: 4.0, ..ServingLoad::default() };
+    let engine = Engine::new();
+    let mut oracle = OraclePredictor { platform: platform.clone() };
+    let report = engine.serve_plan(&model, &platform, &spec, &mut oracle).expect("serve-plan");
+    let title = format!(
+        "{} serving on {} with {gpus} GPUs — {} qps @ {}+{} tokens, p99 SLO {} ms/token:",
+        model.name,
+        platform.name,
+        spec.load.qps,
+        spec.load.prompt_tokens,
+        spec.load.output_tokens,
+        spec.load.slo_p99_ms
+    );
+    print!("{}", serve_plan_table_text(&title, &report, platform.gpu.hbm_gib));
+    let best = report.best().expect("no feasible deployment");
+    println!(
+        "  (best {}: {:.0} tok/s, capacity {:.1} qps, prefill {:.1} ms, decode {:.2}-{:.2} ms)\n",
+        best.cand.label(),
+        best.tokens_per_sec,
+        best.qps_capacity,
+        best.prefill_us / 1e3,
+        best.decode_us_b1 / 1e3,
+        best.decode_us_bmax / 1e3
+    );
+
+    // the shared op cache makes the second in-process plan backend-free
+    let again = engine.serve_plan(&model, &platform, &spec, &mut oracle).expect("warm plan");
+    println!(
+        "warm re-plan: {} candidates, {} cache misses (hit-rate {:.0}%)\n",
+        again.evaluated,
+        again.cache.misses,
+        again.cache.hit_rate() * 100.0
+    );
+    assert_eq!(again.cache.misses, 0, "warm plan must compose from the shared cache");
+
+    // act 2: tighten the SLO until part of the table falls out
+    let mut tight = spec.clone();
+    tight.load.slo_p99_ms = best.p99_ms; // only the head of the table survives
+    let tight_report =
+        engine.serve_plan(&model, &platform, &tight, &mut oracle).expect("tight plan");
+    let compliant = tight_report.rows.iter().filter(|r| r.compliant).count();
+    println!(
+        "SLO tightened to {:.1} ms/token: {compliant} of {} configs stay compliant",
+        tight.load.slo_p99_ms,
+        tight_report.rows.len()
+    );
+    if let Some(first_violator) = tight_report.rows.iter().position(|r| !r.compliant) {
+        assert!(
+            tight_report.rows[first_violator..].iter().all(|r| !r.compliant),
+            "a violator outranked a compliant config"
+        );
+    }
+
+    // act 3: the KV-cache OOM bound per tensor-parallel degree
+    let worst_context = spec.load.prompt_tokens + spec.load.output_tokens;
+    println!("\nKV-cache OOM bound at context {worst_context} (weights + KV vs HBM):");
+    let mut tp = 1;
+    while tp <= 8 && tp <= platform.gpus_per_node {
+        if model.h % tp == 0 {
+            let cap = memory::max_concurrent_seqs(&model, tp, &platform, worst_context);
+            let est = memory::serving_estimate(&model, tp, worst_context);
+            println!(
+                "  tp{tp}: <= {cap:>4} concurrent seqs  ({:.1} GiB weights/GPU)",
+                est.total_gib(0)
+            );
+        }
+        tp *= 2;
+    }
+}

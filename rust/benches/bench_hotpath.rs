@@ -21,7 +21,7 @@ use fgpm::pipeline::{one_f_one_b, ScheduleKind, TaskTimes};
 use fgpm::predictor::e2e::OraclePredictor;
 use fgpm::predictor::predict;
 use fgpm::runtime::{artifacts_dir, Engine};
-use fgpm::sweep::{feasible_configs, SweepReport, SweepSpec};
+use fgpm::sweep::{feasible_configs, ServePlanReport, ServePlanSpec, SweepReport, SweepSpec};
 use fgpm::util::benchkit::{black_box, Bench};
 use fgpm::util::json::Json;
 use fgpm::util::rng::Rng;
@@ -47,6 +47,8 @@ fn write_bench_sweep_json(
     report: &SweepReport,
     warm: &SweepReport,
     pruned: &SweepReport,
+    serve: &ServePlanReport,
+    serve_warm: &ServePlanReport,
     batch_ns_per_row: f64,
     recursive_ns_per_row: f64,
     goodput_smoke_identical: f64,
@@ -92,6 +94,14 @@ fn write_bench_sweep_json(
         // goodput smoke: 1.0 iff the fault-free FaultSpec reproduced the
         // plain sweep's rows bit-identically (the --faults off identity)
         ("goodput_smoke_identical", Json::Num(goodput_smoke_identical)),
+        // serve-plan smoke: serving candidates/sec through the SAME
+        // shared op cache, and the warm in-process re-plan's hit-rate
+        // (required keys in the gate, informational until the
+        // trajectory shows a trend — no threshold)
+        ("serveplan_configs_evaluated", Json::Num(serve.evaluated as f64)),
+        ("serveplan_configs_per_sec", Json::Num(serve.configs_per_sec())),
+        ("serveplan_cache_hit_rate", Json::Num(serve_warm.cache.hit_rate())),
+        ("serveplan_warm_misses", Json::Num(serve_warm.cache.misses as f64)),
     ]);
     match std::fs::write("BENCH_sweep.json", json.to_string()) {
         Ok(()) => println!("wrote BENCH_sweep.json: {json}"),
@@ -319,11 +329,45 @@ fn main() {
         1.0
     };
 
+    // serve-plan smoke: the serving workload family through the same
+    // engine machinery — a cold plan pays the backend round-trips, a
+    // warm in-process re-plan must compose from the shared store alone
+    let serve_spec = ServePlanSpec::new(8);
+    let serve_engine = fgpm::sweep::Engine::new();
+    let mut serve_last: Option<ServePlanReport> = None;
+    b.case("serve-plan (tp x replicas x max-batch ladder)", || {
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        serve_last = Some(
+            serve_engine
+                .serve_plan(&model, &platform, &serve_spec, &mut oracle)
+                .expect("serve-plan"),
+        );
+    });
+    let serve_report = serve_last.expect("serve-plan case ran");
+    assert!(!serve_report.rows.is_empty(), "serve-plan produced no candidates");
+    let serve_warm = {
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        serve_engine.serve_plan(&model, &platform, &serve_spec, &mut oracle).expect("warm serve-plan")
+    };
+    assert_eq!(
+        serve_warm.cache.misses, 0,
+        "warm serve-plan must compose from the shared cache: {:?}",
+        serve_warm.cache
+    );
+    println!(
+        "serve-plan: {} candidates at {:.0}/s, warm hit-rate {:.2}",
+        serve_report.evaluated,
+        serve_report.configs_per_sec(),
+        serve_warm.cache.hit_rate()
+    );
+
     write_bench_sweep_json(
         case_name,
         &report,
         &warm,
         &pruned,
+        &serve_report,
+        &serve_warm,
         batch_ns_per_row,
         recursive_ns_per_row,
         goodput_smoke_identical,

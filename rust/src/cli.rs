@@ -12,7 +12,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::predictor::opcache::{self, OpPredictionCache};
 
 use crate::baselines::{Analytical, LogLinear};
-use crate::config::{ModelCfg, ParallelCfg, Platform, TopoSpec};
+use crate::config::{ArrivalKind, ModelCfg, ParallelCfg, Platform, ServingLoad, TopoSpec, WorkloadKind};
 use crate::coordinator::server;
 use crate::net::topology::RankOrder;
 use crate::pipeline::ScheduleKind;
@@ -47,6 +47,9 @@ commands:
                (add --remote host:port to run it on a served coordinator;
                add --faults spec for goodput / useful-FLOP columns;
                add --trace-out for an engine execution trace)
+  serve-plan   rank (tp x replicas, max-batch) INFERENCE deployments of a
+               model against a QPS target and a p99 token-latency SLO
+               (prefill/decode priced through the same op cache as sweeps)
   goodput      checkpoint-interval x MTBF goodput grid for one config
                (closed-form Daly/Young estimate + event-sim cross-check)
   topo         print the cluster tiers + group->tier traffic matrix for a config
@@ -77,6 +80,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "explain" => cmd_explain(rest),
         "trace" => cmd_trace(rest),
         "sweep" => cmd_sweep(rest),
+        "serve-plan" => cmd_serve_plan(rest),
         "goodput" => cmd_goodput(rest),
         "topo" => cmd_topo(rest),
         "schedules" => cmd_schedules(rest),
@@ -174,6 +178,52 @@ fn apply_topo_arg(args: &crate::util::cli::Args, platform: Platform) -> Result<P
         format!("unknown topology '{s}' (expected flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
     })?;
     Ok(platform.with_topo(spec))
+}
+
+/// The flag cluster every configuration-shaped command shares
+/// (predict/explain/trace/sweep). Declared once so the commands cannot
+/// drift apart on names or defaults — the unit test below pins the set.
+const CONFIG_FLAG_NAMES: [&str; 5] = ["schedule", "p2p-overlap", "rank-map", "topo", "cache-dir"];
+
+/// Append the shared configuration flag cluster to a command spec.
+/// `sweep_variants` switches the `--schedule`/`--rank-map` help to the
+/// sweep's cross-product spelling (those two additionally accept `all`);
+/// names and defaults are identical either way.
+fn with_config_flags(spec: Spec, sweep_variants: bool) -> Spec {
+    spec.opt(
+        "schedule",
+        "1f1b",
+        if sweep_variants {
+            "pipeline schedule (1f1b|gpipe|interleaved[:v]|zb-h1|all)"
+        } else {
+            "pipeline schedule (1f1b|gpipe|interleaved[:v]|zb-h1)"
+        },
+    )
+    .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
+    .opt(
+        "rank-map",
+        "tp-first",
+        if sweep_variants {
+            "rank placement (tp-first|dp-first|pp-first|all)"
+        } else {
+            "rank placement (tp-first|dp-first|pp-first)"
+        },
+    )
+    .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
+    .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
+}
+
+/// Parse + apply the shared cluster in one place: `--schedule`,
+/// `--p2p-overlap`, and `--rank-map` onto the parallel config, `--topo`
+/// onto the platform. (The sweep keeps its own schedule/rank-map parse —
+/// it crosses `all` — but shares the spec declaration above.)
+fn apply_config_args(
+    args: &crate::util::cli::Args,
+    par: ParallelCfg,
+    platform: Platform,
+) -> Result<(ParallelCfg, Platform)> {
+    let par = apply_rank_map_arg(args, apply_overlap_arg(args, apply_schedule_arg(args, par)?)?)?;
+    Ok((par, apply_topo_arg(args, platform)?))
 }
 
 /// Reject (model, parallel) combinations the schedule cannot run.
@@ -351,14 +401,31 @@ fn registry_for(platform: &Platform, forests_dir: &str, seed: u64) -> Result<(Re
 
 /// Fingerprint keying the `--cache-dir` disk op cache: a cached
 /// prediction is only reusable while the trained sampling registry, the
-/// platform spec (incl. `--topo`), and the inference backend flavor all
-/// match what produced it.
-fn cache_fingerprint(registry_hash: u64, platform: &Platform, xla: bool) -> u64 {
-    opcache::combine_hashes(&[
+/// platform spec (incl. `--topo`), the inference backend flavor, and the
+/// workload FAMILY all match what produced it. The training family keeps
+/// the historical 3-part hash — existing cache files stay warm across the
+/// workload-aware upgrade — while any other family (serving) appends its
+/// label as a 4th part and lands in its own file (see PROTOCOL.md).
+fn cache_fingerprint_for(
+    registry_hash: u64,
+    platform: &Platform,
+    xla: bool,
+    workload: &WorkloadKind,
+) -> u64 {
+    let mut parts = vec![
         registry_hash,
         opcache::fnv1a64(format!("{platform:?}").as_bytes()),
         opcache::fnv1a64(if xla { "xla" } else { "native" }.as_bytes()),
-    ])
+    ];
+    if workload.family() != "training" {
+        parts.push(opcache::fnv1a64(workload.family().as_bytes()));
+    }
+    opcache::combine_hashes(&parts)
+}
+
+/// The training-family fingerprint every historical caller uses.
+fn cache_fingerprint(registry_hash: u64, platform: &Platform, xla: bool) -> u64 {
+    cache_fingerprint_for(registry_hash, platform, xla, &WorkloadKind::training())
 }
 
 /// Where the disk op cache lives under `--cache-dir`. The fingerprint
@@ -397,23 +464,18 @@ fn cmd_predict(argv: &[String]) -> Result<i32> {
     let spec = Spec::new("predict", "predict one configuration's batch time + components")
         .opt("model", "gpt20b", "model preset")
         .opt("parallel", "4-4-8", "pp-mp-dp[/schedule][@rank-map]")
-        .opt("platform", "perlmutter", "target platform")
-        .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v]|zb-h1)")
-        .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
-        .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first)")
-        .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
+        .opt("platform", "perlmutter", "target platform");
+    let spec = with_config_flags(spec, false)
         .opt("forests", "forests", "trained registry directory")
-        .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
         .opt("trace-out", "", "write the engine's own execution trace (Chrome JSON) to this file")
         .opt("seed", "7", "rng seed")
         .flag("explain", "append the per-op cost attribution ledger to the output")
         .flag("xla", "serve inference from the AOT Pallas executable (PJRT)");
     let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
-    let platform = apply_topo_arg(&args, platform_arg(&args)?)?;
     let model = model_arg(&args)?;
     let par = ParallelCfg::parse(&args.str("parallel"))
         .context("bad --parallel (expected pp-mp-dp[/schedule][@rank-map])")?;
-    let par = apply_rank_map_arg(&args, apply_overlap_arg(&args, apply_schedule_arg(&args, par)?)?)?;
+    let (par, platform) = apply_config_args(&args, par, platform_arg(&args)?)?;
     validate_schedule(&model, &par)?;
     anyhow::ensure!(par.fits(&platform), "{} needs {} GPUs", par.label(), par.gpus());
     let (reg, reg_hash) = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
@@ -495,21 +557,16 @@ fn cmd_explain(argv: &[String]) -> Result<i32> {
     )
     .opt("model", "gpt20b", "model preset")
     .opt("parallel", "4-4-8", "pp-mp-dp[/schedule][@rank-map]")
-    .opt("platform", "perlmutter", "target platform")
-    .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v]|zb-h1)")
-    .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
-    .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first)")
-    .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
-    .opt("forests", "forests", "trained registry directory")
-    .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
-    .opt("seed", "7", "rng seed")
-    .flag("xla", "serve inference from the AOT Pallas executable (PJRT)");
+    .opt("platform", "perlmutter", "target platform");
+    let spec = with_config_flags(spec, false)
+        .opt("forests", "forests", "trained registry directory")
+        .opt("seed", "7", "rng seed")
+        .flag("xla", "serve inference from the AOT Pallas executable (PJRT)");
     let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
-    let platform = apply_topo_arg(&args, platform_arg(&args)?)?;
     let model = model_arg(&args)?;
     let par = ParallelCfg::parse(&args.str("parallel"))
         .context("bad --parallel (expected pp-mp-dp[/schedule][@rank-map])")?;
-    let par = apply_rank_map_arg(&args, apply_overlap_arg(&args, apply_schedule_arg(&args, par)?)?)?;
+    let (par, platform) = apply_config_args(&args, par, platform_arg(&args)?)?;
     validate_schedule(&model, &par)?;
     anyhow::ensure!(par.fits(&platform), "{} needs {} GPUs", par.label(), par.gpus());
     let (reg, reg_hash) = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
@@ -555,18 +612,18 @@ fn cmd_trace(argv: &[String]) -> Result<i32> {
     )
     .opt("model", "gpt20b", "model preset")
     .opt("parallel", "4-4-8", "pp-mp-dp[/schedule][@rank-map]")
-    .opt("platform", "perlmutter", "target platform")
-    .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v]|zb-h1)")
-    .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
-    .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first)")
-    .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
-    .opt("out", "trace.json", "output file");
+    .opt("platform", "perlmutter", "target platform");
+    let spec = with_config_flags(spec, false).opt("out", "trace.json", "output file");
     let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
-    let platform = apply_topo_arg(&args, platform_arg(&args)?)?;
+    // the trace is closed-form — there is no predictor, hence no op cache
+    anyhow::ensure!(
+        !args.is_explicit("cache-dir"),
+        "--cache-dir has no effect on trace (the schedule render calls no predictor)"
+    );
     let model = model_arg(&args)?;
     let par = ParallelCfg::parse(&args.str("parallel"))
         .context("bad --parallel (expected pp-mp-dp[/schedule][@rank-map])")?;
-    let par = apply_rank_map_arg(&args, apply_overlap_arg(&args, apply_schedule_arg(&args, par)?)?)?;
+    let (par, platform) = apply_config_args(&args, par, platform_arg(&args)?)?;
     validate_schedule(&model, &par)?;
     anyhow::ensure!(par.fits(&platform), "{} needs {} GPUs", par.label(), par.gpus());
     let times = crate::trainrun::deterministic_task_times(&model, &par, &platform);
@@ -596,11 +653,9 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
     let spec = Spec::new("sweep", "rank all pp-mp-dp strategies for a model at a GPU count")
         .opt("model", "gpt20b", "model preset")
         .opt("platform", "perlmutter", "target platform")
-        .opt("gpus", "128", "total GPUs")
-        .opt("schedule", "1f1b", "pipeline schedule (1f1b|gpipe|interleaved[:v]|zb-h1|all)")
-        .opt("p2p-overlap", "0", "fraction of PP P2P overlapped with compute [0,1]")
-        .opt("rank-map", "tp-first", "rank placement (tp-first|dp-first|pp-first|all)")
-        .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
+        .opt("gpus", "128", "total GPUs");
+    let spec = with_config_flags(spec, true)
+        .opt("global-batch", "0", "override sequences per parameter update (0 = model preset)")
         .opt("top-k", "0", "return only the k fastest configs, branch-and-bound pruning the rest (0 = full table)")
         .flag("no-prune", "with --top-k: evaluate every config anyway (disable the analytical bound)")
         .opt("faults", "off", "fault model for goodput columns (off | spec = production rates)")
@@ -610,7 +665,6 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         .opt("remote", "", "run the sweep on a coordinator at host:port instead of locally")
         .opt("retries", "2", "with --remote: reconnect-and-resume attempts after a dropped stream")
         .opt("backoff-ms", "100", "with --remote: base retry backoff (capped exponential, jittered)")
-        .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
         .opt("cache-max-mb", "0", "cap the persisted op-cache file, LRU-evicting (0 = unlimited)")
         .opt("trace-out", "", "write the engine's own execution trace (Chrome JSON) to this file")
         .opt("forests", "forests", "trained registry directory")
@@ -640,6 +694,11 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
     let overlap = apply_overlap_arg(&args, ParallelCfg::new(1, 1, 1))?.p2p_overlap();
     let top_k = args.usize("top-k")?;
     let faults = faults_arg(&args)?;
+    let global_batch = args.usize("global-batch")?;
+    let workload = match global_batch {
+        0 => WorkloadKind::training(),
+        g => WorkloadKind::Training { global_batch: Some(g) },
+    };
     let sweep_spec = crate::sweep::SweepSpec {
         gpus,
         max_pp: 16,
@@ -650,6 +709,7 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
         top_k: (top_k > 0).then_some(top_k),
         prune: !args.has_flag("no-prune"),
         faults,
+        workload,
     };
     let title = format!(
         "{} on {} with {} GPUs — predicted batch seconds:",
@@ -874,6 +934,116 @@ fn cmd_sweep(argv: &[String]) -> Result<i32> {
     };
     println!(
         "evaluated {} configs in {:.0?} ({:.0} configs/s, {}{prune_note}{goodput_note})",
+        report.evaluated,
+        report.elapsed,
+        report.configs_per_sec(),
+        cache_stats_line(&report.cache)
+    );
+    Ok(0)
+}
+
+/// `fgpm serve-plan`: rank (tp x replicas, max-batch) inference
+/// deployments against a QPS target and a p99 per-token latency SLO.
+/// Prefill/decode phases lower to the same operator families as
+/// training and flow through the engine's shared op cache; the disk
+/// cache (if any) carries the serving-family fingerprint dimension so
+/// decode-shaped predictions never collide into a training cache file.
+fn cmd_serve_plan(argv: &[String]) -> Result<i32> {
+    let spec = Spec::new(
+        "serve-plan",
+        "rank (tp x replicas, max-batch) serving deployments against a QPS \
+         target and a p99 per-output-token latency SLO (deterministic \
+         continuous-batching simulation of the offered load)",
+    )
+    .opt("model", "llemma7b", "model preset")
+    .opt("platform", "perlmutter", "target platform")
+    .opt("gpus", "8", "total GPUs (every deployment uses all of them)")
+    .opt("qps", "4", "offered load the plan must sustain, requests/second")
+    .opt("slo-p99-ms", "200", "p99 per-output-token latency SLO, milliseconds")
+    .opt("arrival", "poisson", "arrival process (poisson | fixed)")
+    .opt("prompt-tokens", "512", "prompt (prefill) length per request, tokens")
+    .opt("output-tokens", "128", "generated (decode) length per request, tokens")
+    .opt("max-tp", "8", "tensor-parallel cap (powers of two, at most one node)")
+    .opt("max-batch", "1,4,8,16,32", "candidate max concurrent batch sizes (comma list)")
+    .opt("topo", "flat", "fabric shape (flat | rail:<nodes_per_rail>[:<spine_bw_frac>])")
+    .opt("cache-dir", "", "disk-persist the op-prediction cache in this directory")
+    .opt("forests", "forests", "trained registry directory")
+    .opt("seed", "7", "rng seed (arrival stream + in-process training fallback)")
+    .flag("xla", "serve inference from the AOT Pallas executable (PJRT)");
+    let Some(args) = parse_or_help(&spec, argv)? else { return Ok(0) };
+    let platform = apply_topo_arg(&args, platform_arg(&args)?)?;
+    let model = model_arg(&args)?;
+    let gpus = args.usize("gpus")?;
+    anyhow::ensure!(gpus >= 1, "--gpus must be >= 1");
+    let qps = args.f64("qps")?;
+    anyhow::ensure!(qps.is_finite() && qps > 0.0, "--qps must be positive, got {qps}");
+    let slo_p99_ms = args.f64("slo-p99-ms")?;
+    anyhow::ensure!(
+        slo_p99_ms.is_finite() && slo_p99_ms > 0.0,
+        "--slo-p99-ms must be positive, got {slo_p99_ms}"
+    );
+    let arrival = ArrivalKind::parse(&args.str("arrival")).ok_or_else(|| {
+        anyhow!("--arrival expects poisson|fixed, got '{}'", args.str("arrival"))
+    })?;
+    let prompt_tokens = args.usize("prompt-tokens")?;
+    let output_tokens = args.usize("output-tokens")?;
+    anyhow::ensure!(
+        prompt_tokens >= 1 && output_tokens >= 1,
+        "--prompt-tokens and --output-tokens must be >= 1"
+    );
+    let max_tp = args.usize("max-tp")?;
+    anyhow::ensure!(max_tp >= 1, "--max-tp must be >= 1");
+    let max_batches =
+        list_arg(&args, "max-batch", |s| s.parse::<usize>().ok().filter(|&n| n >= 1))?;
+    let load = ServingLoad {
+        qps,
+        slo_p99_ms,
+        arrival,
+        prompt_tokens,
+        output_tokens,
+        seed: args.u64("seed")?,
+    };
+    let plan_spec = crate::sweep::ServePlanSpec { gpus, max_tp, max_batches, load };
+    let workload = WorkloadKind::Serving(load);
+
+    let (reg, reg_hash) = registry_for(&platform, &args.str("forests"), args.u64("seed")?)?;
+    let use_xla = args.has_flag("xla");
+    let mut backend = backend_for(reg, use_xla)?;
+    let engine = crate::sweep::Engine::new();
+    let cache_dir = args.str("cache-dir");
+    let persist = if cache_dir.is_empty() {
+        None
+    } else {
+        let fp = cache_fingerprint_for(reg_hash, &platform, use_xla, &workload);
+        let path = op_cache_path(&cache_dir, &platform, fp);
+        eprintln!("[fgpm] op cache {path:?}: {}", engine.cache().load(&path, fp).describe());
+        Some((path, fp))
+    };
+    let report = engine
+        .serve_plan(&model, &platform, &plan_spec, backend.as_mut())
+        .map_err(|e| anyhow!("{e}"))?;
+    if let Some((path, fp)) = persist {
+        if let Err(e) = engine.cache().save(&path, fp) {
+            eprintln!("[fgpm] WARNING: could not save op cache {path:?}: {e}");
+        }
+    }
+    let title = format!(
+        "{} serving on {} with {} GPUs — {} qps @ {}+{} tokens, p99 SLO {} ms/token ({} arrivals):",
+        model.name,
+        platform.name,
+        gpus,
+        qps,
+        prompt_tokens,
+        output_tokens,
+        slo_p99_ms,
+        arrival.label()
+    );
+    print!(
+        "{}",
+        crate::report::tables::serve_plan_table_text(&title, &report, platform.gpu.hbm_gib)
+    );
+    println!(
+        "evaluated {} configs in {:.0?} ({:.0} configs/s, {})",
         report.evaluated,
         report.elapsed,
         report.configs_per_sec(),
@@ -1256,4 +1426,67 @@ fn cmd_e2e(argv: &[String]) -> Result<i32> {
         println!("mean |overall error| {plat}: {mean:.2}%");
     }
     Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_config_flag_cluster_agrees_across_variants() {
+        let base = with_config_flags(Spec::new("x", "y"), false);
+        let sweep = with_config_flags(Spec::new("x", "y"), true);
+        for spec in [&base, &sweep] {
+            for name in CONFIG_FLAG_NAMES {
+                let o = spec
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .unwrap_or_else(|| panic!("missing --{name}"));
+                assert!(!o.is_flag, "--{name} must take a value");
+            }
+        }
+        // identical names AND defaults in both variants (only the help
+        // wording differs — sweep's --schedule/--rank-map also take `all`)
+        assert_eq!(base.opts.len(), CONFIG_FLAG_NAMES.len());
+        assert_eq!(base.opts.len(), sweep.opts.len());
+        for (a, b) in base.opts.iter().zip(&sweep.opts) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.default, b.default);
+        }
+    }
+
+    #[test]
+    fn shared_cluster_parses_to_the_documented_defaults() {
+        let spec = with_config_flags(Spec::new("x", "y"), false);
+        let args = spec.parse(&[]).unwrap();
+        assert_eq!(args.str("schedule"), "1f1b");
+        assert_eq!(args.f64("p2p-overlap").unwrap(), 0.0);
+        assert_eq!(args.str("rank-map"), "tp-first");
+        assert_eq!(args.str("topo"), "flat");
+        assert_eq!(args.str("cache-dir"), "");
+        for name in CONFIG_FLAG_NAMES {
+            assert!(!args.is_explicit(name));
+        }
+    }
+
+    #[test]
+    fn training_cache_fingerprint_is_byte_stable() {
+        let p = Platform::perlmutter();
+        // the pre-workload 3-part hash, spelled out: existing disk cache
+        // files must keep their names across the upgrade
+        let legacy = opcache::combine_hashes(&[
+            42,
+            opcache::fnv1a64(format!("{p:?}").as_bytes()),
+            opcache::fnv1a64("native".as_bytes()),
+        ]);
+        assert_eq!(cache_fingerprint(42, &p, false), legacy);
+        assert_eq!(cache_fingerprint_for(42, &p, false, &WorkloadKind::training()), legacy);
+        // a global-batch override is still the training FAMILY: same file
+        let big = WorkloadKind::Training { global_batch: Some(4096) };
+        assert_eq!(cache_fingerprint_for(42, &p, false, &big), legacy);
+        // serving lands in its own file
+        let serving = WorkloadKind::Serving(ServingLoad::default());
+        assert_ne!(cache_fingerprint_for(42, &p, false, &serving), legacy);
+    }
 }

@@ -4,7 +4,9 @@
 pub mod platform;
 pub mod model;
 pub mod parallel;
+pub mod workload;
 
 pub use model::{ModelCfg, Norm};
-pub use parallel::ParallelCfg;
+pub use parallel::{ConfigError, ParallelCfg, ParallelCfgBuilder};
 pub use platform::{GpuSpec, JitterSpec, Platform, TopoSpec};
+pub use workload::{ArrivalKind, ServingLoad, WorkloadKind};

@@ -6,6 +6,76 @@ use crate::config::platform::Platform;
 use crate::net::topology::RankOrder;
 use crate::pipeline::{ScheduleError, ScheduleKind};
 
+/// Why a parallelism strategy could not be constructed. Returned by the
+/// fallible constructors ([`ParallelCfg::try_new`],
+/// [`ParallelCfgBuilder::build`]) so remote/spec-driven entry points can
+/// reject a malformed config instead of panicking a worker thread.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigError {
+    /// One of the pp/mp/dp degrees was zero.
+    ZeroDegree { pp: usize, mp: usize, dp: usize },
+    /// The P2P/compute overlap fraction was non-finite or outside [0, 1].
+    BadOverlap(f64),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ZeroDegree { pp, mp, dp } => {
+                write!(f, "parallel degrees must all be >= 1, got {pp}-{mp}-{dp}")
+            }
+            ConfigError::BadOverlap(v) => {
+                write!(f, "p2p overlap must be a finite fraction in [0, 1], got {v}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Fallible builder for a [`ParallelCfg`] with its accreted knobs
+/// (schedule, rank order, P2P overlap). Unlike the `with_*` combinators,
+/// which clamp, the builder VALIDATES — a malformed knob surfaces as a
+/// [`ConfigError`] from [`ParallelCfgBuilder::build`].
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelCfgBuilder {
+    pp: usize,
+    mp: usize,
+    dp: usize,
+    schedule: ScheduleKind,
+    rank_order: RankOrder,
+    p2p_overlap: f64,
+}
+
+impl ParallelCfgBuilder {
+    pub fn schedule(mut self, schedule: ScheduleKind) -> ParallelCfgBuilder {
+        self.schedule = schedule;
+        self
+    }
+
+    pub fn rank_order(mut self, order: RankOrder) -> ParallelCfgBuilder {
+        self.rank_order = order;
+        self
+    }
+
+    /// P2P/compute overlap fraction; validated (not clamped) at `build`.
+    pub fn p2p_overlap(mut self, frac: f64) -> ParallelCfgBuilder {
+        self.p2p_overlap = frac;
+        self
+    }
+
+    pub fn build(self) -> Result<ParallelCfg, ConfigError> {
+        if !self.p2p_overlap.is_finite() || !(0.0..=1.0).contains(&self.p2p_overlap) {
+            return Err(ConfigError::BadOverlap(self.p2p_overlap));
+        }
+        let cfg = ParallelCfg::try_new(self.pp, self.mp, self.dp)?
+            .with_schedule(self.schedule)
+            .with_rank_order(self.rank_order)
+            .with_p2p_overlap(self.p2p_overlap);
+        Ok(cfg)
+    }
+}
+
 /// Parallelism degrees. `gpus() = pp * mp * dp`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ParallelCfg {
@@ -29,15 +99,38 @@ pub struct ParallelCfg {
 }
 
 impl ParallelCfg {
+    /// Panicking constructor — a thin wrapper over [`ParallelCfg::try_new`]
+    /// for call sites whose degrees are known-good (enumeration, tests).
+    /// Spec-driven entry points (CLI, TCP service) use `try_new` so a
+    /// malformed request can never panic a worker.
     pub fn new(pp: usize, mp: usize, dp: usize) -> ParallelCfg {
-        assert!(pp >= 1 && mp >= 1 && dp >= 1);
-        ParallelCfg {
+        ParallelCfg::try_new(pp, mp, dp).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible constructor: every degree must be >= 1.
+    pub fn try_new(pp: usize, mp: usize, dp: usize) -> Result<ParallelCfg, ConfigError> {
+        if pp < 1 || mp < 1 || dp < 1 {
+            return Err(ConfigError::ZeroDegree { pp, mp, dp });
+        }
+        Ok(ParallelCfg {
             pp,
             mp,
             dp,
             schedule: ScheduleKind::OneFOneB,
             p2p_overlap_pct: 0,
             rank_order: RankOrder::TpFirst,
+        })
+    }
+
+    /// Start a fallible [`ParallelCfgBuilder`] carrying the accreted knobs.
+    pub fn builder(pp: usize, mp: usize, dp: usize) -> ParallelCfgBuilder {
+        ParallelCfgBuilder {
+            pp,
+            mp,
+            dp,
+            schedule: ScheduleKind::OneFOneB,
+            rank_order: RankOrder::TpFirst,
+            p2p_overlap: 0.0,
         }
     }
 
@@ -218,6 +311,46 @@ impl std::fmt::Display for ParallelCfg {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn try_new_rejects_zero_degrees_without_panicking() {
+        assert!(ParallelCfg::try_new(4, 4, 8).is_ok());
+        for (pp, mp, dp) in [(0, 4, 8), (4, 0, 8), (4, 4, 0), (0, 0, 0)] {
+            match ParallelCfg::try_new(pp, mp, dp) {
+                Err(ConfigError::ZeroDegree { pp: p, mp: m, dp: d }) => {
+                    assert_eq!((p, m, d), (pp, mp, dp));
+                }
+                other => panic!("expected ZeroDegree, got {other:?}"),
+            }
+        }
+        // the panicking wrapper agrees with the fallible path on success
+        assert_eq!(ParallelCfg::new(4, 4, 8), ParallelCfg::try_new(4, 4, 8).unwrap());
+    }
+
+    #[test]
+    fn builder_matches_with_combinators_and_validates() {
+        let built = ParallelCfg::builder(4, 2, 2)
+            .schedule(ScheduleKind::GPipe)
+            .rank_order(crate::net::topology::RankOrder::DpFirst)
+            .p2p_overlap(0.5)
+            .build()
+            .unwrap();
+        let combined = ParallelCfg::new(4, 2, 2)
+            .with_schedule(ScheduleKind::GPipe)
+            .with_rank_order(crate::net::topology::RankOrder::DpFirst)
+            .with_p2p_overlap(0.5);
+        assert_eq!(built, combined);
+        // the builder validates where the combinators clamp
+        assert_eq!(
+            ParallelCfg::builder(4, 2, 2).p2p_overlap(1.5).build(),
+            Err(ConfigError::BadOverlap(1.5))
+        );
+        assert!(ParallelCfg::builder(4, 2, 2).p2p_overlap(f64::NAN).build().is_err());
+        assert!(matches!(
+            ParallelCfg::builder(0, 2, 2).build(),
+            Err(ConfigError::ZeroDegree { .. })
+        ));
+    }
 
     #[test]
     fn parse_and_label_roundtrip() {

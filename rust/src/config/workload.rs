@@ -1,0 +1,176 @@
+//! Workload families the predictor prices. The paper's operator-level
+//! decomposition is not training-specific: the same GEMM / memory /
+//! collective primitives price an inference prefill or decode step, so
+//! the sweep spec carries a [`WorkloadKind`] instead of assuming
+//! synchronous pre-training everywhere.
+
+/// Arrival process of a serving load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Memoryless arrivals at the target rate (exponential inter-arrival
+    /// times, drawn deterministically per seed).
+    Poisson,
+    /// A fixed trace: perfectly regular arrivals at the target rate
+    /// (inter-arrival = 1/qps). No randomness at all.
+    Fixed,
+}
+
+impl ArrivalKind {
+    pub fn parse(s: &str) -> Option<ArrivalKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "poisson" => Some(ArrivalKind::Poisson),
+            "fixed" | "trace" | "fixed-trace" => Some(ArrivalKind::Fixed),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Fixed => "fixed",
+        }
+    }
+}
+
+/// The offered load and SLO a serving deployment is planned against.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServingLoad {
+    /// Target request rate (requests/second) the plan must sustain.
+    pub qps: f64,
+    /// p99 per-output-token latency SLO, milliseconds.
+    pub slo_p99_ms: f64,
+    /// Arrival process of the queueing simulation.
+    pub arrival: ArrivalKind,
+    /// Prompt (prefill) length per request, tokens.
+    pub prompt_tokens: usize,
+    /// Generated (decode) length per request, tokens.
+    pub output_tokens: usize,
+    /// Seed of the deterministic arrival simulation.
+    pub seed: u64,
+}
+
+impl Default for ServingLoad {
+    fn default() -> ServingLoad {
+        ServingLoad {
+            qps: 4.0,
+            slo_p99_ms: 200.0,
+            arrival: ArrivalKind::Poisson,
+            prompt_tokens: 512,
+            output_tokens: 128,
+            seed: 7,
+        }
+    }
+}
+
+/// What kind of job the predictor is pricing.
+///
+/// `Training` with `global_batch: None` is the historical default — every
+/// existing entry point resolves to it, and sweeps under it are
+/// bit-identical to the pre-workload engine (property-tested in
+/// `tests/prop_sweep.rs`). The TCP wire omits the workload field entirely
+/// at this default, keeping requests byte-compatible with older
+/// coordinators.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WorkloadKind {
+    /// Synchronous data-parallel pre-training (the paper's workload).
+    Training {
+        /// Override the global batch (sequences per parameter update).
+        /// `None` keeps the model preset's `micro_batch x
+        /// iters_per_update x dp`. `Some(g)` re-derives the per-replica
+        /// micro-batch count as `g / (micro_batch x dp)` (min 1) for
+        /// each swept configuration.
+        global_batch: Option<usize>,
+    },
+    /// Online inference serving: continuous batching over prefill/decode
+    /// phases, planned against a QPS target and a latency SLO.
+    Serving(ServingLoad),
+}
+
+impl WorkloadKind {
+    /// The historical default: training at the model preset's batch.
+    pub fn training() -> WorkloadKind {
+        WorkloadKind::Training { global_batch: None }
+    }
+
+    /// Is this the training default (the only state older wire peers and
+    /// disk caches know about)?
+    pub fn is_training_default(&self) -> bool {
+        matches!(self, WorkloadKind::Training { global_batch: None })
+    }
+
+    /// Stable label naming the workload FAMILY — the op-cache fingerprint
+    /// dimension (see `cli::cache_fingerprint` and PROTOCOL.md). Loads
+    /// within a family share a disk cache; families do not.
+    pub fn family(&self) -> &'static str {
+        match self {
+            WorkloadKind::Training { .. } => "training",
+            WorkloadKind::Serving(_) => "serving",
+        }
+    }
+
+    /// Resolve the per-replica micro-batch count (`iters_per_update`)
+    /// this workload implies for a model at data-parallel degree `dp`.
+    /// The training default returns the preset unchanged.
+    pub fn iters_per_update(&self, model: &crate::config::ModelCfg, dp: usize) -> usize {
+        match self {
+            WorkloadKind::Training { global_batch: None } => model.iters_per_update,
+            WorkloadKind::Training { global_batch: Some(g) } => {
+                (g / (model.micro_batch * dp.max(1))).max(1)
+            }
+            // serving has no parameter updates; callers on the serving
+            // path never consult this, but keep it total
+            WorkloadKind::Serving(_) => model.iters_per_update,
+        }
+    }
+}
+
+impl Default for WorkloadKind {
+    fn default() -> WorkloadKind {
+        WorkloadKind::training()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelCfg;
+
+    #[test]
+    fn training_default_is_the_default() {
+        assert_eq!(WorkloadKind::default(), WorkloadKind::training());
+        assert!(WorkloadKind::training().is_training_default());
+        assert!(!WorkloadKind::Training { global_batch: Some(512) }.is_training_default());
+        assert!(!WorkloadKind::Serving(ServingLoad::default()).is_training_default());
+    }
+
+    #[test]
+    fn family_labels_are_distinct() {
+        assert_eq!(WorkloadKind::training().family(), "training");
+        assert_eq!(WorkloadKind::Serving(ServingLoad::default()).family(), "serving");
+        assert_ne!(
+            WorkloadKind::training().family(),
+            WorkloadKind::Serving(ServingLoad::default()).family()
+        );
+    }
+
+    #[test]
+    fn global_batch_override_rederives_microbatch_count() {
+        let m = ModelCfg::llemma7b(); // micro_batch 4, iters_per_update 8
+        assert_eq!(WorkloadKind::training().iters_per_update(&m, 2), 8);
+        // 128 sequences / (4 micro x 2 dp) = 16 micro-batches per update
+        let w = WorkloadKind::Training { global_batch: Some(128) };
+        assert_eq!(w.iters_per_update(&m, 2), 16);
+        // too-small global batch clamps to one micro-batch
+        let tiny = WorkloadKind::Training { global_batch: Some(1) };
+        assert_eq!(tiny.iters_per_update(&m, 8), 1);
+    }
+
+    #[test]
+    fn arrival_parse_roundtrip() {
+        for a in [ArrivalKind::Poisson, ArrivalKind::Fixed] {
+            assert_eq!(ArrivalKind::parse(a.label()), Some(a));
+        }
+        assert_eq!(ArrivalKind::parse("trace"), Some(ArrivalKind::Fixed));
+        assert_eq!(ArrivalKind::parse("bursty"), None);
+    }
+}

@@ -43,7 +43,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::config::{ModelCfg, ParallelCfg, Platform, TopoSpec};
+use crate::config::{ModelCfg, ParallelCfg, Platform, TopoSpec, WorkloadKind};
 use crate::coordinator::chaos::{AcceptFate, Chaos, ChaosReader, ChaosWriter, ConnChaos};
 use crate::coordinator::service::PredictionService;
 use crate::net::topology::RankOrder;
@@ -119,6 +119,27 @@ pub fn sweep_request_json(
     // byte-compatible with older coordinators
     if let Some(k) = spec.top_k {
         fields.push(("top_k", Json::Num(k as f64)));
+    }
+    // the workload field only exists away from the training default —
+    // default training requests are byte-identical to pre-workload
+    // clients (and older coordinators never see an unknown key)
+    match &spec.workload {
+        WorkloadKind::Training { global_batch: None } => {}
+        WorkloadKind::Training { global_batch: Some(g) } => {
+            fields.push((
+                "workload",
+                Json::obj(vec![
+                    ("kind", Json::Str("training".into())),
+                    ("global_batch", Json::Num(*g as f64)),
+                ]),
+            ));
+        }
+        WorkloadKind::Serving(_) => {
+            // serving is not streamable over the sweep wire (the engine
+            // plans it via serve_plan); emit the kind so a new
+            // coordinator can refuse with a typed error
+            fields.push(("workload", Json::obj(vec![("kind", Json::Str("serving".into()))])));
+        }
     }
     if !spec.prune {
         fields.push(("prune", Json::Bool(false)));
@@ -268,6 +289,28 @@ pub fn parse_sweep_request(req: &Json) -> Result<SweepRequest, String> {
     };
     let prune = spec.get("prune").and_then(|p| p.as_bool()).unwrap_or(true);
     let faults = parse_faults(spec)?;
+    // an absent workload field IS the training default — requests from
+    // pre-workload clients parse to the exact historical spec
+    let workload = match spec.get("workload") {
+        None => WorkloadKind::training(),
+        Some(w) => match w.str_at("kind").unwrap_or("training") {
+            "training" => match w.usize_at("global_batch") {
+                None => WorkloadKind::training(),
+                Some(0) => return Err("workload.global_batch must be >= 1".to_string()),
+                Some(g) if g > MAX_SWEEP_DEGREE * MAX_SWEEP_DEGREE => {
+                    return Err("workload.global_batch out of range".to_string())
+                }
+                Some(g) => WorkloadKind::Training { global_batch: Some(g) },
+            },
+            "serving" => {
+                return Err(
+                    "serving workloads are planned by serve-plan, not the sweep stream"
+                        .to_string(),
+                )
+            }
+            other => return Err(format!("unknown workload kind '{other}'")),
+        },
+    };
     // resume_from rides at the REQUEST level (it addresses the stream,
     // not the sweep): absent means 0, i.e. the full table
     let resume_from = match req.get("resume_from") {
@@ -298,6 +341,7 @@ pub fn parse_sweep_request(req: &Json) -> Result<SweepRequest, String> {
             top_k,
             prune,
             faults,
+            workload,
         },
     })
 }
@@ -1270,6 +1314,7 @@ mod tests {
             top_k: Some(5),
             prune: false,
             faults: None,
+            workload: WorkloadKind::training(),
         };
         let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
         // the default (faults off) request carries NO faults key at all —
@@ -1317,6 +1362,48 @@ mod tests {
         assert_eq!((min.spec.max_pp, min.spec.max_mp), (16, 16));
         assert_eq!(min.spec.top_k, None);
         assert!(min.spec.prune);
+    }
+
+    #[test]
+    fn workload_wire_field_is_omitted_at_the_training_default() {
+        use crate::config::ServingLoad;
+        // the training default emits NO workload key: request bytes are
+        // identical to pre-workload clients
+        let spec = SweepSpec::new(16);
+        assert!(spec.workload.is_training_default());
+        let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &spec);
+        assert!(!req.to_string().contains("workload"), "{req}");
+        // ... and an absent field parses back to the exact default
+        let parsed = parse_sweep_request(&Json::parse(&req.to_string()).unwrap()).unwrap();
+        assert_eq!(parsed.spec.workload, WorkloadKind::training());
+
+        // a global-batch override rides the wire and round-trips
+        let mut big = SweepSpec::new(16);
+        big.workload = WorkloadKind::Training { global_batch: Some(512) };
+        let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &big);
+        assert!(req.to_string().contains("\"global_batch\":512"), "{req}");
+        let parsed = parse_sweep_request(&Json::parse(&req.to_string()).unwrap()).unwrap();
+        assert_eq!(parsed.spec.workload, big.workload);
+
+        // malformed overrides are client errors, not worker panics
+        let bad = |line: &str, what: &str| {
+            let e = parse_sweep_request(&Json::parse(line).unwrap()).unwrap_err();
+            assert!(e.contains(what), "{e}");
+        };
+        bad(
+            r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":16,"workload":{"kind":"training","global_batch":0}}}"#,
+            "global_batch",
+        );
+        bad(
+            r#"{"cmd":"sweep","spec":{"model":"gpt20b","platform":"perlmutter","gpus":16,"workload":{"kind":"speculative"}}}"#,
+            "unknown workload",
+        );
+        // serving is refused with a typed error pointing at serve-plan
+        let mut serving = SweepSpec::new(16);
+        serving.workload = WorkloadKind::Serving(ServingLoad::default());
+        let req = sweep_request_json("llemma7b", "perlmutter", &TopoSpec::Flat, &serving);
+        let e = parse_sweep_request(&Json::parse(&req.to_string()).unwrap()).unwrap_err();
+        assert!(e.contains("serve-plan"), "{e}");
     }
 
     #[test]

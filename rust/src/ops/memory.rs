@@ -156,6 +156,90 @@ pub fn fits_memory(model: &ModelCfg, par: &ParallelCfg, platform: &Platform) -> 
     est.total_gib() <= budget
 }
 
+// ---------------------------------------------------------------------
+// Serving (inference) residency: weights + KV cache, no grads/optimizer.
+// ---------------------------------------------------------------------
+
+const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// KV-cache bytes ONE sequence pins per GPU at `context` tokens:
+/// `2 (K+V) x 2 B (fp16) x context x d/|mp| x encoders`. Linear in the
+/// context length — the defining serving-memory behavior (each decoded
+/// token appends one K and one V row per layer).
+pub fn kv_cache_bytes_per_seq(model: &ModelCfg, mp: usize, context: usize) -> f64 {
+    2.0 * 2.0 * context as f64 * (model.d / mp) as f64 * model.encoders as f64
+}
+
+/// Per-GPU memory breakdown of one tensor-parallel serving replica
+/// (`pp = 1`, weights fp16, no gradients or optimizer state).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServingMemory {
+    /// fp16 model weights of this GPU's |mp| shard.
+    pub params_bytes: f64,
+    /// Transient activation workspace for one in-flight pass (residual
+    /// stream + the 4d/|mp| MLP intermediate at the context length).
+    pub workspace_bytes: f64,
+    /// KV-cache residency PER concurrent sequence at the planned context.
+    pub kv_bytes_per_seq: f64,
+}
+
+impl ServingMemory {
+    /// Total bytes with `seqs` concurrent sequences resident.
+    pub fn total_bytes(&self, seqs: usize) -> f64 {
+        self.params_bytes + self.workspace_bytes + self.kv_bytes_per_seq * seqs as f64
+    }
+
+    pub fn total_gib(&self, seqs: usize) -> f64 {
+        self.total_bytes(seqs) / GIB
+    }
+
+    /// The OOM bound: the largest `n` with
+    /// `params + workspace + n x kv_per_seq <= budget` (0 when even the
+    /// weights alone bust the budget). `fgpm serve-plan` rejects any
+    /// max-batch above this before predicting its speed.
+    pub fn max_concurrent_seqs(&self, budget_bytes: f64) -> usize {
+        let free = budget_bytes - self.params_bytes - self.workspace_bytes;
+        if free <= 0.0 || self.kv_bytes_per_seq <= 0.0 {
+            0
+        } else {
+            (free / self.kv_bytes_per_seq).floor() as usize
+        }
+    }
+}
+
+/// The serving HBM budget: same fragmentation margin as training.
+pub fn serving_budget_bytes(platform: &Platform) -> f64 {
+    platform.gpu.hbm_gib * 0.92 * GIB
+}
+
+/// Serving residency of a `tp = mp` replica at `context` tokens per
+/// sequence (prompt + generation, the worst case a sequence reaches).
+pub fn serving_estimate(model: &ModelCfg, mp: usize, context: usize) -> ServingMemory {
+    // pp = 1: one stage holds embedding + all encoders + the head
+    let vocab = crate::ops::params::padded_vocab(model.vocab, mp);
+    let params = stage_params_exact(StageRole::of(0, 1), model.encoders, model.d, vocab, mp);
+    let d = model.d as f64;
+    let mpf = mp as f64;
+    // residual stream (d) + QKV/MLP intermediate (4d/|mp|) live rows at
+    // the full context, fp16, double-buffered
+    let workspace = context as f64 * d * 2.0 * (2.0 + 4.0 / mpf);
+    ServingMemory {
+        params_bytes: params * 2.0,
+        workspace_bytes: workspace,
+        kv_bytes_per_seq: kv_cache_bytes_per_seq(model, mp, context),
+    }
+}
+
+/// Convenience: the OOM bound for a (model, tp, platform, context).
+pub fn max_concurrent_seqs(
+    model: &ModelCfg,
+    mp: usize,
+    platform: &Platform,
+    context: usize,
+) -> usize {
+    serving_estimate(model, mp, context).max_concurrent_seqs(serving_budget_bytes(platform))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,6 +361,54 @@ mod tests {
         assert_eq!(dp8.params_bytes, est.params_bytes);
         assert_eq!(dp8.optimizer_bytes, est.optimizer_bytes);
         assert!(dp8.total_gib() > 1.0, "{}", dp8.total_gib());
+    }
+
+    #[test]
+    fn kv_residency_grows_linearly_in_context() {
+        let m = ModelCfg::llemma7b();
+        let base = kv_cache_bytes_per_seq(&m, 2, 1024);
+        assert!(base > 0.0);
+        assert_eq!(kv_cache_bytes_per_seq(&m, 2, 2048), 2.0 * base);
+        assert_eq!(kv_cache_bytes_per_seq(&m, 2, 4096), 4.0 * base);
+        // tensor parallelism shards the cache
+        assert_eq!(kv_cache_bytes_per_seq(&m, 4, 1024), base / 2.0);
+        // exact closed form: 2 (K+V) x 2 B x context x d/mp x encoders
+        let expect = 2.0 * 2.0 * 1024.0 * (m.d as f64 / 2.0) * m.encoders as f64;
+        assert_eq!(base, expect);
+    }
+
+    #[test]
+    fn oom_filter_rejects_at_the_documented_bound() {
+        let m = ModelCfg::llemma7b();
+        let p = Platform::perlmutter();
+        let context = 1024;
+        let est = serving_estimate(&m, 2, context);
+        let budget = serving_budget_bytes(&p);
+        let cap = est.max_concurrent_seqs(budget);
+        assert!(cap > 0, "llemma7b at tp=2 must serve at least one sequence");
+        // the bound is exact: cap sequences fit, cap + 1 does not
+        assert!(est.total_bytes(cap) <= budget);
+        assert!(est.total_bytes(cap + 1) > budget);
+        assert_eq!(cap, max_concurrent_seqs(&m, 2, &p, context));
+        // doubling the context roughly halves the cap (kv-linear regime)
+        let cap2 = max_concurrent_seqs(&m, 2, &p, 2 * context);
+        assert!(cap2 < cap && cap2 >= cap / 2 - 1, "cap {cap} -> {cap2}");
+    }
+
+    #[test]
+    fn serving_weights_cannot_exceed_training_residency() {
+        // no grads, no optimizer state: a serving replica's static
+        // footprint is strictly below the training estimate at equal mp
+        let m = ModelCfg::gpt20b();
+        let par = ParallelCfg::new(1, 4, 1);
+        let p = Platform::perlmutter();
+        let train = estimate(&m, &par, &p);
+        let serve = serving_estimate(&m, 4, m.l);
+        assert_eq!(serve.params_bytes, train.params_bytes);
+        assert!(
+            serve.params_bytes + serve.workspace_bytes
+                < train.total_bytes()
+        );
     }
 
     #[test]

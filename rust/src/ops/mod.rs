@@ -8,6 +8,7 @@
 pub mod build;
 pub mod memory;
 pub mod params;
+pub mod serving;
 
 pub use build::Workload;
 

@@ -1,0 +1,270 @@
+//! Inference-phase operator sets: prefill and decode, priced with the
+//! SAME fundamental operators as training (paper §III-C — the
+//! decomposition is workload-agnostic; only the shapes change).
+//!
+//! A serving replica is tensor-parallel only (`pp = 1`, `mp = tp`,
+//! `dp = replicas` for placement). Two phases repeat per request:
+//!
+//! - **prefill** — one forward pass over the prompt (`b = 1`,
+//!   `l = prompt_tokens`): exactly the training forward op sequence,
+//!   minus the loss.
+//! - **decode** — one token per sequence per step for a batch of `b`
+//!   concurrent sequences (`l = 1`): every GEMM collapses to `m = b`
+//!   rows, and attention becomes a batched GEMV against the KV cache
+//!   (`QK^T`: 1 × d_h × context, `AttnV`: 1 × context × d_h) — the
+//!   KV-cache-READ-dominated regime. Flash attention degenerates to the
+//!   same lowering at a single query token, so both attention paths
+//!   share one decode representation.
+//!
+//! Op feature vectors keep Table I's slot layout with the decode shapes
+//! substituted (`l_q = 1`, `l_k = context`), so serving ops get their own
+//! [`crate::predictor::opcache::op_key`]s and flow through the shared
+//! op-prediction cache / prefetch / disk tier alongside training ops.
+
+use crate::config::{ModelCfg, Norm, ParallelCfg, Platform};
+use crate::hw::{GemmShape, MemOpKind};
+use crate::ops::build::{compute_op, encoder_ops, mp_allreduce, Workload};
+use crate::ops::{Dir, LoweredOp, OpInstance, OpKind};
+
+const FP16: f64 = 2.0;
+
+/// One serving phase's operator multiset, kept compact: the encoder
+/// block repeats `encoders` times but its ops are listed once.
+#[derive(Clone, Debug)]
+pub struct PhasePlan {
+    /// Ops executed once per pass (embedding, final norm, logits GEMM).
+    pub once: Vec<OpInstance>,
+    /// Ops executed per encoder block (incl. MP all-reduce syncs).
+    pub per_encoder: Vec<OpInstance>,
+    /// Encoder repetition count.
+    pub encoders: usize,
+}
+
+impl PhasePlan {
+    /// Every DISTINCT op position (once ∪ per-encoder) — the prefetch
+    /// unit. Composition multiplies `per_encoder` sums by `encoders`.
+    pub fn ops(&self) -> impl Iterator<Item = &OpInstance> {
+        self.once.iter().chain(self.per_encoder.iter())
+    }
+}
+
+/// Serving workload context: the training [`Workload`] geometry (MP
+/// group paths under the rank map) with serving-shaped `b`/`l`.
+pub fn serving_workload(
+    model: &ModelCfg,
+    par: &ParallelCfg,
+    platform: &Platform,
+    batch: usize,
+    tokens: usize,
+) -> Workload {
+    let mut wl = Workload::new(model, par, platform);
+    wl.b = batch.max(1);
+    wl.l = tokens.max(1);
+    wl
+}
+
+fn norm_op(model: &ModelCfg, wl: &Workload) -> OpInstance {
+    match model.norm {
+        Norm::Layer => compute_op(OpKind::LayerNorm, wl, Dir::Fwd),
+        Norm::Rms => compute_op(OpKind::RmsNorm, wl, Dir::Fwd),
+    }
+}
+
+/// Logits head: final norm + the vocab-parallel projection. Serving
+/// samples from logits, so there is no `ParallelCrossEntropy`.
+fn logits_ops(model: &ModelCfg, wl: &Workload) -> Vec<OpInstance> {
+    vec![norm_op(model, wl), compute_op(OpKind::FinalLinear, wl, Dir::Fwd)]
+}
+
+/// The prefill pass for ONE request (`b = 1`, `l = prompt_tokens`):
+/// the training forward sequence, reusing the training builders verbatim
+/// so a warm training cache shares any coinciding shapes.
+pub fn prefill_plan(model: &ModelCfg, par: &ParallelCfg, platform: &Platform, prompt_tokens: usize) -> PhasePlan {
+    let wl = serving_workload(model, par, platform, 1, prompt_tokens);
+    let mut once = vec![compute_op(OpKind::Embedding, &wl, Dir::Fwd)];
+    once.extend(logits_ops(model, &wl));
+    PhasePlan {
+        once,
+        per_encoder: encoder_ops(model, &wl, Dir::Fwd),
+        encoders: model.encoders,
+    }
+}
+
+/// Decode attention score GEMV: `Q[b·h_l, 1, d_h] × K^T[d_h, context]`.
+/// Feature layout mirrors training `QK^T` (`[b·h_l, l_q, d_h, l_k]`).
+fn decode_qkt(wl: &Workload, context: usize) -> OpInstance {
+    let s = GemmShape::batched(wl.b * wl.heads_local(), 1, wl.head_dim(), context);
+    OpInstance {
+        kind: OpKind::QkT,
+        dir: Dir::Fwd,
+        features: vec![
+            (wl.b * wl.heads_local()) as f64,
+            1.0,
+            wl.head_dim() as f64,
+            context as f64,
+        ],
+        lowered: LoweredOp::Gemm(s),
+    }
+}
+
+/// Decode softmax over the `context`-long score row per head.
+fn decode_softmax(wl: &Workload, context: usize) -> OpInstance {
+    let rows = (wl.b * wl.heads_local()) as f64;
+    OpInstance {
+        kind: OpKind::Softmax,
+        dir: Dir::Fwd,
+        features: vec![wl.b as f64, wl.heads_local() as f64, 1.0, context as f64],
+        lowered: LoweredOp::Mem {
+            kind: MemOpKind::Softmax,
+            elems: rows * context as f64,
+            elem_bytes: FP16,
+            rows,
+        },
+    }
+}
+
+/// Decode value gather: `P[b·h_l, 1, context] × V[context, d_h]` — this
+/// GEMV streams the entire V cache, the read-dominated half.
+fn decode_attnv(wl: &Workload, context: usize) -> OpInstance {
+    let s = GemmShape::batched(wl.b * wl.heads_local(), 1, context, wl.head_dim());
+    OpInstance {
+        kind: OpKind::AttnV,
+        dir: Dir::Fwd,
+        features: vec![
+            (wl.b * wl.heads_local()) as f64,
+            1.0,
+            context as f64,
+            wl.head_dim() as f64,
+        ],
+        lowered: LoweredOp::Gemm(s),
+    }
+}
+
+/// One decode STEP for `batch` concurrent sequences, each appending one
+/// token against a KV cache of `context` tokens. GEMMs run at `m = b`
+/// (batch-of-1-token rows); attention is the KV-read GEMV pair above.
+pub fn decode_plan(
+    model: &ModelCfg,
+    par: &ParallelCfg,
+    platform: &Platform,
+    batch: usize,
+    context: usize,
+) -> PhasePlan {
+    let wl = serving_workload(model, par, platform, batch, 1);
+    let context = context.max(1);
+    let mut enc = Vec::new();
+    enc.push(norm_op(model, &wl));
+    enc.push(compute_op(OpKind::Linear1, &wl, Dir::Fwd));
+    enc.push(compute_op(OpKind::Rope, &wl, Dir::Fwd));
+    enc.push(decode_qkt(&wl, context));
+    enc.push(decode_softmax(&wl, context));
+    enc.push(decode_attnv(&wl, context));
+    enc.push(compute_op(OpKind::Linear2, &wl, Dir::Fwd));
+    enc.push(norm_op(model, &wl));
+    enc.push(compute_op(OpKind::Linear3, &wl, Dir::Fwd));
+    enc.push(compute_op(OpKind::Glue, &wl, Dir::Fwd));
+    enc.push(compute_op(OpKind::Linear4, &wl, Dir::Fwd));
+    for _ in 0..model.encoder_fwd_syncs {
+        enc.push(mp_allreduce(&wl));
+    }
+    let mut once = vec![compute_op(OpKind::Embedding, &wl, Dir::Fwd)];
+    once.extend(logits_ops(model, &wl));
+    PhasePlan { once, per_encoder: enc, encoders: model.encoders }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> (ModelCfg, ParallelCfg, Platform) {
+        (ModelCfg::llemma7b(), ParallelCfg::new(1, 2, 2), Platform::perlmutter())
+    }
+
+    #[test]
+    fn decode_gemms_are_batch_by_one_token() {
+        let (m, par, p) = fixture();
+        let plan = decode_plan(&m, &par, &p, 16, 1024);
+        // every projection GEMM runs at m = batch (1 token per sequence)
+        for op in plan.per_encoder.iter().filter(|o| {
+            matches!(o.kind, OpKind::Linear1 | OpKind::Linear2 | OpKind::Linear3 | OpKind::Linear4)
+        }) {
+            match &op.lowered {
+                LoweredOp::Gemm(s) => assert_eq!(s.m, 16, "{:?}", op.kind),
+                other => panic!("{:?} lowered to {other:?}", op.kind),
+            }
+        }
+        // the logits head too: b rows, not b*l
+        let fl = plan.once.iter().find(|o| o.kind == OpKind::FinalLinear).unwrap();
+        match &fl.lowered {
+            LoweredOp::Gemm(s) => assert_eq!(s.m, 16),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_attention_reads_the_kv_cache() {
+        let (m, par, p) = fixture();
+        let context = 1024;
+        let plan = decode_plan(&m, &par, &p, 8, context);
+        let qkt = plan.per_encoder.iter().find(|o| o.kind == OpKind::QkT).unwrap();
+        match &qkt.lowered {
+            LoweredOp::Gemm(s) => {
+                assert_eq!(s.m, 1); // one query token
+                assert_eq!(s.n, context); // against the whole K cache
+                assert_eq!(s.batch, 8 * m.h / par.mp);
+            }
+            other => panic!("{other:?}"),
+        }
+        let av = plan.per_encoder.iter().find(|o| o.kind == OpKind::AttnV).unwrap();
+        match &av.lowered {
+            LoweredOp::Gemm(s) => {
+                assert_eq!((s.m, s.k), (1, context)); // streams the V cache
+            }
+            other => panic!("{other:?}"),
+        }
+        // flash models use the same decode lowering (GEMV degenerate case)
+        assert!(m.flash_attention);
+        assert!(!plan.per_encoder.iter().any(|o| o.kind == OpKind::FlashAttention));
+    }
+
+    #[test]
+    fn decode_context_changes_the_op_key() {
+        use crate::predictor::opcache::op_key;
+        let (m, par, p) = fixture();
+        let a = decode_plan(&m, &par, &p, 8, 512);
+        let b = decode_plan(&m, &par, &p, 8, 1024);
+        let qa = a.per_encoder.iter().find(|o| o.kind == OpKind::QkT).unwrap();
+        let qb = b.per_encoder.iter().find(|o| o.kind == OpKind::QkT).unwrap();
+        assert_ne!(op_key(qa), op_key(qb), "context must be part of cache identity");
+    }
+
+    #[test]
+    fn prefill_is_forward_only_without_loss() {
+        let (m, par, p) = fixture();
+        let plan = prefill_plan(&m, &par, &p, 2048);
+        assert_eq!(plan.encoders, m.encoders);
+        for op in plan.ops() {
+            assert_eq!(op.dir, Dir::Fwd, "{:?}", op.kind);
+            assert_ne!(op.kind, OpKind::ParallelCrossEntropy);
+            assert_ne!(op.kind, OpKind::DpAllReduce);
+            assert_ne!(op.kind, OpKind::Optimizer);
+        }
+        // prompt length drives the GEMM row count (b = 1)
+        let l1 = plan.per_encoder.iter().find(|o| o.kind == OpKind::Linear1).unwrap();
+        match &l1.lowered {
+            LoweredOp::Gemm(s) => assert_eq!(s.m, 2048),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn serving_features_fit_the_aot_pad() {
+        let (m, par, p) = fixture();
+        for plan in [prefill_plan(&m, &par, &p, 1024), decode_plan(&m, &par, &p, 32, 2048)] {
+            for op in plan.ops() {
+                assert!(op.features.len() <= 8, "{:?}", op.kind);
+                assert_eq!(op.padded_features(8).len(), 8);
+            }
+        }
+    }
+}

@@ -106,25 +106,132 @@ fn stage_time(
     (total, enc, ars)
 }
 
-/// Predict all components for one configuration (private per-call cache;
-/// see [`predict_with_cache`] for the cross-config variant).
+/// How a prediction sources its stage plans and per-op latencies — the
+/// ONE parameter object behind every composition entry point. The three
+/// historical functions are thin combinations of its fields:
+///
+/// | historical name        | constructor                          |
+/// |------------------------|--------------------------------------|
+/// | `predict`              | [`PredictOpts::backend`]             |
+/// | `predict_with_cache`   | [`PredictOpts::shared`]              |
+/// | `predict_prefetched`   | [`PredictOpts::prefetched`]          |
+///
+/// All paths compose bit-identical `f64`s for the same inputs
+/// (property-tested in `tests/prop_sweep.rs`): the opts only choose
+/// WHERE latencies come from, never how they combine.
+pub struct PredictOpts<'a> {
+    /// Platform to build stage plans from. Required unless [`Self::plans`]
+    /// is pre-built.
+    pub platform: Option<&'a Platform>,
+    /// Pre-built stage plans (skips plan building). They MUST match
+    /// (model, par, platform) — the sweep engine guarantees this by
+    /// building them itself.
+    pub plans: Option<&'a [StagePlan]>,
+    /// Regressor backend. `None` composes purely from [`Self::store`]
+    /// (panics on a missing op, which would mean op enumeration is
+    /// nondeterministic).
+    pub pred: Option<&'a mut dyn BatchPredictor>,
+    /// Shared cross-config op store; `None` uses a private per-call one.
+    pub store: Option<&'a OpPredictionCache>,
+}
+
+impl<'a> PredictOpts<'a> {
+    /// Backend-only prediction over a private per-call cache
+    /// (the historical [`predict`]).
+    pub fn backend(platform: &'a Platform, pred: &'a mut dyn BatchPredictor) -> PredictOpts<'a> {
+        PredictOpts { platform: Some(platform), plans: None, pred: Some(pred), store: None }
+    }
+
+    /// Backend over a SHARED cross-config store: distinct ops already
+    /// predicted by earlier calls (any config, any schedule) are reused
+    /// without a backend round-trip (the historical
+    /// [`predict_with_cache`]). The two-phase prefetch (one batched call
+    /// per route — §Perf: this cut served-prediction latency ~5x and
+    /// raised mean batch fill from 1.0 to ~7 rows on the e2e driver)
+    /// only fetches the cross-call misses; backends without batch
+    /// support are prefetched per-op instead.
+    pub fn shared(
+        platform: &'a Platform,
+        pred: &'a mut dyn BatchPredictor,
+        store: &'a OpPredictionCache,
+    ) -> PredictOpts<'a> {
+        PredictOpts { platform: Some(platform), plans: None, pred: Some(pred), store: Some(store) }
+    }
+
+    /// Backend-free composition from an already-populated store over
+    /// pre-built plans (the historical [`predict_prefetched`]) — the
+    /// sweep engine's phase-B path on its scoped worker threads after
+    /// one global prefetch.
+    pub fn prefetched(plans: &'a [StagePlan], store: &'a OpPredictionCache) -> PredictOpts<'a> {
+        PredictOpts { platform: None, plans: Some(plans), pred: None, store: Some(store) }
+    }
+}
+
+/// Predict all components for one configuration, sourcing plans and
+/// per-op latencies per `opts`. Panics if `opts` carries neither a
+/// platform nor pre-built plans (nothing to compose over).
+pub fn predict_with(
+    model: &ModelCfg,
+    par: &ParallelCfg,
+    opts: PredictOpts<'_>,
+) -> ComponentPrediction {
+    let PredictOpts { platform, plans, pred, store } = opts;
+    let built: Vec<StagePlan>;
+    let plans: &[StagePlan] = match plans {
+        Some(p) => p,
+        None => {
+            let platform =
+                platform.expect("PredictOpts: a platform is required to build stage plans");
+            built = stage_plans_mode(model, par, platform, /*paper_params=*/ true);
+            &built
+        }
+    };
+    let private;
+    let store = match store {
+        Some(s) => s,
+        None => {
+            private = OpPredictionCache::new();
+            &private
+        }
+    };
+    match pred {
+        Some(pred) => {
+            let mut cache = LocalOpCache::new(store);
+            cache.prefetch(&mut *pred, plan_ops(plans));
+            compose(model, par, plans, &mut |op| cache.predict(&mut *pred, op))
+        }
+        None => {
+            let mut local: HashMap<OpKey, f64> = HashMap::new();
+            compose(model, par, plans, &mut |op| {
+                let key = op_key(op);
+                if let Some(&v) = local.get(&key) {
+                    return v;
+                }
+                let v = store
+                    .lookup(&key)
+                    .unwrap_or_else(|| panic!("op {:?} missing from prefetched cache", op.kind));
+                local.insert(key, v);
+                v
+            })
+        }
+    }
+}
+
+/// Historical spelling of [`predict_with`] +
+/// [`PredictOpts::backend`]; kept callable for downstream code.
+#[doc(hidden)]
 pub fn predict(
     model: &ModelCfg,
     par: &ParallelCfg,
     platform: &Platform,
     pred: &mut dyn BatchPredictor,
 ) -> ComponentPrediction {
-    let shared = OpPredictionCache::new();
-    predict_with_cache(model, par, platform, pred, &shared)
+    predict_with(model, par, PredictOpts::backend(platform, pred))
 }
 
-/// [`predict`] over a SHARED cross-config cache: distinct ops already
-/// predicted by earlier calls (any config, any schedule) are reused
-/// without a backend round-trip. The two-phase prefetch (one batched
-/// call per route — §Perf: this cut served-prediction latency ~5x and
-/// raised mean batch fill from 1.0 to ~7 rows on the e2e driver) now
-/// only fetches the cross-call misses; backends without batch support
-/// are prefetched per-op instead.
+/// Historical spelling of [`predict_with`] +
+/// [`PredictOpts::shared`]; kept callable for downstream code.
+#[doc(hidden)]
 pub fn predict_with_cache(
     model: &ModelCfg,
     par: &ParallelCfg,
@@ -132,35 +239,19 @@ pub fn predict_with_cache(
     pred: &mut dyn BatchPredictor,
     shared: &OpPredictionCache,
 ) -> ComponentPrediction {
-    let plans: Vec<StagePlan> = stage_plans_mode(model, par, platform, /*paper_params=*/ true);
-    let mut cache = LocalOpCache::new(shared);
-    cache.prefetch(&mut *pred, plan_ops(&plans));
-    compose(model, par, &plans, &mut |op| cache.predict(&mut *pred, op))
+    predict_with(model, par, PredictOpts::shared(platform, pred, shared))
 }
 
-/// Compose a prediction purely from an already-populated cache — no
-/// backend at all. The sweep engine uses this on its scoped worker
-/// threads after a single global prefetch over every enumerated config;
-/// `plans` MUST be the same plans that were prefetched (panics on a
-/// missing op, which would mean op enumeration is nondeterministic).
+/// Historical spelling of [`predict_with`] +
+/// [`PredictOpts::prefetched`]; kept callable for downstream code.
+#[doc(hidden)]
 pub fn predict_prefetched(
     model: &ModelCfg,
     par: &ParallelCfg,
     plans: &[StagePlan],
     shared: &OpPredictionCache,
 ) -> ComponentPrediction {
-    let mut local: HashMap<OpKey, f64> = HashMap::new();
-    compose(model, par, plans, &mut |op| {
-        let key = op_key(op);
-        if let Some(&v) = local.get(&key) {
-            return v;
-        }
-        let v = shared
-            .lookup(&key)
-            .unwrap_or_else(|| panic!("op {:?} missing from prefetched cache", op.kind));
-        local.insert(key, v);
-        v
-    })
+    predict_with(model, par, PredictOpts::prefetched(plans, shared))
 }
 
 /// The component composition (eqs (3)-(7) and the per-schedule closed
@@ -732,6 +823,31 @@ mod tests {
                 assert!(p2p.overlapped_us > 0.0, "{p2p:?}");
             }
         }
+    }
+
+    #[test]
+    fn predict_with_opts_matches_every_historical_path_exactly() {
+        use crate::predictor::opcache::OpPredictionCache;
+        let (m, par, p) = cfg();
+        let mut oracle = OraclePredictor { platform: p.clone() };
+        let via_backend = predict_with(&m, &par, PredictOpts::backend(&p, &mut oracle));
+        let legacy = predict(&m, &par, &p, &mut oracle);
+        assert_eq!(via_backend.total_us, legacy.total_us);
+        assert_eq!(via_backend.stage_fwd_us, legacy.stage_fwd_us);
+        assert_eq!(via_backend.update_us, legacy.update_us);
+
+        let store = OpPredictionCache::new();
+        let via_shared = predict_with(&m, &par, PredictOpts::shared(&p, &mut oracle, &store));
+        assert_eq!(via_shared.total_us, legacy.total_us);
+        assert_eq!(via_shared.stage_bwd_us, legacy.stage_bwd_us);
+
+        // the store is now populated: the backend-free path composes the
+        // exact same f64s without any predictor at all
+        let plans = stage_plans_mode(&m, &par, &p, true);
+        let via_prefetched = predict_with(&m, &par, PredictOpts::prefetched(&plans, &store));
+        assert_eq!(via_prefetched.total_us, legacy.total_us);
+        assert_eq!(via_prefetched.mp_allreduce_us, legacy.mp_allreduce_us);
+        assert_eq!(via_prefetched.pp_p2p_exposed_us, legacy.pp_p2p_exposed_us);
     }
 
     #[test]

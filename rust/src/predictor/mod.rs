@@ -7,7 +7,7 @@ pub mod opcache;
 pub mod e2e;
 pub mod errors;
 
-pub use e2e::{predict, predict_with_cache, ComponentPrediction};
+pub use e2e::{predict, predict_with, predict_with_cache, ComponentPrediction, PredictOpts};
 pub use errors::{evaluate, ComponentErrors};
 pub use opcache::{CacheStats, OpPredictionCache};
 pub use registry::{BatchPredictor, Registry};

@@ -72,6 +72,45 @@ pub fn sweep_table_text(
     s
 }
 
+/// The ranked `fgpm serve-plan` table: one row per feasible serving
+/// deployment `(tp x replicas, max-batch)`, SLO-compliant configs first
+/// (then p99 ascending), with the simulated token throughput, token
+/// latency percentiles, and the quasi-static QPS capacity. A `!SLO`
+/// marker flags rows whose simulated p99 token latency exceeds the SLO
+/// at the offered load, and the OOM footer mirrors `sweep_table_text`.
+pub fn serve_plan_table_text(
+    title: &str,
+    report: &crate::sweep::ServePlanReport,
+    hbm_gib: f64,
+) -> String {
+    let mut s = format!("{title}\n");
+    for (i, row) in report.rows.iter().enumerate() {
+        s.push_str(&format!(
+            "{:>2}. {:<12} {:>8.0} tok/s   p50 {:>7.1} ms  p99 {:>7.1} ms   cap {:>6.2} qps   {:>5.1} GiB/GPU  <= {:>4} seqs{}{}\n",
+            i + 1,
+            row.cand.label(),
+            row.tokens_per_sec,
+            row.p50_ms,
+            row.p99_ms,
+            row.qps_capacity,
+            row.mem_gib,
+            row.max_seqs,
+            if row.compliant { "" } else { "   !SLO" },
+            if i == 0 && row.compliant { "   <- best" } else { "" }
+        ));
+    }
+    if report.rows.is_empty() {
+        s.push_str("(no feasible serving configuration)\n");
+    }
+    if report.skipped_oom > 0 {
+        s.push_str(&format!(
+            "({} configs skipped: KV cache + weights exceed {hbm_gib} GiB HBM)\n",
+            report.skipped_oom
+        ));
+    }
+    s
+}
+
 /// The fault-mode sweep table: the plain ranked rows plus the closed-form
 /// goodput columns. Row tuples are `(label, seconds, mem_gib,
 /// goodput_frac, useful_flop_frac, ckpt_overhead_frac)` — the same shape

@@ -27,11 +27,16 @@
 //! the coordinator service all ride this path; `benches/bench_hotpath.rs`
 //! measures it and emits `BENCH_sweep.json` (configs/sec, hit-rate).
 
+pub mod serveplan;
+
+pub use serveplan::{ServeCandidate, ServePlanReport, ServePlanRow, ServePlanSpec};
+
+use std::borrow::Cow;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::baselines::analytical::sweep_lower_bound_us;
-use crate::config::{ModelCfg, ParallelCfg, Platform};
+use crate::config::{ModelCfg, ParallelCfg, Platform, WorkloadKind};
 use crate::net::topology::RankOrder;
 use crate::ops::memory;
 use crate::pipeline::ScheduleKind;
@@ -72,6 +77,13 @@ pub struct SweepSpec {
     /// columns, every output bit-identical to a spec without the field
     /// (the annotation NEVER modifies `total_us` — property-tested).
     pub faults: Option<crate::faults::FaultPlan>,
+    /// What job the sweep prices. The training default resolves every
+    /// model exactly as the historical engine did (bit-identical rows,
+    /// property-tested); `Training { global_batch: Some(_) }` re-derives
+    /// the micro-batch count per swept dp. Serving workloads are planned
+    /// by [`Engine::serve_plan`], not the training sweep — [`Engine::sweep`]
+    /// rejects them with a typed error instead of silently mispricing.
+    pub workload: WorkloadKind,
 }
 
 impl SweepSpec {
@@ -88,7 +100,23 @@ impl SweepSpec {
             top_k: None,
             prune: true,
             faults: None,
+            workload: WorkloadKind::training(),
         }
+    }
+}
+
+/// Resolve the model a workload implies at data-parallel degree `dp`.
+/// The training default borrows — the engine sees the EXACT same
+/// `&ModelCfg` it always did, so bit-identity holds by construction, not
+/// by testing alone (though `tests/prop_sweep.rs` tests it anyway).
+fn model_for<'m>(model: &'m ModelCfg, workload: &WorkloadKind, dp: usize) -> Cow<'m, ModelCfg> {
+    let iters = workload.iters_per_update(model, dp);
+    if iters == model.iters_per_update {
+        Cow::Borrowed(model)
+    } else {
+        let mut m = model.clone();
+        m.iters_per_update = iters;
+        Cow::Owned(m)
     }
 }
 
@@ -267,6 +295,9 @@ pub fn feasible_configs(
         if !par.fits(platform) || model.h % par.mp != 0 {
             continue;
         }
+        // workload-resolved model: the training default borrows `model`
+        // unchanged, so these are the historical filters bit-for-bit
+        let model = model_for(model, &spec.workload, par.dp);
         if model.iters_per_update < par.pp {
             skipped_microbatch += 1;
             continue; // deep pipelines need enough micro-batches
@@ -275,7 +306,7 @@ pub fn feasible_configs(
             skipped_sched += 1;
             continue; // e.g. interleaving needs m % stages == 0
         }
-        if !memory::fits_memory(model, &par, platform) {
+        if !memory::fits_memory(&model, &par, platform) {
             skipped_oom += 1;
             continue; // would OOM before producing a single batch
         }
@@ -353,7 +384,14 @@ impl Engine {
         cfgs: &[ParallelCfg],
         pred: &mut dyn BatchPredictor,
     ) -> Result<Vec<SweepRow>, SweepError> {
-        self.evaluate_timed(model, platform, cfgs, pred, &mut PhaseTimings::default())
+        self.evaluate_timed(
+            model,
+            platform,
+            &WorkloadKind::training(),
+            cfgs,
+            pred,
+            &mut PhaseTimings::default(),
+        )
     }
 
     /// [`Engine::evaluate`] accumulating per-phase wall-clock into
@@ -364,6 +402,7 @@ impl Engine {
         &self,
         model: &ModelCfg,
         platform: &Platform,
+        workload: &WorkloadKind,
         cfgs: &[ParallelCfg],
         pred: &mut dyn BatchPredictor,
         timings: &mut PhaseTimings,
@@ -381,7 +420,10 @@ impl Engine {
             catch_unwind(AssertUnwindSafe(|| {
                 let plans: Vec<Vec<StagePlan>> = cfgs
                     .iter()
-                    .map(|par| stage_plans_mode(model, par, platform, /*paper_params=*/ true))
+                    .map(|par| {
+                        let m = model_for(model, workload, par.dp);
+                        stage_plans_mode(&m, par, platform, /*paper_params=*/ true)
+                    })
                     .collect();
                 self.prefetch(&plans, pred);
                 plans
@@ -403,7 +445,7 @@ impl Engine {
         if threads == 1 {
             let _sp = crate::obs::span(format!("compose[0..{}]", cfgs.len()), "phaseB");
             for (slot, (par, plans)) in out.iter_mut().zip(cfgs.iter().zip(plans.iter())) {
-                *slot = Some(self.eval_one_caught(model, platform, par, plans));
+                *slot = Some(self.eval_one_caught(model, platform, workload, par, plans));
             }
         } else {
             let chunk = cfgs.len().div_ceil(threads);
@@ -419,7 +461,8 @@ impl Engine {
                         for (slot, (par, plans)) in
                             slots.iter_mut().zip(pars.iter().zip(plan_chunk.iter()))
                         {
-                            *slot = Some(self.eval_one_caught(model, platform, par, plans));
+                            *slot =
+                                Some(self.eval_one_caught(model, platform, workload, par, plans));
                         }
                     });
                 }
@@ -437,11 +480,12 @@ impl Engine {
         &self,
         model: &ModelCfg,
         platform: &Platform,
+        workload: &WorkloadKind,
         par: &ParallelCfg,
         plans: &[StagePlan],
     ) -> Result<SweepRow, SweepError> {
         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.eval_one(model, platform, par, plans)
+            self.eval_one(model, platform, workload, par, plans)
         }))
         .map_err(|payload| SweepError { label: par.label(), detail: panic_detail(payload) })
     }
@@ -458,6 +502,17 @@ impl Engine {
         spec: &SweepSpec,
         pred: &mut dyn BatchPredictor,
     ) -> Result<SweepReport, SweepError> {
+        if let WorkloadKind::Serving(_) = spec.workload {
+            // the training sweep's closed forms (micro-batch pipelines,
+            // optimizer updates) do not price a serving deployment;
+            // reject loudly instead of returning plausible-looking rows
+            return Err(SweepError {
+                label: "<workload>".to_string(),
+                detail: "serving workloads are planned by Engine::serve_plan (fgpm serve-plan), \
+                         not the training sweep"
+                    .to_string(),
+            });
+        }
         let t0 = Instant::now();
         let before = self.cache.stats();
         let mut timings = PhaseTimings::default();
@@ -465,10 +520,11 @@ impl Engine {
             feasible_configs(model, platform, spec);
         let (mut rows, evaluated, pruned, bound_consults) = match spec.top_k {
             Some(k) if spec.prune && k > 0 => {
-                self.evaluate_top_k(model, platform, &cfgs, pred, k, &mut timings)?
+                self.evaluate_top_k(model, platform, &spec.workload, &cfgs, pred, k, &mut timings)?
             }
             _ => {
-                let rows = self.evaluate_timed(model, platform, &cfgs, pred, &mut timings)?;
+                let rows = self
+                    .evaluate_timed(model, platform, &spec.workload, &cfgs, pred, &mut timings)?;
                 let n = rows.len();
                 (rows, n, 0, 0)
             }
@@ -525,6 +581,7 @@ impl Engine {
         &self,
         model: &ModelCfg,
         platform: &Platform,
+        workload: &WorkloadKind,
         cfgs: &[ParallelCfg],
         pred: &mut dyn BatchPredictor,
         k: usize,
@@ -536,7 +593,12 @@ impl Engine {
         let t_bound = Instant::now();
         let bounds: Vec<f64> = {
             let _sp = crate::obs::span(format!("bound-scoring[{} cfgs]", cfgs.len()), "bound");
-            cfgs.iter().map(|par| sweep_lower_bound_us(model, par, platform)).collect()
+            cfgs.iter()
+                .map(|par| {
+                    let m = model_for(model, workload, par.dp);
+                    sweep_lower_bound_us(&m, par, platform)
+                })
+                .collect()
         };
         timings.bound_us += t_bound.elapsed().as_secs_f64() * 1e6;
         let bound_consults = bounds.len();
@@ -556,7 +618,8 @@ impl Engine {
             }
             let batch = &order[next..(next + chunk).min(order.len())];
             let batch_cfgs: Vec<ParallelCfg> = batch.iter().map(|&i| cfgs[i]).collect();
-            let rows = self.evaluate_timed(model, platform, &batch_cfgs, pred, timings)?;
+            let rows =
+                self.evaluate_timed(model, platform, workload, &batch_cfgs, pred, timings)?;
             kept.extend(batch.iter().copied().zip(rows));
             next += batch.len();
             if kept.len() >= k {
@@ -614,11 +677,13 @@ impl Engine {
         &self,
         model: &ModelCfg,
         platform: &Platform,
+        workload: &WorkloadKind,
         par: &ParallelCfg,
         plans: &[StagePlan],
     ) -> SweepRow {
-        let prediction = predict_prefetched(model, par, plans, &self.cache);
-        let mem_gib = memory::estimate(model, par, platform).total_gib();
+        let model = model_for(model, workload, par.dp);
+        let prediction = predict_prefetched(&model, par, plans, &self.cache);
+        let mem_gib = memory::estimate(&model, par, platform).total_gib();
         SweepRow { par: *par, prediction, mem_gib, goodput: None }
     }
 }
@@ -781,6 +846,51 @@ mod tests {
             .sweep(&model, &platform, &spec, &mut ShortBatchBackend)
             .expect_err("serial path must fail identically");
         assert_eq!(serial_err.label, err.label);
+    }
+
+    #[test]
+    fn global_batch_override_rescales_totals_per_dp() {
+        use crate::config::WorkloadKind;
+        let (model, platform, mut spec) = small_spec();
+        spec.schedules = vec![ScheduleKind::OneFOneB];
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let base = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
+        // a LARGER global batch means more micro-batches per update at
+        // every dp: every shared config must predict strictly slower
+        spec.workload = WorkloadKind::Training {
+            global_batch: Some(4 * model.micro_batch * model.iters_per_update * 16),
+        };
+        let big = Engine::new().sweep(&model, &platform, &spec, &mut oracle).unwrap();
+        assert!(!big.rows.is_empty());
+        // bigger batches only RELAX the pp <= m filter, so every baseline
+        // config is still enumerated — and predicts strictly slower
+        for baseline in &base.rows {
+            let row = big
+                .rows
+                .iter()
+                .find(|r| r.par == baseline.par)
+                .unwrap_or_else(|| panic!("{} vanished under the override", baseline.par.label()));
+            assert!(
+                row.prediction.total_us > baseline.prediction.total_us,
+                "{}: {} !> {}",
+                row.par.label(),
+                row.prediction.total_us,
+                baseline.prediction.total_us
+            );
+        }
+    }
+
+    #[test]
+    fn serving_workload_is_rejected_by_the_training_sweep() {
+        use crate::config::{ServingLoad, WorkloadKind};
+        let (model, platform, mut spec) = small_spec();
+        spec.workload = WorkloadKind::Serving(ServingLoad::default());
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let err = Engine::new()
+            .sweep(&model, &platform, &spec, &mut oracle)
+            .expect_err("serving specs must not flow through training closed forms");
+        assert_eq!(err.label, "<workload>");
+        assert!(err.detail.contains("serve-plan"), "{err}");
     }
 
     #[test]

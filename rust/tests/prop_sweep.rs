@@ -5,16 +5,17 @@
 //! must actually hit (≥ 50% on the gpt20b/128-GPU `--schedule all`
 //! acceptance sweep).
 
-use fgpm::config::{ModelCfg, Platform, TopoSpec};
+use fgpm::config::{ModelCfg, ParallelCfg, Platform, TopoSpec, WorkloadKind};
 use fgpm::faults::{
     closed_form, simulate, FaultPlan, FaultSpec, GoodputParams, CLOSED_FORM_RTOL,
 };
 use fgpm::net::topology::RankOrder;
 use fgpm::ops::memory;
 use fgpm::pipeline::ScheduleKind;
-use fgpm::predictor::e2e::OraclePredictor;
-use fgpm::predictor::predict;
+use fgpm::predictor::e2e::{predict_prefetched, ComponentPrediction, OraclePredictor};
+use fgpm::predictor::{predict, predict_with, predict_with_cache, OpPredictionCache, PredictOpts};
 use fgpm::sweep::{feasible_configs, Engine, SweepSpec};
+use fgpm::trainrun::stage_plans_mode;
 
 /// Serial baseline: fresh predictor cache per config, stable
 /// fastest-first sort with the same total_cmp key the engine uses.
@@ -275,6 +276,110 @@ fn fault_simulation_is_deterministic_per_seed() {
     assert!(a.failures > 0 && a.stragglers > 0, "{a:?}");
     let c = simulate(&p, 5_000, 43);
     assert_ne!(a.events, c.events, "different seeds must diverge");
+}
+
+/// Every f64 in two predictions is bit-identical (not approximately
+/// equal) — the contract the [`PredictOpts`] redesign promises: opts
+/// only choose WHERE latencies come from, never how they combine.
+fn assert_bit_identical(a: &ComponentPrediction, b: &ComponentPrediction, what: &str) {
+    assert_eq!(a.label, b.label, "{what}");
+    assert_eq!(a.encoder_fwd_us, b.encoder_fwd_us, "{what}");
+    assert_eq!(a.encoder_bwd_us, b.encoder_bwd_us, "{what}");
+    assert_eq!(a.stage_fwd_us, b.stage_fwd_us, "{what}");
+    assert_eq!(a.stage_bwd_us, b.stage_bwd_us, "{what}");
+    assert_eq!(a.mp_allreduce_us, b.mp_allreduce_us, "{what}");
+    assert_eq!(a.pp_p2p_us, b.pp_p2p_us, "{what}");
+    assert_eq!(a.pp_p2p_exposed_us, b.pp_p2p_exposed_us, "{what}");
+    assert_eq!(a.dp_allreduce_first_us, b.dp_allreduce_first_us, "{what}");
+    assert_eq!(a.dp_allgather_max_us, b.dp_allgather_max_us, "{what}");
+    assert_eq!(a.max_update_us, b.max_update_us, "{what}");
+    assert_eq!(a.update_us, b.update_us, "{what}");
+    assert_eq!(a.total_us, b.total_us, "{what}");
+}
+
+#[test]
+fn predict_with_matches_every_legacy_entry_point() {
+    // The unified `predict_with(opts)` must compose the EXACT f64s of
+    // each historical entry point on the same inputs: `predict`
+    // (backend-only), `predict_with_cache` (shared store), and
+    // `predict_prefetched` (store-only over pre-built plans).
+    let model = ModelCfg::llemma7b();
+    let platform = Platform::perlmutter();
+    let spec = SweepSpec::new(16);
+    let (cfgs, _, _, _) = feasible_configs(&model, &platform, &spec);
+    assert!(cfgs.len() >= 3, "need several configs to make the property meaningful");
+    for par in cfgs.iter().take(6) {
+        let label = par.label();
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let base = predict(&model, par, &platform, &mut oracle);
+
+        let via_backend = predict_with(&model, par, PredictOpts::backend(&platform, &mut oracle));
+        assert_bit_identical(&base, &via_backend, &format!("{label}: PredictOpts::backend"));
+
+        let store = OpPredictionCache::new();
+        let legacy_shared = predict_with_cache(&model, par, &platform, &mut oracle, &store);
+        assert_bit_identical(&base, &legacy_shared, &format!("{label}: predict_with_cache"));
+        let via_shared =
+            predict_with(&model, par, PredictOpts::shared(&platform, &mut oracle, &store));
+        assert_bit_identical(&base, &via_shared, &format!("{label}: PredictOpts::shared"));
+
+        // the shared calls above populated `store` with every op this
+        // config needs, so the backend-free prefetched path can compose
+        let plans = stage_plans_mode(&model, par, &platform, /*paper_params=*/ true);
+        let legacy_prefetched = predict_prefetched(&model, par, &plans, &store);
+        assert_bit_identical(&base, &legacy_prefetched, &format!("{label}: predict_prefetched"));
+        let via_prefetched = predict_with(&model, par, PredictOpts::prefetched(&plans, &store));
+        assert_bit_identical(&base, &via_prefetched, &format!("{label}: PredictOpts::prefetched"));
+    }
+}
+
+#[test]
+fn training_default_workload_is_bit_identical_through_the_redesigned_apis() {
+    // Threading `WorkloadKind` through `SweepSpec` must not perturb a
+    // single bit of an existing training sweep: a spec left at the
+    // default, one with the workload written out explicitly, and one
+    // whose configs would be built through `ParallelCfg::try_new` all
+    // rank the same rows with the same f64s.
+    let model = ModelCfg::llemma7b();
+    let platform = Platform::perlmutter();
+    let spec = SweepSpec::new(16);
+    assert!(spec.workload.is_training_default());
+
+    let mut explicit = spec.clone();
+    explicit.workload = WorkloadKind::Training { global_batch: None };
+    assert!(explicit.workload.is_training_default());
+
+    let run = |s: &SweepSpec| {
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        Engine::new().sweep(&model, &platform, s, &mut oracle).unwrap()
+    };
+    let base = run(&spec);
+    let same = run(&explicit);
+    assert!(!base.rows.is_empty());
+    assert_eq!(base.rows.len(), same.rows.len());
+    for (a, b) in base.rows.iter().zip(&same.rows) {
+        assert_eq!(a.par, b.par);
+        // bit-identical, not approximately equal
+        assert_eq!(a.prediction.total_us, b.prediction.total_us);
+        assert_eq!(a.mem_gib, b.mem_gib);
+    }
+
+    // the fallible builder reconstructs configs equal to the panicking
+    // constructor path, so per-row re-prediction through builder-made
+    // configs is the identity as well
+    for row in base.rows.iter().take(4) {
+        let p = &row.par;
+        let rebuilt = ParallelCfg::builder(p.pp, p.mp, p.dp)
+            .schedule(p.schedule)
+            .rank_order(p.rank_order)
+            .p2p_overlap(p.p2p_overlap())
+            .build()
+            .expect("feasible configs are valid by construction");
+        assert_eq!(&rebuilt, p);
+        let mut oracle = OraclePredictor { platform: platform.clone() };
+        let again = predict(&model, &rebuilt, &platform, &mut oracle);
+        assert_eq!(again.total_us, row.prediction.total_us);
+    }
 }
 
 #[test]
